@@ -1,0 +1,9 @@
+use tridentserve::harness::Setup;
+use tridentserve::workload::WorkloadKind;
+fn main() {
+    let setup = Setup::new("flux", 128);
+    for (wk, name) in [(WorkloadKind::Light,"light"),(WorkloadKind::Heavy,"heavy"),(WorkloadKind::Proprietary,"proprietary"),(WorkloadKind::Dynamic,"dynamic")] {
+        let m = setup.run("trident", wk, 6.0*60_000.0, 0);
+        println!("flux/{name}: slo={:.3} switches={}", m.summary().slo_attainment, m.switch_events.len());
+    }
+}

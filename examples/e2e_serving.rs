@@ -1,0 +1,56 @@
+//! End-to-end serving driver (the repo's headline validation run,
+//! EXPERIMENTS.md §E2E): load the real mini diffusion pipeline via PJRT and
+//! serve a batched request stream with the full TridentServe planning stack
+//! — profiler pass, placement, per-tick ILP dispatch — reporting SLO
+//! attainment, latency and throughput from actual wall-clock executions.
+//!
+//!     make artifacts && cargo run --release --example e2e_serving
+//!
+//! Every layer composes here: L1 Pallas kernels (inside the HLO), L2 JAX
+//! stage graphs (the artifacts), L3 Rust coordination (this process).
+
+use tridentserve::server::{serve, LiveConfig};
+use tridentserve::workload::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = LiveConfig {
+        workers: 4,
+        duration_ms: 20_000.0,
+        rate_scale: 1.0,
+        workload: WorkloadKind::Medium,
+        ..Default::default()
+    };
+    for (k, v) in std::env::args().skip(1).collect::<Vec<_>>().chunks(2).filter_map(|c| {
+        c[0].strip_prefix("--").map(|k| (k.to_string(), c.get(1).cloned().unwrap_or_default()))
+    }) {
+        match k.as_str() {
+            "workers" => cfg.workers = v.parse()?,
+            "duration-s" => cfg.duration_ms = v.parse::<f64>()? * 1000.0,
+            "rate-scale" => cfg.rate_scale = v.parse()?,
+            "seed" => cfg.seed = v.parse()?,
+            _ => {}
+        }
+    }
+
+    println!("=== TridentServe end-to-end serving (real PJRT, {} workers) ===", cfg.workers);
+    println!("profiling + compiling on every worker; this takes a few seconds...\n");
+    let report = serve(&cfg)?;
+
+    println!("measured per-(shape, stage) latencies (ms):");
+    for (name, ms) in &report.measured_ms {
+        println!("  {name:<10} {ms:8.1}");
+    }
+
+    let s = report.metrics.summary();
+    println!("\nserved {} requests in {:.1}s wall", report.served, report.wall_s);
+    println!("throughput     : {:.2} req/s", report.throughput_rps);
+    println!("SLO attainment : {:.3}", s.slo_attainment);
+    println!("mean latency   : {:.0} ms", s.mean_latency_ms);
+    println!("p95 latency    : {:.0} ms", s.p95_latency_ms);
+    println!("VR distribution: {:?}", report.metrics.vr_distribution());
+    if report.served == 0 {
+        anyhow::bail!("no requests served — check artifacts");
+    }
+    println!("\ne2e_serving OK");
+    Ok(())
+}

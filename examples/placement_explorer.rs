@@ -1,0 +1,52 @@
+//! Placement explorer: show how the Dynamic Orchestrator adapts placement
+//! plans across pipelines and workload mixes (§6.1, Fig 4's mechanism).
+//!
+//!     cargo run --release --example placement_explorer
+//!
+//! For each paper pipeline × workload it prints the OptVR decision per
+//! request shape, the derived placement plan, and how the plan shifts when
+//! the arrival mix shifts — the observable behind Adjust-on-Dispatch.
+
+use tridentserve::harness::{Setup, ALL_PIPELINES};
+use tridentserve::placement::Orchestrator;
+use tridentserve::workload::{steady_weights, WorkloadKind};
+
+fn main() {
+    for name in ALL_PIPELINES {
+        let setup = Setup::new(name, 128);
+        let orch = Orchestrator::new(
+            &setup.profile,
+            &setup.pipeline,
+            &setup.consts,
+            &setup.cluster,
+        );
+
+        println!("=== {} ===", name);
+        println!("  per-shape OptVR (V0=EDC V1=DC+E V2=ED+C V3=D+E+C):");
+        for (i, shape) in setup.pipeline.shapes.iter().enumerate() {
+            let vr = orch.opt_vr(i);
+            let peak = orch.peak_act_gb(i, vr.unwrap_or(3));
+            println!(
+                "    {:<10} l_d={:<7} -> {}   (peak act {:.1} GB)",
+                shape.name,
+                shape.l_d,
+                vr.map(|t| format!("V{t}")).unwrap_or_else(|| "infeasible(MP)".into()),
+                peak,
+            );
+        }
+
+        for kind in [WorkloadKind::Light, WorkloadKind::Medium, WorkloadKind::Heavy] {
+            let w = steady_weights(&setup.pipeline, kind);
+            let rates = orch.estimated_rates(&w);
+            let plan = orch.plan(&w, 128, &rates);
+            let counts: Vec<String> = plan
+                .counts()
+                .iter()
+                .map(|(pi, c)| format!("{}x{}", pi.label(), c))
+                .collect();
+            println!("  {:<7} placement: {}", kind.label(), counts.join("  "));
+        }
+        println!();
+    }
+    println!("placement_explorer OK");
+}

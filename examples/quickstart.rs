@@ -1,0 +1,65 @@
+//! Quickstart: load the AOT artifacts and run one request through the full
+//! Encode → Diffuse → Decode pipeline on the PJRT CPU client.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the smallest possible use of the runtime layer: no scheduler, no
+//! cluster — just the three compiled stage executables chained by hand.
+
+use std::path::Path;
+
+use tridentserve::config::Stage;
+use tridentserve::runtime::PjrtRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    println!("loading + compiling artifacts (one-time cost)...");
+    let rt = PjrtRuntime::load(dir, Some(&["encode_b1", "diffuse", "decode"]))?;
+    println!("  loaded: {:?}", {
+        let mut names = rt.artifact_names();
+        names.sort();
+        names
+    });
+
+    let res = 128u32;
+    let side = (res / 4) as usize;
+    let enc_len = rt.manifest.config.get("enc_len").copied().unwrap_or(16.0) as usize;
+
+    // --- Encode: "a prompt" as token ids.
+    let tokens: Vec<i32> = (0..enc_len as i32).map(|i| (i * 31 + 7) % 512).collect();
+    let name = rt.stage_artifact(Stage::Encode, res).unwrap();
+    let (cond, enc_ms) = rt.run_encode(&name, &tokens, &[1, enc_len as i64])?;
+    println!("encode   [{name}]: {enc_ms:7.1} ms  -> cond {} floats", cond.len());
+
+    // --- Diffuse: denoise Gaussian latent under the condition.
+    let noise: Vec<f32> = (0..side * side * 8)
+        .map(|i| ((i as f32 * 0.618).sin()) * 0.7)
+        .collect();
+    let dims = [1i64, side as i64, side as i64, 8];
+    let cond_dims = [1i64, enc_len as i64, 64];
+    let name = rt.stage_artifact(Stage::Diffuse, res).unwrap();
+    let (latent, dif_ms) = rt.run_f32(&name, &[(&noise, &dims), (&cond, &cond_dims)])?;
+    println!("diffuse  [{name}]: {dif_ms:7.1} ms  -> latent {} floats", latent.len());
+
+    // --- Decode: latent -> pixels in [-1, 1].
+    let name = rt.stage_artifact(Stage::Decode, res).unwrap();
+    let (image, dec_ms) = rt.run_f32(&name, &[(&latent, &dims)])?;
+    let (lo, hi) = image
+        .iter()
+        .fold((f32::MAX, f32::MIN), |(lo, hi), &x| (lo.min(x), hi.max(x)));
+    println!("decode   [{name}]: {dec_ms:7.1} ms  -> image {}x{}x3, range [{lo:.3}, {hi:.3}]",
+        res, res);
+    assert_eq!(image.len(), (res * res * 3) as usize);
+    assert!(image.iter().all(|x| x.is_finite() && (-1.0..=1.0).contains(x)));
+
+    let total = enc_ms + dif_ms + dec_ms;
+    println!("\nend-to-end: {total:.1} ms (E {:.0}% / D {:.0}% / C {:.0}%)",
+        enc_ms / total * 100.0, dif_ms / total * 100.0, dec_ms / total * 100.0);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Trace replay: head-to-head comparison of TridentServe against all six
+//! baselines on one pipeline × workload at 128 simulated GPUs — a compact
+//! version of the Fig 10 end-to-end evaluation.
+//!
+//!     cargo run --release --example trace_replay -- --pipeline flux --workload dynamic
+//!
+//! Prints the Fig-10 metrics (SLO attainment, mean and P95 latency, OOMs)
+//! plus TridentServe's VR distribution (Fig 12) and switch count (Fig 11).
+
+use tridentserve::harness::{Setup, ALL_POLICIES};
+use tridentserve::workload::WorkloadKind;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut pipeline = "flux".to_string();
+    let mut workload = WorkloadKind::Dynamic;
+    let mut minutes = 8.0f64;
+    for c in args.chunks(2) {
+        match c[0].as_str() {
+            "--pipeline" => pipeline = c[1].clone(),
+            "--workload" => {
+                workload = match c[1].as_str() {
+                    "light" => WorkloadKind::Light,
+                    "medium" => WorkloadKind::Medium,
+                    "heavy" => WorkloadKind::Heavy,
+                    "proprietary" => WorkloadKind::Proprietary,
+                    _ => WorkloadKind::Dynamic,
+                }
+            }
+            "--duration-min" => minutes = c[1].parse().unwrap(),
+            _ => {}
+        }
+    }
+
+    println!(
+        "=== trace replay: {pipeline} / {} / 128 GPUs / {minutes:.0} min ===\n",
+        workload.label()
+    );
+    let setup = Setup::new(&pipeline, 128);
+    println!(
+        "{:<22} {:>6} {:>6} {:>8} {:>10} {:>10}",
+        "policy", "n", "oom", "slo", "mean(s)", "p95(s)"
+    );
+    let mut trident_metrics = None;
+    for policy in ALL_POLICIES {
+        let m = setup.run(policy, workload, minutes * 60_000.0, 0);
+        let s = m.summary();
+        println!(
+            "{:<22} {:>6} {:>6} {:>8.3} {:>10.1} {:>10.1}",
+            policy,
+            s.n,
+            s.oom,
+            s.slo_attainment,
+            s.mean_latency_ms / 1e3,
+            s.p95_latency_ms / 1e3
+        );
+        if policy == "trident" {
+            trident_metrics = Some(m);
+        }
+    }
+    if let Some(m) = trident_metrics {
+        println!("\ntrident VR distribution (V0..V3): {:?}", m.vr_distribution());
+        println!("placement switches: {}", m.switch_events.len());
+        println!("mean dispatcher solve: {:.2} ms", m.summary().mean_solve_ms);
+    }
+    println!("\ntrace_replay OK");
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX pipeline + L1 Pallas kernels + AOT lowering.
+
+Never imported at serving time — `make artifacts` runs this once to emit
+HLO-text artifacts that the Rust coordinator loads via PJRT.
+"""

@@ -1,0 +1,166 @@
+"""AOT lowering: L2 pipeline → HLO-text artifacts for the Rust runtime.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each *stage variant* — (stage, resolution[, batch][, SP shard]) — is lowered
+to its own ``artifacts/<name>.hlo.txt`` with the pipeline parameters baked in
+as constants; ``artifacts/manifest.json`` records the catalog (shapes, dtypes,
+stage metadata) that ``rust/src/runtime`` consumes.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+SP_DEGREES = (1, 2, 4)
+ENCODE_BATCHES = (1, 4)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True).
+
+    ``print_large_constants=True`` is load-bearing: the default HLO printer
+    elides big constants as ``constant({...})``, which the Rust-side text
+    parser silently reads back as zeros — the baked-in weights would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    stage: str                       # "encode" | "diffuse" | "decode" | "attn_shard"
+    resolution: int                  # pixel resolution (0 for encode)
+    batch: int
+    degree: int                      # SP degree (1 unless attn_shard)
+    shard: int                       # shard index (0 unless attn_shard)
+    fn: Callable
+    args: Sequence[jax.ShapeDtypeStruct]
+
+    def lower(self) -> str:
+        return to_hlo_text(jax.jit(self.fn).lower(*self.args))
+
+    def manifest_entry(self) -> dict:
+        return {
+            "name": self.name,
+            "file": f"{self.name}.hlo.txt",
+            "stage": self.stage,
+            "resolution": self.resolution,
+            "batch": self.batch,
+            "degree": self.degree,
+            "shard": self.shard,
+            "inputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in self.args
+            ],
+        }
+
+
+def build_catalog(cfg: model.PipelineConfig, params: model.Params) -> List[Artifact]:
+    arts: List[Artifact] = []
+    d = cfg.d_model
+
+    # Encode: one artifact per batch size (encode batches well — App E.1).
+    for b in ENCODE_BATCHES:
+        arts.append(Artifact(
+            name=f"encode_b{b}", stage="encode", resolution=0, batch=b,
+            degree=1, shard=0,
+            fn=functools.partial(model.encode, params, cfg=cfg),
+            args=[jax.ShapeDtypeStruct((b, cfg.enc_len), jnp.int32)],
+        ))
+
+    # Diffuse + Decode per resolution.
+    for res in model.RESOLUTIONS:
+        side = cfg.latent_side(res)
+        arts.append(Artifact(
+            name=f"diffuse_r{res}", stage="diffuse", resolution=res, batch=1,
+            degree=1, shard=0,
+            fn=functools.partial(model.diffuse, params, cfg=cfg),
+            args=[
+                jax.ShapeDtypeStruct((1, side, side, cfg.latent_ch), jnp.float32),
+                jax.ShapeDtypeStruct((1, cfg.enc_len, d), jnp.float32),
+            ],
+        ))
+        arts.append(Artifact(
+            name=f"decode_r{res}", stage="decode", resolution=res, batch=1,
+            degree=1, shard=0,
+            fn=functools.partial(model.decode, params, cfg=cfg),
+            args=[jax.ShapeDtypeStruct((1, side, side, cfg.latent_ch), jnp.float32)],
+        ))
+
+    # Ulysses head-shard artifacts (SP validation path) at the mid resolution.
+    res = model.RESOLUTIONS[1]
+    n = cfg.dit_tokens(res)
+    pd = cfg.latent_ch * cfg.patch * cfg.patch
+    for degree in SP_DEGREES:
+        for shard in range(degree):
+            arts.append(Artifact(
+                name=f"attn_shard_r{res}_k{degree}_s{shard}", stage="attn_shard",
+                resolution=res, batch=1, degree=degree, shard=shard,
+                fn=functools.partial(model.attn_shard, params, shard=shard,
+                                     degree=degree, cfg=cfg),
+                args=[
+                    jax.ShapeDtypeStruct((1, n, pd), jnp.float32),
+                    jax.ShapeDtypeStruct((1, cfg.enc_len, d), jnp.float32),
+                    jax.ShapeDtypeStruct((1,), jnp.float32),
+                ],
+            ))
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name prefixes to (re)build")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = model.DEFAULT_CONFIG
+    params = model.init_params(cfg)
+    catalog = build_catalog(cfg, params)
+    prefixes = args.only.split(",") if args.only else None
+
+    manifest = {
+        "config": dataclasses.asdict(cfg),
+        "resolutions": list(model.RESOLUTIONS),
+        "sp_degrees": list(SP_DEGREES),
+        "artifacts": [],
+    }
+    for art in catalog:
+        manifest["artifacts"].append(art.manifest_entry())
+        if prefixes and not any(art.name.startswith(p) for p in prefixes):
+            continue
+        text = art.lower()
+        path = os.path.join(args.out_dir, f"{art.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

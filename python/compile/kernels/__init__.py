@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts)."""
+
+from .attention import flash_attention
+from .gn_silu import gn_silu
+
+__all__ = ["flash_attention", "gn_silu"]

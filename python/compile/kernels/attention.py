@@ -1,0 +1,134 @@
+"""L1 Pallas kernel: VMEM-tiled fused (flash) attention.
+
+This is the compute hot-spot of the Diffuse stage (the DiT's attention),
+re-thought for TPU idioms per DESIGN.md §Hardware-Adaptation:
+
+* the sequence is tiled for VMEM via ``BlockSpec`` — the grid iterates over
+  ``(batch, head, q_block)`` and each kernel instance streams K/V through
+  VMEM in ``block_k`` tiles (the HBM↔VMEM schedule that CUDA flash-attention
+  expresses with thread blocks);
+* the inner product targets the MXU systolic array: contiguous
+  ``[block_q, d] x [d, block_k]`` matmuls with fp32 accumulation and an
+  online-softmax carried in registers/VMEM scratch.
+
+``interpret=True`` everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute; interpret mode lowers to plain HLO so the
+same artifact runs under the Rust PJRT CPU client. Correctness is pinned to
+``ref.attention_ref`` by ``python/tests/test_attention.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention", "DEFAULT_BLOCK_Q", "DEFAULT_BLOCK_K"]
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, lk_actual: int, scale: float):
+    """One (batch, head, q_block) grid cell.
+
+    Refs carry the blocked shapes ``(1, 1, block_q, d)`` for q/o and
+    ``(1, 1, lk_pad, d)`` for k/v. K/V are consumed in ``block_k`` tiles with
+    an online softmax so the working set stays at
+    ``block_q*d + 2*block_k*d + block_q*block_k`` floats (VMEM-resident).
+    """
+    q = q_ref[0, 0].astype(jnp.float32)  # [block_q, d]
+    block_q, d = q.shape
+    lk_pad = k_ref.shape[2]
+    n_kb = lk_pad // block_k
+
+    m0 = jnp.full((block_q,), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        kb = pl.load(k_ref, (0, 0, pl.ds(i * block_k, block_k), slice(None)))
+        vb = pl.load(v_ref, (0, 0, pl.ds(i * block_k, block_k), slice(None)))
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        # MXU-shaped matmul: [block_q, d] @ [d, block_k].
+        s = jnp.dot(q, kb.T) * scale  # [block_q, block_k]
+        # Mask keys beyond the true (unpadded) length.
+        col = i * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(col < lk_actual, s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(p, vb)
+        return m_new, l_new, acc_new
+
+    m, l, acc = lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    out = acc / l[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Multi-head attention ``softmax(q k^T / sqrt(d)) v`` via a Pallas kernel.
+
+    Args:
+      q: ``[B, H, Lq, d]``.
+      k, v: ``[B, H, Lk, d]``.
+      block_q / block_k: VMEM tile sizes (clamped to the padded lengths).
+      interpret: must stay ``True`` for CPU-PJRT execution (see module doc).
+
+    Returns:
+      ``[B, H, Lq, d]`` with the input dtype (fp32 accumulation inside).
+    """
+    if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
+        raise ValueError(f"expected rank-4 q/k/v, got {q.shape}, {k.shape}, {v.shape}")
+    b, h, lq, d = q.shape
+    if k.shape[:2] != (b, h) or v.shape != k.shape:
+        raise ValueError(f"mismatched shapes q={q.shape} k={k.shape} v={v.shape}")
+    lk = k.shape[2]
+    if k.shape[3] != d:
+        raise ValueError(f"head-dim mismatch: q has {d}, k has {k.shape[3]}")
+
+    block_q = min(block_q, _ceil_to(lq, 8))
+    block_k = min(block_k, _ceil_to(lk, 8))
+    lq_pad = _ceil_to(lq, block_q)
+    lk_pad = _ceil_to(lk, block_k)
+
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, lq_pad - lq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, lk_pad - lk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, lk_pad - lk), (0, 0)))
+
+    grid = (b, h, lq_pad // block_q)
+    kernel = functools.partial(
+        _attn_kernel, block_k=block_k, lk_actual=lk, scale=1.0 / math.sqrt(d)
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, lk_pad, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, lk_pad, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, lq_pad, d), q.dtype),
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :lq, :]

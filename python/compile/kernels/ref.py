@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: pytest asserts the Pallas kernels
+match these references (``assert_allclose``) across shape/dtype sweeps.
+No Pallas, no tiling — just the textbook math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "gn_silu_ref"]
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Textbook multi-head attention over ``[B, H, L, d]`` tensors."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(d))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gn_silu_ref(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    groups: int = 4,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """Reference ``SiLU(GroupNorm(x) * gamma + beta)`` over ``[B, N, C]``."""
+    b, n, c = x.shape
+    xf = x.astype(jnp.float32).reshape(b, n, groups, c // groups)
+    mean = jnp.mean(xf, axis=(1, 3), keepdims=True)
+    var = jnp.var(xf, axis=(1, 3), keepdims=True)
+    xn = ((xf - mean) / jnp.sqrt(var + eps)).reshape(b, n, c)
+    y = xn * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return (y * jax.nn.sigmoid(y)).astype(x.dtype)

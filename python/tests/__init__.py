@@ -1,0 +1,1 @@
+"""pytest suite for the build-time compile path."""

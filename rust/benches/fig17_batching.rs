@@ -1,0 +1,52 @@
+//! Fig 17 (appendix E.1) — Batch-size effects per stage: relative latency
+//! vs batch for Encode (T5-like), Diffuse (DiT) and Decode (AE-KL), plus
+//! the derived optimal batch sizes.
+//!
+//! Expected shape: Encode batches almost for free; Diffuse batches only
+//! help at low resolution; Decode grows linearly (never batches). Batch
+//! scalability ordering: Encode > Diffuse > Decode.
+
+use tridentserve::config::{PipelineSpec, Stage};
+use tridentserve::perfmodel::batching::BATCHES;
+use tridentserve::perfmodel::PerfModel;
+
+fn main() {
+    let m = PerfModel::paper();
+    let p = PipelineSpec::sd3();
+
+    println!("=== Fig 17: latency ratio t(b)/t(1) per stage ===\n");
+    for (stage, label) in [
+        (Stage::Encode, "Encoder (T5)"),
+        (Stage::Diffuse, "Diffusion (DiT)"),
+        (Stage::Decode, "Decoder (AE-KL)"),
+    ] {
+        println!("{label}:");
+        print!("{:<10}", "shape");
+        for &b in &BATCHES {
+            print!("{:>8}", format!("b={b}"));
+        }
+        println!("{:>8}", "b_opt");
+        for shape in &p.shapes {
+            print!("{:<10}", shape.name);
+            for &b in &BATCHES {
+                print!("{:>8.2}", m.batch_latency_ratio(&p, shape, stage, b));
+            }
+            println!("{:>8}", m.optimal_batch(&p, shape, stage));
+        }
+        println!();
+    }
+
+    // Shape checks (App E.1).
+    let small = p.shape("128p").unwrap();
+    let large = p.shape("1536p").unwrap();
+    assert!(m.optimal_batch(&p, small, Stage::Encode) >= 16);
+    assert_eq!(m.optimal_batch(&p, large, Stage::Decode), 1);
+    assert!(
+        m.optimal_batch(&p, small, Stage::Diffuse) > m.optimal_batch(&p, large, Stage::Diffuse)
+    );
+    let ge = m.batch_throughput_gain(&p, small, Stage::Encode, 16);
+    let gd = m.batch_throughput_gain(&p, small, Stage::Diffuse, 16);
+    let gc = m.batch_throughput_gain(&p, small, Stage::Decode, 16);
+    assert!(ge > gd && gd > gc, "ordering E > D > C violated: {ge} {gd} {gc}");
+    println!("fig17 shape checks OK");
+}

@@ -1,0 +1,50 @@
+//! Fig 3 — Parallelism effects on Diffuse and Decode stages of Flux.1.
+//!
+//! Regenerates the paper's speedup-vs-degree curves: SP and MP for the
+//! Diffuse stage across resolutions (left), and Decode-stage SP scaling
+//! (right). Expected shape: high resolutions approach linear SP scaling,
+//! low resolutions degrade below 1×, MP is uniformly worse than SP, and
+//! Decode saturates under 2×.
+
+use tridentserve::config::{PipelineSpec, Stage};
+use tridentserve::perfmodel::{Parallelism, PerfModel, DEGREES};
+
+fn main() {
+    let p = PipelineSpec::flux();
+    let m = PerfModel::paper();
+
+    println!("=== Fig 3 (left): Flux Diffuse speedup vs degree ===");
+    println!("{:<8} {:>10} {:>8} {:>8} {:>8} {:>8}", "res", "mode", "k=1", "k=2", "k=4", "k=8");
+    for shape in &p.shapes {
+        for (par, label) in [(Parallelism::Sp, "SP"), (Parallelism::Mp, "MP")] {
+            let row: Vec<String> = DEGREES
+                .iter()
+                .map(|&k| format!("{:.2}", m.speedup(Stage::Diffuse, shape.l_d, k, par)))
+                .collect();
+            println!(
+                "{:<8} {:>10} {:>8} {:>8} {:>8} {:>8}",
+                shape.name, label, row[0], row[1], row[2], row[3]
+            );
+        }
+    }
+
+    println!("\n=== Fig 3 (right): Flux Decode speedup vs degree (SP) ===");
+    println!("{:<8} {:>8} {:>8} {:>8} {:>8}", "res", "k=1", "k=2", "k=4", "k=8");
+    for shape in &p.shapes {
+        let row: Vec<String> = DEGREES
+            .iter()
+            .map(|&k| format!("{:.2}", m.speedup(Stage::Decode, shape.l_c, k, Parallelism::Sp)))
+            .collect();
+        println!("{:<8} {:>8} {:>8} {:>8} {:>8}", shape.name, row[0], row[1], row[2], row[3]);
+    }
+
+    // Paper-shape checks (who wins / crossovers), not absolute numbers.
+    assert!(m.speedup(Stage::Diffuse, 65536, 8, Parallelism::Sp) > 6.0);
+    assert!(m.speedup(Stage::Diffuse, 64, 8, Parallelism::Sp) < 1.0);
+    assert!(
+        m.speedup(Stage::Diffuse, 4096, 4, Parallelism::Mp)
+            < m.speedup(Stage::Diffuse, 4096, 4, Parallelism::Sp)
+    );
+    assert!(m.speedup(Stage::Decode, 65536, 8, Parallelism::Sp) < 2.1);
+    println!("\nfig3 shape checks OK");
+}

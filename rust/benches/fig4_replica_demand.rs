@@ -1,0 +1,64 @@
+//! Fig 4 — Model-replica demand for balanced processing speed.
+//!
+//! Regenerates the paper's observation that the replica proportions needed
+//! to balance stage throughput shift with the workload mix: the orchestrator
+//! is run over Light/Medium/Heavy mixes per pipeline and the resulting
+//! placement-type proportions are printed. Expected shape: heavier mixes
+//! shift capacity toward disaggregated D-heavy placements.
+
+use tridentserve::harness::{Setup, ALL_PIPELINES};
+use tridentserve::placement::{Orchestrator, Pi};
+use tridentserve::workload::{steady_weights, WorkloadKind};
+
+fn main() {
+    println!("=== Fig 4: replica proportions for balanced stage throughput ===\n");
+    for name in ALL_PIPELINES {
+        let setup = Setup::new(name, 128);
+        let orch = Orchestrator::new(
+            &setup.profile,
+            &setup.pipeline,
+            &setup.consts,
+            &setup.cluster,
+        );
+        println!("{name}:");
+        println!(
+            "  {:<8} {:>6} {:>6} {:>6} {:>6} {:>6} {:>6}",
+            "mix", "EDC", "DC", "ED", "D", "E", "C"
+        );
+        let mut heavy_d_like = 0usize;
+        let mut light_d_like = 0usize;
+        for kind in [WorkloadKind::Light, WorkloadKind::Medium, WorkloadKind::Heavy] {
+            let w = steady_weights(&setup.pipeline, kind);
+            let rates = orch.estimated_rates(&w);
+            let plan = orch.plan(&w, 128, &rates);
+            let counts = plan.counts();
+            let get = |pi: Pi| counts.get(&pi).copied().unwrap_or(0);
+            println!(
+                "  {:<8} {:>6} {:>6} {:>6} {:>6} {:>6} {:>6}",
+                kind.label(),
+                get(Pi::Edc),
+                get(Pi::Dc),
+                get(Pi::Ed),
+                get(Pi::D),
+                get(Pi::E),
+                get(Pi::C)
+            );
+            let disagg = get(Pi::Dc) + get(Pi::Ed) + get(Pi::D);
+            match kind {
+                WorkloadKind::Light => light_d_like = disagg,
+                WorkloadKind::Heavy => heavy_d_like = disagg,
+                _ => {}
+            }
+        }
+        // Shape check (Flux/HYV): heavier mixes need at least as much
+        // disaggregated capacity as light mixes.
+        if name == "flux" || name == "hunyuan" {
+            assert!(
+                heavy_d_like >= light_d_like,
+                "{name}: heavy {heavy_d_like} < light {light_d_like}"
+            );
+        }
+        println!();
+    }
+    println!("fig4 shape checks OK");
+}

@@ -1,0 +1,45 @@
+//! Fig 8 — End-to-end time breakdown (Encode / Diffuse / Decode) for every
+//! pipeline under Medium and Heavy mixes.
+//!
+//! Expected shape: Diffuse dominates (>70% on heavy mixes), Decode takes a
+//! visible minority share, Encode is negligible.
+
+use tridentserve::config::Stage;
+use tridentserve::harness::{Setup, ALL_PIPELINES};
+use tridentserve::workload::{steady_weights, WorkloadKind};
+
+fn main() {
+    println!("=== Fig 8: stage time breakdown (degree 1, mix-weighted) ===\n");
+    println!(
+        "{:<10} {:<8} {:>10} {:>10} {:>10} {:>8}",
+        "pipeline", "mix", "E %", "D %", "C %", "e2e(s)"
+    );
+    for name in ALL_PIPELINES {
+        let setup = Setup::new(name, 128);
+        for kind in [WorkloadKind::Medium, WorkloadKind::Heavy] {
+            let w = steady_weights(&setup.pipeline, kind);
+            let total_w: f64 = w.iter().sum();
+            let mut parts = [0.0f64; 3];
+            for (i, &wi) in w.iter().enumerate() {
+                for (si, stage) in Stage::ALL.iter().enumerate() {
+                    parts[si] += wi / total_w * setup.profile.latency_ms(i, *stage, 1);
+                }
+            }
+            let e2e: f64 = parts.iter().sum();
+            println!(
+                "{:<10} {:<8} {:>9.1}% {:>9.1}% {:>9.1}% {:>8.1}",
+                name,
+                kind.label(),
+                parts[0] / e2e * 100.0,
+                parts[1] / e2e * 100.0,
+                parts[2] / e2e * 100.0,
+                e2e / 1e3
+            );
+            // Paper-shape assertions (§2.1): D > 60%, C in 2%..40%, E small.
+            assert!(parts[1] / e2e > 0.6, "{name}: D share too small");
+            assert!(parts[2] / e2e < 0.4, "{name}: C share too large");
+            assert!(parts[0] / e2e < 0.2, "{name}: E share too large");
+        }
+    }
+    println!("\nfig8 shape checks OK");
+}

@@ -1,0 +1,140 @@
+//! §Perf — L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf).
+//!
+//! Times the coordinator's inner loops in isolation so optimization work
+//! has a stable before/after signal:
+//!   * dispatcher tick (feasibility filtering + MCKP solve + plan build)
+//!   * engine advance/complete cycle (the per-event cost)
+//!   * orchestrator replan (Algorithm 2 end-to-end)
+//!   * whole-sim throughput (simulated events per wall second)
+
+use std::time::Instant;
+
+use tridentserve::cluster::Topology;
+use tridentserve::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
+use tridentserve::dispatch::{ClusterView, Dispatcher, RequestPlans, StagePlan};
+use tridentserve::engine::{Engine, StageExec};
+use tridentserve::harness::Setup;
+use tridentserve::perfmodel::PerfModel;
+use tridentserve::placement::{Orchestrator, Pi, PlacementPlan};
+use tridentserve::profiler::Profile;
+use tridentserve::request::Request;
+use tridentserve::util::Rng;
+use tridentserve::workload::WorkloadKind;
+
+struct NoopExec;
+impl StageExec for NoopExec {
+    fn exec_ms(&mut self, _: usize, _: Stage, _: usize, _: usize) -> f64 {
+        10.0
+    }
+}
+
+fn main() {
+    let pipeline = PipelineSpec::flux();
+    let cluster = ClusterSpec::l20_128();
+    let consts = SolverConstants::default();
+    let model = PerfModel::new(cluster.clone());
+    let profile = Profile::build(&model, &pipeline, &consts);
+    let topo = Topology::new(cluster.clone());
+
+    println!("=== perf_hotpath microbenchmarks ===\n");
+
+    // --- Dispatcher tick.
+    {
+        let orch = Orchestrator::new(&profile, &pipeline, &consts, &cluster);
+        let w: Vec<f64> = pipeline.shapes.iter().map(|_| 1.0).collect();
+        let placement = orch.plan(&w, 128, &orch.estimated_rates(&w));
+        let disp = Dispatcher::new(&profile, &pipeline, &consts, &topo);
+        let mut rng = Rng::new(1);
+        let pending: Vec<Request> = (0..64)
+            .map(|i| {
+                let s = rng.below(pipeline.shapes.len());
+                Request { id: i, shape_idx: s, arrival_ms: 0.0, deadline_ms: profile.slo_ms[s], batch: 1 }
+            })
+            .collect();
+        let view = ClusterView {
+            placement,
+            idle: vec![true; 128],
+            free_at_ms: vec![0.0; 128],
+            now_ms: 0.0,
+        };
+        let iters = 200;
+        let t0 = Instant::now();
+        let mut total_plans = 0;
+        let mut total_nodes = 0u64;
+        let mut solve_ms = 0.0;
+        for _ in 0..iters {
+            let (plans, st) = disp.dispatch(&pending, &view);
+            total_plans += plans.len();
+            total_nodes += st.nodes;
+            solve_ms += st.solve_ms;
+        }
+        let per = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        println!(
+            "dispatcher tick (64 pending, 128 GPUs): {per:.3} ms/tick ({} plans, {} B&B nodes, {:.3} ms solve avg)",
+            total_plans / iters, total_nodes / iters as u64, solve_ms / iters as f64
+        );
+    }
+
+    // --- Engine advance/complete cycle.
+    {
+        let mut engine = Engine::new(
+            Topology::new(cluster.clone()),
+            PlacementPlan::uniform(128, Pi::Edc),
+            &profile,
+        );
+        let n = 20_000u64;
+        let t0 = Instant::now();
+        let mut done = 0u64;
+        for i in 0..n {
+            let g = (i % 128) as usize;
+            let rp = RequestPlans {
+                req: i,
+                shape_idx: 0,
+                vr_type: 0,
+                e: StagePlan { req: i, stage: Stage::Encode, gpus: vec![g], degree: 1 },
+                d: StagePlan { req: i, stage: Stage::Diffuse, gpus: vec![g], degree: 1 },
+                c: StagePlan { req: i, stage: Stage::Decode, gpus: vec![g], degree: 1 },
+                e_merged: true,
+                c_on_subset: true,
+            };
+            engine.enqueue(&rp, &profile);
+            for sp in engine.advance(i as f64, &mut NoopExec, &profile) {
+                engine.complete(sp.plan, sp.finish_ms, 0.0, None);
+                done += 1;
+            }
+        }
+        let per_us = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
+        println!("engine enqueue+advance+complete: {per_us:.1} us/plan ({done} completed)");
+    }
+
+    // --- Orchestrator replan.
+    {
+        let orch = Orchestrator::new(&profile, &pipeline, &consts, &cluster);
+        let w: Vec<f64> = pipeline.shapes.iter().map(|_| 1.0).collect();
+        let rates = orch.estimated_rates(&w);
+        let iters = 2_000;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let plan = orch.plan(&w, 128, &rates);
+            std::hint::black_box(&plan);
+        }
+        let per_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+        println!("orchestrator plan (Algorithm 2, 128 GPUs): {per_us:.1} us/plan");
+    }
+
+    // --- Whole-sim throughput.
+    {
+        let setup = Setup::new("flux", 128);
+        let t0 = Instant::now();
+        let m = setup.run("trident", WorkloadKind::Medium, 5.0 * 60_000.0, 0);
+        let wall = t0.elapsed().as_secs_f64();
+        let s = m.summary();
+        println!(
+            "whole sim (flux/medium, 5 min, 128 GPUs): {wall:.2}s wall, {} reqs, {:.0} sim-ms/wall-ms",
+            s.n,
+            5.0 * 60_000.0 * 2.0 / (wall * 1e3)
+        );
+    }
+
+    println!("\nperf_hotpath done");
+}

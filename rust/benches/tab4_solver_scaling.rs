@@ -1,0 +1,89 @@
+//! Table 4 — Dispatcher scalability: solver time per scheduling tick as the
+//! cluster grows from 128 to 4096 GPUs, with the pending-request count
+//! scaled proportionally (fixed request/GPU ratio, §8.5).
+//!
+//! Paper numbers: 25 / 26 / 36 / 45 / 98 ms for 128 / 256 / 512 / 1024 /
+//! 4096 GPUs. Expected shape here: sub-linear growth, staying within the
+//! ~100 ms online budget at 4096 GPUs.
+
+use std::time::Instant;
+
+use tridentserve::cluster::Topology;
+use tridentserve::config::{ClusterSpec, PipelineSpec, SolverConstants};
+use tridentserve::dispatch::{ClusterView, Dispatcher};
+use tridentserve::perfmodel::PerfModel;
+use tridentserve::placement::Orchestrator;
+use tridentserve::profiler::Profile;
+use tridentserve::request::Request;
+use tridentserve::util::Rng;
+
+fn main() {
+    let gpu_counts = [128usize, 256, 512, 1024, 4096];
+    let req_per_gpu = 0.25; // fixed request/GPU ratio
+    let pipeline = PipelineSpec::flux();
+    let consts = SolverConstants::default();
+
+    println!("=== Table 4: dispatcher solve time per tick ===\n");
+    println!("{:<8} {:>10} {:>12} {:>12} {:>10}", "#GPUs", "pending", "median(ms)", "p95(ms)", "optimal");
+    let mut medians = Vec::new();
+    for &g in &gpu_counts {
+        let cluster = ClusterSpec::l20(g / 8);
+        let model = PerfModel::new(cluster.clone());
+        let profile = Profile::build(&model, &pipeline, &consts);
+        let topo = Topology::new(cluster.clone());
+        let orch = Orchestrator::new(&profile, &pipeline, &consts, &cluster);
+        let w: Vec<f64> = pipeline.shapes.iter().map(|_| 1.0).collect();
+        let placement = orch.plan(&w, g, &orch.estimated_rates(&w));
+        let disp = Dispatcher::new(&profile, &pipeline, &consts, &topo);
+
+        let n_pending = (g as f64 * req_per_gpu) as usize;
+        let mut rng = Rng::new(42);
+        let mut times = Vec::new();
+        let mut all_optimal = true;
+        for trial in 0..9 {
+            // Fresh pending set and a partially-busy cluster per trial.
+            let pending: Vec<Request> = (0..n_pending)
+                .map(|i| {
+                    let shape_idx = rng.below(pipeline.shapes.len());
+                    Request {
+                        id: (trial * 10_000 + i) as u64,
+                        shape_idx,
+                        arrival_ms: 0.0,
+                        deadline_ms: profile.slo_ms[shape_idx],
+                        batch: 1,
+                    }
+                })
+                .collect();
+            let idle: Vec<bool> = (0..g).map(|_| rng.f64() < 0.6).collect();
+            let view = ClusterView {
+                placement: placement.clone(),
+                idle,
+                free_at_ms: vec![0.0; g],
+                now_ms: 0.0,
+            };
+            let t0 = Instant::now();
+            let (_, stats) = disp.dispatch(&pending, &view);
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+            all_optimal &= stats.optimal;
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let p95 = times[times.len() - 1];
+        println!("{:<8} {:>10} {:>12.1} {:>12.1} {:>10}", g, n_pending, median, p95, all_optimal);
+        medians.push(median);
+    }
+
+    // Shape checks: stays within the paper's ~100 ms online envelope at
+    // 4096 GPUs (paper Table 4: 98 ms) and grows sub-quadratically.
+    assert!(
+        *medians.last().unwrap() < 100.0,
+        "4096-GPU solve must stay within the paper's 100 ms envelope"
+    );
+    let growth = medians.last().unwrap() / medians.first().unwrap().max(0.1);
+    let gpu_growth: f64 = 4096.0 / 128.0;
+    assert!(
+        growth < gpu_growth * gpu_growth,
+        "solve time must grow sub-quadratically in cluster size"
+    );
+    println!("\ntab4 shape checks OK");
+}

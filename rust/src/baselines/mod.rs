@@ -1,0 +1,686 @@
+//! The six baselines of §8.1 / Appendix D.2, as [`ServingPolicy`]s sharing
+//! the engine with TridentServe:
+//!
+//! * **B1** static pipeline-level (xDiT): co-located, one global degree
+//!   `k = k_opt(max length)/2`, FIFO.
+//! * **B2** bucketed pipeline-level: co-located, cluster statically split
+//!   into degree buckets sized by demand (Table 6 procedure), FIFO/bucket.
+//! * **B3** dynamic pipeline-level FIFO: per-request optimal degree, FIFO
+//!   with head-of-line blocking.
+//! * **B4** dynamic pipeline-level SRTF(+aging).
+//! * **B5** bucketed stage-level: manual disaggregation (Table 7 splits),
+//!   bucketed D cluster, FIFO.
+//! * **B6** dynamic stage-level SRTF: disaggregated, per-stage optimal
+//!   parallelism, SRTF(+aging).
+
+use crate::cluster::Topology;
+use crate::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
+use crate::dispatch::{ClusterView, RequestPlans, SolveStats, StagePlan};
+use crate::perfmodel::DEGREES;
+use crate::placement::{Pi, PlacementPlan};
+use crate::profiler::Profile;
+use crate::request::Request;
+use crate::sim::policy::{remove_indices, ServingPolicy};
+
+/// Shared baseline context.
+#[derive(Clone)]
+pub struct BaseCtx {
+    pub pipeline: PipelineSpec,
+    pub profile: Profile,
+    pub consts: SolverConstants,
+    pub cluster: ClusterSpec,
+    pub topo: Topology,
+    pub mem_reserve_gb: f64,
+}
+
+impl BaseCtx {
+    pub fn new(
+        pipeline: PipelineSpec,
+        profile: Profile,
+        consts: SolverConstants,
+        cluster: ClusterSpec,
+    ) -> Self {
+        let topo = Topology::new(cluster.clone());
+        BaseCtx { pipeline, profile, consts, cluster, topo, mem_reserve_gb: 1.0 }
+    }
+
+    /// Activation headroom on a fully co-located (EDC) GPU.
+    pub fn colocated_cap_gb(&self) -> f64 {
+        let w: f64 = Stage::ALL.iter().map(|&s| self.profile.stage_weights_gb(s)).sum();
+        self.cluster.vram_gb - w - self.mem_reserve_gb
+    }
+
+    /// Peak per-GPU activation of a co-located pipeline-level run at degree
+    /// k: Diffuse at k plus Decode at the same resources (pipeline-level
+    /// allocation runs C at degree k too).
+    pub fn colocated_peak_gb(&self, shape_idx: usize, k: usize) -> f64 {
+        self.profile
+            .act_gb(shape_idx, Stage::Diffuse, k)
+            .max(self.profile.act_gb(shape_idx, Stage::Decode, k))
+    }
+
+    /// B1's global static degree (App D.2): half the optimal degree at the
+    /// pipeline's maximum load length, floored to a supported degree.
+    pub fn static_degree(&self) -> usize {
+        let max_idx = (0..self.profile.n_shapes())
+            .max_by_key(|&i| self.pipeline.shapes[i].l_d)
+            .unwrap();
+        let k_max = self.profile.optimal_degree(max_idx, Stage::Diffuse);
+        DEGREES
+            .iter()
+            .copied()
+            .filter(|&k| k <= (k_max / 2).max(1))
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Find an idle intra-node GPU set of size `k` with placement `pi`.
+    pub fn idle_set(
+        &self,
+        view: &ClusterView,
+        taken: &[bool],
+        pi_filter: impl Fn(usize) -> bool,
+        k: usize,
+    ) -> Option<Vec<usize>> {
+        let mut by_node: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+        for g in 0..view.placement.pi.len() {
+            if view.idle[g] && !taken[g] && pi_filter(g) {
+                by_node.entry(self.topo.node_of(g)).or_default().push(g);
+            }
+        }
+        by_node
+            .into_values()
+            .filter(|gs| gs.len() >= k)
+            .min_by_key(|gs| gs.len())
+            .map(|gs| gs[..k].to_vec())
+    }
+
+    /// Pipeline-level plan: all three stages on the same GPU set.
+    pub fn pipeline_level_plans(&self, r: &Request, gpus: Vec<usize>, k: usize) -> RequestPlans {
+        RequestPlans {
+            req: r.id,
+            shape_idx: r.shape_idx,
+            vr_type: 0,
+            e: StagePlan { req: r.id, stage: Stage::Encode, gpus: gpus.clone(), degree: k },
+            d: StagePlan { req: r.id, stage: Stage::Diffuse, gpus: gpus.clone(), degree: k },
+            c: StagePlan { req: r.id, stage: Stage::Decode, gpus, degree: k },
+            e_merged: true,
+            c_on_subset: true,
+        }
+    }
+
+    /// SRTF-with-aging order (App D.2): priority class
+    /// `p = max(1, 5 - scale)`, then shortest remaining time.
+    pub fn srtf_order(&self, pending: &[Request], now_ms: f64) -> Vec<usize> {
+        let mut keyed: Vec<(u32, f64, usize)> = pending
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let k = self.profile.optimal_degree(r.shape_idx, Stage::Diffuse);
+                let t_star: f64 = Stage::ALL
+                    .iter()
+                    .map(|&s| {
+                        let ks = self.profile.optimal_degree(r.shape_idx, s);
+                        self.profile.latency_ms(r.shape_idx, s, ks)
+                    })
+                    .sum();
+                let t_hat = now_ms + self.profile.latency_ms(r.shape_idx, Stage::Diffuse, k);
+                let p = if t_hat <= r.deadline_ms {
+                    5
+                } else {
+                    let scale = ((t_hat - r.deadline_ms) / t_star.max(1.0)).ceil() as i64;
+                    (5 - scale).max(1) as u32
+                };
+                (p, t_star, i)
+            })
+            .collect();
+        keyed.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.partial_cmp(&b.1).unwrap()));
+        keyed.into_iter().map(|(_, _, i)| i).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// B1 — Static pipeline-level (xDiT)
+// ---------------------------------------------------------------------------
+
+pub struct B1Static {
+    pub ctx: BaseCtx,
+    k: usize,
+}
+
+impl B1Static {
+    pub fn new(ctx: BaseCtx) -> Self {
+        let k = ctx.static_degree();
+        B1Static { ctx, k }
+    }
+
+    pub fn degree(&self) -> usize {
+        self.k
+    }
+}
+
+impl ServingPolicy for B1Static {
+    fn name(&self) -> String {
+        format!("B1-static-k{}", self.k)
+    }
+
+    fn initial_placement(&mut self, g: usize) -> PlacementPlan {
+        PlacementPlan::uniform(g, Pi::Edc)
+    }
+
+    fn infeasible(&self, shape_idx: usize) -> bool {
+        self.ctx.colocated_peak_gb(shape_idx, self.k) > self.ctx.colocated_cap_gb()
+    }
+
+    fn dispatch(
+        &mut self,
+        pending: &mut Vec<Request>,
+        view: &ClusterView,
+    ) -> (Vec<RequestPlans>, Option<SolveStats>) {
+        // FIFO with head-of-line blocking: stop at the first request that
+        // cannot be placed.
+        let mut taken = vec![false; view.placement.pi.len()];
+        let mut plans = Vec::new();
+        let mut n_dispatched = 0;
+        for r in pending.iter() {
+            match self.ctx.idle_set(view, &taken, |_| true, self.k) {
+                Some(gpus) => {
+                    for &g in &gpus {
+                        taken[g] = true;
+                    }
+                    plans.push(self.ctx.pipeline_level_plans(r, gpus, self.k));
+                    n_dispatched += 1;
+                }
+                None => break,
+            }
+        }
+        pending.drain(..n_dispatched);
+        (plans, None)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// B2 — Bucketed pipeline-level
+// ---------------------------------------------------------------------------
+
+pub struct B2Bucketed {
+    pub ctx: BaseCtx,
+    /// GPU -> bucket degree.
+    bucket_of_gpu: Vec<usize>,
+    /// Bucket degree sizes (Table 6 procedure), for reporting.
+    pub bucket_gpus: std::collections::BTreeMap<usize, usize>,
+}
+
+impl B2Bucketed {
+    pub fn new(ctx: BaseCtx, g: usize) -> Self {
+        let sizes = Self::bucket_sizes(&ctx, g);
+        let mut bucket_of_gpu = Vec::with_capacity(g);
+        for (&k, &n) in &sizes {
+            for _ in 0..n {
+                bucket_of_gpu.push(k);
+            }
+        }
+        bucket_of_gpu.resize(g, 1);
+        B2Bucketed { ctx, bucket_of_gpu, bucket_gpus: sizes }
+    }
+
+    /// Appendix D.2: `N_k = round_to_mult(N * r_k, k)`, `r_k` the demand
+    /// share (requests routed to degree k weighted by service time), then
+    /// the k=1 bucket absorbs the remainder.
+    pub fn bucket_sizes(ctx: &BaseCtx, g: usize) -> std::collections::BTreeMap<usize, usize> {
+        let mut demand: std::collections::BTreeMap<usize, f64> = Default::default();
+        for i in 0..ctx.profile.n_shapes() {
+            let k = ctx.profile.optimal_degree(i, Stage::Diffuse);
+            let t = ctx.profile.latency_ms(i, Stage::Diffuse, k) * k as f64;
+            *demand.entry(k).or_insert(0.0) += t;
+        }
+        let total: f64 = demand.values().sum();
+        let mut sizes: std::collections::BTreeMap<usize, usize> = Default::default();
+        let mut left = g;
+        for &k in DEGREES.iter().filter(|&&k| k > 1).rev() {
+            let share = demand.get(&k).copied().unwrap_or(0.0) / total;
+            let mut n = ((g as f64 * share / k as f64).round() as usize) * k;
+            n = n.min(left / k * k);
+            sizes.insert(k, n);
+            left -= n;
+        }
+        sizes.insert(1, left);
+        sizes
+    }
+}
+
+impl ServingPolicy for B2Bucketed {
+    fn name(&self) -> String {
+        "B2-bucketed".into()
+    }
+
+    fn initial_placement(&mut self, g: usize) -> PlacementPlan {
+        assert_eq!(g, self.bucket_of_gpu.len());
+        PlacementPlan::uniform(g, Pi::Edc)
+    }
+
+    fn infeasible(&self, shape_idx: usize) -> bool {
+        let k = self.ctx.profile.optimal_degree(shape_idx, Stage::Diffuse);
+        self.ctx.colocated_peak_gb(shape_idx, k) > self.ctx.colocated_cap_gb()
+    }
+
+    fn dispatch(
+        &mut self,
+        pending: &mut Vec<Request>,
+        view: &ClusterView,
+    ) -> (Vec<RequestPlans>, Option<SolveStats>) {
+        // FIFO per bucket: HOL blocking applies within each bucket only.
+        let mut taken = vec![false; view.placement.pi.len()];
+        let mut blocked: std::collections::BTreeSet<usize> = Default::default();
+        let mut plans = Vec::new();
+        let mut dispatched = Vec::new();
+        for (ri, r) in pending.iter().enumerate() {
+            let k = self.ctx.profile.optimal_degree(r.shape_idx, Stage::Diffuse);
+            if blocked.contains(&k) {
+                continue;
+            }
+            let in_bucket = |g: usize| self.bucket_of_gpu[g] == k;
+            match self.ctx.idle_set(view, &taken, in_bucket, k) {
+                Some(gpus) => {
+                    for &g in &gpus {
+                        taken[g] = true;
+                    }
+                    plans.push(self.ctx.pipeline_level_plans(r, gpus, k));
+                    dispatched.push(ri);
+                }
+                None => {
+                    blocked.insert(k);
+                }
+            }
+        }
+        remove_indices(pending, &dispatched);
+        (plans, None)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// B3/B4 — Dynamic pipeline-level (FIFO / SRTF)
+// ---------------------------------------------------------------------------
+
+pub struct BDynamicPipeline {
+    pub ctx: BaseCtx,
+    pub srtf: bool,
+}
+
+impl BDynamicPipeline {
+    pub fn b3(ctx: BaseCtx) -> Self {
+        BDynamicPipeline { ctx, srtf: false }
+    }
+
+    pub fn b4(ctx: BaseCtx) -> Self {
+        BDynamicPipeline { ctx, srtf: true }
+    }
+}
+
+impl ServingPolicy for BDynamicPipeline {
+    fn name(&self) -> String {
+        if self.srtf { "B4-dyn-srtf".into() } else { "B3-dyn-fifo".into() }
+    }
+
+    fn initial_placement(&mut self, g: usize) -> PlacementPlan {
+        PlacementPlan::uniform(g, Pi::Edc)
+    }
+
+    fn infeasible(&self, shape_idx: usize) -> bool {
+        let k = self.ctx.profile.optimal_degree(shape_idx, Stage::Diffuse);
+        self.ctx.colocated_peak_gb(shape_idx, k) > self.ctx.colocated_cap_gb()
+    }
+
+    fn dispatch(
+        &mut self,
+        pending: &mut Vec<Request>,
+        view: &ClusterView,
+    ) -> (Vec<RequestPlans>, Option<SolveStats>) {
+        let order: Vec<usize> = if self.srtf {
+            self.ctx.srtf_order(pending, view.now_ms)
+        } else {
+            (0..pending.len()).collect()
+        };
+        let mut taken = vec![false; view.placement.pi.len()];
+        let mut plans = Vec::new();
+        let mut dispatched = Vec::new();
+        for &ri in &order {
+            let r = &pending[ri];
+            let k = self.ctx.profile.optimal_degree(r.shape_idx, Stage::Diffuse);
+            match self.ctx.idle_set(view, &taken, |_| true, k) {
+                Some(gpus) => {
+                    for &g in &gpus {
+                        taken[g] = true;
+                    }
+                    plans.push(self.ctx.pipeline_level_plans(r, gpus, k));
+                    dispatched.push(ri);
+                }
+                None => {
+                    if !self.srtf {
+                        break; // FIFO head-of-line blocking (B3)
+                    }
+                }
+            }
+        }
+        remove_indices(pending, &dispatched);
+        (plans, None)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// B5/B6 — Stage-level disaggregated (bucketed FIFO / dynamic SRTF)
+// ---------------------------------------------------------------------------
+
+pub struct BStageLevel {
+    pub ctx: BaseCtx,
+    /// SRTF (B6) vs bucketed FIFO (B5).
+    pub dynamic_srtf: bool,
+    /// Static per-stage GPU counts (Table 7 procedure).
+    pub splits: [usize; 3],
+    bucket_of_gpu: Vec<usize>,
+}
+
+impl BStageLevel {
+    pub fn new(ctx: BaseCtx, g: usize, dynamic_srtf: bool) -> Self {
+        let splits = Self::stage_splits(&ctx, g);
+        // Degree buckets inside the D cluster (B5 only, but computed for both).
+        let d_gpus = splits[1];
+        let sizes = B2Bucketed::bucket_sizes(&ctx, d_gpus);
+        let mut bucket_of_gpu = vec![0usize; g];
+        let mut d_slot = 0usize;
+        let mut per_bucket: Vec<usize> = Vec::new();
+        for (&k, &n) in &sizes {
+            for _ in 0..n {
+                per_bucket.push(k);
+            }
+        }
+        per_bucket.resize(d_gpus, 1);
+        for g_id in splits[0]..splits[0] + d_gpus {
+            bucket_of_gpu[g_id] = per_bucket[d_slot];
+            d_slot += 1;
+        }
+        BStageLevel { ctx, dynamic_srtf, splits, bucket_of_gpu }
+    }
+
+    /// Appendix D.2 Table-7 sizing: split inversely to per-instance service
+    /// rates: `p_s = (1/v_s) / Σ(1/v_s')`.
+    pub fn stage_splits(ctx: &BaseCtx, g: usize) -> [usize; 3] {
+        let n = ctx.profile.n_shapes();
+        let mean_gpu_ms = |stage: Stage| -> f64 {
+            (0..n)
+                .map(|i| {
+                    let k = ctx.profile.optimal_degree(i, stage);
+                    ctx.profile.latency_ms(i, stage, k) * k as f64
+                })
+                .sum::<f64>()
+                / n as f64
+        };
+        let inv: [f64; 3] = [
+            mean_gpu_ms(Stage::Encode),
+            mean_gpu_ms(Stage::Diffuse),
+            mean_gpu_ms(Stage::Decode),
+        ];
+        let total: f64 = inv.iter().sum();
+        let mut out = [0usize; 3];
+        for (i, v) in inv.iter().enumerate() {
+            out[i] = ((g as f64) * v / total).round() as usize;
+        }
+        // Minimum 1 GPU per stage; rebalance from the largest.
+        for i in 0..3 {
+            if out[i] == 0 {
+                out[i] = 1;
+            }
+        }
+        let sum: usize = out.iter().sum();
+        let largest = (0..3).max_by_key(|&i| out[i]).unwrap();
+        out[largest] = (out[largest] as i64 + g as i64 - sum as i64).max(1) as usize;
+        out
+    }
+
+    fn stage_of_gpu(&self, g: usize) -> Stage {
+        if g < self.splits[0] {
+            Stage::Encode
+        } else if g < self.splits[0] + self.splits[1] {
+            Stage::Diffuse
+        } else {
+            Stage::Decode
+        }
+    }
+
+    fn d_cap_gb(&self) -> f64 {
+        self.ctx.cluster.vram_gb
+            - self.ctx.profile.stage_weights_gb(Stage::Diffuse)
+            - self.ctx.mem_reserve_gb
+    }
+}
+
+impl ServingPolicy for BStageLevel {
+    fn name(&self) -> String {
+        if self.dynamic_srtf { "B6-stage-srtf".into() } else { "B5-stage-bucketed".into() }
+    }
+
+    fn initial_placement(&mut self, g: usize) -> PlacementPlan {
+        let pi = (0..g)
+            .map(|gpu| match self.stage_of_gpu(gpu) {
+                Stage::Encode => Pi::E,
+                Stage::Diffuse => Pi::D,
+                Stage::Decode => Pi::C,
+            })
+            .collect();
+        PlacementPlan { pi }
+    }
+
+    fn infeasible(&self, shape_idx: usize) -> bool {
+        // Disaggregated: feasible if any degree fits the D-only cap.
+        let cap = self.d_cap_gb();
+        !DEGREES
+            .iter()
+            .any(|&k| self.ctx.profile.act_gb(shape_idx, Stage::Diffuse, k) <= cap)
+    }
+
+    fn dispatch(
+        &mut self,
+        pending: &mut Vec<Request>,
+        view: &ClusterView,
+    ) -> (Vec<RequestPlans>, Option<SolveStats>) {
+        let order: Vec<usize> = if self.dynamic_srtf {
+            self.ctx.srtf_order(pending, view.now_ms)
+        } else {
+            (0..pending.len()).collect()
+        };
+        let mut taken = vec![false; view.placement.pi.len()];
+        let mut blocked: std::collections::BTreeSet<usize> = Default::default();
+        let mut plans = Vec::new();
+        let mut dispatched = Vec::new();
+        let mut balancer = crate::dispatch::TickBalancer::default();
+        for &ri in &order {
+            let r = &pending[ri];
+            let mut k = self.ctx.profile.optimal_degree(r.shape_idx, Stage::Diffuse);
+            // Memory-forced degree raise on D-only GPUs.
+            while k < 8 && self.ctx.profile.act_gb(r.shape_idx, Stage::Diffuse, k) > self.d_cap_gb()
+            {
+                k *= 2;
+            }
+            if !self.dynamic_srtf && blocked.contains(&k) {
+                continue;
+            }
+            let d_filter = |g: usize| {
+                self.stage_of_gpu(g) == Stage::Diffuse
+                    && (self.dynamic_srtf || self.bucket_of_gpu[g] == k)
+            };
+            let Some(d_gpus) = self.ctx.idle_set(view, &taken, d_filter, k) else {
+                if self.dynamic_srtf {
+                    continue;
+                }
+                blocked.insert(k);
+                continue;
+            };
+            // E and C on their stage clusters (earliest-free, spread by the
+            // per-tick balancer so one wave doesn't pile onto one GPU).
+            let e_gpu = balancer
+                .pick(
+                    (0..view.placement.pi.len())
+                        .filter(|&g| self.stage_of_gpu(g) == Stage::Encode && !taken[g]),
+                    &view.free_at_ms,
+                )
+                .unwrap_or(0);
+            let c_gpu = balancer
+                .pick(
+                    (0..view.placement.pi.len())
+                        .filter(|&g| self.stage_of_gpu(g) == Stage::Decode && !taken[g]),
+                    &view.free_at_ms,
+                )
+                .unwrap_or(0);
+            for &g in &d_gpus {
+                taken[g] = true;
+            }
+            plans.push(RequestPlans {
+                req: r.id,
+                shape_idx: r.shape_idx,
+                vr_type: 3, // pure ⟨D⟩ primaries: V3 semantics
+                e: StagePlan { req: r.id, stage: Stage::Encode, gpus: vec![e_gpu], degree: 1 },
+                d: StagePlan { req: r.id, stage: Stage::Diffuse, gpus: d_gpus, degree: k },
+                c: StagePlan { req: r.id, stage: Stage::Decode, gpus: vec![c_gpu], degree: 1 },
+                e_merged: false,
+                c_on_subset: false,
+            });
+            dispatched.push(ri);
+        }
+        remove_indices(pending, &dispatched);
+        (plans, None)
+    }
+}
+
+/// Build every baseline for a pipeline (convenience for the benches).
+pub fn all_baselines(ctx: &BaseCtx, g: usize) -> Vec<Box<dyn ServingPolicy>> {
+    vec![
+        Box::new(B1Static::new(ctx.clone())),
+        Box::new(B2Bucketed::new(ctx.clone(), g)),
+        Box::new(BDynamicPipeline::b3(ctx.clone())),
+        Box::new(BDynamicPipeline::b4(ctx.clone())),
+        Box::new(BStageLevel::new(ctx.clone(), g, false)),
+        Box::new(BStageLevel::new(ctx.clone(), g, true)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::PerfModel;
+
+    fn ctx(p: PipelineSpec) -> BaseCtx {
+        let cluster = ClusterSpec::l20_128();
+        let consts = SolverConstants::default();
+        let profile = Profile::build(&PerfModel::new(cluster.clone()), &p, &consts);
+        BaseCtx::new(p, profile, consts, cluster)
+    }
+
+    #[test]
+    fn b1_degree_matches_appendix_d2() {
+        // Flux: k_opt(max)=8 -> k=4 (paper's Table: k=4 for Flux).
+        let b1 = B1Static::new(ctx(PipelineSpec::flux()));
+        assert_eq!(b1.degree(), 4);
+    }
+
+    #[test]
+    fn b1_ooms_on_heavy_flux() {
+        let c = ctx(PipelineSpec::flux());
+        let b1 = B1Static::new(c.clone());
+        let heavy = c.pipeline.shapes.iter().position(|s| s.name == "4096p").unwrap();
+        assert!(b1.infeasible(heavy), "B1 must OOM on flux 4096p");
+        let small = c.pipeline.shapes.iter().position(|s| s.name == "512p").unwrap();
+        assert!(!b1.infeasible(small));
+    }
+
+    #[test]
+    fn b1_never_ooms_on_sd3() {
+        let c = ctx(PipelineSpec::sd3());
+        let b1 = B1Static::new(c.clone());
+        for i in 0..c.pipeline.shapes.len() {
+            assert!(!b1.infeasible(i), "{}", c.pipeline.shapes[i].name);
+        }
+    }
+
+    #[test]
+    fn b2_buckets_sum_to_cluster() {
+        let c = ctx(PipelineSpec::flux());
+        let b2 = B2Bucketed::new(c, 128);
+        let total: usize = b2.bucket_gpus.values().sum();
+        assert_eq!(total, 128);
+        // Each non-1 bucket is a multiple of its degree.
+        for (&k, &n) in &b2.bucket_gpus {
+            if k > 1 {
+                assert_eq!(n % k, 0, "bucket k={k} size {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn b5_splits_sum_and_d_dominates() {
+        for p in PipelineSpec::all_paper() {
+            let c = ctx(p);
+            let splits = BStageLevel::stage_splits(&c, 128);
+            assert_eq!(splits.iter().sum::<usize>(), 128, "{:?}", splits);
+            assert!(splits[1] > splits[0] && splits[1] > splits[2],
+                "Diffuse must get most GPUs: {:?}", splits);
+        }
+    }
+
+    #[test]
+    fn b5_placement_is_disaggregated() {
+        let c = ctx(PipelineSpec::flux());
+        let mut b5 = BStageLevel::new(c, 128, false);
+        let plan = b5.initial_placement(128);
+        let counts = plan.counts();
+        assert!(counts.get(&Pi::E).copied().unwrap_or(0) > 0);
+        assert!(counts.get(&Pi::D).copied().unwrap_or(0) > 0);
+        assert!(counts.get(&Pi::C).copied().unwrap_or(0) > 0);
+        assert!(counts.get(&Pi::Edc).is_none());
+    }
+
+    #[test]
+    fn b5_survives_heavy_flux() {
+        // Stage-level baselines eliminate the co-location OOM (§8.2).
+        let c = ctx(PipelineSpec::flux());
+        let b5 = BStageLevel::new(c.clone(), 128, false);
+        let heavy = c.pipeline.shapes.iter().position(|s| s.name == "4096p").unwrap();
+        assert!(!b5.infeasible(heavy));
+    }
+
+    #[test]
+    fn b3_fifo_blocks_behind_head() {
+        let c = ctx(PipelineSpec::flux());
+        let mut b3 = BDynamicPipeline::b3(c.clone());
+        let placement = b3.initial_placement(128);
+        // Zero idle GPUs: head cannot be placed; nothing dispatches.
+        let view = ClusterView {
+            placement,
+            idle: vec![false; 128],
+            free_at_ms: vec![1e9; 128],
+            now_ms: 0.0,
+        };
+        let mut pending: Vec<Request> = (0..3)
+            .map(|i| Request {
+                id: i,
+                shape_idx: 0,
+                arrival_ms: 0.0,
+                deadline_ms: 1e12,
+                batch: 1,
+            })
+            .collect();
+        let (plans, _) = b3.dispatch(&mut pending, &view);
+        assert!(plans.is_empty());
+        assert_eq!(pending.len(), 3);
+    }
+
+    #[test]
+    fn srtf_prioritises_short_requests() {
+        let c = ctx(PipelineSpec::flux());
+        let pending: Vec<Request> = vec![
+            Request { id: 0, shape_idx: 6, arrival_ms: 0.0, deadline_ms: 1e12, batch: 1 },
+            Request { id: 1, shape_idx: 0, arrival_ms: 0.0, deadline_ms: 1e12, batch: 1 },
+        ];
+        let order = c.srtf_order(&pending, 0.0);
+        assert_eq!(order[0], 1, "short request must come first");
+    }
+}

@@ -1,0 +1,136 @@
+//! Dynamic batching (Appendix E.1): batch formation at the Diffuse-stage
+//! optimum and Γ^E merge consolidation for ⟨E⟩ auxiliaries.
+//!
+//! The paper's integration rule: batches are formed per request *size*
+//! using the Diffuse stage's optimal batch; resource allocation then
+//! proceeds at request-batch granularity unchanged. Encode plans that run
+//! exclusively on ⟨E⟩ replicas are merged further, up to the Encode optimum.
+
+use crate::config::{PipelineSpec, Stage};
+use crate::perfmodel::PerfModel;
+use crate::request::Request;
+
+/// A formed batch: representative request + member ids.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub representative: Request,
+    pub members: Vec<u64>,
+}
+
+/// Group same-shape pending requests into Diffuse-optimal batches.
+/// Requests of different shapes never co-batch (sizes must match).
+pub fn form_batches(pending: &[Request], pipeline: &PipelineSpec, model: &PerfModel) -> Vec<Batch> {
+    let mut by_shape: std::collections::BTreeMap<usize, Vec<&Request>> = Default::default();
+    for r in pending {
+        by_shape.entry(r.shape_idx).or_default().push(r);
+    }
+    let mut out = Vec::new();
+    for (shape_idx, reqs) in by_shape {
+        let shape = &pipeline.shapes[shape_idx];
+        let opt = model.optimal_batch(pipeline, shape, Stage::Diffuse);
+        for chunk in reqs.chunks(opt) {
+            let mut rep = chunk[0].clone();
+            rep.batch = chunk.len();
+            // The batch's deadline is the earliest member deadline.
+            rep.deadline_ms = chunk.iter().map(|r| r.deadline_ms).fold(f64::MAX, f64::min);
+            out.push(Batch { representative: rep, members: chunk.iter().map(|r| r.id).collect() });
+        }
+    }
+    out
+}
+
+/// Γ^E merge consolidation: given encode plan loads (batch sizes) queued on
+/// one ⟨E⟩ auxiliary, merge adjacent loads up to the Encode-stage optimal
+/// batch. Returns merged batch sizes.
+pub fn consolidate_encode(loads: &[usize], encode_opt: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut acc = 0usize;
+    for &l in loads {
+        if acc > 0 && acc + l > encode_opt {
+            out.push(acc);
+            acc = 0;
+        }
+        acc += l;
+        if acc >= encode_opt {
+            out.push(acc);
+            acc = 0;
+        }
+    }
+    if acc > 0 {
+        out.push(acc);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    fn fixture() -> (PipelineSpec, PerfModel) {
+        (PipelineSpec::sd3(), PerfModel::new(ClusterSpec::l20_128()))
+    }
+
+    fn req(id: u64, shape_idx: usize, deadline: f64) -> Request {
+        Request { id, shape_idx, arrival_ms: 0.0, deadline_ms: deadline, batch: 1 }
+    }
+
+    #[test]
+    fn batches_only_same_shape() {
+        let (p, m) = fixture();
+        let pending = vec![req(0, 0, 100.0), req(1, 1, 100.0), req(2, 0, 100.0)];
+        let batches = form_batches(&pending, &p, &m);
+        for b in &batches {
+            let shapes: std::collections::BTreeSet<usize> = b
+                .members
+                .iter()
+                .map(|&id| pending.iter().find(|r| r.id == id).unwrap().shape_idx)
+                .collect();
+            assert_eq!(shapes.len(), 1);
+        }
+    }
+
+    #[test]
+    fn small_shapes_batch_large_shapes_do_not() {
+        let (p, m) = fixture();
+        let small_idx = 0; // 128p
+        let large_idx = p.shapes.len() - 1; // 1536p
+        let pending: Vec<Request> = (0..8)
+            .map(|i| req(i, if i < 4 { small_idx } else { large_idx }, 1e9))
+            .collect();
+        let batches = form_batches(&pending, &p, &m);
+        let small_batches: Vec<_> =
+            batches.iter().filter(|b| b.representative.shape_idx == small_idx).collect();
+        let large_batches: Vec<_> =
+            batches.iter().filter(|b| b.representative.shape_idx == large_idx).collect();
+        assert!(small_batches.iter().any(|b| b.members.len() > 1));
+        assert!(large_batches.iter().all(|b| b.members.len() == 1));
+    }
+
+    #[test]
+    fn batch_deadline_is_earliest_member() {
+        let (p, m) = fixture();
+        let pending = vec![req(0, 0, 500.0), req(1, 0, 100.0)];
+        let batches = form_batches(&pending, &p, &m);
+        let b = batches.iter().find(|b| b.members.len() == 2);
+        if let Some(b) = b {
+            assert_eq!(b.representative.deadline_ms, 100.0);
+        }
+    }
+
+    #[test]
+    fn consolidate_merges_up_to_optimum() {
+        assert_eq!(consolidate_encode(&[1, 1, 1, 1], 4), vec![4]);
+        assert_eq!(consolidate_encode(&[2, 3, 2], 4), vec![2, 3, 2]);
+        assert_eq!(consolidate_encode(&[4, 4], 4), vec![4, 4]);
+        assert_eq!(consolidate_encode(&[1, 2, 1, 3], 4), vec![4, 3]);
+        assert_eq!(consolidate_encode(&[], 4), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn consolidation_preserves_total_load() {
+        let loads = [3usize, 1, 4, 1, 5, 9, 2, 6];
+        let merged = consolidate_encode(&loads, 8);
+        assert_eq!(merged.iter().sum::<usize>(), loads.iter().sum::<usize>());
+    }
+}

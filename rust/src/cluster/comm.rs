@@ -1,0 +1,128 @@
+//! Communication groups with the paper's hot-set + lazy-init design (§5.2
+//! *Dynamic Reinstance*), and the two-step locality-aware transfer model.
+//!
+//! Pre-initialising a communicator for every possible worker combination
+//! would hoard buffer memory; initialising per dispatch would add tens of
+//! milliseconds. The paper prepares a small *hot set* of intra-machine
+//! combinations (reusing one buffer per combination) and lazily initialises
+//! rare combinations on first use. We model exactly that: hot or
+//! already-seen groups reconfigure in ~0.5 ms, cold groups pay a one-time
+//! init cost and are then cached.
+
+use std::collections::HashSet;
+
+use super::topology::{GpuId, Topology};
+
+/// Millisecond costs of forming an execution instance.
+pub const HOT_RECONF_MS: f64 = 0.5;
+pub const COLD_INIT_MS: f64 = 30.0;
+
+/// Communicator-group registry.
+#[derive(Clone, Debug)]
+pub struct CommGroups {
+    /// Canonicalised (sorted) groups that are ready for reuse.
+    ready: HashSet<Vec<GpuId>>,
+    /// Bytes of communicator buffer held per ready group (GB) — bounded
+    /// because groups are cached, not per-dispatch.
+    pub buffer_gb_per_group: f64,
+    pub lazy_inits: u64,
+    pub reuses: u64,
+}
+
+impl CommGroups {
+    /// Build the hot set: per node, all aligned power-of-two contiguous
+    /// combinations (the SP-friendly shapes the dispatcher emits).
+    pub fn with_hot_set(topo: &Topology) -> Self {
+        let mut ready = HashSet::new();
+        let gpn = topo.spec.gpus_per_node;
+        for node in 0..topo.spec.nodes {
+            let base = node * gpn;
+            let mut k = 1;
+            while k <= gpn {
+                for start in (0..gpn).step_by(k) {
+                    let group: Vec<GpuId> = (base + start..base + start + k).collect();
+                    ready.insert(group);
+                }
+                k *= 2;
+            }
+        }
+        CommGroups { ready, buffer_gb_per_group: 0.05, lazy_inits: 0, reuses: 0 }
+    }
+
+    fn canon(gpus: &[GpuId]) -> Vec<GpuId> {
+        let mut v = gpus.to_vec();
+        v.sort_unstable();
+        v
+    }
+
+    /// Form an execution instance over `gpus`; returns the reconfiguration
+    /// latency in ms (Dynamic Reinstance step).
+    pub fn reinstance_ms(&mut self, gpus: &[GpuId]) -> f64 {
+        let key = Self::canon(gpus);
+        if self.ready.contains(&key) {
+            self.reuses += 1;
+            HOT_RECONF_MS
+        } else {
+            self.lazy_inits += 1;
+            self.ready.insert(key);
+            COLD_INIT_MS + HOT_RECONF_MS
+        }
+    }
+
+    pub fn is_ready(&self, gpus: &[GpuId]) -> bool {
+        self.ready.contains(&Self::canon(gpus))
+    }
+
+    pub fn ready_groups(&self) -> usize {
+        self.ready.len()
+    }
+
+    /// Total communicator-buffer memory held (GB) — must stay bounded.
+    pub fn total_buffer_gb(&self) -> f64 {
+        self.ready.len() as f64 * self.buffer_gb_per_group
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    fn topo() -> Topology {
+        Topology::new(ClusterSpec::l20_128())
+    }
+
+    #[test]
+    fn hot_set_covers_aligned_power_of_two_groups() {
+        let mut cg = CommGroups::with_hot_set(&topo());
+        assert_eq!(cg.reinstance_ms(&[0]), HOT_RECONF_MS);
+        assert_eq!(cg.reinstance_ms(&[0, 1]), HOT_RECONF_MS);
+        assert_eq!(cg.reinstance_ms(&[4, 5, 6, 7]), HOT_RECONF_MS);
+        assert_eq!(cg.reinstance_ms(&[8, 9, 10, 11, 12, 13, 14, 15]), HOT_RECONF_MS);
+        assert_eq!(cg.lazy_inits, 0);
+    }
+
+    #[test]
+    fn order_does_not_matter() {
+        let mut cg = CommGroups::with_hot_set(&topo());
+        assert_eq!(cg.reinstance_ms(&[3, 2]), HOT_RECONF_MS);
+    }
+
+    #[test]
+    fn cold_group_pays_once_then_is_hot() {
+        let mut cg = CommGroups::with_hot_set(&topo());
+        // Unaligned pair {1,2} is not in the hot set.
+        let first = cg.reinstance_ms(&[1, 2]);
+        assert!(first > COLD_INIT_MS);
+        assert_eq!(cg.lazy_inits, 1);
+        assert_eq!(cg.reinstance_ms(&[1, 2]), HOT_RECONF_MS);
+    }
+
+    #[test]
+    fn hot_set_size_is_bounded() {
+        let cg = CommGroups::with_hot_set(&topo());
+        // Per 8-GPU node: 8 + 4 + 2 + 1 = 15 groups; 16 nodes = 240.
+        assert_eq!(cg.ready_groups(), 240);
+        assert!(cg.total_buffer_gb() < 48.0); // far below one GPU's VRAM
+    }
+}

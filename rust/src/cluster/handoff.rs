@@ -1,0 +1,114 @@
+//! Device-resident handoff buffers (HB) for the *proactive push* scheme
+//! (§5.2 Stage Preparation).
+//!
+//! When a predecessor dispatch plan finishes, its outputs are pushed into
+//! the successor's HB so the successor reads them locally at launch. Every
+//! HB has a capacity `Cap_hb`; on overflow the tensor spills to pinned host
+//! memory and the successor reads it over the (slower) host path — OOM-safe
+//! under bursts by construction.
+
+use super::topology::GpuId;
+
+/// Where a staged tensor ended up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StagePath {
+    /// Fit in the device HB: successor reads at device speed.
+    Device,
+    /// HB full: spilled to pinned host memory.
+    Host,
+}
+
+/// One GPU's handoff buffer.
+#[derive(Clone, Debug)]
+pub struct HandoffBuffer {
+    cap_gb: f64,
+    used_gb: f64,
+    pub device_pushes: u64,
+    pub host_spills: u64,
+}
+
+impl HandoffBuffer {
+    pub fn new(cap_gb: f64) -> Self {
+        HandoffBuffer { cap_gb, used_gb: 0.0, device_pushes: 0, host_spills: 0 }
+    }
+
+    pub fn used_gb(&self) -> f64 {
+        self.used_gb
+    }
+
+    pub fn cap_gb(&self) -> f64 {
+        self.cap_gb
+    }
+
+    /// Stage `gb` of inter-stage tensor. Never fails — the host path is the
+    /// overflow valve.
+    pub fn push(&mut self, gb: f64) -> StagePath {
+        if self.used_gb + gb <= self.cap_gb {
+            self.used_gb += gb;
+            self.device_pushes += 1;
+            StagePath::Device
+        } else {
+            self.host_spills += 1;
+            StagePath::Host
+        }
+    }
+
+    /// Successor consumed `gb` from the device HB.
+    pub fn consume(&mut self, gb: f64) {
+        self.used_gb = (self.used_gb - gb).max(0.0);
+    }
+}
+
+/// All HBs, indexed by GPU.
+#[derive(Clone, Debug)]
+pub struct HandoffBuffers {
+    bufs: Vec<HandoffBuffer>,
+}
+
+impl HandoffBuffers {
+    pub fn new(n_gpus: usize, cap_gb: f64) -> Self {
+        HandoffBuffers { bufs: (0..n_gpus).map(|_| HandoffBuffer::new(cap_gb)).collect() }
+    }
+
+    pub fn gpu(&mut self, g: GpuId) -> &mut HandoffBuffer {
+        &mut self.bufs[g]
+    }
+
+    pub fn total_device_pushes(&self) -> u64 {
+        self.bufs.iter().map(|b| b.device_pushes).sum()
+    }
+
+    pub fn total_host_spills(&self) -> u64 {
+        self.bufs.iter().map(|b| b.host_spills).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_until_capacity_then_spills() {
+        let mut hb = HandoffBuffer::new(2.0);
+        assert_eq!(hb.push(1.5), StagePath::Device);
+        assert_eq!(hb.push(1.0), StagePath::Host); // 1.5 + 1.0 > 2.0
+        assert_eq!(hb.used_gb(), 1.5);
+        assert_eq!(hb.host_spills, 1);
+    }
+
+    #[test]
+    fn consume_frees_space() {
+        let mut hb = HandoffBuffer::new(2.0);
+        hb.push(2.0);
+        hb.consume(2.0);
+        assert_eq!(hb.push(1.0), StagePath::Device);
+    }
+
+    #[test]
+    fn consume_clamps_at_zero() {
+        let mut hb = HandoffBuffer::new(2.0);
+        hb.push(0.5);
+        hb.consume(5.0);
+        assert_eq!(hb.used_gb(), 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Simulated GPU cluster substrate: topology, VRAM ledger, communication
+//! groups (hot-set + lazy init), and handoff buffers (§5.2).
+//!
+//! This is the hardware stand-in for the paper's 16×8 L20 testbed
+//! (DESIGN.md §1): it tracks exactly the state the Runtime Engine's
+//! three-step dispatch execution manipulates — residency, memory, comm
+//! groups, and staged inter-stage tensors.
+
+pub mod comm;
+pub mod handoff;
+pub mod topology;
+pub mod vram;
+
+pub use comm::CommGroups;
+pub use handoff::HandoffBuffer;
+pub use topology::{GpuId, Topology};
+pub use vram::VramLedger;

@@ -1,0 +1,97 @@
+//! Cluster topology: GPU ids, node membership, NUMA halves, locality tests.
+
+use crate::config::ClusterSpec;
+
+/// Global GPU index in `[0, G)`.
+pub type GpuId = usize;
+
+/// Static cluster topology derived from a [`ClusterSpec`].
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub spec: ClusterSpec,
+}
+
+impl Topology {
+    pub fn new(spec: ClusterSpec) -> Self {
+        Topology { spec }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.spec.total_gpus()
+    }
+
+    pub fn node_of(&self, g: GpuId) -> usize {
+        g / self.spec.gpus_per_node
+    }
+
+    /// The paper's 4+4 dual-NUMA split: index within node / (gpn/2).
+    pub fn numa_of(&self, g: GpuId) -> usize {
+        let within = g % self.spec.gpus_per_node;
+        if within < self.spec.gpus_per_node.div_ceil(2) {
+            0
+        } else {
+            1
+        }
+    }
+
+    pub fn same_node(&self, a: GpuId, b: GpuId) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// All GPUs of a node.
+    pub fn node_gpus(&self, node: usize) -> std::ops::Range<GpuId> {
+        let gpn = self.spec.gpus_per_node;
+        node * gpn..(node + 1) * gpn
+    }
+
+    /// True iff every GPU in the set lives on one node (dispatch plans are
+    /// intra-machine; cross-machine sets stay undispatched — §6.2).
+    pub fn is_intra_node(&self, gpus: &[GpuId]) -> bool {
+        match gpus.first() {
+            None => true,
+            Some(&g0) => gpus.iter().all(|&g| self.same_node(g0, g)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::new(ClusterSpec::l20_128())
+    }
+
+    #[test]
+    fn node_membership() {
+        let t = topo();
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.node_of(8), 1);
+        assert_eq!(t.node_of(127), 15);
+    }
+
+    #[test]
+    fn numa_split_is_4_plus_4() {
+        let t = topo();
+        assert_eq!(t.numa_of(0), 0);
+        assert_eq!(t.numa_of(3), 0);
+        assert_eq!(t.numa_of(4), 1);
+        assert_eq!(t.numa_of(7), 1);
+        assert_eq!(t.numa_of(8), 0); // next node restarts
+    }
+
+    #[test]
+    fn intra_node_detection() {
+        let t = topo();
+        assert!(t.is_intra_node(&[0, 1, 2, 3]));
+        assert!(!t.is_intra_node(&[7, 8]));
+        assert!(t.is_intra_node(&[]));
+    }
+
+    #[test]
+    fn node_gpus_range() {
+        let t = topo();
+        assert_eq!(t.node_gpus(2), 16..24);
+    }
+}

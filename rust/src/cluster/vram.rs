@@ -1,0 +1,176 @@
+//! Per-GPU VRAM ledger: resident stage replicas, activation reservations,
+//! and handoff-buffer usage. The OOM-safety checks the paper's baselines
+//! fail (§8.2) and TridentServe passes live here.
+
+use super::topology::GpuId;
+use crate::config::Stage;
+
+/// What occupies one GPU's memory.
+#[derive(Clone, Debug, Default)]
+pub struct GpuMem {
+    /// Resident stage replicas and their weight footprints (GB).
+    pub resident: Vec<(Stage, f64)>,
+    /// Currently-reserved activation memory (GB).
+    pub act_gb: f64,
+    /// Handoff-buffer bytes staged on device (GB).
+    pub hb_gb: f64,
+}
+
+impl GpuMem {
+    pub fn weights_gb(&self) -> f64 {
+        self.resident.iter().map(|(_, w)| w).sum()
+    }
+
+    pub fn used_gb(&self) -> f64 {
+        self.weights_gb() + self.act_gb + self.hb_gb
+    }
+
+    pub fn hosts(&self, stage: Stage) -> bool {
+        self.resident.iter().any(|&(s, _)| s == stage)
+    }
+}
+
+/// Cluster-wide VRAM accounting.
+#[derive(Clone, Debug)]
+pub struct VramLedger {
+    capacity_gb: f64,
+    gpus: Vec<GpuMem>,
+    /// Count of reservation attempts that exceeded capacity.
+    pub oom_events: u64,
+}
+
+impl VramLedger {
+    pub fn new(n_gpus: usize, capacity_gb: f64) -> Self {
+        VramLedger {
+            capacity_gb,
+            gpus: vec![GpuMem::default(); n_gpus],
+            oom_events: 0,
+        }
+    }
+
+    pub fn capacity_gb(&self) -> f64 {
+        self.capacity_gb
+    }
+
+    pub fn gpu(&self, g: GpuId) -> &GpuMem {
+        &self.gpus[g]
+    }
+
+    pub fn free_gb(&self, g: GpuId) -> f64 {
+        self.capacity_gb - self.gpus[g].used_gb()
+    }
+
+    /// Install a stage replica's weights. Returns false (and counts an OOM
+    /// event) if it does not fit.
+    pub fn load_stage(&mut self, g: GpuId, stage: Stage, weights_gb: f64) -> bool {
+        if self.gpus[g].hosts(stage) {
+            return true;
+        }
+        if self.free_gb(g) < weights_gb {
+            self.oom_events += 1;
+            return false;
+        }
+        self.gpus[g].resident.push((stage, weights_gb));
+        true
+    }
+
+    /// Drop a stage replica (Adjust-on-Dispatch eviction).
+    pub fn evict_stage(&mut self, g: GpuId, stage: Stage) -> bool {
+        let before = self.gpus[g].resident.len();
+        self.gpus[g].resident.retain(|&(s, _)| s != stage);
+        self.gpus[g].resident.len() != before
+    }
+
+    /// Reserve activation memory for a stage execution; all-or-nothing over
+    /// the GPU set. Returns false on OOM (nothing reserved).
+    pub fn reserve_act(&mut self, gpus: &[GpuId], per_gpu_gb: f64) -> bool {
+        if gpus.iter().any(|&g| self.free_gb(g) < per_gpu_gb) {
+            self.oom_events += 1;
+            return false;
+        }
+        for &g in gpus {
+            self.gpus[g].act_gb += per_gpu_gb;
+        }
+        true
+    }
+
+    pub fn release_act(&mut self, gpus: &[GpuId], per_gpu_gb: f64) {
+        for &g in gpus {
+            self.gpus[g].act_gb = (self.gpus[g].act_gb - per_gpu_gb).max(0.0);
+        }
+    }
+
+    pub fn add_hb(&mut self, g: GpuId, gb: f64) {
+        self.gpus[g].hb_gb += gb;
+    }
+
+    pub fn sub_hb(&mut self, g: GpuId, gb: f64) {
+        self.gpus[g].hb_gb = (self.gpus[g].hb_gb - gb).max(0.0);
+    }
+
+    /// GPUs on `node` (given gpus-per-node) already hosting `stage` — the
+    /// intra-node P2P source search for Adjust-on-Dispatch (§5.3).
+    pub fn peer_with_stage(
+        &self,
+        node: usize,
+        gpus_per_node: usize,
+        stage: Stage,
+    ) -> Option<GpuId> {
+        (node * gpus_per_node..(node + 1) * gpus_per_node)
+            .find(|&g| self.gpus[g].hosts(stage))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_and_evict() {
+        let mut v = VramLedger::new(2, 48.0);
+        assert!(v.load_stage(0, Stage::Diffuse, 24.0));
+        assert!(v.gpu(0).hosts(Stage::Diffuse));
+        assert!((v.free_gb(0) - 24.0).abs() < 1e-9);
+        assert!(v.evict_stage(0, Stage::Diffuse));
+        assert!(!v.evict_stage(0, Stage::Diffuse)); // already gone
+        assert_eq!(v.free_gb(0), 48.0);
+    }
+
+    #[test]
+    fn load_is_idempotent() {
+        let mut v = VramLedger::new(1, 48.0);
+        assert!(v.load_stage(0, Stage::Encode, 9.6));
+        assert!(v.load_stage(0, Stage::Encode, 9.6));
+        assert!((v.gpu(0).weights_gb() - 9.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oom_on_overload() {
+        let mut v = VramLedger::new(1, 48.0);
+        assert!(v.load_stage(0, Stage::Diffuse, 26.0));
+        assert!(!v.load_stage(0, Stage::Encode, 30.0));
+        assert_eq!(v.oom_events, 1);
+    }
+
+    #[test]
+    fn act_reservation_all_or_nothing() {
+        let mut v = VramLedger::new(2, 48.0);
+        assert!(v.load_stage(1, Stage::Diffuse, 40.0));
+        // GPU 1 can only fit 8 more; reserving 10 across {0,1} must fail
+        // without touching GPU 0.
+        assert!(!v.reserve_act(&[0, 1], 10.0));
+        assert_eq!(v.gpu(0).act_gb, 0.0);
+        assert!(v.reserve_act(&[0, 1], 4.0));
+        v.release_act(&[0, 1], 4.0);
+        assert_eq!(v.gpu(0).act_gb, 0.0);
+        assert_eq!(v.gpu(1).act_gb, 0.0);
+    }
+
+    #[test]
+    fn peer_search_scans_node() {
+        let mut v = VramLedger::new(16, 48.0);
+        v.load_stage(10, Stage::Decode, 0.2);
+        assert_eq!(v.peer_with_stage(1, 8, Stage::Decode), Some(10));
+        assert_eq!(v.peer_with_stage(0, 8, Stage::Decode), None);
+    }
+}

@@ -1,0 +1,79 @@
+//! Cluster topology specification (paper §8.1 testbed).
+//!
+//! Default mirrors the paper: 16 nodes × 8 NVIDIA L20 48 GB, PCIe 4.0 x16
+//! within a node (4+4 dual-NUMA), 100 Gb/s Ethernet (GPUDirect RDMA) across
+//! nodes.
+
+/// Cluster shape + link bandwidths consumed by the simulator's comm model.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Per-GPU memory (GB). L20 = 48.
+    pub vram_gb: f64,
+    /// Per-GPU peak compute, TFLOP/s (L20 bf16 dense ≈ 119).
+    pub tflops: f64,
+    /// Per-GPU memory bandwidth, GB/s (L20 ≈ 864).
+    pub hbm_gbps: f64,
+    /// Intra-node GPU<->GPU effective bandwidth, GB/s (PCIe 4.0 x16 ≈ 25).
+    pub intra_gbps: f64,
+    /// Inter-node effective bandwidth, GB/s (100 GbE RDMA ≈ 10).
+    pub inter_gbps: f64,
+    /// Host (pinned) <-> GPU bandwidth for the HB spill path, GB/s.
+    pub host_gbps: f64,
+    /// Per-transfer fixed latency, ms.
+    pub link_latency_ms: f64,
+    /// Handoff-buffer capacity per GPU, GB (Cap_hb, §5.2).
+    pub cap_hb_gb: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's 128-GPU L20 testbed.
+    pub fn l20_128() -> Self {
+        ClusterSpec {
+            nodes: 16,
+            gpus_per_node: 8,
+            vram_gb: 48.0,
+            tflops: 119.0,
+            hbm_gbps: 864.0,
+            intra_gbps: 25.0,
+            inter_gbps: 10.0,
+            host_gbps: 12.0,
+            link_latency_ms: 0.05,
+            cap_hb_gb: 2.0,
+        }
+    }
+
+    /// Scaled variant with the same per-GPU characteristics (Table 4 sweep).
+    pub fn l20(nodes: usize) -> Self {
+        ClusterSpec { nodes, ..Self::l20_128() }
+    }
+
+    /// Tiny cluster for unit tests / the real-mode CPU runtime.
+    pub fn tiny(nodes: usize, gpus_per_node: usize) -> Self {
+        ClusterSpec { nodes, gpus_per_node, ..Self::l20_128() }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_is_128_gpus() {
+        let c = ClusterSpec::l20_128();
+        assert_eq!(c.total_gpus(), 128);
+        assert_eq!(c.vram_gb, 48.0);
+    }
+
+    #[test]
+    fn scaling_preserves_gpu_model() {
+        let c = ClusterSpec::l20(512);
+        assert_eq!(c.total_gpus(), 4096);
+        assert_eq!(c.tflops, ClusterSpec::l20_128().tflops);
+    }
+}

@@ -1,0 +1,213 @@
+//! Config-file loading: a small `key = value` format (INI-style sections)
+//! that overrides the built-in cluster/solver defaults — the deployment
+//! knobs a real operator would edit without recompiling.
+//!
+//! ```text
+//! # tridentserve.conf
+//! [cluster]
+//! nodes = 16
+//! gpus_per_node = 8
+//! vram_gb = 48
+//! inter_gbps = 10
+//!
+//! [solver]
+//! slo_scale = 2.5
+//! c_on = 1000
+//! tick_ms = 100
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{ClusterSpec, SolverConstants};
+
+/// Parsed sections: `section -> key -> value`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConfigFile {
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut sections: BTreeMap<String, BTreeMap<String, String>> = BTreeMap::new();
+        let mut current = "global".to_string();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                current = name.trim().to_lowercase();
+                sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            sections
+                .entry(current.clone())
+                .or_default()
+                .insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+        Ok(ConfigFile { sections })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(String::as_str)
+    }
+
+    fn num(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow!("[{section}] {key}: not a number: {v:?}")),
+        }
+    }
+
+    /// Apply `[cluster]` overrides onto a base spec.
+    pub fn apply_cluster(&self, base: &ClusterSpec) -> Result<ClusterSpec> {
+        let mut c = base.clone();
+        if let Some(v) = self.num("cluster", "nodes")? {
+            c.nodes = v as usize;
+        }
+        if let Some(v) = self.num("cluster", "gpus_per_node")? {
+            c.gpus_per_node = v as usize;
+        }
+        if let Some(v) = self.num("cluster", "vram_gb")? {
+            c.vram_gb = v;
+        }
+        if let Some(v) = self.num("cluster", "tflops")? {
+            c.tflops = v;
+        }
+        if let Some(v) = self.num("cluster", "hbm_gbps")? {
+            c.hbm_gbps = v;
+        }
+        if let Some(v) = self.num("cluster", "intra_gbps")? {
+            c.intra_gbps = v;
+        }
+        if let Some(v) = self.num("cluster", "inter_gbps")? {
+            c.inter_gbps = v;
+        }
+        if let Some(v) = self.num("cluster", "host_gbps")? {
+            c.host_gbps = v;
+        }
+        if let Some(v) = self.num("cluster", "link_latency_ms")? {
+            c.link_latency_ms = v;
+        }
+        if let Some(v) = self.num("cluster", "cap_hb_gb")? {
+            c.cap_hb_gb = v;
+        }
+        if c.nodes == 0 || c.gpus_per_node == 0 {
+            return Err(anyhow!("[cluster] nodes/gpus_per_node must be positive"));
+        }
+        Ok(c)
+    }
+
+    /// Apply `[solver]` overrides onto base constants.
+    pub fn apply_solver(&self, base: &SolverConstants) -> Result<SolverConstants> {
+        let mut s = base.clone();
+        if let Some(v) = self.num("solver", "c_on")? {
+            s.c_on = v;
+        }
+        if let Some(v) = self.num("solver", "c_late")? {
+            s.c_late = v;
+        }
+        if let Some(v) = self.num("solver", "alpha")? {
+            s.alpha = v;
+        }
+        if let Some(v) = self.num("solver", "efficiency_threshold")? {
+            s.efficiency_threshold = v;
+        }
+        if let Some(v) = self.num("solver", "slo_scale")? {
+            s.slo_scale = v;
+        }
+        if let Some(v) = self.num("solver", "tick_ms")? {
+            s.tick_ms = v;
+        }
+        if let Some(v) = self.num("solver", "imbalance_trigger")? {
+            s.imbalance_trigger = v;
+        }
+        for (i, key) in ["beta0", "beta1", "beta2", "beta3"].iter().enumerate() {
+            if let Some(v) = self.num("solver", key)? {
+                s.betas[i] = v;
+            }
+        }
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# comment
+[cluster]
+nodes = 4
+vram_gb = 80   # A100 class
+inter_gbps = 25
+
+[solver]
+slo_scale = 3.0
+beta2 = 1e-5
+"#;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let f = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(f.get("cluster", "nodes"), Some("4"));
+        assert_eq!(f.get("solver", "slo_scale"), Some("3.0"));
+        assert_eq!(f.get("cluster", "missing"), None);
+    }
+
+    #[test]
+    fn applies_cluster_overrides() {
+        let f = ConfigFile::parse(SAMPLE).unwrap();
+        let c = f.apply_cluster(&ClusterSpec::l20_128()).unwrap();
+        assert_eq!(c.nodes, 4);
+        assert_eq!(c.vram_gb, 80.0);
+        assert_eq!(c.inter_gbps, 25.0);
+        assert_eq!(c.gpus_per_node, 8); // untouched default
+        assert_eq!(c.total_gpus(), 32);
+    }
+
+    #[test]
+    fn applies_solver_overrides() {
+        let f = ConfigFile::parse(SAMPLE).unwrap();
+        let s = f.apply_solver(&SolverConstants::default()).unwrap();
+        assert_eq!(s.slo_scale, 3.0);
+        assert_eq!(s.betas[2], 1e-5);
+        assert_eq!(s.c_on, 1000.0); // untouched default
+    }
+
+    #[test]
+    fn rejects_malformed_lines_and_values() {
+        assert!(ConfigFile::parse("[cluster]\nnodes").is_err());
+        let f = ConfigFile::parse("[cluster]\nnodes = many").unwrap();
+        assert!(f.apply_cluster(&ClusterSpec::l20_128()).is_err());
+    }
+
+    #[test]
+    fn zero_nodes_rejected() {
+        let f = ConfigFile::parse("[cluster]\nnodes = 0").unwrap();
+        assert!(f.apply_cluster(&ClusterSpec::l20_128()).is_err());
+    }
+
+    #[test]
+    fn empty_config_is_identity() {
+        let f = ConfigFile::parse("").unwrap();
+        let base = ClusterSpec::l20_128();
+        let c = f.apply_cluster(&base).unwrap();
+        assert_eq!(c.total_gpus(), base.total_gpus());
+    }
+}

@@ -1,0 +1,12 @@
+//! Typed configuration: pipelines (Table 2), cluster topology, solver
+//! constants (Appendix C.2), and workload settings (Table 5 / Appendix D.1).
+
+pub mod cluster;
+pub mod file;
+pub mod pipeline;
+pub mod solver;
+
+pub use cluster::ClusterSpec;
+pub use file::ConfigFile;
+pub use pipeline::{PipelineSpec, ReqShape, Stage, StageSpec};
+pub use solver::SolverConstants;

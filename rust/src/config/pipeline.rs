@@ -1,0 +1,329 @@
+//! Diffusion-pipeline specifications (paper Table 2 + Table 5).
+//!
+//! A [`PipelineSpec`] captures everything the planners need to know about a
+//! pipeline: per-stage model sizes, per-stage processing-length geometry for
+//! every request shape, denoising step counts, arrival rates and the
+//! monitor window `T_win`.
+//!
+//! Four paper pipelines (Sd3, Flux, CogVideoX1.5, HunyuanVideo) are
+//! predefined, plus `mini()` describing the real miniature pipeline lowered
+//! by `python/compile/aot.py` and served by the PJRT runtime.
+
+use std::fmt;
+
+/// The three pipeline stages (paper notation: E, D, C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Stage {
+    Encode,
+    Diffuse,
+    Decode,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 3] = [Stage::Encode, Stage::Diffuse, Stage::Decode];
+
+    pub fn short(&self) -> &'static str {
+        match self {
+            Stage::Encode => "E",
+            Stage::Diffuse => "D",
+            Stage::Decode => "C",
+        }
+    }
+}
+
+impl fmt::Display for Stage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.short())
+    }
+}
+
+/// Per-stage model description.
+#[derive(Clone, Debug)]
+pub struct StageSpec {
+    /// Human name, e.g. "T5-XXL".
+    pub model_name: &'static str,
+    /// Parameter count in billions (Table 2, column B).
+    pub params_b: f64,
+    /// Resident weight footprint in GB (bf16 ≈ 2 bytes/param).
+    pub weights_gb: f64,
+    /// Activation GB per 1k processing tokens at degree 1 (drives peak-mem
+    /// and the memory-bound Decode profile).
+    pub act_gb_per_1k: f64,
+}
+
+impl StageSpec {
+    pub fn new(model_name: &'static str, params_b: f64, act_gb_per_1k: f64) -> Self {
+        StageSpec { model_name, params_b, weights_gb: params_b * 2.0, act_gb_per_1k }
+    }
+}
+
+/// One request shape: a (resolution[, duration]) bundle with its per-stage
+/// processing lengths. `l_*` follow the paper's l_proc notation.
+#[derive(Clone, Debug)]
+pub struct ReqShape {
+    pub name: String,
+    /// Encode tokens (<= 500 per paper).
+    pub l_e: u64,
+    /// Diffuse latent tokens (10^2..1.2*10^5 per Table 2).
+    pub l_d: u64,
+    /// Decode latent tokens (same token grid as Diffuse output).
+    pub l_c: u64,
+    /// Pixel-space elements decoded (drives the memory-bound Decode cost).
+    pub pixels: u64,
+}
+
+impl ReqShape {
+    /// Image shape from a square pixel resolution; latent patch 16px.
+    pub fn image(res: u32) -> Self {
+        let tokens = (res as u64 / 16) * (res as u64 / 16);
+        ReqShape {
+            name: format!("{res}p"),
+            l_e: 200,
+            l_d: tokens,
+            l_c: tokens,
+            pixels: res as u64 * res as u64 * 3,
+        }
+    }
+
+    /// Video shape: `res`p frames at 16 fps with 4x temporal compression.
+    /// Decode cost scales with *latent-rate* frames: the causal video VAE's
+    /// heavy conv stack runs at the temporally-compressed rate and the 4x
+    /// temporal upsampling to output frames is comparatively cheap.
+    pub fn video(res: u32, seconds: u32) -> Self {
+        let (h, w) = match res {
+            480 => (480u64, 854u64),
+            540 => (540, 960),
+            720 => (720, 1280),
+            _ => (res as u64, res as u64 * 16 / 9),
+        };
+        let frames = (seconds as u64 * 16).div_ceil(4);
+        let tokens = (h / 16) * (w / 16) * frames;
+        ReqShape {
+            name: format!("{res}p{seconds}s"),
+            l_e: 250,
+            l_d: tokens,
+            l_c: tokens,
+            pixels: h * w * frames * 3,
+        }
+    }
+
+    pub fn l_proc(&self, stage: Stage) -> u64 {
+        match stage {
+            Stage::Encode => self.l_e,
+            Stage::Diffuse => self.l_d,
+            Stage::Decode => self.l_c,
+        }
+    }
+}
+
+/// A full pipeline description.
+#[derive(Clone, Debug)]
+pub struct PipelineSpec {
+    pub name: &'static str,
+    pub encode: StageSpec,
+    pub diffuse: StageSpec,
+    pub decode: StageSpec,
+    /// Denoising steps (Table 5, "Steps").
+    pub steps: u32,
+    /// Arrival rate in req/s the paper sizes for 128 GPUs (Table 5).
+    pub rate_req_s: f64,
+    /// Monitor sliding-window T_win in ms (Table 5, Appendix D.1).
+    pub t_win_ms: f64,
+    /// All request shapes this pipeline serves.
+    pub shapes: Vec<ReqShape>,
+    /// True for video pipelines (affects trace labels only).
+    pub video: bool,
+}
+
+impl PipelineSpec {
+    pub fn stage(&self, s: Stage) -> &StageSpec {
+        match s {
+            Stage::Encode => &self.encode,
+            Stage::Diffuse => &self.diffuse,
+            Stage::Decode => &self.decode,
+        }
+    }
+
+    pub fn shape(&self, name: &str) -> Option<&ReqShape> {
+        self.shapes.iter().find(|s| s.name == name)
+    }
+
+    pub fn max_l_d(&self) -> u64 {
+        self.shapes.iter().map(|s| s.l_d).max().unwrap_or(0)
+    }
+
+    /// Stable-Diffusion-3-medium (Sd3): T5-XXL 4.8B / Sd3-DiT 2B / AE-KL 0.1B.
+    pub fn sd3() -> Self {
+        PipelineSpec {
+            name: "sd3",
+            encode: StageSpec::new("T5-XXL", 4.8, 0.002),
+            diffuse: StageSpec::new("Sd3-DiT", 2.0, 0.12),
+            decode: StageSpec::new("AE-KL", 0.1, 0.30),
+            steps: 20,
+            rate_req_s: 20.0,
+            t_win_ms: 3.0 * 60.0 * 1000.0,
+            shapes: [128, 256, 512, 1024, 1536].iter().map(|&r| ReqShape::image(r)).collect(),
+            video: false,
+        }
+    }
+
+    /// Flux.1: T5-XXL 4.8B / Flux-DiT 12B / AE-KL 0.1B.
+    pub fn flux() -> Self {
+        PipelineSpec {
+            name: "flux",
+            encode: StageSpec::new("T5-XXL", 4.8, 0.002),
+            diffuse: StageSpec::new("Flux-DiT", 12.0, 0.25),
+            decode: StageSpec::new("AE-KL", 0.1, 0.50),
+            steps: 4,
+            rate_req_s: 1.5,
+            t_win_ms: 5.0 * 60.0 * 1000.0,
+            shapes: [128, 256, 512, 1024, 2048, 3072, 4096]
+                .iter()
+                .map(|&r| ReqShape::image(r))
+                .collect(),
+            video: false,
+        }
+    }
+
+    /// CogVideoX1.5-5B: T5 0.35B / Cog-DiT 4.2B / AE-KL-Cog 0.45B.
+    pub fn cogvideo() -> Self {
+        let mut shapes = Vec::new();
+        for &res in &[480u32, 720] {
+            for &sec in &[2u32, 4, 8, 10] {
+                shapes.push(ReqShape::video(res, sec));
+            }
+        }
+        PipelineSpec {
+            name: "cogvideo",
+            encode: StageSpec::new("T5", 0.35, 0.002),
+            diffuse: StageSpec::new("Cog-DiT", 4.2, 0.15),
+            decode: StageSpec::new("AE-KL-Cog", 0.45, 0.12),
+            steps: 6,
+            rate_req_s: 1.0,
+            t_win_ms: 5.0 * 60.0 * 1000.0,
+            shapes,
+            video: true,
+        }
+    }
+
+    /// HunyuanVideo: Llama3-8B / HYV-DiT 13B / AE-KL-HYV 0.5B.
+    pub fn hunyuan() -> Self {
+        let mut shapes = Vec::new();
+        for &res in &[540u32, 720] {
+            for &sec in &[1u32, 2, 4, 8] {
+                shapes.push(ReqShape::video(res, sec));
+            }
+        }
+        PipelineSpec {
+            name: "hunyuan",
+            encode: StageSpec::new("Llama3-8B", 8.0, 0.002),
+            diffuse: StageSpec::new("HYV-DiT", 13.0, 0.22),
+            decode: StageSpec::new("AE-KL-HYV", 0.5, 0.12),
+            steps: 6,
+            rate_req_s: 0.5,
+            t_win_ms: 10.0 * 60.0 * 1000.0,
+            shapes,
+            video: true,
+        }
+    }
+
+    /// The real miniature pipeline served via PJRT (python/compile/model.py).
+    /// Resolutions {64,128,256} → {64,256,1024} DiT tokens.
+    pub fn mini() -> Self {
+        PipelineSpec {
+            name: "mini",
+            encode: StageSpec::new("mini-enc", 0.0002, 0.002),
+            diffuse: StageSpec::new("mini-dit", 0.0002, 0.12),
+            decode: StageSpec::new("mini-vae", 0.0001, 0.30),
+            steps: 4,
+            rate_req_s: 4.0,
+            t_win_ms: 30.0 * 1000.0,
+            shapes: [64, 128, 256]
+                .iter()
+                .map(|&r| {
+                    let tokens = (r as u64 / 8) * (r as u64 / 8) / 4; // (r/4/2)^2
+                    ReqShape {
+                        name: format!("{r}p"),
+                        l_e: 16,
+                        l_d: tokens,
+                        l_c: tokens,
+                        pixels: r as u64 * r as u64 * 3,
+                    }
+                })
+                .collect(),
+            video: false,
+        }
+    }
+
+    pub fn all_paper() -> Vec<PipelineSpec> {
+        vec![Self::sd3(), Self::flux(), Self::cogvideo(), Self::hunyuan()]
+    }
+
+    pub fn by_name(name: &str) -> Option<PipelineSpec> {
+        match name {
+            "sd3" => Some(Self::sd3()),
+            "flux" => Some(Self::flux()),
+            "cogvideo" | "cog" => Some(Self::cogvideo()),
+            "hunyuan" | "hyv" => Some(Self::hunyuan()),
+            "mini" => Some(Self::mini()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_model_sizes() {
+        let flux = PipelineSpec::flux();
+        assert_eq!(flux.encode.params_b, 4.8);
+        assert_eq!(flux.diffuse.params_b, 12.0);
+        assert!(flux.diffuse.weights_gb > 20.0); // cannot co-locate 3 stages + act on 48GB at high res
+        let hyv = PipelineSpec::hunyuan();
+        assert_eq!(hyv.diffuse.params_b, 13.0);
+    }
+
+    #[test]
+    fn image_token_geometry_matches_table2_ranges() {
+        // Table 2: image l_proc^D spans 100..60k. 128px..4096px -> 64..65536.
+        let s = ReqShape::image(128);
+        assert_eq!(s.l_d, 64);
+        let s = ReqShape::image(4096);
+        assert_eq!(s.l_d, 65536);
+    }
+
+    #[test]
+    fn video_token_geometry_matches_table2_ranges() {
+        // Table 2: video l_proc^D spans 1k..120k.
+        let s = ReqShape::video(480, 2);
+        assert!(s.l_d >= 1_000, "{}", s.l_d);
+        let s = ReqShape::video(720, 10);
+        assert!((10_000..200_000).contains(&s.l_d), "{}", s.l_d);
+    }
+
+    #[test]
+    fn stage_lookup_consistent() {
+        let p = PipelineSpec::sd3();
+        assert_eq!(p.stage(Stage::Encode).model_name, "T5-XXL");
+        assert_eq!(p.stage(Stage::Diffuse).model_name, "Sd3-DiT");
+        assert_eq!(p.stage(Stage::Decode).model_name, "AE-KL");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for p in PipelineSpec::all_paper() {
+            assert_eq!(PipelineSpec::by_name(p.name).unwrap().name, p.name);
+        }
+        assert!(PipelineSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn shapes_sorted_by_load_exist() {
+        for p in PipelineSpec::all_paper() {
+            assert!(p.shapes.len() >= 5);
+            assert!(p.max_l_d() > 1000);
+        }
+    }
+}

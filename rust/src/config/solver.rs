@@ -1,0 +1,57 @@
+//! Dispatcher objective constants (paper Appendix C.2) and SLO settings.
+
+/// Reward / penalty constants for the dispatch ILP objective.
+///
+/// Defaults are the paper's: `C_on = 1000`, `C_late = 200`, starvation
+/// threshold `α = 5`, and communication penalties
+/// `(β0, β1, β2, β3) = (0, 1e-6, 5e-6, 6e-6)` per processing token.
+#[derive(Clone, Debug)]
+pub struct SolverConstants {
+    pub c_on: f64,
+    pub c_late: f64,
+    /// Starvation threshold α in the aging reward (Eq. 2).
+    pub alpha: f64,
+    /// Per-Primary-type communication penalty per token (Eq. 3).
+    pub betas: [f64; 4],
+    /// Parallel-efficiency threshold for the E_{r,k} feasibility filter and
+    /// the "optimal parallelism strategy" definition (§6.2 footnote 4).
+    pub efficiency_threshold: f64,
+    /// SLO = `slo_scale` × latency under the optimal parallelism strategy
+    /// (§8.1, following AlpaServe).
+    pub slo_scale: f64,
+    /// Dispatcher tick period, ms.
+    pub tick_ms: f64,
+    /// Monitor imbalance trigger: switch placement when fastest/slowest
+    /// stage rate ratio exceeds this (§5.3; paper uses 1.5).
+    pub imbalance_trigger: f64,
+}
+
+impl Default for SolverConstants {
+    fn default() -> Self {
+        SolverConstants {
+            c_on: 1000.0,
+            c_late: 200.0,
+            alpha: 5.0,
+            betas: [0.0, 1e-6, 5e-6, 6e-6],
+            efficiency_threshold: 0.8,
+            slo_scale: 2.5,
+            tick_ms: 100.0,
+            imbalance_trigger: 1.5,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_appendix_c2() {
+        let c = SolverConstants::default();
+        assert_eq!(c.c_on, 1000.0);
+        assert_eq!(c.c_late, 200.0);
+        assert_eq!(c.alpha, 5.0);
+        assert_eq!(c.betas, [0.0, 1e-6, 5e-6, 6e-6]);
+        assert_eq!(c.slo_scale, 2.5);
+    }
+}

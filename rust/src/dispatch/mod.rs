@@ -1,0 +1,655 @@
+//! Dispatch plans and the Resource-Aware Dispatcher (§6.2, Appendix C.2).
+//!
+//! Per tick, the dispatcher solves the two-step problem:
+//! 1. an ILP picks, for each pending request, whether to dispatch *now* and
+//!    on which `(Primary type i, degree k)` — maximising the SLO-aware
+//!    reward `W_r` minus the communication penalty `Q_{r,i}` subject to idle
+//!    Primary-replica capacities `B_i` (solved by the MCKP branch-and-bound
+//!    after the paper's aggressive feasibility filtering `E_{r,k}·F_{r,i,k}`);
+//! 2. `Γ^E`/`Γ^C` are then derived from `Γ^D` (merge into the D set when the
+//!    stage co-resides; otherwise run on an auxiliary replica at the
+//!    profiled optimal parallelism).
+
+use std::time::Instant;
+
+use crate::cluster::topology::{GpuId, Topology};
+use crate::config::{PipelineSpec, SolverConstants, Stage};
+use crate::ilp::{Item, Mckp};
+use crate::placement::{Pi, PlacementPlan};
+use crate::profiler::Profile;
+use crate::request::{Request, RequestId};
+
+/// One stage's dispatch plan `Γ_r^s = (r, G_r^s, {s: φ_s})`.
+#[derive(Clone, Debug)]
+pub struct StagePlan {
+    pub req: RequestId,
+    pub stage: Stage,
+    pub gpus: Vec<GpuId>,
+    pub degree: usize,
+}
+
+/// A request's full dispatch plan `Γ_r = {Γ^E, Γ^D, Γ^C}`.
+#[derive(Clone, Debug)]
+pub struct RequestPlans {
+    pub req: RequestId,
+    pub shape_idx: usize,
+    /// VR/Primary type index 0..3 the Diffuse plan landed on.
+    pub vr_type: usize,
+    pub e: StagePlan,
+    pub d: StagePlan,
+    pub c: StagePlan,
+    /// True when E shares G^D and merges into the D execution.
+    pub e_merged: bool,
+    /// True when C runs on a subset of G^D.
+    pub c_on_subset: bool,
+}
+
+/// What the dispatcher needs to know about the cluster at a tick.
+#[derive(Clone, Debug)]
+pub struct ClusterView {
+    /// Current placement metadata (may already be `P_switch` — §5.3).
+    pub placement: PlacementPlan,
+    /// Idle GPUs right now (eligible to start a D plan immediately).
+    pub idle: Vec<bool>,
+    /// For auxiliary selection: earliest time each GPU frees up (= now for
+    /// idle GPUs). Indexed by GpuId.
+    pub free_at_ms: Vec<f64>,
+    pub now_ms: f64,
+}
+
+/// Within-tick load spreader: `free_at_ms` is a snapshot, so successive
+/// auxiliary picks in the same tick must account for work just assigned or
+/// they all pile onto one GPU.
+#[derive(Clone, Debug, Default)]
+pub struct TickBalancer {
+    assigned: std::collections::HashMap<GpuId, usize>,
+}
+
+impl TickBalancer {
+    pub fn load(&self, g: GpuId) -> usize {
+        self.assigned.get(&g).copied().unwrap_or(0)
+    }
+
+    pub fn note(&mut self, g: GpuId) {
+        *self.assigned.entry(g).or_insert(0) += 1;
+    }
+
+    /// Pick the candidate minimising (work assigned this tick, free time).
+    pub fn pick(
+        &mut self,
+        candidates: impl Iterator<Item = GpuId>,
+        free_at_ms: &[f64],
+    ) -> Option<GpuId> {
+        let best = candidates.min_by(|&a, &b| {
+            (self.load(a), free_at_ms[a])
+                .partial_cmp(&(self.load(b), free_at_ms[b]))
+                .unwrap()
+        })?;
+        self.note(best);
+        Some(best)
+    }
+}
+
+/// Solver telemetry per tick (Table 4).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolveStats {
+    pub solve_ms: f64,
+    pub nodes: u64,
+    pub optimal: bool,
+    pub candidates: usize,
+    pub dispatched: usize,
+}
+
+/// The Resource-Aware Dispatcher.
+pub struct Dispatcher<'a> {
+    pub profile: &'a Profile,
+    pub pipeline: &'a PipelineSpec,
+    pub consts: &'a SolverConstants,
+    pub topo: &'a Topology,
+    /// VRAM headroom reserve used in the feasibility filter (matches the
+    /// orchestrator's).
+    pub mem_reserve_gb: f64,
+    /// Time budget per ILP solve, ms.
+    pub solve_budget_ms: f64,
+}
+
+impl<'a> Dispatcher<'a> {
+    pub fn new(
+        profile: &'a Profile,
+        pipeline: &'a PipelineSpec,
+        consts: &'a SolverConstants,
+        topo: &'a Topology,
+    ) -> Self {
+        Dispatcher {
+            profile,
+            pipeline,
+            consts,
+            topo,
+            mem_reserve_gb: 1.0,
+            solve_budget_ms: 80.0,
+        }
+    }
+
+    /// `cap(i)`: activation headroom on a Primary GPU of type `i`.
+    fn cap_gb(&self, i: usize) -> f64 {
+        let weights: f64 = Pi::PRIMARY[i]
+            .stages()
+            .iter()
+            .map(|&s| self.profile.stage_weights_gb(s))
+            .sum();
+        self.topo.spec.vram_gb - weights - self.mem_reserve_gb
+    }
+
+    /// Feasibility filter `E_{r,k}`: degree efficient (footnote 5: >= 0.8),
+    /// latency-improving (tight deadlines may justify trading efficiency
+    /// for speed — the ILP's C3a link then decides), or the minimum degree
+    /// that fits the request in memory at all.
+    fn degree_allowed(&self, shape_idx: usize, k: usize, i: usize) -> bool {
+        let t1 = self.profile.latency_ms(shape_idx, Stage::Diffuse, 1);
+        let tk = self.profile.latency_ms(shape_idx, Stage::Diffuse, k);
+        let eff = t1 / (k as f64 * tk);
+        if eff >= self.consts.efficiency_threshold {
+            return true;
+        }
+        // Latency-improving: strictly faster than the next degree down
+        // (excludes small requests where parallelism only hurts).
+        if k > 1 {
+            let tk_prev = self.profile.latency_ms(shape_idx, Stage::Diffuse, k / 2);
+            if tk < tk_prev * 0.97 {
+                return true;
+            }
+        }
+        // Memory-forced: every smaller degree overflows cap(i).
+        let cap = self.cap_gb(i);
+        crate::perfmodel::DEGREES
+            .iter()
+            .filter(|&&kk| kk < k)
+            .all(|&kk| self.profile.act_gb(shape_idx, Stage::Diffuse, kk) > cap)
+            && self.profile.act_gb(shape_idx, Stage::Diffuse, k) <= cap
+    }
+
+    /// Feasibility filter `F_{r,i,k}`: the request's Diffuse (and the
+    /// co-resident Decode, if any) fits on type-i primaries at degree k;
+    /// when Decode is NOT co-resident, some stage host in the current
+    /// placement must have the headroom to decode it (`c_headroom`).
+    fn type_feasible(&self, shape_idx: usize, i: usize, k: usize, c_headroom: f64) -> bool {
+        let cap = self.cap_gb(i);
+        if cap <= 0.0 {
+            return false;
+        }
+        if self.profile.act_gb(shape_idx, Stage::Diffuse, k) > cap {
+            return false;
+        }
+        let kc = self.profile.optimal_degree(shape_idx, Stage::Decode).min(k);
+        if Pi::PRIMARY[i].contains(Stage::Decode) {
+            if self.profile.act_gb(shape_idx, Stage::Decode, kc) > cap {
+                return false;
+            }
+        } else if self.profile.act_gb(shape_idx, Stage::Decode, 1) > c_headroom {
+            return false;
+        }
+        true
+    }
+
+    /// Largest Decode headroom over GPUs whose *metadata* placement hosts C
+    /// (weights per metadata; residency catches up lazily).
+    fn best_c_headroom(&self, placement: &PlacementPlan) -> f64 {
+        placement
+            .pi
+            .iter()
+            .filter(|pi| pi.contains(Stage::Decode))
+            .map(|pi| {
+                let w: f64 = pi.stages().iter().map(|&s| self.profile.stage_weights_gb(s)).sum();
+                self.topo.spec.vram_gb - w - self.mem_reserve_gb
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// SLO-aware reward `W_r` with the aging mechanism (Appendix C.2 Eq. 2).
+    pub fn reward(&self, r: &Request, now_ms: f64, best_runtime_ms: f64) -> f64 {
+        let t_hat = now_ms + best_runtime_ms;
+        if t_hat <= r.deadline_ms {
+            self.consts.c_on
+        } else {
+            let rel_deadline = (r.deadline_ms - r.arrival_ms).max(1.0);
+            let scale = ((t_hat - r.arrival_ms) / rel_deadline).max(1.0);
+            self.consts.c_late * (scale - self.consts.alpha + 1.0).max(1.0)
+        }
+    }
+
+    /// Communication penalty `Q_{r,i} = β_i · l_r` (Appendix C.2 Eq. 3).
+    pub fn comm_penalty(&self, shape_idx: usize, i: usize) -> f64 {
+        self.consts.betas[i] * self.pipeline.shapes[shape_idx].l_d as f64
+    }
+
+    /// One dispatcher tick: solve for `Γ^D`, then derive `Γ^E`/`Γ^C`.
+    pub fn dispatch(
+        &self,
+        pending: &[Request],
+        view: &ClusterView,
+    ) -> (Vec<RequestPlans>, SolveStats) {
+        let t_start = Instant::now();
+
+        // Idle primary replicas per type, grouped per node for the
+        // intra-machine GPU-set search.
+        let mut idle_by_type: [Vec<GpuId>; 4] = Default::default();
+        for g in 0..view.placement.pi.len() {
+            if !view.idle[g] {
+                continue;
+            }
+            if let Some(i) = view.placement.pi[g].vr_type() {
+                idle_by_type[i].push(g);
+            }
+        }
+        let capacities: Vec<u64> = idle_by_type.iter().map(|v| v.len() as u64).collect();
+
+        // Build the filtered ILP.
+        let c_headroom = self.best_c_headroom(&view.placement);
+        let mut items = Vec::new();
+        let mut meta: Vec<(usize, usize, usize)> = Vec::new(); // (pending_idx, i, k)
+        for (ri, r) in pending.iter().enumerate() {
+            // Best conceivable runtime for the reward estimate.
+            let mut best_rt = f64::INFINITY;
+            let mut cand: Vec<(usize, usize, f64)> = Vec::new();
+            for i in 0..4 {
+                if capacities[i] == 0 {
+                    continue;
+                }
+                for &k in &crate::perfmodel::DEGREES {
+                    if k > self.topo.spec.gpus_per_node {
+                        continue;
+                    }
+                    if !self.degree_allowed(r.shape_idx, k, i)
+                        || !self.type_feasible(r.shape_idx, i, k, c_headroom)
+                    {
+                        continue;
+                    }
+                    let rt = self.estimate_runtime_ms(r.shape_idx, i, k);
+                    best_rt = best_rt.min(rt);
+                    cand.push((i, k, rt));
+                }
+            }
+            if cand.is_empty() {
+                continue;
+            }
+            let k_opt = self.profile.optimal_degree(r.shape_idx, Stage::Diffuse);
+            for (i, k, rt) in cand {
+                // Per-item reward: the C3a link between the *chosen*
+                // (i, k)'s runtime and the deadline — a config that makes
+                // the deadline earns C_on; one that cannot earns only the
+                // aged C_late.
+                let w_r = self.reward(r, view.now_ms, rt);
+                // Tiny tie-break toward the profiled optimal degree: the
+                // SLO reward is degree-independent among on-time configs,
+                // so without this the solver may park a heavy request on
+                // k=1 when k_opt GPUs are just as available.
+                let k_bias = 0.01 * ((k as f64).log2() - (k_opt as f64).log2()).abs();
+                // Shortness tie-break (SRTF flavour under scarcity): worth
+                // at most ~1 against the O(1000) SLO reward.
+                let srtf_bias = 1.0 / (1.0 + best_rt / 1000.0);
+                // Strict-but-small VR-order preference (V0 < V1 < V2 < V3):
+                // the per-token Q penalty vanishes for small requests, yet
+                // scattering them over D-heavy primaries fragments the
+                // capacity heavy requests need.
+                let type_bias = 0.3 * i as f64;
+                let profit =
+                    w_r - self.comm_penalty(r.shape_idx, i) - k_bias - type_bias + srtf_bias;
+                items.push(Item {
+                    group: ri,
+                    profit,
+                    resource: i,
+                    weight: k as u64,
+                });
+                meta.push((ri, i, k));
+            }
+        }
+
+        let problem = Mckp { n_groups: pending.len(), capacities, items };
+        // §Perf: the greedy incumbent is within a fraction of a percent of
+        // optimal on dispatch instances (profits are dominated by the W_r
+        // reward classes); a bounded B&B polish catches the remaining
+        // capacity-packing wins without re-proving engineered near-ties.
+        let sol = problem.solve_with_budget(self.solve_budget_ms, 40_000, 0.0);
+
+        // Materialise plans: find intra-node idle GPU sets.
+        let mut taken = vec![false; view.placement.pi.len()];
+        let mut plans = Vec::new();
+        let mut balancer = TickBalancer::default();
+        for (ri, choice) in sol.chosen.iter().enumerate() {
+            let Some(item_idx) = choice else { continue };
+            let (_, i, k) = meta[*item_idx];
+            let r = &pending[ri];
+            let Some(gpus) =
+                pick_intra_node_set(&idle_by_type[i], &taken, k, self.topo)
+            else {
+                continue; // stays pending for the next tick (§6.2)
+            };
+            for &g in &gpus {
+                taken[g] = true;
+            }
+            plans.push(self.build_plans(r, i, gpus, k, view, &mut balancer));
+        }
+
+        let stats = SolveStats {
+            solve_ms: t_start.elapsed().as_secs_f64() * 1e3,
+            nodes: sol.nodes,
+            optimal: sol.optimal,
+            candidates: meta.len(),
+            dispatched: plans.len(),
+        };
+        (plans, stats)
+    }
+
+    /// Runtime of the stages hosted by the primary type (the pre-profiled
+    /// `t_{r,i,k}` of the ILP).
+    pub fn estimate_runtime_ms(&self, shape_idx: usize, i: usize, k: usize) -> f64 {
+        let mut t = self.profile.latency_ms(shape_idx, Stage::Diffuse, k);
+        if Pi::PRIMARY[i].contains(Stage::Encode) {
+            t += self.profile.latency_ms(shape_idx, Stage::Encode, 1);
+        }
+        if Pi::PRIMARY[i].contains(Stage::Decode) {
+            let kc = self.profile.optimal_degree(shape_idx, Stage::Decode).min(k);
+            t += self.profile.latency_ms(shape_idx, Stage::Decode, kc);
+        }
+        t
+    }
+
+    /// Derive `Γ^E` and `Γ^C` from `Γ^D` (§6.2 "Solution for Γ^E and Γ^C").
+    fn build_plans(
+        &self,
+        r: &Request,
+        vr_type: usize,
+        d_gpus: Vec<GpuId>,
+        k: usize,
+        view: &ClusterView,
+        balancer: &mut TickBalancer,
+    ) -> RequestPlans {
+        let prim = Pi::PRIMARY[vr_type];
+
+        let (e_plan, e_merged) = if prim.contains(Stage::Encode) {
+            (
+                StagePlan { req: r.id, stage: Stage::Encode, gpus: d_gpus.clone(), degree: k },
+                true,
+            )
+        } else {
+            let g = self.pick_aux(Stage::Encode, view, balancer);
+            (StagePlan { req: r.id, stage: Stage::Encode, gpus: vec![g], degree: 1 }, false)
+        };
+
+        let (c_plan, c_on_subset) = if prim.contains(Stage::Decode) {
+            let kc = self.profile.optimal_degree(r.shape_idx, Stage::Decode).min(k);
+            (
+                StagePlan {
+                    req: r.id,
+                    stage: Stage::Decode,
+                    gpus: d_gpus[..kc].to_vec(),
+                    degree: kc,
+                },
+                true,
+            )
+        } else {
+            let g = self.pick_aux(Stage::Decode, view, balancer);
+            let kc = 1;
+            (StagePlan { req: r.id, stage: Stage::Decode, gpus: vec![g], degree: kc }, false)
+        };
+
+        RequestPlans {
+            req: r.id,
+            shape_idx: r.shape_idx,
+            vr_type,
+            e: e_plan,
+            d: StagePlan { req: r.id, stage: Stage::Diffuse, gpus: d_gpus, degree: k },
+            c: c_plan,
+            e_merged,
+            c_on_subset,
+        }
+    }
+
+    /// Idle-or-earliest-to-finish auxiliary GPU hosting `stage`, spread by
+    /// the per-tick balancer. Falls back to stage hosts ordered by metadata
+    /// memory headroom (most room first), then load/free time.
+    fn pick_aux(&self, stage: Stage, view: &ClusterView, balancer: &mut TickBalancer) -> GpuId {
+        let aux_pi = if stage == Stage::Encode { Pi::E } else { Pi::C };
+        if let Some(g) = balancer.pick(
+            (0..view.placement.pi.len()).filter(|&g| view.placement.pi[g] == aux_pi),
+            &view.free_at_ms,
+        ) {
+            return g;
+        }
+        let headroom = |g: GpuId| -> f64 {
+            let w: f64 = view.placement.pi[g]
+                .stages()
+                .iter()
+                .map(|&s| self.profile.stage_weights_gb(s))
+                .sum();
+            self.topo.spec.vram_gb - w
+        };
+        let best = (0..view.placement.pi.len())
+            .filter(|&g| view.placement.pi[g].contains(stage))
+            .min_by(|&a, &b| {
+                (-headroom(a), balancer.load(a), view.free_at_ms[a])
+                    .partial_cmp(&(-headroom(b), balancer.load(b), view.free_at_ms[b]))
+                    .unwrap()
+            })
+            .unwrap_or(0);
+        balancer.note(best);
+        best
+    }
+}
+
+/// Find `k` idle GPUs of one node from `pool` (already filtered to one
+/// placement type), avoiding `taken`. Prefers nodes with the fewest spare
+/// idle GPUs (best-fit packing) and aligned blocks for hot comm groups.
+fn pick_intra_node_set(
+    pool: &[GpuId],
+    taken: &[bool],
+    k: usize,
+    topo: &Topology,
+) -> Option<Vec<GpuId>> {
+    use std::collections::BTreeMap;
+    let mut per_node: BTreeMap<usize, Vec<GpuId>> = BTreeMap::new();
+    for &g in pool {
+        if !taken[g] {
+            per_node.entry(topo.node_of(g)).or_default().push(g);
+        }
+    }
+    per_node
+        .into_iter()
+        .filter(|(_, gs)| gs.len() >= k)
+        .min_by_key(|(_, gs)| gs.len())
+        .map(|(_, gs)| gs[..k].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::perfmodel::PerfModel;
+    use crate::placement::{Orchestrator, Rates};
+    use crate::util::prop::run_prop;
+    use crate::util::Rng;
+
+    struct Fixture {
+        pipeline: PipelineSpec,
+        profile: Profile,
+        consts: SolverConstants,
+        topo: Topology,
+    }
+
+    fn fixture(p: PipelineSpec) -> Fixture {
+        let cluster = ClusterSpec::l20_128();
+        let consts = SolverConstants::default();
+        let profile = Profile::build(&PerfModel::new(cluster.clone()), &p, &consts);
+        Fixture { pipeline: p, profile, consts, topo: Topology::new(cluster) }
+    }
+
+    fn view_for(f: &Fixture, now_ms: f64) -> ClusterView {
+        let orch = Orchestrator::new(&f.profile, &f.pipeline, &f.consts, &f.topo.spec);
+        let w: Vec<f64> = f.pipeline.shapes.iter().map(|_| 1.0).collect();
+        let rates = orch.estimated_rates(&w);
+        let placement = orch.plan(&w, f.topo.total_gpus(), &rates);
+        let g = placement.pi.len();
+        ClusterView { placement, idle: vec![true; g], free_at_ms: vec![now_ms; g], now_ms }
+    }
+
+    fn req(f: &Fixture, id: u64, shape: &str, now: f64) -> Request {
+        let idx = f.pipeline.shapes.iter().position(|s| s.name == shape).unwrap();
+        Request {
+            id,
+            shape_idx: idx,
+            arrival_ms: now,
+            deadline_ms: now + f.profile.slo_ms[idx],
+            batch: 1,
+        }
+    }
+
+    #[test]
+    fn dispatches_single_request() {
+        let f = fixture(PipelineSpec::flux());
+        let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
+        let view = view_for(&f, 0.0);
+        let r = req(&f, 1, "1024p", 0.0);
+        let (plans, stats) = d.dispatch(&[r], &view);
+        assert_eq!(plans.len(), 1);
+        assert!(stats.optimal);
+        let p = &plans[0];
+        assert_eq!(p.d.degree, p.d.gpus.len());
+        assert!(f.topo.is_intra_node(&p.d.gpus));
+    }
+
+    #[test]
+    fn derived_plans_follow_primary_type() {
+        let f = fixture(PipelineSpec::flux());
+        let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
+        let view = view_for(&f, 0.0);
+        let r = req(&f, 1, "512p", 0.0);
+        let (plans, _) = d.dispatch(&[r], &view);
+        let p = &plans[0];
+        let prim = Pi::PRIMARY[p.vr_type];
+        if prim.contains(Stage::Encode) {
+            assert!(p.e_merged);
+            assert_eq!(p.e.gpus, p.d.gpus);
+        }
+        if prim.contains(Stage::Decode) {
+            assert!(p.c_on_subset);
+            assert!(p.c.gpus.iter().all(|g| p.d.gpus.contains(g)));
+            assert!(p.c.gpus.len() <= p.d.gpus.len());
+        }
+    }
+
+    #[test]
+    fn respects_idle_capacity() {
+        let f = fixture(PipelineSpec::flux());
+        let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
+        let mut view = view_for(&f, 0.0);
+        // Only 2 idle GPUs in the whole cluster.
+        for g in 0..view.idle.len() {
+            view.idle[g] = g < 2 && view.placement.pi[g].is_primary();
+        }
+        let reqs: Vec<Request> = (0..10).map(|i| req(&f, i, "1024p", 0.0)).collect();
+        let (plans, _) = d.dispatch(&reqs, &view);
+        let used: usize = plans.iter().map(|p| p.d.gpus.len()).sum();
+        assert!(used <= 2, "used {used} GPUs with only 2 idle");
+    }
+
+    #[test]
+    fn no_gpu_double_booked_within_tick() {
+        let f = fixture(PipelineSpec::flux());
+        let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
+        let view = view_for(&f, 0.0);
+        let reqs: Vec<Request> = (0..64).map(|i| req(&f, i, "1024p", 0.0)).collect();
+        let (plans, _) = d.dispatch(&reqs, &view);
+        let mut seen = std::collections::HashSet::new();
+        for p in &plans {
+            for g in &p.d.gpus {
+                assert!(seen.insert(*g), "gpu {g} double-booked");
+            }
+        }
+        assert!(plans.len() > 4);
+    }
+
+    #[test]
+    fn late_requests_age_upward() {
+        let f = fixture(PipelineSpec::flux());
+        let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
+        let r = req(&f, 1, "1024p", 0.0);
+        let w_fresh = d.reward(&r, 0.0, 1000.0);
+        assert_eq!(w_fresh, f.consts.c_on);
+        // Far past deadline: aging multiplies C_late.
+        let far = r.deadline_ms * 8.0;
+        let w_late = d.reward(&r, far, 1000.0);
+        assert!(w_late > f.consts.c_late, "aged reward {w_late}");
+    }
+
+    #[test]
+    fn comm_penalty_ordering_matches_table3() {
+        let f = fixture(PipelineSpec::flux());
+        let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
+        let idx = 3; // some mid shape
+        let q: Vec<f64> = (0..4).map(|i| d.comm_penalty(idx, i)).collect();
+        assert!(q[0] <= q[1] && q[1] <= q[2] && q[2] <= q[3]);
+    }
+
+    #[test]
+    fn memory_forced_degree_allowed_even_if_inefficient() {
+        // HunyuanVideo heavy shapes do not fit at k=1 on a DC primary; the
+        // filter must admit the smallest fitting degree regardless of
+        // efficiency.
+        let f = fixture(PipelineSpec::hunyuan());
+        let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
+        let view = view_for(&f, 0.0);
+        let heavy = f.pipeline.shapes.iter().position(|s| s.name == "720p8s").unwrap();
+        let r = Request {
+            id: 1,
+            shape_idx: heavy,
+            arrival_ms: 0.0,
+            deadline_ms: f.profile.slo_ms[heavy],
+            batch: 1,
+        };
+        let (plans, _) = d.dispatch(&[r], &view);
+        assert_eq!(plans.len(), 1, "heavy request must still dispatch");
+    }
+
+    #[test]
+    fn prop_dispatch_invariants() {
+        let f = fixture(PipelineSpec::flux());
+        let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
+        run_prop(0xD15, 25, |rng: &mut Rng, _| {
+            let mut view = view_for(&f, 0.0);
+            // Random idleness.
+            for g in 0..view.idle.len() {
+                view.idle[g] = rng.f64() < 0.5;
+            }
+            let n = 1 + rng.below(40);
+            let reqs: Vec<Request> = (0..n)
+                .map(|i| {
+                    let shape_idx = rng.below(f.pipeline.shapes.len());
+                    Request {
+                        id: i as u64,
+                        shape_idx,
+                        arrival_ms: 0.0,
+                        deadline_ms: f.profile.slo_ms[shape_idx],
+                        batch: 1,
+                    }
+                })
+                .collect();
+            let (plans, stats) = d.dispatch(&reqs, &view);
+            // Invariants: intra-node sets, idle GPUs only, no double
+            // booking, degree == set size, dispatched <= pending.
+            let mut seen = std::collections::HashSet::new();
+            for p in &plans {
+                assert_eq!(p.d.gpus.len(), p.d.degree);
+                assert!(f.topo.is_intra_node(&p.d.gpus));
+                for g in &p.d.gpus {
+                    assert!(view.idle[*g], "dispatched to busy gpu");
+                    assert!(seen.insert(*g));
+                }
+                // The chosen primary type actually hosts Diffuse.
+                for g in &p.d.gpus {
+                    assert!(view.placement.pi[*g].contains(Stage::Diffuse));
+                }
+            }
+            assert!(stats.dispatched <= n);
+        });
+    }
+}

@@ -1,0 +1,718 @@
+//! The Runtime Engine (§5): executes dispatch plans in the atomic
+//! three-step procedure (*Dynamic Reinstance* → *Stage Preparation* →
+//! *Merging Execute*) over per-GPU FIFO queues, and applies placement
+//! switches via *Adjust-on-Dispatch* (§5.3) — metadata first, replica
+//! movement deferred to the dispatch that needs it.
+//!
+//! The engine is execution-backend agnostic: stage service times come from
+//! a [`StageExec`] (analytical model in simulation, measured PJRT runs in
+//! real mode), while all coordination state — queues, residency, VRAM,
+//! communication groups, handoff buffers — lives here.
+
+use std::collections::VecDeque;
+
+use crate::cluster::comm::CommGroups;
+use crate::cluster::handoff::{HandoffBuffers, StagePath};
+use crate::cluster::topology::{GpuId, Topology};
+use crate::cluster::vram::VramLedger;
+use crate::config::Stage;
+use crate::dispatch::RequestPlans;
+use crate::placement::{Pi, PlacementPlan};
+use crate::profiler::Profile;
+use crate::request::RequestId;
+
+/// Provider of stage service times (ms). Sim: perf model (+jitter);
+/// real mode: wall-clock PJRT execution.
+pub trait StageExec {
+    fn exec_ms(&mut self, shape_idx: usize, stage: Stage, degree: usize, batch: usize) -> f64;
+}
+
+pub type PlanId = usize;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanState {
+    Waiting,
+    Running,
+    Done,
+    Cancelled,
+}
+
+/// An enqueued stage execution.
+#[derive(Clone, Debug)]
+pub struct ExecPlan {
+    pub id: PlanId,
+    pub req: RequestId,
+    pub shape_idx: usize,
+    pub stage: Stage,
+    pub gpus: Vec<GpuId>,
+    pub degree: usize,
+    pub batch: usize,
+    pub vr_type: usize,
+    /// Predecessor stage plan that must complete first.
+    pub pred: Option<PlanId>,
+    /// Extra stages merged into this execution (Merging Execute §5.2).
+    pub merged_stages: Vec<Stage>,
+    pub state: PlanState,
+    /// When the proactively-pushed input becomes readable (§5.2).
+    pub input_ready_ms: f64,
+    /// Activation GB/GPU reserved while running.
+    pub act_gb: f64,
+    pub started_ms: f64,
+    pub finished_ms: f64,
+    /// Breakdown: prepare (reinstance + replica load + input fetch) vs exec.
+    pub prepare_ms: f64,
+    pub exec_ms: f64,
+    /// Profile-based work estimate used for backlog accounting.
+    pub est_ms: f64,
+}
+
+/// A plan the engine just launched (the sim schedules its completion event;
+/// the live server hands it to a worker thread).
+#[derive(Clone, Debug)]
+pub struct StartedPlan {
+    pub plan: PlanId,
+    pub finish_ms: f64,
+}
+
+/// Record of a request aborted inside the engine (failed reservation).
+#[derive(Clone, Debug)]
+pub struct OomAbort {
+    pub req: RequestId,
+    pub at_ms: f64,
+}
+
+/// The engine.
+pub struct Engine {
+    pub topo: Topology,
+    /// Placement *metadata* (updated immediately on switch).
+    pub placement: PlacementPlan,
+    /// What is actually resident (trails the metadata under
+    /// Adjust-on-Dispatch).
+    pub vram: VramLedger,
+    pub comm: CommGroups,
+    pub hb: HandoffBuffers,
+    pub plans: Vec<ExecPlan>,
+    queues: Vec<VecDeque<PlanId>>,
+    running: Vec<Option<PlanId>>,
+    /// Per-GPU earliest-free estimate for the Monitor's worker status.
+    pub free_at_ms: Vec<f64>,
+    /// Estimated outstanding (queued + running) work per GPU, ms — the
+    /// backlog signal behind the Monitor's earliest-to-finish reports.
+    pub committed_ms: Vec<f64>,
+    /// Stage weight footprints from the profile (E, D, C).
+    weights_gb: [f64; 3],
+    /// Replica loads performed by Adjust-on-Dispatch.
+    pub adjust_loads: u64,
+    /// Aborts from failed activation reservations.
+    pub ooms: Vec<OomAbort>,
+    /// Count of placement switches applied.
+    pub switches: u64,
+}
+
+fn sidx(s: Stage) -> usize {
+    match s {
+        Stage::Encode => 0,
+        Stage::Diffuse => 1,
+        Stage::Decode => 2,
+    }
+}
+
+impl Engine {
+    pub fn new(topo: Topology, placement: PlacementPlan, profile: &Profile) -> Self {
+        let g = topo.total_gpus();
+        let mut vram = VramLedger::new(g, topo.spec.vram_gb);
+        let weights_gb = profile.weights_gb;
+        // Materialise the initial placement fully (bootstrap, §4.1 step 2).
+        for gpu in 0..g {
+            for &s in placement.pi[gpu].stages() {
+                vram.load_stage(gpu, s, weights_gb[sidx(s)]);
+            }
+        }
+        let comm = CommGroups::with_hot_set(&topo);
+        let hb = HandoffBuffers::new(g, topo.spec.cap_hb_gb);
+        Engine {
+            topo,
+            placement,
+            vram,
+            comm,
+            hb,
+            plans: Vec::new(),
+            queues: vec![VecDeque::new(); g],
+            running: vec![None; g],
+            free_at_ms: vec![0.0; g],
+            committed_ms: vec![0.0; g],
+            weights_gb,
+            adjust_loads: 0,
+            ooms: Vec::new(),
+            switches: 0,
+        }
+    }
+
+    pub fn weights_gb(&self, stage: Stage) -> f64 {
+        self.weights_gb[sidx(stage)]
+    }
+
+    /// §5.3 Adjust-on-Dispatch: update placement *metadata* only. Replica
+    /// loads happen lazily in Stage Preparation; FIFO queues guarantee
+    /// in-flight plans under the old placement finish as planned.
+    pub fn apply_switch(&mut self, new_placement: PlacementPlan) {
+        assert_eq!(new_placement.pi.len(), self.placement.pi.len());
+        self.placement = new_placement;
+        self.switches += 1;
+    }
+
+    /// True iff the GPU has nothing running and nothing queued.
+    pub fn gpu_idle(&self, g: GpuId) -> bool {
+        self.running[g].is_none() && self.queues[g].is_empty()
+    }
+
+    pub fn idle_mask(&self) -> Vec<bool> {
+        (0..self.topo.total_gpus()).map(|g| self.gpu_idle(g)).collect()
+    }
+
+    /// Enqueue a request's stage plans (E → D → C chain with predecessor
+    /// links), applying Merging Execute: consecutive stages of the same
+    /// request on an identical GPU set collapse into one atomic run.
+    pub fn enqueue(&mut self, rp: &RequestPlans, profile: &Profile) -> Vec<PlanId> {
+        let mut ids = Vec::new();
+        let mut chain: Vec<(Stage, &crate::dispatch::StagePlan)> = Vec::new();
+        if !rp.e_merged {
+            chain.push((Stage::Encode, &rp.e));
+        }
+        chain.push((Stage::Diffuse, &rp.d));
+        // C merges into D only when it uses the *identical* set.
+        let c_identical = rp.c.gpus == rp.d.gpus;
+        if !c_identical {
+            chain.push((Stage::Decode, &rp.c));
+        }
+
+        let mut pred: Option<PlanId> = None;
+        for (stage, sp) in chain {
+            let mut merged = Vec::new();
+            if stage == Stage::Diffuse {
+                if rp.e_merged {
+                    merged.push(Stage::Encode);
+                }
+                if c_identical {
+                    merged.push(Stage::Decode);
+                }
+            }
+            // Peak reservation covers the merged stages too (the run's
+            // memory high-water mark is the max across them).
+            let mut act = profile.act_gb(rp.shape_idx, stage, sp.degree.max(1));
+            for &m in &merged {
+                let d = if m == Stage::Decode {
+                    profile.optimal_degree(rp.shape_idx, Stage::Decode).min(sp.degree.max(1))
+                } else {
+                    sp.degree.max(1)
+                };
+                act = act.max(profile.act_gb(rp.shape_idx, m, d));
+            }
+            let mut est_ms = profile.latency_ms(rp.shape_idx, stage, sp.degree.max(1).min(8));
+            for &m in &merged {
+                let d = if m == Stage::Decode {
+                    profile.optimal_degree(rp.shape_idx, Stage::Decode).min(sp.degree.max(1))
+                } else {
+                    sp.degree.max(1)
+                };
+                est_ms += profile.latency_ms(rp.shape_idx, m, d.min(8));
+            }
+            let id = self.plans.len();
+            self.plans.push(ExecPlan {
+                id,
+                req: rp.req,
+                shape_idx: rp.shape_idx,
+                stage,
+                gpus: sp.gpus.clone(),
+                degree: sp.degree,
+                batch: 1,
+                vr_type: rp.vr_type,
+                pred,
+                merged_stages: merged,
+                state: PlanState::Waiting,
+                input_ready_ms: 0.0,
+                act_gb: act,
+                started_ms: 0.0,
+                finished_ms: 0.0,
+                prepare_ms: 0.0,
+                exec_ms: 0.0,
+                est_ms,
+            });
+            for &g in &self.plans[id].gpus {
+                self.queues[g].push_back(id);
+                self.committed_ms[g] += est_ms;
+            }
+            ids.push(id);
+            pred = Some(id);
+        }
+        ids
+    }
+
+    /// Try to start every startable plan at `now`; returns the started set
+    /// with their finish times.
+    pub fn advance<E: StageExec>(
+        &mut self,
+        now_ms: f64,
+        exec: &mut E,
+        profile: &Profile,
+    ) -> Vec<StartedPlan> {
+        let mut started = Vec::new();
+        loop {
+            let mut any = false;
+            for g in 0..self.queues.len() {
+                let Some(&head) = self.queues[g].front() else { continue };
+                if self.plans[head].state != PlanState::Waiting {
+                    continue;
+                }
+                if let Some(sp) = self.try_start_plan(head, now_ms, exec, profile) {
+                    started.push(sp);
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        started
+    }
+
+    fn try_start_plan<E: StageExec>(
+        &mut self,
+        id: PlanId,
+        now_ms: f64,
+        exec: &mut E,
+        profile: &Profile,
+    ) -> Option<StartedPlan> {
+        // Startable: head of all its queues, predecessor done, input pushed.
+        {
+            let p = &self.plans[id];
+            if p.state != PlanState::Waiting {
+                return None;
+            }
+            if !p
+                .gpus
+                .iter()
+                .all(|&g| self.queues[g].front() == Some(&id) && self.running[g].is_none())
+            {
+                return None;
+            }
+            if let Some(pred) = p.pred {
+                if self.plans[pred].state != PlanState::Done {
+                    return None;
+                }
+            }
+            if p.input_ready_ms > now_ms {
+                return None;
+            }
+        }
+
+        // --- Step 1: Dynamic Reinstance (hot-set comm groups, §5.2).
+        let gpus = self.plans[id].gpus.clone();
+        let mut prepare = self.comm.reinstance_ms(&gpus);
+
+        // --- Step 2: Stage Preparation.
+        // (i) resident replica — Adjust-on-Dispatch load if missing.
+        let stage = self.plans[id].stage;
+        let mut stages_needed = vec![stage];
+        stages_needed.extend(self.plans[id].merged_stages.iter().copied());
+        for &g in &gpus {
+            for &s in &stages_needed {
+                if !self.vram.gpu(g).hosts(s) {
+                    prepare += self.load_replica(g, s);
+                }
+            }
+        }
+        // (ii) stage inputs were proactively pushed at predecessor
+        // completion (the input_ready_ms gate above).
+
+        // Activation reservation (OOM safety). Under Adjust-on-Dispatch,
+        // replicas the metadata no longer assigns to a GPU may still be
+        // resident; evict those first when the reservation would not fit
+        // (lazy eviction — the flip side of lazy loading, §5.3).
+        let act = self.plans[id].act_gb;
+        for &g in &gpus {
+            if self.vram.free_gb(g) >= act {
+                continue;
+            }
+            let assigned = self.placement.pi[g].stages();
+            let resident: Vec<Stage> =
+                self.vram.gpu(g).resident.iter().map(|&(s, _)| s).collect();
+            // Pass 1: replicas the metadata no longer assigns here.
+            for &s in &resident {
+                if self.vram.free_gb(g) >= act {
+                    break;
+                }
+                if !assigned.contains(&s) && !stages_needed.contains(&s) {
+                    self.vram.evict_stage(g, s);
+                }
+            }
+            // Pass 2: a plan enqueued before a placement switch may need
+            // more room than the *new* assignment leaves (e.g. a Decode
+            // plan bound to a GPU that was ⟨C⟩ and is now ⟨DC⟩). Evict
+            // assigned-but-unneeded replicas too; Adjust-on-Dispatch will
+            // lazily reload them for whichever plan next needs them.
+            for &s in &resident {
+                if self.vram.free_gb(g) >= act {
+                    break;
+                }
+                if !stages_needed.contains(&s) {
+                    self.vram.evict_stage(g, s);
+                }
+            }
+        }
+        if !self.vram.reserve_act(&gpus, act) {
+            if std::env::var("TRIDENT_OOM_DEBUG").is_ok() {
+                for &g in &gpus {
+                    eprintln!("OOMDBG req={} stage={:?} shape={} act={:.1} gpu={} pi={:?} free={:.1} weights={:.1} hb={:.1} act_res={:.1}",
+                        self.plans[id].req, stage, self.plans[id].shape_idx, act, g,
+                        self.placement.pi[g], self.vram.free_gb(g), self.vram.gpu(g).weights_gb(),
+                        self.vram.gpu(g).hb_gb, self.vram.gpu(g).act_gb);
+                }
+            }
+            self.cancel_request(self.plans[id].req, now_ms);
+            return None;
+        }
+
+        // --- Step 3: Merging Execute.
+        let shape_idx = self.plans[id].shape_idx;
+        let degree = self.plans[id].degree;
+        let batch = self.plans[id].batch;
+        let mut run_ms = exec.exec_ms(shape_idx, stage, degree, batch);
+        for &ms in &self.plans[id].merged_stages.clone() {
+            let d = if ms == Stage::Decode {
+                profile.optimal_degree(shape_idx, Stage::Decode).min(degree)
+            } else {
+                degree
+            };
+            run_ms += exec.exec_ms(shape_idx, ms, d, batch);
+        }
+
+        let p = &mut self.plans[id];
+        p.state = PlanState::Running;
+        p.started_ms = now_ms;
+        p.prepare_ms = prepare;
+        p.exec_ms = run_ms;
+        p.finished_ms = now_ms + prepare + run_ms;
+        let fin = p.finished_ms;
+        for &g in &gpus {
+            self.running[g] = Some(id);
+            self.free_at_ms[g] = fin;
+        }
+        Some(StartedPlan { plan: id, finish_ms: fin })
+    }
+
+    /// Adjust-on-Dispatch replica load: intra-node GPUDirect P2P from a peer
+    /// hosting the stage, else the node's pinned shared CPU replica (§5.3).
+    fn load_replica(&mut self, g: GpuId, stage: Stage) -> f64 {
+        let gb = self.weights_gb(stage);
+        let node = self.topo.node_of(g);
+        let gpn = self.topo.spec.gpus_per_node;
+        let bw = if self.vram.peer_with_stage(node, gpn, stage).is_some() {
+            self.topo.spec.intra_gbps
+        } else {
+            self.topo.spec.host_gbps
+        };
+        // Evict stages the metadata no longer assigns to this GPU until the
+        // replica fits (blockwise streaming keeps this OOM-safe; we model
+        // the end state).
+        let assigned = self.placement.pi[g].stages();
+        let resident: Vec<Stage> = self.vram.gpu(g).resident.iter().map(|&(s, _)| s).collect();
+        for s in resident {
+            if self.vram.free_gb(g) >= gb {
+                break;
+            }
+            if !assigned.contains(&s) && s != stage {
+                self.vram.evict_stage(g, s);
+            }
+        }
+        self.vram.load_stage(g, stage, gb);
+        self.adjust_loads += 1;
+        self.topo.spec.link_latency_ms + gb / bw * 1e3
+    }
+
+    /// Mark a plan complete at `now`; performs the proactive push of the
+    /// output toward the successor (overlapping its compute) and frees the
+    /// GPU set.
+    pub fn complete(&mut self, id: PlanId, now_ms: f64, q_out_gb: f64, succ: Option<PlanId>) {
+        let gpus = self.plans[id].gpus.clone();
+        let act = self.plans[id].act_gb;
+        let est = self.plans[id].est_ms;
+        self.plans[id].state = PlanState::Done;
+        self.plans[id].finished_ms = now_ms;
+        self.vram.release_act(&gpus, act);
+        for &g in &gpus {
+            self.committed_ms[g] = (self.committed_ms[g] - est).max(0.0);
+        }
+        for &g in &gpus {
+            if self.running[g] == Some(id) {
+                self.running[g] = None;
+            }
+            if self.queues[g].front() == Some(&id) {
+                self.queues[g].pop_front();
+            } else {
+                self.queues[g].retain(|&p| p != id);
+            }
+        }
+
+        // Proactive push (§5.2): stage output into the successor's HB.
+        if let Some(sid) = succ {
+            let succ_gpus = self.plans[sid].gpus.clone();
+            if succ_gpus == gpus || q_out_gb <= 0.0 {
+                self.plans[sid].input_ready_ms = now_ms;
+            } else {
+                let dst = succ_gpus[0];
+                let src = gpus[0];
+                let inter = !self.topo.same_node(src, dst);
+                let bw = if inter {
+                    self.topo.spec.inter_gbps
+                } else {
+                    self.topo.spec.intra_gbps
+                };
+                let path = self.hb.gpu(dst).push(q_out_gb);
+                self.vram
+                    .add_hb(dst, if path == StagePath::Device { q_out_gb } else { 0.0 });
+                let mut t = self.topo.spec.link_latency_ms + q_out_gb / bw * 1e3;
+                if path == StagePath::Host {
+                    // Spill: destination reads from pinned host at launch.
+                    t += q_out_gb / self.topo.spec.host_gbps * 1e3;
+                }
+                self.plans[sid].input_ready_ms = now_ms + t;
+            }
+        }
+    }
+
+    /// Consume the staged input for a plan that just ran (frees HB space).
+    pub fn consume_input(&mut self, id: PlanId, q_in_gb: f64) {
+        let dst = self.plans[id].gpus[0];
+        self.hb.gpu(dst).consume(q_in_gb);
+        self.vram.sub_hb(dst, q_in_gb);
+    }
+
+    /// Abort every outstanding plan of a request (failed reservation).
+    pub fn cancel_request(&mut self, req: RequestId, now_ms: f64) {
+        for id in 0..self.plans.len() {
+            if self.plans[id].req == req && self.plans[id].state == PlanState::Waiting {
+                self.plans[id].state = PlanState::Cancelled;
+                let gpus = self.plans[id].gpus.clone();
+                let est = self.plans[id].est_ms;
+                for g in gpus {
+                    self.queues[g].retain(|&p| p != id);
+                    self.committed_ms[g] = (self.committed_ms[g] - est).max(0.0);
+                }
+            }
+        }
+        self.ooms.push(OomAbort { req, at_ms: now_ms });
+    }
+
+    /// Serving placement type of a GPU under current metadata.
+    pub fn pi_of(&self, g: GpuId) -> Pi {
+        self.placement.pi[g]
+    }
+
+    /// Backlog-aware earliest-free estimates: now + estimated outstanding
+    /// work (queued + running) per GPU. This is what the Monitor reports to
+    /// the Dispatcher as "earliest-to-finish" (§5.1).
+    pub fn free_at_estimate(&self, now_ms: f64) -> Vec<f64> {
+        (0..self.committed_ms.len()).map(|g| now_ms + self.committed_ms[g]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, PipelineSpec, SolverConstants};
+    use crate::dispatch::StagePlan;
+    use crate::perfmodel::PerfModel;
+    use crate::profiler::Profile;
+
+    struct FixedExec(f64);
+    impl StageExec for FixedExec {
+        fn exec_ms(&mut self, _: usize, _: Stage, _: usize, _: usize) -> f64 {
+            self.0
+        }
+    }
+
+    fn fixture() -> (PipelineSpec, Profile, Topology) {
+        let p = PipelineSpec::sd3();
+        let cluster = ClusterSpec::tiny(1, 8);
+        let profile = Profile::build(
+            &PerfModel::new(cluster.clone()),
+            &p,
+            &SolverConstants::default(),
+        );
+        (p, profile, Topology::new(cluster))
+    }
+
+    fn rp(req: RequestId, gpus: Vec<GpuId>) -> RequestPlans {
+        let k = gpus.len();
+        RequestPlans {
+            req,
+            shape_idx: 0,
+            vr_type: 0,
+            e: StagePlan { req, stage: Stage::Encode, gpus: gpus.clone(), degree: k },
+            d: StagePlan { req, stage: Stage::Diffuse, gpus: gpus.clone(), degree: k },
+            c: StagePlan { req, stage: Stage::Decode, gpus, degree: k },
+            e_merged: true,
+            c_on_subset: true,
+        }
+    }
+
+    #[test]
+    fn merging_execute_collapses_edc_run() {
+        let (_p, profile, topo) = fixture();
+        let placement = PlacementPlan::uniform(8, Pi::Edc);
+        let mut eng = Engine::new(topo, placement, &profile);
+        let ids = eng.enqueue(&rp(1, vec![0]), &profile);
+        assert_eq!(ids.len(), 1, "E and C must merge into the D plan");
+        assert_eq!(eng.plans[ids[0]].merged_stages, vec![Stage::Encode, Stage::Decode]);
+
+        let started = eng.advance(0.0, &mut FixedExec(100.0), &profile);
+        assert_eq!(started.len(), 1);
+        // 3 stages merged -> 300ms exec + prepare.
+        let plan = &eng.plans[started[0].plan];
+        assert!((plan.exec_ms - 300.0).abs() < 1e-9);
+        assert!(plan.prepare_ms > 0.0);
+    }
+
+    #[test]
+    fn fifo_order_is_respected_per_gpu() {
+        let (_p, profile, topo) = fixture();
+        let mut eng = Engine::new(topo, PlacementPlan::uniform(8, Pi::Edc), &profile);
+        eng.enqueue(&rp(1, vec![0]), &profile);
+        eng.enqueue(&rp(2, vec![0]), &profile);
+        let started = eng.advance(0.0, &mut FixedExec(50.0), &profile);
+        assert_eq!(started.len(), 1, "second plan must wait for FIFO head");
+        assert_eq!(eng.plans[started[0].plan].req, 1);
+        // Complete the first; the second becomes startable.
+        eng.complete(started[0].plan, 150.0, 0.0, None);
+        let started2 = eng.advance(150.0, &mut FixedExec(50.0), &profile);
+        assert_eq!(started2.len(), 1);
+        assert_eq!(eng.plans[started2[0].plan].req, 2);
+    }
+
+    #[test]
+    fn predecessor_gates_successor() {
+        let (_p, profile, topo) = fixture();
+        let mut eng = Engine::new(topo, PlacementPlan::uniform(8, Pi::Dc), &profile);
+        let plans = RequestPlans {
+            req: 7,
+            shape_idx: 0,
+            vr_type: 1,
+            e: StagePlan { req: 7, stage: Stage::Encode, gpus: vec![1], degree: 1 },
+            d: StagePlan { req: 7, stage: Stage::Diffuse, gpus: vec![2, 3], degree: 2 },
+            c: StagePlan { req: 7, stage: Stage::Decode, gpus: vec![2], degree: 1 },
+            e_merged: false,
+            c_on_subset: true,
+        };
+        let ids = eng.enqueue(&plans, &profile);
+        assert_eq!(ids.len(), 3);
+        let started = eng.advance(0.0, &mut FixedExec(10.0), &profile);
+        // Only E may start; D waits on pred, C waits on D.
+        assert_eq!(started.len(), 1);
+        assert_eq!(eng.plans[started[0].plan].stage, Stage::Encode);
+        let e_fin = started[0].finish_ms;
+        eng.complete(started[0].plan, e_fin, 0.001, Some(ids[1]));
+        let started = eng.advance(e_fin + 1.0, &mut FixedExec(10.0), &profile);
+        assert_eq!(started.len(), 1);
+        assert_eq!(eng.plans[started[0].plan].stage, Stage::Diffuse);
+    }
+
+    #[test]
+    fn adjust_on_dispatch_loads_missing_replica() {
+        let (_p, profile, topo) = fixture();
+        // Residency starts as ⟨E⟩-only, then the metadata switches to EDC.
+        let mut eng = Engine::new(topo, PlacementPlan::uniform(8, Pi::E), &profile);
+        eng.apply_switch(PlacementPlan::uniform(8, Pi::Edc));
+        assert_eq!(eng.switches, 1);
+        eng.enqueue(&rp(3, vec![0]), &profile);
+        let started = eng.advance(0.0, &mut FixedExec(10.0), &profile);
+        assert_eq!(started.len(), 1);
+        // D and C replicas were missing; loads must have happened.
+        assert!(eng.adjust_loads >= 2, "loads: {}", eng.adjust_loads);
+        assert!(eng.vram.gpu(0).hosts(Stage::Diffuse));
+    }
+
+    #[test]
+    fn oom_reservation_cancels_request() {
+        let p = PipelineSpec::flux();
+        let cluster = ClusterSpec::tiny(1, 8);
+        let profile =
+            Profile::build(&PerfModel::new(cluster.clone()), &p, &SolverConstants::default());
+        let topo = Topology::new(cluster);
+        let mut eng = Engine::new(topo, PlacementPlan::uniform(8, Pi::Edc), &profile);
+        // Heaviest Flux shape at degree 1 on a co-located GPU: must OOM.
+        let heavy = p.shapes.iter().position(|s| s.name == "4096p").unwrap();
+        let mut plans = rp(9, vec![0]);
+        plans.shape_idx = heavy;
+        plans.e.req = 9;
+        eng.enqueue(&plans, &profile);
+        let started = eng.advance(0.0, &mut FixedExec(10.0), &profile);
+        assert!(started.is_empty());
+        assert_eq!(eng.ooms.len(), 1);
+        assert_eq!(eng.ooms[0].req, 9);
+    }
+
+    #[test]
+    fn proactive_push_sets_input_ready_with_transfer_delay() {
+        let (_p, profile, topo) = fixture();
+        let mut eng = Engine::new(topo, PlacementPlan::uniform(8, Pi::Dc), &profile);
+        let plans = RequestPlans {
+            req: 5,
+            shape_idx: 0,
+            vr_type: 1,
+            e: StagePlan { req: 5, stage: Stage::Encode, gpus: vec![0], degree: 1 },
+            d: StagePlan { req: 5, stage: Stage::Diffuse, gpus: vec![2, 3], degree: 2 },
+            c: StagePlan { req: 5, stage: Stage::Decode, gpus: vec![2], degree: 1 },
+            e_merged: false,
+            c_on_subset: true,
+        };
+        let ids = eng.enqueue(&plans, &profile);
+        let started = eng.advance(0.0, &mut FixedExec(10.0), &profile);
+        let e_fin = started[0].finish_ms;
+        eng.complete(started[0].plan, e_fin, 0.5, Some(ids[1]));
+        // 0.5 GB over 25 GB/s intra ≈ 20ms + latency.
+        let ready = eng.plans[ids[1]].input_ready_ms;
+        assert!(ready > e_fin + 15.0 && ready < e_fin + 30.0, "ready {ready}");
+        // Not startable until the push lands.
+        assert!(eng.advance(e_fin, &mut FixedExec(10.0), &profile).is_empty());
+        assert_eq!(eng.advance(ready, &mut FixedExec(10.0), &profile).len(), 1);
+    }
+
+    #[test]
+    fn hb_overflow_takes_host_path() {
+        let (_p, profile, topo) = fixture();
+        let cap = topo.spec.cap_hb_gb;
+        let mut eng = Engine::new(topo, PlacementPlan::uniform(8, Pi::Dc), &profile);
+        let mk = |req: u64| RequestPlans {
+            req,
+            shape_idx: 0,
+            vr_type: 1,
+            e: StagePlan { req, stage: Stage::Encode, gpus: vec![0], degree: 1 },
+            d: StagePlan { req, stage: Stage::Diffuse, gpus: vec![2, 3], degree: 2 },
+            c: StagePlan { req, stage: Stage::Decode, gpus: vec![2], degree: 1 },
+            e_merged: false,
+            c_on_subset: true,
+        };
+        let ids_a = eng.enqueue(&mk(1), &profile);
+        let ids_b = eng.enqueue(&mk(2), &profile);
+        let started = eng.advance(0.0, &mut FixedExec(10.0), &profile);
+        let fin = started[0].finish_ms;
+        // Push more than Cap_hb in total: second push must spill (slower).
+        eng.complete(started[0].plan, fin, cap, Some(ids_a[1]));
+        let t_device = eng.plans[ids_a[1]].input_ready_ms - fin;
+        eng.complete(ids_b[0], fin, cap, Some(ids_b[1]));
+        let t_spill = eng.plans[ids_b[1]].input_ready_ms - fin;
+        assert!(t_spill > t_device, "spill {t_spill} !> device {t_device}");
+        assert_eq!(eng.hb.total_host_spills(), 1);
+    }
+
+    #[test]
+    fn idle_mask_tracks_queues() {
+        let (_p, profile, topo) = fixture();
+        let mut eng = Engine::new(topo, PlacementPlan::uniform(8, Pi::Edc), &profile);
+        assert!(eng.idle_mask().iter().all(|&b| b));
+        eng.enqueue(&rp(1, vec![4]), &profile);
+        let m = eng.idle_mask();
+        assert!(!m[4] && m[3]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Experiment harness shared by the CLI, the examples and every
+//! figure/table bench: builds pipelines, profiles, traces and policies by
+//! name and runs simulations with consistent settings.
+
+use crate::baselines::{self, BaseCtx};
+use crate::config::{ClusterSpec, PipelineSpec, SolverConstants};
+use crate::metrics::Metrics;
+use crate::perfmodel::PerfModel;
+use crate::profiler::Profile;
+use crate::sim::{run_sim, ServingPolicy, SimConfig, TridentPolicy};
+use crate::workload::{TraceGen, WorkloadKind};
+
+/// Everything needed to run experiments on one pipeline.
+pub struct Setup {
+    pub pipeline: PipelineSpec,
+    pub cluster: ClusterSpec,
+    pub consts: SolverConstants,
+    pub model: PerfModel,
+    pub profile: Profile,
+}
+
+impl Setup {
+    pub fn new(pipeline_name: &str, gpus: usize) -> Self {
+        let pipeline = PipelineSpec::by_name(pipeline_name)
+            .unwrap_or_else(|| panic!("unknown pipeline {pipeline_name}"));
+        assert_eq!(gpus % 8, 0, "gpus must be a multiple of 8");
+        let cluster = ClusterSpec::l20(gpus / 8);
+        let consts = SolverConstants::default();
+        let model = PerfModel::new(cluster.clone());
+        let profile = Profile::build(&model, &pipeline, &consts);
+        Setup { pipeline, cluster, consts, model, profile }
+    }
+
+    pub fn base_ctx(&self) -> BaseCtx {
+        BaseCtx::new(
+            self.pipeline.clone(),
+            self.profile.clone(),
+            self.consts.clone(),
+            self.cluster.clone(),
+        )
+    }
+
+    /// Build a policy by name: `trident`, ablations
+    /// (`trident-wo{switch,stageaware,scheduler}`), or `b1`..`b6`.
+    pub fn policy(&self, name: &str) -> Box<dyn ServingPolicy> {
+        let trident = || {
+            TridentPolicy::new(
+                self.pipeline.clone(),
+                self.profile.clone(),
+                self.consts.clone(),
+                self.cluster.clone(),
+            )
+        };
+        let g = self.cluster.total_gpus();
+        match name {
+            "trident" => Box::new(trident()),
+            "trident-woswitch" => {
+                let mut t = trident();
+                t.switch_enabled = false;
+                Box::new(t)
+            }
+            "trident-wostageaware" => {
+                let mut t = trident();
+                t.stage_aware = false;
+                Box::new(t)
+            }
+            "trident-woscheduler" => {
+                let mut t = trident();
+                t.use_ilp = false;
+                Box::new(t)
+            }
+            "b1" => Box::new(baselines::B1Static::new(self.base_ctx())),
+            "b2" => Box::new(baselines::B2Bucketed::new(self.base_ctx(), g)),
+            "b3" => Box::new(baselines::BDynamicPipeline::b3(self.base_ctx())),
+            "b4" => Box::new(baselines::BDynamicPipeline::b4(self.base_ctx())),
+            "b5" => Box::new(baselines::BStageLevel::new(self.base_ctx(), g, false)),
+            "b6" => Box::new(baselines::BStageLevel::new(self.base_ctx(), g, true)),
+            _ => panic!("unknown policy {name}"),
+        }
+    }
+
+    /// Generate a trace and run one policy over it.
+    pub fn run(
+        &self,
+        policy_name: &str,
+        workload: WorkloadKind,
+        duration_ms: f64,
+        seed: u64,
+    ) -> Metrics {
+        self.run_scaled(policy_name, workload, duration_ms, seed, 1.0)
+    }
+
+    /// Like [`Setup::run`] with an arrival-rate multiplier.
+    pub fn run_scaled(
+        &self,
+        policy_name: &str,
+        workload: WorkloadKind,
+        duration_ms: f64,
+        seed: u64,
+        rate_scale: f64,
+    ) -> Metrics {
+        let tg = TraceGen { pipeline: &self.pipeline, profile: &self.profile, rate_scale };
+        let trace = tg.generate(workload, duration_ms, seed);
+        let mut policy = self.policy(policy_name);
+        let cfg = SimConfig { seed, ..Default::default() };
+        run_sim(
+            &self.pipeline,
+            &self.profile,
+            &self.consts,
+            &self.cluster,
+            policy.as_mut(),
+            &trace,
+            &cfg,
+        )
+    }
+}
+
+/// Canonical policy list for end-to-end comparisons (Fig 10).
+pub const ALL_POLICIES: [&str; 7] = ["b1", "b2", "b3", "b4", "b5", "b6", "trident"];
+
+/// Canonical pipelines evaluated in the paper.
+pub const ALL_PIPELINES: [&str; 4] = ["sd3", "flux", "cogvideo", "hunyuan"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn setup_builds_all_pipelines() {
+        for name in ALL_PIPELINES {
+            let s = Setup::new(name, 128);
+            assert_eq!(s.cluster.total_gpus(), 128);
+            assert!(s.profile.n_shapes() >= 5);
+        }
+    }
+
+    #[test]
+    fn all_policies_construct() {
+        let s = Setup::new("flux", 128);
+        for p in ALL_POLICIES {
+            let _ = s.policy(p);
+        }
+        for p in ["trident-woswitch", "trident-wostageaware", "trident-woscheduler"] {
+            let _ = s.policy(p);
+        }
+    }
+
+    #[test]
+    fn short_sim_completes_requests() {
+        let s = Setup::new("sd3", 128);
+        let m = s.run("trident", WorkloadKind::Medium, 60_000.0, 1);
+        let sum = m.summary();
+        assert!(sum.n > 100, "only {} requests", sum.n);
+        assert!(sum.slo_attainment > 0.5, "slo {}", sum.slo_attainment);
+    }
+}

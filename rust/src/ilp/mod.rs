@@ -1,0 +1,16 @@
+//! From-scratch 0/1 integer-programming substrate (the PuLP/CBC stand-in,
+//! DESIGN.md §1).
+//!
+//! Two solvers:
+//! * [`mckp`] — a branch-and-bound solver for the **multi-resource
+//!   multiple-choice knapsack** structure of the dispatch ILP (§6.2): per
+//!   request (group) pick at most one `(Primary type i, degree k)` item with
+//!   profit `W_r − Q_{r,i}` and weight `k` against capacity `B_i`.
+//! * [`zero_one`] — a small generic 0/1 branch-and-bound used for tests and
+//!   odd-shaped side problems; exact but exponential, intended for small
+//!   instances.
+
+pub mod mckp;
+pub mod zero_one;
+
+pub use mckp::{Item, Mckp, Solution};

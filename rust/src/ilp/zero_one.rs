@@ -1,0 +1,138 @@
+//! Small generic 0/1 ILP (maximisation, `A x ≤ b`) by branch-and-bound.
+//!
+//! Exact on small instances; used for cross-checking the specialised MCKP
+//! solver and for ad-hoc side problems. Bound: sum of remaining positive
+//! objective coefficients (admissible).
+
+/// maximise `c · x` s.t. for every row `r`: `Σ_j a[r][j] x_j ≤ b[r]`, x ∈ {0,1}^n.
+#[derive(Clone, Debug)]
+pub struct ZeroOne {
+    pub c: Vec<f64>,
+    pub a: Vec<Vec<f64>>,
+    pub b: Vec<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ZeroOneSolution {
+    pub x: Vec<bool>,
+    pub objective: f64,
+}
+
+impl ZeroOne {
+    pub fn solve(&self) -> ZeroOneSolution {
+        let n = self.c.len();
+        // Visit high-coefficient variables first.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&i, &j| self.c[j].partial_cmp(&self.c[i]).unwrap());
+        let mut suffix_pos = vec![0.0; n + 1];
+        for p in (0..n).rev() {
+            suffix_pos[p] = suffix_pos[p + 1] + self.c[order[p]].max(0.0);
+        }
+        let mut slack = self.b.clone();
+        let mut cur = vec![false; n];
+        let mut best = vec![false; n];
+        let mut best_obj = f64::NEG_INFINITY;
+        self.dfs(0, 0.0, &order, &suffix_pos, &mut slack, &mut cur, &mut best, &mut best_obj);
+        // All-zero is always feasible if b >= 0.
+        if best_obj == f64::NEG_INFINITY {
+            best_obj = 0.0;
+        }
+        ZeroOneSolution { x: best, objective: best_obj }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dfs(
+        &self,
+        pos: usize,
+        obj: f64,
+        order: &[usize],
+        suffix_pos: &[f64],
+        slack: &mut Vec<f64>,
+        cur: &mut Vec<bool>,
+        best: &mut Vec<bool>,
+        best_obj: &mut f64,
+    ) {
+        if obj + suffix_pos[pos] <= *best_obj + 1e-12 {
+            return;
+        }
+        if pos == order.len() {
+            if obj > *best_obj {
+                *best_obj = obj;
+                best.clone_from(cur);
+            }
+            return;
+        }
+        let j = order[pos];
+        // Branch x_j = 1 if feasible.
+        if (0..self.b.len()).all(|r| slack[r] >= self.a[r][j] - 1e-12) {
+            for r in 0..self.b.len() {
+                slack[r] -= self.a[r][j];
+            }
+            cur[j] = true;
+            self.dfs(pos + 1, obj + self.c[j], order, suffix_pos, slack, cur, best, best_obj);
+            cur[j] = false;
+            for r in 0..self.b.len() {
+                slack[r] += self.a[r][j];
+            }
+        }
+        // Branch x_j = 0.
+        self.dfs(pos + 1, obj, order, suffix_pos, slack, cur, best, best_obj);
+        if obj > *best_obj {
+            *best_obj = obj;
+            best.clone_from(cur);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_knapsack() {
+        // max 6x0 + 10x1 + 12x2  s.t. 1x0 + 2x1 + 3x2 <= 5 -> {x1, x2} = 22.
+        let p = ZeroOne {
+            c: vec![6.0, 10.0, 12.0],
+            a: vec![vec![1.0, 2.0, 3.0]],
+            b: vec![5.0],
+        };
+        let s = p.solve();
+        assert_eq!(s.x, vec![false, true, true]);
+        assert!((s.objective - 22.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multiple_constraints() {
+        // x0 and x1 conflict on row 1.
+        let p = ZeroOne {
+            c: vec![5.0, 5.0, 1.0],
+            a: vec![vec![1.0, 0.0, 1.0], vec![1.0, 1.0, 0.0]],
+            b: vec![1.0, 1.0],
+        };
+        let s = p.solve();
+        assert!((s.objective - 6.0).abs() < 1e-9); // one of x0/x1, plus x2
+    }
+
+    #[test]
+    fn infeasible_positive_vars_yield_zero_vector() {
+        let p = ZeroOne {
+            c: vec![10.0],
+            a: vec![vec![5.0]],
+            b: vec![1.0],
+        };
+        let s = p.solve();
+        assert_eq!(s.x, vec![false]);
+        assert_eq!(s.objective, 0.0);
+    }
+
+    #[test]
+    fn negative_coefficients_left_unset() {
+        let p = ZeroOne {
+            c: vec![-4.0, 3.0],
+            a: vec![vec![1.0, 1.0]],
+            b: vec![2.0],
+        };
+        let s = p.solve();
+        assert_eq!(s.x, vec![false, true]);
+    }
+}

@@ -1,0 +1,42 @@
+//! # TridentServe — stage-level serving for diffusion pipelines
+//!
+//! A from-scratch reproduction of *TridentServe: A Stage-level Serving
+//! System for Diffusion Pipelines* (Hetu team @ PKU, 2025) as a three-layer
+//! Rust + JAX + Pallas system. See DESIGN.md for the full inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! * [`config`] — pipelines (Table 2), cluster, solver constants.
+//! * [`perfmodel`] / [`profiler`] — the offline profiler substrate.
+//! * [`cluster`] — topology, VRAM ledger, comm groups, handoff buffers.
+//! * [`ilp`] — 0/1 branch-and-bound solvers (PuLP stand-in).
+//! * [`placement`] — placement plans + the Dynamic Orchestrator (§6.1).
+//! * [`dispatch`] — dispatch plans + the Resource-Aware Dispatcher (§6.2).
+//! * [`monitor`] — sliding-window throughput + the §5.3 switch trigger.
+//! * [`engine`] — the Runtime Engine: three-step dispatch execution and
+//!   Adjust-on-Dispatch placement switching (§5).
+//! * [`sim`] — discrete-event simulation harness (the GPU-cluster stand-in).
+//! * [`workload`] — Steady/Dynamic/Proprietary trace generators (Table 5).
+//! * [`baselines`] — B1–B6 from §8.1.
+//! * [`metrics`] — SLO attainment, latency percentiles, Fig-10 reporting.
+//! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts.
+//! * [`server`] — live serving loop over real PJRT executions.
+
+pub mod baselines;
+pub mod batching;
+pub mod cluster;
+pub mod config;
+pub mod dispatch;
+pub mod engine;
+pub mod harness;
+pub mod ilp;
+pub mod metrics;
+pub mod monitor;
+pub mod perfmodel;
+pub mod placement;
+pub mod profiler;
+pub mod request;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,172 @@
+//! TridentServe CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   simulate   run a policy over a workload on the simulated cluster
+//!   serve      live-serve the mini pipeline via PJRT (real request path)
+//!   placement  show the orchestrator's placement plan for a workload
+//!   profile    dump the offline profile table for a pipeline
+//!
+//! Examples:
+//!   tridentserve simulate --pipeline flux --workload dynamic --policy trident
+//!   tridentserve serve --workers 4 --duration-s 20
+//!   tridentserve placement --pipeline hunyuan --workload heavy
+
+use std::collections::HashMap;
+
+use tridentserve::config::{ConfigFile, Stage};
+use tridentserve::harness::{Setup, ALL_POLICIES};
+use tridentserve::perfmodel::DEGREES;
+use tridentserve::placement::Orchestrator;
+use tridentserve::server::{serve, LiveConfig};
+use tridentserve::workload::{steady_weights, WorkloadKind};
+
+fn parse_args(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            m.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn workload_by_name(name: &str) -> WorkloadKind {
+    match name {
+        "light" => WorkloadKind::Light,
+        "medium" => WorkloadKind::Medium,
+        "heavy" => WorkloadKind::Heavy,
+        "dynamic" => WorkloadKind::Dynamic,
+        "proprietary" => WorkloadKind::Proprietary,
+        _ => panic!("unknown workload {name} (light|medium|heavy|dynamic|proprietary)"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let opts = parse_args(&args[1.min(args.len())..]);
+
+    let get = |k: &str, d: &str| opts.get(k).cloned().unwrap_or_else(|| d.to_string());
+
+    match cmd {
+        "simulate" => {
+            let pipeline = get("pipeline", "flux");
+            let workload = workload_by_name(&get("workload", "medium"));
+            let policy = get("policy", "trident");
+            let gpus: usize = get("gpus", "128").parse()?;
+            let minutes: f64 = get("duration-min", "10").parse()?;
+            let seed: u64 = get("seed", "0").parse()?;
+            let mut setup = Setup::new(&pipeline, gpus);
+            if let Some(path) = opts.get("config") {
+                let f = ConfigFile::load(std::path::Path::new(path))?;
+                setup.cluster = f.apply_cluster(&setup.cluster)?;
+                setup.consts = f.apply_solver(&setup.consts)?;
+                setup.model = tridentserve::perfmodel::PerfModel::new(setup.cluster.clone());
+                setup.profile = tridentserve::profiler::Profile::build(
+                    &setup.model,
+                    &setup.pipeline,
+                    &setup.consts,
+                );
+            }
+            if policy == "all" {
+                println!("pipeline={pipeline} workload={} gpus={gpus}", workload.label());
+                for p in ALL_POLICIES {
+                    let m = setup.run(p, workload, minutes * 60_000.0, seed);
+                    println!("  {:<22} {}", p, m.summary());
+                }
+            } else {
+                let m = setup.run(&policy, workload, minutes * 60_000.0, seed);
+                if let Some(path) = opts.get("json") {
+                    let label = format!("{pipeline}/{}/{policy}", workload.label());
+                    std::fs::write(path, m.to_json(&label).to_string())?;
+                    println!("wrote {path}");
+                }
+                println!("{:<22} {}", policy, m.summary());
+                let vr = m.vr_distribution();
+                println!(
+                    "  VR distribution V0..V3: {vr:?}  switches: {}",
+                    m.switch_events.len()
+                );
+            }
+        }
+        "serve" => {
+            let cfg = LiveConfig {
+                artifacts_dir: get("artifacts", "artifacts").into(),
+                workers: get("workers", "4").parse()?,
+                duration_ms: get("duration-s", "20").parse::<f64>()? * 1000.0,
+                rate_scale: get("rate-scale", "1").parse()?,
+                seed: get("seed", "0").parse()?,
+                workload: workload_by_name(&get("workload", "medium")),
+                ..Default::default()
+            };
+            let report = serve(&cfg)?;
+            println!("live serving report:");
+            println!(
+                "  served {} requests in {:.1}s -> {:.2} req/s",
+                report.served, report.wall_s, report.throughput_rps
+            );
+            println!("  {}", report.metrics.summary());
+        }
+        "placement" => {
+            let pipeline = get("pipeline", "flux");
+            let workload = workload_by_name(&get("workload", "medium"));
+            let gpus: usize = get("gpus", "128").parse()?;
+            let setup = Setup::new(&pipeline, gpus);
+            let orch = Orchestrator::new(
+                &setup.profile,
+                &setup.pipeline,
+                &setup.consts,
+                &setup.cluster,
+            );
+            let w = steady_weights(&setup.pipeline, workload);
+            let rates = orch.estimated_rates(&w);
+            let plan = orch.plan(&w, gpus, &rates);
+            println!("pipeline={pipeline} workload={} gpus={gpus}", workload.label());
+            for (pi, count) in plan.counts() {
+                println!("  {:<4} x {}", pi.label(), count);
+            }
+            println!("per-shape OptVR:");
+            for (i, shape) in setup.pipeline.shapes.iter().enumerate() {
+                println!("  {:<10} -> {:?}", shape.name, orch.opt_vr(i));
+            }
+        }
+        "profile" => {
+            let pipeline = get("pipeline", "flux");
+            let setup = Setup::new(&pipeline, 128);
+            println!(
+                "{:<10} {:>6} {:>10} {:>10} {:>10} {:>10} {:>6} {:>10}",
+                "shape", "stage", "k=1(s)", "k=2(s)", "k=4(s)", "k=8(s)", "k_opt", "slo(s)"
+            );
+            for (i, shape) in setup.pipeline.shapes.iter().enumerate() {
+                for stage in Stage::ALL {
+                    let lat: Vec<String> = DEGREES
+                        .iter()
+                        .map(|&k| format!("{:.2}", setup.profile.latency_ms(i, stage, k) / 1e3))
+                        .collect();
+                    println!(
+                        "{:<10} {:>6} {:>10} {:>10} {:>10} {:>10} {:>6} {:>10.1}",
+                        shape.name,
+                        stage.short(),
+                        lat[0],
+                        lat[1],
+                        lat[2],
+                        lat[3],
+                        setup.profile.optimal_degree(i, stage),
+                        setup.profile.slo_ms[i] / 1e3,
+                    );
+                }
+            }
+        }
+        _ => {
+            println!("tridentserve — stage-level serving for diffusion pipelines");
+            println!("usage: tridentserve <simulate|serve|placement|profile> [--key value ...]");
+            println!("see README.md for the full flag reference");
+        }
+    }
+    Ok(())
+}

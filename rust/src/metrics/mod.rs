@@ -1,0 +1,225 @@
+//! Metrics capture: SLO attainment, latency distribution, per-span
+//! throughput (Fig 11), VR-type distribution (Fig 12), OOM accounting, and
+//! dispatcher solve telemetry (Table 4).
+
+use std::collections::BTreeMap;
+
+use crate::dispatch::SolveStats;
+use crate::request::{Completion, Outcome};
+use crate::util::json::Json;
+use crate::util::stats::{mean, percentile};
+
+/// Aggregate recorder for one serving run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub completions: Vec<Completion>,
+    pub solve_stats: Vec<SolveStats>,
+    /// (time_ms, placement-switch counter snapshot).
+    pub switch_events: Vec<f64>,
+    /// Span length for throughput series, ms.
+    pub span_ms: f64,
+}
+
+/// Summary row matching the paper's Fig 10 reporting.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub oom: usize,
+    pub slo_attainment: f64,
+    pub mean_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub mean_solve_ms: f64,
+}
+
+impl Metrics {
+    pub fn new(span_ms: f64) -> Self {
+        Metrics { span_ms, ..Default::default() }
+    }
+
+    pub fn record(&mut self, c: Completion) {
+        self.completions.push(c);
+    }
+
+    pub fn record_solve(&mut self, s: SolveStats) {
+        self.solve_stats.push(s);
+    }
+
+    pub fn record_switch(&mut self, t_ms: f64) {
+        self.switch_events.push(t_ms);
+    }
+
+    /// SLO attainment: fraction of all requests (including OOM-rejected)
+    /// finishing within their deadline.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
+        }
+        let on_time = self.completions.iter().filter(|c| c.on_time()).count();
+        on_time as f64 / self.completions.len() as f64
+    }
+
+    fn served_latencies(&self) -> Vec<f64> {
+        self.completions
+            .iter()
+            .filter(|c| c.outcome == Outcome::Completed)
+            .map(|c| c.latency_ms())
+            .collect()
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        mean(&self.served_latencies())
+    }
+
+    pub fn p95_latency_ms(&self) -> f64 {
+        percentile(&self.served_latencies(), 95.0).unwrap_or(0.0)
+    }
+
+    pub fn oom_count(&self) -> usize {
+        self.completions.iter().filter(|c| c.outcome == Outcome::OomRejected).count()
+    }
+
+    /// Completions per second in consecutive spans (Fig 11 series).
+    pub fn throughput_series(&self, horizon_ms: f64) -> Vec<f64> {
+        let spans = (horizon_ms / self.span_ms).ceil() as usize;
+        let mut counts = vec![0.0; spans.max(1)];
+        for c in &self.completions {
+            if c.outcome != Outcome::Completed {
+                continue;
+            }
+            let idx = (c.finish_ms / self.span_ms) as usize;
+            if idx < counts.len() {
+                counts[idx] += 1.0;
+            }
+        }
+        counts.iter().map(|c| c / (self.span_ms / 1000.0)).collect()
+    }
+
+    /// Distribution of served VR types (Fig 12): counts for V0..V3.
+    pub fn vr_distribution(&self) -> [usize; 4] {
+        let mut d = [0; 4];
+        for c in &self.completions {
+            if let Some(t) = c.vr_type {
+                if t < 4 {
+                    d[t] += 1;
+                }
+            }
+        }
+        d
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary {
+            n: self.completions.len(),
+            oom: self.oom_count(),
+            slo_attainment: self.slo_attainment(),
+            mean_latency_ms: self.mean_latency_ms(),
+            p95_latency_ms: self.p95_latency_ms(),
+            mean_solve_ms: mean(&self.solve_stats.iter().map(|s| s.solve_ms).collect::<Vec<_>>()),
+        }
+    }
+}
+
+impl Metrics {
+    /// Serialise a run's headline results as JSON (for experiment dumps).
+    pub fn to_json(&self, label: &str) -> Json {
+        let s = self.summary();
+        let mut obj = BTreeMap::new();
+        obj.insert("label".into(), Json::Str(label.into()));
+        obj.insert("n".into(), Json::Num(s.n as f64));
+        obj.insert("oom".into(), Json::Num(s.oom as f64));
+        obj.insert("slo_attainment".into(), Json::Num(s.slo_attainment));
+        obj.insert("mean_latency_ms".into(), Json::Num(s.mean_latency_ms));
+        obj.insert("p95_latency_ms".into(), Json::Num(s.p95_latency_ms));
+        obj.insert("mean_solve_ms".into(), Json::Num(s.mean_solve_ms));
+        obj.insert("switches".into(), Json::Num(self.switch_events.len() as f64));
+        obj.insert(
+            "vr_distribution".into(),
+            Json::Arr(self.vr_distribution().iter().map(|&x| Json::Num(x as f64)).collect()),
+        );
+        Json::Obj(obj)
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={:<5} oom={:<4} slo={:.3} mean={:.1}s p95={:.1}s solve={:.2}ms",
+            self.n,
+            self.oom,
+            self.slo_attainment,
+            self.mean_latency_ms / 1000.0,
+            self.p95_latency_ms / 1000.0,
+            self.mean_solve_ms,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn comp(finish: f64, deadline: f64, outcome: Outcome, vr: usize) -> Completion {
+        Completion {
+            id: 0,
+            shape_idx: 0,
+            arrival_ms: 0.0,
+            deadline_ms: deadline,
+            finish_ms: finish,
+            outcome,
+            vr_type: Some(vr),
+            stage_ms: [0.0; 3],
+        }
+    }
+
+    #[test]
+    fn slo_attainment_counts_ooms_as_misses() {
+        let mut m = Metrics::new(1000.0);
+        m.record(comp(50.0, 100.0, Outcome::Completed, 0));
+        m.record(comp(150.0, 100.0, Outcome::Completed, 0));
+        m.record(comp(50.0, 100.0, Outcome::OomRejected, 0));
+        assert!((m.slo_attainment() - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(m.oom_count(), 1);
+    }
+
+    #[test]
+    fn latency_stats_exclude_ooms() {
+        let mut m = Metrics::new(1000.0);
+        m.record(comp(100.0, 1000.0, Outcome::Completed, 0));
+        m.record(comp(200.0, 1000.0, Outcome::Completed, 1));
+        m.record(comp(5.0, 1000.0, Outcome::OomRejected, 0));
+        assert!((m.mean_latency_ms() - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_series_buckets_by_span() {
+        let mut m = Metrics::new(1000.0);
+        for t in [100.0, 200.0, 1500.0] {
+            m.record(comp(t, 1e9, Outcome::Completed, 0));
+        }
+        let s = m.throughput_series(2000.0);
+        assert_eq!(s.len(), 2);
+        assert!((s[0] - 2.0).abs() < 1e-9);
+        assert!((s[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut m = Metrics::new(1000.0);
+        m.record(comp(50.0, 100.0, Outcome::Completed, 0));
+        let j = m.to_json("test-run");
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("label").unwrap().as_str(), Some("test-run"));
+        assert_eq!(parsed.get("n").unwrap().as_i64(), Some(1));
+        assert_eq!(parsed.get("slo_attainment").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn vr_distribution_counts() {
+        let mut m = Metrics::new(1000.0);
+        for vr in [0, 0, 0, 1, 2] {
+            m.record(comp(1.0, 1e9, Outcome::Completed, vr));
+        }
+        assert_eq!(m.vr_distribution(), [3, 1, 1, 0]);
+    }
+}

@@ -1,0 +1,146 @@
+//! The Monitor (§5.1): clock-driven collection of per-stage and
+//! per-placement-type throughput over a sliding window `T_win`, plus the
+//! §5.3 imbalance trigger that starts a placement switch.
+
+use crate::config::Stage;
+use crate::placement::{Pi, Rates};
+use crate::util::stats::SlidingWindow;
+
+/// Live throughput observer.
+#[derive(Clone, Debug)]
+pub struct Monitor {
+    window_ms: f64,
+    /// Completions per stage (E, D, C).
+    stage_windows: [SlidingWindow; 3],
+    /// Completions attributed to the placement type that served the stage.
+    pi_windows: std::collections::BTreeMap<Pi, SlidingWindow>,
+    /// Minimum events in the window before the trigger may fire (avoids
+    /// thrashing on sparse data).
+    pub min_events: usize,
+    /// Fire when fastest/slowest stage rate exceeds this (paper: 1.5).
+    pub imbalance_trigger: f64,
+}
+
+fn sidx(s: Stage) -> usize {
+    match s {
+        Stage::Encode => 0,
+        Stage::Diffuse => 1,
+        Stage::Decode => 2,
+    }
+}
+
+impl Monitor {
+    pub fn new(window_ms: f64, imbalance_trigger: f64) -> Self {
+        Monitor {
+            window_ms,
+            stage_windows: [
+                SlidingWindow::new(window_ms),
+                SlidingWindow::new(window_ms),
+                SlidingWindow::new(window_ms),
+            ],
+            pi_windows: Default::default(),
+            min_events: 20,
+            imbalance_trigger,
+        }
+    }
+
+    /// Record a stage completion at `t_ms` served by a GPU with placement
+    /// `pi`, covering `weight` requests (batch size).
+    pub fn record(&mut self, t_ms: f64, stage: Stage, pi: Pi, weight: f64) {
+        self.stage_windows[sidx(stage)].push(t_ms, weight);
+        self.pi_windows
+            .entry(pi)
+            .or_insert_with(|| SlidingWindow::new(self.window_ms))
+            .push(t_ms, weight);
+    }
+
+    /// Per-stage completion rates (req/s) over the window.
+    pub fn stage_rates(&mut self, now_ms: f64) -> [f64; 3] {
+        [
+            self.stage_windows[0].rate_per_sec(now_ms),
+            self.stage_windows[1].rate_per_sec(now_ms),
+            self.stage_windows[2].rate_per_sec(now_ms),
+        ]
+    }
+
+    /// Observed per-placement-type processing rates `v_π` for the
+    /// Orchestrator's `Split()` (per-GPU normalisation happens caller-side).
+    pub fn observed_rates(&mut self, now_ms: f64) -> Rates {
+        let mut v = std::collections::BTreeMap::new();
+        for (pi, w) in self.pi_windows.iter_mut() {
+            let r = w.rate_per_sec(now_ms);
+            if r > 0.0 {
+                v.insert(*pi, r);
+            }
+        }
+        Rates { v }
+    }
+
+    /// §5.3 trigger: true when the fastest stage's windowed rate is at least
+    /// `imbalance_trigger`× the slowest's (with enough evidence).
+    pub fn pattern_change(&mut self, now_ms: f64) -> bool {
+        let events: usize = self.stage_windows.iter().map(|w| w.len()).sum();
+        if events < self.min_events {
+            return false;
+        }
+        let rates = self.stage_rates(now_ms);
+        let max = rates.iter().cloned().fold(f64::MIN, f64::max);
+        let min = rates.iter().cloned().fold(f64::MAX, f64::min);
+        if min <= 0.0 {
+            return max > 0.0;
+        }
+        max / min >= self.imbalance_trigger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_rates_do_not_trigger() {
+        let mut m = Monitor::new(10_000.0, 1.5);
+        for i in 0..30 {
+            let t = i as f64 * 100.0;
+            m.record(t, Stage::Encode, Pi::Edc, 1.0);
+            m.record(t, Stage::Diffuse, Pi::Edc, 1.0);
+            m.record(t, Stage::Decode, Pi::Edc, 1.0);
+        }
+        assert!(!m.pattern_change(3000.0));
+    }
+
+    #[test]
+    fn skew_triggers() {
+        let mut m = Monitor::new(10_000.0, 1.5);
+        for i in 0..40 {
+            let t = i as f64 * 100.0;
+            m.record(t, Stage::Encode, Pi::E, 1.0);
+            if i % 2 == 0 {
+                m.record(t, Stage::Diffuse, Pi::D, 1.0);
+            }
+            if i % 4 == 0 {
+                m.record(t, Stage::Decode, Pi::C, 1.0);
+            }
+        }
+        assert!(m.pattern_change(4000.0));
+    }
+
+    #[test]
+    fn sparse_data_never_triggers() {
+        let mut m = Monitor::new(10_000.0, 1.5);
+        m.record(0.0, Stage::Encode, Pi::E, 1.0);
+        m.record(0.0, Stage::Diffuse, Pi::D, 1.0);
+        assert!(!m.pattern_change(100.0));
+    }
+
+    #[test]
+    fn observed_rates_by_placement_type() {
+        let mut m = Monitor::new(1_000.0, 1.5);
+        for i in 0..10 {
+            m.record(i as f64 * 100.0, Stage::Diffuse, Pi::Dc, 1.0);
+        }
+        let r = m.observed_rates(1000.0);
+        assert!(r.v.get(&Pi::Dc).copied().unwrap_or(0.0) > 5.0);
+        assert!(r.v.get(&Pi::Edc).is_none());
+    }
+}

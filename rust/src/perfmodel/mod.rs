@@ -1,0 +1,342 @@
+//! Analytical per-stage cost model — the stand-in for the paper's offline
+//! GPU profiling runs (DESIGN.md §1 substitution table).
+//!
+//! The planners consume only `(stage, length, degree) → (latency, memory)`
+//! tables; this module generates them from first-principles cost curves
+//! calibrated so the paper's *shapes* reproduce:
+//!
+//! * **Diffuse** is compute-bound: `t ∝ steps·(2·P·l + a_attn·l²) / (k·eff)`
+//!   with sequence-parallel efficiency `eff_sp(k,l) = 1/(1+(k-1)(c_bw + c_u·l_sat/l))`
+//!   — large l scales near-linearly, small l degrades (paper Fig 3/16).
+//! * **Decode** is memory-bound: `t ∝ pixels / (BW·k·eff_dec)` with
+//!   `eff_dec(k) = 1/(1+0.45(k-1))` capping speedup at ≈2× (Fig 3 right).
+//! * **Encode** is tiny and batches almost for free (Fig 17 left).
+//! * **MP** is uniformly less efficient than SP at the same degree (§3).
+//!
+//! Peak activation memory is linear in processing length and inversely
+//! proportional to degree; stage weights come from Table 2 model sizes.
+
+pub mod batching;
+
+use crate::config::{ClusterSpec, PipelineSpec, ReqShape, Stage};
+
+/// Parallelism style for latency queries (§2.2): sequence parallel is the
+/// paper's main axis; model parallel is the Appendix E.2 fallback.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    Sp,
+    Mp,
+}
+
+/// Supported parallel degrees (paper notation `k ∈ {1, 2, 4, 8}`).
+pub const DEGREES: [usize; 4] = [1, 2, 4, 8];
+
+/// Calibrated analytical cost model.
+#[derive(Clone, Debug)]
+pub struct PerfModel {
+    pub cluster: ClusterSpec,
+    /// Model FLOP utilisation for the compute-bound Diffuse stage.
+    pub mfu: f64,
+    /// Attention quadratic-term coefficient per billion diffuse params.
+    pub attn_coeff_per_b: f64,
+    /// SP efficiency: bandwidth overhead per extra shard.
+    pub sp_bw_overhead: f64,
+    /// SP efficiency: under-utilisation coefficient (scaled by l_sat/l).
+    pub sp_util_overhead: f64,
+    /// Sequence length at which per-shard work saturates the GPU.
+    pub l_sat: f64,
+    /// MP overheads (uniformly worse than SP).
+    pub mp_bw_overhead: f64,
+    pub mp_util_overhead: f64,
+    /// Decode per-extra-shard overhead (memory-bound scaling wall).
+    pub dec_overhead: f64,
+    /// Decode effective cost, ms per megapixel(-frame) at degree 1.
+    pub dec_ms_per_mpix: f64,
+    /// Encode fixed overhead ms and per-extra-batch latency growth.
+    pub enc_fixed_ms: f64,
+    pub enc_batch_growth: f64,
+    /// Per-dispatch fixed overhead (kernel launch, CPU scheduling), ms.
+    pub dispatch_overhead_ms: f64,
+}
+
+impl PerfModel {
+    pub fn new(cluster: ClusterSpec) -> Self {
+        PerfModel {
+            cluster,
+            mfu: 0.40,
+            attn_coeff_per_b: 8_000.0,
+            sp_bw_overhead: 0.02,
+            sp_util_overhead: 0.30,
+            l_sat: 2048.0,
+            mp_bw_overhead: 0.08,
+            mp_util_overhead: 0.50,
+            dec_overhead: 0.45,
+            dec_ms_per_mpix: 1500.0,
+            enc_fixed_ms: 15.0,
+            enc_batch_growth: 0.012,
+            dispatch_overhead_ms: 8.0,
+        }
+    }
+
+    pub fn paper() -> Self {
+        Self::new(ClusterSpec::l20_128())
+    }
+
+    // ------------------------------------------------------------------
+    // Parallel efficiency curves (Fig 3 / Fig 16 shapes)
+    // ------------------------------------------------------------------
+
+    /// Efficiency multiplier in `(0, 1]`: `speedup(k) = k * eff(k)`.
+    pub fn parallel_efficiency(&self, stage: Stage, l: u64, k: usize, par: Parallelism) -> f64 {
+        if k <= 1 {
+            return 1.0;
+        }
+        let km1 = (k - 1) as f64;
+        match stage {
+            Stage::Diffuse => {
+                let (bw, util) = match par {
+                    Parallelism::Sp => (self.sp_bw_overhead, self.sp_util_overhead),
+                    Parallelism::Mp => (self.mp_bw_overhead, self.mp_util_overhead),
+                };
+                1.0 / (1.0 + km1 * (bw + util * self.l_sat / (l.max(1) as f64)))
+            }
+            Stage::Decode => 1.0 / (1.0 + km1 * self.dec_overhead),
+            // Encode never benefits from parallelism (§3): model as pure
+            // overhead so degree 1 always wins.
+            Stage::Encode => 1.0 / (1.0 + km1 * 0.9),
+        }
+    }
+
+    /// Speedup over degree-1 execution.
+    pub fn speedup(&self, stage: Stage, l: u64, k: usize, par: Parallelism) -> f64 {
+        k as f64 * self.parallel_efficiency(stage, l, k, par)
+    }
+
+    /// The paper's *optimal parallelism strategy* (§6.2 footnote 4): the
+    /// highest degree whose efficiency (= actual/theoretical speedup)
+    /// exceeds `threshold`.
+    pub fn optimal_degree(&self, stage: Stage, l: u64, threshold: f64) -> usize {
+        DEGREES
+            .iter()
+            .copied()
+            .filter(|&k| self.parallel_efficiency(stage, l, k, Parallelism::Sp) >= threshold)
+            .max()
+            .unwrap_or(1)
+    }
+
+    // ------------------------------------------------------------------
+    // Latency
+    // ------------------------------------------------------------------
+
+    /// Diffuse-stage FLOPs for one request (all denoising steps).
+    fn diffuse_flops(&self, p: &PipelineSpec, l: u64) -> f64 {
+        let params = p.diffuse.params_b * 1e9;
+        let attn = self.attn_coeff_per_b * p.diffuse.params_b;
+        p.steps as f64 * (2.0 * params * l as f64 + attn * (l as f64) * (l as f64))
+    }
+
+    /// Latency in ms for one stage execution.
+    pub fn stage_latency_ms(
+        &self,
+        p: &PipelineSpec,
+        shape: &ReqShape,
+        stage: Stage,
+        k: usize,
+        batch: usize,
+        par: Parallelism,
+    ) -> f64 {
+        let batch = batch.max(1) as f64;
+        let eff = self.parallel_efficiency(stage, shape.l_proc(stage), k, par);
+        let base = match stage {
+            Stage::Encode => {
+                // Compute-light; dominated by fixed cost. Batching grows
+                // latency by enc_batch_growth per extra sample (Fig 17).
+                let flops = 2.0 * p.encode.params_b * 1e9 * shape.l_e as f64;
+                let t1 = self.enc_fixed_ms
+                    + flops / (self.mfu * self.cluster.tflops * 1e12) * 1e3;
+                t1 * (1.0 + self.enc_batch_growth * (batch - 1.0))
+            }
+            Stage::Diffuse => {
+                let flops = self.diffuse_flops(p, shape.l_d);
+                let t1 = flops / (self.mfu * self.cluster.tflops * 1e12) * 1e3;
+                // Compute-bound: batching at large l is a linear slowdown;
+                // small l regains some utilisation (App E.1 Fig 17 middle).
+                let util = (shape.l_d as f64 / self.l_sat).clamp(0.02, 1.0);
+                t1 * (1.0 + (batch - 1.0) * util)
+            }
+            Stage::Decode => {
+                let mpix = shape.pixels as f64 / 3.0 / 1e6;
+                let bw_scale = self.cluster.hbm_gbps / 864.0;
+                let t1 = self.dec_ms_per_mpix * mpix / bw_scale
+                    * (p.decode.act_gb_per_1k / 0.30);
+                // Memory-bound: latency grows ~linearly with batch.
+                t1 * batch
+            }
+        };
+        self.dispatch_overhead_ms + base / (k as f64 * eff)
+    }
+
+    // ------------------------------------------------------------------
+    // Memory
+    // ------------------------------------------------------------------
+
+    /// Peak activation memory (GB) per GPU for one stage execution.
+    /// Decode activations shard poorly (the VAE's spatial working set does
+    /// not split cleanly under Ulysses SP): cap its sharding at 2-way.
+    pub fn stage_act_gb(&self, p: &PipelineSpec, shape: &ReqShape, stage: Stage, k: usize) -> f64 {
+        let spec = p.stage(stage);
+        let l = shape.l_proc(stage) as f64;
+        let shard = if stage == Stage::Decode { k.min(2) } else { k };
+        spec.act_gb_per_1k * l / 1000.0 / shard as f64
+    }
+
+    /// Resident weight footprint (GB) for a stage replica at MP degree 1.
+    pub fn weights_gb(&self, p: &PipelineSpec, stage: Stage) -> f64 {
+        p.stage(stage).weights_gb
+    }
+
+    // ------------------------------------------------------------------
+    // Inter-stage communication (Table 3: Q_ED < Q_DC since l_C > l_E)
+    // ------------------------------------------------------------------
+
+    /// Bytes of the E→D condition tensor (GB).
+    pub fn q_ed_gb(&self, shape: &ReqShape) -> f64 {
+        shape.l_e as f64 * 4096.0 * 2.0 / 1e9
+    }
+
+    /// Bytes of the D→C latent tensor (GB). Same per-token width as E→D:
+    /// the paper's Q ∝ l argument (Q_DC > Q_ED because l_C > l_E).
+    pub fn q_dc_gb(&self, shape: &ReqShape) -> f64 {
+        shape.l_c as f64 * 4096.0 * 2.0 / 1e9
+    }
+
+    /// Transfer time over a given bandwidth (GB/s), plus link latency.
+    pub fn transfer_ms(&self, gb: f64, gbps: f64) -> f64 {
+        self.cluster.link_latency_ms + gb / gbps * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flux_shape(res: u32) -> ReqShape {
+        ReqShape::image(res)
+    }
+
+    #[test]
+    fn diffuse_scales_well_at_high_res() {
+        let m = PerfModel::paper();
+        let s = m.speedup(Stage::Diffuse, flux_shape(4096).l_d, 8, Parallelism::Sp);
+        assert!(s > 6.0, "speedup {s}");
+    }
+
+    #[test]
+    fn diffuse_scales_poorly_at_low_res() {
+        let m = PerfModel::paper();
+        let s = m.speedup(Stage::Diffuse, flux_shape(128).l_d, 8, Parallelism::Sp);
+        assert!(s < 1.0, "parallelism should hurt tiny requests, got {s}");
+    }
+
+    #[test]
+    fn decode_speedup_caps_below_two() {
+        let m = PerfModel::paper();
+        let s = m.speedup(Stage::Decode, flux_shape(4096).l_c, 8, Parallelism::Sp);
+        assert!(s < 2.1, "decode is memory-bound, got speedup {s}");
+        assert!(s > 1.5);
+    }
+
+    #[test]
+    fn mp_always_worse_than_sp() {
+        let m = PerfModel::paper();
+        for &k in &DEGREES[1..] {
+            for &res in &[128u32, 1024, 4096] {
+                let l = flux_shape(res).l_d;
+                let sp = m.speedup(Stage::Diffuse, l, k, Parallelism::Sp);
+                let mp = m.speedup(Stage::Diffuse, l, k, Parallelism::Mp);
+                assert!(mp < sp, "MP {mp} !< SP {sp} at k={k} res={res}");
+            }
+        }
+    }
+
+    #[test]
+    fn optimal_degree_monotone_in_length() {
+        let m = PerfModel::paper();
+        let mut prev = 0;
+        for &res in &[128u32, 512, 1024, 2048, 4096] {
+            let k = m.optimal_degree(Stage::Diffuse, flux_shape(res).l_d, 0.8);
+            assert!(k >= prev, "optimal degree must grow with resolution");
+            prev = k;
+        }
+        assert!(prev >= 4);
+    }
+
+    #[test]
+    fn encode_never_wants_parallelism() {
+        let m = PerfModel::paper();
+        assert_eq!(m.optimal_degree(Stage::Encode, 200, 0.8), 1);
+    }
+
+    #[test]
+    fn fig8_diffuse_dominates_e2e() {
+        // Diffuse should be >70% of end-to-end time on medium/heavy shapes.
+        let m = PerfModel::paper();
+        for p in PipelineSpec::all_paper() {
+            let shape = p.shapes.last().unwrap();
+            let te = m.stage_latency_ms(&p, shape, Stage::Encode, 1, 1, Parallelism::Sp);
+            let td = m.stage_latency_ms(&p, shape, Stage::Diffuse, 1, 1, Parallelism::Sp);
+            let tc = m.stage_latency_ms(&p, shape, Stage::Decode, 1, 1, Parallelism::Sp);
+            let frac = td / (te + td + tc);
+            assert!(frac > 0.6, "{}: diffuse frac {frac}", p.name);
+        }
+    }
+
+    #[test]
+    fn flux_colocated_heavy_oversubscribes_vram() {
+        // B1–B4 (full co-location) must OOM on Flux's largest shape (§8.2).
+        let m = PerfModel::paper();
+        let p = PipelineSpec::flux();
+        let shape = p.shape("4096p").unwrap();
+        let weights: f64 = Stage::ALL.iter().map(|&s| m.weights_gb(&p, s)).sum();
+        let act = m.stage_act_gb(&p, shape, Stage::Diffuse, 1);
+        assert!(weights + act > m.cluster.vram_gb, "{}", weights + act);
+        // ...but a DC placement at degree >= 2 fits.
+        let dc = m.weights_gb(&p, Stage::Diffuse) + m.weights_gb(&p, Stage::Decode);
+        assert!(dc + act / 2.0 < m.cluster.vram_gb);
+    }
+
+    #[test]
+    fn sd3_colocates_fine() {
+        let m = PerfModel::paper();
+        let p = PipelineSpec::sd3();
+        let shape = p.shapes.last().unwrap();
+        let weights: f64 = Stage::ALL.iter().map(|&s| m.weights_gb(&p, s)).sum();
+        let act = m.stage_act_gb(&p, shape, Stage::Diffuse, 1);
+        assert!(weights + act < m.cluster.vram_gb);
+    }
+
+    #[test]
+    fn q_dc_exceeds_q_ed() {
+        // Table 3 ordering holds whenever l_C > l_E (all but the tiniest
+        // image shapes; Q ∝ l with a shared per-token width).
+        let m = PerfModel::paper();
+        for p in PipelineSpec::all_paper() {
+            for shape in p.shapes.iter().filter(|s| s.l_c > s.l_e) {
+                assert!(m.q_dc_gb(shape) > m.q_ed_gb(shape), "{} {}", p.name, shape.name);
+            }
+        }
+    }
+
+    #[test]
+    fn latency_decreases_with_degree_at_high_res() {
+        let m = PerfModel::paper();
+        let p = PipelineSpec::flux();
+        let shape = p.shape("4096p").unwrap();
+        let mut prev = f64::INFINITY;
+        for &k in &DEGREES {
+            let t = m.stage_latency_ms(&p, shape, Stage::Diffuse, k, 1, Parallelism::Sp);
+            assert!(t < prev, "latency must fall with k at high res");
+            prev = t;
+        }
+    }
+}

@@ -1,0 +1,599 @@
+//! Placement plans and the Dynamic Orchestrator (§6.1, Algorithm 2,
+//! Appendix C.1).
+//!
+//! A placement plan `P = {π_g}` assigns each GPU one of six placement types
+//! (Table 3). The orchestrator derives P from the request mix: per request
+//! it picks the minimal-communication feasible *Virtual Replica* type
+//! (`OptVR`, V0 ≺ V1 ≺ V2 ≺ V3), provisions VR types proportionally to the
+//! observed OptVR distribution, splits each type's GPU budget between
+//! Primary and Auxiliary replicas inversely to their processing rates
+//! (`Split`), and packs replicas onto 8-GPU nodes with D-carrying primaries
+//! padded to multiples of 8 (`PackPerMachine`).
+
+pub mod mp;
+
+use std::collections::BTreeMap;
+
+use crate::cluster::topology::GpuId;
+use crate::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
+use crate::profiler::Profile;
+
+/// Placement type π of one GPU (Table 3). `⟨EC⟩` is omitted per the paper
+/// (footnote 3: co-locating E with C helps nothing once D dominates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Pi {
+    Edc,
+    Dc,
+    Ed,
+    D,
+    E,
+    C,
+}
+
+impl Pi {
+    pub const ALL: [Pi; 6] = [Pi::Edc, Pi::Dc, Pi::Ed, Pi::D, Pi::E, Pi::C];
+    /// Primary placements in VR order V0..V3 (Table 3).
+    pub const PRIMARY: [Pi; 4] = [Pi::Edc, Pi::Dc, Pi::Ed, Pi::D];
+
+    pub fn stages(&self) -> &'static [Stage] {
+        match self {
+            Pi::Edc => &[Stage::Encode, Stage::Diffuse, Stage::Decode],
+            Pi::Dc => &[Stage::Diffuse, Stage::Decode],
+            Pi::Ed => &[Stage::Encode, Stage::Diffuse],
+            Pi::D => &[Stage::Diffuse],
+            Pi::E => &[Stage::Encode],
+            Pi::C => &[Stage::Decode],
+        }
+    }
+
+    pub fn contains(&self, s: Stage) -> bool {
+        self.stages().contains(&s)
+    }
+
+    pub fn is_primary(&self) -> bool {
+        self.contains(Stage::Diffuse)
+    }
+
+    /// VR index 0..3 for primary placements.
+    pub fn vr_type(&self) -> Option<usize> {
+        Pi::PRIMARY.iter().position(|p| p == self)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Pi::Edc => "EDC",
+            Pi::Dc => "DC",
+            Pi::Ed => "ED",
+            Pi::D => "D",
+            Pi::E => "E",
+            Pi::C => "C",
+        }
+    }
+}
+
+/// Whole-cluster placement plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlacementPlan {
+    pub pi: Vec<Pi>,
+}
+
+impl PlacementPlan {
+    pub fn uniform(g: usize, pi: Pi) -> Self {
+        PlacementPlan { pi: vec![pi; g] }
+    }
+
+    pub fn counts(&self) -> BTreeMap<Pi, usize> {
+        let mut m = BTreeMap::new();
+        for &p in &self.pi {
+            *m.entry(p).or_insert(0) += 1;
+        }
+        m
+    }
+
+    pub fn gpus_with(&self, pi: Pi) -> Vec<GpuId> {
+        (0..self.pi.len()).filter(|&g| self.pi[g] == pi).collect()
+    }
+
+    pub fn gpus_hosting(&self, stage: Stage) -> Vec<GpuId> {
+        (0..self.pi.len()).filter(|&g| self.pi[g].contains(stage)).collect()
+    }
+}
+
+/// Per-placement-type processing rates `v_π` (requests/s per GPU), either
+/// estimated from the profile or observed live by the Monitor.
+#[derive(Clone, Debug, Default)]
+pub struct Rates {
+    pub v: BTreeMap<Pi, f64>,
+}
+
+/// The Dynamic Orchestrator.
+pub struct Orchestrator<'a> {
+    pub profile: &'a Profile,
+    pub pipeline: &'a PipelineSpec,
+    pub consts: &'a SolverConstants,
+    pub cluster: &'a ClusterSpec,
+    /// VRAM held back for handoff buffers + fragmentation when computing
+    /// `cap(t)`.
+    pub mem_reserve_gb: f64,
+}
+
+impl<'a> Orchestrator<'a> {
+    pub fn new(
+        profile: &'a Profile,
+        pipeline: &'a PipelineSpec,
+        consts: &'a SolverConstants,
+        cluster: &'a ClusterSpec,
+    ) -> Self {
+        Orchestrator { profile, pipeline, consts, cluster, mem_reserve_gb: 1.0 }
+    }
+
+    /// Residual activation budget `cap(t)` of a Primary GPU of VR type `t`.
+    pub fn cap_gb(&self, vr: usize) -> f64 {
+        let weights: f64 = Pi::PRIMARY[vr]
+            .stages()
+            .iter()
+            .map(|&s| self.profile.stage_weights_gb(s))
+            .sum();
+        self.cluster.vram_gb - weights - self.mem_reserve_gb
+    }
+
+    /// Peak per-GPU activation demand of a request on VR type `t`: the max
+    /// over co-resident primary stages, each at its profiled optimal degree
+    /// (Decode never parallelises past its optimum, so its peak often rules).
+    pub fn peak_act_gb(&self, shape_idx: usize, vr: usize) -> f64 {
+        Pi::PRIMARY[vr]
+            .stages()
+            .iter()
+            .map(|&s| {
+                let k = self.profile.optimal_degree(shape_idx, s);
+                self.profile.act_gb(shape_idx, s, k)
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// `OptVR(r)`: the first feasible VR type in V0 ≺ V1 ≺ V2 ≺ V3
+    /// (minimal communication, Table 3). `None` = infeasible even on V3
+    /// (would need model parallelism, Appendix E.2).
+    pub fn opt_vr(&self, shape_idx: usize) -> Option<usize> {
+        (0..4).find(|&t| self.peak_act_gb(shape_idx, t) <= self.cap_gb(t))
+    }
+
+    /// Estimate `v_π` tables from the profile under a shape mix.
+    /// Per-GPU service rate of a placement type = 1 / E[GPU-seconds of the
+    /// stages it hosts], with each stage at its optimal degree.
+    pub fn estimated_rates(&self, shape_weights: &[f64]) -> Rates {
+        let total_w: f64 = shape_weights.iter().sum();
+        let mut v = BTreeMap::new();
+        for &pi in &Pi::ALL {
+            let mut gpu_ms = 0.0;
+            for (i, &w) in shape_weights.iter().enumerate() {
+                if w <= 0.0 {
+                    continue;
+                }
+                let mut t = 0.0;
+                for &s in pi.stages() {
+                    let k = self.profile.optimal_degree(i, s);
+                    // GPU-time = latency * degree (all k GPUs busy).
+                    t += self.profile.latency_ms(i, s, k) * k as f64;
+                }
+                gpu_ms += w / total_w * t;
+            }
+            if gpu_ms > 0.0 {
+                v.insert(pi, 1000.0 / gpu_ms);
+            }
+        }
+        Rates { v }
+    }
+
+    /// Expected GPU-time (ms · GPUs) of one request of shape `i` at its
+    /// per-stage optimal degrees.
+    pub fn gpu_time_ms(&self, shape_idx: usize) -> f64 {
+        Stage::ALL
+            .iter()
+            .map(|&s| {
+                let k = self.profile.optimal_degree(shape_idx, s);
+                self.profile.latency_ms(shape_idx, s, k) * k as f64
+            })
+            .sum()
+    }
+
+    /// Algorithm 2: derive the placement plan for `g` GPUs given the shape
+    /// mix (OptVR histogram source) and processing rates.
+    ///
+    /// VR-type proportions follow the OptVR distribution weighted by each
+    /// request's expected *GPU-time* (Principle 2: balance processing
+    /// speeds — a 4096p request consumes ~50× the GPU-seconds of a 128p
+    /// one, so provisioning by request count would starve heavy VR types).
+    pub fn plan(&self, shape_weights: &[f64], g: usize, rates: &Rates) -> PlacementPlan {
+        // Lines 1–2: OptVR per request class, demand-weighted.
+        let mut vr_weight = [0.0f64; 4];
+        let mut total = 0.0;
+        for (i, &w) in shape_weights.iter().enumerate() {
+            if w <= 0.0 {
+                continue;
+            }
+            if let Some(t) = self.opt_vr(i) {
+                let demand = w * self.gpu_time_ms(i);
+                vr_weight[t] += demand;
+                total += demand;
+            }
+            // Infeasible shapes are OOM-rejected at dispatch; they do not
+            // influence placement.
+        }
+        if total <= 0.0 {
+            // Degenerate: nothing to serve; co-locate everything.
+            return PlacementPlan::uniform(g, Pi::Edc);
+        }
+
+        // Lines 3–4: N_t = ⌊α_t G⌋, remainder to the largest α.
+        let mut n = [0usize; 4];
+        for t in 0..4 {
+            n[t] = ((vr_weight[t] / total) * g as f64).floor() as usize;
+        }
+        let assigned: usize = n.iter().sum();
+        let argmax = (0..4).max_by(|&a, &b| vr_weight[a].partial_cmp(&vr_weight[b]).unwrap()).unwrap();
+        n[argmax] += g - assigned;
+
+        // Lines 5–6: Split each N_t into (prim, auxE, auxC).
+        let mut blocks: Vec<(Pi, usize)> = Vec::new();
+        let mut aux_e_total = 0usize;
+        let mut aux_c_total = 0usize;
+        let mut prim_counts: Vec<(Pi, usize)> = Vec::new();
+        for t in 0..4 {
+            if n[t] == 0 {
+                continue;
+            }
+            let (prim, aux_e, aux_c) = self.split(t, n[t], rates);
+            prim_counts.push((Pi::PRIMARY[t], prim));
+            aux_e_total += aux_e;
+            aux_c_total += aux_c;
+        }
+
+        // PackPerMachine: pad D-carrying primaries to multiples of 8 by
+        // borrowing from auxiliaries (keeps SP-8 reachable). Never drain an
+        // auxiliary pool some deployed type still depends on — losing the
+        // last ⟨C⟩ replica would leave Decode of ED/D requests homeless.
+        let need_aux_e = prim_counts.iter().any(|&(pi, n)| n > 0 && !pi.contains(Stage::Encode));
+        let need_aux_c = prim_counts.iter().any(|&(pi, n)| n > 0 && !pi.contains(Stage::Decode));
+        let floor_e = usize::from(need_aux_e);
+        let floor_c = usize::from(need_aux_c);
+        let gpn = self.cluster.gpus_per_node.max(1);
+        for (pi, prim) in prim_counts.iter_mut() {
+            let rem = *prim % gpn;
+            if rem == 0 || *prim == 0 {
+                continue;
+            }
+            let need = gpn - rem;
+            let mut borrowed = 0usize;
+            // Borrow from whichever auxiliary pool this type doesn't need.
+            let (from_e, from_c) = match pi {
+                Pi::Edc => (true, true),
+                Pi::Dc => (true, false),
+                Pi::Ed => (false, true),
+                _ => (false, false),
+            };
+            if from_e {
+                let take = need.min(aux_e_total.saturating_sub(floor_e));
+                aux_e_total -= take;
+                borrowed += take;
+            }
+            if from_c && borrowed < need {
+                let take = (need - borrowed).min(aux_c_total.saturating_sub(floor_c));
+                aux_c_total -= take;
+                borrowed += take;
+            }
+            *prim += borrowed;
+        }
+
+        for (pi, c) in prim_counts {
+            if c > 0 {
+                blocks.push((pi, c));
+            }
+        }
+        if aux_e_total > 0 {
+            blocks.push((Pi::E, aux_e_total));
+        }
+        if aux_c_total > 0 {
+            blocks.push((Pi::C, aux_c_total));
+        }
+
+        self.pack_per_machine(blocks, g)
+    }
+
+    /// Appendix C.1 `Split()`: apportion a VR type's GPU budget between its
+    /// Primary and Auxiliary roles inversely to their processing rates.
+    pub fn split(&self, vr: usize, n_t: usize, rates: &Rates) -> (usize, usize, usize) {
+        let prim_pi = Pi::PRIMARY[vr];
+        let v_prim = rates.v.get(&prim_pi).copied().unwrap_or(1.0).max(1e-9);
+        let v_aux_e = rates.v.get(&Pi::E).copied().unwrap_or(1.0).max(1e-9);
+        let v_aux_c = rates.v.get(&Pi::C).copied().unwrap_or(1.0).max(1e-9);
+
+        let (mut prim, mut aux_e, mut aux_c) = match vr {
+            0 => (n_t, 0, 0), // EDC: trivial
+            1 => {
+                // DC + ⟨E⟩ aux.
+                let rho = v_prim / v_aux_e;
+                let p = ((n_t as f64) / (1.0 + rho)).floor() as usize;
+                (p.min(n_t), n_t - p.min(n_t), 0)
+            }
+            2 => {
+                // ED + ⟨C⟩ aux.
+                let rho = v_prim / v_aux_c;
+                let p = ((n_t as f64) / (1.0 + rho)).floor() as usize;
+                (p.min(n_t), 0, n_t - p.min(n_t))
+            }
+            3 => {
+                // D + both auxiliaries: allocate (1, a, b)/(1+a+b).
+                let a = v_prim / v_aux_e;
+                let b = v_prim / v_aux_c;
+                let scale = n_t as f64 / (1.0 + a + b);
+                let p = (scale).round() as usize;
+                let e = (scale * a).round() as usize;
+                let c = n_t.saturating_sub(p + e);
+                (p, e, c)
+            }
+            _ => unreachable!(),
+        };
+
+        // Feasibility repair: auxiliary service capacity must cover what the
+        // primaries emit; on violation move one GPU from prim to the most
+        // deficient auxiliary. Tiny budgets prioritise feasibility.
+        let needs_e = vr == 1 || vr == 3;
+        let needs_c = vr == 2 || vr == 3;
+        let mut guard = 0;
+        while prim > 0 && guard < n_t {
+            let deficit_e = if needs_e {
+                prim as f64 * v_prim - aux_e as f64 * v_aux_e
+            } else {
+                0.0
+            };
+            let deficit_c = if needs_c {
+                prim as f64 * v_prim - aux_c as f64 * v_aux_c
+            } else {
+                0.0
+            };
+            if deficit_e <= 0.0 && deficit_c <= 0.0 {
+                break;
+            }
+            prim -= 1;
+            if deficit_e >= deficit_c {
+                aux_e += 1;
+            } else {
+                aux_c += 1;
+            }
+            guard += 1;
+        }
+        debug_assert_eq!(prim + aux_e + aux_c, n_t);
+        (prim, aux_e, aux_c)
+    }
+
+    /// Appendix C.1 `PackPerMachine()`: place homogeneous blocks onto
+    /// `gpus_per_node`-sized nodes, whole nodes first, then first-fit
+    /// remainders preferring nodes already hosting the same π.
+    fn pack_per_machine(&self, blocks: Vec<(Pi, usize)>, g: usize) -> PlacementPlan {
+        let gpn = self.cluster.gpus_per_node.max(1);
+        let n_nodes = g.div_ceil(gpn);
+        let mut node_free: Vec<usize> = vec![gpn; n_nodes];
+        if g % gpn != 0 {
+            node_free[n_nodes - 1] = g % gpn;
+        }
+        let mut node_type: Vec<Option<Pi>> = vec![None; n_nodes];
+        let mut pi: Vec<Option<Pi>> = vec![None; g];
+
+        let place = |node: usize,
+                         count: usize,
+                         p: Pi,
+                         node_free: &mut Vec<usize>,
+                         pi: &mut Vec<Option<Pi>>| {
+            let mut placed = 0;
+            for slot in node * gpn..((node + 1) * gpn).min(g) {
+                if placed == count {
+                    break;
+                }
+                if pi[slot].is_none() {
+                    pi[slot] = Some(p);
+                    placed += 1;
+                }
+            }
+            node_free[node] -= placed;
+            placed
+        };
+
+        // Whole-node passes (primaries were listed first by plan()).
+        let mut remainders: Vec<(Pi, usize)> = Vec::new();
+        for (p, mut count) in blocks {
+            while count >= gpn {
+                if let Some(node) = (0..n_nodes).find(|&n| node_free[n] == gpn) {
+                    place(node, gpn, p, &mut node_free, &mut pi);
+                    node_type[node] = Some(p);
+                    count -= gpn;
+                } else {
+                    break;
+                }
+            }
+            if count > 0 {
+                remainders.push((p, count));
+            }
+        }
+
+        // Remainders: first-fit preferring same-π nodes.
+        for (p, mut count) in remainders {
+            while count > 0 {
+                let node = (0..n_nodes)
+                    .filter(|&n| node_free[n] > 0)
+                    .min_by_key(|&n| (node_type[n] != Some(p), gpn - node_free[n]))
+                    .expect("pack_per_machine: ran out of GPUs");
+                let placed = place(node, count.min(node_free[node]), p, &mut node_free, &mut pi);
+                if node_type[node].is_none() {
+                    node_type[node] = Some(p);
+                }
+                count -= placed;
+            }
+        }
+
+        PlacementPlan { pi: pi.into_iter().map(|p| p.expect("unassigned GPU")).collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::perfmodel::PerfModel;
+    use crate::util::prop::run_prop;
+    use crate::util::Rng;
+
+    fn setup(p: &PipelineSpec) -> (Profile, SolverConstants, ClusterSpec) {
+        let cluster = ClusterSpec::l20_128();
+        let consts = SolverConstants::default();
+        let profile = Profile::build(&PerfModel::new(cluster.clone()), p, &consts);
+        (profile, consts, cluster)
+    }
+
+    #[test]
+    fn pi_table3_mapping() {
+        assert_eq!(Pi::Edc.vr_type(), Some(0));
+        assert_eq!(Pi::Dc.vr_type(), Some(1));
+        assert_eq!(Pi::Ed.vr_type(), Some(2));
+        assert_eq!(Pi::D.vr_type(), Some(3));
+        assert_eq!(Pi::E.vr_type(), None);
+        assert!(Pi::Edc.is_primary() && !Pi::C.is_primary());
+    }
+
+    #[test]
+    fn sd3_small_requests_are_v0() {
+        let p = PipelineSpec::sd3();
+        let (profile, consts, cluster) = setup(&p);
+        let orch = Orchestrator::new(&profile, &p, &consts, &cluster);
+        for i in 0..p.shapes.len() {
+            assert_eq!(orch.opt_vr(i), Some(0), "{}", p.shapes[i].name);
+        }
+    }
+
+    #[test]
+    fn flux_heavy_request_needs_disaggregation() {
+        let p = PipelineSpec::flux();
+        let (profile, consts, cluster) = setup(&p);
+        let orch = Orchestrator::new(&profile, &p, &consts, &cluster);
+        let i4096 = p.shapes.iter().position(|s| s.name == "4096p").unwrap();
+        let vr = orch.opt_vr(i4096).unwrap();
+        assert!(vr >= 1, "4096p must not be V0, got V{vr}");
+        let i512 = p.shapes.iter().position(|s| s.name == "512p").unwrap();
+        assert_eq!(orch.opt_vr(i512), Some(0));
+    }
+
+    #[test]
+    fn optvr_monotone_no_skip_to_worse() {
+        // OptVR picks the *first* feasible type: feasibility at t implies
+        // the chosen index <= t.
+        let p = PipelineSpec::hunyuan();
+        let (profile, consts, cluster) = setup(&p);
+        let orch = Orchestrator::new(&profile, &p, &consts, &cluster);
+        for i in 0..p.shapes.len() {
+            if let Some(t) = orch.opt_vr(i) {
+                for earlier in 0..t {
+                    assert!(orch.peak_act_gb(i, earlier) > orch.cap_gb(earlier));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_covers_every_gpu_exactly_once() {
+        let p = PipelineSpec::flux();
+        let (profile, consts, cluster) = setup(&p);
+        let orch = Orchestrator::new(&profile, &p, &consts, &cluster);
+        let w: Vec<f64> = p.shapes.iter().map(|_| 1.0).collect();
+        let rates = orch.estimated_rates(&w);
+        let plan = orch.plan(&w, 128, &rates);
+        assert_eq!(plan.pi.len(), 128);
+        let total: usize = plan.counts().values().sum();
+        assert_eq!(total, 128);
+    }
+
+    #[test]
+    fn plan_provides_all_three_stages() {
+        for p in PipelineSpec::all_paper() {
+            let (profile, consts, cluster) = setup(&p);
+            let orch = Orchestrator::new(&profile, &p, &consts, &cluster);
+            let w: Vec<f64> = p.shapes.iter().map(|_| 1.0).collect();
+            let rates = orch.estimated_rates(&w);
+            let plan = orch.plan(&w, 128, &rates);
+            for &s in &Stage::ALL {
+                assert!(
+                    !plan.gpus_hosting(s).is_empty(),
+                    "{}: no GPU hosts {s:?}",
+                    p.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sd3_plan_is_mostly_colocated() {
+        let p = PipelineSpec::sd3();
+        let (profile, consts, cluster) = setup(&p);
+        let orch = Orchestrator::new(&profile, &p, &consts, &cluster);
+        let w: Vec<f64> = p.shapes.iter().map(|_| 1.0).collect();
+        let rates = orch.estimated_rates(&w);
+        let plan = orch.plan(&w, 128, &rates);
+        let edc = plan.counts().get(&Pi::Edc).copied().unwrap_or(0);
+        assert!(edc > 100, "sd3 should co-locate nearly everything, got {edc}");
+    }
+
+    #[test]
+    fn split_conserves_budget_and_feasibility() {
+        let p = PipelineSpec::flux();
+        let (profile, consts, cluster) = setup(&p);
+        let orch = Orchestrator::new(&profile, &p, &consts, &cluster);
+        let w: Vec<f64> = p.shapes.iter().map(|_| 1.0).collect();
+        let rates = orch.estimated_rates(&w);
+        for vr in 0..4 {
+            for n in [1usize, 3, 8, 17, 64] {
+                let (prim, ae, ac) = orch.split(vr, n, &rates);
+                assert_eq!(prim + ae + ac, n, "vr={vr} n={n}");
+                if vr == 0 {
+                    assert_eq!((ae, ac), (0, 0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_plan_always_total_and_stage_complete() {
+        let p = PipelineSpec::flux();
+        let (profile, consts, cluster) = setup(&p);
+        let orch = Orchestrator::new(&profile, &p, &consts, &cluster);
+        run_prop(0x91ACE, 40, |rng: &mut Rng, _| {
+            let w: Vec<f64> = p.shapes.iter().map(|_| rng.f64() + 0.01).collect();
+            let g = 8 * (1 + rng.below(32)); // 8..256 GPUs
+            let rates = orch.estimated_rates(&w);
+            let plan = orch.plan(&w, g, &rates);
+            assert_eq!(plan.pi.len(), g);
+            // Every stage reachable somewhere.
+            for &s in &Stage::ALL {
+                assert!(!plan.gpus_hosting(s).is_empty());
+            }
+        });
+    }
+
+    #[test]
+    fn packing_prefers_homogeneous_nodes() {
+        let p = PipelineSpec::flux();
+        let (profile, consts, cluster) = setup(&p);
+        let orch = Orchestrator::new(&profile, &p, &consts, &cluster);
+        let w: Vec<f64> = p.shapes.iter().map(|_| 1.0).collect();
+        let rates = orch.estimated_rates(&w);
+        let plan = orch.plan(&w, 128, &rates);
+        // Count nodes that are fully homogeneous.
+        let mut homogeneous = 0;
+        for node in 0..16 {
+            let types: std::collections::BTreeSet<Pi> =
+                (node * 8..(node + 1) * 8).map(|g| plan.pi[g]).collect();
+            if types.len() == 1 {
+                homogeneous += 1;
+            }
+        }
+        assert!(homogeneous >= 12, "only {homogeneous}/16 homogeneous nodes");
+    }
+}

@@ -1,0 +1,184 @@
+//! Offline Profiler (§5.1): pre-computed latency/memory tables per
+//! (shape, stage, degree), optimal parallelism strategies, and SLO targets.
+//!
+//! In the paper this is a measurement sweep over the real GPUs; here the
+//! numbers come from [`PerfModel`] (or, for the `mini` pipeline in real
+//! mode, from measured PJRT executions that overwrite the analytical
+//! entries — see `runtime::measure_profile`). Planners consume only this
+//! table, so the decision logic is agnostic to where the numbers came from.
+
+use crate::config::{PipelineSpec, SolverConstants, Stage};
+use crate::perfmodel::{Parallelism, PerfModel, DEGREES};
+
+/// Profiled numbers for one (shape, stage, degree) cell.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cell {
+    pub latency_ms: f64,
+    /// Per-GPU activation memory, GB.
+    pub act_gb: f64,
+}
+
+/// The full offline profile for one pipeline.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    /// `cells[shape][stage][degree_idx]`.
+    cells: Vec<[[Cell; DEGREES.len()]; 3]>,
+    /// Optimal SP degree per (shape, stage) — footnote-4 rule.
+    optimal_degree: Vec<[usize; 3]>,
+    /// End-to-end latency at per-stage optimal degrees, per shape.
+    pub optimal_e2e_ms: Vec<f64>,
+    /// SLO per shape = slo_scale × optimal_e2e (§8.1).
+    pub slo_ms: Vec<f64>,
+    /// Stage weight footprints, GB (E, D, C).
+    pub weights_gb: [f64; 3],
+}
+
+fn stage_idx(s: Stage) -> usize {
+    match s {
+        Stage::Encode => 0,
+        Stage::Diffuse => 1,
+        Stage::Decode => 2,
+    }
+}
+
+fn degree_idx(k: usize) -> usize {
+    DEGREES.iter().position(|&d| d == k).expect("degree must be one of {1,2,4,8}")
+}
+
+impl Profile {
+    /// Run the offline profiling sweep with the analytical model.
+    pub fn build(model: &PerfModel, p: &PipelineSpec, consts: &SolverConstants) -> Self {
+        let mut cells = Vec::with_capacity(p.shapes.len());
+        let mut optimal_degree = Vec::with_capacity(p.shapes.len());
+        let mut optimal_e2e_ms = Vec::with_capacity(p.shapes.len());
+
+        for shape in &p.shapes {
+            let mut per_shape = [[Cell::default(); DEGREES.len()]; 3];
+            for &stage in &Stage::ALL {
+                for (ki, &k) in DEGREES.iter().enumerate() {
+                    per_shape[stage_idx(stage)][ki] = Cell {
+                        latency_ms: model.stage_latency_ms(p, shape, stage, k, 1, Parallelism::Sp),
+                        act_gb: model.stage_act_gb(p, shape, stage, k),
+                    };
+                }
+            }
+            let opt = [
+                model.optimal_degree(Stage::Encode, shape.l_e, consts.efficiency_threshold),
+                model.optimal_degree(Stage::Diffuse, shape.l_d, consts.efficiency_threshold),
+                model.optimal_degree(Stage::Decode, shape.l_c, consts.efficiency_threshold),
+            ];
+            let e2e: f64 = Stage::ALL
+                .iter()
+                .map(|&s| per_shape[stage_idx(s)][degree_idx(opt[stage_idx(s)])].latency_ms)
+                .sum();
+            cells.push(per_shape);
+            optimal_degree.push(opt);
+            optimal_e2e_ms.push(e2e);
+        }
+
+        let slo_ms = optimal_e2e_ms.iter().map(|t| t * consts.slo_scale).collect();
+        Profile {
+            cells,
+            optimal_degree,
+            optimal_e2e_ms,
+            slo_ms,
+            weights_gb: [
+                model.weights_gb(p, Stage::Encode),
+                model.weights_gb(p, Stage::Diffuse),
+                model.weights_gb(p, Stage::Decode),
+            ],
+        }
+    }
+
+    pub fn n_shapes(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn latency_ms(&self, shape_idx: usize, stage: Stage, k: usize) -> f64 {
+        self.cells[shape_idx][stage_idx(stage)][degree_idx(k)].latency_ms
+    }
+
+    pub fn act_gb(&self, shape_idx: usize, stage: Stage, k: usize) -> f64 {
+        self.cells[shape_idx][stage_idx(stage)][degree_idx(k)].act_gb
+    }
+
+    pub fn optimal_degree(&self, shape_idx: usize, stage: Stage) -> usize {
+        self.optimal_degree[shape_idx][stage_idx(stage)]
+    }
+
+    pub fn stage_weights_gb(&self, stage: Stage) -> f64 {
+        self.weights_gb[stage_idx(stage)]
+    }
+
+    /// Overwrite one cell with a measured value (real-mode calibration).
+    pub fn set_measured(&mut self, shape_idx: usize, stage: Stage, k: usize, latency_ms: f64) {
+        self.cells[shape_idx][stage_idx(stage)][degree_idx(k)].latency_ms = latency_ms;
+    }
+
+    /// Recompute optimal-degree e2e latencies and SLOs after measurement.
+    pub fn refresh_slos(&mut self, consts: &SolverConstants) {
+        for i in 0..self.cells.len() {
+            let e2e: f64 = Stage::ALL
+                .iter()
+                .map(|&s| self.latency_ms(i, s, self.optimal_degree(i, s)))
+                .sum();
+            self.optimal_e2e_ms[i] = e2e;
+            self.slo_ms[i] = e2e * consts.slo_scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+
+    fn profile(p: &PipelineSpec) -> Profile {
+        Profile::build(&PerfModel::new(ClusterSpec::l20_128()), p, &SolverConstants::default())
+    }
+
+    #[test]
+    fn slo_is_scaled_optimal_latency() {
+        let p = PipelineSpec::flux();
+        let prof = profile(&p);
+        for i in 0..prof.n_shapes() {
+            assert!((prof.slo_ms[i] - 2.5 * prof.optimal_e2e_ms[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn optimal_degree_lookup_consistent_with_model() {
+        let p = PipelineSpec::flux();
+        let prof = profile(&p);
+        let m = PerfModel::new(ClusterSpec::l20_128());
+        for (i, shape) in p.shapes.iter().enumerate() {
+            assert_eq!(
+                prof.optimal_degree(i, Stage::Diffuse),
+                m.optimal_degree(Stage::Diffuse, shape.l_d, 0.8)
+            );
+        }
+    }
+
+    #[test]
+    fn latency_table_monotone_in_shape_size() {
+        let p = PipelineSpec::flux();
+        let prof = profile(&p);
+        let mut prev = 0.0;
+        for i in 0..prof.n_shapes() {
+            let t = prof.latency_ms(i, Stage::Diffuse, 1);
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn measured_overrides_refresh_slo() {
+        let p = PipelineSpec::mini();
+        let mut prof = profile(&p);
+        let consts = SolverConstants::default();
+        let before = prof.slo_ms[0];
+        prof.set_measured(0, Stage::Diffuse, 1, 1e6);
+        prof.refresh_slos(&consts);
+        assert!(prof.slo_ms[0] > before);
+    }
+}

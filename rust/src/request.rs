@@ -1,0 +1,101 @@
+//! The request model shared by planners, engine and workload generators.
+
+use crate::config::{PipelineSpec, ReqShape, Stage};
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// One inference request (or request batch — `batch > 1` after dynamic
+/// batching, Appendix E.1) flowing through the E→D→C chain.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    /// Index into the pipeline's `shapes` (resolution/duration bundle).
+    pub shape_idx: usize,
+    pub arrival_ms: f64,
+    /// Absolute SLO deadline `d_r` in sim/wall ms.
+    pub deadline_ms: f64,
+    /// Number of merged samples (dynamic batching).
+    pub batch: usize,
+}
+
+impl Request {
+    pub fn shape<'a>(&self, p: &'a PipelineSpec) -> &'a ReqShape {
+        &p.shapes[self.shape_idx]
+    }
+
+    pub fn l_proc(&self, p: &PipelineSpec, stage: Stage) -> u64 {
+        self.shape(p).l_proc(stage)
+    }
+}
+
+/// Terminal status of a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Finished; whether within the deadline is judged from timestamps.
+    Completed,
+    /// Aborted because no feasible placement had the memory to run it.
+    OomRejected,
+    /// Still queued/running when the measurement horizon closed (an SLO
+    /// miss, excluded from latency statistics).
+    Unfinished,
+}
+
+/// Completion record captured by the metrics layer.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: RequestId,
+    pub shape_idx: usize,
+    pub arrival_ms: f64,
+    pub deadline_ms: f64,
+    pub finish_ms: f64,
+    pub outcome: Outcome,
+    /// Virtual-Replica type the Diffuse plan ran on (0..3), for Fig 12.
+    pub vr_type: Option<usize>,
+    /// Per-stage service times, ms (E, D, C).
+    pub stage_ms: [f64; 3],
+}
+
+impl Completion {
+    pub fn latency_ms(&self) -> f64 {
+        self.finish_ms - self.arrival_ms
+    }
+
+    pub fn on_time(&self) -> bool {
+        self.outcome == Outcome::Completed && self.finish_ms <= self.deadline_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PipelineSpec;
+
+    #[test]
+    fn request_resolves_shape() {
+        let p = PipelineSpec::flux();
+        let r = Request { id: 1, shape_idx: 0, arrival_ms: 0.0, deadline_ms: 1e9, batch: 1 };
+        assert_eq!(r.shape(&p).name, "128p");
+        assert_eq!(r.l_proc(&p, Stage::Diffuse), 64);
+    }
+
+    #[test]
+    fn completion_on_time_logic() {
+        let mut c = Completion {
+            id: 0,
+            shape_idx: 0,
+            arrival_ms: 0.0,
+            deadline_ms: 100.0,
+            finish_ms: 90.0,
+            outcome: Outcome::Completed,
+            vr_type: Some(0),
+            stage_ms: [1.0, 80.0, 9.0],
+        };
+        assert!(c.on_time());
+        c.finish_ms = 110.0;
+        assert!(!c.on_time());
+        c.finish_ms = 90.0;
+        c.outcome = Outcome::OomRejected;
+        assert!(!c.on_time());
+    }
+}

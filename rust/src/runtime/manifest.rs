@@ -1,0 +1,150 @@
+//! `artifacts/manifest.json` parsing (written by python/compile/aot.py).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One artifact's catalog entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// "encode" | "diffuse" | "decode" | "attn_shard".
+    pub stage: String,
+    pub resolution: u32,
+    pub batch: usize,
+    pub degree: usize,
+    pub shard: usize,
+    /// Input shapes (row-major dims) and dtypes.
+    pub inputs: Vec<(Vec<i64>, String)>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub resolutions: Vec<u32>,
+    pub sp_degrees: Vec<usize>,
+    pub artifacts: Vec<ArtifactMeta>,
+    /// Pipeline config echoed from python (d_model, enc_len, ...).
+    pub config: std::collections::BTreeMap<String, f64>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let resolutions = v
+            .get("resolutions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing resolutions"))?
+            .iter()
+            .filter_map(|x| x.as_i64().map(|n| n as u32))
+            .collect();
+        let sp_degrees = v
+            .get("sp_degrees")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing sp_degrees"))?
+            .iter()
+            .filter_map(|x| x.as_i64().map(|n| n as usize))
+            .collect();
+        let mut config = std::collections::BTreeMap::new();
+        if let Some(Json::Obj(m)) = v.get("config") {
+            for (k, val) in m {
+                if let Some(n) = val.as_f64() {
+                    config.insert(k.clone(), n);
+                }
+            }
+        }
+        let mut artifacts = Vec::new();
+        for a in v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+        {
+            let s = |k: &str| -> Result<String> {
+                a.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("artifact missing {k}"))
+            };
+            let n = |k: &str| -> Result<i64> {
+                a.get(k).and_then(Json::as_i64).ok_or_else(|| anyhow!("artifact missing {k}"))
+            };
+            let mut inputs = Vec::new();
+            for inp in a.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
+                let dims: Vec<i64> = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_i64)
+                    .collect();
+                let dtype = inp.get("dtype").and_then(Json::as_str).unwrap_or("float32");
+                inputs.push((dims, dtype.to_string()));
+            }
+            artifacts.push(ArtifactMeta {
+                name: s("name")?,
+                file: s("file")?,
+                stage: s("stage")?,
+                resolution: n("resolution")? as u32,
+                batch: n("batch")? as usize,
+                degree: n("degree")? as usize,
+                shard: n("shard")? as usize,
+                inputs,
+            });
+        }
+        Ok(Manifest { resolutions, sp_degrees, artifacts, config })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "config": {"d_model": 64, "enc_len": 16},
+        "resolutions": [64, 128],
+        "sp_degrees": [1, 2],
+        "artifacts": [
+            {"name": "encode_b1", "file": "encode_b1.hlo.txt", "stage": "encode",
+             "resolution": 0, "batch": 1, "degree": 1, "shard": 0,
+             "inputs": [{"shape": [1, 16], "dtype": "int32"}]}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.resolutions, vec![64, 128]);
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.name, "encode_b1");
+        assert_eq!(a.inputs[0].0, vec![1, 16]);
+        assert_eq!(a.inputs[0].1, "int32");
+        assert_eq!(m.config.get("d_model"), Some(&64.0));
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"resolutions": [], "sp_degrees": [], "artifacts": [{}]}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if !path.exists() {
+            return;
+        }
+        let m = Manifest::load(&path).unwrap();
+        assert!(m.artifacts.len() >= 10);
+        assert!(m.artifacts.iter().any(|a| a.stage == "attn_shard"));
+    }
+}

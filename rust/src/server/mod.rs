@@ -1,0 +1,385 @@
+//! Live serving: the real-mode counterpart of the simulator.
+//!
+//! A leader thread runs the planning stack (profile → placement →
+//! per-tick dispatch) on the wall clock, while each "GPU" is a worker
+//! thread owning its own PJRT client with all stage executables compiled
+//! (PJRT handles are not `Send`, mirroring one-client-per-device real
+//! deployments). Stage outputs flow back through the leader — the handoff
+//! path — so disaggregated placements exercise real inter-stage transfers.
+//!
+//! CPU PJRT has no multi-device execution, so real mode serves at SP degree
+//! 1 (the mini pipeline's optimal degree for every shape); SP > 1 is
+//! exercised in simulation and validated numerically by the `attn_shard`
+//! artifacts (rust/tests/sp_equivalence.rs).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
+use crate::dispatch::ClusterView;
+use crate::metrics::Metrics;
+use crate::perfmodel::{PerfModel, DEGREES};
+use crate::profiler::Profile;
+use crate::request::{Completion, Outcome, Request};
+use crate::runtime::PjrtRuntime;
+use crate::sim::policy::ServingPolicy;
+use crate::sim::TridentPolicy;
+use crate::util::Rng;
+use crate::workload::{TraceGen, WorkloadKind};
+
+/// Live-serving configuration.
+#[derive(Clone, Debug)]
+pub struct LiveConfig {
+    pub artifacts_dir: PathBuf,
+    /// Worker threads, each acting as one GPU.
+    pub workers: usize,
+    pub tick_ms: f64,
+    pub duration_ms: f64,
+    pub rate_scale: f64,
+    pub seed: u64,
+    pub workload: WorkloadKind,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            workers: 4,
+            tick_ms: 20.0,
+            duration_ms: 30_000.0,
+            rate_scale: 1.0,
+            seed: 0,
+            workload: WorkloadKind::Medium,
+        }
+    }
+}
+
+/// Per-stage job executed by a worker.
+struct Job {
+    req: u64,
+    stage: Stage,
+    resolution: u32,
+    /// Encode: tokens as f32-encoded ints; Diffuse: latent ‖ cond packed;
+    /// Decode: latent.
+    tokens: Vec<i32>,
+    latent: Vec<f32>,
+    cond: Vec<f32>,
+}
+
+struct JobDone {
+    req: u64,
+    stage: Stage,
+    worker: usize,
+    output: Vec<f32>,
+    exec_ms: f64,
+}
+
+/// Measured profile + report of a live run.
+pub struct LiveReport {
+    pub metrics: Metrics,
+    pub measured_ms: Vec<(String, f64)>,
+    pub served: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+}
+
+fn latent_dims(cfg_side: usize) -> [i64; 4] {
+    [1, cfg_side as i64, cfg_side as i64, 8]
+}
+
+/// Measure per-(stage, resolution) latencies on a throwaway runtime and
+/// bake them into the profile (the real-mode Profiler pass, §5.1).
+pub fn measure_profile(
+    rt: &PjrtRuntime,
+    pipeline: &PipelineSpec,
+    consts: &SolverConstants,
+    cluster: &ClusterSpec,
+) -> Result<(Profile, Vec<(String, f64)>)> {
+    let model = PerfModel::new(cluster.clone());
+    let mut profile = Profile::build(&model, pipeline, consts);
+    let mut measured = Vec::new();
+    let enc_len = rt.manifest.config.get("enc_len").copied().unwrap_or(16.0) as usize;
+
+    for (i, shape) in pipeline.shapes.iter().enumerate() {
+        let res: u32 = shape.name.trim_end_matches('p').parse().unwrap_or(64);
+        let side = (res / 4) as usize;
+        // Encode.
+        let tokens: Vec<i32> = (0..enc_len as i32).collect();
+        let name = rt
+            .stage_artifact(Stage::Encode, res)
+            .ok_or_else(|| anyhow!("no encode artifact"))?;
+        let _ = rt.run_encode(&name, &tokens, &[1, enc_len as i64])?; // warmup
+        let (cond, enc_ms) = rt.run_encode(&name, &tokens, &[1, enc_len as i64])?;
+        // Diffuse.
+        let name = rt
+            .stage_artifact(Stage::Diffuse, res)
+            .ok_or_else(|| anyhow!("no diffuse artifact for {res}"))?;
+        let noise = vec![0.1f32; side * side * 8];
+        let dims = latent_dims(side);
+        let cond_dims = [1i64, enc_len as i64, 64];
+        let _ = rt.run_f32(&name, &[(&noise, &dims), (&cond, &cond_dims)])?;
+        let (latent, dif_ms) = rt.run_f32(&name, &[(&noise, &dims), (&cond, &cond_dims)])?;
+        // Decode.
+        let name = rt
+            .stage_artifact(Stage::Decode, res)
+            .ok_or_else(|| anyhow!("no decode artifact for {res}"))?;
+        let _ = rt.run_f32(&name, &[(&latent, &dims)])?;
+        let (_, dec_ms) = rt.run_f32(&name, &[(&latent, &dims)])?;
+
+        for (stage, ms) in [
+            (Stage::Encode, enc_ms),
+            (Stage::Diffuse, dif_ms),
+            (Stage::Decode, dec_ms),
+        ] {
+            // CPU has no multi-device SP: k>1 gets no speedup, so the
+            // optimal-degree rule resolves to 1 everywhere.
+            for &k in &DEGREES {
+                profile.set_measured(i, stage, k, ms);
+            }
+            measured.push((format!("{}:{}", shape.name, stage.short()), ms));
+        }
+    }
+    profile.refresh_slos(consts);
+    // Coordination-overhead floor: the mini pipeline's stages run in
+    // single-digit milliseconds, far below the leader's tick/channel
+    // overheads; a raw 2.5x-scaled SLO would be unmeetable by any
+    // coordinator. Floor the deadline at 1s (still << the trace horizon).
+    for slo in profile.slo_ms.iter_mut() {
+        *slo = slo.max(1_000.0);
+    }
+    Ok((profile, measured))
+}
+
+/// Run the live serving loop end to end.
+pub fn serve(cfg: &LiveConfig) -> Result<LiveReport> {
+    let pipeline = PipelineSpec::mini();
+    let consts = SolverConstants::default();
+    let cluster = ClusterSpec::tiny(1, cfg.workers);
+
+    // Profiler pass on the leader's own runtime.
+    let leader_rt = PjrtRuntime::load(&cfg.artifacts_dir, Some(&["encode_b1", "diffuse", "decode"]))?;
+    let (profile, measured) = measure_profile(&leader_rt, &pipeline, &consts, &cluster)?;
+    let enc_len = leader_rt.manifest.config.get("enc_len").copied().unwrap_or(16.0) as usize;
+
+    // Workers: one PJRT client each.
+    let (done_tx, done_rx) = mpsc::channel::<JobDone>();
+    let mut job_txs = Vec::new();
+    let mut handles = Vec::new();
+    for w in 0..cfg.workers {
+        let (tx, rx) = mpsc::channel::<Job>();
+        job_txs.push(tx);
+        let done = done_tx.clone();
+        let dir = cfg.artifacts_dir.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let rt = PjrtRuntime::load(&dir, Some(&["encode_b1", "diffuse", "decode"]))?;
+            while let Ok(job) = rx.recv() {
+                let side = (job.resolution / 4) as usize;
+                let dims = latent_dims(side);
+                let (output, exec_ms) = match job.stage {
+                    Stage::Encode => {
+                        let name = rt.stage_artifact(Stage::Encode, job.resolution).unwrap();
+                        rt.run_encode(&name, &job.tokens, &[1, job.tokens.len() as i64])?
+                    }
+                    Stage::Diffuse => {
+                        let name = rt.stage_artifact(Stage::Diffuse, job.resolution).unwrap();
+                        let cond_dims = [1i64, (job.cond.len() / 64) as i64, 64];
+                        rt.run_f32(&name, &[(&job.latent, &dims), (&job.cond, &cond_dims)])?
+                    }
+                    Stage::Decode => {
+                        let name = rt.stage_artifact(Stage::Decode, job.resolution).unwrap();
+                        rt.run_f32(&name, &[(&job.latent, &dims)])?
+                    }
+                };
+                if done
+                    .send(JobDone { req: job.req, stage: job.stage, worker: w, output, exec_ms })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Ok(())
+        }));
+    }
+    drop(done_tx);
+
+    // Trace.
+    let tg = TraceGen { pipeline: &pipeline, profile: &profile, rate_scale: cfg.rate_scale };
+    let trace = tg.generate(cfg.workload, cfg.duration_ms, cfg.seed);
+
+    // Policy (TridentServe, co-located by OptVR for this tiny pipeline).
+    let mut policy = TridentPolicy::new(
+        pipeline.clone(),
+        profile.clone(),
+        consts.clone(),
+        cluster.clone(),
+    );
+    let placement = policy.initial_placement(cfg.workers);
+
+    // Leader loop state.
+    struct ReqState {
+        shape_idx: usize,
+        resolution: u32,
+        arrival_ms: f64,
+        deadline_ms: f64,
+        vr_type: usize,
+        worker_chain: [usize; 3],
+        stage_ms: [f64; 3],
+        next_stage: usize,
+        cond: Vec<f32>,
+        latent: Vec<f32>,
+    }
+
+    let mut rng = Rng::new(cfg.seed ^ 0x11FE);
+    let mut metrics = Metrics::new(5_000.0);
+    let t0 = Instant::now();
+    let now_ms = |t0: &Instant| t0.elapsed().as_secs_f64() * 1e3;
+    let mut next_arrival = 0usize;
+    let mut pending: Vec<Request> = Vec::new();
+    let mut live: HashMap<u64, ReqState> = HashMap::new();
+    let mut busy = vec![false; cfg.workers];
+    let mut served = 0usize;
+    let horizon = cfg.duration_ms * 3.0;
+
+    let send_stage = |job_txs: &[mpsc::Sender<Job>],
+                      st: &ReqState,
+                      req: u64,
+                      rng: &mut Rng,
+                      enc_len: usize|
+     -> Result<usize> {
+        let stage = [Stage::Encode, Stage::Diffuse, Stage::Decode][st.next_stage];
+        let worker = st.worker_chain[st.next_stage];
+        let side = (st.resolution / 4) as usize;
+        let job = match stage {
+            Stage::Encode => Job {
+                req,
+                stage,
+                resolution: st.resolution,
+                tokens: (0..enc_len).map(|_| rng.below(512) as i32).collect(),
+                latent: Vec::new(),
+                cond: Vec::new(),
+            },
+            Stage::Diffuse => Job {
+                req,
+                stage,
+                resolution: st.resolution,
+                tokens: Vec::new(),
+                latent: (0..side * side * 8).map(|_| rng.normal() as f32).collect(),
+                cond: st.cond.clone(),
+            },
+            Stage::Decode => Job {
+                req,
+                stage,
+                resolution: st.resolution,
+                tokens: Vec::new(),
+                latent: st.latent.clone(),
+                cond: Vec::new(),
+            },
+        };
+        job_txs[worker].send(job).map_err(|_| anyhow!("worker {worker} gone"))?;
+        Ok(worker)
+    };
+
+    loop {
+        let now = now_ms(&t0);
+        if now > horizon {
+            break;
+        }
+        // Arrivals due.
+        while next_arrival < trace.requests.len()
+            && trace.requests[next_arrival].arrival_ms <= now
+        {
+            let mut r = trace.requests[next_arrival].clone();
+            r.arrival_ms = now;
+            r.deadline_ms = now + profile.slo_ms[r.shape_idx];
+            pending.push(r);
+            next_arrival += 1;
+        }
+        let drained = next_arrival >= trace.requests.len() && pending.is_empty() && live.is_empty();
+        if drained && now >= cfg.duration_ms {
+            break;
+        }
+
+        // Dispatch tick.
+        if !pending.is_empty() {
+            let view = ClusterView {
+                placement: placement.clone(),
+                idle: busy.iter().map(|b| !b).collect(),
+                free_at_ms: busy.iter().map(|&b| if b { now + 1e9 } else { now }).collect(),
+                now_ms: now,
+            };
+            let (plans, stats) = policy.dispatch(&mut pending, &view);
+            if let Some(s) = stats {
+                metrics.record_solve(s);
+            }
+            for rp in plans {
+                let shape = &pipeline.shapes[rp.shape_idx];
+                let res: u32 = shape.name.trim_end_matches('p').parse().unwrap_or(64);
+                let st = ReqState {
+                    shape_idx: rp.shape_idx,
+                    resolution: res,
+                    arrival_ms: now,
+                    deadline_ms: now + profile.slo_ms[rp.shape_idx],
+                    vr_type: rp.vr_type,
+                    worker_chain: [rp.e.gpus[0], rp.d.gpus[0], rp.c.gpus[0]],
+                    stage_ms: [0.0; 3],
+                    next_stage: 0,
+                    cond: Vec::new(),
+                    latent: Vec::new(),
+                };
+                let w = send_stage(&job_txs, &st, rp.req, &mut rng, enc_len)?;
+                busy[w] = true;
+                live.insert(rp.req, st);
+            }
+        }
+
+        // Completions.
+        while let Ok(done) = done_rx.try_recv() {
+            busy[done.worker] = false;
+            let now = now_ms(&t0);
+            let Some(st) = live.get_mut(&done.req) else { continue };
+            st.stage_ms[st.next_stage] += done.exec_ms;
+            match done.stage {
+                Stage::Encode => st.cond = done.output,
+                Stage::Diffuse => st.latent = done.output,
+                Stage::Decode => {}
+            }
+            st.next_stage += 1;
+            if st.next_stage == 3 {
+                let st = live.remove(&done.req).unwrap();
+                metrics.record(Completion {
+                    id: done.req,
+                    shape_idx: st.shape_idx,
+                    arrival_ms: st.arrival_ms,
+                    deadline_ms: st.deadline_ms,
+                    finish_ms: now,
+                    outcome: Outcome::Completed,
+                    vr_type: Some(st.vr_type),
+                    stage_ms: st.stage_ms,
+                });
+                served += 1;
+            } else {
+                let w = send_stage(&job_txs, st, done.req, &mut rng, enc_len)?;
+                busy[w] = true;
+            }
+        }
+
+        std::thread::sleep(std::time::Duration::from_millis(cfg.tick_ms as u64 / 4 + 1));
+    }
+
+    drop(job_txs);
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(LiveReport {
+        throughput_rps: served as f64 / wall_s,
+        served,
+        wall_s,
+        measured_ms: measured,
+        metrics,
+    })
+}

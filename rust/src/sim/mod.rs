@@ -1,0 +1,388 @@
+//! Discrete-event simulation harness — the testbed stand-in (DESIGN.md §1).
+//!
+//! Drives a [`ServingPolicy`] (TridentServe or a baseline) over a workload
+//! trace against the [`Engine`], using the analytical perf model for stage
+//! service times. The same engine/planner code also runs in real mode under
+//! `server::LiveServer` with PJRT-measured times — the simulation swaps only
+//! the [`StageExec`] implementation and the clock.
+
+pub mod policy;
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
+use crate::dispatch::{ClusterView, RequestPlans};
+use crate::engine::{Engine, PlanId, StageExec};
+use crate::metrics::Metrics;
+use crate::monitor::Monitor;
+use crate::perfmodel::PerfModel;
+use crate::profiler::Profile;
+use crate::request::{Completion, Outcome, Request, RequestId};
+use crate::util::Rng;
+use crate::workload::Trace;
+
+pub use policy::{ServingPolicy, TridentPolicy};
+
+/// Simulation parameters.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub seed: u64,
+    /// Dispatcher tick period (clock-driven, §5.2).
+    pub tick_ms: f64,
+    /// Monitor/orchestrator period (§5.1).
+    pub monitor_ms: f64,
+    /// Fig-11 throughput span.
+    pub span_ms: f64,
+    /// Keep simulating past the trace end up to this factor to drain.
+    pub drain_factor: f64,
+    /// Multiplicative execution-time jitter std-dev (0 = deterministic).
+    pub jitter: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            seed: 0,
+            tick_ms: 100.0,
+            monitor_ms: 5_000.0,
+            span_ms: 60_000.0,
+            drain_factor: 2.0,
+            jitter: 0.03,
+        }
+    }
+}
+
+/// Stage-time provider for simulation: profile lookup + jitter.
+pub struct SimExec<'a> {
+    pub profile: &'a Profile,
+    pub rng: Rng,
+    pub jitter: f64,
+}
+
+impl<'a> StageExec for SimExec<'a> {
+    fn exec_ms(&mut self, shape_idx: usize, stage: Stage, degree: usize, batch: usize) -> f64 {
+        let base = self.profile.latency_ms(shape_idx, stage, degree.max(1).min(8));
+        let batch_factor = batch.max(1) as f64; // conservative for merged batches
+        let j = if self.jitter > 0.0 {
+            (1.0 + self.jitter * self.rng.normal()).clamp(0.85, 1.25)
+        } else {
+            1.0
+        };
+        base * j * batch_factor.min(1.0).max(1.0) // batch=1 in sim plans
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKind {
+    PlanDone(PlanId),
+    Arrival(usize),
+    Tick,
+    MonitorTick,
+}
+
+#[derive(PartialEq)]
+struct Ev(f64, u64, EventKind);
+
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap()
+            .then(self.1.cmp(&other.1))
+    }
+}
+
+struct ReqProgress {
+    shape_idx: usize,
+    arrival_ms: f64,
+    deadline_ms: f64,
+    vr_type: usize,
+    plan_chain: Vec<PlanId>,
+    done_plans: usize,
+    stage_ms: [f64; 3],
+}
+
+/// Run one policy over one trace; returns collected metrics.
+pub fn run_sim(
+    pipeline: &PipelineSpec,
+    profile: &Profile,
+    consts: &SolverConstants,
+    cluster: &ClusterSpec,
+    policy: &mut dyn ServingPolicy,
+    trace: &Trace,
+    cfg: &SimConfig,
+) -> Metrics {
+    let model = PerfModel::new(cluster.clone());
+    let topo = crate::cluster::Topology::new(cluster.clone());
+    let g = topo.total_gpus();
+
+    let placement = policy.initial_placement(g);
+    let mut engine = Engine::new(topo, placement, profile);
+    let mut monitor = Monitor::new(pipeline.t_win_ms, consts.imbalance_trigger);
+    let mut metrics = Metrics::new(cfg.span_ms);
+    let mut exec = SimExec { profile, rng: Rng::new(cfg.seed ^ 0xE1EC), jitter: cfg.jitter };
+
+    let horizon = trace.duration_ms * cfg.drain_factor;
+    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let push = |heap: &mut BinaryHeap<Reverse<Ev>>, seq: &mut u64, t: f64, k: EventKind| {
+        *seq += 1;
+        heap.push(Reverse(Ev(t, *seq, k)));
+    };
+
+    for (i, r) in trace.requests.iter().enumerate() {
+        push(&mut heap, &mut seq, r.arrival_ms, EventKind::Arrival(i));
+    }
+    push(&mut heap, &mut seq, 0.0, EventKind::Tick);
+    push(&mut heap, &mut seq, cfg.monitor_ms, EventKind::MonitorTick);
+
+    let mut pending: Vec<Request> = Vec::new();
+    let mut progress: HashMap<RequestId, ReqProgress> = HashMap::new();
+    let mut req_meta: HashMap<RequestId, (f64, f64)> = HashMap::new(); // arrival, deadline
+    let mut oom_seen = 0usize;
+
+    while let Some(Reverse(Ev(now, _, kind))) = heap.pop() {
+        if now > horizon {
+            break;
+        }
+        match kind {
+            EventKind::Arrival(i) => {
+                let r = trace.requests[i].clone();
+                if policy.infeasible(r.shape_idx) {
+                    // No placement this policy can ever run it on: the
+                    // paper's "baseline OOMs" case.
+                    metrics.record(Completion {
+                        id: r.id,
+                        shape_idx: r.shape_idx,
+                        arrival_ms: r.arrival_ms,
+                        deadline_ms: r.deadline_ms,
+                        finish_ms: r.arrival_ms,
+                        outcome: Outcome::OomRejected,
+                        vr_type: None,
+                        stage_ms: [0.0; 3],
+                    });
+                } else {
+                    req_meta.insert(r.id, (r.arrival_ms, r.deadline_ms));
+                    pending.push(r);
+                }
+            }
+            EventKind::Tick => {
+                let view = ClusterView {
+                    placement: engine.placement.clone(),
+                    idle: engine.idle_mask(),
+                    free_at_ms: engine.free_at_estimate(now),
+                    now_ms: now,
+                };
+                let (plans, stats) = policy.dispatch(&mut pending, &view);
+                if let Some(s) = stats {
+                    metrics.record_solve(s);
+                }
+                for rp in &plans {
+                    enqueue_plans(rp, &mut engine, profile, &mut progress, &req_meta);
+                }
+                start_ready(
+                    now, &mut engine, &mut exec, profile, &mut heap, &mut seq,
+                );
+                drain_ooms(&mut engine, &mut oom_seen, &mut progress, &mut metrics, &mut pending);
+                if now + cfg.tick_ms <= horizon {
+                    push(&mut heap, &mut seq, now + cfg.tick_ms, EventKind::Tick);
+                }
+            }
+            EventKind::MonitorTick => {
+                if let Some(new_placement) = policy.maybe_switch(now, &mut monitor, g) {
+                    engine.apply_switch(new_placement);
+                    metrics.record_switch(now);
+                }
+                if now + cfg.monitor_ms <= horizon {
+                    push(&mut heap, &mut seq, now + cfg.monitor_ms, EventKind::MonitorTick);
+                }
+            }
+            EventKind::PlanDone(pid) => {
+                handle_done(
+                    pid, now, pipeline, profile, &model, &mut engine, &mut monitor,
+                    &mut metrics, &mut progress,
+                );
+                start_ready(now, &mut engine, &mut exec, profile, &mut heap, &mut seq);
+                drain_ooms(&mut engine, &mut oom_seen, &mut progress, &mut metrics, &mut pending);
+            }
+        }
+    }
+
+    // Requests that never finished inside the horizon are SLO misses.
+    for (_, pr) in progress.drain() {
+        if pr.done_plans < pr.plan_chain.len() {
+            metrics.record(unfinished(&pr));
+        }
+    }
+    for r in pending.drain(..) {
+        metrics.record(Completion {
+            id: r.id,
+            shape_idx: r.shape_idx,
+            arrival_ms: r.arrival_ms,
+            deadline_ms: r.deadline_ms,
+            finish_ms: f64::INFINITY,
+            outcome: Outcome::Unfinished,
+            vr_type: None,
+            stage_ms: [0.0; 3],
+        });
+    }
+    metrics
+}
+
+fn unfinished(pr: &ReqProgress) -> Completion {
+    Completion {
+        id: 0,
+        shape_idx: pr.shape_idx,
+        arrival_ms: pr.arrival_ms,
+        deadline_ms: pr.deadline_ms,
+        finish_ms: f64::INFINITY,
+        outcome: Outcome::Unfinished,
+        vr_type: Some(pr.vr_type),
+        stage_ms: pr.stage_ms,
+    }
+}
+
+fn enqueue_plans(
+    rp: &RequestPlans,
+    engine: &mut Engine,
+    profile: &Profile,
+    progress: &mut HashMap<RequestId, ReqProgress>,
+    req_meta: &HashMap<RequestId, (f64, f64)>,
+) {
+    let ids = engine.enqueue(rp, profile);
+    let (arrival_ms, deadline_ms) = req_meta.get(&rp.req).copied().unwrap_or((0.0, f64::MAX));
+    progress.insert(
+        rp.req,
+        ReqProgress {
+            shape_idx: rp.shape_idx,
+            arrival_ms,
+            deadline_ms,
+            vr_type: rp.vr_type,
+            plan_chain: ids,
+            done_plans: 0,
+            stage_ms: [0.0; 3],
+        },
+    );
+}
+
+fn start_ready(
+    now: f64,
+    engine: &mut Engine,
+    exec: &mut SimExec,
+    profile: &Profile,
+    heap: &mut BinaryHeap<Reverse<Ev>>,
+    seq: &mut u64,
+) {
+    for sp in engine.advance(now, exec, profile) {
+        *seq += 1;
+        heap.push(Reverse(Ev(sp.finish_ms, *seq, EventKind::PlanDone(sp.plan))));
+    }
+}
+
+fn drain_ooms(
+    engine: &mut Engine,
+    seen: &mut usize,
+    progress: &mut HashMap<RequestId, ReqProgress>,
+    metrics: &mut Metrics,
+    pending: &mut Vec<Request>,
+) {
+    while *seen < engine.ooms.len() {
+        let ab = engine.ooms[*seen].clone();
+        *seen += 1;
+        pending.retain(|r| r.id != ab.req);
+        if let Some(pr) = progress.remove(&ab.req) {
+            metrics.record(Completion {
+                id: ab.req,
+                shape_idx: pr.shape_idx,
+                arrival_ms: ab.at_ms,
+                deadline_ms: pr.deadline_ms,
+                finish_ms: ab.at_ms,
+                outcome: Outcome::OomRejected,
+                vr_type: Some(pr.vr_type),
+                stage_ms: pr.stage_ms,
+            });
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_done(
+    pid: PlanId,
+    now: f64,
+    pipeline: &PipelineSpec,
+    profile: &Profile,
+    model: &PerfModel,
+    engine: &mut Engine,
+    monitor: &mut Monitor,
+    metrics: &mut Metrics,
+    progress: &mut HashMap<RequestId, ReqProgress>,
+) {
+    if engine.plans[pid].state != crate::engine::PlanState::Running {
+        return; // cancelled while queued
+    }
+    let req = engine.plans[pid].req;
+    let stage = engine.plans[pid].stage;
+    let merged = engine.plans[pid].merged_stages.clone();
+    let shape_idx = engine.plans[pid].shape_idx;
+    let pi = engine.pi_of(engine.plans[pid].gpus[0]);
+    let total_ms = engine.plans[pid].prepare_ms + engine.plans[pid].exec_ms;
+
+    // Successor + inter-stage volume for the proactive push.
+    let (succ, q_gb) = {
+        let pr = progress.get(&req);
+        match pr {
+            Some(pr) => {
+                let pos = pr.plan_chain.iter().position(|&p| p == pid);
+                let succ = pos.and_then(|i| pr.plan_chain.get(i + 1)).copied();
+                let shape = &pipeline.shapes[shape_idx];
+                let q = match stage {
+                    Stage::Encode => model.q_ed_gb(shape),
+                    Stage::Diffuse => model.q_dc_gb(shape),
+                    Stage::Decode => 0.0,
+                };
+                (succ, q)
+            }
+            None => (None, 0.0),
+        }
+    };
+    engine.complete(pid, now, q_gb, succ);
+
+    // Monitor sees every stage this run served.
+    monitor.record(now, stage, pi, 1.0);
+    for &s in &merged {
+        monitor.record(now, s, pi, 1.0);
+    }
+
+    if let Some(pr) = progress.get_mut(&req) {
+        let si = match stage {
+            Stage::Encode => 0,
+            Stage::Diffuse => 1,
+            Stage::Decode => 2,
+        };
+        pr.stage_ms[si] += total_ms;
+        pr.done_plans += 1;
+        if pr.done_plans == pr.plan_chain.len() {
+            let pr = progress.remove(&req).unwrap();
+            // Arrival/deadline come from the profile-backed trace request;
+            // the engine does not track them, so look them up in the plans.
+            metrics.record(Completion {
+                id: req,
+                shape_idx: pr.shape_idx,
+                arrival_ms: pr.arrival_ms,
+                deadline_ms: pr.deadline_ms,
+                finish_ms: now,
+                outcome: Outcome::Completed,
+                vr_type: Some(pr.vr_type),
+                stage_ms: pr.stage_ms,
+            });
+        }
+    }
+    let _ = profile;
+}

@@ -1,0 +1,516 @@
+//! The [`ServingPolicy`] abstraction and TridentServe's implementation.
+//!
+//! A policy owns the planning side of a serving system: initial placement,
+//! placement switching, and per-tick dispatch. The engine/simulator is
+//! shared by all policies (TridentServe and the B1–B6 baselines), so every
+//! comparison in Fig 10/14/15 exercises identical execution mechanics and
+//! differs only in planning.
+
+use std::collections::VecDeque;
+
+use crate::cluster::Topology;
+use crate::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
+use crate::dispatch::{ClusterView, Dispatcher, RequestPlans, SolveStats, StagePlan};
+use crate::monitor::Monitor;
+use crate::placement::{Orchestrator, Pi, PlacementPlan, Rates};
+use crate::profiler::Profile;
+use crate::request::Request;
+
+/// Planning-side behaviour of a serving system.
+pub trait ServingPolicy {
+    fn name(&self) -> String;
+
+    /// Bootstrap placement (§4.1 step 2).
+    fn initial_placement(&mut self, g: usize) -> PlacementPlan;
+
+    /// Monitor-tick hook: return a new placement to switch to (§5.3), or
+    /// None to keep the current one.
+    fn maybe_switch(
+        &mut self,
+        _now_ms: f64,
+        _monitor: &mut Monitor,
+        _g: usize,
+    ) -> Option<PlacementPlan> {
+        None
+    }
+
+    /// Per-tick dispatch: remove dispatched requests from `pending` and
+    /// return their plans.
+    fn dispatch(
+        &mut self,
+        pending: &mut Vec<Request>,
+        view: &ClusterView,
+    ) -> (Vec<RequestPlans>, Option<SolveStats>);
+
+    /// True when no placement this policy can ever produce fits the shape
+    /// (immediate OOM rejection at arrival — the paper's B1–B4 on Flux/HYV).
+    fn infeasible(&self, _shape_idx: usize) -> bool {
+        false
+    }
+}
+
+/// TridentServe: Dynamic Orchestrator + Resource-Aware Dispatcher, with
+/// ablation switches for Fig 14.
+pub struct TridentPolicy {
+    pub pipeline: PipelineSpec,
+    pub profile: Profile,
+    pub consts: SolverConstants,
+    pub cluster: ClusterSpec,
+    pub topo: Topology,
+    /// Fig 14 `wo-switch`: disable placement switching.
+    pub switch_enabled: bool,
+    /// Fig 14 `wo-stageAware`: align E/C resources with the Diffuse plan.
+    pub stage_aware: bool,
+    /// Fig 14 `wo-scheduler`: replace the ILP with greedy SRTF.
+    pub use_ilp: bool,
+    /// Sliding histogram of recent arrivals for re-planning.
+    recent_shapes: VecDeque<usize>,
+    recent_cap: usize,
+    /// Backlog observed at the last dispatch tick (congestion signal).
+    last_backlog: usize,
+    /// Consecutive monitor ticks with congestion observed.
+    congested_streak: usize,
+    /// Cool-down between switches.
+    last_switch_ms: f64,
+    switch_cooldown_ms: f64,
+    current_plan: Option<PlacementPlan>,
+}
+
+impl TridentPolicy {
+    pub fn new(
+        pipeline: PipelineSpec,
+        profile: Profile,
+        consts: SolverConstants,
+        cluster: ClusterSpec,
+    ) -> Self {
+        let topo = Topology::new(cluster.clone());
+        // Observation window sized to T_win worth of arrivals: long enough
+        // to smooth sampling noise, short enough to track pattern shifts.
+        let recent_cap = ((pipeline.rate_req_s * pipeline.t_win_ms / 1000.0) as usize)
+            .clamp(128, 4096);
+        TridentPolicy {
+            pipeline,
+            profile,
+            consts,
+            cluster,
+            topo,
+            switch_enabled: true,
+            stage_aware: true,
+            use_ilp: true,
+            recent_shapes: VecDeque::new(),
+            recent_cap,
+            last_backlog: 0,
+            congested_streak: 0,
+            last_switch_ms: f64::NEG_INFINITY,
+            switch_cooldown_ms: 120_000.0,
+            current_plan: None,
+        }
+    }
+
+    fn orchestrator(&self) -> Orchestrator<'_> {
+        Orchestrator::new(&self.profile, &self.pipeline, &self.consts, &self.cluster)
+    }
+
+    fn observed_weights(&self) -> Vec<f64> {
+        let n = self.pipeline.shapes.len();
+        let mut w = vec![0.0; n];
+        for &s in &self.recent_shapes {
+            w[s] += 1.0;
+        }
+        let total: f64 = w.iter().sum();
+        if total <= 0.0 {
+            return vec![1.0; n];
+        }
+        // Blend with a uniform prior so a placement never overfits a burst
+        // and strands capacity for shape classes momentarily absent from
+        // the window (they return; reloading replicas is not free).
+        w.iter().map(|x| x / total + 0.3 / n as f64).collect()
+    }
+
+    fn note_arrivals(&mut self, pending: &[Request]) {
+        for r in pending {
+            self.recent_shapes.push_back(r.shape_idx);
+            if self.recent_shapes.len() > self.recent_cap {
+                self.recent_shapes.pop_front();
+            }
+        }
+    }
+
+    /// Greedy SRTF fallback for the `wo-scheduler` ablation: dispatch in
+    /// shortest-remaining-time order at the profiled optimal degree.
+    fn dispatch_greedy(
+        &self,
+        pending: &mut Vec<Request>,
+        view: &ClusterView,
+    ) -> Vec<RequestPlans> {
+        let disp = Dispatcher::new(&self.profile, &self.pipeline, &self.consts, &self.topo);
+        let mut order: Vec<usize> = (0..pending.len()).collect();
+        order.sort_by(|&a, &b| {
+            let ta = self
+                .profile
+                .latency_ms(pending[a].shape_idx, Stage::Diffuse, 1);
+            let tb = self
+                .profile
+                .latency_ms(pending[b].shape_idx, Stage::Diffuse, 1);
+            ta.partial_cmp(&tb).unwrap()
+        });
+        let mut taken = vec![false; view.placement.pi.len()];
+        let mut plans = Vec::new();
+        let mut dispatched = Vec::new();
+        let mut balancer = crate::dispatch::TickBalancer::default();
+        for &ri in &order {
+            let r = &pending[ri];
+            let k = self.profile.optimal_degree(r.shape_idx, Stage::Diffuse);
+            // First primary type (V0..V3 order) with a free intra-node set.
+            'outer: for i in 0..4 {
+                let pool: Vec<usize> = (0..view.placement.pi.len())
+                    .filter(|&g| {
+                        view.idle[g]
+                            && !taken[g]
+                            && view.placement.pi[g] == Pi::PRIMARY[i]
+                    })
+                    .collect();
+                // Group by node.
+                let mut by_node: std::collections::BTreeMap<usize, Vec<usize>> =
+                    Default::default();
+                for g in pool {
+                    by_node.entry(self.topo.node_of(g)).or_default().push(g);
+                }
+                for (_, gs) in by_node {
+                    if gs.len() >= k {
+                        let gpus = gs[..k].to_vec();
+                        for &g in &gpus {
+                            taken[g] = true;
+                        }
+                        plans.push(build_request_plans(
+                            r, i, gpus, k, &self.profile, &disp, view, &mut balancer,
+                        ));
+                        dispatched.push(ri);
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        remove_indices(pending, &dispatched);
+        plans
+    }
+}
+
+/// Shared helper: assemble a RequestPlans from a chosen (type, gpu set).
+pub fn build_request_plans(
+    r: &Request,
+    vr_type: usize,
+    d_gpus: Vec<usize>,
+    k: usize,
+    profile: &Profile,
+    _disp: &Dispatcher,
+    view: &ClusterView,
+    balancer: &mut crate::dispatch::TickBalancer,
+) -> RequestPlans {
+    let prim = Pi::PRIMARY[vr_type];
+    let (e, e_merged) = if prim.contains(Stage::Encode) {
+        (
+            StagePlan { req: r.id, stage: Stage::Encode, gpus: d_gpus.clone(), degree: k },
+            true,
+        )
+    } else {
+        let g = cheapest_aux(Stage::Encode, view, balancer);
+        (StagePlan { req: r.id, stage: Stage::Encode, gpus: vec![g], degree: 1 }, false)
+    };
+    let (c, c_on_subset) = if prim.contains(Stage::Decode) {
+        let kc = profile.optimal_degree(r.shape_idx, Stage::Decode).min(k);
+        (
+            StagePlan { req: r.id, stage: Stage::Decode, gpus: d_gpus[..kc].to_vec(), degree: kc },
+            true,
+        )
+    } else {
+        let g = cheapest_aux(Stage::Decode, view, balancer);
+        (StagePlan { req: r.id, stage: Stage::Decode, gpus: vec![g], degree: 1 }, false)
+    };
+    RequestPlans {
+        req: r.id,
+        shape_idx: r.shape_idx,
+        vr_type,
+        e,
+        d: StagePlan { req: r.id, stage: Stage::Diffuse, gpus: d_gpus, degree: k },
+        c,
+        e_merged,
+        c_on_subset,
+    }
+}
+
+/// Earliest-to-free GPU hosting the stage (auxiliary first), spread by the
+/// per-tick balancer.
+pub fn cheapest_aux(
+    stage: Stage,
+    view: &ClusterView,
+    balancer: &mut crate::dispatch::TickBalancer,
+) -> usize {
+    let aux_pi = if stage == Stage::Encode { Pi::E } else { Pi::C };
+    if let Some(g) = balancer.pick(
+        (0..view.placement.pi.len()).filter(|&g| view.placement.pi[g] == aux_pi),
+        &view.free_at_ms,
+    ) {
+        return g;
+    }
+    balancer
+        .pick(
+            (0..view.placement.pi.len()).filter(|&g| view.placement.pi[g].contains(stage)),
+            &view.free_at_ms,
+        )
+        .unwrap_or(0)
+}
+
+pub fn remove_indices(pending: &mut Vec<Request>, indices: &[usize]) {
+    let mut keep = vec![true; pending.len()];
+    for &i in indices {
+        keep[i] = false;
+    }
+    let mut it = keep.iter();
+    pending.retain(|_| *it.next().unwrap());
+}
+
+impl ServingPolicy for TridentPolicy {
+    fn name(&self) -> String {
+        let mut n = "tridentserve".to_string();
+        if !self.switch_enabled {
+            n.push_str("-woSwitch");
+        }
+        if !self.stage_aware {
+            n.push_str("-woStageAware");
+        }
+        if !self.use_ilp {
+            n.push_str("-woScheduler");
+        }
+        n
+    }
+
+    fn initial_placement(&mut self, g: usize) -> PlacementPlan {
+        let orch = self.orchestrator();
+        let w: Vec<f64> = self.pipeline.shapes.iter().map(|_| 1.0).collect();
+        let rates = orch.estimated_rates(&w);
+        let plan = orch.plan(&w, g, &rates);
+        self.current_plan = Some(plan.clone());
+        plan
+    }
+
+    fn maybe_switch(
+        &mut self,
+        now_ms: f64,
+        monitor: &mut Monitor,
+        g: usize,
+    ) -> Option<PlacementPlan> {
+        if !self.switch_enabled {
+            return None;
+        }
+        if now_ms - self.last_switch_ms < self.switch_cooldown_ms {
+            return None;
+        }
+        if self.recent_shapes.len() < 32 {
+            return None; // not enough arrival evidence yet
+        }
+        // §4.1: re-place only when the pattern change is *causing
+        // congestion* — visible as stage-rate imbalance or a backlog that
+        // exceeds a fraction of the cluster — and the congestion is
+        // *persistent* (several consecutive monitor ticks): transient
+        // bursts on a well-fitting placement clear on their own, and
+        // re-placing costs Adjust-on-Dispatch churn.
+        let congested =
+            monitor.pattern_change(now_ms) || self.last_backlog * 4 > g;
+        if congested {
+            self.congested_streak += 1;
+        } else {
+            self.congested_streak = 0;
+        }
+        if self.congested_streak < 6 {
+            return None;
+        }
+        // Candidate plan from the recent arrival mix (Algorithm 2 is cheap:
+        // ~1 µs — see perf_hotpath).
+        let orch = self.orchestrator();
+        let w = self.observed_weights();
+        // Blend observed v_π with estimates (observed rates are cluster
+        // totals; estimates are per-GPU — use estimates, which Split()
+        // needs in per-GPU form, biased by the observed mix).
+        let rates: Rates = orch.estimated_rates(&w);
+        let plan = orch.plan(&w, g, &rates);
+
+        // Two triggers (§4.1 / §5.3): (i) stage-rate imbalance ≥ 1.5×
+        // (congestion already visible), or (ii) the arrival mix has drifted
+        // far enough that the ideal placement differs substantially from
+        // the deployed one (congestion imminent).
+        // Count-level drift: position shuffles from PackPerMachine are not
+        // real drift; compare how many GPUs would change *placement type*.
+        let drift = match &self.current_plan {
+            Some(cur) => {
+                let a = plan.counts();
+                let b = cur.counts();
+                let keys: std::collections::BTreeSet<Pi> =
+                    a.keys().chain(b.keys()).copied().collect();
+                let delta: usize = keys
+                    .iter()
+                    .map(|k| {
+                        let x = a.get(k).copied().unwrap_or(0) as i64;
+                        let y = b.get(k).copied().unwrap_or(0) as i64;
+                        (x - y).unsigned_abs() as usize
+                    })
+                    .sum();
+                delta as f64 / (2.0 * g as f64)
+            }
+            None => 1.0,
+        };
+        if drift < 0.15 {
+            return None;
+        }
+        if Some(&plan) == self.current_plan.as_ref() {
+            return None;
+        }
+        self.last_switch_ms = now_ms;
+        self.current_plan = Some(plan.clone());
+        Some(plan)
+    }
+
+    fn dispatch(
+        &mut self,
+        pending: &mut Vec<Request>,
+        view: &ClusterView,
+    ) -> (Vec<RequestPlans>, Option<SolveStats>) {
+        self.note_arrivals(pending);
+        self.last_backlog = pending.len();
+        if pending.is_empty() {
+            return (Vec::new(), None);
+        }
+        if !self.use_ilp {
+            let plans = self.dispatch_greedy(pending, view);
+            return (plans, None);
+        }
+        let disp = Dispatcher::new(&self.profile, &self.pipeline, &self.consts, &self.topo);
+        let (mut plans, stats) = disp.dispatch(pending, view);
+        if !self.stage_aware {
+            // Ablation: align all stages' resources with the Diffuse plan.
+            for p in &mut plans {
+                p.e = StagePlan {
+                    req: p.req,
+                    stage: Stage::Encode,
+                    gpus: p.d.gpus.clone(),
+                    degree: p.d.degree,
+                };
+                p.e_merged = true;
+                p.c = StagePlan {
+                    req: p.req,
+                    stage: Stage::Decode,
+                    gpus: p.d.gpus.clone(),
+                    degree: p.d.degree,
+                };
+                p.c_on_subset = true;
+            }
+        }
+        let ids: Vec<u64> = plans.iter().map(|p| p.req).collect();
+        pending.retain(|r| !ids.contains(&r.id));
+        (plans, Some(stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::PerfModel;
+
+    fn trident(p: PipelineSpec) -> TridentPolicy {
+        let cluster = ClusterSpec::l20_128();
+        let consts = SolverConstants::default();
+        let profile = Profile::build(&PerfModel::new(cluster.clone()), &p, &consts);
+        TridentPolicy::new(p, profile, consts, cluster)
+    }
+
+    #[test]
+    fn initial_placement_covers_cluster() {
+        let mut t = trident(PipelineSpec::flux());
+        let plan = t.initial_placement(128);
+        assert_eq!(plan.pi.len(), 128);
+    }
+
+    #[test]
+    fn dispatch_removes_dispatched_from_pending() {
+        let mut t = trident(PipelineSpec::flux());
+        let plan = t.initial_placement(128);
+        let view = ClusterView {
+            placement: plan,
+            idle: vec![true; 128],
+            free_at_ms: vec![0.0; 128],
+            now_ms: 0.0,
+        };
+        let mut pending: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i,
+                shape_idx: 2,
+                arrival_ms: 0.0,
+                deadline_ms: t.profile.slo_ms[2],
+                batch: 1,
+            })
+            .collect();
+        let (plans, stats) = t.dispatch(&mut pending, &view);
+        assert_eq!(plans.len() + pending.len(), 4);
+        assert!(stats.is_some());
+        assert!(!plans.is_empty());
+    }
+
+    #[test]
+    fn greedy_fallback_dispatches_without_ilp() {
+        let mut t = trident(PipelineSpec::flux());
+        t.use_ilp = false;
+        let plan = t.initial_placement(128);
+        let view = ClusterView {
+            placement: plan,
+            idle: vec![true; 128],
+            free_at_ms: vec![0.0; 128],
+            now_ms: 0.0,
+        };
+        let mut pending: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i,
+                shape_idx: 1,
+                arrival_ms: 0.0,
+                deadline_ms: t.profile.slo_ms[1],
+                batch: 1,
+            })
+            .collect();
+        let (plans, stats) = t.dispatch(&mut pending, &view);
+        assert!(stats.is_none());
+        assert!(!plans.is_empty());
+    }
+
+    #[test]
+    fn wo_stage_aware_aligns_all_stages() {
+        let mut t = trident(PipelineSpec::flux());
+        t.stage_aware = false;
+        let plan = t.initial_placement(128);
+        let view = ClusterView {
+            placement: plan,
+            idle: vec![true; 128],
+            free_at_ms: vec![0.0; 128],
+            now_ms: 0.0,
+        };
+        let mut pending = vec![Request {
+            id: 0,
+            shape_idx: 4,
+            arrival_ms: 0.0,
+            deadline_ms: t.profile.slo_ms[4],
+            batch: 1,
+        }];
+        let (plans, _) = t.dispatch(&mut pending, &view);
+        for p in &plans {
+            assert_eq!(p.e.gpus, p.d.gpus);
+            assert_eq!(p.c.gpus, p.d.gpus);
+        }
+    }
+
+    #[test]
+    fn switch_requires_pattern_change_and_cooldown() {
+        let mut t = trident(PipelineSpec::flux());
+        let _ = t.initial_placement(128);
+        let mut monitor = Monitor::new(10_000.0, 1.5);
+        // No data: no switch.
+        assert!(t.maybe_switch(60_000.0, &mut monitor, 128).is_none());
+    }
+}

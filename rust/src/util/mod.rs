@@ -1,0 +1,12 @@
+//! Small self-contained substrates: PRNG, JSON, statistics, property testing.
+//!
+//! Everything here is hand-rolled because the build is fully offline (only
+//! the crates vendored for the `xla` dependency are available). Each piece is
+//! deliberately minimal but complete for this repo's needs.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,53 @@
+//! Tiny property-testing harness (offline stand-in for `proptest`).
+//!
+//! `run_prop(seed, cases, f)` drives `f` with a fresh deterministic [`Rng`]
+//! per case; on failure it reports the failing case index and the per-case
+//! seed so the exact input can be replayed in a unit test.
+//!
+//! Coordinator invariants (routing, batching, placement/dispatch state) are
+//! property-tested with this in `rust/src/*/mod.rs` and `rust/tests/`.
+
+use super::rng::Rng;
+
+/// Run `cases` property checks. `f` gets `(case_rng, case_index)` and should
+/// panic (e.g. via `assert!`) on violation.
+pub fn run_prop<F: FnMut(&mut Rng, usize)>(seed: u64, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed at case {case} (replay with Rng::new({case_seed:#x})): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        run_prop(1, 50, |rng, _| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn reports_failing_case() {
+        run_prop(2, 50, |rng, _| {
+            assert!(rng.f64() < 0.9, "hit the tail");
+        });
+    }
+}

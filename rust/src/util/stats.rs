@@ -1,0 +1,165 @@
+//! Streaming and batch statistics used by the metrics layer and benches.
+
+/// Percentile over a sample by linear interpolation (like numpy's default).
+/// `q` in `[0, 100]`. Returns `None` on an empty slice.
+pub fn percentile(xs: &[f64], q: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(percentile_sorted(&v, q))
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let pos = (q / 100.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Fixed-capacity sliding window over timestamped counts — the Monitor's
+/// per-stage throughput estimator (§5.1).
+#[derive(Clone, Debug)]
+pub struct SlidingWindow {
+    window_ms: f64,
+    events: std::collections::VecDeque<(f64, f64)>, // (t_ms, weight)
+}
+
+impl SlidingWindow {
+    pub fn new(window_ms: f64) -> Self {
+        SlidingWindow { window_ms, events: Default::default() }
+    }
+
+    pub fn push(&mut self, t_ms: f64, weight: f64) {
+        self.events.push_back((t_ms, weight));
+        self.evict(t_ms);
+    }
+
+    fn evict(&mut self, now_ms: f64) {
+        while let Some(&(t, _)) = self.events.front() {
+            if now_ms - t > self.window_ms {
+                self.events.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Weighted events per second over the window ending at `now_ms`.
+    pub fn rate_per_sec(&mut self, now_ms: f64) -> f64 {
+        self.evict(now_ms);
+        let sum: f64 = self.events.iter().map(|&(_, w)| w).sum();
+        sum / (self.window_ms / 1000.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 100.0), Some(4.0));
+        assert_eq!(percentile(&xs, 50.0), Some(2.5));
+        assert_eq!(percentile(&[], 50.0), None);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), Some(2.0));
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 4.0, 2.0, 8.0, 5.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 4.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 4.0f64).powi(2)).sum::<f64>() / 4.0;
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sliding_window_evicts() {
+        let mut w = SlidingWindow::new(1000.0);
+        w.push(0.0, 1.0);
+        w.push(700.0, 1.0);
+        w.push(1600.0, 1.0);
+        assert_eq!(w.len(), 2); // t=0 evicted by t=1600, t=700 retained
+        assert!((w.rate_per_sec(1600.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sliding_window_rate() {
+        let mut w = SlidingWindow::new(2000.0);
+        for i in 0..10 {
+            w.push(i as f64 * 100.0, 1.0);
+        }
+        assert!((w.rate_per_sec(900.0) - 5.0).abs() < 1e-9);
+    }
+}

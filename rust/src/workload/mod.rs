@@ -1,0 +1,308 @@
+//! Workload trace generators (§8.1, Table 5, Appendix D.1, Figure 9):
+//! Steady (light/medium/heavy), Dynamic (interleaved steady mixes), and
+//! Proprietary (synthetic diurnal/tidal trace reproducing the published
+//! pattern shape — DESIGN.md §1 substitution).
+
+use crate::config::PipelineSpec;
+use crate::profiler::Profile;
+use crate::request::Request;
+use crate::util::Rng;
+
+/// Workload family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    Light,
+    Medium,
+    Heavy,
+    Dynamic,
+    Proprietary,
+}
+
+impl WorkloadKind {
+    pub const ALL: [WorkloadKind; 5] = [
+        WorkloadKind::Light,
+        WorkloadKind::Medium,
+        WorkloadKind::Heavy,
+        WorkloadKind::Dynamic,
+        WorkloadKind::Proprietary,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkloadKind::Light => "light",
+            WorkloadKind::Medium => "medium",
+            WorkloadKind::Heavy => "heavy",
+            WorkloadKind::Dynamic => "dynamic",
+            WorkloadKind::Proprietary => "proprietary",
+        }
+    }
+}
+
+/// Per-shape mix weights for a steady workload, following Table 5's
+/// "k × {...}" compact-weight scheme: light favours the smallest shapes
+/// (weight 2–3), medium the middle, heavy the largest.
+pub fn steady_weights(p: &PipelineSpec, kind: WorkloadKind) -> Vec<f64> {
+    let n = p.shapes.len();
+    // Rank shapes by processing length.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| p.shapes[i].l_d);
+    let mut w = vec![1.0; n];
+    let third = n.div_ceil(3);
+    match kind {
+        WorkloadKind::Light => {
+            for &i in order.iter().take(third) {
+                w[i] = 2.0;
+            }
+        }
+        WorkloadKind::Medium => {
+            for &i in order.iter().skip(third).take(third) {
+                w[i] = 2.0;
+            }
+        }
+        WorkloadKind::Heavy => {
+            for &i in order.iter().rev().take(third) {
+                w[i] = 2.0;
+            }
+        }
+        _ => {}
+    }
+    w
+}
+
+/// A generated trace: arrival-sorted requests.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub kind: WorkloadKind,
+    pub requests: Vec<Request>,
+    pub duration_ms: f64,
+}
+
+/// Trace generator for one pipeline.
+pub struct TraceGen<'a> {
+    pub pipeline: &'a PipelineSpec,
+    pub profile: &'a Profile,
+    /// Arrival-rate multiplier over Table 5's per-model rate.
+    pub rate_scale: f64,
+}
+
+impl<'a> TraceGen<'a> {
+    pub fn new(pipeline: &'a PipelineSpec, profile: &'a Profile) -> Self {
+        TraceGen { pipeline, profile, rate_scale: 1.0 }
+    }
+
+    fn make_request(&self, id: u64, t_ms: f64, shape_idx: usize) -> Request {
+        Request {
+            id,
+            shape_idx,
+            arrival_ms: t_ms,
+            deadline_ms: t_ms + self.profile.slo_ms[shape_idx],
+            batch: 1,
+        }
+    }
+
+    /// Steady Poisson arrivals at the pipeline's rate for `duration_ms`.
+    pub fn steady(&self, kind: WorkloadKind, duration_ms: f64, seed: u64) -> Trace {
+        let weights = steady_weights(self.pipeline, kind);
+        let rate = self.pipeline.rate_req_s * self.rate_scale;
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        let mut reqs = Vec::new();
+        let mut id = 0;
+        loop {
+            t += rng.exponential(rate) * 1000.0;
+            if t >= duration_ms {
+                break;
+            }
+            let shape = rng.categorical(&weights);
+            reqs.push(self.make_request(id, t, shape));
+            id += 1;
+        }
+        Trace { kind, requests: reqs, duration_ms }
+    }
+
+    /// Dynamic workload (Fig 9 left): the time span is divided into
+    /// segments, each drawing from a randomly-chosen steady mix with a
+    /// segment-specific rate tilt.
+    pub fn dynamic(&self, duration_ms: f64, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let segments = 6;
+        let seg_ms = duration_ms / segments as f64;
+        let mut reqs = Vec::new();
+        let mut id = 0;
+        let kinds = [WorkloadKind::Light, WorkloadKind::Medium, WorkloadKind::Heavy];
+        for s in 0..segments {
+            let kind = kinds[rng.below(3)];
+            let weights = steady_weights(self.pipeline, kind);
+            // Rate varies ±40% per segment.
+            let rate = self.pipeline.rate_req_s * self.rate_scale * (0.6 + 0.8 * rng.f64());
+            let mut t = s as f64 * seg_ms;
+            let end = (s + 1) as f64 * seg_ms;
+            loop {
+                t += rng.exponential(rate) * 1000.0;
+                if t >= end {
+                    break;
+                }
+                reqs.push(self.make_request(id, t, rng.categorical(&weights)));
+                id += 1;
+            }
+        }
+        Trace { kind: WorkloadKind::Dynamic, requests: reqs, duration_ms }
+    }
+
+    /// Proprietary trace (Fig 9 right): two-peak diurnal/tidal intensity
+    /// compressed into the horizon, rescaled so the total request count
+    /// matches the corresponding Steady medium trace (Appendix D.1).
+    pub fn proprietary(&self, duration_ms: f64, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let weights = steady_weights(self.pipeline, WorkloadKind::Medium);
+        let base = self.pipeline.rate_req_s * self.rate_scale;
+        // Thinning: intensity(t) has a morning and an evening peak.
+        let intensity = |t: f64| {
+            let x = t / duration_ms; // 0..1 "day"
+            let peak1 = (-((x - 0.35) / 0.10).powi(2)).exp();
+            let peak2 = (-((x - 0.80) / 0.08).powi(2)).exp();
+            0.35 + 1.1 * peak1 + 0.9 * peak2
+        };
+        let max_intensity = 1.45;
+        let mut t = 0.0;
+        let mut reqs = Vec::new();
+        let mut id = 0;
+        loop {
+            t += rng.exponential(base * max_intensity) * 1000.0;
+            if t >= duration_ms {
+                break;
+            }
+            if rng.f64() < intensity(t) / max_intensity {
+                reqs.push(self.make_request(id, t, rng.categorical(&weights)));
+                id += 1;
+            }
+        }
+        // Rescale count to match the steady medium trace (App D.1).
+        let target = (base * duration_ms / 1000.0) as usize;
+        if reqs.len() > target && target > 0 {
+            let keep = target as f64 / reqs.len() as f64;
+            let mut out = Vec::with_capacity(target);
+            for r in reqs {
+                if rng.f64() < keep {
+                    out.push(r);
+                }
+            }
+            reqs = out;
+            for (i, r) in reqs.iter_mut().enumerate() {
+                r.id = i as u64;
+            }
+        }
+        Trace { kind: WorkloadKind::Proprietary, requests: reqs, duration_ms }
+    }
+
+    pub fn generate(&self, kind: WorkloadKind, duration_ms: f64, seed: u64) -> Trace {
+        match kind {
+            WorkloadKind::Dynamic => self.dynamic(duration_ms, seed),
+            WorkloadKind::Proprietary => self.proprietary(duration_ms, seed),
+            k => self.steady(k, duration_ms, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, SolverConstants};
+    use crate::perfmodel::PerfModel;
+
+    fn gen(p: &PipelineSpec) -> (Profile, SolverConstants) {
+        let c = SolverConstants::default();
+        (Profile::build(&PerfModel::new(ClusterSpec::l20_128()), p, &c), c)
+    }
+
+    #[test]
+    fn steady_rate_is_approximately_right() {
+        let p = PipelineSpec::sd3(); // 20 req/s
+        let (profile, _) = gen(&p);
+        let tg = TraceGen::new(&p, &profile);
+        let t = tg.steady(WorkloadKind::Medium, 60_000.0, 1);
+        let rate = t.requests.len() as f64 / 60.0;
+        assert!((rate - 20.0).abs() < 3.0, "rate {rate}");
+    }
+
+    #[test]
+    fn arrivals_sorted_and_within_horizon() {
+        let p = PipelineSpec::flux();
+        let (profile, _) = gen(&p);
+        let tg = TraceGen::new(&p, &profile);
+        for kind in WorkloadKind::ALL {
+            let t = tg.generate(kind, 120_000.0, 7);
+            let mut prev = 0.0;
+            for r in &t.requests {
+                assert!(r.arrival_ms >= prev, "{kind:?} unsorted");
+                assert!(r.arrival_ms < t.duration_ms);
+                assert!(r.deadline_ms > r.arrival_ms);
+                prev = r.arrival_ms;
+            }
+            assert!(!t.requests.is_empty(), "{kind:?} empty");
+        }
+    }
+
+    #[test]
+    fn heavy_mix_skews_to_large_shapes() {
+        let p = PipelineSpec::flux();
+        let (profile, _) = gen(&p);
+        let tg = TraceGen::new(&p, &profile);
+        let mean_l = |t: &Trace| {
+            t.requests.iter().map(|r| p.shapes[r.shape_idx].l_d as f64).sum::<f64>()
+                / t.requests.len() as f64
+        };
+        let light = tg.steady(WorkloadKind::Light, 300_000.0, 3);
+        let heavy = tg.steady(WorkloadKind::Heavy, 300_000.0, 3);
+        assert!(
+            mean_l(&heavy) > 1.3 * mean_l(&light),
+            "heavy {} !>> light {}",
+            mean_l(&heavy),
+            mean_l(&light)
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = PipelineSpec::cogvideo();
+        let (profile, _) = gen(&p);
+        let tg = TraceGen::new(&p, &profile);
+        let a = tg.dynamic(100_000.0, 9);
+        let b = tg.dynamic(100_000.0, 9);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.shape_idx, y.shape_idx);
+        }
+    }
+
+    #[test]
+    fn proprietary_has_tidal_structure() {
+        let p = PipelineSpec::sd3();
+        let (profile, _) = gen(&p);
+        let tg = TraceGen::new(&p, &profile);
+        let t = tg.proprietary(600_000.0, 11);
+        // Peak span (around 35% of the day) must be busier than the trough
+        // (around 5%).
+        let count_in = |lo: f64, hi: f64| {
+            t.requests
+                .iter()
+                .filter(|r| r.arrival_ms >= lo * 600_000.0 && r.arrival_ms < hi * 600_000.0)
+                .count() as f64
+        };
+        let peak = count_in(0.30, 0.40);
+        let trough = count_in(0.0, 0.10);
+        assert!(peak > 1.5 * trough, "peak {peak} trough {trough}");
+    }
+
+    #[test]
+    fn rate_scale_scales_volume() {
+        let p = PipelineSpec::flux();
+        let (profile, _) = gen(&p);
+        let mut tg = TraceGen::new(&p, &profile);
+        let base = tg.steady(WorkloadKind::Medium, 300_000.0, 5).requests.len();
+        tg.rate_scale = 2.0;
+        let doubled = tg.steady(WorkloadKind::Medium, 300_000.0, 5).requests.len();
+        assert!((doubled as f64 / base as f64 - 2.0).abs() < 0.3);
+    }
+}

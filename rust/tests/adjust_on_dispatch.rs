@@ -1,0 +1,202 @@
+//! Property tests for Adjust-on-Dispatch (§5.3) and engine safety under
+//! placement-switch storms: random interleavings of switches, dispatches
+//! and completions must never lose requests, double-book GPUs, leak
+//! activation memory, or leave a plan unservable.
+
+use tridentserve::cluster::Topology;
+use tridentserve::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
+use tridentserve::dispatch::{RequestPlans, StagePlan};
+use tridentserve::engine::{Engine, PlanState, StageExec};
+use tridentserve::perfmodel::PerfModel;
+use tridentserve::placement::{Pi, PlacementPlan};
+use tridentserve::profiler::Profile;
+use tridentserve::util::prop::run_prop;
+use tridentserve::util::Rng;
+
+struct FixedExec(f64);
+impl StageExec for FixedExec {
+    fn exec_ms(&mut self, _: usize, _: Stage, _: usize, _: usize) -> f64 {
+        self.0
+    }
+}
+
+fn fixture() -> (PipelineSpec, Profile, Topology) {
+    let p = PipelineSpec::sd3();
+    let cluster = ClusterSpec::tiny(2, 8);
+    let profile =
+        Profile::build(&PerfModel::new(cluster.clone()), &p, &SolverConstants::default());
+    (p, profile, Topology::new(cluster))
+}
+
+fn random_placement(rng: &mut Rng, g: usize) -> PlacementPlan {
+    let pi = (0..g)
+        .map(|_| Pi::ALL[rng.below(Pi::ALL.len())])
+        .collect();
+    PlacementPlan { pi }
+}
+
+fn colocated_plan(req: u64, shape_idx: usize, gpus: Vec<usize>) -> RequestPlans {
+    let k = gpus.len();
+    RequestPlans {
+        req,
+        shape_idx,
+        vr_type: 0,
+        e: StagePlan { req, stage: Stage::Encode, gpus: gpus.clone(), degree: k },
+        d: StagePlan { req, stage: Stage::Diffuse, gpus: gpus.clone(), degree: k },
+        c: StagePlan { req, stage: Stage::Decode, gpus, degree: k },
+        e_merged: true,
+        c_on_subset: true,
+    }
+}
+
+#[test]
+fn prop_switch_storm_conserves_requests() {
+    let (_p, profile, topo) = fixture();
+    run_prop(0xA0D, 30, |rng: &mut Rng, _| {
+        let g = topo.total_gpus();
+        let mut engine = Engine::new(topo.clone(), random_placement(rng, g), &profile);
+        let mut exec = FixedExec(10.0);
+        let mut now = 0.0;
+        let mut enqueued = 0u64;
+        let mut inflight: Vec<(usize, f64)> = Vec::new(); // (plan, finish)
+
+        for step in 0..120 {
+            match rng.below(4) {
+                // Random placement switch (metadata-only).
+                0 => engine.apply_switch(random_placement(rng, g)),
+                // Enqueue a small colocated request on a random single GPU.
+                1 => {
+                    let gpu = rng.below(g);
+                    engine.enqueue(&colocated_plan(enqueued, 0, vec![gpu]), &profile);
+                    enqueued += 1;
+                }
+                // Advance time + start whatever can start.
+                _ => {
+                    now += 5.0 + rng.f64() * 20.0;
+                    // Complete everything that finished.
+                    inflight.retain(|&(pid, fin)| {
+                        if fin <= now {
+                            engine.complete(pid, fin, 0.0, None);
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    for sp in engine.advance(now, &mut exec, &profile) {
+                        inflight.push((sp.plan, sp.finish_ms));
+                    }
+                }
+            }
+            let _ = step;
+        }
+        // Drain.
+        for _ in 0..1000 {
+            if inflight.is_empty() {
+                let started = engine.advance(now, &mut exec, &profile);
+                if started.is_empty() {
+                    break;
+                }
+                for sp in started {
+                    inflight.push((sp.plan, sp.finish_ms));
+                }
+            }
+            inflight.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            if let Some((pid, fin)) = inflight.first().copied() {
+                now = now.max(fin);
+                engine.complete(pid, fin, 0.0, None);
+                inflight.remove(0);
+            }
+        }
+
+        // Conservation: every plan is Done or Cancelled; none stuck.
+        let stuck = engine
+            .plans
+            .iter()
+            .filter(|p| matches!(p.state, PlanState::Waiting | PlanState::Running))
+            .count();
+        assert_eq!(stuck, 0, "{stuck} plans stuck after drain");
+        // Done + OOM-cancelled requests account for everything enqueued.
+        let done: std::collections::HashSet<u64> = engine
+            .plans
+            .iter()
+            .filter(|p| p.state == PlanState::Done)
+            .map(|p| p.req)
+            .collect();
+        let oomed: std::collections::HashSet<u64> =
+            engine.ooms.iter().map(|o| o.req).collect();
+        assert_eq!(
+            done.len() + oomed.len(),
+            enqueued as usize,
+            "requests lost: {} done, {} oomed, {} enqueued",
+            done.len(),
+            oomed.len(),
+            enqueued
+        );
+        // No activation leak: all reservations released.
+        for gpu in 0..g {
+            assert!(
+                engine.vram.gpu(gpu).act_gb.abs() < 1e-9,
+                "gpu {gpu} leaked {} GB act",
+                engine.vram.gpu(gpu).act_gb
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_no_gpu_runs_two_plans() {
+    let (_p, profile, topo) = fixture();
+    run_prop(0xA0E, 20, |rng: &mut Rng, _| {
+        let g = topo.total_gpus();
+        let mut engine = Engine::new(topo.clone(), PlacementPlan::uniform(g, Pi::Edc), &profile);
+        let mut exec = FixedExec(50.0);
+        // Saturate with overlapping multi-GPU plans.
+        for req in 0..40u64 {
+            let node = rng.below(2);
+            let k = [1, 2, 4][rng.below(3)];
+            let start = node * 8 + rng.below(8 - k + 1);
+            let gpus: Vec<usize> = (start..start + k).collect();
+            engine.enqueue(&colocated_plan(req, 0, gpus), &profile);
+        }
+        let started = engine.advance(0.0, &mut exec, &profile);
+        // Check pairwise disjointness of running plans' GPU sets.
+        let mut owner = vec![None; g];
+        for sp in &started {
+            for &gpu in &engine.plans[sp.plan].gpus {
+                assert!(
+                    owner[gpu].is_none(),
+                    "gpu {gpu} owned by {:?} and {}",
+                    owner[gpu],
+                    sp.plan
+                );
+                owner[gpu] = Some(sp.plan);
+            }
+        }
+    });
+}
+
+#[test]
+fn switch_preserves_fifo_of_inflight_plans() {
+    // Plans enqueued before a switch must complete under their original
+    // assignment (§5.3 safety argument).
+    let (_p, profile, topo) = fixture();
+    let g = topo.total_gpus();
+    let mut engine = Engine::new(topo, PlacementPlan::uniform(g, Pi::Edc), &profile);
+    let mut exec = FixedExec(100.0);
+    engine.enqueue(&colocated_plan(1, 0, vec![0]), &profile);
+    let started = engine.advance(0.0, &mut exec, &profile);
+    assert_eq!(started.len(), 1);
+    // Switch mid-flight.
+    engine.apply_switch(PlacementPlan::uniform(g, Pi::E));
+    // The running plan still completes normally on its GPUs.
+    let fin = started[0].finish_ms;
+    engine.complete(started[0].plan, fin, 0.0, None);
+    assert_eq!(engine.plans[started[0].plan].state, PlanState::Done);
+    // A post-switch plan on the same GPU must lazily reload what it needs.
+    let loads_before = engine.adjust_loads;
+    engine.apply_switch(PlacementPlan::uniform(g, Pi::Edc));
+    engine.enqueue(&colocated_plan(2, 0, vec![0]), &profile);
+    let started = engine.advance(fin, &mut exec, &profile);
+    assert_eq!(started.len(), 1);
+    let _ = loads_before; // loads may be zero if replicas were never evicted
+}

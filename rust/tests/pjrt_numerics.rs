@@ -1,0 +1,108 @@
+//! Integration: the AOT HLO artifacts executed from Rust/PJRT must
+//! reproduce the Python/JAX reference numerics (fixed seed, deterministic
+//! inputs). Golden values were produced by python/compile/model.py with
+//! seed 0 and the exact input constructions below.
+
+use std::path::PathBuf;
+
+use tridentserve::config::Stage;
+use tridentserve::runtime::PjrtRuntime;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn sin_noise(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i as f32) * 0.618).sin() * 0.7).collect()
+}
+
+#[test]
+fn full_pipeline_matches_python_goldens() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = PjrtRuntime::load(
+        &artifacts_dir(),
+        Some(&["encode_b1", "diffuse_r128", "decode_r128"]),
+    )
+    .unwrap();
+
+    // encode(tokens = arange(16) % 512)
+    let tokens: Vec<i32> = (0..16).collect();
+    let (cond, _) = rt.run_encode("encode_b1", &tokens, &[1, 16]).unwrap();
+    assert_eq!(cond.len(), 16 * 64);
+    // LayerNorm output: zero mean / unit variance per token.
+    for t in 0..16 {
+        let row = &cond[t * 64..(t + 1) * 64];
+        let mean: f32 = row.iter().sum::<f32>() / 64.0;
+        let var: f32 = row.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / 64.0;
+        assert!(mean.abs() < 1e-4, "token {t} mean {mean}");
+        assert!((var - 1.0).abs() < 2e-2, "token {t} var {var}");
+    }
+
+    // diffuse(noise = 0.7*sin(0.618*i)) — golden from python (seed 0):
+    // latent absmax = 3.46551, decode absmax = 0.99620, mean|img| = 0.39709.
+    let noise = sin_noise(32 * 32 * 8);
+    let dims = [1i64, 32, 32, 8];
+    let (latent, _) = rt
+        .run_f32("diffuse_r128", &[(&noise, &dims), (&cond, &[1, 16, 64])])
+        .unwrap();
+    let absmax = latent.iter().fold(0f32, |a, &x| a.max(x.abs()));
+    assert!((absmax - 3.46551).abs() < 2e-3, "latent absmax {absmax}");
+
+    let (img, _) = rt.run_f32("decode_r128", &[(&latent, &dims)]).unwrap();
+    assert_eq!(img.len(), 128 * 128 * 3);
+    let absmax = img.iter().fold(0f32, |a, &x| a.max(x.abs()));
+    let meanabs = img.iter().map(|x| x.abs()).sum::<f32>() / img.len() as f32;
+    assert!((absmax - 0.99620).abs() < 2e-3, "img absmax {absmax}");
+    assert!((meanabs - 0.39709).abs() < 2e-3, "img mean|.| {meanabs}");
+}
+
+#[test]
+fn weights_are_not_elided() {
+    // Regression for the constant({...}) elision bug: with zeroed weights
+    // the diffuse artifact degenerates to the identity map.
+    if !have_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::load(&artifacts_dir(), Some(&["encode_b1", "diffuse_r64"])).unwrap();
+    let tokens: Vec<i32> = (0..16).collect();
+    let (cond, _) = rt.run_encode("encode_b1", &tokens, &[1, 16]).unwrap();
+    let noise = sin_noise(16 * 16 * 8);
+    let dims = [1i64, 16, 16, 8];
+    let (latent, _) = rt
+        .run_f32("diffuse_r64", &[(&noise, &dims), (&cond, &[1, 16, 64])])
+        .unwrap();
+    let delta: f32 = latent
+        .iter()
+        .zip(&noise)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(delta > 0.1, "diffuse must transform its input (max delta {delta})");
+}
+
+#[test]
+fn all_resolution_variants_execute() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::load(&artifacts_dir(), Some(&["encode_b1", "diffuse", "decode"])).unwrap();
+    let tokens: Vec<i32> = (0..16).collect();
+    let (cond, _) = rt.run_encode("encode_b1", &tokens, &[1, 16]).unwrap();
+    for res in [64u32, 128, 256] {
+        let side = (res / 4) as usize;
+        let dims = [1i64, side as i64, side as i64, 8];
+        let noise = sin_noise(side * side * 8);
+        let d = rt.stage_artifact(Stage::Diffuse, res).unwrap();
+        let (latent, _) = rt.run_f32(&d, &[(&noise, &dims), (&cond, &[1, 16, 64])]).unwrap();
+        let c = rt.stage_artifact(Stage::Decode, res).unwrap();
+        let (img, _) = rt.run_f32(&c, &[(&latent, &dims)]).unwrap();
+        assert_eq!(img.len(), (res * res * 3) as usize, "res {res}");
+        assert!(img.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,129 @@
+//! Integration: whole-system simulations across policies and pipelines.
+//!
+//! These are behavioural (paper-shape) tests: TridentServe must beat the
+//! static baseline, never OOM, and exercise placement switching under
+//! dynamic load. Short traces keep runtime bounded.
+
+use tridentserve::harness::Setup;
+use tridentserve::request::Outcome;
+use tridentserve::util::prop::run_prop;
+use tridentserve::util::Rng;
+use tridentserve::workload::WorkloadKind;
+
+const THREE_MIN: f64 = 3.0 * 60_000.0;
+
+#[test]
+fn trident_never_ooms_anywhere() {
+    for pipeline in ["flux", "hunyuan"] {
+        let setup = Setup::new(pipeline, 128);
+        for wk in [WorkloadKind::Heavy, WorkloadKind::Dynamic] {
+            let m = setup.run("trident", wk, THREE_MIN, 1);
+            assert_eq!(m.summary().oom, 0, "{pipeline}/{}", wk.label());
+        }
+    }
+}
+
+#[test]
+fn b1_ooms_on_flux_but_not_sd3() {
+    let flux = Setup::new("flux", 128);
+    let m = flux.run("b1", WorkloadKind::Heavy, THREE_MIN, 1);
+    assert!(m.summary().oom > 0, "B1 must OOM on heavy flux");
+
+    let sd3 = Setup::new("sd3", 128);
+    let m = sd3.run("b1", WorkloadKind::Light, 60_000.0, 1);
+    assert_eq!(m.summary().oom, 0, "B1 must not OOM on sd3");
+}
+
+#[test]
+fn trident_beats_b1_on_medium_flux() {
+    let setup = Setup::new("flux", 128);
+    let t = setup.run("trident", WorkloadKind::Medium, THREE_MIN, 2).summary();
+    let b = setup.run("b1", WorkloadKind::Medium, THREE_MIN, 2).summary();
+    assert!(
+        t.slo_attainment >= b.slo_attainment,
+        "trident {} < b1 {}",
+        t.slo_attainment,
+        b.slo_attainment
+    );
+}
+
+#[test]
+fn dynamic_workload_triggers_switches() {
+    let setup = Setup::new("flux", 128);
+    let m = setup.run("trident", WorkloadKind::Dynamic, 8.0 * 60_000.0, 3);
+    assert!(
+        !m.switch_events.is_empty(),
+        "dynamic trace should trigger at least one placement switch"
+    );
+}
+
+#[test]
+fn woswitch_never_switches() {
+    let setup = Setup::new("flux", 128);
+    let m = setup.run("trident-woswitch", WorkloadKind::Dynamic, 5.0 * 60_000.0, 3);
+    assert!(m.switch_events.is_empty());
+}
+
+#[test]
+fn all_requests_accounted_for() {
+    // Conservation: every arrival ends as exactly one completion record.
+    let setup = Setup::new("cogvideo", 128);
+    let tg = tridentserve::workload::TraceGen {
+        pipeline: &setup.pipeline,
+        profile: &setup.profile,
+        rate_scale: 1.0,
+    };
+    let trace = tg.generate(WorkloadKind::Medium, THREE_MIN, 4);
+    let n_arrivals = trace.requests.len();
+    let m = setup.run("trident", WorkloadKind::Medium, THREE_MIN, 4);
+    assert_eq!(m.summary().n, n_arrivals, "requests lost or duplicated");
+}
+
+#[test]
+fn latency_never_below_service_time() {
+    let setup = Setup::new("flux", 128);
+    let m = setup.run("trident", WorkloadKind::Light, THREE_MIN, 5);
+    for c in &m.completions {
+        if c.outcome == Outcome::Completed {
+            let min_service = tridentserve::perfmodel::DEGREES
+                .iter()
+                .map(|&k| {
+                    setup
+                        .profile
+                        .latency_ms(c.shape_idx, tridentserve::config::Stage::Diffuse, k)
+                })
+                .fold(f64::MAX, f64::min);
+            assert!(
+                c.latency_ms() > min_service * 0.5,
+                "impossible latency {} for shape {}",
+                c.latency_ms(),
+                c.shape_idx
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sims_are_deterministic_per_seed() {
+    run_prop(0x5EED, 3, |rng: &mut Rng, _| {
+        let seed = rng.next_u64() % 1000;
+        let setup = Setup::new("flux", 128);
+        let a = setup.run("trident", WorkloadKind::Medium, 60_000.0, seed).summary();
+        let b = setup.run("trident", WorkloadKind::Medium, 60_000.0, seed).summary();
+        assert_eq!(a.n, b.n);
+        assert!((a.slo_attainment - b.slo_attainment).abs() < 1e-12);
+        assert!((a.mean_latency_ms - b.mean_latency_ms).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn stage_level_baselines_survive_heavy_hunyuan() {
+    let setup = Setup::new("hunyuan", 128);
+    for p in ["b5", "b6"] {
+        let m = setup.run(p, WorkloadKind::Heavy, THREE_MIN, 6);
+        let s = m.summary();
+        assert!(s.n > 0);
+        // Disaggregated placements eliminate co-location OOMs (§8.2).
+        assert_eq!(s.oom, 0, "{p} must not OOM");
+    }
+}

@@ -1,0 +1,84 @@
+//! Integration: lossless sequence parallelism over the AOT artifacts.
+//!
+//! The `attn_shard_r128_k{K}_s{S}` artifacts compute Ulysses head-shards of
+//! the first DiT block's attention. Executing all K shards and summing
+//! their outputs must reproduce the unsharded (k=1) result exactly (up to
+//! fp addition order) — the numerical proof that degree-k dispatch plans
+//! are lossless (§3 / DESIGN.md). Mirrors python/tests/test_shard_equivalence.py.
+
+use std::path::PathBuf;
+
+use tridentserve::runtime::PjrtRuntime;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn inputs() -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n = 256usize; // dit tokens at r128
+    let pd = 8 * 2 * 2;
+    let x: Vec<f32> = (0..n * pd).map(|i| ((i as f32) * 0.37).cos() * 0.5).collect();
+    let cond: Vec<f32> = (0..16 * 64).map(|i| ((i as f32) * 0.11).sin()).collect();
+    let t = vec![0.5f32];
+    (x, cond, t)
+}
+
+#[test]
+fn shard_sum_equals_unsharded() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = PjrtRuntime::load(&dir, Some(&["attn_shard"])).unwrap();
+    let (x, cond, t) = inputs();
+    let x_dims = [1i64, 256, 32];
+    let c_dims = [1i64, 16, 64];
+    let t_dims = [1i64];
+
+    let run = |name: &str| -> Vec<f32> {
+        rt.run_f32(name, &[(&x, &x_dims), (&cond, &c_dims), (&t, &t_dims)])
+            .unwrap()
+            .0
+    };
+
+    let full = run("attn_shard_r128_k1_s0");
+    assert!(full.iter().any(|&v| v.abs() > 1e-3), "degenerate full output");
+
+    for degree in [2usize, 4] {
+        let mut sum = vec![0f32; full.len()];
+        for shard in 0..degree {
+            let part = run(&format!("attn_shard_r128_k{degree}_s{shard}"));
+            assert_eq!(part.len(), sum.len());
+            for (acc, v) in sum.iter_mut().zip(&part) {
+                *acc += v;
+            }
+        }
+        let max_err = sum
+            .iter()
+            .zip(&full)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 2e-4, "degree {degree}: max err {max_err}");
+    }
+}
+
+#[test]
+fn shards_are_distinct() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let rt = PjrtRuntime::load(&dir, Some(&["attn_shard_r128_k2"])).unwrap();
+    let (x, cond, t) = inputs();
+    let x_dims = [1i64, 256, 32];
+    let run = |name: &str| -> Vec<f32> {
+        rt.run_f32(name, &[(&x, &x_dims), (&cond, &[1, 16, 64]), (&t, &[1])])
+            .unwrap()
+            .0
+    };
+    let s0 = run("attn_shard_r128_k2_s0");
+    let s1 = run("attn_shard_r128_k2_s1");
+    let max_delta = s0.iter().zip(&s1).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    assert!(max_delta > 1e-4, "shards must compute different head groups");
+}
