@@ -12,7 +12,7 @@
 use tridentserve::server::{serve, LiveConfig};
 use tridentserve::workload::WorkloadKind;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tridentserve::util::error::Result<()> {
     let mut cfg = LiveConfig {
         workers: 4,
         duration_ms: 20_000.0,
@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     println!("p95 latency    : {:.0} ms", s.p95_latency_ms);
     println!("VR distribution: {:?}", report.metrics.vr_distribution());
     if report.served == 0 {
-        anyhow::bail!("no requests served — check artifacts");
+        tridentserve::bail!("no requests served — check artifacts");
     }
     println!("\ne2e_serving OK");
     Ok(())

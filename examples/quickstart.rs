@@ -11,7 +11,7 @@ use std::path::Path;
 use tridentserve::config::Stage;
 use tridentserve::runtime::PjrtRuntime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tridentserve::util::error::Result<()> {
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("artifacts not built — run `make artifacts` first");

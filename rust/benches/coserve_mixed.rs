@@ -1,0 +1,108 @@
+//! Co-serving bench: dynamic cluster arbiter vs static partition on mixed
+//! Sd3+Flux traces, sweeping the magnitude of a halftime load flip. The
+//! claim under test: the arbiter matches the static split when load is
+//! stationary (shift 1x) and pulls ahead as the shift grows, because a
+//! static average-sized partition is overloaded on one side of the flip.
+//!
+//! Environment knobs: COSERVE_BENCH_MINUTES (default 8), COSERVE_BENCH_SEED
+//! (default 0).
+
+use tridentserve::baselines::StaticPartition;
+use tridentserve::config::ClusterSpec;
+use tridentserve::coserve::{
+    run_coserve, CoServeConfig, ClusterArbiter, PipelineSetup,
+};
+use tridentserve::workload::{mixed, LoadShape, MixedSpec, WorkloadKind};
+
+fn main() {
+    let minutes: f64 = std::env::var("COSERVE_BENCH_MINUTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8.0);
+    let seed: u64 = std::env::var("COSERVE_BENCH_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let duration_ms = minutes * 60_000.0;
+    let t0 = std::time::Instant::now();
+
+    let cluster = ClusterSpec::l20(16);
+    let sd3 = PipelineSetup::new("sd3", &cluster);
+    let flux = PipelineSetup::new("flux", &cluster);
+    let setups = [sd3, flux];
+
+    println!(
+        "=== coserve_mixed: sd3+flux on {} GPUs, {minutes:.0}-min traces, seed {seed} ===\n",
+        cluster.total_gpus()
+    );
+    println!(
+        "{:>6} {:>10} {:>10} {:>10} {:>10} {:>8} {:>7}",
+        "shift", "arb-slo", "stat-slo", "arb-p95s", "stat-p95s", "arbs", "moved"
+    );
+
+    let mut stationary_gap = 0.0f64;
+    let mut shifted_gain = f64::NEG_INFINITY;
+    for &shift in &[1.0f64, 2.0, 4.0] {
+        // Opposed halftime flip: sd3 goes hi->lo, flux lo->hi. shift=1 is
+        // stationary (both flat at their mean).
+        let mean = 0.95f64;
+        let hi = mean * shift.sqrt();
+        let lo = mean / shift.sqrt();
+        let specs = [
+            MixedSpec {
+                pipeline: &setups[0].pipeline,
+                profile: &setups[0].profile,
+                kind: WorkloadKind::Medium,
+                rate_scale: 0.45,
+                load: LoadShape::Step { at: 0.5, before: hi, after: lo },
+            },
+            MixedSpec {
+                pipeline: &setups[1].pipeline,
+                profile: &setups[1].profile,
+                kind: WorkloadKind::Medium,
+                rate_scale: 0.45,
+                load: LoadShape::Step { at: 0.5, before: lo, after: hi },
+            },
+        ];
+        let trace = mixed(&specs, duration_ms, seed);
+        let cfg = CoServeConfig { seed, ..Default::default() };
+
+        let mut arbiter = ClusterArbiter::new(cluster.gpus_per_node);
+        let dynamic = run_coserve(&setups, &cluster, &mut arbiter, &trace, &cfg);
+        let mut fixed = StaticPartition::new();
+        let fixed_report = run_coserve(&setups, &cluster, &mut fixed, &trace, &cfg);
+
+        let p95 = |r: &tridentserve::coserve::CoServeReport| {
+            r.lanes.iter().map(|l| l.metrics.p95_latency_ms()).fold(0.0f64, f64::max) / 1000.0
+        };
+        let (a, s) = (dynamic.aggregate_slo(), fixed_report.aggregate_slo());
+        println!(
+            "{:>5.0}x {:>10.3} {:>10.3} {:>10.1} {:>10.1} {:>8} {:>7}",
+            shift,
+            a,
+            s,
+            p95(&dynamic),
+            p95(&fixed_report),
+            dynamic.arbitrations,
+            dynamic.moved_gpus,
+        );
+        assert_eq!(dynamic.vram_violations, 0);
+        assert_eq!(fixed_report.vram_violations, 0);
+        if shift == 1.0 {
+            stationary_gap = s - a;
+        } else {
+            shifted_gain = shifted_gain.max(a - s);
+        }
+    }
+
+    println!("\nclaims:");
+    println!(
+        "  stationary load: arbiter within 0.05 SLO of static (gap {stationary_gap:+.3}) -> {}",
+        if stationary_gap <= 0.05 { "OK" } else { "VIOLATED" }
+    );
+    println!(
+        "  shifted load: arbiter gains up to {shifted_gain:+.3} aggregate SLO over static -> {}",
+        if shifted_gain >= -0.02 { "OK" } else { "VIOLATED" }
+    );
+    println!("\ncoserve_mixed done in {:.1}s", t0.elapsed().as_secs_f64());
+}

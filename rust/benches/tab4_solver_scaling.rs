@@ -47,6 +47,7 @@ fn main() {
                     let shape_idx = rng.below(pipeline.shapes.len());
                     Request {
                         id: (trial * 10_000 + i) as u64,
+                        pipeline_id: 0,
                         shape_idx,
                         arrival_ms: 0.0,
                         deadline_ms: profile.slo_ms[shape_idx],

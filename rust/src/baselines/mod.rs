@@ -551,6 +551,55 @@ impl ServingPolicy for BStageLevel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Co-serving baseline: static demand-proportional GPU partition
+// ---------------------------------------------------------------------------
+
+/// The static-partition co-serving baseline: nodes are split once,
+/// proportionally to each pipeline's average GPU-time demand, and never
+/// move again — what a cluster operator gets from fixed per-model quotas.
+/// The gap between this and [`crate::coserve::ClusterArbiter`] is the
+/// measurable value of dynamic re-arbitration.
+pub struct StaticPartition {
+    pub min_nodes: usize,
+}
+
+impl StaticPartition {
+    pub fn new() -> Self {
+        StaticPartition { min_nodes: 1 }
+    }
+}
+
+impl Default for StaticPartition {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl crate::coserve::ArbiterPolicy for StaticPartition {
+    fn name(&self) -> String {
+        "static-partition".into()
+    }
+
+    fn initial(
+        &mut self,
+        signals: &[crate::coserve::LaneSignal],
+        total_nodes: usize,
+    ) -> Vec<usize> {
+        crate::coserve::demand_proportional(signals, total_nodes, self.min_nodes)
+    }
+
+    fn rearbitrate(
+        &mut self,
+        _now_ms: f64,
+        _signals: &[crate::coserve::LaneSignal],
+        _current: &[usize],
+        _total_nodes: usize,
+    ) -> Option<Vec<usize>> {
+        None
+    }
+}
+
 /// Build every baseline for a pipeline (convenience for the benches).
 pub fn all_baselines(ctx: &BaseCtx, g: usize) -> Vec<Box<dyn ServingPolicy>> {
     vec![
@@ -662,6 +711,7 @@ mod tests {
         let mut pending: Vec<Request> = (0..3)
             .map(|i| Request {
                 id: i,
+                pipeline_id: 0,
                 shape_idx: 0,
                 arrival_ms: 0.0,
                 deadline_ms: 1e12,
@@ -674,11 +724,30 @@ mod tests {
     }
 
     #[test]
+    fn static_partition_never_rearbitrates() {
+        use crate::coserve::{ArbiterPolicy, LaneSignal};
+        let sig = |demand: f64, per_gpu: f64| LaneSignal {
+            demand_rps: demand,
+            per_gpu_rps: per_gpu,
+            backlog: 0,
+            gpus: 0,
+            trigger: true, // even under a screaming trigger
+        };
+        let mut sp = StaticPartition::new();
+        let alloc = sp.initial(&[sig(10.0, 0.2), sig(1.0, 0.02)], 16);
+        assert_eq!(alloc.iter().sum::<usize>(), 16);
+        assert!(alloc.iter().all(|&x| x >= 1));
+        assert!(sp
+            .rearbitrate(60_000.0, &[sig(0.1, 0.2), sig(30.0, 0.02)], &alloc, 16)
+            .is_none());
+    }
+
+    #[test]
     fn srtf_prioritises_short_requests() {
         let c = ctx(PipelineSpec::flux());
         let pending: Vec<Request> = vec![
-            Request { id: 0, shape_idx: 6, arrival_ms: 0.0, deadline_ms: 1e12, batch: 1 },
-            Request { id: 1, shape_idx: 0, arrival_ms: 0.0, deadline_ms: 1e12, batch: 1 },
+            Request { id: 0, pipeline_id: 0, shape_idx: 6, arrival_ms: 0.0, deadline_ms: 1e12, batch: 1 },
+            Request { id: 1, pipeline_id: 0, shape_idx: 0, arrival_ms: 0.0, deadline_ms: 1e12, batch: 1 },
         ];
         let order = c.srtf_order(&pending, 0.0);
         assert_eq!(order[0], 1, "short request must come first");

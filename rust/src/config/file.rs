@@ -19,7 +19,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 
 use super::{ClusterSpec, SolverConstants};
 

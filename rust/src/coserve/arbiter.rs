@@ -1,0 +1,298 @@
+//! The cluster arbiter: decides how many whole nodes each co-served
+//! pipeline owns, by solving a cluster-level allocation problem over
+//! per-pipeline candidate allocations (an [`Mckp`] instance — the same
+//! branch-and-bound substrate the dispatch ILP uses).
+//!
+//! Granularity is whole nodes: the per-pipeline Orchestrator packs
+//! placements per machine (`PackPerMachine`), so handing partial nodes
+//! across pipelines would break its SP-degree reachability assumptions.
+
+use crate::ilp::{Item, Mckp};
+
+/// What the arbiter knows about one pipeline lane when (re)allocating.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneSignal {
+    /// Observed (or, before any observation, estimated) arrival rate, req/s.
+    pub demand_rps: f64,
+    /// Estimated per-GPU service rate for this pipeline's request mix,
+    /// req/s per GPU (from `Orchestrator::estimated_rates` — the ⟨EDC⟩
+    /// entry is 1 / E[GPU-seconds per request]).
+    pub per_gpu_rps: f64,
+    /// Requests waiting for dispatch right now.
+    pub backlog: usize,
+    /// GPUs currently owned by the lane.
+    pub gpus: usize,
+    /// True when the lane's monitor switch-trigger fired (stage-rate
+    /// imbalance) or its backlog exceeds the congestion threshold.
+    pub trigger: bool,
+}
+
+/// Cluster-level allocation policy: maps lane signals to a node allocation.
+pub trait ArbiterPolicy {
+    fn name(&self) -> String;
+
+    /// Bootstrap allocation; must return one entry per lane, each >= 1,
+    /// summing to `total_nodes`.
+    fn initial(&mut self, signals: &[LaneSignal], total_nodes: usize) -> Vec<usize>;
+
+    /// Monitor-tick reconsideration: a new allocation to drain toward, or
+    /// None to keep the current one. Same contract as [`Self::initial`].
+    fn rearbitrate(
+        &mut self,
+        now_ms: f64,
+        signals: &[LaneSignal],
+        current: &[usize],
+        total_nodes: usize,
+    ) -> Option<Vec<usize>>;
+}
+
+/// Raise every lane to `min_nodes` by taking single nodes from the largest
+/// holders. No-op when every lane already meets the floor.
+pub fn enforce_floor(out: &mut [usize], min_nodes: usize) {
+    loop {
+        let Some(i) = out.iter().position(|&x| x < min_nodes) else { break };
+        let donor = (0..out.len())
+            .filter(|&d| out[d] > min_nodes)
+            .max_by_key(|&d| out[d]);
+        let Some(d) = donor else { break };
+        out[d] -= 1;
+        out[i] += 1;
+    }
+}
+
+/// Demand-proportional node split (the static-partition baseline's sizing
+/// rule): share nodes by GPU-time load `demand / per_gpu_rate`, floor each
+/// lane at `min_nodes`, hand remainders to the largest fractional parts.
+pub fn demand_proportional(
+    signals: &[LaneSignal],
+    total_nodes: usize,
+    min_nodes: usize,
+) -> Vec<usize> {
+    let n = signals.len();
+    let min_nodes = min_nodes.max(1);
+    assert!(n > 0, "no lanes");
+    assert!(total_nodes >= n * min_nodes, "cluster too small: {total_nodes} nodes for {n} lanes");
+    let loads: Vec<f64> = signals
+        .iter()
+        .map(|s| (s.demand_rps / s.per_gpu_rps.max(1e-9)).max(1e-9))
+        .collect();
+    let total: f64 = loads.iter().sum();
+    let ideal: Vec<f64> = loads.iter().map(|l| l / total * total_nodes as f64).collect();
+    let mut out: Vec<usize> = ideal.iter().map(|x| x.floor() as usize).collect();
+    let rem = total_nodes - out.iter().sum::<usize>();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let fa = ideal[a] - out[a] as f64;
+        let fb = ideal[b] - out[b] as f64;
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    for &i in order.iter().take(rem) {
+        out[i] += 1;
+    }
+    enforce_floor(&mut out, min_nodes);
+    debug_assert_eq!(out.iter().sum::<usize>(), total_nodes);
+    out
+}
+
+/// The ILP cluster arbiter: candidate allocations per pipeline scored by
+/// SLO-weighted served rate, solved exactly by the MCKP branch-and-bound,
+/// re-arbitrating when any lane's switch trigger fires persistently.
+pub struct ClusterArbiter {
+    pub gpus_per_node: usize,
+    /// Per-lane node floor (>= 1).
+    pub min_nodes: usize,
+    /// Minimum time between re-arbitrations (drain churn is not free).
+    pub cooldown_ms: f64,
+    /// Consecutive triggered monitor ticks required before re-arbitrating
+    /// (transient bursts clear on their own).
+    pub trigger_streak: usize,
+    streak: usize,
+    last_ms: f64,
+}
+
+impl ClusterArbiter {
+    pub fn new(gpus_per_node: usize) -> Self {
+        ClusterArbiter {
+            gpus_per_node,
+            min_nodes: 1,
+            cooldown_ms: 60_000.0,
+            trigger_streak: 2,
+            streak: 0,
+            last_ms: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Profit of handing `nodes` nodes to a lane: served rate (capped by
+    /// demand) at the SLO reward scale, plus a small headroom term so spare
+    /// capacity is still worth distributing (burst absorption).
+    fn profit(&self, sig: &LaneSignal, nodes: usize) -> f64 {
+        let cap = nodes as f64 * self.gpus_per_node as f64 * sig.per_gpu_rps.max(1e-9);
+        1000.0 * sig.demand_rps.min(cap) + 1e-3 * cap
+    }
+
+    /// Solve the cluster allocation problem for the given signals.
+    pub fn solve(&self, signals: &[LaneSignal], total_nodes: usize) -> Vec<usize> {
+        let n = signals.len();
+        let min_nodes = self.min_nodes.max(1);
+        assert!(n > 0, "no lanes");
+        assert!(total_nodes >= n * min_nodes, "cluster too small");
+        // One group per pipeline; one item per candidate node count. Leave
+        // at least the floor for every other lane.
+        let max_nodes = total_nodes - (n - 1) * min_nodes;
+        let mut items = Vec::new();
+        for (p, sig) in signals.iter().enumerate() {
+            for nodes in min_nodes..=max_nodes {
+                items.push(Item {
+                    group: p,
+                    profit: self.profit(sig, nodes),
+                    resource: 0,
+                    weight: nodes as u64,
+                });
+            }
+        }
+        let problem = Mckp {
+            n_groups: n,
+            capacities: vec![total_nodes as u64],
+            items: items.clone(),
+        };
+        let sol = problem.solve(20.0);
+        let mut out: Vec<usize> = (0..n)
+            .map(|p| sol.chosen[p].map(|i| items[i].weight as usize).unwrap_or(0))
+            .collect();
+        enforce_floor(&mut out, min_nodes);
+        // Distribute any leftover nodes by marginal served-rate value.
+        let mut left = total_nodes.saturating_sub(out.iter().sum::<usize>());
+        while left > 0 {
+            let mut best = 0usize;
+            let mut best_v = f64::NEG_INFINITY;
+            for (p, sig) in signals.iter().enumerate() {
+                let v = self.profit(sig, out[p] + 1) - self.profit(sig, out[p]);
+                if v > best_v {
+                    best_v = v;
+                    best = p;
+                }
+            }
+            out[best] += 1;
+            left -= 1;
+        }
+        debug_assert_eq!(out.iter().sum::<usize>(), total_nodes);
+        out
+    }
+}
+
+impl ArbiterPolicy for ClusterArbiter {
+    fn name(&self) -> String {
+        "cluster-arbiter".into()
+    }
+
+    fn initial(&mut self, signals: &[LaneSignal], total_nodes: usize) -> Vec<usize> {
+        self.solve(signals, total_nodes)
+    }
+
+    fn rearbitrate(
+        &mut self,
+        now_ms: f64,
+        signals: &[LaneSignal],
+        current: &[usize],
+        total_nodes: usize,
+    ) -> Option<Vec<usize>> {
+        if signals.iter().any(|s| s.trigger) {
+            self.streak += 1;
+        } else {
+            self.streak = 0;
+        }
+        if self.streak < self.trigger_streak {
+            return None;
+        }
+        if now_ms - self.last_ms < self.cooldown_ms {
+            return None;
+        }
+        let target = self.solve(signals, total_nodes);
+        if target == current {
+            return None;
+        }
+        self.streak = 0;
+        self.last_ms = now_ms;
+        Some(target)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(demand: f64, per_gpu: f64) -> LaneSignal {
+        LaneSignal { demand_rps: demand, per_gpu_rps: per_gpu, backlog: 0, gpus: 0, trigger: false }
+    }
+
+    #[test]
+    fn solve_covers_cluster_exactly() {
+        let arb = ClusterArbiter::new(8);
+        let out = arb.solve(&[sig(10.0, 0.2), sig(1.0, 0.02)], 16);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out.iter().sum::<usize>(), 16);
+        assert!(out.iter().all(|&x| x >= 1));
+    }
+
+    #[test]
+    fn solve_tracks_demand_shift() {
+        let arb = ClusterArbiter::new(8);
+        let before = arb.solve(&[sig(12.0, 0.2), sig(0.2, 0.02)], 16);
+        let after = arb.solve(&[sig(2.0, 0.2), sig(1.6, 0.02)], 16);
+        // Lane 1's demand octupled while lane 0's collapsed: it must gain nodes.
+        assert!(after[1] > before[1], "before {before:?} after {after:?}");
+        assert_eq!(after.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn solve_respects_floor_under_zero_demand() {
+        let arb = ClusterArbiter::new(8);
+        let out = arb.solve(&[sig(0.0, 0.2), sig(50.0, 0.02)], 16);
+        assert!(out[0] >= 1, "{out:?}");
+        assert_eq!(out.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn demand_proportional_invariants() {
+        for total in [2usize, 3, 7, 16, 33] {
+            let out = demand_proportional(&[sig(4.0, 0.1), sig(4.0, 0.01)], total, 1);
+            assert_eq!(out.iter().sum::<usize>(), total, "{out:?}");
+            assert!(out.iter().all(|&x| x >= 1));
+            // Lane 1 is 10x costlier per request at equal demand: it must
+            // receive at least as many nodes whenever there is room.
+            if total >= 4 {
+                assert!(out[1] >= out[0], "{out:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rearbitrate_needs_persistent_trigger_and_cooldown() {
+        let mut arb = ClusterArbiter::new(8);
+        arb.cooldown_ms = 10_000.0;
+        arb.trigger_streak = 2;
+        let quiet = [sig(10.0, 0.2), sig(1.0, 0.02)];
+        let mut loud = quiet;
+        loud[1].trigger = true;
+        loud[1].demand_rps = 3.0;
+        let current = arb.solve(&quiet, 16);
+        // First triggered tick: streak not yet met.
+        assert!(arb.rearbitrate(1000.0, &loud, &current, 16).is_none());
+        // Second: fires (cooldown satisfied — never fired before).
+        let new = arb.rearbitrate(6000.0, &loud, &current, 16);
+        assert!(new.is_some());
+        // Immediately after: cooldown blocks.
+        assert!(arb.rearbitrate(7000.0, &loud, &new.clone().unwrap(), 16).is_none());
+        // Quiet tick resets the streak.
+        assert!(arb.rearbitrate(60_000.0, &quiet, &new.unwrap(), 16).is_none());
+    }
+
+    #[test]
+    fn enforce_floor_moves_from_largest() {
+        let mut out = [0usize, 10, 2];
+        enforce_floor(&mut out, 1);
+        assert_eq!(out.iter().sum::<usize>(), 12);
+        assert!(out.iter().all(|&x| x >= 1));
+        assert_eq!(out[1], 9);
+    }
+}

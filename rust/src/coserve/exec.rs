@@ -1,0 +1,740 @@
+//! The co-serving executor: one discrete-event loop driving N pipeline
+//! *lanes* — each a full TridentServe stack (policy + engine + monitor +
+//! metrics) over its own node-aligned GPU partition — plus the cluster
+//! arbiter that moves nodes between lanes.
+//!
+//! GPU handoff is drain-then-reassign: when the arbiter emits a new
+//! allocation, every lane whose node count changes stops dispatching
+//! (arrivals keep queueing in its pending list), its in-flight plans run to
+//! completion under the old partition, and only then is its engine rebuilt
+//! on the new partition. Unchanged lanes serve uninterrupted throughout.
+//! This conserves requests exactly: nothing in flight is cancelled, nothing
+//! pending is dropped, and no plan can execute on two partitions.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
+use crate::coserve::arbiter::{ArbiterPolicy, LaneSignal};
+use crate::dispatch::{ClusterView, RequestPlans};
+use crate::engine::{Engine, PlanId, PlanState};
+use crate::metrics::Metrics;
+use crate::monitor::Monitor;
+use crate::perfmodel::PerfModel;
+use crate::placement::{Orchestrator, Pi};
+use crate::profiler::Profile;
+use crate::request::{Completion, Outcome, Request, RequestId};
+use crate::sim::{ServingPolicy, SimExec, TridentPolicy};
+use crate::util::stats::SlidingWindow;
+use crate::util::Rng;
+use crate::workload::MixedTrace;
+
+/// Everything the executor needs to serve one pipeline.
+pub struct PipelineSetup {
+    pub pipeline: PipelineSpec,
+    pub profile: Profile,
+    pub consts: SolverConstants,
+}
+
+impl PipelineSetup {
+    /// Build a setup by pipeline name against the shared cluster's per-GPU
+    /// characteristics (the profile depends only on those, not on how many
+    /// nodes the lane currently owns).
+    pub fn new(pipeline_name: &str, cluster: &ClusterSpec) -> Self {
+        let pipeline = PipelineSpec::by_name(pipeline_name)
+            .unwrap_or_else(|| panic!("unknown pipeline {pipeline_name}"));
+        let consts = SolverConstants::default();
+        let profile = Profile::build(&PerfModel::new(cluster.clone()), &pipeline, &consts);
+        PipelineSetup { pipeline, profile, consts }
+    }
+}
+
+/// Executor parameters (mirrors `sim::SimConfig`, plus arbiter knobs).
+#[derive(Clone, Debug)]
+pub struct CoServeConfig {
+    pub seed: u64,
+    /// Dispatcher tick period (every lane ticks together).
+    pub tick_ms: f64,
+    /// Monitor/arbiter period.
+    pub monitor_ms: f64,
+    /// Span length for per-lane throughput series.
+    pub span_ms: f64,
+    /// Keep simulating past the trace end up to this factor to drain.
+    pub drain_factor: f64,
+    /// Multiplicative execution-time jitter std-dev.
+    pub jitter: f64,
+    /// Sliding window for observed per-lane arrival rates.
+    pub demand_window_ms: f64,
+    /// A lane counts as congested when its backlog exceeds this fraction of
+    /// its GPU count (feeds the arbiter's re-arbitration trigger).
+    pub backlog_trigger_per_gpu: f64,
+}
+
+impl Default for CoServeConfig {
+    fn default() -> Self {
+        CoServeConfig {
+            seed: 0,
+            tick_ms: 100.0,
+            monitor_ms: 5_000.0,
+            span_ms: 60_000.0,
+            drain_factor: 2.0,
+            jitter: 0.03,
+            demand_window_ms: 60_000.0,
+            backlog_trigger_per_gpu: 0.25,
+        }
+    }
+}
+
+/// One lane's share of the final report.
+pub struct LaneReport {
+    pub pipeline: String,
+    pub nodes_final: usize,
+    pub metrics: Metrics,
+}
+
+/// Result of a co-serving run.
+pub struct CoServeReport {
+    pub arbiter: String,
+    pub lanes: Vec<LaneReport>,
+    /// Re-arbitrations actually applied (drain completed, nodes moved).
+    pub arbitrations: usize,
+    /// GPUs that changed owner across all re-arbitrations.
+    pub moved_gpus: usize,
+    /// VRAM-ledger invariant violations observed at drain points and at the
+    /// end of the run (activation reservations not released, or usage over
+    /// capacity). Always 0 unless the engine leaks.
+    pub vram_violations: usize,
+}
+
+impl CoServeReport {
+    /// SLO attainment over every request of every lane.
+    pub fn aggregate_slo(&self) -> f64 {
+        let total: usize = self.lanes.iter().map(|l| l.metrics.completions.len()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let on_time: usize = self
+            .lanes
+            .iter()
+            .map(|l| l.metrics.completions.iter().filter(|c| c.on_time()).count())
+            .sum();
+        on_time as f64 / total as f64
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.lanes.iter().map(|l| l.metrics.completions.len()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event machinery (same shape as sim::run_sim, with lane-tagged events)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKind {
+    /// A plan finished on lane `lane`'s engine of generation `gen`
+    /// (generations increment on rebuild, making stale events inert).
+    PlanDone { lane: usize, gen: u64, plan: PlanId },
+    Arrival(usize),
+    Tick,
+    MonitorTick,
+}
+
+#[derive(PartialEq)]
+struct Ev(f64, u64, EventKind);
+
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap().then(self.1.cmp(&other.1))
+    }
+}
+
+struct Prog {
+    shape_idx: usize,
+    arrival_ms: f64,
+    deadline_ms: f64,
+    vr_type: usize,
+    plan_chain: Vec<PlanId>,
+    done_plans: usize,
+    stage_ms: [f64; 3],
+}
+
+// ---------------------------------------------------------------------------
+// Lane: one pipeline's full serving stack over its partition
+// ---------------------------------------------------------------------------
+
+struct Lane {
+    pipeline: PipelineSpec,
+    profile: Profile,
+    consts: SolverConstants,
+    /// Per-GPU characteristics template; `nodes` scales it per partition.
+    template: ClusterSpec,
+    nodes: usize,
+    policy: TridentPolicy,
+    engine: Engine,
+    monitor: Monitor,
+    model: PerfModel,
+    metrics: Metrics,
+    pending: Vec<Request>,
+    progress: HashMap<RequestId, Prog>,
+    req_meta: HashMap<RequestId, (f64, f64)>,
+    oom_seen: usize,
+    exec_rng: Rng,
+    arrivals: SlidingWindow,
+    /// True while waiting for in-flight plans to finish before a handoff.
+    draining: bool,
+    /// Engine generation: bumped on every rebuild.
+    generation: u64,
+}
+
+fn partition_cluster(template: &ClusterSpec, nodes: usize) -> ClusterSpec {
+    ClusterSpec { nodes, ..template.clone() }
+}
+
+impl Lane {
+    fn new(setup: &PipelineSetup, template: &ClusterSpec, nodes: usize, cfg: &CoServeConfig, idx: usize) -> Lane {
+        let cluster = partition_cluster(template, nodes);
+        let mut policy = TridentPolicy::new(
+            setup.pipeline.clone(),
+            setup.profile.clone(),
+            setup.consts.clone(),
+            cluster.clone(),
+        );
+        let placement = policy.initial_placement(cluster.total_gpus());
+        let engine = Engine::new(
+            crate::cluster::Topology::new(cluster.clone()),
+            placement,
+            &setup.profile,
+        );
+        Lane {
+            pipeline: setup.pipeline.clone(),
+            profile: setup.profile.clone(),
+            consts: setup.consts.clone(),
+            template: template.clone(),
+            nodes,
+            policy,
+            engine,
+            monitor: Monitor::new(setup.pipeline.t_win_ms, setup.consts.imbalance_trigger),
+            model: PerfModel::new(cluster),
+            metrics: Metrics::new(cfg.span_ms),
+            pending: Vec::new(),
+            progress: HashMap::new(),
+            req_meta: HashMap::new(),
+            oom_seen: 0,
+            exec_rng: Rng::new(cfg.seed ^ 0xE1EC ^ ((idx as u64 + 1) << 17)),
+            arrivals: SlidingWindow::new(cfg.demand_window_ms),
+            draining: false,
+            generation: 0,
+        }
+    }
+
+    fn gpus(&self) -> usize {
+        self.nodes * self.template.gpus_per_node
+    }
+
+    /// True when nothing is running or queued on any GPU of the partition.
+    fn engine_idle(&self) -> bool {
+        self.engine.idle_mask().iter().all(|&b| b)
+    }
+
+    /// VRAM-ledger invariants on an idle engine: every activation
+    /// reservation released, no GPU over capacity. Returns violation count.
+    fn vram_violations(&self) -> usize {
+        let mut bad = 0;
+        for g in 0..self.gpus() {
+            let mem = self.engine.vram.gpu(g);
+            if mem.act_gb.abs() > 1e-6 {
+                bad += 1;
+            }
+            if mem.used_gb() > self.engine.vram.capacity_gb() + 1e-6 {
+                bad += 1;
+            }
+        }
+        bad
+    }
+
+    /// Replace the lane's partition with `nodes` nodes: fresh placement,
+    /// fresh engine, fresh monitor window. Only legal on an idle engine —
+    /// callers drain first. Pending requests and their metadata survive.
+    fn rebuild(&mut self, nodes: usize, now_ms: f64) {
+        debug_assert!(self.engine_idle(), "rebuild on a busy engine");
+        // Anything still tracked in progress at a drain point would be a
+        // conservation bug; account for it rather than silently dropping.
+        let leftover: Vec<(RequestId, Prog)> = self.progress.drain().collect();
+        for (id, pr) in leftover {
+            self.metrics.record(Completion {
+                id,
+                shape_idx: pr.shape_idx,
+                arrival_ms: pr.arrival_ms,
+                deadline_ms: pr.deadline_ms,
+                finish_ms: f64::INFINITY,
+                outcome: Outcome::Unfinished,
+                vr_type: Some(pr.vr_type),
+                stage_ms: pr.stage_ms,
+            });
+        }
+        self.nodes = nodes;
+        let cluster = partition_cluster(&self.template, nodes);
+        self.policy = TridentPolicy::new(
+            self.pipeline.clone(),
+            self.profile.clone(),
+            self.consts.clone(),
+            cluster.clone(),
+        );
+        let placement = self.policy.initial_placement(cluster.total_gpus());
+        self.engine = Engine::new(
+            crate::cluster::Topology::new(cluster.clone()),
+            placement,
+            &self.profile,
+        );
+        self.model = PerfModel::new(cluster);
+        self.monitor = Monitor::new(self.pipeline.t_win_ms, self.consts.imbalance_trigger);
+        self.oom_seen = 0;
+        self.generation += 1;
+        self.draining = false;
+        self.metrics.record_switch(now_ms);
+    }
+
+    fn on_arrival(&mut self, r: Request, t_ms: f64) {
+        self.arrivals.push(t_ms, 1.0);
+        if self.policy.infeasible(r.shape_idx) {
+            self.metrics.record(Completion {
+                id: r.id,
+                shape_idx: r.shape_idx,
+                arrival_ms: r.arrival_ms,
+                deadline_ms: r.deadline_ms,
+                finish_ms: r.arrival_ms,
+                outcome: Outcome::OomRejected,
+                vr_type: None,
+                stage_ms: [0.0; 3],
+            });
+        } else {
+            self.req_meta.insert(r.id, (r.arrival_ms, r.deadline_ms));
+            self.pending.push(r);
+        }
+    }
+
+    fn enqueue_plans(&mut self, rp: &RequestPlans) {
+        let ids = self.engine.enqueue(rp, &self.profile);
+        let (arrival_ms, deadline_ms) =
+            self.req_meta.get(&rp.req).copied().unwrap_or((0.0, f64::MAX));
+        self.progress.insert(
+            rp.req,
+            Prog {
+                shape_idx: rp.shape_idx,
+                arrival_ms,
+                deadline_ms,
+                vr_type: rp.vr_type,
+                plan_chain: ids,
+                done_plans: 0,
+                stage_ms: [0.0; 3],
+            },
+        );
+    }
+
+    /// Start every startable plan; returns (plan id, finish time) pairs for
+    /// event scheduling.
+    fn advance(&mut self, now_ms: f64, jitter: f64) -> Vec<(PlanId, f64)> {
+        let Lane { engine, profile, exec_rng, .. } = self;
+        let profile: &Profile = profile;
+        let mut exec = SimExec { profile, rng: exec_rng.clone(), jitter };
+        let started = engine.advance(now_ms, &mut exec, profile);
+        *exec_rng = exec.rng;
+        started.into_iter().map(|sp| (sp.plan, sp.finish_ms)).collect()
+    }
+
+    /// Per-tick dispatch (skipped while draining) + plan starts + OOM drain.
+    /// Dispatch runs even with an empty pending list, like `sim::run_sim`:
+    /// the policy's backlog/congestion signal is sampled inside `dispatch`
+    /// and must decay to zero on a quiet lane, or `maybe_switch` would keep
+    /// seeing a stale burst forever.
+    fn tick(&mut self, now_ms: f64, jitter: f64) -> Vec<(PlanId, f64)> {
+        if !self.draining {
+            let view = ClusterView {
+                placement: self.engine.placement.clone(),
+                idle: self.engine.idle_mask(),
+                free_at_ms: self.engine.free_at_estimate(now_ms),
+                now_ms,
+            };
+            let (plans, stats) = self.policy.dispatch(&mut self.pending, &view);
+            if let Some(s) = stats {
+                self.metrics.record_solve(s);
+            }
+            for rp in &plans {
+                self.enqueue_plans(rp);
+            }
+        }
+        let started = self.advance(now_ms, jitter);
+        self.drain_ooms();
+        started
+    }
+
+    fn drain_ooms(&mut self) {
+        while self.oom_seen < self.engine.ooms.len() {
+            let ab = self.engine.ooms[self.oom_seen].clone();
+            self.oom_seen += 1;
+            self.pending.retain(|r| r.id != ab.req);
+            if let Some(pr) = self.progress.remove(&ab.req) {
+                // Note: unlike sim::drain_ooms (which stamps the abort time),
+                // the true arrival is recorded — metric-neutral (latency and
+                // on_time never read an OOM record's arrival) but truthful.
+                self.metrics.record(Completion {
+                    id: ab.req,
+                    shape_idx: pr.shape_idx,
+                    arrival_ms: pr.arrival_ms,
+                    deadline_ms: pr.deadline_ms,
+                    finish_ms: ab.at_ms,
+                    outcome: Outcome::OomRejected,
+                    vr_type: Some(pr.vr_type),
+                    stage_ms: pr.stage_ms,
+                });
+            }
+        }
+    }
+
+    /// Mirror of `sim`'s completion handling: proactive push toward the
+    /// successor, monitor accounting, request completion bookkeeping.
+    fn handle_done(&mut self, pid: PlanId, now_ms: f64) {
+        if self.engine.plans[pid].state != PlanState::Running {
+            return; // cancelled while queued
+        }
+        let req = self.engine.plans[pid].req;
+        let stage = self.engine.plans[pid].stage;
+        let merged = self.engine.plans[pid].merged_stages.clone();
+        let shape_idx = self.engine.plans[pid].shape_idx;
+        let pi = self.engine.pi_of(self.engine.plans[pid].gpus[0]);
+        let total_ms = self.engine.plans[pid].prepare_ms + self.engine.plans[pid].exec_ms;
+
+        let (succ, q_gb) = match self.progress.get(&req) {
+            Some(pr) => {
+                let pos = pr.plan_chain.iter().position(|&p| p == pid);
+                let succ = pos.and_then(|i| pr.plan_chain.get(i + 1)).copied();
+                let shape = &self.pipeline.shapes[shape_idx];
+                let q = match stage {
+                    Stage::Encode => self.model.q_ed_gb(shape),
+                    Stage::Diffuse => self.model.q_dc_gb(shape),
+                    Stage::Decode => 0.0,
+                };
+                (succ, q)
+            }
+            None => (None, 0.0),
+        };
+        self.engine.complete(pid, now_ms, q_gb, succ);
+
+        self.monitor.record(now_ms, stage, pi, 1.0);
+        for &s in &merged {
+            self.monitor.record(now_ms, s, pi, 1.0);
+        }
+
+        if let Some(pr) = self.progress.get_mut(&req) {
+            let si = match stage {
+                Stage::Encode => 0,
+                Stage::Diffuse => 1,
+                Stage::Decode => 2,
+            };
+            pr.stage_ms[si] += total_ms;
+            pr.done_plans += 1;
+            if pr.done_plans == pr.plan_chain.len() {
+                let pr = self.progress.remove(&req).unwrap();
+                self.metrics.record(Completion {
+                    id: req,
+                    shape_idx: pr.shape_idx,
+                    arrival_ms: pr.arrival_ms,
+                    deadline_ms: pr.deadline_ms,
+                    finish_ms: now_ms,
+                    outcome: Outcome::Completed,
+                    vr_type: Some(pr.vr_type),
+                    stage_ms: pr.stage_ms,
+                });
+            }
+        }
+    }
+
+    /// Horizon close-out: everything still tracked is an SLO miss.
+    fn finalize(&mut self) {
+        let leftover: Vec<(RequestId, Prog)> = self.progress.drain().collect();
+        for (id, pr) in leftover {
+            if pr.done_plans < pr.plan_chain.len() {
+                self.metrics.record(Completion {
+                    id,
+                    shape_idx: pr.shape_idx,
+                    arrival_ms: pr.arrival_ms,
+                    deadline_ms: pr.deadline_ms,
+                    finish_ms: f64::INFINITY,
+                    outcome: Outcome::Unfinished,
+                    vr_type: Some(pr.vr_type),
+                    stage_ms: pr.stage_ms,
+                });
+            }
+        }
+        for r in self.pending.drain(..) {
+            self.metrics.record(Completion {
+                id: r.id,
+                shape_idx: r.shape_idx,
+                arrival_ms: r.arrival_ms,
+                deadline_ms: r.deadline_ms,
+                finish_ms: f64::INFINITY,
+                outcome: Outcome::Unfinished,
+                vr_type: None,
+                stage_ms: [0.0; 3],
+            });
+        }
+    }
+
+}
+
+/// Estimated per-GPU service rate for a pipeline's uniform mix (the
+/// arbiter's capacity model): the ⟨EDC⟩ entry of `estimated_rates` is
+/// 1 / E[GPU-seconds per request].
+fn per_gpu_rps(setup: &PipelineSetup, cluster: &ClusterSpec) -> f64 {
+    let orch = Orchestrator::new(&setup.profile, &setup.pipeline, &setup.consts, cluster);
+    let w: Vec<f64> = setup.pipeline.shapes.iter().map(|_| 1.0).collect();
+    orch.estimated_rates(&w).v.get(&Pi::Edc).copied().unwrap_or(1e-3)
+}
+
+// ---------------------------------------------------------------------------
+// The co-serving run
+// ---------------------------------------------------------------------------
+
+/// Serve a mixed multi-pipeline trace on one shared cluster under the given
+/// arbiter. `cluster.nodes` is the shared pool the arbiter partitions;
+/// `setups[p]` serves `trace` requests tagged `pipeline_id == p`.
+pub fn run_coserve(
+    setups: &[PipelineSetup],
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &MixedTrace,
+    cfg: &CoServeConfig,
+) -> CoServeReport {
+    let n = setups.len();
+    assert!(n > 0, "no pipelines");
+    assert_eq!(trace.n_pipelines, n, "trace/setup pipeline count mismatch");
+    let total_nodes = cluster.nodes;
+    let gpn = cluster.gpus_per_node;
+    assert!(total_nodes >= n, "need at least one node per pipeline");
+
+    // Whole-trace average demand: the pre-observation fallback signal.
+    let dur_s = (trace.duration_ms / 1000.0).max(1e-9);
+    let avg_rps: Vec<f64> =
+        (0..n).map(|p| trace.of_pipeline(p).count() as f64 / dur_s).collect();
+
+    // Bootstrap lanes on the arbiter's initial allocation.
+    let per_gpu: Vec<f64> = setups.iter().map(|s| per_gpu_rps(s, cluster)).collect();
+    let init_signals: Vec<LaneSignal> = (0..n)
+        .map(|p| LaneSignal {
+            demand_rps: avg_rps[p],
+            per_gpu_rps: per_gpu[p],
+            backlog: 0,
+            gpus: 0,
+            trigger: false,
+        })
+        .collect();
+    let mut alloc = arbiter.initial(&init_signals, total_nodes);
+    assert_eq!(alloc.len(), n, "arbiter returned wrong lane count");
+    assert_eq!(alloc.iter().sum::<usize>(), total_nodes, "arbiter must cover the cluster");
+    assert!(alloc.iter().all(|&x| x >= 1), "every lane needs >= 1 node");
+
+    let mut lanes: Vec<Lane> = setups
+        .iter()
+        .enumerate()
+        .map(|(p, s)| Lane::new(s, cluster, alloc[p], cfg, p))
+        .collect();
+
+    // Event heap.
+    let horizon = trace.duration_ms * cfg.drain_factor;
+    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let push = |heap: &mut BinaryHeap<Reverse<Ev>>, seq: &mut u64, t: f64, k: EventKind| {
+        *seq += 1;
+        heap.push(Reverse(Ev(t, *seq, k)));
+    };
+    for (i, r) in trace.requests.iter().enumerate() {
+        push(&mut heap, &mut seq, r.arrival_ms, EventKind::Arrival(i));
+    }
+    push(&mut heap, &mut seq, 0.0, EventKind::Tick);
+    push(&mut heap, &mut seq, cfg.monitor_ms, EventKind::MonitorTick);
+
+    let mut pending_alloc: Option<Vec<usize>> = None;
+    let mut arbitrations = 0usize;
+    let mut moved_gpus = 0usize;
+    let mut vram_violations = 0usize;
+
+    // Apply a pending allocation once every resizing lane has drained.
+    let try_swap = |lanes: &mut Vec<Lane>,
+                    alloc: &mut Vec<usize>,
+                    pending_alloc: &mut Option<Vec<usize>>,
+                    arbitrations: &mut usize,
+                    moved_gpus: &mut usize,
+                    vram_violations: &mut usize,
+                    now: f64| {
+        let Some(target) = pending_alloc.as_ref() else { return };
+        for (p, lane) in lanes.iter().enumerate() {
+            if target[p] != alloc[p] && !lane.engine_idle() {
+                return; // still draining
+            }
+        }
+        let target = pending_alloc.take().unwrap();
+        for (p, lane) in lanes.iter_mut().enumerate() {
+            if target[p] == alloc[p] {
+                lane.draining = false;
+                continue;
+            }
+            *vram_violations += lane.vram_violations();
+            if target[p] > alloc[p] {
+                *moved_gpus += (target[p] - alloc[p]) * gpn;
+            }
+            lane.rebuild(target[p], now);
+        }
+        *alloc = target;
+        *arbitrations += 1;
+    };
+
+    while let Some(Reverse(Ev(now, _, kind))) = heap.pop() {
+        if now > horizon {
+            break;
+        }
+        match kind {
+            EventKind::Arrival(i) => {
+                let r = trace.requests[i].clone();
+                let p = r.pipeline_id;
+                debug_assert!(p < n, "request tagged for unknown pipeline");
+                lanes[p].on_arrival(r, now);
+            }
+            EventKind::Tick => {
+                for (p, lane) in lanes.iter_mut().enumerate() {
+                    for (plan, finish) in lane.tick(now, cfg.jitter) {
+                        push(
+                            &mut heap,
+                            &mut seq,
+                            finish,
+                            EventKind::PlanDone { lane: p, gen: lane.generation, plan },
+                        );
+                    }
+                }
+                try_swap(
+                    &mut lanes, &mut alloc, &mut pending_alloc, &mut arbitrations,
+                    &mut moved_gpus, &mut vram_violations, now,
+                );
+                if now + cfg.tick_ms <= horizon {
+                    push(&mut heap, &mut seq, now + cfg.tick_ms, EventKind::Tick);
+                }
+            }
+            EventKind::MonitorTick => {
+                // Per-lane signals; congestion = monitor trigger or backlog.
+                let signals: Vec<LaneSignal> = lanes
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(p, lane)| {
+                        // rate_per_sec divides by the full window; before one
+                        // window has elapsed that under-reports a young run's
+                        // demand by window/elapsed, so rescale to the time
+                        // actually observed.
+                        let elapsed_s =
+                            (now.min(cfg.demand_window_ms) / 1000.0).max(1e-9);
+                        let observed = lane.arrivals.rate_per_sec(now)
+                            * (cfg.demand_window_ms / 1000.0)
+                            / elapsed_s;
+                        let demand_rps =
+                            if lane.arrivals.len() >= 8 { observed } else { avg_rps[p] };
+                        let gpus = lane.gpus();
+                        let backlog = lane.pending.len();
+                        let trigger = lane.monitor.pattern_change(now)
+                            || backlog as f64 > gpus as f64 * cfg.backlog_trigger_per_gpu;
+                        LaneSignal {
+                            demand_rps,
+                            per_gpu_rps: per_gpu[p],
+                            backlog,
+                            gpus,
+                            trigger,
+                        }
+                    })
+                    .collect();
+                if pending_alloc.is_none() {
+                    if let Some(target) =
+                        arbiter.rearbitrate(now, &signals, &alloc, total_nodes)
+                    {
+                        assert_eq!(target.len(), n);
+                        assert_eq!(target.iter().sum::<usize>(), total_nodes);
+                        assert!(target.iter().all(|&x| x >= 1));
+                        if target != alloc {
+                            for (p, lane) in lanes.iter_mut().enumerate() {
+                                lane.draining = target[p] != alloc[p];
+                            }
+                            pending_alloc = Some(target);
+                        }
+                    }
+                    // Intra-lane placement switching stays active when no
+                    // cluster-level move is in flight.
+                    if pending_alloc.is_none() {
+                        for lane in lanes.iter_mut() {
+                            let g = lane.gpus();
+                            let Lane { policy, monitor, engine, metrics, .. } = lane;
+                            if let Some(plan) = policy.maybe_switch(now, monitor, g) {
+                                engine.apply_switch(plan);
+                                metrics.record_switch(now);
+                            }
+                        }
+                    }
+                }
+                try_swap(
+                    &mut lanes, &mut alloc, &mut pending_alloc, &mut arbitrations,
+                    &mut moved_gpus, &mut vram_violations, now,
+                );
+                if now + cfg.monitor_ms <= horizon {
+                    push(&mut heap, &mut seq, now + cfg.monitor_ms, EventKind::MonitorTick);
+                }
+            }
+            EventKind::PlanDone { lane: p, gen, plan } => {
+                if lanes[p].generation != gen {
+                    continue; // stale: engine was rebuilt after a drain
+                }
+                lanes[p].handle_done(plan, now);
+                for (plan, finish) in lanes[p].advance(now, cfg.jitter) {
+                    push(
+                        &mut heap,
+                        &mut seq,
+                        finish,
+                        EventKind::PlanDone { lane: p, gen: lanes[p].generation, plan },
+                    );
+                }
+                lanes[p].drain_ooms();
+                try_swap(
+                    &mut lanes, &mut alloc, &mut pending_alloc, &mut arbitrations,
+                    &mut moved_gpus, &mut vram_violations, now,
+                );
+            }
+        }
+    }
+
+    // Close out: everything unfinished is an SLO miss; final VRAM audit on
+    // whatever is still resident (activation reservations of plans cut off
+    // by the horizon are expected — only over-capacity states count here).
+    let mut reports = Vec::with_capacity(n);
+    for lane in lanes.iter_mut() {
+        lane.finalize();
+        for g in 0..lane.gpus() {
+            if lane.engine.vram.gpu(g).used_gb() > lane.engine.vram.capacity_gb() + 1e-6 {
+                vram_violations += 1;
+            }
+        }
+        reports.push(LaneReport {
+            pipeline: lane.pipeline.name.to_string(),
+            nodes_final: lane.nodes,
+            metrics: std::mem::take(&mut lane.metrics),
+        });
+    }
+
+    CoServeReport {
+        arbiter: arbiter.name(),
+        lanes: reports,
+        arbitrations,
+        moved_gpus,
+        vram_violations,
+    }
+}

@@ -1,0 +1,26 @@
+//! Multi-pipeline co-serving: serve N heterogeneous diffusion pipelines
+//! (e.g. Sd3 + Flux) on one shared GPU cluster.
+//!
+//! TridentServe's planners are single-pipeline by construction; this layer
+//! adds the cluster dimension on top of them:
+//!
+//! * [`arbiter`] — the **cluster arbiter**: partitions whole nodes across
+//!   pipelines by solving an [`crate::ilp::Mckp`] allocation problem over
+//!   per-pipeline candidate allocations, scored by each pipeline's
+//!   estimated served rate (`Orchestrator::estimated_rates`). Re-arbitrates
+//!   when any pipeline's monitor switch-trigger fires persistently.
+//! * [`exec`] — the **co-serving executor**: one discrete-event loop
+//!   driving a full per-pipeline serving stack (`TridentPolicy` + `Engine`
+//!   + `Monitor` + `Metrics`) per lane, with drain-then-reassign GPU
+//!   handoff between lanes on re-arbitration.
+//!
+//! Mixed multi-pipeline traces come from [`crate::workload::mixed`]; the
+//! static-partition baseline lives in
+//! [`crate::baselines::StaticPartition`]. `examples/coserve.rs` compares
+//! the two end-to-end, and `benches/coserve_mixed.rs` sweeps load shifts.
+
+pub mod arbiter;
+pub mod exec;
+
+pub use arbiter::{demand_proportional, ArbiterPolicy, ClusterArbiter, LaneSignal};
+pub use exec::{run_coserve, CoServeConfig, CoServeReport, LaneReport, PipelineSetup};

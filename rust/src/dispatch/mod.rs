@@ -496,6 +496,7 @@ mod tests {
         let idx = f.pipeline.shapes.iter().position(|s| s.name == shape).unwrap();
         Request {
             id,
+            pipeline_id: 0,
             shape_idx: idx,
             arrival_ms: now,
             deadline_ms: now + f.profile.slo_ms[idx],
@@ -601,6 +602,7 @@ mod tests {
         let heavy = f.pipeline.shapes.iter().position(|s| s.name == "720p8s").unwrap();
         let r = Request {
             id: 1,
+            pipeline_id: 0,
             shape_idx: heavy,
             arrival_ms: 0.0,
             deadline_ms: f.profile.slo_ms[heavy],
@@ -626,6 +628,7 @@ mod tests {
                     let shape_idx = rng.below(f.pipeline.shapes.len());
                     Request {
                         id: i as u64,
+                        pipeline_id: 0,
                         shape_idx,
                         arrival_ms: 0.0,
                         deadline_ms: f.profile.slo_ms[shape_idx],

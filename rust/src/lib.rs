@@ -2,8 +2,9 @@
 //!
 //! A from-scratch reproduction of *TridentServe: A Stage-level Serving
 //! System for Diffusion Pipelines* (Hetu team @ PKU, 2025) as a three-layer
-//! Rust + JAX + Pallas system. See DESIGN.md for the full inventory and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! Rust + JAX + Pallas system. See DESIGN.md (repo root) for the full
+//! module inventory; paper-vs-measured results are reproduced by the
+//! figure/table benches under `rust/benches/` (`cargo bench`).
 //!
 //! * [`config`] — pipelines (Table 2), cluster, solver constants.
 //! * [`perfmodel`] / [`profiler`] — the offline profiler substrate.
@@ -15,16 +16,23 @@
 //! * [`engine`] — the Runtime Engine: three-step dispatch execution and
 //!   Adjust-on-Dispatch placement switching (§5).
 //! * [`sim`] — discrete-event simulation harness (the GPU-cluster stand-in).
-//! * [`workload`] — Steady/Dynamic/Proprietary trace generators (Table 5).
-//! * [`baselines`] — B1–B6 from §8.1.
+//! * [`workload`] — Steady/Dynamic/Proprietary trace generators (Table 5)
+//!   plus mixed multi-pipeline traces for co-serving.
+//! * [`baselines`] — B1–B6 from §8.1 and the static-partition co-serving
+//!   baseline.
+//! * [`coserve`] — multi-pipeline co-serving: cluster arbiter + per-pipeline
+//!   lanes sharing one GPU cluster.
 //! * [`metrics`] — SLO attainment, latency percentiles, Fig-10 reporting.
-//! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts.
-//! * [`server`] — live serving loop over real PJRT executions.
+//! * [`runtime`] — artifact manifest; with feature `pjrt`, the PJRT
+//!   loader/executor for the AOT HLO artifacts.
+//! * [`server`] — live serving loop over real PJRT executions (feature
+//!   `pjrt`).
 
 pub mod baselines;
 pub mod batching;
 pub mod cluster;
 pub mod config;
+pub mod coserve;
 pub mod dispatch;
 pub mod engine;
 pub mod harness;
@@ -36,6 +44,7 @@ pub mod placement;
 pub mod profiler;
 pub mod request;
 pub mod runtime;
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod sim;
 pub mod util;

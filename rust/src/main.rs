@@ -17,7 +17,9 @@ use tridentserve::config::{ConfigFile, Stage};
 use tridentserve::harness::{Setup, ALL_POLICIES};
 use tridentserve::perfmodel::DEGREES;
 use tridentserve::placement::Orchestrator;
+#[cfg(feature = "pjrt")]
 use tridentserve::server::{serve, LiveConfig};
+use tridentserve::util::error::Result;
 use tridentserve::workload::{steady_weights, WorkloadKind};
 
 fn parse_args(args: &[String]) -> HashMap<String, String> {
@@ -46,7 +48,7 @@ fn workload_by_name(name: &str) -> WorkloadKind {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let opts = parse_args(&args[1.min(args.len())..]);
@@ -94,6 +96,7 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         }
+        #[cfg(feature = "pjrt")]
         "serve" => {
             let cfg = LiveConfig {
                 artifacts_dir: get("artifacts", "artifacts").into(),
@@ -111,6 +114,11 @@ fn main() -> anyhow::Result<()> {
                 report.served, report.wall_s, report.throughput_rps
             );
             println!("  {}", report.metrics.summary());
+        }
+        #[cfg(not(feature = "pjrt"))]
+        "serve" => {
+            println!("this binary was built without the `pjrt` feature;");
+            println!("rebuild with `--features pjrt` (needs the vendored xla bindings)");
         }
         "placement" => {
             let pipeline = get("pipeline", "flux");

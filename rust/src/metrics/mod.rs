@@ -66,12 +66,23 @@ impl Metrics {
             .collect()
     }
 
+    /// Mean served latency; 0.0 when nothing completed (explicit sentinel —
+    /// `n`/`oom` in the summary disambiguate "no data" from "fast").
     pub fn mean_latency_ms(&self) -> f64 {
-        mean(&self.served_latencies())
+        mean(&self.served_latencies()).unwrap_or(0.0)
+    }
+
+    /// Served-latency percentile (q in [0,100]); 0.0 when nothing completed.
+    pub fn latency_percentile_ms(&self, q: f64) -> f64 {
+        percentile(&self.served_latencies(), q).unwrap_or(0.0)
+    }
+
+    pub fn p50_latency_ms(&self) -> f64 {
+        self.latency_percentile_ms(50.0)
     }
 
     pub fn p95_latency_ms(&self) -> f64 {
-        percentile(&self.served_latencies(), 95.0).unwrap_or(0.0)
+        self.latency_percentile_ms(95.0)
     }
 
     pub fn oom_count(&self) -> usize {
@@ -114,7 +125,9 @@ impl Metrics {
             slo_attainment: self.slo_attainment(),
             mean_latency_ms: self.mean_latency_ms(),
             p95_latency_ms: self.p95_latency_ms(),
-            mean_solve_ms: mean(&self.solve_stats.iter().map(|s| s.solve_ms).collect::<Vec<_>>()),
+            // 0.0 sentinel: policies without an ILP record no solves.
+            mean_solve_ms: mean(&self.solve_stats.iter().map(|s| s.solve_ms).collect::<Vec<_>>())
+                .unwrap_or(0.0),
         }
     }
 }
@@ -212,6 +225,18 @@ mod tests {
         assert_eq!(parsed.get("label").unwrap().as_str(), Some("test-run"));
         assert_eq!(parsed.get("n").unwrap().as_i64(), Some(1));
         assert_eq!(parsed.get("slo_attainment").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn p50_and_empty_sentinels() {
+        let mut m = Metrics::new(1000.0);
+        assert_eq!(m.mean_latency_ms(), 0.0);
+        assert_eq!(m.p50_latency_ms(), 0.0);
+        for t in [100.0, 200.0, 300.0] {
+            m.record(comp(t, 1e9, Outcome::Completed, 0));
+        }
+        assert!((m.p50_latency_ms() - 200.0).abs() < 1e-9);
+        assert!((m.latency_percentile_ms(100.0) - 300.0).abs() < 1e-9);
     }
 
     #[test]

@@ -5,11 +5,18 @@ use crate::config::{PipelineSpec, ReqShape, Stage};
 /// Unique request id.
 pub type RequestId = u64;
 
+/// Identifier of the pipeline a request belongs to. Single-pipeline serving
+/// uses 0 throughout; co-serving (`coserve`) indexes into its lane list.
+pub type PipelineId = usize;
+
 /// One inference request (or request batch — `batch > 1` after dynamic
 /// batching, Appendix E.1) flowing through the E→D→C chain.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: RequestId,
+    /// Which pipeline serves this request (mixed multi-pipeline traces tag
+    /// every request; single-pipeline generators emit 0).
+    pub pipeline_id: PipelineId,
     /// Index into the pipeline's `shapes` (resolution/duration bundle).
     pub shape_idx: usize,
     pub arrival_ms: f64,
@@ -74,7 +81,14 @@ mod tests {
     #[test]
     fn request_resolves_shape() {
         let p = PipelineSpec::flux();
-        let r = Request { id: 1, shape_idx: 0, arrival_ms: 0.0, deadline_ms: 1e9, batch: 1 };
+        let r = Request {
+            id: 1,
+            pipeline_id: 0,
+            shape_idx: 0,
+            arrival_ms: 0.0,
+            deadline_ms: 1e9,
+            batch: 1,
+        };
         assert_eq!(r.shape(&p).name, "128p");
         assert_eq!(r.l_proc(&p, Stage::Diffuse), 64);
     }

@@ -2,7 +2,8 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 
 use crate::util::json::Json;
 

@@ -1,0 +1,198 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//!
+//! Every artifact is compiled exactly once at startup (`PjRtClient::cpu()`
+//! → `HloModuleProto::from_text_file` → `compile`); the serving hot path
+//! only builds input literals and calls `execute`. Python never runs here.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::anyhow;
+use crate::util::error::{Context, Result};
+
+use crate::config::Stage;
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+/// A compiled stage executable plus its metadata.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The artifact registry: one PJRT client, all stage variants compiled.
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    artifacts: HashMap<String, LoadedArtifact>,
+}
+
+impl PjrtRuntime {
+    /// Load and compile every artifact in `dir` (or a named subset).
+    pub fn load(dir: &Path, only: Option<&[&str]>) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .context("manifest.json (run `make artifacts` first)")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut artifacts = HashMap::new();
+        for meta in &manifest.artifacts {
+            if let Some(names) = only {
+                if !names.iter().any(|n| meta.name.starts_with(n)) {
+                    continue;
+                }
+            }
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", meta.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", meta.file))?;
+            artifacts.insert(meta.name.clone(), LoadedArtifact { meta: meta.clone(), exe });
+        }
+        Ok(PjrtRuntime { client, manifest, artifacts })
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LoadedArtifact> {
+        self.artifacts.get(name)
+    }
+
+    /// Execute an artifact on f32 inputs (each `(data, dims)`); returns the
+    /// flattened f32 output and the wall-clock execution time in ms.
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<(Vec<f32>, f64)> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not loaded"))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {name}: {e:?}"))?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec {name}: {e:?}"))?;
+        Ok((out, ms))
+    }
+
+    /// Execute the encode artifact (int32 tokens input).
+    pub fn run_encode(&self, name: &str, tokens: &[i32], dims: &[i64]) -> Result<(Vec<f32>, f64)> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not loaded"))?;
+        let lit = xla::Literal::vec1(tokens)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let t0 = Instant::now();
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok((out, ms))
+    }
+
+    /// Artifact name serving a (stage, resolution) pair at degree 1.
+    pub fn stage_artifact(&self, stage: Stage, resolution: u32) -> Option<String> {
+        let want = match stage {
+            Stage::Encode => "encode".to_string(),
+            Stage::Diffuse => "diffuse".to_string(),
+            Stage::Decode => "decode".to_string(),
+        };
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| {
+                a.stage == want
+                    && (stage == Stage::Encode || a.resolution == resolution)
+                    && a.degree == 1
+                    && a.batch == 1
+            })
+            .map(|a| a.name.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_and_runs_encode() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = PjrtRuntime::load(&artifacts_dir(), Some(&["encode_b1"])).unwrap();
+        let tokens: Vec<i32> = (0..16).collect();
+        let (out, ms) = rt.run_encode("encode_b1", &tokens, &[1, 16]).unwrap();
+        assert_eq!(out.len(), 16 * 64); // [1, enc_len, d_model]
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert!(ms > 0.0);
+    }
+
+    #[test]
+    fn encode_is_deterministic() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = PjrtRuntime::load(&artifacts_dir(), Some(&["encode_b1"])).unwrap();
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 7) % 512).collect();
+        let (a, _) = rt.run_encode("encode_b1", &tokens, &[1, 16]).unwrap();
+        let (b, _) = rt.run_encode("encode_b1", &tokens, &[1, 16]).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stage_artifact_lookup() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = PjrtRuntime::load(&artifacts_dir(), Some(&["encode_b1"])).unwrap();
+        assert_eq!(rt.stage_artifact(Stage::Diffuse, 128), Some("diffuse_r128".into()));
+        assert_eq!(rt.stage_artifact(Stage::Decode, 64), Some("decode_r64".into()));
+        assert!(rt.stage_artifact(Stage::Diffuse, 999).is_none());
+    }
+}

@@ -17,7 +17,8 @@ use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 use crate::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
 use crate::dispatch::ClusterView;

@@ -443,6 +443,7 @@ mod tests {
         let mut pending: Vec<Request> = (0..4)
             .map(|i| Request {
                 id: i,
+                pipeline_id: 0,
                 shape_idx: 2,
                 arrival_ms: 0.0,
                 deadline_ms: t.profile.slo_ms[2],
@@ -469,6 +470,7 @@ mod tests {
         let mut pending: Vec<Request> = (0..4)
             .map(|i| Request {
                 id: i,
+                pipeline_id: 0,
                 shape_idx: 1,
                 arrival_ms: 0.0,
                 deadline_ms: t.profile.slo_ms[1],
@@ -493,6 +495,7 @@ mod tests {
         };
         let mut pending = vec![Request {
             id: 0,
+            pipeline_id: 0,
             shape_idx: 4,
             arrival_ms: 0.0,
             deadline_ms: t.profile.slo_ms[4],

@@ -4,9 +4,11 @@
 //! the crates vendored for the `xla` dependency are available). Each piece is
 //! deliberately minimal but complete for this repo's needs.
 
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 
+pub use error::{Context, Error, Result};
 pub use rng::Rng;

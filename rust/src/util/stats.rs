@@ -25,11 +25,14 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
-pub fn mean(xs: &[f64]) -> f64 {
+/// Arithmetic mean. `None` on an empty slice — callers that want a sentinel
+/// must choose it explicitly (`mean(xs).unwrap_or(0.0)`), so "no data" can
+/// never masquerade as a measured 0.
+pub fn mean(xs: &[f64]) -> Option<f64> {
     if xs.is_empty() {
-        0.0
+        None
     } else {
-        xs.iter().sum::<f64>() / xs.len() as f64
+        Some(xs.iter().sum::<f64>() / xs.len() as f64)
     }
 }
 
@@ -130,6 +133,51 @@ mod tests {
     #[test]
     fn percentile_unsorted_input() {
         assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), Some(2.0));
+    }
+
+    #[test]
+    fn percentile_known_quantiles_five_elements() {
+        // numpy.percentile([10,20,30,40,50], q) reference values.
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&xs, 0.0), Some(10.0));
+        assert_eq!(percentile(&xs, 25.0), Some(20.0));
+        assert_eq!(percentile(&xs, 50.0), Some(30.0));
+        assert_eq!(percentile(&xs, 95.0), Some(48.0)); // 0.95*4=3.8 → 40+0.8*10
+        assert_eq!(percentile(&xs, 100.0), Some(50.0));
+    }
+
+    #[test]
+    fn percentile_single_element_is_constant() {
+        for q in [0.0, 37.0, 50.0, 95.0, 100.0] {
+            assert_eq!(percentile(&[7.5], q), Some(7.5));
+            assert_eq!(percentile_sorted(&[7.5], q), 7.5);
+        }
+    }
+
+    #[test]
+    fn percentile_two_element_interpolation() {
+        let xs = [10.0, 30.0];
+        assert_eq!(percentile(&xs, 0.0), Some(10.0));
+        assert_eq!(percentile(&xs, 50.0), Some(20.0));
+        assert_eq!(percentile(&xs, 95.0), Some(29.0)); // 10 + 0.95*20
+        assert_eq!(percentile(&xs, 100.0), Some(30.0));
+    }
+
+    #[test]
+    fn percentile_sorted_matches_percentile() {
+        let mut xs = vec![5.0, 1.0, 9.0, 3.0, 7.0, 2.0];
+        let unsorted = xs.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 10.0, 50.0, 90.0, 95.0, 100.0] {
+            assert_eq!(percentile(&unsorted, q), Some(percentile_sorted(&xs, q)));
+        }
+    }
+
+    #[test]
+    fn mean_is_none_on_empty() {
+        assert_eq!(mean(&[]), None);
+        assert_eq!(mean(&[4.0]), Some(4.0));
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), Some(2.0));
     }
 
     #[test]

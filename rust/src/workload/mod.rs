@@ -93,6 +93,7 @@ impl<'a> TraceGen<'a> {
     fn make_request(&self, id: u64, t_ms: f64, shape_idx: usize) -> Request {
         Request {
             id,
+            pipeline_id: 0,
             shape_idx,
             arrival_ms: t_ms,
             deadline_ms: t_ms + self.profile.slo_ms[shape_idx],
@@ -204,6 +205,130 @@ impl<'a> TraceGen<'a> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Mixed multi-pipeline traces (co-serving)
+// ---------------------------------------------------------------------------
+
+/// Time profile of one pipeline's arrival intensity over the trace horizon
+/// (multiplies the pipeline's base rate). `Step` models a regime change —
+/// the co-serving arbiter's raison d'être.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LoadShape {
+    /// Constant intensity 1.0.
+    Flat,
+    /// Intensity `before` until `at` (fraction of the horizon in [0,1]),
+    /// then `after`.
+    Step { at: f64, before: f64, after: f64 },
+    /// Linear ramp from `from` at t=0 to `to` at the horizon.
+    Ramp { from: f64, to: f64 },
+}
+
+impl LoadShape {
+    /// Intensity multiplier at horizon fraction `x` in [0, 1].
+    pub fn at(&self, x: f64) -> f64 {
+        match *self {
+            LoadShape::Flat => 1.0,
+            LoadShape::Step { at, before, after } => {
+                if x < at {
+                    before
+                } else {
+                    after
+                }
+            }
+            LoadShape::Ramp { from, to } => from + (to - from) * x.clamp(0.0, 1.0),
+        }
+    }
+
+    fn max(&self) -> f64 {
+        match *self {
+            LoadShape::Flat => 1.0,
+            LoadShape::Step { before, after, .. } => before.max(after),
+            LoadShape::Ramp { from, to } => from.max(to),
+        }
+    }
+}
+
+/// One pipeline's slice of a mixed trace.
+pub struct MixedSpec<'a> {
+    pub pipeline: &'a PipelineSpec,
+    pub profile: &'a Profile,
+    /// Shape-mix family for this pipeline's requests.
+    pub kind: WorkloadKind,
+    /// Base arrival-rate multiplier over the pipeline's Table-5 rate.
+    pub rate_scale: f64,
+    /// Time-varying intensity on top of `rate_scale`.
+    pub load: LoadShape,
+}
+
+/// A mixed trace: arrival-sorted requests tagged with `pipeline_id`, with
+/// globally unique request ids.
+#[derive(Clone, Debug)]
+pub struct MixedTrace {
+    pub requests: Vec<Request>,
+    pub duration_ms: f64,
+    pub n_pipelines: usize,
+}
+
+impl MixedTrace {
+    /// Requests belonging to one pipeline, in arrival order.
+    pub fn of_pipeline(&self, p: usize) -> impl Iterator<Item = &Request> {
+        self.requests.iter().filter(move |r| r.pipeline_id == p)
+    }
+}
+
+/// Generate a mixed multi-pipeline trace: each pipeline gets an independent
+/// Poisson arrival process (thinned against its [`LoadShape`]) from a
+/// decorrelated per-pipeline substream of `seed`; streams are then merged in
+/// arrival order and re-id'd globally. Determinism: the same `(specs, seed)`
+/// reproduce the identical trace, including per-request pipeline tags.
+pub fn mixed(specs: &[MixedSpec], duration_ms: f64, seed: u64) -> MixedTrace {
+    let mut all: Vec<Request> = Vec::new();
+    for (p, spec) in specs.iter().enumerate() {
+        // Per-pipeline substream: SplitMix-style decorrelation keeps each
+        // pipeline's arrivals independent of how many co-tenants exist.
+        let sub_seed = seed ^ (p as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(sub_seed);
+        let weights = steady_weights(spec.pipeline, spec.kind);
+        let base = spec.pipeline.rate_req_s * spec.rate_scale;
+        let max_scale = spec.load.max();
+        if base <= 0.0 || max_scale <= 0.0 {
+            continue;
+        }
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(base * max_scale) * 1000.0;
+            if t >= duration_ms {
+                break;
+            }
+            // Thinning against the time-varying intensity.
+            if rng.f64() >= spec.load.at(t / duration_ms) / max_scale {
+                continue;
+            }
+            let shape_idx = rng.categorical(&weights);
+            all.push(Request {
+                id: 0, // assigned after the merge
+                pipeline_id: p,
+                shape_idx,
+                arrival_ms: t,
+                deadline_ms: t + spec.profile.slo_ms[shape_idx],
+                batch: 1,
+            });
+        }
+    }
+    // Merge: total order on (arrival, pipeline) — arrivals within one
+    // pipeline are already strictly increasing, so this is deterministic.
+    all.sort_by(|a, b| {
+        a.arrival_ms
+            .partial_cmp(&b.arrival_ms)
+            .unwrap()
+            .then(a.pipeline_id.cmp(&b.pipeline_id))
+    });
+    for (i, r) in all.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    MixedTrace { requests: all, duration_ms, n_pipelines: specs.len() }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,6 +418,144 @@ mod tests {
         let peak = count_in(0.30, 0.40);
         let trough = count_in(0.0, 0.10);
         assert!(peak > 1.5 * trough, "peak {peak} trough {trough}");
+    }
+
+    #[test]
+    fn every_kind_is_deterministic_per_seed() {
+        // Same seed ⇒ byte-identical trace (arrival times, shapes, ids,
+        // deadlines) for every workload family.
+        let p = PipelineSpec::flux();
+        let (profile, _) = gen(&p);
+        let tg = TraceGen::new(&p, &profile);
+        for kind in WorkloadKind::ALL {
+            let a = tg.generate(kind, 150_000.0, 21);
+            let b = tg.generate(kind, 150_000.0, 21);
+            assert_eq!(a.requests.len(), b.requests.len(), "{kind:?}");
+            for (x, y) in a.requests.iter().zip(&b.requests) {
+                assert_eq!(x.id, y.id, "{kind:?}");
+                assert_eq!(x.arrival_ms, y.arrival_ms, "{kind:?}");
+                assert_eq!(x.shape_idx, y.shape_idx, "{kind:?}");
+                assert_eq!(x.deadline_ms, y.deadline_ms, "{kind:?}");
+                assert_eq!(x.pipeline_id, 0, "{kind:?}");
+            }
+            // A different seed must produce a different trace.
+            let c = tg.generate(kind, 150_000.0, 22);
+            let same = a.requests.len() == c.requests.len()
+                && a.requests
+                    .iter()
+                    .zip(&c.requests)
+                    .all(|(x, y)| x.arrival_ms == y.arrival_ms);
+            assert!(!same, "{kind:?}: seeds 21 and 22 gave identical traces");
+        }
+    }
+
+    fn mixed_fixture() -> (PipelineSpec, Profile, PipelineSpec, Profile) {
+        let sd3 = PipelineSpec::sd3();
+        let (sd3_prof, _) = gen(&sd3);
+        let flux = PipelineSpec::flux();
+        let (flux_prof, _) = gen(&flux);
+        (sd3, sd3_prof, flux, flux_prof)
+    }
+
+    fn mixed_specs<'a>(
+        sd3: &'a PipelineSpec,
+        sd3_prof: &'a Profile,
+        flux: &'a PipelineSpec,
+        flux_prof: &'a Profile,
+    ) -> Vec<MixedSpec<'a>> {
+        vec![
+            MixedSpec {
+                pipeline: sd3,
+                profile: sd3_prof,
+                kind: WorkloadKind::Medium,
+                rate_scale: 0.5,
+                load: LoadShape::Step { at: 0.5, before: 1.0, after: 0.3 },
+            },
+            MixedSpec {
+                pipeline: flux,
+                profile: flux_prof,
+                kind: WorkloadKind::Medium,
+                rate_scale: 1.0,
+                load: LoadShape::Ramp { from: 0.5, to: 1.5 },
+            },
+        ]
+    }
+
+    #[test]
+    fn mixed_trace_is_deterministic_per_seed() {
+        let (sd3, sd3_prof, flux, flux_prof) = mixed_fixture();
+        let specs = mixed_specs(&sd3, &sd3_prof, &flux, &flux_prof);
+        let a = mixed(&specs, 300_000.0, 13);
+        let b = mixed(&specs, 300_000.0, 13);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.pipeline_id, y.pipeline_id);
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.shape_idx, y.shape_idx);
+            assert_eq!(x.deadline_ms, y.deadline_ms);
+        }
+    }
+
+    #[test]
+    fn mixed_trace_interleaves_and_tags_pipelines() {
+        let (sd3, sd3_prof, flux, flux_prof) = mixed_fixture();
+        let specs = mixed_specs(&sd3, &sd3_prof, &flux, &flux_prof);
+        let t = mixed(&specs, 300_000.0, 7);
+        assert_eq!(t.n_pipelines, 2);
+        let n0 = t.of_pipeline(0).count();
+        let n1 = t.of_pipeline(1).count();
+        assert!(n0 > 0 && n1 > 0, "both pipelines must contribute ({n0}/{n1})");
+        assert_eq!(n0 + n1, t.requests.len());
+        // Globally sorted, globally unique sequential ids.
+        let mut prev = 0.0;
+        for (i, r) in t.requests.iter().enumerate() {
+            assert!(r.arrival_ms >= prev);
+            assert_eq!(r.id, i as u64);
+            assert!(r.deadline_ms > r.arrival_ms);
+            prev = r.arrival_ms;
+        }
+        // Each pipeline's substream is unaffected by the other's presence:
+        // shape indices stay inside each pipeline's own shape table.
+        for r in t.of_pipeline(0) {
+            assert!(r.shape_idx < sd3.shapes.len());
+        }
+        for r in t.of_pipeline(1) {
+            assert!(r.shape_idx < flux.shapes.len());
+        }
+    }
+
+    #[test]
+    fn load_step_shifts_volume_across_halves() {
+        let (sd3, sd3_prof, flux, flux_prof) = mixed_fixture();
+        let specs = mixed_specs(&sd3, &sd3_prof, &flux, &flux_prof);
+        let t = mixed(&specs, 600_000.0, 3);
+        let half = 300_000.0;
+        let sd3_first = t.of_pipeline(0).filter(|r| r.arrival_ms < half).count() as f64;
+        let sd3_second = t.of_pipeline(0).filter(|r| r.arrival_ms >= half).count() as f64;
+        // Step 1.0 -> 0.3: the second half must carry well under half the load.
+        assert!(
+            sd3_second < 0.6 * sd3_first,
+            "step down not visible: {sd3_first} vs {sd3_second}"
+        );
+        let flux_first = t.of_pipeline(1).filter(|r| r.arrival_ms < half).count() as f64;
+        let flux_second = t.of_pipeline(1).filter(|r| r.arrival_ms >= half).count() as f64;
+        // Ramp 0.5 -> 1.5: second half busier.
+        assert!(
+            flux_second > 1.2 * flux_first,
+            "ramp up not visible: {flux_first} vs {flux_second}"
+        );
+    }
+
+    #[test]
+    fn load_shape_intensity_math() {
+        assert_eq!(LoadShape::Flat.at(0.7), 1.0);
+        let s = LoadShape::Step { at: 0.5, before: 2.0, after: 0.5 };
+        assert_eq!(s.at(0.49), 2.0);
+        assert_eq!(s.at(0.5), 0.5);
+        let r = LoadShape::Ramp { from: 1.0, to: 3.0 };
+        assert!((r.at(0.5) - 2.0).abs() < 1e-12);
+        assert!((r.at(0.0) - 1.0).abs() < 1e-12);
     }
 
     #[test]
