@@ -12,7 +12,7 @@ use tridentserve::config::ClusterSpec;
 use tridentserve::coserve::{
     run_coserve, CoServeConfig, CoServeReport, ClusterArbiter, PipelineSetup,
 };
-use tridentserve::workload::{mixed, LoadShape, MixedSpec, WorkloadKind};
+use tridentserve::workload::{mixed, DifficultyModel, LoadShape, MixedSpec, WorkloadKind};
 
 fn print_report(report: &CoServeReport) {
     println!(
@@ -62,6 +62,7 @@ fn main() {
             kind: WorkloadKind::Medium,
             rate_scale: 0.45,
             load: LoadShape::Step { at: 0.5, before: 1.5, after: 0.4 },
+            difficulty: DifficultyModel::Uniform,
         },
         MixedSpec {
             pipeline: &flux.pipeline,
@@ -69,6 +70,7 @@ fn main() {
             kind: WorkloadKind::Medium,
             rate_scale: 0.45,
             load: LoadShape::Step { at: 0.5, before: 0.4, after: 1.5 },
+            difficulty: DifficultyModel::Uniform,
         },
     ];
     let trace = mixed(&specs, duration_ms, seed);

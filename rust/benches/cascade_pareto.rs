@@ -1,0 +1,133 @@
+//! Cascade Pareto bench: the quality/latency frontier of query-aware
+//! cascade serving under difficulty drift. Three systems serve the same
+//! Sd3 stream on the same shared cluster:
+//!
+//!   * always-heavy — quality ceiling, full latency cost;
+//!   * static-threshold — day-one-calibrated router, no feedback;
+//!   * cascade-joint — feedback threshold + routed demand in the arbiter.
+//!
+//! Claims under test: the joint cascade beats always-heavy on latency/SLO
+//! while holding the quality floor, and beats the static threshold on
+//! quality at matched SLO (the static router under-escalates once the
+//! difficulty mix drifts past its calibration).
+//!
+//! Environment knobs: CASCADE_BENCH_MINUTES (default 10),
+//! CASCADE_BENCH_SEED (default 0).
+
+use tridentserve::baselines::{always_heavy, static_threshold};
+use tridentserve::cascade::{
+    calibrate_threshold, run_cascade, CascadeReport, QualityModel, RouterMode,
+    ThresholdController,
+};
+use tridentserve::config::ClusterSpec;
+use tridentserve::coserve::{ClusterArbiter, CoServeConfig, PipelineSetup};
+use tridentserve::workload::{DifficultyModel, TraceGen, WorkloadKind};
+
+fn row(r: &CascadeReport) -> (f64, f64, f64, f64, f64) {
+    let s = r.logical.summary();
+    (
+        s.slo_attainment,
+        r.quality_attainment(),
+        s.mean_latency_ms / 1000.0,
+        s.p95_latency_ms / 1000.0,
+        s.p99_latency_ms / 1000.0,
+    )
+}
+
+fn main() {
+    let minutes: f64 = std::env::var("CASCADE_BENCH_MINUTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10.0);
+    let seed: u64 = std::env::var("CASCADE_BENCH_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let duration_ms = minutes * 60_000.0;
+    let t0 = std::time::Instant::now();
+
+    let cluster = ClusterSpec::l20(8); // 64 shared GPUs
+    let cheap = PipelineSetup::new("sd3-turbo", &cluster);
+    let heavy = PipelineSetup::new("sd3", &cluster);
+    let drift = DifficultyModel::Drift { from: 0.2, to: 0.55 };
+    let quality = QualityModel { adequacy_cut: 0.55, conf_noise: 0.10 };
+    let floor = 0.92;
+
+    let trace = {
+        let mut tg = TraceGen::new(&heavy.pipeline, &heavy.profile);
+        tg.rate_scale = 0.45;
+        tg.difficulty = drift;
+        tg.steady(WorkloadKind::Medium, duration_ms, seed)
+    };
+    let tau0 = calibrate_threshold(&quality, &drift, 0.0, floor, seed);
+
+    println!(
+        "=== cascade_pareto: sd3-turbo/sd3 on {} GPUs, {minutes:.0}-min trace, {} reqs, \
+         difficulty drift 0.20->0.55, floor {floor}, day-one tau {tau0:.2}, seed {seed} ===\n",
+        cluster.total_gpus(),
+        trace.requests.len(),
+    );
+    println!(
+        "{:<22} {:>8} {:>9} {:>9} {:>9} {:>9} {:>7} {:>6} {:>6}",
+        "system", "slo", "quality", "mean(s)", "p95(s)", "p99(s)", "esc", "arbs", "moved"
+    );
+
+    let cfg = CoServeConfig { seed, ..Default::default() };
+    let run = |mode: RouterMode| {
+        let mut arbiter = ClusterArbiter::new(cluster.gpus_per_node);
+        arbiter.cooldown_ms = 30_000.0;
+        let r = run_cascade(&cheap, &heavy, &cluster, &mut arbiter, &trace, mode, quality, &cfg);
+        let (slo, q, mean, p95, p99) = row(&r);
+        println!(
+            "{:<22} {:>8.3} {:>9.3} {:>9.1} {:>9.1} {:>9.1} {:>7.2} {:>6} {:>6}",
+            r.label,
+            slo,
+            q,
+            mean,
+            p95,
+            p99,
+            r.escalation_fraction(),
+            r.coserve.arbitrations,
+            r.coserve.moved_gpus,
+        );
+        assert_eq!(r.coserve.vram_violations, 0, "VRAM ledger violated ({})", r.label);
+        assert_eq!(
+            r.logical.completions.len(),
+            trace.requests.len(),
+            "request conservation violated ({})",
+            r.label
+        );
+        r
+    };
+
+    let hv = run(always_heavy());
+    let st = run(static_threshold(tau0));
+    let jt = run(RouterMode::Adaptive {
+        initial_threshold: tau0,
+        controller: ThresholdController::new(floor),
+    });
+
+    let (slo_h, _, mean_h, p95_h, _) = row(&hv);
+    let (slo_s, q_s, _, _, _) = row(&st);
+    let (slo_j, q_j, mean_j, p95_j, _) = row(&jt);
+
+    println!("\nclaims:");
+    let ok1 = q_j >= floor - 0.03;
+    println!(
+        "  joint holds the quality floor: {q_j:.3} vs floor {floor} -> {}",
+        if ok1 { "OK" } else { "VIOLATED" }
+    );
+    let ok2 = mean_j < mean_h && p95_j < p95_h && slo_j > slo_h;
+    println!(
+        "  joint beats always-heavy on latency+SLO at that floor: \
+         mean {mean_j:.1}s<{mean_h:.1}s p95 {p95_j:.1}s<{p95_h:.1}s slo {slo_j:.3}>{slo_h:.3} -> {}",
+        if ok2 { "OK" } else { "VIOLATED" }
+    );
+    let ok3 = q_j > q_s + 0.01 && slo_j >= slo_s - 0.05;
+    println!(
+        "  joint beats static-threshold on quality at matched SLO: \
+         quality {q_j:.3}>{q_s:.3} slo {slo_j:.3}~{slo_s:.3} -> {}",
+        if ok3 { "OK" } else { "VIOLATED" }
+    );
+    println!("\ncascade_pareto done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -12,7 +12,7 @@ use tridentserve::config::ClusterSpec;
 use tridentserve::coserve::{
     run_coserve, CoServeConfig, ClusterArbiter, PipelineSetup,
 };
-use tridentserve::workload::{mixed, LoadShape, MixedSpec, WorkloadKind};
+use tridentserve::workload::{mixed, DifficultyModel, LoadShape, MixedSpec, WorkloadKind};
 
 fn main() {
     let minutes: f64 = std::env::var("COSERVE_BENCH_MINUTES")
@@ -55,6 +55,7 @@ fn main() {
                 kind: WorkloadKind::Medium,
                 rate_scale: 0.45,
                 load: LoadShape::Step { at: 0.5, before: hi, after: lo },
+                difficulty: DifficultyModel::Uniform,
             },
             MixedSpec {
                 pipeline: &setups[1].pipeline,
@@ -62,6 +63,7 @@ fn main() {
                 kind: WorkloadKind::Medium,
                 rate_scale: 0.45,
                 load: LoadShape::Step { at: 0.5, before: lo, after: hi },
+                difficulty: DifficultyModel::Uniform,
             },
         ];
         let trace = mixed(&specs, duration_ms, seed);

@@ -26,8 +26,8 @@ fn main() {
         for workload in WorkloadKind::ALL {
             println!("--- {pipeline} / {} ---", workload.label());
             println!(
-                "{:<22} {:>6} {:>6} {:>8} {:>10} {:>10}",
-                "policy", "n", "oom", "slo", "mean(s)", "p95(s)"
+                "{:<22} {:>6} {:>6} {:>8} {:>10} {:>10} {:>10}",
+                "policy", "n", "oom", "slo", "mean(s)", "p95(s)", "p99(s)"
             );
             let mut best_slo = 0.0f64;
             let mut trident_slo = 0.0f64;
@@ -35,13 +35,14 @@ fn main() {
                 let m = setup.run(policy, workload, minutes * 60_000.0, seed);
                 let s = m.summary();
                 println!(
-                    "{:<22} {:>6} {:>6} {:>8.3} {:>10.1} {:>10.1}",
+                    "{:<22} {:>6} {:>6} {:>8.3} {:>10.1} {:>10.1} {:>10.1}",
                     policy,
                     s.n,
                     s.oom,
                     s.slo_attainment,
                     s.mean_latency_ms / 1e3,
-                    s.p95_latency_ms / 1e3
+                    s.p95_latency_ms / 1e3,
+                    s.p99_latency_ms / 1e3
                 );
                 if policy == "trident" {
                     trident_slo = s.slo_attainment;

@@ -9,7 +9,7 @@
 
 use tridentserve::harness::Setup;
 use tridentserve::placement::Orchestrator;
-use tridentserve::workload::{TraceGen, WorkloadKind};
+use tridentserve::workload::{DifficultyModel, TraceGen, WorkloadKind};
 
 fn main() {
     println!("=== Fig 12: Virtual-Replica distribution (Dynamic workload) ===\n");
@@ -22,7 +22,12 @@ fn main() {
             &setup.cluster,
         );
         // Eligibility over the actual trace mix.
-        let tg = TraceGen { pipeline: &setup.pipeline, profile: &setup.profile, rate_scale: 1.0 };
+        let tg = TraceGen {
+            pipeline: &setup.pipeline,
+            profile: &setup.profile,
+            rate_scale: 1.0,
+            difficulty: DifficultyModel::Uniform,
+        };
         let trace = tg.generate(WorkloadKind::Dynamic, 10.0 * 60_000.0, 5);
         let eligible_v0 = trace
             .requests

@@ -48,7 +48,15 @@ fn main() {
         let pending: Vec<Request> = (0..64)
             .map(|i| {
                 let s = rng.below(pipeline.shapes.len());
-                Request { id: i, pipeline_id: 0, shape_idx: s, arrival_ms: 0.0, deadline_ms: profile.slo_ms[s], batch: 1 }
+                Request {
+                    id: i,
+                    pipeline_id: 0,
+                    shape_idx: s,
+                    arrival_ms: 0.0,
+                    deadline_ms: profile.slo_ms[s],
+                    batch: 1,
+                    difficulty: 0.5,
+                }
             })
             .collect();
         let view = ClusterView {

@@ -52,6 +52,7 @@ fn main() {
                         arrival_ms: 0.0,
                         deadline_ms: profile.slo_ms[shape_idx],
                         batch: 1,
+                        difficulty: 0.5,
                     }
                 })
                 .collect();

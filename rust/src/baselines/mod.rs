@@ -600,6 +600,28 @@ impl crate::coserve::ArbiterPolicy for StaticPartition {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Cascade baselines: always-heavy and static-threshold routing
+// ---------------------------------------------------------------------------
+
+/// The quality-first cascade baseline: no cascade at all — every request
+/// served by the full pipeline on the whole cluster. The quality ceiling
+/// (every output full-strength) at the full latency cost; the gap to the
+/// joint cascade is the measured value of confidence routing.
+pub fn always_heavy() -> crate::cascade::RouterMode {
+    crate::cascade::RouterMode::AlwaysHeavy
+}
+
+/// The unattended-router cascade baseline: a fixed escalation threshold
+/// (typically from [`crate::cascade::calibrate_threshold`] on day-one
+/// traffic) with no feedback. Under difficulty drift it either
+/// under-escalates (quality sag) or over-escalates (wasted heavy demand);
+/// the gap to the adaptive controller is the measured value of the
+/// feedback loop.
+pub fn static_threshold(threshold: f64) -> crate::cascade::RouterMode {
+    crate::cascade::RouterMode::StaticThreshold(threshold)
+}
+
 /// Build every baseline for a pipeline (convenience for the benches).
 pub fn all_baselines(ctx: &BaseCtx, g: usize) -> Vec<Box<dyn ServingPolicy>> {
     vec![
@@ -716,6 +738,7 @@ mod tests {
                 arrival_ms: 0.0,
                 deadline_ms: 1e12,
                 batch: 1,
+                difficulty: 0.5,
             })
             .collect();
         let (plans, _) = b3.dispatch(&mut pending, &view);
@@ -732,6 +755,7 @@ mod tests {
             backlog: 0,
             gpus: 0,
             trigger: true, // even under a screaming trigger
+            slo_weight: 1.0,
         };
         let mut sp = StaticPartition::new();
         let alloc = sp.initial(&[sig(10.0, 0.2), sig(1.0, 0.02)], 16);
@@ -746,8 +770,24 @@ mod tests {
     fn srtf_prioritises_short_requests() {
         let c = ctx(PipelineSpec::flux());
         let pending: Vec<Request> = vec![
-            Request { id: 0, pipeline_id: 0, shape_idx: 6, arrival_ms: 0.0, deadline_ms: 1e12, batch: 1 },
-            Request { id: 1, pipeline_id: 0, shape_idx: 0, arrival_ms: 0.0, deadline_ms: 1e12, batch: 1 },
+            Request {
+                id: 0,
+                pipeline_id: 0,
+                shape_idx: 6,
+                arrival_ms: 0.0,
+                deadline_ms: 1e12,
+                batch: 1,
+                difficulty: 0.5,
+            },
+            Request {
+                id: 1,
+                pipeline_id: 0,
+                shape_idx: 0,
+                arrival_ms: 0.0,
+                deadline_ms: 1e12,
+                batch: 1,
+                difficulty: 0.5,
+            },
         ];
         let order = c.srtf_order(&pending, 0.0);
         assert_eq!(order[0], 1, "short request must come first");

@@ -72,7 +72,15 @@ mod tests {
     }
 
     fn req(id: u64, shape_idx: usize, deadline: f64) -> Request {
-        Request { id, pipeline_id: 0, shape_idx, arrival_ms: 0.0, deadline_ms: deadline, batch: 1 }
+        Request {
+            id,
+            pipeline_id: 0,
+            shape_idx,
+            arrival_ms: 0.0,
+            deadline_ms: deadline,
+            batch: 1,
+            difficulty: 0.5,
+        }
     }
 
     #[test]

@@ -1,0 +1,187 @@
+//! The joint controller's feedback half: tune the escalation threshold per
+//! monitor tick so delivered quality holds a target floor while heavy-lane
+//! demand stays minimal.
+//!
+//! Observability stance: the controller never reads a request's raw
+//! difficulty. It consumes per-request *quality verdicts* — in production
+//! the output of a sampled offline verifier or user feedback, here derived
+//! from the synthetic model — and walks the threshold with an asymmetric
+//! attack/decay step: quality debt is repaid fast (escalate more,
+//! immediately), spare quality is spent slowly (de-escalation churns the
+//! arbiter's demand signal, so it must be deliberate).
+
+use std::collections::VecDeque;
+
+/// Sliding-window threshold feedback controller.
+#[derive(Clone, Debug)]
+pub struct ThresholdController {
+    /// Quality-attainment target the cascade must hold.
+    pub quality_floor: f64,
+    /// Hysteresis band above the floor inside which the threshold rests.
+    pub margin: f64,
+    /// Threshold step when quality is below the floor (attack).
+    pub step: f64,
+    /// Threshold bounds (a cascade that escalates nothing/everything is a
+    /// configuration error, not a control regime).
+    pub min_threshold: f64,
+    pub max_threshold: f64,
+    /// Verdicts required in the window before the controller acts.
+    pub min_evidence: usize,
+    window: VecDeque<bool>,
+    cap: usize,
+    /// Total verdicts ever observed / the count at the last adjustment:
+    /// the controller refuses to walk the threshold on stale evidence
+    /// (e.g. during the post-trace drain, when no new outputs arrive).
+    observed: u64,
+    adjusted_at: u64,
+}
+
+impl ThresholdController {
+    pub fn new(quality_floor: f64) -> Self {
+        ThresholdController {
+            quality_floor,
+            margin: 0.02,
+            step: 0.05,
+            min_threshold: 0.02,
+            max_threshold: 0.98,
+            min_evidence: 32,
+            window: VecDeque::new(),
+            cap: 256,
+            observed: 0,
+            adjusted_at: 0,
+        }
+    }
+
+    /// Record one routed request's quality verdict: did (or will) the
+    /// delivered output meet the bar under the current routing decision?
+    pub fn observe(&mut self, quality_ok: bool) {
+        self.window.push_back(quality_ok);
+        self.observed += 1;
+        if self.window.len() > self.cap {
+            self.window.pop_front();
+        }
+    }
+
+    /// Quality attainment over the current window; None below the evidence
+    /// floor.
+    pub fn window_attainment(&self) -> Option<f64> {
+        if self.window.len() < self.min_evidence {
+            return None;
+        }
+        let ok = self.window.iter().filter(|&&q| q).count();
+        Some(ok as f64 / self.window.len() as f64)
+    }
+
+    /// One control tick: returns the adjusted threshold. A tick with no new
+    /// verdicts since the previous adjustment is a no-op — stale evidence
+    /// must not keep walking the threshold.
+    pub fn adjust(&mut self, tau: f64) -> f64 {
+        if self.observed == self.adjusted_at {
+            return tau;
+        }
+        self.adjusted_at = self.observed;
+        let Some(q) = self.window_attainment() else { return tau };
+        if q < self.quality_floor {
+            (tau + self.step).min(self.max_threshold)
+        } else if q > self.quality_floor + self.margin {
+            // Decay at half the attack rate: cheap capacity is reclaimed
+            // carefully, quality debt is never accumulated deliberately.
+            (tau - self.step * 0.5).max(self.min_threshold)
+        } else {
+            tau
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(c: &mut ThresholdController, ok: usize, bad: usize) {
+        for _ in 0..ok {
+            c.observe(true);
+        }
+        for _ in 0..bad {
+            c.observe(false);
+        }
+    }
+
+    #[test]
+    fn holds_still_without_evidence() {
+        let mut c = ThresholdController::new(0.95);
+        assert_eq!(c.adjust(0.4), 0.4);
+        fill(&mut c, 10, 0); // below min_evidence
+        assert_eq!(c.adjust(0.4), 0.4);
+    }
+
+    #[test]
+    fn raises_threshold_under_quality_debt() {
+        let mut c = ThresholdController::new(0.95);
+        fill(&mut c, 80, 20); // 0.80 < 0.95
+        let t1 = c.adjust(0.4);
+        assert!(t1 > 0.4);
+        assert!((t1 - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decays_threshold_when_quality_is_comfortable() {
+        let mut c = ThresholdController::new(0.90);
+        fill(&mut c, 100, 0); // 1.0 > 0.92
+        let t1 = c.adjust(0.6);
+        assert!(t1 < 0.6);
+        // Decay is slower than attack.
+        assert!((0.6 - t1) < c.step);
+    }
+
+    #[test]
+    fn rests_inside_the_hysteresis_band() {
+        let mut c = ThresholdController::new(0.90);
+        c.margin = 0.05;
+        fill(&mut c, 92, 8); // 0.92 ∈ [0.90, 0.95]
+        assert_eq!(c.adjust(0.5), 0.5);
+    }
+
+    #[test]
+    fn threshold_stays_bounded() {
+        let mut c = ThresholdController::new(0.99);
+        let mut tau = 0.9;
+        for _ in 0..50 {
+            fill(&mut c, 0, 4); // fresh failing evidence every tick
+            tau = c.adjust(tau);
+        }
+        assert!((tau - c.max_threshold).abs() < 1e-12, "{tau}");
+        let mut c2 = ThresholdController::new(0.5);
+        let mut tau = 0.1;
+        for _ in 0..50 {
+            fill(&mut c2, 4, 0);
+            tau = c2.adjust(tau);
+        }
+        assert!((tau - c2.min_threshold).abs() < 1e-12, "{tau}");
+    }
+
+    #[test]
+    fn stale_evidence_does_not_walk_the_threshold() {
+        // During the post-trace drain no new outputs arrive; repeated
+        // control ticks must leave the threshold exactly where the last
+        // fresh verdict put it.
+        let mut c = ThresholdController::new(0.90);
+        fill(&mut c, 100, 0);
+        let t1 = c.adjust(0.6); // acts once on the fresh window
+        assert!(t1 < 0.6);
+        for _ in 0..100 {
+            assert_eq!(c.adjust(t1), t1, "stale tick moved the threshold");
+        }
+        // New evidence re-arms the controller.
+        fill(&mut c, 4, 0);
+        assert!(c.adjust(t1) < t1);
+    }
+
+    #[test]
+    fn window_slides() {
+        let mut c = ThresholdController::new(0.9);
+        fill(&mut c, 0, 256);
+        assert!(c.window_attainment().unwrap() < 1e-9);
+        fill(&mut c, 256, 0); // fully displaces the bad prefix
+        assert!((c.window_attainment().unwrap() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,400 @@
+//! The cascade executor: serve one logical request stream on a
+//! cheap-variant lane plus a full-pipeline lane, escalating low-confidence
+//! cheap outputs as chained requests — all on top of the co-serving lane
+//! machinery ([`crate::coserve::run_coserve_hooked`]), so escalations are
+//! conserved by the exact invariants the coserve tests pin and the cluster
+//! arbiter keeps re-partitioning nodes between the variants as the routed
+//! demand split moves.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::cascade::controller::ThresholdController;
+use crate::cascade::router::{ConfidenceRouter, QualityModel};
+use crate::config::ClusterSpec;
+use crate::coserve::arbiter::ArbiterPolicy;
+use crate::coserve::exec::{
+    run_coserve, run_coserve_hooked, CoServeConfig, CoServeReport, LaneHook, PipelineSetup,
+};
+use crate::coserve::LaneSignal;
+use crate::metrics::Metrics;
+use crate::request::{Completion, Outcome, Request, RequestId};
+use crate::util::Rng;
+use crate::workload::{DifficultyModel, MixedTrace, Trace};
+
+/// Escalated requests reuse the original id with this bit set, so the two
+/// servings of one logical request can never collide in any lane's
+/// bookkeeping and the lineage stays recoverable.
+pub const ESC_BIT: u64 = 1 << 63;
+
+/// Lane indices inside a cascade run.
+pub const CHEAP_LANE: usize = 0;
+pub const HEAVY_LANE: usize = 1;
+
+/// How requests are routed across the two variants.
+pub enum RouterMode {
+    /// No cascade: every request served by the full pipeline on all nodes
+    /// (the quality-first baseline).
+    AlwaysHeavy,
+    /// Fixed escalation threshold, no feedback (DiffServe-style router with
+    /// day-one calibration left unattended).
+    StaticThreshold(f64),
+    /// Threshold tuned per monitor tick by the feedback controller, demand
+    /// split fed forward to the arbiter — the joint cascade.
+    Adaptive { initial_threshold: f64, controller: ThresholdController },
+}
+
+impl RouterMode {
+    pub fn label(&self) -> String {
+        match self {
+            RouterMode::AlwaysHeavy => "always-heavy".into(),
+            RouterMode::StaticThreshold(t) => format!("static-threshold@{t:.2}"),
+            RouterMode::Adaptive { .. } => "cascade-joint".into(),
+        }
+    }
+}
+
+/// Smallest threshold whose expected quality attainment meets `floor` on a
+/// difficulty sample drawn from `diff` at horizon fraction `x` — the static
+/// baseline's "calibrated on day-one traffic" procedure. Deterministic in
+/// `seed`.
+pub fn calibrate_threshold(
+    model: &QualityModel,
+    diff: &DifficultyModel,
+    x: f64,
+    floor: f64,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed);
+    let n = 4000;
+    let sample: Vec<(f64, f64)> = (0..n)
+        .map(|i| {
+            let d = diff.sample(rng.f64(), x);
+            (d, model.confidence(i as u64, d))
+        })
+        .collect();
+    let mut tau = 0.0;
+    loop {
+        let ok = sample
+            .iter()
+            .filter(|(d, c)| *c < tau || model.cheap_adequate(*d))
+            .count();
+        if ok as f64 / n as f64 >= floor || tau >= 1.0 {
+            return tau;
+        }
+        tau += 0.01;
+    }
+}
+
+/// Result of a cascade run.
+pub struct CascadeReport {
+    pub label: String,
+    /// Raw per-lane co-serving report (lane 0 = cheap, lane 1 = heavy; a
+    /// single heavy lane for [`RouterMode::AlwaysHeavy`]).
+    pub coserve: CoServeReport,
+    /// One completion per *logical* request: arrival = trace arrival,
+    /// finish = final serving's finish, plus per-request quality verdicts.
+    pub logical: Metrics,
+    /// Original ids of requests escalated to the heavy variant.
+    pub escalated: BTreeSet<RequestId>,
+    /// (time_ms, threshold) at every monitor tick.
+    pub threshold_trace: Vec<(f64, f64)>,
+    pub final_threshold: f64,
+}
+
+impl CascadeReport {
+    /// Fraction of logical requests whose delivered output met the quality
+    /// bar (1.0 for a run that recorded no verdicts — cannot happen via
+    /// [`run_cascade`], which scores every request).
+    pub fn quality_attainment(&self) -> f64 {
+        self.logical.quality_attainment().unwrap_or(1.0)
+    }
+
+    pub fn escalations(&self) -> usize {
+        self.escalated.len()
+    }
+
+    /// Escalations as a fraction of logical requests.
+    pub fn escalation_fraction(&self) -> f64 {
+        if self.logical.completions.is_empty() {
+            return 0.0;
+        }
+        self.escalated.len() as f64 / self.logical.completions.len() as f64
+    }
+}
+
+/// The router+controller as a co-serving lane hook.
+struct CascadeHook {
+    router: ConfidenceRouter,
+    controller: Option<ThresholdController>,
+    /// Original-id → difficulty for every trace request.
+    difficulty: HashMap<RequestId, f64>,
+    escalated: BTreeSet<RequestId>,
+    threshold_trace: Vec<(f64, f64)>,
+}
+
+impl LaneHook for CascadeHook {
+    fn on_complete(
+        &mut self,
+        lane: usize,
+        c: &Completion,
+        now_ms: f64,
+    ) -> Option<(usize, Request)> {
+        // Heavy completions are terminal, but they carry the deferred
+        // quality verdict for their escalation: the delivered output is
+        // full-strength only if the heavy serving actually completed. An
+        // overloaded heavy lane therefore shows up as quality debt in the
+        // controller window (which raises the routed-demand signal the
+        // arbiter allocates against) instead of being silently scored as
+        // success at escalation time.
+        if lane == HEAVY_LANE {
+            if let Some(ctrl) = &mut self.controller {
+                ctrl.observe(c.outcome == Outcome::Completed);
+            }
+            return None;
+        }
+        if lane != CHEAP_LANE {
+            return None;
+        }
+        // Cheap failures (OOM rejections) delivered nothing: nothing to
+        // escalate, but the quality miss must still reach the controller —
+        // a starved cheap lane is delivered-quality debt like any other.
+        // (Unfinished records only appear at horizon close-out, after the
+        // last control tick.)
+        if c.outcome != Outcome::Completed {
+            if let Some(ctrl) = &mut self.controller {
+                ctrl.observe(false);
+            }
+            return None;
+        }
+        let d = *self.difficulty.get(&c.id)?;
+        let conf = self.router.model.confidence(c.id, d);
+        self.router.observe(conf);
+        let escalate = self.router.should_escalate(conf);
+        if !escalate {
+            if let Some(ctrl) = &mut self.controller {
+                // Kept outputs stand or fall on the cheap variant's true
+                // adequacy (a sampled-verifier signal in production).
+                ctrl.observe(self.router.model.cheap_adequate(d));
+            }
+            return None;
+        }
+        self.escalated.insert(c.id);
+        Some((
+            HEAVY_LANE,
+            Request {
+                id: c.id | ESC_BIT,
+                pipeline_id: HEAVY_LANE,
+                shape_idx: c.shape_idx,
+                arrival_ms: now_ms,
+                deadline_ms: c.deadline_ms,
+                batch: 1,
+                difficulty: d,
+            },
+        ))
+    }
+
+    fn shape_signals(&mut self, now_ms: f64, signals: &mut [LaneSignal]) {
+        if let Some(ctrl) = &mut self.controller {
+            self.router.threshold = ctrl.adjust(self.router.threshold);
+        }
+        self.threshold_trace.push((now_ms, self.router.threshold));
+        // Joint optimization: the heavy lane's demand is not exogenous — it
+        // is whatever the router sends. Feed the arbiter the *routed*
+        // demand (predicted escalations of the cheap stream) so allocation
+        // follows threshold moves before the observed arrival rate catches
+        // up; max() keeps the observed rate as a floor while observation is
+        // ahead of prediction (e.g. right after a threshold drop).
+        if signals.len() > HEAVY_LANE {
+            let predicted = signals[CHEAP_LANE].demand_rps
+                * self.router.escalation_fraction(self.router.threshold);
+            signals[HEAVY_LANE].demand_rps = signals[HEAVY_LANE].demand_rps.max(predicted);
+        }
+    }
+}
+
+/// Serve a logical single-pipeline trace as a confidence-routed cascade
+/// over `cheap` (e.g. `sd3-turbo`) and `heavy` (e.g. `sd3`) variants, with
+/// `arbiter` re-partitioning the shared `cluster` between the two lanes.
+/// Both variants must share a shape table (see
+/// [`crate::config::PipelineSpec::turbo`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_cascade(
+    cheap: &PipelineSetup,
+    heavy: &PipelineSetup,
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &Trace,
+    mode: RouterMode,
+    quality: QualityModel,
+    cfg: &CoServeConfig,
+) -> CascadeReport {
+    let label = mode.label();
+    let difficulty: HashMap<RequestId, f64> =
+        trace.requests.iter().map(|r| (r.id, r.difficulty)).collect();
+
+    let (initial_threshold, controller) = match mode {
+        RouterMode::AlwaysHeavy => {
+            return run_always_heavy(heavy, cluster, arbiter, trace, quality, cfg, label);
+        }
+        RouterMode::StaticThreshold(t) => (t, None),
+        RouterMode::Adaptive { initial_threshold, controller } => {
+            (initial_threshold, Some(controller))
+        }
+    };
+
+    assert_eq!(
+        cheap.pipeline.shapes.len(),
+        heavy.pipeline.shapes.len(),
+        "cascade variants must share a shape table"
+    );
+    let mixed = MixedTrace {
+        requests: trace.requests.clone(),
+        duration_ms: trace.duration_ms,
+        n_pipelines: 2,
+    };
+    debug_assert!(mixed.requests.iter().all(|r| r.pipeline_id == CHEAP_LANE));
+    debug_assert!(mixed.requests.iter().all(|r| r.id & ESC_BIT == 0));
+
+    let mut hook = CascadeHook {
+        router: ConfidenceRouter::new(quality, initial_threshold),
+        controller,
+        difficulty: difficulty.clone(),
+        escalated: BTreeSet::new(),
+        threshold_trace: Vec::new(),
+    };
+    let setups = [cheap.clone(), heavy.clone()];
+    let coserve = run_coserve_hooked(&setups, cluster, arbiter, &mixed, cfg, &mut hook);
+
+    // Fold the two lanes into per-logical-request completions + verdicts.
+    let heavy_by_id: HashMap<RequestId, &Completion> =
+        coserve.lanes[HEAVY_LANE].metrics.completions.iter().map(|c| (c.id, c)).collect();
+    let mut logical = Metrics::new(cfg.span_ms);
+    for c in &coserve.lanes[CHEAP_LANE].metrics.completions {
+        let d = difficulty.get(&c.id).copied().unwrap_or(0.5);
+        if hook.escalated.contains(&c.id) {
+            match heavy_by_id.get(&(c.id | ESC_BIT)) {
+                Some(h) => {
+                    logical.record(Completion {
+                        id: c.id,
+                        shape_idx: c.shape_idx,
+                        arrival_ms: c.arrival_ms,
+                        deadline_ms: c.deadline_ms,
+                        finish_ms: h.finish_ms,
+                        outcome: h.outcome,
+                        vr_type: h.vr_type,
+                        stage_ms: [
+                            c.stage_ms[0] + h.stage_ms[0],
+                            c.stage_ms[1] + h.stage_ms[1],
+                            c.stage_ms[2] + h.stage_ms[2],
+                        ],
+                    });
+                    // Heavy output is adequate by construction — but only
+                    // if it was actually produced.
+                    logical.record_quality(h.outcome == Outcome::Completed);
+                }
+                None => {
+                    // Escalation injected but its completion record never
+                    // materialised: a conservation bug upstream. Account
+                    // rather than drop, like the lane executor does.
+                    debug_assert!(false, "escalated request {} vanished", c.id);
+                    logical.record(Completion {
+                        outcome: Outcome::Unfinished,
+                        finish_ms: f64::INFINITY,
+                        ..c.clone()
+                    });
+                    logical.record_quality(false);
+                }
+            }
+        } else {
+            logical.record(c.clone());
+            logical.record_quality(c.outcome == Outcome::Completed && quality.cheap_adequate(d));
+        }
+    }
+
+    let final_threshold = hook.router.threshold;
+    CascadeReport {
+        label,
+        coserve,
+        logical,
+        escalated: hook.escalated,
+        threshold_trace: hook.threshold_trace,
+        final_threshold,
+    }
+}
+
+/// The quality-first baseline: one heavy lane owning the whole cluster.
+#[allow(clippy::too_many_arguments)]
+fn run_always_heavy(
+    heavy: &PipelineSetup,
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &Trace,
+    // Heavy outputs are adequate whenever produced: the model is unused.
+    _quality: QualityModel,
+    cfg: &CoServeConfig,
+    label: String,
+) -> CascadeReport {
+    let mixed = MixedTrace {
+        requests: trace.requests.clone(),
+        duration_ms: trace.duration_ms,
+        n_pipelines: 1,
+    };
+    let coserve = run_coserve(std::slice::from_ref(heavy), cluster, arbiter, &mixed, cfg);
+    let mut logical = Metrics::new(cfg.span_ms);
+    for c in &coserve.lanes[0].metrics.completions {
+        logical.record(c.clone());
+        logical.record_quality(c.outcome == Outcome::Completed);
+    }
+    CascadeReport {
+        label,
+        coserve,
+        logical,
+        escalated: BTreeSet::new(),
+        threshold_trace: Vec::new(),
+        final_threshold: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_is_monotone_and_deterministic() {
+        let m = QualityModel::default();
+        let d = DifficultyModel::Drift { from: 0.3, to: 0.7 };
+        let easy = calibrate_threshold(&m, &d, 0.0, 0.95, 7);
+        let hard = calibrate_threshold(&m, &d, 1.0, 0.95, 7);
+        assert!(hard >= easy, "harder mix needs a higher threshold: {easy} vs {hard}");
+        assert_eq!(easy, calibrate_threshold(&m, &d, 0.0, 0.95, 7));
+        // A floor of 0 needs no escalation at all.
+        assert_eq!(calibrate_threshold(&m, &d, 0.5, 0.0, 7), 0.0);
+        // An unreachable floor saturates instead of looping forever.
+        let sat = calibrate_threshold(&m, &d, 1.0, 1.01, 7);
+        assert!(sat >= 1.0);
+    }
+
+    #[test]
+    fn router_mode_labels() {
+        assert_eq!(RouterMode::AlwaysHeavy.label(), "always-heavy");
+        assert_eq!(RouterMode::StaticThreshold(0.25).label(), "static-threshold@0.25");
+        assert_eq!(
+            RouterMode::Adaptive {
+                initial_threshold: 0.3,
+                controller: ThresholdController::new(0.95),
+            }
+            .label(),
+            "cascade-joint"
+        );
+    }
+
+    #[test]
+    fn esc_bit_never_collides_with_trace_ids() {
+        // Trace ids are sequential from 0; the escalation tag flips the top
+        // bit, so the two id spaces are disjoint for any realistic trace.
+        for id in [0u64, 1, 1 << 20, u32::MAX as u64] {
+            assert_ne!(id | ESC_BIT, id);
+            assert_eq!((id | ESC_BIT) & !ESC_BIT, id);
+        }
+    }
+}

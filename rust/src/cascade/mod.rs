@@ -1,0 +1,41 @@
+//! Query-aware cascade serving (DiffServe-style, PAPERS.md): route every
+//! request to a cheap step-distilled pipeline variant first, escalate only
+//! low-confidence outputs to the full pipeline, and co-optimize the
+//! escalation threshold with the cluster arbiter's node allocation.
+//!
+//! The pieces:
+//!
+//! * **Variant pipelines** — [`crate::config::PipelineSpec::turbo`] builds
+//!   the cheap variant (¼ of the denoising steps, same shape table), with
+//!   costs that stay `perfmodel`-consistent because Diffuse latency is
+//!   proportional to step count.
+//! * [`router`] — the synthetic difficulty→confidence→quality model
+//!   ([`QualityModel`]) and the threshold rule ([`ConfidenceRouter`]):
+//!   escalate when confidence < τ.
+//! * [`controller`] — the feedback half of the joint problem
+//!   ([`ThresholdController`]): walk τ per monitor tick to hold a quality
+//!   floor with minimal heavy demand.
+//! * [`exec`] — [`run_cascade`] drives both variants as co-serving lanes
+//!   via [`crate::coserve::LaneHook`]: escalations are injected as chained
+//!   requests (conserved by the lane machinery), and the router's
+//!   *predicted* escalation demand is fed into the arbiter's MCKP profit,
+//!   so allocation follows routing decisions instead of lagging observed
+//!   arrivals.
+//!
+//! Baselines live next to the B1–B6 set: `baselines::always_heavy()` (no
+//! cascade — the quality ceiling at full cost) and
+//! `baselines::static_threshold(τ)` (day-one calibration, no feedback).
+//! `examples/cascade.rs` tells the story end-to-end;
+//! `benches/cascade_pareto.rs` sweeps the quality/latency Pareto; exact
+//! request conservation across escalations and re-arbitrations is pinned by
+//! `rust/tests/cascade_integration.rs`.
+
+pub mod controller;
+pub mod exec;
+pub mod router;
+
+pub use controller::ThresholdController;
+pub use exec::{
+    calibrate_threshold, run_cascade, CascadeReport, RouterMode, CHEAP_LANE, ESC_BIT, HEAVY_LANE,
+};
+pub use router::{ConfidenceRouter, QualityModel};

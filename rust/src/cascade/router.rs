@@ -1,0 +1,153 @@
+//! The confidence router: the synthetic difficulty→confidence→quality
+//! model and the threshold rule that decides which cheap-variant outputs
+//! escalate to the full pipeline.
+//!
+//! The repo has no real image-quality scorer, so (mirroring DESIGN.md §1's
+//! substitution style) a deterministic synthetic model stands in for it:
+//! every request carries a seeded `difficulty` in [0, 1]
+//! ([`crate::request::Request::difficulty`]), the cheap variant's output
+//! confidence is `1 - difficulty` plus bounded per-request noise, and the
+//! cheap output is *actually adequate* iff `difficulty <= adequacy_cut`.
+//! The noise is what makes routing a real decision problem: confidence is
+//! informative but imperfectly calibrated, so any threshold trades missed
+//! escalations (quality loss) against spurious ones (heavy-lane demand).
+
+use std::collections::VecDeque;
+
+use crate::request::RequestId;
+use crate::util::rng::splitmix64;
+
+/// Deterministic synthetic quality model shared by router, controller and
+/// report scoring.
+#[derive(Clone, Copy, Debug)]
+pub struct QualityModel {
+    /// The cheap variant's output is adequate iff `difficulty <= adequacy_cut`.
+    pub adequacy_cut: f64,
+    /// Half-amplitude of the deterministic per-request confidence noise.
+    pub conf_noise: f64,
+}
+
+impl Default for QualityModel {
+    fn default() -> Self {
+        QualityModel { adequacy_cut: 0.55, conf_noise: 0.12 }
+    }
+}
+
+/// Stateless per-request noise seed: SplitMix64 finaliser → uniform [0, 1).
+fn hash01(id: RequestId) -> f64 {
+    (splitmix64(id) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl QualityModel {
+    /// The cheap variant's self-reported confidence for this request.
+    pub fn confidence(&self, id: RequestId, difficulty: f64) -> f64 {
+        let eps = self.conf_noise * (2.0 * hash01(id) - 1.0);
+        (1.0 - difficulty + eps).clamp(0.0, 1.0)
+    }
+
+    /// Ground truth: would the cheap output satisfy the user?
+    pub fn cheap_adequate(&self, difficulty: f64) -> bool {
+        difficulty <= self.adequacy_cut
+    }
+}
+
+/// Threshold router: escalate a cheap completion when its confidence falls
+/// below `threshold`. Keeps a sliding record of recent confidences so the
+/// joint controller can *predict* the escalation fraction any candidate
+/// threshold would produce — the controllable-demand signal fed to the
+/// cluster arbiter.
+pub struct ConfidenceRouter {
+    pub model: QualityModel,
+    pub threshold: f64,
+    recent_conf: VecDeque<f64>,
+    cap: usize,
+}
+
+impl ConfidenceRouter {
+    pub fn new(model: QualityModel, threshold: f64) -> Self {
+        ConfidenceRouter { model, threshold, recent_conf: VecDeque::new(), cap: 512 }
+    }
+
+    /// Record an observed cheap-output confidence.
+    pub fn observe(&mut self, conf: f64) {
+        self.recent_conf.push_back(conf);
+        if self.recent_conf.len() > self.cap {
+            self.recent_conf.pop_front();
+        }
+    }
+
+    pub fn should_escalate(&self, conf: f64) -> bool {
+        conf < self.threshold
+    }
+
+    /// Expected escalation fraction at threshold `tau` under the recent
+    /// confidence distribution. Before any observation, fall back to the
+    /// uniform-confidence prior (fraction below `tau` is `tau` itself).
+    pub fn escalation_fraction(&self, tau: f64) -> f64 {
+        if self.recent_conf.is_empty() {
+            return tau.clamp(0.0, 1.0);
+        }
+        let below = self.recent_conf.iter().filter(|&&c| c < tau).count();
+        below as f64 / self.recent_conf.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn confidence_tracks_difficulty_with_bounded_noise() {
+        let m = QualityModel::default();
+        for id in 0..200u64 {
+            let d = (id as f64) / 200.0;
+            let c = m.confidence(id, d);
+            assert!((0.0..=1.0).contains(&c));
+            assert!((c - (1.0 - d)).abs() <= m.conf_noise + 1e-12, "id {id}: {c} vs {}", 1.0 - d);
+            // Deterministic per id.
+            assert_eq!(c, m.confidence(id, d));
+        }
+    }
+
+    #[test]
+    fn adequacy_is_a_hard_cut() {
+        let m = QualityModel::default();
+        assert!(m.cheap_adequate(0.0));
+        assert!(m.cheap_adequate(m.adequacy_cut));
+        assert!(!m.cheap_adequate(m.adequacy_cut + 1e-9));
+    }
+
+    #[test]
+    fn escalation_fraction_matches_observed_distribution() {
+        let mut r = ConfidenceRouter::new(QualityModel::default(), 0.5);
+        // Prior before observations: uniform.
+        assert!((r.escalation_fraction(0.3) - 0.3).abs() < 1e-12);
+        for i in 0..100 {
+            r.observe(i as f64 / 100.0);
+        }
+        assert!((r.escalation_fraction(0.5) - 0.5).abs() < 0.02);
+        assert_eq!(r.escalation_fraction(0.0), 0.0);
+        assert_eq!(r.escalation_fraction(1.1), 1.0);
+        // Monotone in tau.
+        assert!(r.escalation_fraction(0.8) >= r.escalation_fraction(0.2));
+    }
+
+    #[test]
+    fn router_escalates_below_threshold_only() {
+        let r = ConfidenceRouter::new(QualityModel::default(), 0.4);
+        assert!(r.should_escalate(0.39));
+        assert!(!r.should_escalate(0.4));
+        assert!(!r.should_escalate(0.9));
+    }
+
+    #[test]
+    fn noise_hash_is_roughly_uniform() {
+        let n = 10_000u64;
+        let mean: f64 = (0..n).map(hash01).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+        for id in 0..n {
+            let v = hash01(id);
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+}

@@ -111,4 +111,52 @@ mod tests {
         hb.consume(5.0);
         assert_eq!(hb.used_gb(), 0.0);
     }
+
+    #[test]
+    fn repeated_acquire_release_accounting_stays_exact() {
+        // A long push/consume cycle must neither leak (used_gb creeping up,
+        // turning device pushes into spills) nor lose capacity accounting:
+        // after every balanced cycle the buffer behaves like new.
+        let mut hb = HandoffBuffer::new(4.0);
+        for round in 0..100 {
+            assert_eq!(hb.push(1.5), StagePath::Device, "round {round}");
+            assert_eq!(hb.push(2.0), StagePath::Device, "round {round}");
+            // 3.5 + 1.0 > 4.0: spills, and spills must not consume capacity.
+            assert_eq!(hb.push(1.0), StagePath::Host, "round {round}");
+            assert_eq!(hb.used_gb(), 3.5);
+            hb.consume(2.0);
+            hb.consume(1.5);
+            assert_eq!(hb.used_gb(), 0.0, "round {round}: residue");
+        }
+        assert_eq!(hb.device_pushes, 200);
+        assert_eq!(hb.host_spills, 100);
+        assert_eq!(hb.cap_gb(), 4.0);
+    }
+
+    #[test]
+    fn unbalanced_release_cannot_mint_capacity() {
+        // Over-consuming (double release) clamps at zero rather than going
+        // negative — a later push must still respect the real capacity.
+        let mut hb = HandoffBuffer::new(2.0);
+        hb.push(1.0);
+        hb.consume(1.0);
+        hb.consume(1.0); // double release of the same tensor
+        assert_eq!(hb.used_gb(), 0.0);
+        assert_eq!(hb.push(2.0), StagePath::Device);
+        assert_eq!(hb.push(0.1), StagePath::Host, "capacity was not minted");
+    }
+
+    #[test]
+    fn per_gpu_buffers_are_independent() {
+        let mut hbs = HandoffBuffers::new(3, 1.0);
+        assert_eq!(hbs.gpu(0).push(1.0), StagePath::Device);
+        assert_eq!(hbs.gpu(0).push(0.1), StagePath::Host);
+        // A full neighbour does not affect other GPUs.
+        assert_eq!(hbs.gpu(1).push(1.0), StagePath::Device);
+        assert_eq!(hbs.total_device_pushes(), 2);
+        assert_eq!(hbs.total_host_spills(), 1);
+        hbs.gpu(0).consume(1.0);
+        assert_eq!(hbs.gpu(0).push(0.5), StagePath::Device);
+        assert_eq!(hbs.gpu(2).used_gb(), 0.0);
+    }
 }

@@ -255,11 +255,32 @@ impl PipelineSpec {
         }
     }
 
+    /// Cheap "turbo" (step-distilled) variant of this pipeline for cascade
+    /// serving (`cascade`): same architecture, same shape table (so a shape
+    /// index is valid on both variants and escalation is a plain re-tag),
+    /// one quarter of the denoising steps. Costs stay `perfmodel`-consistent
+    /// for free: Diffuse latency is proportional to `steps`, so the variant's
+    /// profile is genuinely ~4x cheaper on diffusion-dominated shapes.
+    pub fn turbo(&self) -> PipelineSpec {
+        let name = match self.name {
+            "sd3" => "sd3-turbo",
+            "flux" => "flux-turbo",
+            "cogvideo" => "cogvideo-turbo",
+            "hunyuan" => "hunyuan-turbo",
+            "mini" => "mini-turbo",
+            _ => "turbo",
+        };
+        PipelineSpec { name, steps: (self.steps / 4).max(1), ..self.clone() }
+    }
+
     pub fn all_paper() -> Vec<PipelineSpec> {
         vec![Self::sd3(), Self::flux(), Self::cogvideo(), Self::hunyuan()]
     }
 
     pub fn by_name(name: &str) -> Option<PipelineSpec> {
+        if let Some(base) = name.strip_suffix("-turbo") {
+            return Self::by_name(base).map(|p| p.turbo());
+        }
         match name {
             "sd3" => Some(Self::sd3()),
             "flux" => Some(Self::flux()),
@@ -317,6 +338,30 @@ mod tests {
             assert_eq!(PipelineSpec::by_name(p.name).unwrap().name, p.name);
         }
         assert!(PipelineSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn turbo_variant_keeps_shapes_and_cuts_steps() {
+        for p in PipelineSpec::all_paper() {
+            let t = p.turbo();
+            assert_eq!(t.steps, (p.steps / 4).max(1), "{}", p.name);
+            assert_eq!(t.shapes.len(), p.shapes.len());
+            for (a, b) in t.shapes.iter().zip(&p.shapes) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.l_d, b.l_d);
+            }
+            assert!(t.name.ends_with("-turbo"), "{}", t.name);
+            // Same stage models: only the step count is distilled away.
+            assert_eq!(t.diffuse.params_b, p.diffuse.params_b);
+        }
+    }
+
+    #[test]
+    fn by_name_resolves_turbo_variants() {
+        let t = PipelineSpec::by_name("sd3-turbo").unwrap();
+        assert_eq!(t.name, "sd3-turbo");
+        assert_eq!(t.steps, PipelineSpec::sd3().steps / 4);
+        assert!(PipelineSpec::by_name("nope-turbo").is_none());
     }
 
     #[test]

@@ -25,6 +25,11 @@ pub struct LaneSignal {
     /// True when the lane's monitor switch-trigger fired (stage-rate
     /// imbalance) or its backlog exceeds the congestion threshold.
     pub trigger: bool,
+    /// Business priority of this lane's served requests in the MCKP profit
+    /// (paid tiers, latency classes). 1.0 is the uniform default and
+    /// preserves the unweighted objective; a 2x lane's served requests are
+    /// worth twice as much when nodes are contested.
+    pub slo_weight: f64,
 }
 
 /// Cluster-level allocation policy: maps lane signals to a node allocation.
@@ -122,12 +127,14 @@ impl ClusterArbiter {
         }
     }
 
-    /// Profit of handing `nodes` nodes to a lane: served rate (capped by
-    /// demand) at the SLO reward scale, plus a small headroom term so spare
-    /// capacity is still worth distributing (burst absorption).
+    /// Profit of handing `nodes` nodes to a lane: SLO-weighted served rate
+    /// (capped by demand) at the SLO reward scale, plus a small headroom
+    /// term so spare capacity is still worth distributing (burst
+    /// absorption). `slo_weight` scales only the served-rate term: priority
+    /// buys contested capacity, not idle hoarding.
     fn profit(&self, sig: &LaneSignal, nodes: usize) -> f64 {
         let cap = nodes as f64 * self.gpus_per_node as f64 * sig.per_gpu_rps.max(1e-9);
-        1000.0 * sig.demand_rps.min(cap) + 1e-3 * cap
+        1000.0 * sig.slo_weight.max(0.0) * sig.demand_rps.min(cap) + 1e-3 * cap
     }
 
     /// Solve the cluster allocation problem for the given signals.
@@ -222,7 +229,14 @@ mod tests {
     use super::*;
 
     fn sig(demand: f64, per_gpu: f64) -> LaneSignal {
-        LaneSignal { demand_rps: demand, per_gpu_rps: per_gpu, backlog: 0, gpus: 0, trigger: false }
+        LaneSignal {
+            demand_rps: demand,
+            per_gpu_rps: per_gpu,
+            backlog: 0,
+            gpus: 0,
+            trigger: false,
+            slo_weight: 1.0,
+        }
     }
 
     #[test]
@@ -264,6 +278,38 @@ mod tests {
                 assert!(out[1] >= out[0], "{out:?}");
             }
         }
+    }
+
+    #[test]
+    fn weighted_lane_wins_contested_nodes() {
+        // Two identical overloaded lanes: demand far above what the cluster
+        // can serve, so every node is contested. With uniform weights the
+        // split is symmetric; a 2x slo_weight must tilt nodes to the paid
+        // lane.
+        let arb = ClusterArbiter::new(8);
+        let mk = |w: f64| LaneSignal {
+            demand_rps: 10.0,
+            per_gpu_rps: 0.05,
+            backlog: 0,
+            gpus: 0,
+            trigger: false,
+            slo_weight: w,
+        };
+        // Uniform default preserves the unweighted objective: demand still
+        // decides. An overloaded lane beats a satisfied one at equal weight
+        // (the satisfied lane's marginal node earns only headroom).
+        let mut quiet = mk(1.0);
+        quiet.demand_rps = 0.2;
+        let uniform = arb.solve(&[mk(1.0), quiet], 8);
+        assert_eq!(uniform.iter().sum::<usize>(), 8);
+        assert!(uniform[0] > uniform[1], "{uniform:?}");
+        let weighted = arb.solve(&[mk(2.0), mk(1.0)], 8);
+        assert_eq!(weighted.iter().sum::<usize>(), 8);
+        assert!(
+            weighted[0] > weighted[1],
+            "2x-weighted lane must win contested nodes: {weighted:?}"
+        );
+        assert!(weighted.iter().all(|&x| x >= 1), "floor still holds: {weighted:?}");
     }
 
     #[test]

@@ -30,10 +30,14 @@ use crate::util::Rng;
 use crate::workload::MixedTrace;
 
 /// Everything the executor needs to serve one pipeline.
+#[derive(Clone)]
 pub struct PipelineSetup {
     pub pipeline: PipelineSpec,
     pub profile: Profile,
     pub consts: SolverConstants,
+    /// Business priority of this lane in the arbiter's MCKP profit
+    /// (1.0 = uniform default; see [`LaneSignal::slo_weight`]).
+    pub slo_weight: f64,
 }
 
 impl PipelineSetup {
@@ -45,9 +49,45 @@ impl PipelineSetup {
             .unwrap_or_else(|| panic!("unknown pipeline {pipeline_name}"));
         let consts = SolverConstants::default();
         let profile = Profile::build(&PerfModel::new(cluster.clone()), &pipeline, &consts);
-        PipelineSetup { pipeline, profile, consts }
+        PipelineSetup { pipeline, profile, consts, slo_weight: 1.0 }
+    }
+
+    /// Same setup with a non-uniform arbiter priority.
+    pub fn with_slo_weight(mut self, w: f64) -> Self {
+        self.slo_weight = w;
+        self
     }
 }
+
+/// Extension hook over the co-serving event loop — the cascade layer's
+/// entry point into the lane machinery. Both methods default to no-ops, so
+/// plain co-serving pays nothing.
+pub trait LaneHook {
+    /// A request just produced a completion record on `lane`. Return
+    /// `Some((lane, request))` to inject a chained request (a cascade
+    /// escalation): it arrives at `now_ms` like any trace request and is
+    /// conserved by the same lane machinery.
+    fn on_complete(
+        &mut self,
+        _lane: usize,
+        _c: &Completion,
+        _now_ms: f64,
+    ) -> Option<(usize, Request)> {
+        None
+    }
+
+    /// Observe/adjust the per-lane signals right before the arbiter sees
+    /// them (including once at t=0 for the bootstrap allocation). The
+    /// cascade controller uses this to tune its escalation threshold and to
+    /// overwrite the heavy lane's demand with the *routed* (controllable)
+    /// demand — allocation and routing become one joint problem.
+    fn shape_signals(&mut self, _now_ms: f64, _signals: &mut [LaneSignal]) {}
+}
+
+/// The no-op hook plain co-serving runs with.
+pub struct NoopHook;
+
+impl LaneHook for NoopHook {}
 
 /// Executor parameters (mirrors `sim::SimConfig`, plus arbiter knobs).
 #[derive(Clone, Debug)]
@@ -176,6 +216,8 @@ struct Lane {
     /// Per-GPU characteristics template; `nodes` scales it per partition.
     template: ClusterSpec,
     nodes: usize,
+    /// Arbiter priority (copied from the setup).
+    slo_weight: f64,
     policy: TridentPolicy,
     engine: Engine,
     monitor: Monitor,
@@ -218,6 +260,7 @@ impl Lane {
             consts: setup.consts.clone(),
             template: template.clone(),
             nodes,
+            slo_weight: setup.slo_weight,
             policy,
             engine,
             monitor: Monitor::new(setup.pipeline.t_win_ms, setup.consts.imbalance_trigger),
@@ -502,6 +545,41 @@ fn per_gpu_rps(setup: &PipelineSetup, cluster: &ClusterSpec) -> f64 {
 // The co-serving run
 // ---------------------------------------------------------------------------
 
+/// Replay completions recorded since the last pump through the hook,
+/// injecting any chained requests it returns. Loops because an injected
+/// request can itself complete immediately (infeasible-shape rejection) —
+/// bounded, so a hook that keeps re-injecting in response to synchronous
+/// failures fails loudly instead of hanging the simulation at one
+/// timestamp.
+fn pump_hook(lanes: &mut [Lane], marks: &mut [usize], hook: &mut dyn LaneHook, now_ms: f64) {
+    let mut rounds = 0usize;
+    loop {
+        rounds += 1;
+        assert!(
+            rounds <= 64,
+            "LaneHook injection loop did not quiesce at t={now_ms}: \
+             a hook is chaining requests off synchronously-failing injections"
+        );
+        let mut injected: Vec<(usize, Request)> = Vec::new();
+        for (p, mark) in marks.iter_mut().enumerate() {
+            while *mark < lanes[p].metrics.completions.len() {
+                let c = lanes[p].metrics.completions[*mark].clone();
+                *mark += 1;
+                if let Some(chained) = hook.on_complete(p, &c, now_ms) {
+                    injected.push(chained);
+                }
+            }
+        }
+        if injected.is_empty() {
+            break;
+        }
+        for (q, r) in injected {
+            assert!(q < lanes.len(), "hook injected into unknown lane {q}");
+            lanes[q].on_arrival(r, now_ms);
+        }
+    }
+}
+
 /// Serve a mixed multi-pipeline trace on one shared cluster under the given
 /// arbiter. `cluster.nodes` is the shared pool the arbiter partitions;
 /// `setups[p]` serves `trace` requests tagged `pipeline_id == p`.
@@ -511,6 +589,19 @@ pub fn run_coserve(
     arbiter: &mut dyn ArbiterPolicy,
     trace: &MixedTrace,
     cfg: &CoServeConfig,
+) -> CoServeReport {
+    run_coserve_hooked(setups, cluster, arbiter, trace, cfg, &mut NoopHook)
+}
+
+/// [`run_coserve`] with a [`LaneHook`] observing completions and arbiter
+/// signals — the substrate the cascade layer (`crate::cascade`) builds on.
+pub fn run_coserve_hooked(
+    setups: &[PipelineSetup],
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &MixedTrace,
+    cfg: &CoServeConfig,
+    hook: &mut dyn LaneHook,
 ) -> CoServeReport {
     let n = setups.len();
     assert!(n > 0, "no pipelines");
@@ -526,15 +617,17 @@ pub fn run_coserve(
 
     // Bootstrap lanes on the arbiter's initial allocation.
     let per_gpu: Vec<f64> = setups.iter().map(|s| per_gpu_rps(s, cluster)).collect();
-    let init_signals: Vec<LaneSignal> = (0..n)
+    let mut init_signals: Vec<LaneSignal> = (0..n)
         .map(|p| LaneSignal {
             demand_rps: avg_rps[p],
             per_gpu_rps: per_gpu[p],
             backlog: 0,
             gpus: 0,
             trigger: false,
+            slo_weight: setups[p].slo_weight,
         })
         .collect();
+    hook.shape_signals(0.0, &mut init_signals);
     let mut alloc = arbiter.initial(&init_signals, total_nodes);
     assert_eq!(alloc.len(), n, "arbiter returned wrong lane count");
     assert_eq!(alloc.iter().sum::<usize>(), total_nodes, "arbiter must cover the cluster");
@@ -564,6 +657,8 @@ pub fn run_coserve(
     let mut arbitrations = 0usize;
     let mut moved_gpus = 0usize;
     let mut vram_violations = 0usize;
+    // Per-lane watermark into metrics.completions for the hook pump.
+    let mut hook_marks = vec![0usize; n];
 
     // Apply a pending allocation once every resizing lane has drained.
     let try_swap = |lanes: &mut Vec<Lane>,
@@ -583,6 +678,7 @@ pub fn run_coserve(
         for (p, lane) in lanes.iter_mut().enumerate() {
             if target[p] == alloc[p] {
                 lane.draining = false;
+                lane.policy.pending_resize = None;
                 continue;
             }
             *vram_violations += lane.vram_violations();
@@ -627,7 +723,7 @@ pub fn run_coserve(
             }
             EventKind::MonitorTick => {
                 // Per-lane signals; congestion = monitor trigger or backlog.
-                let signals: Vec<LaneSignal> = lanes
+                let mut signals: Vec<LaneSignal> = lanes
                     .iter_mut()
                     .enumerate()
                     .map(|(p, lane)| {
@@ -652,9 +748,11 @@ pub fn run_coserve(
                             backlog,
                             gpus,
                             trigger,
+                            slo_weight: lane.slo_weight,
                         }
                     })
                     .collect();
+                hook.shape_signals(now, &mut signals);
                 if pending_alloc.is_none() {
                     if let Some(target) =
                         arbiter.rearbitrate(now, &signals, &alloc, total_nodes)
@@ -665,21 +763,30 @@ pub fn run_coserve(
                         if target != alloc {
                             for (p, lane) in lanes.iter_mut().enumerate() {
                                 lane.draining = target[p] != alloc[p];
+                                // Arbiter-aware guard: a resizing lane must
+                                // stop planning placements for GPUs it is
+                                // about to lose (or gain — the rebuild
+                                // replans from scratch either way).
+                                lane.policy.pending_resize =
+                                    if lane.draining { Some(target[p] * gpn) } else { None };
                             }
                             pending_alloc = Some(target);
                         }
                     }
-                    // Intra-lane placement switching stays active when no
-                    // cluster-level move is in flight.
-                    if pending_alloc.is_none() {
-                        for lane in lanes.iter_mut() {
-                            let g = lane.gpus();
-                            let Lane { policy, monitor, engine, metrics, .. } = lane;
-                            if let Some(plan) = policy.maybe_switch(now, monitor, g) {
-                                engine.apply_switch(plan);
-                                metrics.record_switch(now);
-                            }
-                        }
+                }
+                // Intra-lane placement switching: lanes untouched by the
+                // pending allocation keep adapting while their neighbours
+                // drain; resizing lanes are suppressed both here and by the
+                // policy's own pending_resize guard.
+                for lane in lanes.iter_mut() {
+                    if lane.draining {
+                        continue;
+                    }
+                    let g = lane.gpus();
+                    let Lane { policy, monitor, engine, metrics, .. } = lane;
+                    if let Some(plan) = policy.maybe_switch(now, monitor, g) {
+                        engine.apply_switch(plan);
+                        metrics.record_switch(now);
                     }
                 }
                 try_swap(
@@ -710,6 +817,9 @@ pub fn run_coserve(
                 );
             }
         }
+        // Let the hook see every completion recorded by this event (and
+        // inject chained requests at the same timestamp).
+        pump_hook(&mut lanes, &mut hook_marks, hook, now);
     }
 
     // Close out: everything unfinished is an SLO miss; final VRAM audit on

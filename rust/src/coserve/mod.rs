@@ -23,4 +23,7 @@ pub mod arbiter;
 pub mod exec;
 
 pub use arbiter::{demand_proportional, ArbiterPolicy, ClusterArbiter, LaneSignal};
-pub use exec::{run_coserve, CoServeConfig, CoServeReport, LaneReport, PipelineSetup};
+pub use exec::{
+    run_coserve, run_coserve_hooked, CoServeConfig, CoServeReport, LaneHook, LaneReport, NoopHook,
+    PipelineSetup,
+};

@@ -501,6 +501,7 @@ mod tests {
             arrival_ms: now,
             deadline_ms: now + f.profile.slo_ms[idx],
             batch: 1,
+            difficulty: 0.5,
         }
     }
 
@@ -607,6 +608,7 @@ mod tests {
             arrival_ms: 0.0,
             deadline_ms: f.profile.slo_ms[heavy],
             batch: 1,
+            difficulty: 0.5,
         };
         let (plans, _) = d.dispatch(&[r], &view);
         assert_eq!(plans.len(), 1, "heavy request must still dispatch");
@@ -633,6 +635,7 @@ mod tests {
                         arrival_ms: 0.0,
                         deadline_ms: f.profile.slo_ms[shape_idx],
                         batch: 1,
+                        difficulty: 0.5,
                     }
                 })
                 .collect();

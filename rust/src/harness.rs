@@ -8,7 +8,7 @@ use crate::metrics::Metrics;
 use crate::perfmodel::PerfModel;
 use crate::profiler::Profile;
 use crate::sim::{run_sim, ServingPolicy, SimConfig, TridentPolicy};
-use crate::workload::{TraceGen, WorkloadKind};
+use crate::workload::{DifficultyModel, TraceGen, WorkloadKind};
 
 /// Everything needed to run experiments on one pipeline.
 pub struct Setup {
@@ -99,7 +99,12 @@ impl Setup {
         seed: u64,
         rate_scale: f64,
     ) -> Metrics {
-        let tg = TraceGen { pipeline: &self.pipeline, profile: &self.profile, rate_scale };
+        let tg = TraceGen {
+            pipeline: &self.pipeline,
+            profile: &self.profile,
+            rate_scale,
+            difficulty: DifficultyModel::Uniform,
+        };
         let trace = tg.generate(workload, duration_ms, seed);
         let mut policy = self.policy(policy_name);
         let cfg = SimConfig { seed, ..Default::default() };

@@ -22,6 +22,8 @@
 //!   baseline.
 //! * [`coserve`] — multi-pipeline co-serving: cluster arbiter + per-pipeline
 //!   lanes sharing one GPU cluster.
+//! * [`cascade`] — query-aware cascade serving: confidence router over
+//!   cheap/full pipeline variants, jointly optimized with the arbiter.
 //! * [`metrics`] — SLO attainment, latency percentiles, Fig-10 reporting.
 //! * [`runtime`] — artifact manifest; with feature `pjrt`, the PJRT
 //!   loader/executor for the AOT HLO artifacts.
@@ -30,6 +32,7 @@
 
 pub mod baselines;
 pub mod batching;
+pub mod cascade;
 pub mod cluster;
 pub mod config;
 pub mod coserve;

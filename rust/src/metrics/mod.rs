@@ -1,6 +1,6 @@
-//! Metrics capture: SLO attainment, latency distribution, per-span
-//! throughput (Fig 11), VR-type distribution (Fig 12), OOM accounting, and
-//! dispatcher solve telemetry (Table 4).
+//! Metrics capture: SLO attainment, quality attainment (cascade serving),
+//! latency distribution, per-span throughput (Fig 11), VR-type distribution
+//! (Fig 12), OOM accounting, and dispatcher solve telemetry (Table 4).
 
 use std::collections::BTreeMap;
 
@@ -18,6 +18,10 @@ pub struct Metrics {
     pub switch_events: Vec<f64>,
     /// Span length for throughput series, ms.
     pub span_ms: f64,
+    /// Per-request quality verdicts (cascade serving: did the delivered
+    /// output meet the quality bar?). Empty for plain serving runs, where
+    /// every output comes from the full-strength pipeline by construction.
+    pub quality: Vec<bool>,
 }
 
 /// Summary row matching the paper's Fig 10 reporting.
@@ -28,7 +32,10 @@ pub struct Summary {
     pub slo_attainment: f64,
     pub mean_latency_ms: f64,
     pub p95_latency_ms: f64,
+    pub p99_latency_ms: f64,
     pub mean_solve_ms: f64,
+    /// Quality attainment (cascade runs); None when no verdicts recorded.
+    pub quality_attainment: Option<f64>,
 }
 
 impl Metrics {
@@ -46,6 +53,21 @@ impl Metrics {
 
     pub fn record_switch(&mut self, t_ms: f64) {
         self.switch_events.push(t_ms);
+    }
+
+    /// Record one request's quality verdict (cascade serving).
+    pub fn record_quality(&mut self, ok: bool) {
+        self.quality.push(ok);
+    }
+
+    /// Fraction of requests whose delivered output met the quality bar;
+    /// None when the run recorded no verdicts (plain serving).
+    pub fn quality_attainment(&self) -> Option<f64> {
+        if self.quality.is_empty() {
+            return None;
+        }
+        let ok = self.quality.iter().filter(|&&q| q).count();
+        Some(ok as f64 / self.quality.len() as f64)
     }
 
     /// SLO attainment: fraction of all requests (including OOM-rejected)
@@ -83,6 +105,10 @@ impl Metrics {
 
     pub fn p95_latency_ms(&self) -> f64 {
         self.latency_percentile_ms(95.0)
+    }
+
+    pub fn p99_latency_ms(&self) -> f64 {
+        self.latency_percentile_ms(99.0)
     }
 
     pub fn oom_count(&self) -> usize {
@@ -125,6 +151,8 @@ impl Metrics {
             slo_attainment: self.slo_attainment(),
             mean_latency_ms: self.mean_latency_ms(),
             p95_latency_ms: self.p95_latency_ms(),
+            p99_latency_ms: self.p99_latency_ms(),
+            quality_attainment: self.quality_attainment(),
             // 0.0 sentinel: policies without an ILP record no solves.
             mean_solve_ms: mean(&self.solve_stats.iter().map(|s| s.solve_ms).collect::<Vec<_>>())
                 .unwrap_or(0.0),
@@ -143,7 +171,11 @@ impl Metrics {
         obj.insert("slo_attainment".into(), Json::Num(s.slo_attainment));
         obj.insert("mean_latency_ms".into(), Json::Num(s.mean_latency_ms));
         obj.insert("p95_latency_ms".into(), Json::Num(s.p95_latency_ms));
+        obj.insert("p99_latency_ms".into(), Json::Num(s.p99_latency_ms));
         obj.insert("mean_solve_ms".into(), Json::Num(s.mean_solve_ms));
+        if let Some(q) = s.quality_attainment {
+            obj.insert("quality_attainment".into(), Json::Num(q));
+        }
         obj.insert("switches".into(), Json::Num(self.switch_events.len() as f64));
         obj.insert(
             "vr_distribution".into(),
@@ -157,14 +189,19 @@ impl std::fmt::Display for Summary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "n={:<5} oom={:<4} slo={:.3} mean={:.1}s p95={:.1}s solve={:.2}ms",
+            "n={:<5} oom={:<4} slo={:.3} mean={:.1}s p95={:.1}s p99={:.1}s solve={:.2}ms",
             self.n,
             self.oom,
             self.slo_attainment,
             self.mean_latency_ms / 1000.0,
             self.p95_latency_ms / 1000.0,
+            self.p99_latency_ms / 1000.0,
             self.mean_solve_ms,
-        )
+        )?;
+        if let Some(q) = self.quality_attainment {
+            write!(f, " quality={q:.3}")?;
+        }
+        Ok(())
     }
 }
 
@@ -237,6 +274,36 @@ mod tests {
         }
         assert!((m.p50_latency_ms() - 200.0).abs() < 1e-9);
         assert!((m.latency_percentile_ms(100.0) - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p99_tracks_the_tail() {
+        let mut m = Metrics::new(1000.0);
+        assert_eq!(m.p99_latency_ms(), 0.0);
+        for i in 1..=100 {
+            m.record(comp(i as f64, 1e9, Outcome::Completed, 0));
+        }
+        let s = m.summary();
+        assert!(s.p99_latency_ms >= s.p95_latency_ms);
+        assert!((m.p99_latency_ms() - 99.01).abs() < 0.5, "{}", m.p99_latency_ms());
+        assert!((m.p95_latency_ms() - 95.05).abs() < 0.5, "{}", m.p95_latency_ms());
+    }
+
+    #[test]
+    fn quality_attainment_none_until_recorded() {
+        let mut m = Metrics::new(1000.0);
+        m.record(comp(50.0, 100.0, Outcome::Completed, 0));
+        assert_eq!(m.quality_attainment(), None);
+        assert_eq!(m.summary().quality_attainment, None);
+        m.record_quality(true);
+        m.record_quality(true);
+        m.record_quality(false);
+        m.record_quality(true);
+        assert!((m.quality_attainment().unwrap() - 0.75).abs() < 1e-9);
+        // Serialised only when present.
+        let j = m.to_json("q-run");
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("quality_attainment").unwrap().as_f64(), Some(0.75));
     }
 
     #[test]

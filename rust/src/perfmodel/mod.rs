@@ -176,6 +176,16 @@ impl PerfModel {
         self.dispatch_overhead_ms + base / (k as f64 * eff)
     }
 
+    /// End-to-end single-request latency at Diffuse degree `k` (Encode and
+    /// Decode at degree 1) — the per-variant cost summary
+    /// `examples/cascade.rs` prints when comparing a turbo variant against
+    /// its full pipeline.
+    pub fn e2e_ms(&self, p: &PipelineSpec, shape: &ReqShape, k: usize) -> f64 {
+        self.stage_latency_ms(p, shape, Stage::Encode, 1, 1, Parallelism::Sp)
+            + self.stage_latency_ms(p, shape, Stage::Diffuse, k, 1, Parallelism::Sp)
+            + self.stage_latency_ms(p, shape, Stage::Decode, 1, 1, Parallelism::Sp)
+    }
+
     // ------------------------------------------------------------------
     // Memory
     // ------------------------------------------------------------------
@@ -325,6 +335,24 @@ mod tests {
                 assert!(m.q_dc_gb(shape) > m.q_ed_gb(shape), "{} {}", p.name, shape.name);
             }
         }
+    }
+
+    #[test]
+    fn turbo_variant_is_perfmodel_cheaper() {
+        // The cascade's cheap variant must be cheaper on every shape, and
+        // markedly (>2x) cheaper where diffusion dominates — the latency
+        // headroom the confidence router trades against quality.
+        let m = PerfModel::paper();
+        let p = PipelineSpec::sd3();
+        let t = p.turbo();
+        for shape in &p.shapes {
+            let full = m.e2e_ms(&p, shape, 1);
+            let turbo = m.e2e_ms(&t, shape, 1);
+            assert!(turbo < full, "{}: turbo {turbo} !< full {full}", shape.name);
+        }
+        let heavy = p.shapes.last().unwrap();
+        let ratio = m.e2e_ms(&p, heavy, 1) / m.e2e_ms(&t, heavy, 1);
+        assert!(ratio > 2.0, "heavy-shape speedup only {ratio}");
     }
 
     #[test]

@@ -24,6 +24,11 @@ pub struct Request {
     pub deadline_ms: f64,
     /// Number of merged samples (dynamic batching).
     pub batch: usize,
+    /// Intrinsic difficulty in [0, 1] — the synthetic stand-in for "how
+    /// hard is this prompt for a distilled model" that drives the cascade
+    /// confidence router (`cascade`). Seeded deterministically by the
+    /// workload generators; single-variant serving ignores it.
+    pub difficulty: f64,
 }
 
 impl Request {
@@ -88,6 +93,7 @@ mod tests {
             arrival_ms: 0.0,
             deadline_ms: 1e9,
             batch: 1,
+            difficulty: 0.5,
         };
         assert_eq!(r.shape(&p).name, "128p");
         assert_eq!(r.l_proc(&p, Stage::Diffuse), 64);

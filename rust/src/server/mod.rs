@@ -30,7 +30,7 @@ use crate::runtime::PjrtRuntime;
 use crate::sim::policy::ServingPolicy;
 use crate::sim::TridentPolicy;
 use crate::util::Rng;
-use crate::workload::{TraceGen, WorkloadKind};
+use crate::workload::{DifficultyModel, TraceGen, WorkloadKind};
 
 /// Live-serving configuration.
 #[derive(Clone, Debug)]
@@ -208,7 +208,12 @@ pub fn serve(cfg: &LiveConfig) -> Result<LiveReport> {
     drop(done_tx);
 
     // Trace.
-    let tg = TraceGen { pipeline: &pipeline, profile: &profile, rate_scale: cfg.rate_scale };
+    let tg = TraceGen {
+        pipeline: &pipeline,
+        profile: &profile,
+        rate_scale: cfg.rate_scale,
+        difficulty: DifficultyModel::Uniform,
+    };
     let trace = tg.generate(cfg.workload, cfg.duration_ms, cfg.seed);
 
     // Policy (TridentServe, co-located by OptVR for this tiny pipeline).

@@ -63,6 +63,13 @@ pub struct TridentPolicy {
     pub stage_aware: bool,
     /// Fig 14 `wo-scheduler`: replace the ILP with greedy SRTF.
     pub use_ilp: bool,
+    /// Set by the co-serving executor while the cluster arbiter has this
+    /// lane marked for a resize (value = GPU count after the pending
+    /// re-arbitration): placement switching is suppressed so the policy
+    /// stops planning for GPUs it is about to lose — the drain rebuilds
+    /// placement from scratch anyway. None outside coserve / when no
+    /// resize is pending.
+    pub pending_resize: Option<usize>,
     /// Sliding histogram of recent arrivals for re-planning.
     recent_shapes: VecDeque<usize>,
     recent_cap: usize,
@@ -97,6 +104,7 @@ impl TridentPolicy {
             switch_enabled: true,
             stage_aware: true,
             use_ilp: true,
+            pending_resize: None,
             recent_shapes: VecDeque::new(),
             recent_cap,
             last_backlog: 0,
@@ -197,6 +205,7 @@ impl TridentPolicy {
 }
 
 /// Shared helper: assemble a RequestPlans from a chosen (type, gpu set).
+#[allow(clippy::too_many_arguments)]
 pub fn build_request_plans(
     r: &Request,
     vr_type: usize,
@@ -301,6 +310,12 @@ impl ServingPolicy for TridentPolicy {
         g: usize,
     ) -> Option<PlacementPlan> {
         if !self.switch_enabled {
+            return None;
+        }
+        // Arbiter-aware guard: a pending cluster-level resize makes any plan
+        // for the current GPU set dead on arrival (checked before the
+        // cheaper gates so the suppression is unconditional).
+        if self.pending_resize.is_some() {
             return None;
         }
         if now_ms - self.last_switch_ms < self.switch_cooldown_ms {
@@ -448,6 +463,7 @@ mod tests {
                 arrival_ms: 0.0,
                 deadline_ms: t.profile.slo_ms[2],
                 batch: 1,
+                difficulty: 0.5,
             })
             .collect();
         let (plans, stats) = t.dispatch(&mut pending, &view);
@@ -475,6 +491,7 @@ mod tests {
                 arrival_ms: 0.0,
                 deadline_ms: t.profile.slo_ms[1],
                 batch: 1,
+                difficulty: 0.5,
             })
             .collect();
         let (plans, stats) = t.dispatch(&mut pending, &view);
@@ -500,6 +517,7 @@ mod tests {
             arrival_ms: 0.0,
             deadline_ms: t.profile.slo_ms[4],
             batch: 1,
+            difficulty: 0.5,
         }];
         let (plans, _) = t.dispatch(&mut pending, &view);
         for p in &plans {
@@ -515,5 +533,20 @@ mod tests {
         let mut monitor = Monitor::new(10_000.0, 1.5);
         // No data: no switch.
         assert!(t.maybe_switch(60_000.0, &mut monitor, 128).is_none());
+    }
+
+    #[test]
+    fn pending_resize_suppresses_switch_planning() {
+        // The arbiter-aware guard sits in front of every other gate: once a
+        // lane is marked for a resize, no amount of congestion evidence can
+        // trigger planning against the doomed partition.
+        let mut t = trident(PipelineSpec::flux());
+        let _ = t.initial_placement(128);
+        t.pending_resize = Some(64);
+        let mut monitor = Monitor::new(10_000.0, 1.5);
+        for tick in 0..20 {
+            assert!(t.maybe_switch(1e6 + tick as f64 * 60_000.0, &mut monitor, 128).is_none());
+        }
+        assert_eq!(t.pending_resize, Some(64), "guard must not self-clear");
     }
 }

@@ -5,6 +5,18 @@
 //! from a seed; traces, placement decisions and property tests all draw from
 //! this generator.
 
+/// The SplitMix64 finaliser: one well-mixed u64 from any u64. Shared by
+/// [`Rng::new`] seeding and stateless per-id hashing (e.g. the cascade
+/// router's deterministic confidence noise) so the mixing constants live in
+/// exactly one place.
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// xoshiro256++ — fast, high-quality, seedable from a single `u64`.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -13,14 +25,14 @@ pub struct Rng {
 
 impl Rng {
     /// Seed via SplitMix64 so nearby seeds give unrelated streams.
+    /// (Bit-identical to the original inlined SplitMix64 loop: call k
+    /// yields `splitmix64(seed + (k-1)·GOLDEN)`.)
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let mut next = || {
+            let out = splitmix64(sm);
             sm = sm.wrapping_add(0x9E3779B97F4A7C15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-            z ^ (z >> 31)
+            out
         };
         Rng { s: [next(), next(), next(), next()] }
     }
@@ -107,6 +119,20 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }
+    }
+
+    #[test]
+    fn stream_pinned_to_historical_values() {
+        // Reference values computed independently (SplitMix64 seeding +
+        // xoshiro256++): pins the exact byte stream every seeded trace in
+        // the repo depends on, so refactors of the seeding path cannot
+        // silently shift it.
+        let mut r = Rng::new(42);
+        assert_eq!(r.next_u64(), 0xD076_4D4F_4476_689F);
+        assert_eq!(r.next_u64(), 0x519E_4174_576F_3791);
+        assert_eq!(r.next_u64(), 0xFBE0_7CFB_0C24_ED8C);
+        assert_eq!(splitmix64(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(splitmix64(42), 0xBDD7_3226_2FEB_6E95);
     }
 
     #[test]

@@ -77,20 +77,48 @@ pub struct Trace {
     pub duration_ms: f64,
 }
 
+/// Per-request difficulty generator (the cascade router's synthetic input):
+/// maps a uniform draw `u` and the arrival's horizon fraction `x` to a
+/// difficulty in [0, 1]. Deterministic given the trace seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DifficultyModel {
+    /// Uniform on [0, 1).
+    Uniform,
+    /// Mean difficulty drifts linearly from `from` at t=0 to `to` at the
+    /// horizon (power transform `u^(1/m - 1)`, whose mean is `m`) — the
+    /// regime change a static escalation threshold cannot track.
+    Drift { from: f64, to: f64 },
+}
+
+impl DifficultyModel {
+    /// Difficulty sample from uniform draw `u` at horizon fraction `x`.
+    pub fn sample(&self, u: f64, x: f64) -> f64 {
+        match *self {
+            DifficultyModel::Uniform => u,
+            DifficultyModel::Drift { from, to } => {
+                let m = (from + (to - from) * x.clamp(0.0, 1.0)).clamp(0.05, 0.95);
+                u.powf(1.0 / m - 1.0)
+            }
+        }
+    }
+}
+
 /// Trace generator for one pipeline.
 pub struct TraceGen<'a> {
     pub pipeline: &'a PipelineSpec,
     pub profile: &'a Profile,
     /// Arrival-rate multiplier over Table 5's per-model rate.
     pub rate_scale: f64,
+    /// Per-request difficulty model (cascade routing input).
+    pub difficulty: DifficultyModel,
 }
 
 impl<'a> TraceGen<'a> {
     pub fn new(pipeline: &'a PipelineSpec, profile: &'a Profile) -> Self {
-        TraceGen { pipeline, profile, rate_scale: 1.0 }
+        TraceGen { pipeline, profile, rate_scale: 1.0, difficulty: DifficultyModel::Uniform }
     }
 
-    fn make_request(&self, id: u64, t_ms: f64, shape_idx: usize) -> Request {
+    fn make_request(&self, id: u64, t_ms: f64, shape_idx: usize, difficulty: f64) -> Request {
         Request {
             id,
             pipeline_id: 0,
@@ -98,6 +126,7 @@ impl<'a> TraceGen<'a> {
             arrival_ms: t_ms,
             deadline_ms: t_ms + self.profile.slo_ms[shape_idx],
             batch: 1,
+            difficulty,
         }
     }
 
@@ -115,7 +144,8 @@ impl<'a> TraceGen<'a> {
                 break;
             }
             let shape = rng.categorical(&weights);
-            reqs.push(self.make_request(id, t, shape));
+            let d = self.difficulty.sample(rng.f64(), t / duration_ms);
+            reqs.push(self.make_request(id, t, shape, d));
             id += 1;
         }
         Trace { kind, requests: reqs, duration_ms }
@@ -143,7 +173,9 @@ impl<'a> TraceGen<'a> {
                 if t >= end {
                     break;
                 }
-                reqs.push(self.make_request(id, t, rng.categorical(&weights)));
+                let shape = rng.categorical(&weights);
+                let d = self.difficulty.sample(rng.f64(), t / duration_ms);
+                reqs.push(self.make_request(id, t, shape, d));
                 id += 1;
             }
         }
@@ -174,7 +206,9 @@ impl<'a> TraceGen<'a> {
                 break;
             }
             if rng.f64() < intensity(t) / max_intensity {
-                reqs.push(self.make_request(id, t, rng.categorical(&weights)));
+                let shape = rng.categorical(&weights);
+                let d = self.difficulty.sample(rng.f64(), t / duration_ms);
+                reqs.push(self.make_request(id, t, shape, d));
                 id += 1;
             }
         }
@@ -258,6 +292,8 @@ pub struct MixedSpec<'a> {
     pub rate_scale: f64,
     /// Time-varying intensity on top of `rate_scale`.
     pub load: LoadShape,
+    /// Per-request difficulty model (cascade routing input).
+    pub difficulty: DifficultyModel,
 }
 
 /// A mixed trace: arrival-sorted requests tagged with `pipeline_id`, with
@@ -305,6 +341,7 @@ pub fn mixed(specs: &[MixedSpec], duration_ms: f64, seed: u64) -> MixedTrace {
                 continue;
             }
             let shape_idx = rng.categorical(&weights);
+            let difficulty = spec.difficulty.sample(rng.f64(), t / duration_ms);
             all.push(Request {
                 id: 0, // assigned after the merge
                 pipeline_id: p,
@@ -312,6 +349,7 @@ pub fn mixed(specs: &[MixedSpec], duration_ms: f64, seed: u64) -> MixedTrace {
                 arrival_ms: t,
                 deadline_ms: t + spec.profile.slo_ms[shape_idx],
                 batch: 1,
+                difficulty,
             });
         }
     }
@@ -470,6 +508,7 @@ mod tests {
                 kind: WorkloadKind::Medium,
                 rate_scale: 0.5,
                 load: LoadShape::Step { at: 0.5, before: 1.0, after: 0.3 },
+                difficulty: DifficultyModel::Uniform,
             },
             MixedSpec {
                 pipeline: flux,
@@ -477,6 +516,7 @@ mod tests {
                 kind: WorkloadKind::Medium,
                 rate_scale: 1.0,
                 load: LoadShape::Ramp { from: 0.5, to: 1.5 },
+                difficulty: DifficultyModel::Uniform,
             },
         ]
     }
@@ -494,6 +534,7 @@ mod tests {
             assert_eq!(x.arrival_ms, y.arrival_ms);
             assert_eq!(x.shape_idx, y.shape_idx);
             assert_eq!(x.deadline_ms, y.deadline_ms);
+            assert_eq!(x.difficulty, y.difficulty);
         }
     }
 
@@ -556,6 +597,77 @@ mod tests {
         let r = LoadShape::Ramp { from: 1.0, to: 3.0 };
         assert!((r.at(0.5) - 2.0).abs() < 1e-12);
         assert!((r.at(0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_shape_boundary_behavior() {
+        // Horizon endpoints for every variant.
+        assert_eq!(LoadShape::Flat.at(0.0), 1.0);
+        assert_eq!(LoadShape::Flat.at(1.0), 1.0);
+        let r = LoadShape::Ramp { from: 1.0, to: 3.0 };
+        assert_eq!(r.at(0.0), 1.0);
+        assert_eq!(r.at(1.0), 3.0);
+        // Ramp clamps outside [0, 1] (generators only query inside, but
+        // callers plotting shapes may not).
+        assert_eq!(r.at(-0.5), 1.0);
+        assert_eq!(r.at(1.5), 3.0);
+        // Step switches exactly at its breakpoint (x < at keeps `before`),
+        // including degenerate breakpoints at the horizon endpoints.
+        let s0 = LoadShape::Step { at: 0.0, before: 2.0, after: 0.5 };
+        assert_eq!(s0.at(0.0), 0.5, "at=0: `after` governs the whole trace");
+        assert_eq!(s0.at(1.0), 0.5);
+        let s1 = LoadShape::Step { at: 1.0, before: 2.0, after: 0.5 };
+        assert_eq!(s1.at(0.999), 2.0, "at=1: `before` governs the whole trace");
+        assert_eq!(s1.at(1.0), 0.5, "the breakpoint itself flips to `after`");
+        assert_eq!(s1.at(2.0), 0.5);
+    }
+
+    #[test]
+    fn difficulty_model_math_and_drift() {
+        // Uniform passes the draw through; endpoints preserved.
+        assert_eq!(DifficultyModel::Uniform.sample(0.3, 0.9), 0.3);
+        assert_eq!(DifficultyModel::Uniform.sample(0.0, 0.0), 0.0);
+        // Drift: empirical mean tracks the drifting target at both ends.
+        let d = DifficultyModel::Drift { from: 0.2, to: 0.8 };
+        let mut rng = Rng::new(42);
+        for (x, want) in [(0.0, 0.2), (1.0, 0.8)] {
+            let n = 4000;
+            let mean: f64 = (0..n).map(|_| d.sample(rng.f64(), x)).sum::<f64>() / n as f64;
+            assert!((mean - want).abs() < 0.03, "x={x}: mean {mean} want {want}");
+        }
+        // Samples stay in [0, 1].
+        for _ in 0..1000 {
+            let v = d.sample(rng.f64(), rng.f64());
+            assert!((0.0..=1.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn traces_carry_seeded_difficulty() {
+        let p = PipelineSpec::sd3();
+        let (profile, _) = gen(&p);
+        let mut tg = TraceGen::new(&p, &profile);
+        tg.difficulty = DifficultyModel::Drift { from: 0.25, to: 0.75 };
+        let a = tg.steady(WorkloadKind::Medium, 300_000.0, 17);
+        let b = tg.steady(WorkloadKind::Medium, 300_000.0, 17);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.difficulty, y.difficulty);
+            assert!((0.0..=1.0).contains(&x.difficulty));
+        }
+        // Drift visible end-to-end: the last third is harder than the first.
+        let third = 100_000.0;
+        let mean_in = |lo: f64, hi: f64| {
+            let xs: Vec<f64> = a
+                .requests
+                .iter()
+                .filter(|r| r.arrival_ms >= lo && r.arrival_ms < hi)
+                .map(|r| r.difficulty)
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        let early = mean_in(0.0, third);
+        let late = mean_in(2.0 * third, 3.0 * third);
+        assert!(late > early + 0.2, "drift not visible: early {early} late {late}");
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Cascade integration: a logical request stream served as a
+//! turbo/full-pipeline cascade end-to-end. Pins the conservation contract —
+//! every logical request is delivered exactly once, every escalation is
+//! served exactly once on exactly one variant — across escalations *and*
+//! cluster re-arbitrations, plus the adaptive controller's quality floor.
+
+use std::collections::{BTreeSet, HashSet};
+
+use tridentserve::cascade::{
+    calibrate_threshold, run_cascade, CascadeReport, QualityModel, RouterMode,
+    ThresholdController, CHEAP_LANE, ESC_BIT, HEAVY_LANE,
+};
+use tridentserve::config::ClusterSpec;
+use tridentserve::coserve::{
+    ArbiterPolicy, ClusterArbiter, CoServeConfig, LaneSignal, PipelineSetup,
+};
+use tridentserve::request::Outcome;
+use tridentserve::workload::{DifficultyModel, Trace, TraceGen, WorkloadKind};
+
+const DURATION_MS: f64 = 240_000.0;
+
+fn setups(cluster: &ClusterSpec) -> (PipelineSetup, PipelineSetup) {
+    (PipelineSetup::new("sd3-turbo", cluster), PipelineSetup::new("sd3", cluster))
+}
+
+fn logical_trace(heavy: &PipelineSetup, difficulty: DifficultyModel, seed: u64) -> Trace {
+    let mut tg = TraceGen::new(&heavy.pipeline, &heavy.profile);
+    tg.rate_scale = 0.15; // ~3 req/s on a 32-GPU cluster: moderate load
+    tg.difficulty = difficulty;
+    tg.steady(WorkloadKind::Medium, DURATION_MS, seed)
+}
+
+fn cfg(seed: u64) -> CoServeConfig {
+    CoServeConfig { seed, monitor_ms: 2_000.0, ..Default::default() }
+}
+
+/// Test arbiter that deterministically forces one node move mid-run (on top
+/// of the ILP bootstrap), so conservation is always exercised across a
+/// drain-then-reassign handoff regardless of organic trigger timing.
+struct ForcedSwap {
+    inner: ClusterArbiter,
+    at_ms: f64,
+    fired: bool,
+}
+
+impl ArbiterPolicy for ForcedSwap {
+    fn name(&self) -> String {
+        "forced-swap".into()
+    }
+
+    fn initial(&mut self, signals: &[LaneSignal], total_nodes: usize) -> Vec<usize> {
+        self.inner.initial(signals, total_nodes)
+    }
+
+    fn rearbitrate(
+        &mut self,
+        now_ms: f64,
+        _signals: &[LaneSignal],
+        current: &[usize],
+        _total_nodes: usize,
+    ) -> Option<Vec<usize>> {
+        if self.fired || now_ms < self.at_ms {
+            return None;
+        }
+        let mut out = current.to_vec();
+        let hi = (0..out.len()).max_by_key(|&i| out[i])?;
+        let lo = (0..out.len()).min_by_key(|&i| out[i])?;
+        if hi == lo || out[hi] <= 1 {
+            return None;
+        }
+        out[hi] -= 1;
+        out[lo] += 1;
+        self.fired = true;
+        Some(out)
+    }
+}
+
+/// The conservation contract, checked against the generating trace:
+/// * the cheap lane saw every trace request exactly once;
+/// * the heavy lane saw exactly the escalations, each exactly once, each
+///   tagged with `ESC_BIT` and descending from a cheap-completed request;
+/// * the logical roll-up covers every trace request exactly once.
+fn assert_conservation(report: &CascadeReport, trace: &Trace) {
+    let trace_ids: HashSet<u64> = trace.requests.iter().map(|r| r.id).collect();
+
+    let cheap = &report.coserve.lanes[CHEAP_LANE].metrics;
+    let mut cheap_seen = HashSet::new();
+    for c in &cheap.completions {
+        assert!(trace_ids.contains(&c.id), "cheap lane saw foreign request {}", c.id);
+        assert!(cheap_seen.insert(c.id), "cheap lane double-recorded {}", c.id);
+    }
+    assert_eq!(cheap_seen.len(), trace_ids.len(), "cheap lane lost requests");
+
+    let cheap_completed: HashSet<u64> = cheap
+        .completions
+        .iter()
+        .filter(|c| c.outcome == Outcome::Completed)
+        .map(|c| c.id)
+        .collect();
+
+    let heavy = &report.coserve.lanes[HEAVY_LANE].metrics;
+    let mut heavy_seen = BTreeSet::new();
+    for c in &heavy.completions {
+        assert!(c.id & ESC_BIT != 0, "heavy lane saw an untagged request {}", c.id);
+        let orig = c.id & !ESC_BIT;
+        assert!(report.escalated.contains(&orig), "heavy served non-escalated {orig}");
+        assert!(
+            cheap_completed.contains(&orig),
+            "escalated {orig} without a completed cheap serving"
+        );
+        assert!(heavy_seen.insert(orig), "heavy lane double-recorded {orig}");
+    }
+    assert_eq!(
+        heavy_seen,
+        report.escalated,
+        "every escalation must be accounted on the heavy lane exactly once"
+    );
+
+    // Logical roll-up: one final verdict per trace request.
+    let mut logical_seen = HashSet::new();
+    for c in &report.logical.completions {
+        assert!(trace_ids.contains(&c.id), "logical roll-up invented request {}", c.id);
+        assert!(logical_seen.insert(c.id), "logical roll-up duplicated {}", c.id);
+    }
+    assert_eq!(logical_seen.len(), trace_ids.len());
+    assert_eq!(report.logical.quality.len(), trace_ids.len(), "one verdict per request");
+}
+
+#[test]
+fn cascade_conserves_requests_across_escalations_and_rearbitration() {
+    let cluster = ClusterSpec::l20(4); // 32 shared GPUs
+    let (cheap, heavy) = setups(&cluster);
+    let trace = logical_trace(&heavy, DifficultyModel::Uniform, 3);
+    assert!(trace.requests.len() > 300, "trace too thin: {}", trace.requests.len());
+
+    let mut arbiter =
+        ForcedSwap { inner: ClusterArbiter::new(cluster.gpus_per_node), at_ms: 60_000.0, fired: false };
+    let report = run_cascade(
+        &cheap,
+        &heavy,
+        &cluster,
+        &mut arbiter,
+        &trace,
+        RouterMode::StaticThreshold(0.5),
+        QualityModel::default(),
+        &cfg(3),
+    );
+
+    assert!(report.coserve.arbitrations >= 1, "forced node move never applied");
+    assert!(report.coserve.moved_gpus >= cluster.gpus_per_node);
+    assert_eq!(report.coserve.vram_violations, 0, "VRAM ledger violated");
+    // Uniform difficulty at τ=0.5 must escalate a substantial share.
+    assert!(report.escalations() > 50, "only {} escalations", report.escalations());
+    assert_conservation(&report, &trace);
+    let nodes: usize = report.coserve.lanes.iter().map(|l| l.nodes_final).sum();
+    assert_eq!(nodes, cluster.nodes);
+}
+
+#[test]
+fn adaptive_cascade_holds_quality_floor_under_drift() {
+    let cluster = ClusterSpec::l20(4);
+    let (cheap, heavy) = setups(&cluster);
+    let drift = DifficultyModel::Drift { from: 0.2, to: 0.55 };
+    let trace = logical_trace(&heavy, drift, 11);
+    let quality = QualityModel { adequacy_cut: 0.55, conf_noise: 0.10 };
+    let floor = 0.92;
+    let tau0 = calibrate_threshold(&quality, &drift, 0.0, floor, 11);
+
+    let mut arbiter = ClusterArbiter::new(cluster.gpus_per_node);
+    arbiter.cooldown_ms = 30_000.0;
+    arbiter.trigger_streak = 1;
+    let report = run_cascade(
+        &cheap,
+        &heavy,
+        &cluster,
+        &mut arbiter,
+        &trace,
+        RouterMode::Adaptive {
+            initial_threshold: tau0,
+            controller: ThresholdController::new(floor),
+        },
+        quality,
+        &cfg(11),
+    );
+
+    assert_conservation(&report, &trace);
+    assert_eq!(report.coserve.vram_violations, 0);
+    // The feedback loop must hold the floor (small slack for the bootstrap
+    // transient before the evidence window fills).
+    let q = report.quality_attainment();
+    assert!(q >= floor - 0.05, "quality {q} fell far below floor {floor}");
+    // Under rising difficulty the controller must have raised the threshold.
+    assert!(
+        report.final_threshold > tau0,
+        "threshold never adapted: {} vs initial {tau0}",
+        report.final_threshold
+    );
+    // And the threshold trace is monitor-tick dense.
+    assert!(report.threshold_trace.len() > 50);
+    // Escalations happen but the majority of traffic stays cheap overall.
+    let frac = report.escalation_fraction();
+    assert!(frac > 0.05 && frac < 0.75, "escalation fraction {frac}");
+}
+
+#[test]
+fn always_heavy_baseline_is_full_quality_no_escalation() {
+    let cluster = ClusterSpec::l20(4);
+    let (_, heavy) = setups(&cluster);
+    let trace = logical_trace(&heavy, DifficultyModel::Uniform, 7);
+    let mut arbiter = ClusterArbiter::new(cluster.gpus_per_node);
+    let report = run_cascade(
+        &heavy,
+        &heavy,
+        &cluster,
+        &mut arbiter,
+        &trace,
+        RouterMode::AlwaysHeavy,
+        QualityModel::default(),
+        &cfg(7),
+    );
+    assert_eq!(report.escalations(), 0);
+    assert_eq!(report.coserve.lanes.len(), 1, "always-heavy runs one lane");
+    assert_eq!(report.logical.completions.len(), trace.requests.len());
+    // Quality == completion rate: every produced output is full-strength.
+    let completed = report
+        .logical
+        .completions
+        .iter()
+        .filter(|c| c.outcome == Outcome::Completed)
+        .count();
+    let expect = completed as f64 / trace.requests.len() as f64;
+    assert!((report.quality_attainment() - expect).abs() < 1e-9);
+    assert!(report.quality_attainment() > 0.9, "moderate load must mostly complete");
+}
+
+#[test]
+fn cascade_is_deterministic_per_seed() {
+    let cluster = ClusterSpec::l20(4);
+    let (cheap, heavy) = setups(&cluster);
+    let trace = logical_trace(&heavy, DifficultyModel::Uniform, 5);
+    let run = || {
+        let mut arbiter = ClusterArbiter::new(cluster.gpus_per_node);
+        run_cascade(
+            &cheap,
+            &heavy,
+            &cluster,
+            &mut arbiter,
+            &trace,
+            RouterMode::StaticThreshold(0.45),
+            QualityModel::default(),
+            &cfg(5),
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.escalated, b.escalated);
+    assert_eq!(a.logical.completions.len(), b.logical.completions.len());
+    assert_eq!(a.logical.slo_attainment(), b.logical.slo_attainment());
+    assert_eq!(a.quality_attainment(), b.quality_attainment());
+    assert_eq!(a.coserve.arbitrations, b.coserve.arbitrations);
+}

@@ -12,7 +12,7 @@ use tridentserve::coserve::{
     run_coserve, CoServeConfig, CoServeReport, ClusterArbiter, PipelineSetup,
 };
 use tridentserve::request::Outcome;
-use tridentserve::workload::{mixed, LoadShape, MixedSpec, MixedTrace, WorkloadKind};
+use tridentserve::workload::{mixed, DifficultyModel, LoadShape, MixedSpec, MixedTrace, WorkloadKind};
 
 const DURATION_MS: f64 = 240_000.0;
 
@@ -28,6 +28,7 @@ fn scenario(cluster: &ClusterSpec, seed: u64) -> (Vec<PipelineSetup>, MixedTrace
                 kind: WorkloadKind::Medium,
                 rate_scale: 0.12,
                 load: LoadShape::Step { at: 0.5, before: 1.6, after: 0.3 },
+                difficulty: DifficultyModel::Uniform,
             },
             // Flux quiet first half, then 5.3x surge — this overloads any
             // average-sized static share and must force a re-arbitration.
@@ -37,6 +38,7 @@ fn scenario(cluster: &ClusterSpec, seed: u64) -> (Vec<PipelineSetup>, MixedTrace
                 kind: WorkloadKind::Medium,
                 rate_scale: 0.15,
                 load: LoadShape::Step { at: 0.5, before: 0.3, after: 1.6 },
+                difficulty: DifficultyModel::Uniform,
             },
         ];
         mixed(&specs, DURATION_MS, seed)

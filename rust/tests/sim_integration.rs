@@ -72,6 +72,7 @@ fn all_requests_accounted_for() {
         pipeline: &setup.pipeline,
         profile: &setup.profile,
         rate_scale: 1.0,
+        difficulty: tridentserve::workload::DifficultyModel::Uniform,
     };
     let trace = tg.generate(WorkloadKind::Medium, THREE_MIN, 4);
     let n_arrivals = trace.requests.len();
