@@ -10,14 +10,17 @@
 use tridentserve::baselines::StaticPartition;
 use tridentserve::config::ClusterSpec;
 use tridentserve::coserve::{
-    run_coserve, CoServeConfig, CoServeReport, ClusterArbiter, PipelineSetup,
+    run_coserve, CoServeConfig, CoServeReport, ClusterArbiter, PipelineSetup, ResizePolicy,
 };
 use tridentserve::workload::{mixed, DifficultyModel, LoadShape, MixedSpec, WorkloadKind};
 
 fn print_report(report: &CoServeReport) {
     println!(
-        "--- {} (arbitrations: {}, GPUs moved: {}) ---",
-        report.arbiter, report.arbitrations, report.moved_gpus
+        "--- {} [{}] (arbitrations: {}, GPUs moved: {}) ---",
+        report.arbiter,
+        report.resize.label(),
+        report.arbitrations,
+        report.moved_gpus
     );
     println!(
         "{:<10} {:>6} {:>6} {:>6} {:>8} {:>9} {:>9}",
@@ -36,7 +39,11 @@ fn print_report(report: &CoServeReport) {
             lane.metrics.p95_latency_ms() / 1000.0,
         );
     }
-    println!("{:<10} {:>6} {:>6} {:>14.3}\n", "aggregate", "", report.total_requests(), report.aggregate_slo());
+    println!("{:<10} {:>6} {:>6} {:>14.3}", "aggregate", "", report.total_requests(), report.aggregate_slo());
+    if report.arbitrations > 0 {
+        println!("migration: {}", report.migration);
+    }
+    println!();
 }
 
 fn main() {
@@ -92,6 +99,13 @@ fn main() {
     let dynamic = run_coserve(&setups, &cluster, &mut arbiter, &trace, &cfg);
     print_report(&dynamic);
 
+    // Same arbiter, preemptive handoff: lane resizes checkpoint in-flight
+    // work at stage/step boundaries instead of draining whole chains.
+    let preempt_cfg = CoServeConfig { resize: ResizePolicy::Preempt, ..cfg.clone() };
+    let mut arbiter_p = ClusterArbiter::new(cluster.gpus_per_node);
+    let preempt = run_coserve(&setups, &cluster, &mut arbiter_p, &trace, &preempt_cfg);
+    print_report(&preempt);
+
     let mut fixed = StaticPartition::new();
     let static_report = run_coserve(&setups, &cluster, &mut fixed, &trace, &cfg);
     print_report(&static_report);
@@ -101,7 +115,17 @@ fn main() {
         "aggregate SLO attainment: arbiter {a:.3} vs static {s:.3} -> {}",
         if a >= s { "arbiter no worse (expected)" } else { "ARBITER WORSE — investigate" }
     );
+    if dynamic.arbitrations > 0 && preempt.arbitrations > 0 {
+        println!(
+            "resize blackout: drain max {:.2}s vs preempt max {:.2}s (resumed {}, restarted {})",
+            dynamic.migration.max_blackout_s(),
+            preempt.migration.max_blackout_s(),
+            preempt.migration.resumed,
+            preempt.migration.restarted,
+        );
+    }
     assert_eq!(dynamic.vram_violations, 0, "VRAM ledger invariants violated");
+    assert_eq!(preempt.vram_violations, 0, "VRAM ledger invariants violated");
     assert_eq!(static_report.vram_violations, 0, "VRAM ledger invariants violated");
     println!("coserve OK");
 }

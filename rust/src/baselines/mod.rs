@@ -622,6 +622,16 @@ pub fn static_threshold(threshold: f64) -> crate::cascade::RouterMode {
     crate::cascade::RouterMode::StaticThreshold(threshold)
 }
 
+/// Arrival-time predicted-difficulty routing: requests whose seeded
+/// difficulty prediction exceeds `predicted_cut` skip the cheap pass and go
+/// straight to the heavy lane; the rest cascade at the fixed `threshold`.
+/// Against [`static_threshold`] this trades a little heavy-lane demand for
+/// never paying the cheap serving (or its latency) on obviously-hard
+/// prompts.
+pub fn arrival_routed(predicted_cut: f64, threshold: f64) -> crate::cascade::RouterMode {
+    crate::cascade::RouterMode::ArrivalRouted { predicted_cut, threshold }
+}
+
 /// Build every baseline for a pipeline (convenience for the benches).
 pub fn all_baselines(ctx: &BaseCtx, g: usize) -> Vec<Box<dyn ServingPolicy>> {
     vec![

@@ -38,6 +38,13 @@ pub enum RouterMode {
     /// Fixed escalation threshold, no feedback (DiffServe-style router with
     /// day-one calibration left unattended).
     StaticThreshold(f64),
+    /// Arrival-time predicted-difficulty routing: requests whose seeded
+    /// difficulty prediction
+    /// ([`QualityModel::predicted_difficulty`]) exceeds `predicted_cut`
+    /// skip the cheap pass entirely and go straight to the heavy lane; the
+    /// rest run the ordinary confidence cascade at a fixed `threshold`.
+    /// Saves the cheap serving (and its latency) on obviously-hard prompts.
+    ArrivalRouted { predicted_cut: f64, threshold: f64 },
     /// Threshold tuned per monitor tick by the feedback controller, demand
     /// split fed forward to the arbiter — the joint cascade.
     Adaptive { initial_threshold: f64, controller: ThresholdController },
@@ -48,6 +55,9 @@ impl RouterMode {
         match self {
             RouterMode::AlwaysHeavy => "always-heavy".into(),
             RouterMode::StaticThreshold(t) => format!("static-threshold@{t:.2}"),
+            RouterMode::ArrivalRouted { predicted_cut, threshold } => {
+                format!("arrival-routed@{predicted_cut:.2}/{threshold:.2}")
+            }
             RouterMode::Adaptive { .. } => "cascade-joint".into(),
         }
     }
@@ -96,6 +106,9 @@ pub struct CascadeReport {
     pub logical: Metrics,
     /// Original ids of requests escalated to the heavy variant.
     pub escalated: BTreeSet<RequestId>,
+    /// Ids routed straight to the heavy lane at arrival (predicted
+    /// difficulty above the cut — [`RouterMode::ArrivalRouted`] only).
+    pub direct: BTreeSet<RequestId>,
     /// (time_ms, threshold) at every monitor tick.
     pub threshold_trace: Vec<(f64, f64)>,
     pub final_threshold: f64,
@@ -111,6 +124,11 @@ impl CascadeReport {
 
     pub fn escalations(&self) -> usize {
         self.escalated.len()
+    }
+
+    /// Requests that skipped the cheap pass at arrival.
+    pub fn direct_routed(&self) -> usize {
+        self.direct.len()
     }
 
     /// Escalations as a fraction of logical requests.
@@ -232,13 +250,16 @@ pub fn run_cascade(
     let difficulty: HashMap<RequestId, f64> =
         trace.requests.iter().map(|r| (r.id, r.difficulty)).collect();
 
-    let (initial_threshold, controller) = match mode {
+    let (initial_threshold, controller, predicted_cut) = match mode {
         RouterMode::AlwaysHeavy => {
             return run_always_heavy(heavy, cluster, arbiter, trace, quality, cfg, label);
         }
-        RouterMode::StaticThreshold(t) => (t, None),
+        RouterMode::StaticThreshold(t) => (t, None, None),
+        RouterMode::ArrivalRouted { predicted_cut, threshold } => {
+            (threshold, None, Some(predicted_cut))
+        }
         RouterMode::Adaptive { initial_threshold, controller } => {
-            (initial_threshold, Some(controller))
+            (initial_threshold, Some(controller), None)
         }
     };
 
@@ -247,12 +268,24 @@ pub fn run_cascade(
         heavy.pipeline.shapes.len(),
         "cascade variants must share a shape table"
     );
-    let mixed = MixedTrace {
-        requests: trace.requests.clone(),
-        duration_ms: trace.duration_ms,
-        n_pipelines: 2,
-    };
-    debug_assert!(mixed.requests.iter().all(|r| r.pipeline_id == CHEAP_LANE));
+    // Arrival routing: requests predicted hard enough never visit the cheap
+    // lane — they arrive on the heavy lane as ordinary (untagged) trace
+    // requests and are conserved by the same lane machinery.
+    let mut requests = trace.requests.clone();
+    let mut direct: BTreeSet<RequestId> = BTreeSet::new();
+    if let Some(cut) = predicted_cut {
+        for r in requests.iter_mut() {
+            if quality.predicted_difficulty(r.id, r.difficulty) > cut {
+                r.pipeline_id = HEAVY_LANE;
+                direct.insert(r.id);
+            }
+        }
+    }
+    let mixed = MixedTrace { requests, duration_ms: trace.duration_ms, n_pipelines: 2 };
+    debug_assert!(mixed
+        .requests
+        .iter()
+        .all(|r| r.pipeline_id == CHEAP_LANE || direct.contains(&r.id)));
     debug_assert!(mixed.requests.iter().all(|r| r.id & ESC_BIT == 0));
 
     let mut hook = CascadeHook {
@@ -311,12 +344,44 @@ pub fn run_cascade(
         }
     }
 
+    // Direct-routed requests were never seen by the cheap lane: their heavy
+    // completion IS the logical completion (full-strength whenever
+    // produced).
+    for id in &direct {
+        match heavy_by_id.get(id) {
+            Some(h) => {
+                logical.record((*h).clone());
+                logical.record_quality(h.outcome == Outcome::Completed);
+            }
+            None => {
+                // The lane machinery accounts every trace request; a
+                // missing record is a conservation bug upstream. Account
+                // rather than drop, like the lane executor does.
+                debug_assert!(false, "direct-routed request {id} vanished");
+                if let Some(r) = trace.requests.iter().find(|r| r.id == *id) {
+                    logical.record(Completion {
+                        id: *id,
+                        shape_idx: r.shape_idx,
+                        arrival_ms: r.arrival_ms,
+                        deadline_ms: r.deadline_ms,
+                        finish_ms: f64::INFINITY,
+                        outcome: Outcome::Unfinished,
+                        vr_type: None,
+                        stage_ms: [0.0; 3],
+                    });
+                    logical.record_quality(false);
+                }
+            }
+        }
+    }
+
     let final_threshold = hook.router.threshold;
     CascadeReport {
         label,
         coserve,
         logical,
         escalated: hook.escalated,
+        direct,
         threshold_trace: hook.threshold_trace,
         final_threshold,
     }
@@ -350,6 +415,7 @@ fn run_always_heavy(
         coserve,
         logical,
         escalated: BTreeSet::new(),
+        direct: BTreeSet::new(),
         threshold_trace: Vec::new(),
         final_threshold: 0.0,
     }
@@ -378,6 +444,10 @@ mod tests {
     fn router_mode_labels() {
         assert_eq!(RouterMode::AlwaysHeavy.label(), "always-heavy");
         assert_eq!(RouterMode::StaticThreshold(0.25).label(), "static-threshold@0.25");
+        assert_eq!(
+            RouterMode::ArrivalRouted { predicted_cut: 0.75, threshold: 0.5 }.label(),
+            "arrival-routed@0.75/0.50"
+        );
         assert_eq!(
             RouterMode::Adaptive {
                 initial_threshold: 0.3,

@@ -11,7 +11,10 @@
 //!   proportional to step count.
 //! * [`router`] — the synthetic difficulty→confidence→quality model
 //!   ([`QualityModel`]) and the threshold rule ([`ConfidenceRouter`]):
-//!   escalate when confidence < τ.
+//!   escalate when confidence < τ. Arrival-time predicted-difficulty
+//!   routing ([`RouterMode::ArrivalRouted`]) additionally skips the cheap
+//!   pass entirely for requests predicted hard at arrival
+//!   ([`QualityModel::predicted_difficulty`]).
 //! * [`controller`] — the feedback half of the joint problem
 //!   ([`ThresholdController`]): walk τ per monitor tick to hold a quality
 //!   floor with minimal heavy demand.

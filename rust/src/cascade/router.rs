@@ -45,6 +45,17 @@ impl QualityModel {
         (1.0 - difficulty + eps).clamp(0.0, 1.0)
     }
 
+    /// Arrival-time difficulty prediction (in production: a cheap
+    /// prompt-feature model scoring the request before any serving): the
+    /// true difficulty plus bounded seeded noise, decorrelated from the
+    /// completion-confidence noise so prediction and confidence err
+    /// independently. Drives [`crate::cascade::RouterMode::ArrivalRouted`]:
+    /// requests predicted hard enough skip the cheap pass entirely.
+    pub fn predicted_difficulty(&self, id: RequestId, difficulty: f64) -> f64 {
+        let eps = self.conf_noise * (2.0 * hash01(id ^ 0xA11C_0DE5_0F_D1FF) - 1.0);
+        (difficulty + eps).clamp(0.0, 1.0)
+    }
+
     /// Ground truth: would the cheap output satisfy the user?
     pub fn cheap_adequate(&self, difficulty: f64) -> bool {
         difficulty <= self.adequacy_cut
@@ -138,6 +149,28 @@ mod tests {
         assert!(r.should_escalate(0.39));
         assert!(!r.should_escalate(0.4));
         assert!(!r.should_escalate(0.9));
+    }
+
+    #[test]
+    fn predicted_difficulty_tracks_truth_and_decorrelates_from_confidence() {
+        let m = QualityModel::default();
+        for id in 0..200u64 {
+            let d = (id as f64) / 200.0;
+            let p = m.predicted_difficulty(id, d);
+            assert!((0.0..=1.0).contains(&p));
+            assert!((p - d).abs() <= m.conf_noise + 1e-12, "id {id}: {p} vs {d}");
+            // Deterministic per id.
+            assert_eq!(p, m.predicted_difficulty(id, d));
+        }
+        // The prediction noise is not the confidence noise mirrored: the
+        // two error terms must disagree for at least some requests.
+        let decorrelated = (0..200u64).any(|id| {
+            let d = 0.5;
+            let conf_err = m.confidence(id, d) - (1.0 - d);
+            let pred_err = m.predicted_difficulty(id, d) - d;
+            (conf_err - pred_err).abs() > 1e-6
+        });
+        assert!(decorrelated, "prediction noise mirrors confidence noise");
     }
 
     #[test]

@@ -3,22 +3,35 @@
 //! metrics) over its own node-aligned GPU partition — plus the cluster
 //! arbiter that moves nodes between lanes.
 //!
-//! GPU handoff is drain-then-reassign: when the arbiter emits a new
-//! allocation, every lane whose node count changes stops dispatching
-//! (arrivals keep queueing in its pending list), its in-flight plans run to
-//! completion under the old partition, and only then is its engine rebuilt
-//! on the new partition. Unchanged lanes serve uninterrupted throughout.
-//! This conserves requests exactly: nothing in flight is cancelled, nothing
-//! pending is dropped, and no plan can execute on two partitions.
+//! GPU handoff runs one of two schemes, selected by
+//! [`CoServeConfig::resize`]:
+//!
+//! * **Drain-then-reassign** ([`ResizePolicy::Drain`], the default): when
+//!   the arbiter emits a new allocation, every lane whose node count
+//!   changes stops dispatching (arrivals keep queueing in its pending
+//!   list), its in-flight plans run to completion under the old partition,
+//!   and only then is its engine rebuilt on the new partition.
+//! * **Stage-boundary preemption** ([`ResizePolicy::Preempt`], the
+//!   `migrate` subsystem): queued plans are withdrawn immediately, running
+//!   Diffuse plans are cut at the next denoising-step boundary (latent
+//!   checkpoint), other running plans stop at their own completion, and
+//!   the rebuilt engine *adopts* the migrated requests — completed stages
+//!   are never re-executed.
+//!
+//! Unchanged lanes serve uninterrupted throughout, and both schemes
+//! conserve requests exactly: nothing in flight is lost, nothing pending is
+//! dropped, and no completed stage can execute on two partitions.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
 
 use crate::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
 use crate::coserve::arbiter::{ArbiterPolicy, LaneSignal};
 use crate::dispatch::{ClusterView, RequestPlans};
 use crate::engine::{Engine, PlanId, PlanState};
-use crate::metrics::Metrics;
+use crate::metrics::{Metrics, MigrationStats};
+use crate::migrate::{plan_diffuse_cut, DiffuseCut, ResizePolicy, ResumeSpec, StageCheckpoint};
+use crate::util::json::Json;
 use crate::monitor::Monitor;
 use crate::perfmodel::PerfModel;
 use crate::placement::{Orchestrator, Pi};
@@ -108,6 +121,10 @@ pub struct CoServeConfig {
     /// A lane counts as congested when its backlog exceeds this fraction of
     /// its GPU count (feeds the arbiter's re-arbitration trigger).
     pub backlog_trigger_per_gpu: f64,
+    /// How resizing lanes hand their GPUs over: drain whole in-flight
+    /// chains (default) or preempt at stage/step boundaries and resume on
+    /// the new partition (the `migrate` subsystem).
+    pub resize: ResizePolicy,
 }
 
 impl Default for CoServeConfig {
@@ -121,6 +138,7 @@ impl Default for CoServeConfig {
             jitter: 0.03,
             demand_window_ms: 60_000.0,
             backlog_trigger_per_gpu: 0.25,
+            resize: ResizePolicy::Drain,
         }
     }
 }
@@ -135,15 +153,21 @@ pub struct LaneReport {
 /// Result of a co-serving run.
 pub struct CoServeReport {
     pub arbiter: String,
+    /// Resize scheme the run used (drain vs preempt).
+    pub resize: ResizePolicy,
     pub lanes: Vec<LaneReport>,
-    /// Re-arbitrations actually applied (drain completed, nodes moved).
+    /// Re-arbitrations actually applied (handoff completed, nodes moved).
     pub arbitrations: usize,
     /// GPUs that changed owner across all re-arbitrations.
     pub moved_gpus: usize,
-    /// VRAM-ledger invariant violations observed at drain points and at the
-    /// end of the run (activation reservations not released, or usage over
-    /// capacity). Always 0 unless the engine leaks.
+    /// VRAM-ledger invariant violations observed at handoff points and at
+    /// the end of the run (activation reservations not released, or usage
+    /// over capacity). Always 0 unless the engine leaks.
     pub vram_violations: usize,
+    /// Resize-handoff counters: per-resize blackouts (recorded under both
+    /// schemes), checkpoint volume and resumed/restarted splits (Preempt
+    /// only).
+    pub migration: MigrationStats,
 }
 
 impl CoServeReport {
@@ -164,6 +188,64 @@ impl CoServeReport {
     pub fn total_requests(&self) -> usize {
         self.lanes.iter().map(|l| l.metrics.completions.len()).sum()
     }
+
+    /// Serialise the run's headline results — including the migration
+    /// counters — for experiment dumps (benches and examples table this
+    /// without private accessors).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("arbiter".into(), Json::Str(self.arbiter.clone()));
+        obj.insert("resize".into(), Json::Str(self.resize.label().into()));
+        obj.insert("arbitrations".into(), Json::Num(self.arbitrations as f64));
+        obj.insert("moved_gpus".into(), Json::Num(self.moved_gpus as f64));
+        obj.insert("vram_violations".into(), Json::Num(self.vram_violations as f64));
+        obj.insert("aggregate_slo".into(), Json::Num(self.aggregate_slo()));
+        obj.insert("total_requests".into(), Json::Num(self.total_requests() as f64));
+        obj.insert("migration".into(), self.migration.to_json());
+        obj.insert(
+            "lanes".into(),
+            Json::Arr(
+                self.lanes
+                    .iter()
+                    .map(|l| {
+                        let mut lane = match l.metrics.to_json(&l.pipeline) {
+                            Json::Obj(m) => m,
+                            _ => BTreeMap::new(),
+                        };
+                        lane.insert("nodes_final".into(), Json::Num(l.nodes_final as f64));
+                        Json::Obj(lane)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+}
+
+impl std::fmt::Display for CoServeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "[{} | {}] reqs={} slo={:.3} arbitrations={} moved_gpus={} vram_violations={}",
+            self.arbiter,
+            self.resize.label(),
+            self.total_requests(),
+            self.aggregate_slo(),
+            self.arbitrations,
+            self.moved_gpus,
+            self.vram_violations,
+        )?;
+        for lane in &self.lanes {
+            writeln!(
+                f,
+                "  {:<12} nodes={:<3} {}",
+                lane.pipeline,
+                lane.nodes_final,
+                lane.metrics.summary(),
+            )?;
+        }
+        write!(f, "  migration: {}", self.migration)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -175,6 +257,9 @@ enum EventKind {
     /// A plan finished on lane `lane`'s engine of generation `gen`
     /// (generations increment on rebuild, making stale events inert).
     PlanDone { lane: usize, gen: u64, plan: PlanId },
+    /// A running Diffuse plan reaches its scheduled denoising-step boundary
+    /// under preemptive resizing (same generation-staleness rule).
+    PreemptCut { lane: usize, gen: u64, plan: PlanId },
     Arrival(usize),
     Tick,
     MonitorTick,
@@ -210,6 +295,8 @@ struct Prog {
 // ---------------------------------------------------------------------------
 
 struct Lane {
+    /// This lane's index in the run (stamped onto re-injected requests).
+    idx: usize,
     pipeline: PipelineSpec,
     profile: Profile,
     consts: SolverConstants,
@@ -231,6 +318,16 @@ struct Lane {
     arrivals: SlidingWindow,
     /// True while waiting for in-flight plans to finish before a handoff.
     draining: bool,
+    /// When the current drain/preempt window opened (blackout accounting).
+    drain_started_ms: f64,
+    /// Migrated requests awaiting their first post-rebuild dispatch.
+    resume: HashMap<RequestId, ResumeSpec>,
+    /// Checkpoint GB whose restore was actually consumed by a resumed
+    /// dispatch (folded into `MigrationStats::migrated_gb` at run end).
+    restored_gb: f64,
+    /// Scheduled step-boundary cuts for running Diffuse plans (keyed by
+    /// plan; consumed when the migration frontier is captured at the swap).
+    cuts: HashMap<PlanId, DiffuseCut>,
     /// Engine generation: bumped on every rebuild.
     generation: u64,
 }
@@ -255,6 +352,7 @@ impl Lane {
             &setup.profile,
         );
         Lane {
+            idx,
             pipeline: setup.pipeline.clone(),
             profile: setup.profile.clone(),
             consts: setup.consts.clone(),
@@ -273,6 +371,10 @@ impl Lane {
             exec_rng: Rng::new(cfg.seed ^ 0xE1EC ^ ((idx as u64 + 1) << 17)),
             arrivals: SlidingWindow::new(cfg.demand_window_ms),
             draining: false,
+            drain_started_ms: 0.0,
+            resume: HashMap::new(),
+            restored_gb: 0.0,
+            cuts: HashMap::new(),
             generation: 0,
         }
     }
@@ -363,8 +465,27 @@ impl Lane {
         }
     }
 
-    fn enqueue_plans(&mut self, rp: &RequestPlans) {
-        let ids = self.engine.enqueue(rp, &self.profile);
+    fn enqueue_plans(&mut self, rp: &RequestPlans, now_ms: f64) {
+        // A migrated request's first post-rebuild dispatch consumes its
+        // resume spec: completed stages are skipped, the remaining Diffuse
+        // fraction is scaled, and the first plan waits for the checkpoint
+        // restore transfer.
+        let (ids, seed_stage_ms) = match self.resume.remove(&rp.req) {
+            Some(spec) => {
+                let ids = self.engine.enqueue_resume(
+                    rp,
+                    &self.profile,
+                    spec.skip_encode,
+                    spec.diffuse_frac,
+                );
+                if let Some(&first) = ids.first() {
+                    self.engine.plans[first].input_ready_ms = now_ms + spec.restore_ms;
+                }
+                self.restored_gb += spec.ckpt_gb;
+                (ids, spec.seed_stage_ms)
+            }
+            None => (self.engine.enqueue(rp, &self.profile), [0.0; 3]),
+        };
         let (arrival_ms, deadline_ms) =
             self.req_meta.get(&rp.req).copied().unwrap_or((0.0, f64::MAX));
         self.progress.insert(
@@ -376,7 +497,7 @@ impl Lane {
                 vr_type: rp.vr_type,
                 plan_chain: ids,
                 done_plans: 0,
-                stage_ms: [0.0; 3],
+                stage_ms: seed_stage_ms,
             },
         );
     }
@@ -410,7 +531,7 @@ impl Lane {
                 self.metrics.record_solve(s);
             }
             for rp in &plans {
-                self.enqueue_plans(rp);
+                self.enqueue_plans(rp, now_ms);
             }
         }
         let started = self.advance(now_ms, jitter);
@@ -457,7 +578,13 @@ impl Lane {
         let (succ, q_gb) = match self.progress.get(&req) {
             Some(pr) => {
                 let pos = pr.plan_chain.iter().position(|&p| p == pid);
-                let succ = pos.and_then(|i| pr.plan_chain.get(i + 1)).copied();
+                // A successor withdrawn by a preemptive resize must not
+                // receive the proactive push: its stage re-plans (and its
+                // input restores from the checkpoint) on the new partition.
+                let succ = pos
+                    .and_then(|i| pr.plan_chain.get(i + 1))
+                    .copied()
+                    .filter(|&s| self.engine.plans[s].state == PlanState::Waiting);
                 let shape = &self.pipeline.shapes[shape_idx];
                 let q = match stage {
                     Stage::Encode => self.model.q_ed_gb(shape),
@@ -530,6 +657,219 @@ impl Lane {
         }
     }
 
+    // -----------------------------------------------------------------
+    // Preemptive resizing (the migrate subsystem's executor half)
+    // -----------------------------------------------------------------
+
+    /// The step-boundary cut decision for a running Diffuse plan: estimate
+    /// how the plan's execution time splits across its merged Encode
+    /// prefix, the denoising steps, and its merged Decode suffix, then ask
+    /// [`plan_diffuse_cut`] where the next boundary falls.
+    fn plan_cut_for(&self, pid: PlanId, now_ms: f64) -> DiffuseCut {
+        let p = &self.engine.plans[pid];
+        let degree = p.degree.max(1);
+        let d_est = self.profile.latency_ms(p.shape_idx, Stage::Diffuse, degree.min(8));
+        let mut e_est = 0.0;
+        let mut c_est = 0.0;
+        for &m in &p.merged_stages {
+            let dm = crate::engine::merged_degree(&self.profile, p.shape_idx, degree, m);
+            let t = self.profile.latency_ms(p.shape_idx, m, dm.min(8));
+            if m == Stage::Encode {
+                e_est = t;
+            } else {
+                c_est = t;
+            }
+        }
+        let total = (e_est + d_est + c_est).max(1e-9);
+        let plan_steps = p.plan_steps(self.pipeline.steps);
+        plan_diffuse_cut(
+            now_ms,
+            p.started_ms,
+            p.prepare_ms,
+            p.exec_ms,
+            e_est / total,
+            c_est / total,
+            plan_steps,
+        )
+    }
+
+    /// Start preempting for a pending resize: withdraw every queued plan of
+    /// every in-flight request (they re-plan on the new partition) and
+    /// schedule a step-boundary cut for each running Diffuse plan. Returns
+    /// the (plan, boundary time) pairs for event scheduling; running
+    /// non-Diffuse plans simply finish (their completion IS the next stage
+    /// boundary).
+    fn begin_preempt(&mut self, now_ms: f64) -> Vec<(PlanId, f64)> {
+        let mut cut_events = Vec::new();
+        // Deterministic order (HashMap iteration is not): cut events at
+        // equal timestamps must enter the heap in a seed-stable sequence.
+        let mut chains: Vec<(RequestId, Vec<PlanId>)> =
+            self.progress.iter().map(|(id, p)| (*id, p.plan_chain.clone())).collect();
+        chains.sort_by_key(|(id, _)| *id);
+        for (_, chain) in chains {
+            for pid in chain {
+                match self.engine.plans[pid].state {
+                    PlanState::Running => {
+                        if self.engine.plans[pid].stage == Stage::Diffuse {
+                            let cut = self.plan_cut_for(pid, now_ms);
+                            if !cut.decode_tail {
+                                self.cuts.insert(pid, cut);
+                                cut_events.push((pid, cut.boundary_ms));
+                            }
+                        }
+                    }
+                    PlanState::Waiting => self.engine.withdraw_plan(pid),
+                    _ => {}
+                }
+            }
+        }
+        cut_events
+    }
+
+    /// A scheduled step-boundary cut fired: stop the plan, release its
+    /// resources, and credit the executed denoising time to the request.
+    /// Returns true when a cut was actually applied.
+    fn apply_cut(&mut self, pid: PlanId, now_ms: f64) -> bool {
+        if !self.cuts.contains_key(&pid) {
+            return false;
+        }
+        if self.engine.plans[pid].state != PlanState::Running {
+            return false;
+        }
+        let req = self.engine.plans[pid].req;
+        let started = self.engine.plans[pid].started_ms;
+        self.engine.preempt_running(pid, now_ms);
+        if let Some(pr) = self.progress.get_mut(&req) {
+            pr.stage_ms[1] += (now_ms - started).max(0.0);
+        }
+        true
+    }
+
+    /// Capture the migration frontier of every in-flight request at the
+    /// swap point (engine idle: every plan is Done or Cancelled): which
+    /// stages completed, how many denoising steps ran, and how many GB the
+    /// checkpoint tensor occupies (HB capacity decides device vs host
+    /// spill). Clears `progress` — the requests move to the rebuilt engine
+    /// via [`Self::adopt_migrated`], not to the completion log.
+    fn capture_migrations(&mut self) -> Vec<StageCheckpoint> {
+        let steps_total = self.pipeline.steps.max(1);
+        let cap_hb = self.template.cap_hb_gb;
+        let mut out = Vec::new();
+        let mut progress: Vec<(RequestId, Prog)> = self.progress.drain().collect();
+        // Deterministic capture order (HashMap iteration is not).
+        progress.sort_by_key(|(id, _)| *id);
+        for (id, pr) in progress {
+            let mut has_encode = false;
+            let mut encode_done = false;
+            let mut steps_done: u32 = 0;
+            for &pid in &pr.plan_chain {
+                let pl = &self.engine.plans[pid];
+                let covers_encode =
+                    pl.stage == Stage::Encode || pl.merged_stages.contains(&Stage::Encode);
+                if covers_encode {
+                    has_encode = true;
+                }
+                if pl.stage != Stage::Diffuse {
+                    if covers_encode && pl.state == PlanState::Done {
+                        encode_done = true;
+                    }
+                    continue;
+                }
+                let plan_steps = pl.plan_steps(steps_total);
+                match pl.state {
+                    PlanState::Done => {
+                        steps_done = steps_total;
+                        if covers_encode {
+                            encode_done = true;
+                        }
+                    }
+                    PlanState::Cancelled => {
+                        // `prior` = steps a previous resume already banked
+                        // (plan covers only the remaining `plan_steps`).
+                        let prior = steps_total - plan_steps;
+                        match self.cuts.get(&pid) {
+                            Some(cut) => {
+                                steps_done = steps_done.max(prior + cut.steps_done);
+                                if covers_encode && cut.encode_done {
+                                    encode_done = true;
+                                }
+                            }
+                            // Withdrawn before it ever started: earlier
+                            // progress is still preserved.
+                            None => steps_done = steps_done.max(prior),
+                        }
+                    }
+                    _ => debug_assert!(false, "capture on a busy engine (req {id})"),
+                }
+            }
+            if !has_encode {
+                // A resumed chain already past Encode carries no E plan.
+                encode_done = true;
+            }
+            let shape = &self.pipeline.shapes[pr.shape_idx];
+            let ckpt_gb = if steps_done > 0 {
+                self.model.latent_ckpt_gb(shape)
+            } else if encode_done {
+                self.model.q_ed_gb(shape)
+            } else {
+                0.0
+            };
+            out.push(StageCheckpoint {
+                id,
+                shape_idx: pr.shape_idx,
+                vr_type: pr.vr_type,
+                arrival_ms: pr.arrival_ms,
+                deadline_ms: pr.deadline_ms,
+                stage_ms: pr.stage_ms,
+                encode_done,
+                diffuse_steps_done: steps_done.min(steps_total),
+                ckpt_gb,
+                spilled: ckpt_gb > cap_hb,
+            });
+        }
+        self.cuts.clear();
+        out
+    }
+
+    /// Hand the captured checkpoints to the rebuilt engine: each migrated
+    /// request re-enters the pending queue with its original identity and
+    /// deadline, plus a [`ResumeSpec`] consumed at its first dispatch.
+    fn adopt_migrated(&mut self, ckpts: Vec<StageCheckpoint>, stats: &mut MigrationStats) {
+        let steps_total = self.pipeline.steps.max(1) as f64;
+        for ck in ckpts {
+            if ck.resumed() {
+                stats.resumed += 1;
+            } else {
+                stats.restarted += 1;
+            }
+            stats.checkpointed_gb += ck.ckpt_gb;
+            let restore_ms = self.model.ckpt_write_ms(ck.ckpt_gb, ck.spilled)
+                + self.model.ckpt_restore_ms(ck.ckpt_gb, ck.spilled);
+            self.resume.insert(
+                ck.id,
+                ResumeSpec {
+                    skip_encode: ck.encode_done,
+                    diffuse_frac: (1.0 - ck.diffuse_steps_done as f64 / steps_total)
+                        .clamp(0.0, 1.0),
+                    restore_ms,
+                    ckpt_gb: ck.ckpt_gb,
+                    seed_stage_ms: ck.stage_ms,
+                },
+            );
+            self.req_meta.insert(ck.id, (ck.arrival_ms, ck.deadline_ms));
+            self.pending.push(Request {
+                id: ck.id,
+                pipeline_id: self.idx,
+                shape_idx: ck.shape_idx,
+                arrival_ms: ck.arrival_ms,
+                deadline_ms: ck.deadline_ms,
+                batch: 1,
+                // Unused on the lane path; the cascade hook keeps its own
+                // id-keyed difficulty map, so a neutral value is safe.
+                difficulty: 0.5,
+            });
+        }
+    }
 }
 
 /// Estimated per-GPU service rate for a pipeline's uniform mix (the
@@ -657,35 +997,58 @@ pub fn run_coserve_hooked(
     let mut arbitrations = 0usize;
     let mut moved_gpus = 0usize;
     let mut vram_violations = 0usize;
+    let mut migration = MigrationStats::default();
+    let resize = cfg.resize;
     // Per-lane watermark into metrics.completions for the hook pump.
     let mut hook_marks = vec![0usize; n];
 
-    // Apply a pending allocation once every resizing lane has drained.
+    // Apply a pending allocation once every resizing lane has reached idle
+    // (in-flight chains drained, or — under Preempt — queued plans
+    // withdrawn and running plans finished/cut at their boundaries).
     let try_swap = |lanes: &mut Vec<Lane>,
                     alloc: &mut Vec<usize>,
                     pending_alloc: &mut Option<Vec<usize>>,
                     arbitrations: &mut usize,
                     moved_gpus: &mut usize,
                     vram_violations: &mut usize,
+                    migration: &mut MigrationStats,
                     now: f64| {
         let Some(target) = pending_alloc.as_ref() else { return };
         for (p, lane) in lanes.iter().enumerate() {
             if target[p] != alloc[p] && !lane.engine_idle() {
-                return; // still draining
+                return; // still draining / waiting on a boundary cut
             }
         }
         let target = pending_alloc.take().unwrap();
+        let mut blackout_ms = 0.0f64;
+        let mut resized = false;
         for (p, lane) in lanes.iter_mut().enumerate() {
             if target[p] == alloc[p] {
                 lane.draining = false;
                 lane.policy.pending_resize = None;
                 continue;
             }
+            resized = true;
             *vram_violations += lane.vram_violations();
             if target[p] > alloc[p] {
                 *moved_gpus += (target[p] - alloc[p]) * gpn;
             }
+            blackout_ms = blackout_ms.max(now - lane.drain_started_ms);
+            // Under Preempt, the migration frontier is captured before the
+            // rebuild and adopted after it: the new engine inherits the
+            // work instead of invalidating it.
+            let migrated = if resize == ResizePolicy::Preempt {
+                lane.capture_migrations()
+            } else {
+                Vec::new()
+            };
             lane.rebuild(target[p], now);
+            if !migrated.is_empty() {
+                lane.adopt_migrated(migrated, migration);
+            }
+        }
+        if resized {
+            migration.blackout_ms.push(blackout_ms);
         }
         *alloc = target;
         *arbitrations += 1;
@@ -715,7 +1078,7 @@ pub fn run_coserve_hooked(
                 }
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut arbitrations,
-                    &mut moved_gpus, &mut vram_violations, now,
+                    &mut moved_gpus, &mut vram_violations, &mut migration, now,
                 );
                 if now + cfg.tick_ms <= horizon {
                     push(&mut heap, &mut seq, now + cfg.tick_ms, EventKind::Tick);
@@ -761,6 +1124,7 @@ pub fn run_coserve_hooked(
                         assert_eq!(target.iter().sum::<usize>(), total_nodes);
                         assert!(target.iter().all(|&x| x >= 1));
                         if target != alloc {
+                            let mut cut_events: Vec<(usize, PlanId, f64)> = Vec::new();
                             for (p, lane) in lanes.iter_mut().enumerate() {
                                 lane.draining = target[p] != alloc[p];
                                 // Arbiter-aware guard: a resizing lane must
@@ -769,6 +1133,23 @@ pub fn run_coserve_hooked(
                                 // replans from scratch either way).
                                 lane.policy.pending_resize =
                                     if lane.draining { Some(target[p] * gpn) } else { None };
+                                if lane.draining {
+                                    lane.drain_started_ms = now;
+                                    if resize == ResizePolicy::Preempt {
+                                        for (pid, t_cut) in lane.begin_preempt(now) {
+                                            cut_events.push((p, pid, t_cut));
+                                        }
+                                    }
+                                }
+                            }
+                            for (p, pid, t_cut) in cut_events {
+                                let gen = lanes[p].generation;
+                                push(
+                                    &mut heap,
+                                    &mut seq,
+                                    t_cut,
+                                    EventKind::PreemptCut { lane: p, gen, plan: pid },
+                                );
                             }
                             pending_alloc = Some(target);
                         }
@@ -791,7 +1172,7 @@ pub fn run_coserve_hooked(
                 }
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut arbitrations,
-                    &mut moved_gpus, &mut vram_violations, now,
+                    &mut moved_gpus, &mut vram_violations, &mut migration, now,
                 );
                 if now + cfg.monitor_ms <= horizon {
                     push(&mut heap, &mut seq, now + cfg.monitor_ms, EventKind::MonitorTick);
@@ -813,7 +1194,16 @@ pub fn run_coserve_hooked(
                 lanes[p].drain_ooms();
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut arbitrations,
-                    &mut moved_gpus, &mut vram_violations, now,
+                    &mut moved_gpus, &mut vram_violations, &mut migration, now,
+                );
+            }
+            EventKind::PreemptCut { lane: p, gen, plan } => {
+                if lanes[p].generation == gen && lanes[p].apply_cut(plan, now) {
+                    migration.preemptions += 1;
+                }
+                try_swap(
+                    &mut lanes, &mut alloc, &mut pending_alloc, &mut arbitrations,
+                    &mut moved_gpus, &mut vram_violations, &mut migration, now,
                 );
             }
         }
@@ -827,6 +1217,7 @@ pub fn run_coserve_hooked(
     // by the horizon are expected — only over-capacity states count here).
     let mut reports = Vec::with_capacity(n);
     for lane in lanes.iter_mut() {
+        migration.migrated_gb += lane.restored_gb;
         lane.finalize();
         for g in 0..lane.gpus() {
             if lane.engine.vram.gpu(g).used_gb() > lane.engine.vram.capacity_gb() + 1e-6 {
@@ -842,9 +1233,11 @@ pub fn run_coserve_hooked(
 
     CoServeReport {
         arbiter: arbiter.name(),
+        resize: cfg.resize,
         lanes: reports,
         arbitrations,
         moved_gpus,
         vram_violations,
+        migration,
     }
 }

@@ -11,8 +11,10 @@
 //!   when any pipeline's monitor switch-trigger fires persistently.
 //! * [`exec`] — the **co-serving executor**: one discrete-event loop
 //!   driving a full per-pipeline serving stack (`TridentPolicy` + `Engine`
-//!   + `Monitor` + `Metrics`) per lane, with drain-then-reassign GPU
-//!   handoff between lanes on re-arbitration.
+//!   + `Monitor` + `Metrics`) per lane. GPU handoff on re-arbitration runs
+//!   either drain-then-reassign or stage-boundary preemption with
+//!   checkpoint/resume, selected by
+//!   [`crate::migrate::ResizePolicy`] in [`CoServeConfig`].
 //!
 //! Mixed multi-pipeline traces come from [`crate::workload::mixed`]; the
 //! static-partition baseline lives in
@@ -27,3 +29,4 @@ pub use exec::{
     run_coserve, run_coserve_hooked, CoServeConfig, CoServeReport, LaneHook, LaneReport, NoopHook,
     PipelineSetup,
 };
+pub use crate::migrate::ResizePolicy;

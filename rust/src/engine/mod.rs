@@ -64,6 +64,10 @@ pub struct ExecPlan {
     pub exec_ms: f64,
     /// Profile-based work estimate used for backlog accounting.
     pub est_ms: f64,
+    /// Fraction of the stage's full execution this plan performs (1.0 for
+    /// ordinary plans; a resumed Diffuse plan runs only its remaining
+    /// denoising steps — see `enqueue_resume` / the `migrate` subsystem).
+    pub exec_scale: f64,
 }
 
 /// A plan the engine just launched (the sim schedules its completion event;
@@ -114,6 +118,27 @@ fn sidx(s: Stage) -> usize {
         Stage::Encode => 0,
         Stage::Diffuse => 1,
         Stage::Decode => 2,
+    }
+}
+
+/// Degree a merged stage runs at inside a Merging-Execute plan (§5.2):
+/// Decode shards to its own optimal degree capped by the host plan's;
+/// other stages inherit the host degree. Single source of truth for
+/// enqueue, execution, and the migrate subsystem's cut planner.
+pub fn merged_degree(profile: &Profile, shape_idx: usize, host_degree: usize, m: Stage) -> usize {
+    if m == Stage::Decode {
+        profile.optimal_degree(shape_idx, Stage::Decode).min(host_degree)
+    } else {
+        host_degree
+    }
+}
+
+impl ExecPlan {
+    /// Denoising steps this plan covers out of the pipeline's
+    /// `steps_total` (scaled by `exec_scale` for resumed plans).
+    pub fn plan_steps(&self, steps_total: u32) -> u32 {
+        let total = steps_total.max(1);
+        ((total as f64 * self.exec_scale).round() as u32).clamp(1, total)
     }
 }
 
@@ -201,20 +226,12 @@ impl Engine {
             // memory high-water mark is the max across them).
             let mut act = profile.act_gb(rp.shape_idx, stage, sp.degree.max(1));
             for &m in &merged {
-                let d = if m == Stage::Decode {
-                    profile.optimal_degree(rp.shape_idx, Stage::Decode).min(sp.degree.max(1))
-                } else {
-                    sp.degree.max(1)
-                };
+                let d = merged_degree(profile, rp.shape_idx, sp.degree.max(1), m);
                 act = act.max(profile.act_gb(rp.shape_idx, m, d));
             }
             let mut est_ms = profile.latency_ms(rp.shape_idx, stage, sp.degree.max(1).min(8));
             for &m in &merged {
-                let d = if m == Stage::Decode {
-                    profile.optimal_degree(rp.shape_idx, Stage::Decode).min(sp.degree.max(1))
-                } else {
-                    sp.degree.max(1)
-                };
+                let d = merged_degree(profile, rp.shape_idx, sp.degree.max(1), m);
                 est_ms += profile.latency_ms(rp.shape_idx, m, d.min(8));
             }
             let id = self.plans.len();
@@ -237,6 +254,68 @@ impl Engine {
                 prepare_ms: 0.0,
                 exec_ms: 0.0,
                 est_ms,
+                exec_scale: 1.0,
+            });
+            for &g in &self.plans[id].gpus {
+                self.queues[g].push_back(id);
+                self.committed_ms[g] += est_ms;
+            }
+            ids.push(id);
+            pred = Some(id);
+        }
+        ids
+    }
+
+    /// Enqueue the *remaining* stages of a migrated request on the rebuilt
+    /// partition (the `migrate` subsystem's resume path): completed stages
+    /// are skipped, a partially-done Diffuse runs only `diffuse_frac` of
+    /// its steps (`diffuse_frac <= 0` skips it entirely), and no Merging
+    /// Execute applies — each remaining stage is its own plan so the chain
+    /// stays cuttable at stage boundaries. Callers gate the first plan's
+    /// `input_ready_ms` on the checkpoint restore transfer.
+    pub fn enqueue_resume(
+        &mut self,
+        rp: &RequestPlans,
+        profile: &Profile,
+        skip_encode: bool,
+        diffuse_frac: f64,
+    ) -> Vec<PlanId> {
+        let mut chain: Vec<(Stage, &crate::dispatch::StagePlan, f64)> = Vec::new();
+        if !skip_encode {
+            chain.push((Stage::Encode, &rp.e, 1.0));
+        }
+        if diffuse_frac > 1e-9 {
+            chain.push((Stage::Diffuse, &rp.d, diffuse_frac.min(1.0)));
+        }
+        chain.push((Stage::Decode, &rp.c, 1.0));
+
+        let mut ids = Vec::new();
+        let mut pred: Option<PlanId> = None;
+        for (stage, sp, scale) in chain {
+            let degree = sp.degree.max(1);
+            let act = profile.act_gb(rp.shape_idx, stage, degree);
+            let est_ms = profile.latency_ms(rp.shape_idx, stage, degree.min(8)) * scale;
+            let id = self.plans.len();
+            self.plans.push(ExecPlan {
+                id,
+                req: rp.req,
+                shape_idx: rp.shape_idx,
+                stage,
+                gpus: sp.gpus.clone(),
+                degree: sp.degree,
+                batch: 1,
+                vr_type: rp.vr_type,
+                pred,
+                merged_stages: Vec::new(),
+                state: PlanState::Waiting,
+                input_ready_ms: 0.0,
+                act_gb: act,
+                started_ms: 0.0,
+                finished_ms: 0.0,
+                prepare_ms: 0.0,
+                exec_ms: 0.0,
+                est_ms,
+                exec_scale: scale,
             });
             for &g in &self.plans[id].gpus {
                 self.queues[g].push_back(id);
@@ -377,13 +456,9 @@ impl Engine {
         let shape_idx = self.plans[id].shape_idx;
         let degree = self.plans[id].degree;
         let batch = self.plans[id].batch;
-        let mut run_ms = exec.exec_ms(shape_idx, stage, degree, batch);
+        let mut run_ms = exec.exec_ms(shape_idx, stage, degree, batch) * self.plans[id].exec_scale;
         for &ms in &self.plans[id].merged_stages.clone() {
-            let d = if ms == Stage::Decode {
-                profile.optimal_degree(shape_idx, Stage::Decode).min(degree)
-            } else {
-                degree
-            };
+            let d = merged_degree(profile, shape_idx, degree, ms);
             run_ms += exec.exec_ms(shape_idx, ms, d, batch);
         }
 
@@ -486,6 +561,52 @@ impl Engine {
         let dst = self.plans[id].gpus[0];
         self.hb.gpu(dst).consume(q_in_gb);
         self.vram.sub_hb(dst, q_in_gb);
+    }
+
+    /// Withdraw one *waiting* plan from its queues (preemptive resize: the
+    /// plan will be re-planned on the new partition). Unlike
+    /// [`Self::cancel_request`] this is not a failure — no OOM abort is
+    /// recorded. No-op on plans already started or finished.
+    pub fn withdraw_plan(&mut self, id: PlanId) {
+        if self.plans[id].state != PlanState::Waiting {
+            return;
+        }
+        self.plans[id].state = PlanState::Cancelled;
+        let gpus = self.plans[id].gpus.clone();
+        let est = self.plans[id].est_ms;
+        for g in gpus {
+            self.queues[g].retain(|&p| p != id);
+            self.committed_ms[g] = (self.committed_ms[g] - est).max(0.0);
+        }
+    }
+
+    /// Stop a *running* plan at a preemption boundary: release its
+    /// activation reservation, free its GPU set, and drop it from the
+    /// queues. The caller has already checkpointed whatever state survives
+    /// (the engine only does the resource accounting). No-op unless the
+    /// plan is currently running.
+    pub fn preempt_running(&mut self, id: PlanId, now_ms: f64) {
+        if self.plans[id].state != PlanState::Running {
+            return;
+        }
+        self.plans[id].state = PlanState::Cancelled;
+        self.plans[id].finished_ms = now_ms;
+        let gpus = self.plans[id].gpus.clone();
+        let act = self.plans[id].act_gb;
+        let est = self.plans[id].est_ms;
+        self.vram.release_act(&gpus, act);
+        for &g in &gpus {
+            self.committed_ms[g] = (self.committed_ms[g] - est).max(0.0);
+            self.free_at_ms[g] = now_ms;
+            if self.running[g] == Some(id) {
+                self.running[g] = None;
+            }
+            if self.queues[g].front() == Some(&id) {
+                self.queues[g].pop_front();
+            } else {
+                self.queues[g].retain(|&p| p != id);
+            }
+        }
     }
 
     /// Abort every outstanding plan of a request (failed reservation).
@@ -714,5 +835,75 @@ mod tests {
         eng.enqueue(&rp(1, vec![4]), &profile);
         let m = eng.idle_mask();
         assert!(!m[4] && m[3]);
+    }
+
+    #[test]
+    fn withdraw_plan_frees_queues_without_oom_abort() {
+        let (_p, profile, topo) = fixture();
+        let mut eng = Engine::new(topo, PlacementPlan::uniform(8, Pi::Edc), &profile);
+        let a = eng.enqueue(&rp(1, vec![0]), &profile);
+        let b = eng.enqueue(&rp(2, vec![0]), &profile);
+        // Withdraw the queued (second) plan; the head is untouched.
+        eng.withdraw_plan(b[0]);
+        assert_eq!(eng.plans[b[0]].state, PlanState::Cancelled);
+        assert!(eng.ooms.is_empty(), "withdrawal is not a failure");
+        let started = eng.advance(0.0, &mut FixedExec(10.0), &profile);
+        assert_eq!(started.len(), 1);
+        assert_eq!(eng.plans[started[0].plan].req, 1);
+        // Withdrawing a running plan is a no-op.
+        eng.withdraw_plan(a[0]);
+        assert_eq!(eng.plans[a[0]].state, PlanState::Running);
+        eng.complete(a[0], 20.0, 0.0, None);
+        assert!(eng.idle_mask().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn preempt_running_releases_resources_and_makes_stale_events_inert() {
+        let (_p, profile, topo) = fixture();
+        let mut eng = Engine::new(topo, PlacementPlan::uniform(8, Pi::Edc), &profile);
+        let ids = eng.enqueue(&rp(1, vec![0]), &profile);
+        let started = eng.advance(0.0, &mut FixedExec(100.0), &profile);
+        assert_eq!(started.len(), 1);
+        let act_before = eng.vram.gpu(0).act_gb;
+        assert!(act_before > 0.0, "running plan must hold a reservation");
+        eng.preempt_running(ids[0], 50.0);
+        assert_eq!(eng.plans[ids[0]].state, PlanState::Cancelled);
+        assert!(eng.vram.gpu(0).act_gb.abs() < 1e-9, "reservation released");
+        assert!(eng.gpu_idle(0), "GPU freed at the cut");
+        assert!(eng.committed_ms[0].abs() < 1e-9, "backlog accounting cleared");
+        // The stale completion (the sim's already-scheduled finish event)
+        // must be inert: state is no longer Running.
+        assert_ne!(eng.plans[ids[0]].state, PlanState::Running);
+        // Double preemption is a no-op.
+        eng.preempt_running(ids[0], 60.0);
+        assert_eq!(eng.plans[ids[0]].state, PlanState::Cancelled);
+    }
+
+    #[test]
+    fn enqueue_resume_skips_done_stages_and_scales_diffuse() {
+        let (_p, profile, topo) = fixture();
+        let mut eng = Engine::new(topo, PlacementPlan::uniform(8, Pi::Edc), &profile);
+        let plans = rp(7, vec![0]);
+        // Encode done, half the denoising steps left: chain = D(0.5) → C.
+        let ids = eng.enqueue_resume(&plans, &profile, true, 0.5);
+        assert_eq!(ids.len(), 2);
+        assert_eq!(eng.plans[ids[0]].stage, Stage::Diffuse);
+        assert!((eng.plans[ids[0]].exec_scale - 0.5).abs() < 1e-12);
+        assert_eq!(eng.plans[ids[1]].stage, Stage::Decode);
+        assert_eq!(eng.plans[ids[1]].pred, Some(ids[0]));
+        assert!(eng.plans[ids[0]].merged_stages.is_empty(), "no merging on resume");
+        // The scaled Diffuse runs at half the fixed exec time.
+        let started = eng.advance(0.0, &mut FixedExec(100.0), &profile);
+        assert_eq!(started.len(), 1);
+        assert!((eng.plans[ids[0]].exec_ms - 50.0).abs() < 1e-9);
+        // Diffusion fully done: chain = C only.
+        let ids2 = eng.enqueue_resume(&rp(8, vec![1]), &profile, true, 0.0);
+        assert_eq!(ids2.len(), 1);
+        assert_eq!(eng.plans[ids2[0]].stage, Stage::Decode);
+        // Nothing done: full E → D → C chain, unscaled.
+        let ids3 = eng.enqueue_resume(&rp(9, vec![2]), &profile, false, 1.0);
+        assert_eq!(ids3.len(), 3);
+        assert_eq!(eng.plans[ids3[0]].stage, Stage::Encode);
+        assert!((eng.plans[ids3[1]].exec_scale - 1.0).abs() < 1e-12);
     }
 }

@@ -298,6 +298,101 @@ mod tests {
         assert_eq!(s.chosen.iter().flatten().count(), 1);
     }
 
+    // ------------------------------------------------------------------
+    // Degenerate instances the cluster arbiter can produce under
+    // preemptive churn (lanes with zero observed demand, a fully-consumed
+    // node pool, profit ties collapsing to zero). Solver behavior is
+    // pinned exactly: never panic, never pick a useless item, always
+    // report optimal.
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn groups_without_items_are_skipped() {
+        // 3 groups, items only for the middle one: empty groups resolve to
+        // None without disturbing the others.
+        let p = Mckp {
+            n_groups: 3,
+            capacities: vec![8],
+            items: vec![item(1, 5.0, 0, 2)],
+        };
+        let s = p.solve(100.0);
+        assert_eq!(s.chosen, vec![None, Some(0), None]);
+        assert!((s.objective - 5.0).abs() < 1e-9);
+        assert!(s.optimal);
+    }
+
+    #[test]
+    fn no_items_at_all_is_the_empty_solution() {
+        let p = Mckp { n_groups: 4, capacities: vec![8, 8], items: vec![] };
+        let s = p.solve(100.0);
+        assert_eq!(s.chosen, vec![None; 4]);
+        assert_eq!(s.objective, 0.0);
+        assert!(s.optimal);
+    }
+
+    #[test]
+    fn zero_groups_is_the_empty_solution() {
+        let p = Mckp { n_groups: 0, capacities: vec![8], items: vec![] };
+        let s = p.solve(100.0);
+        assert!(s.chosen.is_empty());
+        assert_eq!(s.objective, 0.0);
+        assert!(s.optimal);
+    }
+
+    #[test]
+    fn zero_capacity_excludes_all_weighted_items() {
+        // A fully-consumed resource: every weighted item is infeasible;
+        // weightless items (an allocation of zero nodes) still resolve.
+        let p = Mckp {
+            n_groups: 2,
+            capacities: vec![0],
+            items: vec![item(0, 10.0, 0, 1), item(1, 3.0, 0, 0)],
+        };
+        let s = p.solve(100.0);
+        assert_eq!(s.chosen[0], None, "weighted item cannot fit capacity 0");
+        assert_eq!(s.chosen[1], Some(1), "weight-0 item consumes nothing");
+        assert!((s.objective - 3.0).abs() < 1e-9);
+        assert!(s.optimal);
+    }
+
+    #[test]
+    fn all_zero_profit_items_choose_nothing() {
+        // Zero profit is "not beneficial": the solver drops the items (the
+        // objective only gains from dispatching) and reports the empty
+        // optimum rather than tie-breaking arbitrarily.
+        let p = Mckp {
+            n_groups: 3,
+            capacities: vec![16],
+            items: (0..3).map(|g| item(g, 0.0, 0, 2)).collect(),
+        };
+        let s = p.solve(100.0);
+        assert_eq!(s.chosen, vec![None; 3]);
+        assert_eq!(s.objective, 0.0);
+        assert!(s.optimal);
+    }
+
+    #[test]
+    fn degenerate_mixes_stay_exact_under_quantization() {
+        // Quantized solve on a mix of zero-profit, infeasible and ordinary
+        // items still returns the exact optimum.
+        let p = Mckp {
+            n_groups: 3,
+            capacities: vec![4],
+            items: vec![
+                item(0, 0.0, 0, 1),   // zero profit: dropped
+                item(0, 8.0, 0, 2),   // feasible
+                item(1, 50.0, 0, 9),  // over capacity: dropped
+                item(1, 6.0, 0, 2),   // feasible
+                item(2, -1.0, 0, 1),  // negative: dropped
+            ],
+        };
+        let s = p.solve_with_budget(100.0, 1_000_000, 10.0);
+        assert_eq!(s.chosen[0], Some(1));
+        assert_eq!(s.chosen[1], Some(3));
+        assert_eq!(s.chosen[2], None);
+        assert!(s.optimal);
+    }
+
     /// Exhaustive reference for property testing.
     fn brute_force(p: &Mckp) -> f64 {
         fn rec(p: &Mckp, g: usize, caps: &mut Vec<u64>) -> f64 {

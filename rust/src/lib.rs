@@ -22,6 +22,8 @@
 //!   baseline.
 //! * [`coserve`] — multi-pipeline co-serving: cluster arbiter + per-pipeline
 //!   lanes sharing one GPU cluster.
+//! * [`migrate`] — preemptive lane resizing: stage-boundary preemption and
+//!   Diffuse-step checkpoint/resume for co-serving GPU handoffs.
 //! * [`cascade`] — query-aware cascade serving: confidence router over
 //!   cheap/full pipeline variants, jointly optimized with the arbiter.
 //! * [`metrics`] — SLO attainment, latency percentiles, Fig-10 reporting.
@@ -41,6 +43,7 @@ pub mod engine;
 pub mod harness;
 pub mod ilp;
 pub mod metrics;
+pub mod migrate;
 pub mod monitor;
 pub mod perfmodel;
 pub mod placement;

@@ -185,6 +185,75 @@ impl Metrics {
     }
 }
 
+/// Counters for the migrate subsystem's lane-resize handoffs (both
+/// [`crate::migrate::ResizePolicy`] schemes record blackouts; only Preempt
+/// produces checkpoints). Surfaced through `CoServeReport` (and therefore
+/// the cascade report) in both Display and JSON form.
+#[derive(Clone, Debug, Default)]
+pub struct MigrationStats {
+    /// Per applied re-arbitration: the longest dispatch blackout among the
+    /// lanes that resized (from the allocation decision to the rebuild).
+    pub blackout_ms: Vec<f64>,
+    /// GB of checkpoint tensors written at preemption points.
+    pub checkpointed_gb: f64,
+    /// GB of checkpoint tensors whose restore was actually consumed by a
+    /// resumed dispatch on a rebuilt partition — at most `checkpointed_gb`
+    /// (strictly less when the horizon closes before a migrated request
+    /// re-dispatches).
+    pub migrated_gb: f64,
+    /// Mid-Diffuse step-boundary cuts applied.
+    pub preemptions: usize,
+    /// Migrated requests that resumed with completed work preserved.
+    pub resumed: usize,
+    /// Migrated requests that restarted from scratch (nothing had executed
+    /// by their cut point).
+    pub restarted: usize,
+}
+
+impl MigrationStats {
+    pub fn total_blackout_s(&self) -> f64 {
+        self.blackout_ms.iter().sum::<f64>() / 1000.0
+    }
+
+    pub fn max_blackout_s(&self) -> f64 {
+        self.blackout_ms.iter().fold(0.0f64, |a, &b| a.max(b)) / 1000.0
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "blackout_ms".into(),
+            Json::Arr(self.blackout_ms.iter().map(|&b| Json::Num(b)).collect()),
+        );
+        obj.insert("total_blackout_s".into(), Json::Num(self.total_blackout_s()));
+        obj.insert("max_blackout_s".into(), Json::Num(self.max_blackout_s()));
+        obj.insert("checkpointed_gb".into(), Json::Num(self.checkpointed_gb));
+        obj.insert("migrated_gb".into(), Json::Num(self.migrated_gb));
+        obj.insert("preemptions".into(), Json::Num(self.preemptions as f64));
+        obj.insert("resumed".into(), Json::Num(self.resumed as f64));
+        obj.insert("restarted".into(), Json::Num(self.restarted as f64));
+        Json::Obj(obj)
+    }
+}
+
+impl std::fmt::Display for MigrationStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "resizes={} blackout_total={:.2}s blackout_max={:.2}s ckpt={:.2}GB \
+             migrated={:.2}GB preempts={} resumed={} restarted={}",
+            self.blackout_ms.len(),
+            self.total_blackout_s(),
+            self.max_blackout_s(),
+            self.checkpointed_gb,
+            self.migrated_gb,
+            self.preemptions,
+            self.resumed,
+            self.restarted,
+        )
+    }
+}
+
 impl std::fmt::Display for Summary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
@@ -304,6 +373,30 @@ mod tests {
         let j = m.to_json("q-run");
         let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("quality_attainment").unwrap().as_f64(), Some(0.75));
+    }
+
+    #[test]
+    fn migration_stats_accounting_and_json() {
+        let mut m = MigrationStats::default();
+        assert_eq!(m.total_blackout_s(), 0.0);
+        assert_eq!(m.max_blackout_s(), 0.0);
+        m.blackout_ms = vec![1500.0, 500.0, 3000.0];
+        m.checkpointed_gb = 1.25;
+        m.migrated_gb = 1.25;
+        m.preemptions = 2;
+        m.resumed = 3;
+        m.restarted = 1;
+        assert!((m.total_blackout_s() - 5.0).abs() < 1e-9);
+        assert!((m.max_blackout_s() - 3.0).abs() < 1e-9);
+        let j = m.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("preemptions").unwrap().as_i64(), Some(2));
+        assert_eq!(parsed.get("resumed").unwrap().as_i64(), Some(3));
+        assert_eq!(parsed.get("restarted").unwrap().as_i64(), Some(1));
+        assert_eq!(parsed.get("max_blackout_s").unwrap().as_f64(), Some(3.0));
+        let shown = format!("{m}");
+        assert!(shown.contains("resizes=3"), "{shown}");
+        assert!(shown.contains("resumed=3"), "{shown}");
     }
 
     #[test]

@@ -1,0 +1,303 @@
+//! Preemptive lane resizing: stage-boundary checkpoint/resume for the
+//! co-serving layer's GPU handoffs.
+//!
+//! The drain-then-reassign handoff (DESIGN.md §Co-serving) pauses a
+//! resizing lane for up to one full in-flight encode–diffuse–decode chain:
+//! every queued plan must run to completion under the old partition before
+//! the engine can be rebuilt, so each re-arbitration buys agility at the
+//! cost of a multi-second blackout. This module implements the alternative
+//! (DisagFusion-style stage-level preemption, PAPERS.md): on a pending
+//! re-allocation, in-flight work stops at its next *stage boundary* — the
+//! inter-stage tensor is already device-resident in the
+//! [`crate::cluster::handoff`] buffers — or, for the long Diffuse stage, at
+//! the next *denoising-step boundary* via a latent checkpoint costed
+//! through [`crate::perfmodel`] (device→HB write, host-spill fallback).
+//! Completed work is never re-executed: the rebuilt engine *adopts* the
+//! migrated requests, resuming each from its checkpoint.
+//!
+//! The pieces:
+//!
+//! * [`ResizePolicy`] — `Drain` (the PR-1 scheme, still the default) vs
+//!   `Preempt`, selected per run in `coserve::CoServeConfig::resize`.
+//! * [`plan_diffuse_cut`] — the pure scheduling decision: given a running
+//!   Diffuse plan's timeline, where is the next step boundary and how many
+//!   steps complete by then? (Cuts that would land in the decode tail of a
+//!   merged run are declined — the plan is about to finish anyway.)
+//! * [`StageCheckpoint`] — what survives a preemption: which stages are
+//!   done, how many denoising steps completed, and how many GB the saved
+//!   tensor occupies (E→D condition tensor, or the mid-diffusion latent).
+//! * [`ResumeSpec`] — the lane-side instruction consumed at the request's
+//!   first dispatch on the new partition: skip completed stages, run only
+//!   the remaining fraction of Diffuse steps, and gate the first plan on
+//!   the checkpoint's write + restore transfer time.
+//!
+//! The executor integration (event scheduling, cut application, capture at
+//! the swap point, re-injection after rebuild) lives in
+//! [`crate::coserve::exec`]; the migration counters surface through
+//! [`crate::metrics::MigrationStats`].
+
+use crate::request::RequestId;
+
+/// How a resizing lane hands its GPUs to the new partition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResizePolicy {
+    /// Drain-then-reassign: every in-flight plan (queued included) runs to
+    /// completion under the old partition before the rebuild.
+    Drain,
+    /// Stage-boundary preemption + Diffuse-step checkpointing: queued plans
+    /// are withdrawn immediately, running non-Diffuse plans stop at their
+    /// own completion (the next stage boundary), running Diffuse plans are
+    /// cut at the next denoising-step boundary, and everything resumes on
+    /// the new partition without re-executing completed work.
+    Preempt,
+}
+
+impl ResizePolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ResizePolicy::Drain => "drain",
+            ResizePolicy::Preempt => "preempt",
+        }
+    }
+}
+
+/// The cut decision for one running Diffuse plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DiffuseCut {
+    /// When the plan stops (a denoising-step boundary, or `now` if the plan
+    /// is still in Stage Preparation and nothing has executed).
+    pub boundary_ms: f64,
+    /// Denoising steps of *this plan* completed by the boundary.
+    pub steps_done: u32,
+    /// True when the plan's merged Encode portion completes by the boundary
+    /// (always true once the diffusion region has started).
+    pub encode_done: bool,
+    /// True when the cut would land in (or after) the merged Decode tail:
+    /// the plan is about to finish, so preempting it saves nothing — let it
+    /// run to completion instead.
+    pub decode_tail: bool,
+}
+
+/// Decide where a running Diffuse plan stops under preemption.
+///
+/// The plan's timeline is `[started, started+prepare]` (Stage Preparation:
+/// reinstance + replica loads + input fetch) followed by the execution
+/// region of length `exec_ms`, of which fraction `frac_e` is a merged
+/// Encode prefix and `frac_c` a merged Decode suffix (0.0 when absent); the
+/// middle is `plan_steps` equal denoising steps.
+///
+/// * Cut requested during preparation → abort immediately (`boundary =
+///   now`, nothing preserved): preparation is replica streaming, not
+///   request work.
+/// * Cut during the Encode prefix → stop when Encode completes
+///   (`encode_done`, zero steps).
+/// * Cut mid-diffusion → stop at the next step boundary; if that boundary
+///   is the last step, the plan is effectively done — decline
+///   (`decode_tail`).
+/// * Cut in the Decode suffix → decline (`decode_tail`).
+pub fn plan_diffuse_cut(
+    now_ms: f64,
+    started_ms: f64,
+    prepare_ms: f64,
+    exec_ms: f64,
+    frac_e: f64,
+    frac_c: f64,
+    plan_steps: u32,
+) -> DiffuseCut {
+    let t0 = started_ms + prepare_ms;
+    if now_ms < t0 {
+        return DiffuseCut {
+            boundary_ms: now_ms,
+            steps_done: 0,
+            encode_done: false,
+            decode_tail: false,
+        };
+    }
+    let d_start = t0 + frac_e.max(0.0) * exec_ms;
+    let d_span = (exec_ms * (1.0 - frac_e.max(0.0) - frac_c.max(0.0))).max(0.0);
+    if now_ms < d_start {
+        return DiffuseCut {
+            boundary_ms: d_start,
+            steps_done: 0,
+            encode_done: true,
+            decode_tail: false,
+        };
+    }
+    let steps = plan_steps.max(1);
+    let step_ms = d_span / steps as f64;
+    if step_ms <= 0.0 {
+        // Degenerate: no diffusion span left to cut.
+        return DiffuseCut {
+            boundary_ms: now_ms,
+            steps_done: steps,
+            encode_done: true,
+            decode_tail: true,
+        };
+    }
+    let mut steps_done = ((now_ms - d_start) / step_ms).ceil() as u32;
+    steps_done = steps_done.max(1);
+    if steps_done >= steps {
+        // The next boundary is the end of diffusion: the plan is in (or
+        // about to enter) its decode tail — let it finish naturally.
+        return DiffuseCut {
+            boundary_ms: d_start + d_span,
+            steps_done: steps,
+            encode_done: true,
+            decode_tail: true,
+        };
+    }
+    DiffuseCut {
+        boundary_ms: d_start + steps_done as f64 * step_ms,
+        steps_done,
+        encode_done: true,
+        decode_tail: false,
+    }
+}
+
+/// What survives one request's preemption: the completed-stage frontier and
+/// the checkpointed tensor carrying it.
+#[derive(Clone, Debug)]
+pub struct StageCheckpoint {
+    pub id: RequestId,
+    pub shape_idx: usize,
+    pub vr_type: usize,
+    pub arrival_ms: f64,
+    pub deadline_ms: f64,
+    /// Per-stage service time already spent (E, D, C) — seeded into the
+    /// resumed request's accounting so the final completion record reports
+    /// the true total.
+    pub stage_ms: [f64; 3],
+    /// Encode output exists (either the E plan completed, or the merged
+    /// Encode prefix of a cut Diffuse plan did).
+    pub encode_done: bool,
+    /// Denoising steps completed across all (possibly already-resumed)
+    /// Diffuse plans, out of the pipeline's total.
+    pub diffuse_steps_done: u32,
+    /// GB of the saved tensor: the E→D condition tensor when only Encode is
+    /// done, the latent when any diffusion progress exists, 0 when nothing
+    /// is preserved.
+    pub ckpt_gb: f64,
+    /// True when the checkpoint exceeded the device HB capacity and spilled
+    /// to pinned host memory (slower write and restore).
+    pub spilled: bool,
+}
+
+impl StageCheckpoint {
+    /// True when any completed work is preserved (the request *resumes*);
+    /// false when it restarts from scratch on the new partition.
+    pub fn resumed(&self) -> bool {
+        self.encode_done || self.diffuse_steps_done > 0
+    }
+}
+
+/// Lane-side instruction for re-dispatching a migrated request on the new
+/// partition; consumed at its first post-rebuild enqueue.
+#[derive(Clone, Copy, Debug)]
+pub struct ResumeSpec {
+    /// Encode already ran: the resumed chain starts at Diffuse (or Decode).
+    pub skip_encode: bool,
+    /// Fraction of denoising steps still to run in `(0, 1]`; `<= 0` means
+    /// diffusion completed before the cut and only Decode remains.
+    pub diffuse_frac: f64,
+    /// Checkpoint write + restore-transfer time gating the first resumed
+    /// plan's input readiness.
+    pub restore_ms: f64,
+    /// GB actually transferred when this resume is consumed (feeds the
+    /// `migrated_gb` counter — distinct from `checkpointed_gb`, which is
+    /// written at the preemption point whether or not the request ever
+    /// re-dispatches before the horizon).
+    pub ckpt_gb: f64,
+    /// Service time already spent, carried into the resumed bookkeeping.
+    pub seed_stage_ms: [f64; 3],
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resize_policy_labels() {
+        assert_eq!(ResizePolicy::Drain.label(), "drain");
+        assert_eq!(ResizePolicy::Preempt.label(), "preempt");
+        assert_ne!(ResizePolicy::Drain, ResizePolicy::Preempt);
+    }
+
+    #[test]
+    fn cut_during_preparation_aborts_immediately() {
+        // started=100, prepare=50: a cut at t=120 lands mid-preparation.
+        let c = plan_diffuse_cut(120.0, 100.0, 50.0, 1000.0, 0.0, 0.0, 10);
+        assert_eq!(c.boundary_ms, 120.0);
+        assert_eq!(c.steps_done, 0);
+        assert!(!c.encode_done);
+        assert!(!c.decode_tail);
+    }
+
+    #[test]
+    fn cut_in_encode_prefix_waits_for_encode() {
+        // exec region [150, 1150], encode prefix 10% -> [150, 250].
+        let c = plan_diffuse_cut(200.0, 100.0, 50.0, 1000.0, 0.1, 0.0, 10);
+        assert_eq!(c.boundary_ms, 250.0);
+        assert_eq!(c.steps_done, 0);
+        assert!(c.encode_done);
+        assert!(!c.decode_tail);
+    }
+
+    #[test]
+    fn cut_mid_diffusion_snaps_to_next_step_boundary() {
+        // Pure-D plan: exec [0, 1000], 10 steps of 100ms each.
+        let c = plan_diffuse_cut(250.0, 0.0, 0.0, 1000.0, 0.0, 0.0, 10);
+        assert_eq!(c.steps_done, 3);
+        assert!((c.boundary_ms - 300.0).abs() < 1e-9);
+        assert!(c.encode_done && !c.decode_tail);
+        // A cut exactly on a boundary takes that boundary.
+        let c = plan_diffuse_cut(300.0, 0.0, 0.0, 1000.0, 0.0, 0.0, 10);
+        assert_eq!(c.steps_done, 3);
+        assert!((c.boundary_ms - 300.0).abs() < 1e-9);
+        // A cut just after the start still completes at least one step.
+        let c = plan_diffuse_cut(1e-9, 0.0, 0.0, 1000.0, 0.0, 0.0, 10);
+        assert_eq!(c.steps_done, 1);
+    }
+
+    #[test]
+    fn cut_near_or_in_decode_tail_is_declined() {
+        // 10 steps over [0, 800], decode suffix [800, 1000].
+        let c = plan_diffuse_cut(850.0, 0.0, 0.0, 1000.0, 0.0, 0.2, 10);
+        assert!(c.decode_tail);
+        assert_eq!(c.steps_done, 10);
+        // Last-step cut is also declined: the boundary IS the diffusion end.
+        let c = plan_diffuse_cut(790.0, 0.0, 0.0, 1000.0, 0.0, 0.2, 10);
+        assert!(c.decode_tail);
+    }
+
+    #[test]
+    fn cut_steps_never_exceed_plan_steps() {
+        for now in [0.0f64, 1.0, 499.0, 500.0, 999.0, 1000.0] {
+            let c = plan_diffuse_cut(now, 0.0, 0.0, 1000.0, 0.0, 0.0, 4);
+            assert!(c.steps_done <= 4, "now={now}: {c:?}");
+            assert!(c.boundary_ms >= now - 1e-9, "now={now}: {c:?}");
+            assert!(c.boundary_ms <= 1000.0 + 1e-9, "now={now}: {c:?}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_resume_classification() {
+        let mut ck = StageCheckpoint {
+            id: 1,
+            shape_idx: 0,
+            vr_type: 0,
+            arrival_ms: 0.0,
+            deadline_ms: 1e9,
+            stage_ms: [0.0; 3],
+            encode_done: false,
+            diffuse_steps_done: 0,
+            ckpt_gb: 0.0,
+            spilled: false,
+        };
+        assert!(!ck.resumed(), "nothing preserved -> restart");
+        ck.encode_done = true;
+        assert!(ck.resumed());
+        ck.encode_done = false;
+        ck.diffuse_steps_done = 3;
+        assert!(ck.resumed());
+    }
+}

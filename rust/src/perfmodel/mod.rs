@@ -224,6 +224,37 @@ impl PerfModel {
     pub fn transfer_ms(&self, gb: f64, gbps: f64) -> f64 {
         self.cluster.link_latency_ms + gb / gbps * 1e3
     }
+
+    // ------------------------------------------------------------------
+    // Preemption checkpoints (migrate subsystem)
+    // ------------------------------------------------------------------
+
+    /// GB of the mid-diffusion latent checkpoint for a shape: the denoised
+    /// latent is exactly the tensor the D→C handoff carries, so its
+    /// footprint equals [`Self::q_dc_gb`].
+    pub fn latent_ckpt_gb(&self, shape: &ReqShape) -> f64 {
+        self.q_dc_gb(shape)
+    }
+
+    /// Time to write a preemption checkpoint out of the running plan's
+    /// activation memory: a device-memory copy into the handoff buffer at
+    /// HBM speed, or a pinned-host write when the HB overflowed (spill).
+    pub fn ckpt_write_ms(&self, gb: f64, spilled: bool) -> f64 {
+        let bw = if spilled { self.cluster.host_gbps } else { self.cluster.hbm_gbps };
+        self.transfer_ms(gb, bw)
+    }
+
+    /// Time to restore a checkpoint onto the rebuilt partition: an
+    /// inter-node transfer (the resumed plan's GPUs are in general on other
+    /// nodes after a re-arbitration), plus a host read when the checkpoint
+    /// had spilled.
+    pub fn ckpt_restore_ms(&self, gb: f64, spilled: bool) -> f64 {
+        let mut t = self.transfer_ms(gb, self.cluster.inter_gbps);
+        if spilled {
+            t += gb / self.cluster.host_gbps * 1e3;
+        }
+        t
+    }
 }
 
 #[cfg(test)]
@@ -353,6 +384,23 @@ mod tests {
         let heavy = p.shapes.last().unwrap();
         let ratio = m.e2e_ms(&p, heavy, 1) / m.e2e_ms(&t, heavy, 1);
         assert!(ratio > 2.0, "heavy-shape speedup only {ratio}");
+    }
+
+    #[test]
+    fn checkpoint_costs_order_correctly() {
+        let m = PerfModel::paper();
+        let p = PipelineSpec::flux();
+        let shape = p.shape("2048p").unwrap();
+        let gb = m.latent_ckpt_gb(shape);
+        assert!((gb - m.q_dc_gb(shape)).abs() < 1e-12, "latent = D→C tensor");
+        assert!(gb > 0.0);
+        // Device HB write at HBM speed beats a host spill write.
+        assert!(m.ckpt_write_ms(gb, false) < m.ckpt_write_ms(gb, true));
+        // Restoring a spilled checkpoint pays the extra host read.
+        assert!(m.ckpt_restore_ms(gb, true) > m.ckpt_restore_ms(gb, false));
+        // Costs grow with checkpoint size and never drop below link latency.
+        assert!(m.ckpt_write_ms(2.0 * gb, false) > m.ckpt_write_ms(gb, false));
+        assert!(m.ckpt_restore_ms(0.0, false) >= m.cluster.link_latency_ms);
     }
 
     #[test]

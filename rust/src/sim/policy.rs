@@ -536,6 +536,36 @@ mod tests {
     }
 
     #[test]
+    fn pending_resize_suppresses_switching_but_not_dispatch() {
+        // The guard must only stop placement *planning* — a lane marked for
+        // a preemptive resize keeps dispatching right up to its boundary
+        // cuts (the executor, not the policy, decides when dispatch stops),
+        // and a migrated request re-entering the pending queue after the
+        // rebuild must be dispatchable immediately.
+        let mut t = trident(PipelineSpec::flux());
+        let plan = t.initial_placement(128);
+        t.pending_resize = Some(64);
+        let view = ClusterView {
+            placement: plan,
+            idle: vec![true; 128],
+            free_at_ms: vec![0.0; 128],
+            now_ms: 0.0,
+        };
+        let mut pending = vec![Request {
+            id: 0,
+            pipeline_id: 0,
+            shape_idx: 2,
+            arrival_ms: 0.0,
+            deadline_ms: t.profile.slo_ms[2],
+            batch: 1,
+            difficulty: 0.5,
+        }];
+        let (plans, _) = t.dispatch(&mut pending, &view);
+        assert!(!plans.is_empty(), "pending_resize must not block dispatch");
+        assert_eq!(t.pending_resize, Some(64), "dispatch must not clear the guard");
+    }
+
+    #[test]
     fn pending_resize_suppresses_switch_planning() {
         // The arbiter-aware guard sits in front of every other gate: once a
         // lane is marked for a resize, no amount of congestion evidence can

@@ -12,7 +12,7 @@ use tridentserve::cascade::{
 };
 use tridentserve::config::ClusterSpec;
 use tridentserve::coserve::{
-    ArbiterPolicy, ClusterArbiter, CoServeConfig, LaneSignal, PipelineSetup,
+    ArbiterPolicy, ClusterArbiter, CoServeConfig, LaneSignal, PipelineSetup, ResizePolicy,
 };
 use tridentserve::request::Outcome;
 use tridentserve::workload::{DifficultyModel, Trace, TraceGen, WorkloadKind};
@@ -76,20 +76,36 @@ impl ArbiterPolicy for ForcedSwap {
 }
 
 /// The conservation contract, checked against the generating trace:
-/// * the cheap lane saw every trace request exactly once;
-/// * the heavy lane saw exactly the escalations, each exactly once, each
-///   tagged with `ESC_BIT` and descending from a cheap-completed request;
+/// * the cheap lane saw every trace request except the direct-routed ones,
+///   each exactly once;
+/// * the heavy lane saw exactly the escalations (tagged with `ESC_BIT`,
+///   each descending from a cheap-completed request) plus the
+///   direct-routed arrivals (untagged), each exactly once;
+/// * escalated and direct-routed sets are disjoint;
 /// * the logical roll-up covers every trace request exactly once.
 fn assert_conservation(report: &CascadeReport, trace: &Trace) {
     let trace_ids: HashSet<u64> = trace.requests.iter().map(|r| r.id).collect();
+    assert!(
+        report.escalated.intersection(&report.direct).next().is_none(),
+        "a direct-routed request can never also be an escalation"
+    );
 
     let cheap = &report.coserve.lanes[CHEAP_LANE].metrics;
     let mut cheap_seen = HashSet::new();
     for c in &cheap.completions {
         assert!(trace_ids.contains(&c.id), "cheap lane saw foreign request {}", c.id);
+        assert!(
+            !report.direct.contains(&c.id),
+            "direct-routed {} must never visit the cheap lane",
+            c.id
+        );
         assert!(cheap_seen.insert(c.id), "cheap lane double-recorded {}", c.id);
     }
-    assert_eq!(cheap_seen.len(), trace_ids.len(), "cheap lane lost requests");
+    assert_eq!(
+        cheap_seen.len(),
+        trace_ids.len() - report.direct.len(),
+        "cheap lane lost requests"
+    );
 
     let cheap_completed: HashSet<u64> = cheap
         .completions
@@ -100,8 +116,17 @@ fn assert_conservation(report: &CascadeReport, trace: &Trace) {
 
     let heavy = &report.coserve.lanes[HEAVY_LANE].metrics;
     let mut heavy_seen = BTreeSet::new();
+    let mut direct_seen = BTreeSet::new();
     for c in &heavy.completions {
-        assert!(c.id & ESC_BIT != 0, "heavy lane saw an untagged request {}", c.id);
+        if c.id & ESC_BIT == 0 {
+            assert!(
+                report.direct.contains(&c.id),
+                "heavy lane saw an untagged, non-direct request {}",
+                c.id
+            );
+            assert!(direct_seen.insert(c.id), "heavy lane double-recorded direct {}", c.id);
+            continue;
+        }
         let orig = c.id & !ESC_BIT;
         assert!(report.escalated.contains(&orig), "heavy served non-escalated {orig}");
         assert!(
@@ -114,6 +139,11 @@ fn assert_conservation(report: &CascadeReport, trace: &Trace) {
         heavy_seen,
         report.escalated,
         "every escalation must be accounted on the heavy lane exactly once"
+    );
+    assert_eq!(
+        direct_seen,
+        report.direct,
+        "every direct-routed request must be accounted on the heavy lane exactly once"
     );
 
     // Logical roll-up: one final verdict per trace request.
@@ -154,6 +184,51 @@ fn cascade_conserves_requests_across_escalations_and_rearbitration() {
     assert_conservation(&report, &trace);
     let nodes: usize = report.coserve.lanes.iter().map(|l| l.nodes_final).sum();
     assert_eq!(nodes, cluster.nodes);
+}
+
+#[test]
+fn arrival_routing_conserves_and_partitions_the_stream() {
+    // Predicted-difficulty routing: requests predicted hard at arrival skip
+    // the cheap pass entirely. The escalation-conservation contract must
+    // hold with the stream partitioned three ways — cheap-kept,
+    // cheap-then-escalated, and direct-to-heavy.
+    let cluster = ClusterSpec::l20(4);
+    let (cheap, heavy) = setups(&cluster);
+    let trace = logical_trace(&heavy, DifficultyModel::Uniform, 9);
+    let quality = QualityModel::default();
+    let cut = 0.75;
+
+    let mut arbiter = ClusterArbiter::new(cluster.gpus_per_node);
+    let report = run_cascade(
+        &cheap,
+        &heavy,
+        &cluster,
+        &mut arbiter,
+        &trace,
+        RouterMode::ArrivalRouted { predicted_cut: cut, threshold: 0.5 },
+        quality,
+        &cfg(9),
+    );
+
+    assert_conservation(&report, &trace);
+    assert_eq!(report.coserve.vram_violations, 0);
+
+    // The direct set is exactly the predicted-difficulty rule, re-derived.
+    let expected: std::collections::BTreeSet<u64> = trace
+        .requests
+        .iter()
+        .filter(|r| quality.predicted_difficulty(r.id, r.difficulty) > cut)
+        .map(|r| r.id)
+        .collect();
+    assert_eq!(report.direct, expected, "direct routing must match the arrival rule");
+    // Uniform difficulty with a 0.75 cut: a real minority goes direct, and
+    // the cheap-routed majority still produces escalations.
+    assert!(report.direct_routed() > 20, "only {} direct-routed", report.direct_routed());
+    assert!(
+        report.direct_routed() * 2 < trace.requests.len(),
+        "direct routing swallowed the stream"
+    );
+    assert!(report.escalations() > 20, "only {} escalations", report.escalations());
 }
 
 #[test]
@@ -200,6 +275,43 @@ fn adaptive_cascade_holds_quality_floor_under_drift() {
     // Escalations happen but the majority of traffic stays cheap overall.
     let frac = report.escalation_fraction();
     assert!(frac > 0.05 && frac < 0.75, "escalation fraction {frac}");
+}
+
+#[test]
+fn cascade_conserves_under_preemptive_resize() {
+    // The cascade runs over the same lane machinery in either resize
+    // scheme: under ResizePolicy::Preempt a forced node move cuts in-flight
+    // work at stage/step boundaries, and the escalation-conservation
+    // contract must still hold exactly.
+    let cluster = ClusterSpec::l20(4);
+    let (cheap, heavy) = setups(&cluster);
+    let trace = logical_trace(&heavy, DifficultyModel::Uniform, 3);
+
+    let mut arbiter = ForcedSwap {
+        inner: ClusterArbiter::new(cluster.gpus_per_node),
+        at_ms: 60_000.0,
+        fired: false,
+    };
+    let report = run_cascade(
+        &cheap,
+        &heavy,
+        &cluster,
+        &mut arbiter,
+        &trace,
+        RouterMode::StaticThreshold(0.5),
+        QualityModel::default(),
+        &CoServeConfig { resize: ResizePolicy::Preempt, ..cfg(3) },
+    );
+
+    assert!(report.coserve.arbitrations >= 1, "forced node move never applied");
+    assert_eq!(report.coserve.vram_violations, 0, "VRAM ledger violated");
+    assert_eq!(
+        report.coserve.migration.blackout_ms.len(),
+        report.coserve.arbitrations
+    );
+    assert_conservation(&report, &trace);
+    let nodes: usize = report.coserve.lanes.iter().map(|l| l.nodes_final).sum();
+    assert_eq!(nodes, cluster.nodes);
 }
 
 #[test]
