@@ -40,8 +40,11 @@ fn print_report(report: &CoServeReport) {
         );
     }
     println!("{:<10} {:>6} {:>6} {:>14.3}", "aggregate", "", report.total_requests(), report.aggregate_slo());
-    if report.arbitrations > 0 {
-        println!("migration: {}", report.migration);
+    // Blackout/checkpoint accounting is part of the headline output — no
+    // JSON parsing needed to see what a resize (or failure) cost.
+    println!("migration: {}", report.migration);
+    if report.faults.active() {
+        println!("faults:    {}", report.faults);
     }
     println!();
 }

@@ -623,11 +623,14 @@ pub fn static_threshold(threshold: f64) -> crate::cascade::RouterMode {
 }
 
 /// Arrival-time predicted-difficulty routing: requests whose seeded
-/// difficulty prediction exceeds `predicted_cut` skip the cheap pass and go
+/// difficulty prediction exceeds the arrival cut skip the cheap pass and go
 /// straight to the heavy lane; the rest cascade at the fixed `threshold`.
-/// Against [`static_threshold`] this trades a little heavy-lane demand for
-/// never paying the cheap serving (or its latency) on obviously-hard
-/// prompts.
+/// The cut starts at `predicted_cut` and is walked per monitor tick by a
+/// feedback controller watching escalation waste (cheap passes that
+/// escalated anyway), so it tracks difficulty drift instead of staying at
+/// its day-one calibration. Against [`static_threshold`] this trades a
+/// little heavy-lane demand for never paying the cheap serving (or its
+/// latency) on obviously-hard prompts.
 pub fn arrival_routed(predicted_cut: f64, threshold: f64) -> crate::cascade::RouterMode {
     crate::cascade::RouterMode::ArrivalRouted { predicted_cut, threshold }
 }

@@ -18,6 +18,7 @@ use crate::coserve::exec::{
 use crate::coserve::LaneSignal;
 use crate::metrics::Metrics;
 use crate::request::{Completion, Outcome, Request, RequestId};
+use crate::util::stats::SlidingWindow;
 use crate::util::Rng;
 use crate::workload::{DifficultyModel, MixedTrace, Trace};
 
@@ -40,10 +41,19 @@ pub enum RouterMode {
     StaticThreshold(f64),
     /// Arrival-time predicted-difficulty routing: requests whose seeded
     /// difficulty prediction
-    /// ([`QualityModel::predicted_difficulty`]) exceeds `predicted_cut`
+    /// ([`QualityModel::predicted_difficulty`]) exceeds the arrival cut
     /// skip the cheap pass entirely and go straight to the heavy lane; the
     /// rest run the ordinary confidence cascade at a fixed `threshold`.
     /// Saves the cheap serving (and its latency) on obviously-hard prompts.
+    ///
+    /// The cut is *feedback-controlled* (PR-2 threshold-controller
+    /// machinery, same attack/decay discipline): `predicted_cut` is only
+    /// its initial value. The controller watches the escalation waste among
+    /// cheap-routed requests — every cheap pass that ends up escalating
+    /// paid the cheap serving for nothing — and walks the cut down (direct
+    /// more) under waste debt, up (give the cheap lane the benefit of the
+    /// doubt) when waste is comfortably low. The per-tick cut trace lands
+    /// in [`CascadeReport::arrival_cut_trace`].
     ArrivalRouted { predicted_cut: f64, threshold: f64 },
     /// Threshold tuned per monitor tick by the feedback controller, demand
     /// split fed forward to the arbiter — the joint cascade.
@@ -112,6 +122,14 @@ pub struct CascadeReport {
     /// (time_ms, threshold) at every monitor tick.
     pub threshold_trace: Vec<(f64, f64)>,
     pub final_threshold: f64,
+    /// (time_ms, arrival cut) at every monitor tick
+    /// ([`RouterMode::ArrivalRouted`] only; empty otherwise). Replaying
+    /// this trace against each request's arrival time re-derives the
+    /// direct-routing decision exactly.
+    pub arrival_cut_trace: Vec<(f64, f64)>,
+    /// Final feedback-controlled arrival cut (0.0 when arrival routing was
+    /// off).
+    pub final_arrival_cut: f64,
 }
 
 impl CascadeReport {
@@ -140,13 +158,31 @@ impl CascadeReport {
     }
 }
 
+/// Feedback-controlled arrival routing: the cut and the controller that
+/// walks it. Reuses [`ThresholdController`] by controlling the routing
+/// *aggressiveness* `a = 1 - cut` — waste debt (cheap passes that escalated
+/// anyway) attacks `a` upward, comfort decays it — so the controller's
+/// bounds, hysteresis and stale-evidence guard all carry over.
+struct ArrivalControl {
+    cut: f64,
+    controller: ThresholdController,
+    cut_trace: Vec<(f64, f64)>,
+    /// Observed direct-routing rate (req/s over the demand window): the
+    /// heavy lane's exogenous share of the routed demand signal.
+    direct_arrivals: SlidingWindow,
+}
+
 /// The router+controller as a co-serving lane hook.
 struct CascadeHook {
     router: ConfidenceRouter,
     controller: Option<ThresholdController>,
+    /// Feedback-controlled arrival cut ([`RouterMode::ArrivalRouted`]).
+    arrival: Option<ArrivalControl>,
     /// Original-id → difficulty for every trace request.
     difficulty: HashMap<RequestId, f64>,
     escalated: BTreeSet<RequestId>,
+    /// Ids routed straight to the heavy lane at arrival.
+    direct: BTreeSet<RequestId>,
     threshold_trace: Vec<(f64, f64)>,
 }
 
@@ -188,6 +224,12 @@ impl LaneHook for CascadeHook {
         let conf = self.router.model.confidence(c.id, d);
         self.router.observe(conf);
         let escalate = self.router.should_escalate(conf);
+        // Arrival-cut feedback: a cheap pass that escalates anyway was
+        // wasted — the arrival router should have sent it direct. A kept
+        // pass is routing profit.
+        if let Some(ar) = &mut self.arrival {
+            ar.controller.observe(!escalate);
+        }
         if !escalate {
             if let Some(ctrl) = &mut self.controller {
                 // Kept outputs stand or fall on the cheap variant's true
@@ -216,17 +258,38 @@ impl LaneHook for CascadeHook {
             self.router.threshold = ctrl.adjust(self.router.threshold);
         }
         self.threshold_trace.push((now_ms, self.router.threshold));
+        // Walk the arrival cut: the controller holds aggressiveness
+        // a = 1 - cut, so waste debt lowers the cut (more direct routing).
+        if let Some(ar) = &mut self.arrival {
+            let a = ar.controller.adjust(1.0 - ar.cut);
+            ar.cut = 1.0 - a;
+            ar.cut_trace.push((now_ms, ar.cut));
+        }
         // Joint optimization: the heavy lane's demand is not exogenous — it
         // is whatever the router sends. Feed the arbiter the *routed*
-        // demand (predicted escalations of the cheap stream) so allocation
-        // follows threshold moves before the observed arrival rate catches
-        // up; max() keeps the observed rate as a floor while observation is
-        // ahead of prediction (e.g. right after a threshold drop).
+        // demand (predicted escalations of the cheap stream, plus the
+        // observed direct-routed rate) so allocation follows threshold
+        // moves before the observed arrival rate catches up; max() keeps
+        // the observed rate as a floor while observation is ahead of
+        // prediction (e.g. right after a threshold drop).
         if signals.len() > HEAVY_LANE {
-            let predicted = signals[CHEAP_LANE].demand_rps
+            let mut predicted = signals[CHEAP_LANE].demand_rps
                 * self.router.escalation_fraction(self.router.threshold);
+            if let Some(ar) = &mut self.arrival {
+                predicted += ar.direct_arrivals.rate_per_sec(now_ms);
+            }
             signals[HEAVY_LANE].demand_rps = signals[HEAVY_LANE].demand_rps.max(predicted);
         }
+    }
+
+    fn route_arrival(&mut self, r: &Request, now_ms: f64) -> Option<usize> {
+        let ar = self.arrival.as_mut()?;
+        if self.router.model.predicted_difficulty(r.id, r.difficulty) > ar.cut {
+            ar.direct_arrivals.push(now_ms, 1.0);
+            self.direct.insert(r.id);
+            return Some(HEAVY_LANE);
+        }
+        None
     }
 }
 
@@ -268,35 +331,41 @@ pub fn run_cascade(
         heavy.pipeline.shapes.len(),
         "cascade variants must share a shape table"
     );
-    // Arrival routing: requests predicted hard enough never visit the cheap
-    // lane — they arrive on the heavy lane as ordinary (untagged) trace
-    // requests and are conserved by the same lane machinery.
-    let mut requests = trace.requests.clone();
-    let mut direct: BTreeSet<RequestId> = BTreeSet::new();
-    if let Some(cut) = predicted_cut {
-        for r in requests.iter_mut() {
-            if quality.predicted_difficulty(r.id, r.difficulty) > cut {
-                r.pipeline_id = HEAVY_LANE;
-                direct.insert(r.id);
-            }
-        }
-    }
-    let mixed = MixedTrace { requests, duration_ms: trace.duration_ms, n_pipelines: 2 };
-    debug_assert!(mixed
-        .requests
-        .iter()
-        .all(|r| r.pipeline_id == CHEAP_LANE || direct.contains(&r.id)));
+    // Arrival routing happens inside the run (`LaneHook::route_arrival`):
+    // requests predicted hard at arrival never visit the cheap lane — they
+    // arrive on the heavy lane as ordinary (untagged) requests and are
+    // conserved by the same lane machinery. The cut is feedback-controlled,
+    // so it cannot be pre-applied to the trace.
+    let mixed = MixedTrace {
+        requests: trace.requests.clone(),
+        duration_ms: trace.duration_ms,
+        n_pipelines: 2,
+    };
+    debug_assert!(mixed.requests.iter().all(|r| r.pipeline_id == CHEAP_LANE));
     debug_assert!(mixed.requests.iter().all(|r| r.id & ESC_BIT == 0));
 
     let mut hook = CascadeHook {
         router: ConfidenceRouter::new(quality, initial_threshold),
         controller,
+        arrival: predicted_cut.map(|cut| {
+            // Waste target 25%: up to a quarter of cheap passes may end up
+            // escalating before the router starts skipping the cheap lane
+            // more aggressively. Stock controller bounds/hysteresis apply.
+            ArrivalControl {
+                cut,
+                controller: ThresholdController::new(0.75),
+                cut_trace: Vec::new(),
+                direct_arrivals: SlidingWindow::new(cfg.demand_window_ms),
+            }
+        }),
         difficulty: difficulty.clone(),
         escalated: BTreeSet::new(),
+        direct: BTreeSet::new(),
         threshold_trace: Vec::new(),
     };
     let setups = [cheap.clone(), heavy.clone()];
     let coserve = run_coserve_hooked(&setups, cluster, arbiter, &mixed, cfg, &mut hook);
+    let direct = hook.direct.clone();
 
     // Fold the two lanes into per-logical-request completions + verdicts.
     let heavy_by_id: HashMap<RequestId, &Completion> =
@@ -376,6 +445,10 @@ pub fn run_cascade(
     }
 
     let final_threshold = hook.router.threshold;
+    let (arrival_cut_trace, final_arrival_cut) = match hook.arrival {
+        Some(ar) => (ar.cut_trace, ar.cut),
+        None => (Vec::new(), 0.0),
+    };
     CascadeReport {
         label,
         coserve,
@@ -384,6 +457,8 @@ pub fn run_cascade(
         direct,
         threshold_trace: hook.threshold_trace,
         final_threshold,
+        arrival_cut_trace,
+        final_arrival_cut,
     }
 }
 
@@ -418,6 +493,8 @@ fn run_always_heavy(
         direct: BTreeSet::new(),
         threshold_trace: Vec::new(),
         final_threshold: 0.0,
+        arrival_cut_trace: Vec::new(),
+        final_arrival_cut: 0.0,
     }
 }
 

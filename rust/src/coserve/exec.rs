@@ -23,13 +23,14 @@
 //! dropped, and no completed stage can execute on two partitions.
 
 use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
 
 use crate::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
 use crate::coserve::arbiter::{ArbiterPolicy, LaneSignal};
 use crate::dispatch::{ClusterView, RequestPlans};
 use crate::engine::{Engine, PlanId, PlanState};
-use crate::metrics::{Metrics, MigrationStats};
+use crate::faults::{ChurnKind, FailureDetector, FaultPlan, RecoveryPolicy};
+use crate::metrics::{FaultStats, Metrics, MigrationStats};
 use crate::migrate::{plan_diffuse_cut, DiffuseCut, ResizePolicy, ResumeSpec, StageCheckpoint};
 use crate::util::json::Json;
 use crate::monitor::Monitor;
@@ -95,6 +96,15 @@ pub trait LaneHook {
     /// overwrite the heavy lane's demand with the *routed* (controllable)
     /// demand — allocation and routing become one joint problem.
     fn shape_signals(&mut self, _now_ms: f64, _signals: &mut [LaneSignal]) {}
+
+    /// Route a trace arrival to a different lane (cascade arrival routing:
+    /// requests predicted hard at arrival skip the cheap lane entirely).
+    /// Return `Some(lane)` to override the request's trace-assigned lane;
+    /// `None` keeps it. Called once per trace arrival, before any lane sees
+    /// the request; injected (chained) requests are never re-routed.
+    fn route_arrival(&mut self, _r: &Request, _now_ms: f64) -> Option<usize> {
+        None
+    }
 }
 
 /// The no-op hook plain co-serving runs with.
@@ -168,6 +178,9 @@ pub struct CoServeReport {
     /// schemes), checkpoint volume and resumed/restarted splits (Preempt
     /// only).
     pub migration: MigrationStats,
+    /// Fault-injection counters ([`crate::faults`]); all zero — and hidden
+    /// from Display — on churn-free runs.
+    pub faults: FaultStats,
 }
 
 impl CoServeReport {
@@ -189,6 +202,24 @@ impl CoServeReport {
         self.lanes.iter().map(|l| l.metrics.completions.len()).sum()
     }
 
+    /// Completed requests per second over `horizon_ms` — the availability
+    /// headline under churn: detection lag, blackouts and re-executed work
+    /// all show up here.
+    pub fn goodput_rps(&self, horizon_ms: f64) -> f64 {
+        let done: usize = self
+            .lanes
+            .iter()
+            .map(|l| {
+                l.metrics
+                    .completions
+                    .iter()
+                    .filter(|c| c.outcome == Outcome::Completed)
+                    .count()
+            })
+            .sum();
+        done as f64 / (horizon_ms / 1000.0).max(1e-9)
+    }
+
     /// Serialise the run's headline results — including the migration
     /// counters — for experiment dumps (benches and examples table this
     /// without private accessors).
@@ -202,6 +233,7 @@ impl CoServeReport {
         obj.insert("aggregate_slo".into(), Json::Num(self.aggregate_slo()));
         obj.insert("total_requests".into(), Json::Num(self.total_requests() as f64));
         obj.insert("migration".into(), self.migration.to_json());
+        obj.insert("faults".into(), self.faults.to_json());
         obj.insert(
             "lanes".into(),
             Json::Arr(
@@ -244,7 +276,11 @@ impl std::fmt::Display for CoServeReport {
                 lane.metrics.summary(),
             )?;
         }
-        write!(f, "  migration: {}", self.migration)
+        write!(f, "  migration: {}", self.migration)?;
+        if self.faults.active() {
+            write!(f, "\n  faults: {}", self.faults)?;
+        }
+        Ok(())
     }
 }
 
@@ -263,6 +299,11 @@ enum EventKind {
     Arrival(usize),
     Tick,
     MonitorTick,
+    /// A churn-trace event arrives (hard failure / reclaim notice / node
+    /// return) — fault runs only.
+    ChurnArrive(usize),
+    /// Capacity actually disappears (a reclaim's deadline expired).
+    NodeLoss { node: usize },
 }
 
 #[derive(PartialEq)]
@@ -330,6 +371,27 @@ struct Lane {
     cuts: HashMap<PlanId, DiffuseCut>,
     /// Engine generation: bumped on every rebuild.
     generation: u64,
+    /// Per-GPU "node is gone" mask (faults subsystem): plans touching a
+    /// dead GPU are killed, and new dispatches onto it are blackholed until
+    /// detection triggers the rebuild — the realistic cost of detection lag.
+    dead_gpus: Vec<bool>,
+    /// The lane must rebuild at the next swap even if its node count is
+    /// unchanged (it contains a dead node, or a fault recovery already
+    /// withdrew its queued work).
+    must_rebuild: bool,
+    /// A fault recovery began preempt-style cuts on this lane: capture the
+    /// migration frontier at the swap regardless of the configured
+    /// [`ResizePolicy`].
+    fault_forced: bool,
+    /// Cold-restart recovery: no checkpoints — in-flight requests restart
+    /// from scratch and the rebuilt lane pays the full weight-reload gate.
+    cold_restart: bool,
+    /// Requests whose running plan was killed by a node loss (their
+    /// checkpoints restore untargeted, from the host mirror).
+    fault_hit: BTreeSet<RequestId>,
+    /// Dispatch gate: no dispatching before this time (cold-restart weight
+    /// reload).
+    gate_until_ms: f64,
 }
 
 fn partition_cluster(template: &ClusterSpec, nodes: usize) -> ClusterSpec {
@@ -376,6 +438,12 @@ impl Lane {
             restored_gb: 0.0,
             cuts: HashMap::new(),
             generation: 0,
+            dead_gpus: vec![false; nodes * template.gpus_per_node],
+            must_rebuild: false,
+            fault_forced: false,
+            cold_restart: false,
+            fault_hit: BTreeSet::new(),
+            gate_until_ms: 0.0,
         }
     }
 
@@ -443,6 +511,11 @@ impl Lane {
         self.oom_seen = 0;
         self.generation += 1;
         self.draining = false;
+        self.dead_gpus = vec![false; nodes * self.template.gpus_per_node];
+        self.must_rebuild = false;
+        self.fault_forced = false;
+        self.cold_restart = false;
+        self.gate_until_ms = now_ms;
         self.metrics.record_switch(now_ms);
     }
 
@@ -519,7 +592,7 @@ impl Lane {
     /// and must decay to zero on a quiet lane, or `maybe_switch` would keep
     /// seeing a stale burst forever.
     fn tick(&mut self, now_ms: f64, jitter: f64) -> Vec<(PlanId, f64)> {
-        if !self.draining {
+        if !self.draining && now_ms >= self.gate_until_ms {
             let view = ClusterView {
                 placement: self.engine.placement.clone(),
                 idle: self.engine.idle_mask(),
@@ -814,6 +887,12 @@ impl Lane {
             } else {
                 0.0
             };
+            // A request whose running plan was killed by a node loss falls
+            // back to its durable stage-boundary tensor: that lives in the
+            // pinned-host mirror (spilled restore) and was never placed at
+            // the destination (untargeted). Orderly cuts know the target
+            // partition at capture time and restore locally.
+            let hit = self.fault_hit.contains(&id);
             out.push(StageCheckpoint {
                 id,
                 shape_idx: pr.shape_idx,
@@ -824,17 +903,26 @@ impl Lane {
                 encode_done,
                 diffuse_steps_done: steps_done.min(steps_total),
                 ckpt_gb,
-                spilled: ckpt_gb > cap_hb,
+                spilled: ckpt_gb > cap_hb || hit,
+                targeted: !hit,
             });
         }
         self.cuts.clear();
+        self.fault_hit.clear();
         out
     }
 
     /// Hand the captured checkpoints to the rebuilt engine: each migrated
     /// request re-enters the pending queue with its original identity and
     /// deadline, plus a [`ResumeSpec`] consumed at its first dispatch.
-    fn adopt_migrated(&mut self, ckpts: Vec<StageCheckpoint>, stats: &mut MigrationStats) {
+    /// `fstats` is set on fault-initiated rebuilds so the recovery splits
+    /// land in [`FaultStats`] too.
+    fn adopt_migrated(
+        &mut self,
+        ckpts: Vec<StageCheckpoint>,
+        stats: &mut MigrationStats,
+        mut fstats: Option<&mut FaultStats>,
+    ) {
         let steps_total = self.pipeline.steps.max(1) as f64;
         for ck in ckpts {
             if ck.resumed() {
@@ -842,9 +930,24 @@ impl Lane {
             } else {
                 stats.restarted += 1;
             }
+            if let Some(fs) = fstats.as_deref_mut() {
+                if ck.resumed() {
+                    fs.recovered += 1;
+                } else {
+                    fs.restarted += 1;
+                }
+            }
             stats.checkpointed_gb += ck.ckpt_gb;
+            // Target-aware placement: when the destination partition was
+            // known at capture (planned resizes, reclaim notices), the
+            // checkpoint was written toward it and the resume pays only a
+            // local read — the inter-node hop is skipped.
             let restore_ms = self.model.ckpt_write_ms(ck.ckpt_gb, ck.spilled)
-                + self.model.ckpt_restore_ms(ck.ckpt_gb, ck.spilled);
+                + if ck.targeted {
+                    self.model.ckpt_restore_targeted_ms(ck.ckpt_gb, ck.spilled)
+                } else {
+                    self.model.ckpt_restore_ms(ck.ckpt_gb, ck.spilled)
+                };
             self.resume.insert(
                 ck.id,
                 ResumeSpec {
@@ -870,6 +973,148 @@ impl Lane {
             });
         }
     }
+
+    // -----------------------------------------------------------------
+    // Fault handling (the faults subsystem's executor half)
+    // -----------------------------------------------------------------
+
+    /// Mark one lane-local node's GPUs dead (capacity gone under the
+    /// engine). Plans touching them are killed by [`Self::kill_dead`].
+    fn fail_node_local(&mut self, local_node: usize) {
+        let gpn = self.template.gpus_per_node;
+        if self.dead_gpus.len() != self.gpus() {
+            self.dead_gpus = vec![false; self.gpus()];
+        }
+        let lo = local_node * gpn;
+        let hi = ((local_node + 1) * gpn).min(self.dead_gpus.len());
+        for g in lo..hi {
+            self.dead_gpus[g] = true;
+        }
+    }
+
+    /// Kill every outstanding plan touching a dead GPU: queued plans are
+    /// withdrawn (nothing executed), running plans are hard-stopped — their
+    /// un-checkpointed Diffuse progress is lost (accounted as re-executed
+    /// work) and the request falls back to its last durable stage boundary
+    /// at the recovery capture. Runs every tick while the lane has dead
+    /// GPUs: until detection triggers the rebuild, the dispatcher keeps
+    /// routing work onto the dead node and that work is blackholed — the
+    /// realistic price of detection lag.
+    fn kill_dead(&mut self, now_ms: f64, fstats: &mut FaultStats) {
+        if !self.dead_gpus.iter().any(|&d| d) {
+            return;
+        }
+        for pid in self.engine.plans_on(&self.dead_gpus) {
+            match self.engine.plans[pid].state {
+                PlanState::Waiting => self.engine.withdraw_plan(pid),
+                PlanState::Running => {
+                    let req = self.engine.plans[pid].req;
+                    let stage = self.engine.plans[pid].stage;
+                    let started = self.engine.plans[pid].started_ms;
+                    let prepare = self.engine.plans[pid].prepare_ms;
+                    let exec = self.engine.plans[pid].exec_ms;
+                    if stage == Stage::Diffuse {
+                        fstats.lost_diffuse_ms +=
+                            (now_ms - started - prepare).clamp(0.0, exec);
+                    }
+                    // Any scheduled orderly cut never happened: the plan
+                    // died first, so its step progress is NOT banked.
+                    self.cuts.remove(&pid);
+                    self.engine.preempt_running(pid, now_ms);
+                    self.fault_hit.insert(req);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Cold-restart recovery (the no-checkpoint baseline): kill every
+    /// outstanding plan immediately. In-flight requests are re-queued from
+    /// scratch at the swap ([`Self::capture_restarts`]); partial Diffuse
+    /// execution is credited to the request first so the discarded work is
+    /// measurable.
+    fn begin_cold(&mut self, now_ms: f64) {
+        self.cold_restart = true;
+        self.cuts.clear();
+        let mut chains: Vec<(RequestId, Vec<PlanId>)> =
+            self.progress.iter().map(|(id, p)| (*id, p.plan_chain.clone())).collect();
+        chains.sort_by_key(|(id, _)| *id);
+        for (_, chain) in chains {
+            for pid in chain {
+                match self.engine.plans[pid].state {
+                    PlanState::Waiting => self.engine.withdraw_plan(pid),
+                    PlanState::Running => {
+                        let req = self.engine.plans[pid].req;
+                        let stage = self.engine.plans[pid].stage;
+                        let started = self.engine.plans[pid].started_ms;
+                        let prepare = self.engine.plans[pid].prepare_ms;
+                        let exec = self.engine.plans[pid].exec_ms;
+                        self.engine.preempt_running(pid, now_ms);
+                        if stage == Stage::Diffuse {
+                            if let Some(pr) = self.progress.get_mut(&req) {
+                                // Execution time only (prepare excluded),
+                                // like kill_dead: the lost-work metric must
+                                // measure the same quantity across recovery
+                                // policies.
+                                pr.stage_ms[1] +=
+                                    (now_ms - started - prepare).clamp(0.0, exec);
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    /// Cold-restart capture: drain every in-flight request, account the
+    /// completed work being discarded (every completed stage re-executes),
+    /// and re-queue each request from scratch — conserved, never dropped.
+    fn capture_restarts(&mut self, fstats: &mut FaultStats) {
+        let mut progress: Vec<(RequestId, Prog)> = self.progress.drain().collect();
+        progress.sort_by_key(|(id, _)| *id);
+        for (id, pr) in progress {
+            let mut encode_done = false;
+            let mut diffuse_done = false;
+            for &pid in &pr.plan_chain {
+                let pl = &self.engine.plans[pid];
+                if pl.state != PlanState::Done {
+                    continue;
+                }
+                if pl.stage == Stage::Encode || pl.merged_stages.contains(&Stage::Encode) {
+                    encode_done = true;
+                }
+                if pl.stage == Stage::Diffuse {
+                    diffuse_done = true;
+                }
+            }
+            fstats.re_executed_stages += encode_done as usize + diffuse_done as usize;
+            fstats.lost_diffuse_ms += pr.stage_ms[1];
+            fstats.restarted += 1;
+            self.req_meta.insert(id, (pr.arrival_ms, pr.deadline_ms));
+            self.pending.push(Request {
+                id,
+                pipeline_id: self.idx,
+                shape_idx: pr.shape_idx,
+                arrival_ms: pr.arrival_ms,
+                deadline_ms: pr.deadline_ms,
+                batch: 1,
+                difficulty: 0.5,
+            });
+        }
+        self.cuts.clear();
+        self.fault_hit.clear();
+    }
+
+    /// The cold-bootstrap price a restarted lane pays before serving: every
+    /// GPU of a node streams all three stage weights from pinned host
+    /// memory over the *shared* per-node host link (nodes reload in
+    /// parallel, GPUs within a node serialise on the link).
+    fn cold_reload_ms(&self) -> f64 {
+        let w: f64 = self.profile.weights_gb.iter().sum();
+        self.template.gpus_per_node as f64 * w / self.template.host_gbps.max(1e-9) * 1e3
+            + self.template.link_latency_ms
+    }
 }
 
 /// Estimated per-GPU service rate for a pipeline's uniform mix (the
@@ -879,6 +1124,303 @@ fn per_gpu_rps(setup: &PipelineSetup, cluster: &ClusterSpec) -> f64 {
     let orch = Orchestrator::new(&setup.profile, &setup.pipeline, &setup.consts, cluster);
     let w: Vec<f64> = setup.pipeline.shapes.iter().map(|_| 1.0).collect();
     orch.estimated_rates(&w).v.get(&Pi::Edc).copied().unwrap_or(1e-3)
+}
+
+// ---------------------------------------------------------------------------
+// Fault orchestration state (run_coserve_faulty)
+// ---------------------------------------------------------------------------
+
+/// Cluster-membership state for a fault run. Keeps the *world* truth (which
+/// nodes physically have capacity) separate from the *control-plane* view
+/// (which nodes the arbiter may allocate): between a hard loss and its
+/// heartbeat detection the two disagree, and that disagreement is exactly
+/// the reactive-recovery cost the subsystem measures.
+struct FaultState {
+    recovery: RecoveryPolicy,
+    detector: FailureDetector,
+    /// Physical truth: the node has capacity right now.
+    world_alive: Vec<bool>,
+    /// Control view: the arbiter may allocate this node (known-alive and
+    /// not retiring under a reclaim notice).
+    known_avail: Vec<bool>,
+    /// Physical node -> owning lane under the current allocation.
+    owner_of: Vec<Option<usize>>,
+    /// Nodes whose departure is already being handled (notice acted on, or
+    /// detection fired): staleness sweeps and heartbeats skip them.
+    handled: BTreeSet<usize>,
+    /// Open per-failure blackout records: (node, victim lane, loss time).
+    open: Vec<(usize, usize, f64)>,
+    stats: FaultStats,
+}
+
+impl FaultState {
+    fn allocatable(&self) -> usize {
+        self.known_avail.iter().filter(|&&b| b).count()
+    }
+}
+
+/// Deterministic node ownership: walk allocatable nodes in id order and
+/// hand lane 0 its first `alloc[0]`, lane 1 the next `alloc[1]`, …
+fn assign_owners(fs: &mut FaultState, alloc: &[usize]) {
+    for o in fs.owner_of.iter_mut() {
+        *o = None;
+    }
+    let mut lane = 0usize;
+    let mut left = alloc.first().copied().unwrap_or(0);
+    for node in 0..fs.owner_of.len() {
+        if !fs.known_avail[node] {
+            continue;
+        }
+        while left == 0 && lane + 1 < alloc.len() {
+            lane += 1;
+            left = alloc[lane];
+        }
+        if left == 0 {
+            break;
+        }
+        fs.owner_of[node] = Some(lane);
+        left -= 1;
+    }
+}
+
+/// Capacity disappears under the cluster: kill the victim lane's plans on
+/// the dead node and open the per-failure blackout record. Recovery is NOT
+/// started here — for hard failures the control plane only learns of the
+/// loss when heartbeats go stale; for proactively-drained reclaims the node
+/// is already unowned and the loss hits idle capacity.
+fn apply_node_loss(node: usize, now: f64, lanes: &mut [Lane], fs: &mut FaultState) {
+    if !fs.world_alive[node] {
+        return;
+    }
+    fs.world_alive[node] = false;
+    fs.stats.node_losses += 1;
+    match fs.owner_of[node] {
+        None => {
+            // No lane owns it: the loss hits idle capacity — zero blackout.
+            fs.stats.blackout_ms.push(0.0);
+            if fs.known_avail[node] {
+                // Not a drained node (e.g. it just returned and the
+                // re-expansion swap hasn't assigned it yet): the control
+                // plane still counts it, so leave it tracked — heartbeat
+                // staleness must still retire it from the allocatable pool.
+            } else {
+                fs.handled.insert(node);
+                fs.detector.forget(node);
+            }
+        }
+        Some(p) => {
+            let local = (0..node).filter(|&m| fs.owner_of[m] == Some(p)).count();
+            lanes[p].fail_node_local(local);
+            lanes[p].kill_dead(now, &mut fs.stats);
+            lanes[p].must_rebuild = true;
+            fs.open.push((node, p, now));
+        }
+    }
+}
+
+/// Per-lane arbiter signals (shared by the monitor tick and fault
+/// recovery). `rate_per_sec` divides by the full window; before one window
+/// has elapsed that under-reports a young run's demand, so rescale to the
+/// time actually observed.
+fn lane_signals(
+    lanes: &mut [Lane],
+    avg_rps: &[f64],
+    per_gpu: &[f64],
+    cfg: &CoServeConfig,
+    now: f64,
+) -> Vec<LaneSignal> {
+    lanes
+        .iter_mut()
+        .enumerate()
+        .map(|(p, lane)| {
+            let elapsed_s = (now.min(cfg.demand_window_ms) / 1000.0).max(1e-9);
+            let observed =
+                lane.arrivals.rate_per_sec(now) * (cfg.demand_window_ms / 1000.0) / elapsed_s;
+            let demand_rps = if lane.arrivals.len() >= 8 { observed } else { avg_rps[p] };
+            let gpus = lane.gpus();
+            let backlog = lane.pending.len();
+            let trigger = lane.monitor.pattern_change(now)
+                || backlog as f64 > gpus as f64 * cfg.backlog_trigger_per_gpu;
+            LaneSignal {
+                demand_rps,
+                per_gpu_rps: per_gpu[p],
+                backlog,
+                gpus,
+                trigger,
+                slo_weight: lane.slo_weight,
+            }
+        })
+        .collect()
+}
+
+/// The recovery orchestrator's entry: on a membership change (loss
+/// detected, reclaim notice, node return) re-run the arbiter's MCKP over
+/// the changed pool and force a preempt-style cut (or cold kill) on every
+/// lane that resizes. Returns the target allocation plus the scheduled
+/// step-boundary cut events.
+#[allow(clippy::too_many_arguments)]
+fn start_fault_recovery(
+    lanes: &mut [Lane],
+    arbiter: &mut dyn ArbiterPolicy,
+    hook: &mut dyn LaneHook,
+    fs: &mut FaultState,
+    alloc: &[usize],
+    avg_rps: &[f64],
+    per_gpu: &[f64],
+    cfg: &CoServeConfig,
+    gpn: usize,
+    now: f64,
+) -> (Vec<usize>, Vec<(usize, PlanId, f64)>) {
+    let n = lanes.len();
+    let mut signals = lane_signals(lanes, avg_rps, per_gpu, cfg, now);
+    hook.shape_signals(now, &mut signals);
+    let total = fs.allocatable();
+    assert!(total >= n, "churn took the pool below one node per lane");
+    let target = arbiter.initial(&signals, total);
+    assert_eq!(target.len(), n, "arbiter returned wrong lane count");
+    assert_eq!(target.iter().sum::<usize>(), total, "arbiter must cover the degraded pool");
+    assert!(target.iter().all(|&x| x >= 1), "every lane needs >= 1 node");
+    let mut cut_events: Vec<(usize, PlanId, f64)> = Vec::new();
+    for (p, lane) in lanes.iter_mut().enumerate() {
+        let resizes = target[p] != alloc[p]
+            || lane.must_rebuild
+            || lane.draining
+            || lane.dead_gpus.iter().any(|&d| d);
+        if !resizes {
+            continue;
+        }
+        if !lane.draining {
+            lane.drain_started_ms = now;
+        }
+        lane.draining = true;
+        lane.must_rebuild = true;
+        lane.fault_forced = true;
+        lane.policy.pending_resize = Some(target[p] * gpn);
+        match fs.recovery {
+            RecoveryPolicy::ColdRestart => lane.begin_cold(now),
+            _ => {
+                for (pid, t_cut) in lane.begin_preempt(now) {
+                    cut_events.push((p, pid, t_cut));
+                }
+            }
+        }
+    }
+    (target, cut_events)
+}
+
+/// Apply a pending allocation once every resizing lane has reached idle
+/// (in-flight chains drained, queued plans withdrawn and running plans
+/// finished/cut at their boundaries, or cold-killed). Fault runs also close
+/// their per-failure blackout records here and reassign node ownership.
+#[allow(clippy::too_many_arguments)]
+fn try_swap(
+    lanes: &mut [Lane],
+    alloc: &mut Vec<usize>,
+    pending_alloc: &mut Option<Vec<usize>>,
+    pending_is_fault: &mut bool,
+    arbitrations: &mut usize,
+    moved_gpus: &mut usize,
+    vram_violations: &mut usize,
+    migration: &mut MigrationStats,
+    fstate: &mut Option<FaultState>,
+    gpn: usize,
+    resize: ResizePolicy,
+    now: f64,
+) {
+    let Some(target) = pending_alloc.as_ref() else { return };
+    for (p, lane) in lanes.iter().enumerate() {
+        if (target[p] != alloc[p] || lane.must_rebuild) && !lane.engine_idle() {
+            return; // still draining / waiting on a boundary cut
+        }
+    }
+    let target = pending_alloc.take().unwrap();
+    let is_fault = std::mem::replace(pending_is_fault, false);
+    let mut blackout_ms = 0.0f64;
+    let mut resized = false;
+    let mut rebuilt = vec![false; lanes.len()];
+    for (p, lane) in lanes.iter_mut().enumerate() {
+        if target[p] == alloc[p] && !lane.must_rebuild {
+            lane.draining = false;
+            lane.policy.pending_resize = None;
+            continue;
+        }
+        resized = true;
+        rebuilt[p] = true;
+        *vram_violations += lane.vram_violations();
+        if target[p] > alloc[p] {
+            *moved_gpus += (target[p] - alloc[p]) * gpn;
+        }
+        blackout_ms = blackout_ms.max(now - lane.drain_started_ms);
+        // Under Preempt (or a fault-forced cut), the migration frontier is
+        // captured before the rebuild and adopted after it: the new engine
+        // inherits the work instead of invalidating it. Cold restart
+        // re-queues everything from scratch instead.
+        let cold = lane.cold_restart;
+        let migrated = if !cold && (resize == ResizePolicy::Preempt || lane.fault_forced) {
+            lane.capture_migrations()
+        } else {
+            Vec::new()
+        };
+        if cold {
+            if let Some(fs) = fstate.as_mut() {
+                lane.capture_restarts(&mut fs.stats);
+            }
+        }
+        let reload_ms = if cold { lane.cold_reload_ms() } else { 0.0 };
+        lane.rebuild(target[p], now);
+        lane.gate_until_ms = now + reload_ms;
+        if !migrated.is_empty() {
+            let fstats =
+                if is_fault { fstate.as_mut().map(|fs| &mut fs.stats) } else { None };
+            lane.adopt_migrated(migrated, migration, fstats);
+        }
+    }
+    if resized {
+        migration.blackout_ms.push(blackout_ms);
+    }
+    *alloc = target;
+    *arbitrations += 1;
+    if let Some(fs) = fstate.as_mut() {
+        assign_owners(fs, alloc);
+        // A swap between a hard loss and its detection can hand the (still
+        // control-plane-visible) dead node to any lane: re-mark its GPUs
+        // dead on the new owner, whose outage continues until detection.
+        for node in 0..fs.owner_of.len() {
+            if fs.world_alive[node] {
+                continue;
+            }
+            let Some(p) = fs.owner_of[node] else { continue };
+            let local = (0..node).filter(|&m| fs.owner_of[m] == Some(p)).count();
+            lanes[p].fail_node_local(local);
+            lanes[p].must_rebuild = true;
+        }
+        // A failure's blackout closes once the outage is actually over —
+        // the dead node is out of the allocation, or it returned to
+        // service (a NodeUp before detection) — AND the (final) victim
+        // lane has been rebuilt; the cold-restart reload gate delays that
+        // past the rebuild itself.
+        let mut open = std::mem::take(&mut fs.open);
+        open.retain_mut(|rec| {
+            let (node, victim, t_loss) = *rec;
+            match fs.owner_of[node] {
+                Some(p_new) if !fs.world_alive[node] => {
+                    rec.1 = p_new; // ongoing outage follows the node's owner
+                    true
+                }
+                _ => {
+                    if rebuilt[victim] {
+                        fs.stats
+                            .blackout_ms
+                            .push((lanes[victim].gate_until_ms - t_loss).max(0.0));
+                        false
+                    } else {
+                        true
+                    }
+                }
+            }
+        });
+        fs.open = open;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -943,6 +1485,45 @@ pub fn run_coserve_hooked(
     cfg: &CoServeConfig,
     hook: &mut dyn LaneHook,
 ) -> CoServeReport {
+    run_coserve_engine(setups, cluster, arbiter, trace, cfg, hook, None)
+}
+
+/// [`run_coserve`] under injected node churn: the faults subsystem's
+/// recovery orchestrator drives membership-aware re-arbitration and
+/// checkpointed recovery over the [`FaultPlan`]'s churn trace.
+pub fn run_coserve_faulty(
+    setups: &[PipelineSetup],
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &MixedTrace,
+    cfg: &CoServeConfig,
+    faults: &FaultPlan,
+) -> CoServeReport {
+    run_coserve_engine(setups, cluster, arbiter, trace, cfg, &mut NoopHook, Some(faults))
+}
+
+/// [`run_coserve_faulty`] with a [`LaneHook`] (churn under a cascade).
+pub fn run_coserve_faulty_hooked(
+    setups: &[PipelineSetup],
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &MixedTrace,
+    cfg: &CoServeConfig,
+    hook: &mut dyn LaneHook,
+    faults: &FaultPlan,
+) -> CoServeReport {
+    run_coserve_engine(setups, cluster, arbiter, trace, cfg, hook, Some(faults))
+}
+
+fn run_coserve_engine(
+    setups: &[PipelineSetup],
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &MixedTrace,
+    cfg: &CoServeConfig,
+    hook: &mut dyn LaneHook,
+    faults: Option<&FaultPlan>,
+) -> CoServeReport {
     let n = setups.len();
     assert!(n > 0, "no pipelines");
     assert_eq!(trace.n_pipelines, n, "trace/setup pipeline count mismatch");
@@ -979,6 +1560,34 @@ pub fn run_coserve_hooked(
         .map(|(p, s)| Lane::new(s, cluster, alloc[p], cfg, p))
         .collect();
 
+    // Fault-run state: membership, detector, ownership, counters.
+    let mut fstate: Option<FaultState> = faults.map(|f| {
+        assert_eq!(
+            f.churn.total_nodes, total_nodes,
+            "churn trace sized for a different cluster"
+        );
+        // Validate the *allocatable* floor (a reclaimed node is retired at
+        // its notice under proactive recovery), not just raw capacity.
+        let min = f.churn.min_available().expect("incoherent churn trace");
+        assert!(min >= n, "churn trace takes the pool below one node per lane");
+        let mut detector = FailureDetector::new(f.suspect_after_ms);
+        for node in 0..total_nodes {
+            detector.beat(node, 0.0);
+        }
+        let mut fs = FaultState {
+            recovery: f.recovery,
+            detector,
+            world_alive: vec![true; total_nodes],
+            known_avail: vec![true; total_nodes],
+            owner_of: vec![None; total_nodes],
+            handled: BTreeSet::new(),
+            open: Vec::new(),
+            stats: FaultStats::default(),
+        };
+        assign_owners(&mut fs, &alloc);
+        fs
+    });
+
     // Event heap.
     let horizon = trace.duration_ms * cfg.drain_factor;
     let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
@@ -992,8 +1601,14 @@ pub fn run_coserve_hooked(
     }
     push(&mut heap, &mut seq, 0.0, EventKind::Tick);
     push(&mut heap, &mut seq, cfg.monitor_ms, EventKind::MonitorTick);
+    if let Some(f) = faults {
+        for (i, e) in f.churn.events.iter().enumerate() {
+            push(&mut heap, &mut seq, e.t_ms, EventKind::ChurnArrive(i));
+        }
+    }
 
     let mut pending_alloc: Option<Vec<usize>> = None;
+    let mut pending_is_fault = false;
     let mut arbitrations = 0usize;
     let mut moved_gpus = 0usize;
     let mut vram_violations = 0usize;
@@ -1002,66 +1617,21 @@ pub fn run_coserve_hooked(
     // Per-lane watermark into metrics.completions for the hook pump.
     let mut hook_marks = vec![0usize; n];
 
-    // Apply a pending allocation once every resizing lane has reached idle
-    // (in-flight chains drained, or — under Preempt — queued plans
-    // withdrawn and running plans finished/cut at their boundaries).
-    let try_swap = |lanes: &mut Vec<Lane>,
-                    alloc: &mut Vec<usize>,
-                    pending_alloc: &mut Option<Vec<usize>>,
-                    arbitrations: &mut usize,
-                    moved_gpus: &mut usize,
-                    vram_violations: &mut usize,
-                    migration: &mut MigrationStats,
-                    now: f64| {
-        let Some(target) = pending_alloc.as_ref() else { return };
-        for (p, lane) in lanes.iter().enumerate() {
-            if target[p] != alloc[p] && !lane.engine_idle() {
-                return; // still draining / waiting on a boundary cut
-            }
-        }
-        let target = pending_alloc.take().unwrap();
-        let mut blackout_ms = 0.0f64;
-        let mut resized = false;
-        for (p, lane) in lanes.iter_mut().enumerate() {
-            if target[p] == alloc[p] {
-                lane.draining = false;
-                lane.policy.pending_resize = None;
-                continue;
-            }
-            resized = true;
-            *vram_violations += lane.vram_violations();
-            if target[p] > alloc[p] {
-                *moved_gpus += (target[p] - alloc[p]) * gpn;
-            }
-            blackout_ms = blackout_ms.max(now - lane.drain_started_ms);
-            // Under Preempt, the migration frontier is captured before the
-            // rebuild and adopted after it: the new engine inherits the
-            // work instead of invalidating it.
-            let migrated = if resize == ResizePolicy::Preempt {
-                lane.capture_migrations()
-            } else {
-                Vec::new()
-            };
-            lane.rebuild(target[p], now);
-            if !migrated.is_empty() {
-                lane.adopt_migrated(migrated, migration);
-            }
-        }
-        if resized {
-            migration.blackout_ms.push(blackout_ms);
-        }
-        *alloc = target;
-        *arbitrations += 1;
-    };
-
     while let Some(Reverse(Ev(now, _, kind))) = heap.pop() {
         if now > horizon {
             break;
         }
         match kind {
             EventKind::Arrival(i) => {
-                let r = trace.requests[i].clone();
-                let p = r.pipeline_id;
+                let mut r = trace.requests[i].clone();
+                let mut p = r.pipeline_id;
+                // Arrival routing (cascade): the hook may redirect a trace
+                // request to a different lane before any lane sees it.
+                if let Some(q) = hook.route_arrival(&r, now) {
+                    assert!(q < n, "hook routed to unknown lane {q}");
+                    p = q;
+                    r.pipeline_id = q;
+                }
                 debug_assert!(p < n, "request tagged for unknown pipeline");
                 lanes[p].on_arrival(r, now);
             }
@@ -1076,52 +1646,83 @@ pub fn run_coserve_hooked(
                         );
                     }
                 }
+                // Work dispatched onto a dead (not-yet-detected) node is
+                // blackholed immediately.
+                if let Some(fs) = fstate.as_mut() {
+                    for lane in lanes.iter_mut() {
+                        lane.kill_dead(now, &mut fs.stats);
+                    }
+                }
                 try_swap(
-                    &mut lanes, &mut alloc, &mut pending_alloc, &mut arbitrations,
-                    &mut moved_gpus, &mut vram_violations, &mut migration, now,
+                    &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
+                    &mut arbitrations, &mut moved_gpus, &mut vram_violations,
+                    &mut migration, &mut fstate, gpn, resize, now,
                 );
                 if now + cfg.tick_ms <= horizon {
                     push(&mut heap, &mut seq, now + cfg.tick_ms, EventKind::Tick);
                 }
             }
             EventKind::MonitorTick => {
-                // Per-lane signals; congestion = monitor trigger or backlog.
-                let mut signals: Vec<LaneSignal> = lanes
-                    .iter_mut()
-                    .enumerate()
-                    .map(|(p, lane)| {
-                        // rate_per_sec divides by the full window; before one
-                        // window has elapsed that under-reports a young run's
-                        // demand by window/elapsed, so rescale to the time
-                        // actually observed.
-                        let elapsed_s =
-                            (now.min(cfg.demand_window_ms) / 1000.0).max(1e-9);
-                        let observed = lane.arrivals.rate_per_sec(now)
-                            * (cfg.demand_window_ms / 1000.0)
-                            / elapsed_s;
-                        let demand_rps =
-                            if lane.arrivals.len() >= 8 { observed } else { avg_rps[p] };
-                        let gpus = lane.gpus();
-                        let backlog = lane.pending.len();
-                        let trigger = lane.monitor.pattern_change(now)
-                            || backlog as f64 > gpus as f64 * cfg.backlog_trigger_per_gpu;
-                        LaneSignal {
-                            demand_rps,
-                            per_gpu_rps: per_gpu[p],
-                            backlog,
-                            gpus,
-                            trigger,
-                            slo_weight: lane.slo_weight,
+                // Heartbeats + staleness detection (faults runs): every
+                // node with capacity beats on the monitor cadence; nodes
+                // silent past the threshold are declared failed and the
+                // recovery orchestrator re-arbitrates the degraded pool.
+                let mut fault_action: Option<(Vec<usize>, Vec<(usize, PlanId, f64)>)> = None;
+                if let Some(fs) = fstate.as_mut() {
+                    for node in 0..total_nodes {
+                        if fs.world_alive[node] && !fs.handled.contains(&node) {
+                            fs.detector.beat(node, now);
                         }
-                    })
-                    .collect();
-                hook.shape_signals(now, &mut signals);
-                if pending_alloc.is_none() {
-                    if let Some(target) =
-                        arbiter.rearbitrate(now, &signals, &alloc, total_nodes)
-                    {
+                    }
+                    let suspects = fs.detector.suspects(now);
+                    let mut initiate = false;
+                    for nd in suspects {
+                        if fs.handled.contains(&nd) || fs.world_alive[nd] {
+                            continue;
+                        }
+                        fs.handled.insert(nd);
+                        fs.known_avail[nd] = false;
+                        fs.stats.detections += 1;
+                        initiate = true;
+                    }
+                    if initiate {
+                        fault_action = Some(start_fault_recovery(
+                            &mut lanes, arbiter, hook, fs, &alloc, &avg_rps, &per_gpu,
+                            cfg, gpn, now,
+                        ));
+                    }
+                }
+                let fault_initiated = fault_action.is_some();
+                if let Some((target, cut_events)) = fault_action {
+                    for (p, pid, t_cut) in cut_events {
+                        let gen = lanes[p].generation;
+                        push(
+                            &mut heap,
+                            &mut seq,
+                            t_cut,
+                            EventKind::PreemptCut { lane: p, gen, plan: pid },
+                        );
+                    }
+                    pending_alloc = Some(target);
+                    pending_is_fault = true;
+                }
+                // Per-lane signals; congestion = monitor trigger or backlog.
+                // (When a detection just initiated recovery,
+                // start_fault_recovery already built and shaped this tick's
+                // signals — shaping twice would double-record hook traces.)
+                if !fault_initiated {
+                    let mut signals = lane_signals(&mut lanes, &avg_rps, &per_gpu, cfg, now);
+                    hook.shape_signals(now, &mut signals);
+                    let allocatable =
+                        fstate.as_ref().map_or(total_nodes, |fs| fs.allocatable());
+                    let rearb = if pending_alloc.is_none() {
+                        arbiter.rearbitrate(now, &signals, &alloc, allocatable)
+                    } else {
+                        None
+                    };
+                    if let Some(target) = rearb {
                         assert_eq!(target.len(), n);
-                        assert_eq!(target.iter().sum::<usize>(), total_nodes);
+                        assert_eq!(target.iter().sum::<usize>(), allocatable);
                         assert!(target.iter().all(|&x| x >= 1));
                         if target != alloc {
                             let mut cut_events: Vec<(usize, PlanId, f64)> = Vec::new();
@@ -1152,6 +1753,7 @@ pub fn run_coserve_hooked(
                                 );
                             }
                             pending_alloc = Some(target);
+                            pending_is_fault = false;
                         }
                     }
                 }
@@ -1171,8 +1773,9 @@ pub fn run_coserve_hooked(
                     }
                 }
                 try_swap(
-                    &mut lanes, &mut alloc, &mut pending_alloc, &mut arbitrations,
-                    &mut moved_gpus, &mut vram_violations, &mut migration, now,
+                    &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
+                    &mut arbitrations, &mut moved_gpus, &mut vram_violations,
+                    &mut migration, &mut fstate, gpn, resize, now,
                 );
                 if now + cfg.monitor_ms <= horizon {
                     push(&mut heap, &mut seq, now + cfg.monitor_ms, EventKind::MonitorTick);
@@ -1191,10 +1794,14 @@ pub fn run_coserve_hooked(
                         EventKind::PlanDone { lane: p, gen: lanes[p].generation, plan },
                     );
                 }
+                if let Some(fs) = fstate.as_mut() {
+                    lanes[p].kill_dead(now, &mut fs.stats);
+                }
                 lanes[p].drain_ooms();
                 try_swap(
-                    &mut lanes, &mut alloc, &mut pending_alloc, &mut arbitrations,
-                    &mut moved_gpus, &mut vram_violations, &mut migration, now,
+                    &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
+                    &mut arbitrations, &mut moved_gpus, &mut vram_violations,
+                    &mut migration, &mut fstate, gpn, resize, now,
                 );
             }
             EventKind::PreemptCut { lane: p, gen, plan } => {
@@ -1202,8 +1809,85 @@ pub fn run_coserve_hooked(
                     migration.preemptions += 1;
                 }
                 try_swap(
-                    &mut lanes, &mut alloc, &mut pending_alloc, &mut arbitrations,
-                    &mut moved_gpus, &mut vram_violations, &mut migration, now,
+                    &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
+                    &mut arbitrations, &mut moved_gpus, &mut vram_violations,
+                    &mut migration, &mut fstate, gpn, resize, now,
+                );
+            }
+            EventKind::ChurnArrive(i) => {
+                let plan = faults.expect("churn event without a fault plan");
+                let ev = plan.churn.events[i];
+                let fs = fstate.as_mut().expect("churn event without fault state");
+                let mut initiate = false;
+                match ev.kind {
+                    ChurnKind::NodeDown => {
+                        // Unannounced: capacity is gone now; the control
+                        // plane learns of it when heartbeats go stale.
+                        apply_node_loss(ev.node, now, &mut lanes, fs);
+                    }
+                    ChurnKind::SpotReclaim { notice_ms } => {
+                        fs.stats.reclaim_notices += 1;
+                        if fs.recovery == RecoveryPolicy::Proactive
+                            && fs.world_alive[ev.node]
+                            && fs.known_avail[ev.node]
+                        {
+                            // Act on the notice: retire the node from the
+                            // allocatable pool and checkpoint ahead of the
+                            // loss. Its coming silence is expected, not a
+                            // failure to detect.
+                            fs.handled.insert(ev.node);
+                            fs.detector.forget(ev.node);
+                            fs.known_avail[ev.node] = false;
+                            initiate = true;
+                        }
+                        push(
+                            &mut heap,
+                            &mut seq,
+                            now + notice_ms.max(0.0),
+                            EventKind::NodeLoss { node: ev.node },
+                        );
+                    }
+                    ChurnKind::NodeUp => {
+                        if !fs.world_alive[ev.node] {
+                            fs.world_alive[ev.node] = true;
+                            fs.known_avail[ev.node] = true;
+                            fs.handled.remove(&ev.node);
+                            fs.detector.beat(ev.node, now);
+                            fs.stats.node_returns += 1;
+                            initiate = true; // re-expand over the grown pool
+                        }
+                    }
+                }
+                if initiate {
+                    let (target, cut_events) = start_fault_recovery(
+                        &mut lanes, arbiter, hook, fs, &alloc, &avg_rps, &per_gpu, cfg,
+                        gpn, now,
+                    );
+                    for (p, pid, t_cut) in cut_events {
+                        let gen = lanes[p].generation;
+                        push(
+                            &mut heap,
+                            &mut seq,
+                            t_cut,
+                            EventKind::PreemptCut { lane: p, gen, plan: pid },
+                        );
+                    }
+                    pending_alloc = Some(target);
+                    pending_is_fault = true;
+                }
+                try_swap(
+                    &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
+                    &mut arbitrations, &mut moved_gpus, &mut vram_violations,
+                    &mut migration, &mut fstate, gpn, resize, now,
+                );
+            }
+            EventKind::NodeLoss { node } => {
+                let fs = fstate.as_mut().expect("node loss without fault state");
+                apply_node_loss(node, now, &mut lanes, fs);
+                try_swap(
+                    &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
+                    &mut arbitrations, &mut moved_gpus, &mut vram_violations,
+                    &mut migration, &mut fstate, gpn, resize, now,
                 );
             }
         }
@@ -1231,6 +1915,18 @@ pub fn run_coserve_hooked(
         });
     }
 
+    // Failures whose recovery the horizon cut off: their blackout ran to
+    // the end of the run (never silently dropped from the accounting).
+    let fault_stats = match fstate {
+        Some(mut fs) => {
+            for &(_, _, t_loss) in &fs.open {
+                fs.stats.blackout_ms.push((horizon - t_loss).max(0.0));
+            }
+            fs.stats
+        }
+        None => FaultStats::default(),
+    };
+
     CoServeReport {
         arbiter: arbiter.name(),
         resize: cfg.resize,
@@ -1239,5 +1935,6 @@ pub fn run_coserve_hooked(
         moved_gpus,
         vram_violations,
         migration,
+        faults: fault_stats,
     }
 }

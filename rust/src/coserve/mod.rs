@@ -20,13 +20,20 @@
 //! static-partition baseline lives in
 //! [`crate::baselines::StaticPartition`]. `examples/coserve.rs` compares
 //! the two end-to-end, and `benches/coserve_mixed.rs` sweeps load shifts.
+//!
+//! Node churn (spot reclamation, hard failures, returns) is served by the
+//! same executor through [`exec::run_coserve_faulty`]: the
+//! [`crate::faults`] subsystem injects a seeded churn trace, detects
+//! losses by heartbeat staleness, and drives membership-aware
+//! re-arbitration plus checkpointed recovery of in-flight work.
 
 pub mod arbiter;
 pub mod exec;
 
 pub use arbiter::{demand_proportional, ArbiterPolicy, ClusterArbiter, LaneSignal};
 pub use exec::{
-    run_coserve, run_coserve_hooked, CoServeConfig, CoServeReport, LaneHook, LaneReport, NoopHook,
-    PipelineSetup,
+    run_coserve, run_coserve_faulty, run_coserve_faulty_hooked, run_coserve_hooked,
+    CoServeConfig, CoServeReport, LaneHook, LaneReport, NoopHook, PipelineSetup,
 };
+pub use crate::faults::{FaultPlan, RecoveryPolicy};
 pub use crate::migrate::ResizePolicy;

@@ -195,6 +195,20 @@ impl Engine {
         (0..self.topo.total_gpus()).map(|g| self.gpu_idle(g)).collect()
     }
 
+    /// Outstanding (waiting or running) plans that touch any GPU in
+    /// `dead` (a per-GPU mask), in plan-id order — the faults subsystem's
+    /// blast-radius query when a node disappears under the engine.
+    pub fn plans_on(&self, dead: &[bool]) -> Vec<PlanId> {
+        self.plans
+            .iter()
+            .filter(|p| {
+                matches!(p.state, PlanState::Waiting | PlanState::Running)
+                    && p.gpus.iter().any(|&g| dead.get(g).copied().unwrap_or(false))
+            })
+            .map(|p| p.id)
+            .collect()
+    }
+
     /// Enqueue a request's stage plans (E → D → C chain with predecessor
     /// links), applying Merging Execute: consecutive stages of the same
     /// request on an identical GPU set collapse into one atomic run.
@@ -877,6 +891,26 @@ mod tests {
         // Double preemption is a no-op.
         eng.preempt_running(ids[0], 60.0);
         assert_eq!(eng.plans[ids[0]].state, PlanState::Cancelled);
+    }
+
+    #[test]
+    fn plans_on_reports_the_blast_radius() {
+        let (_p, profile, topo) = fixture();
+        let mut eng = Engine::new(topo, PlacementPlan::uniform(8, Pi::Edc), &profile);
+        let a = eng.enqueue(&rp(1, vec![0]), &profile);
+        let b = eng.enqueue(&rp(2, vec![3]), &profile);
+        let started = eng.advance(0.0, &mut FixedExec(100.0), &profile);
+        assert_eq!(started.len(), 2);
+        let mut dead = vec![false; 8];
+        dead[3] = true;
+        // Only the plan on GPU 3 is in the blast radius, running or not.
+        assert_eq!(eng.plans_on(&dead), vec![b[0]]);
+        // Done and cancelled plans are out of scope.
+        eng.complete(b[0], 100.0, 0.0, None);
+        assert!(eng.plans_on(&dead).is_empty());
+        dead[0] = true;
+        eng.preempt_running(a[0], 50.0);
+        assert!(eng.plans_on(&dead).is_empty());
     }
 
     #[test]

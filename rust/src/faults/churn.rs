@@ -1,0 +1,331 @@
+//! The churn model: deterministic, seeded traces of node-level capacity
+//! events — hard failures, spot reclamations (with advance notice), and
+//! node returns — generated the way [`crate::workload::TraceGen`] generates
+//! request traces, so every fault experiment is reproducible from a seed.
+
+use std::collections::BTreeSet;
+
+use crate::util::Rng;
+
+/// One kind of node-membership change.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChurnKind {
+    /// Hard, unannounced loss (ECC fault, kernel panic, link partition):
+    /// capacity is gone at the event time; the control plane only learns of
+    /// it when heartbeats go stale.
+    NodeDown,
+    /// The node returns to the pool (repair completed, spot capacity
+    /// reappeared). Announced — takes effect immediately.
+    NodeUp,
+    /// Spot reclamation notice at the event time; capacity is actually lost
+    /// `notice_ms` later. The notice window is the proactive-recovery
+    /// opportunity: checkpoint before the loss instead of after it.
+    SpotReclaim { notice_ms: f64 },
+}
+
+impl ChurnKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ChurnKind::NodeDown => "node-down",
+            ChurnKind::NodeUp => "node-up",
+            ChurnKind::SpotReclaim { .. } => "spot-reclaim",
+        }
+    }
+}
+
+/// One churn event against a physical cluster node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnEvent {
+    pub t_ms: f64,
+    /// Physical node index in the shared cluster (0..total_nodes).
+    pub node: usize,
+    pub kind: ChurnKind,
+}
+
+/// A generated (or scripted) churn trace: time-sorted membership events.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnTrace {
+    pub events: Vec<ChurnEvent>,
+    pub duration_ms: f64,
+    pub total_nodes: usize,
+}
+
+impl ChurnTrace {
+    /// A hand-written trace (benches force specific reclaim schedules).
+    /// Events must be time-sorted; [`Self::min_alive`] validates coherence.
+    pub fn scripted(total_nodes: usize, duration_ms: f64, events: Vec<ChurnEvent>) -> Self {
+        debug_assert!(
+            events.windows(2).all(|w| w[0].t_ms <= w[1].t_ms),
+            "churn events must be time-sorted"
+        );
+        ChurnTrace { events, duration_ms, total_nodes }
+    }
+
+    /// The empty trace: fault machinery armed, nothing ever fails.
+    pub fn quiet(total_nodes: usize, duration_ms: f64) -> Self {
+        ChurnTrace { events: Vec::new(), duration_ms, total_nodes }
+    }
+
+    /// Sweep the trace's departure/return deltas and return the minimum
+    /// pool size; a reclaim's node leaves at its *deadline* when
+    /// `commit_at_notice` is false, or at its *notice* when true. Also
+    /// checks coherence: no double-down, no up of an alive node; returns
+    /// None if the trace is incoherent.
+    fn min_pool(&self, commit_at_notice: bool) -> Option<usize> {
+        let mut deltas: Vec<(f64, i64)> = Vec::new();
+        // Committed departures, keyed by node, with the time the capacity
+        // actually disappears (a reclaim's deadline). Reclaims cannot be
+        // cancelled: a `NodeUp` before its node's loss deadline is
+        // incoherent — the executor would have to un-schedule a loss the
+        // provider already committed to.
+        let mut down: std::collections::BTreeMap<usize, f64> = Default::default();
+        for e in &self.events {
+            if e.node >= self.total_nodes {
+                return None;
+            }
+            match e.kind {
+                ChurnKind::NodeDown => {
+                    if down.insert(e.node, e.t_ms).is_some() {
+                        return None;
+                    }
+                    deltas.push((e.t_ms, -1));
+                }
+                ChurnKind::SpotReclaim { notice_ms } => {
+                    if down.insert(e.node, e.t_ms + notice_ms.max(0.0)).is_some() {
+                        return None;
+                    }
+                    let leaves =
+                        if commit_at_notice { e.t_ms } else { e.t_ms + notice_ms.max(0.0) };
+                    deltas.push((leaves, -1));
+                }
+                ChurnKind::NodeUp => {
+                    match down.remove(&e.node) {
+                        Some(loss_ms) if e.t_ms >= loss_ms => {}
+                        _ => return None, // up of an alive node, or a cancelled reclaim
+                    }
+                    deltas.push((e.t_ms, 1));
+                }
+            }
+        }
+        deltas.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(b.1.cmp(&a.1)));
+        let mut alive = self.total_nodes as i64;
+        let mut min = alive;
+        for (_, d) in deltas {
+            alive += d;
+            min = min.min(alive);
+        }
+        if min < 0 {
+            return None;
+        }
+        Some(min as usize)
+    }
+
+    /// Minimum simultaneously-alive node count: *capacity* leaves at a
+    /// reclaim's deadline, not its notice. None if the trace is incoherent.
+    pub fn min_alive(&self) -> Option<usize> {
+        self.min_pool(false)
+    }
+
+    /// Minimum *allocatable* node count: a reclaimed node is committed to
+    /// leave from its notice onward (proactive recovery retires it from the
+    /// pool right there), so this is the floor the recovery orchestrator's
+    /// re-arbitration actually sees — always <= [`Self::min_alive`]. This
+    /// is the bound the executor validates against the lane count.
+    pub fn min_available(&self) -> Option<usize> {
+        self.min_pool(true)
+    }
+}
+
+/// Seeded churn generator: failure arrivals are Poisson at `1/mtbf_ms`,
+/// each failure is a spot reclaim with probability `spot_fraction` (with
+/// `notice_ms` of warning) or a hard `NodeDown` otherwise, and the node
+/// returns after an exponential downtime. The generator never takes the
+/// pool below `min_alive` simultaneously-alive nodes — failures that would
+/// are skipped, like a cloud provider honouring a capacity floor.
+#[derive(Clone, Debug)]
+pub struct ChurnGen {
+    /// Mean time between failure events across the whole pool, ms.
+    pub mtbf_ms: f64,
+    /// Mean downtime before the node returns, ms.
+    pub mean_downtime_ms: f64,
+    /// Fraction of failures that are announced spot reclaims in [0, 1].
+    pub spot_fraction: f64,
+    /// Advance warning carried by each reclaim, ms.
+    pub notice_ms: f64,
+    /// Floor on simultaneously-alive nodes (>= the lane count, so the
+    /// arbiter can always give every lane a node).
+    pub min_alive: usize,
+}
+
+impl Default for ChurnGen {
+    fn default() -> Self {
+        ChurnGen {
+            mtbf_ms: 120_000.0,
+            mean_downtime_ms: 90_000.0,
+            spot_fraction: 0.5,
+            notice_ms: 20_000.0,
+            min_alive: 2,
+        }
+    }
+}
+
+impl ChurnGen {
+    /// Generate a churn trace over `total_nodes` nodes for `duration_ms`.
+    /// Deterministic: the same `(self, total_nodes, duration_ms, seed)`
+    /// reproduce the identical event list.
+    pub fn generate(&self, total_nodes: usize, duration_ms: f64, seed: u64) -> ChurnTrace {
+        assert!(total_nodes >= self.min_alive, "pool smaller than its own floor");
+        let mut rng = Rng::new(seed ^ 0xFA17_5EED);
+        let mut events: Vec<ChurnEvent> = Vec::new();
+        // Nodes currently eligible to fail (alive and not already committed
+        // to leave). Returns are scheduled as (time, node) and folded back.
+        let mut eligible: BTreeSet<usize> = (0..total_nodes).collect();
+        let mut committed_down = 0usize;
+        let mut returns: Vec<(f64, usize)> = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(1.0 / self.mtbf_ms.max(1e-6));
+            if t >= duration_ms {
+                break;
+            }
+            // Fold in any returns that happened before this failure draw.
+            returns.retain(|&(tr, node)| {
+                if tr <= t {
+                    events.push(ChurnEvent { t_ms: tr, node, kind: ChurnKind::NodeUp });
+                    eligible.insert(node);
+                    committed_down -= 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            // Respect the capacity floor (count committed departures).
+            if total_nodes - committed_down <= self.min_alive {
+                continue;
+            }
+            if eligible.is_empty() {
+                continue;
+            }
+            // Deterministic victim pick from the ordered eligible set.
+            let idx = rng.below(eligible.len());
+            let node = *eligible.iter().nth(idx).unwrap();
+            eligible.remove(&node);
+            committed_down += 1;
+            let spot = rng.f64() < self.spot_fraction;
+            let (kind, loss_ms) = if spot {
+                (ChurnKind::SpotReclaim { notice_ms: self.notice_ms }, t + self.notice_ms)
+            } else {
+                (ChurnKind::NodeDown, t)
+            };
+            events.push(ChurnEvent { t_ms: t, node, kind });
+            let back = loss_ms + rng.exponential(1.0 / self.mean_downtime_ms.max(1e-6));
+            if back < duration_ms {
+                returns.push((back, node));
+            }
+        }
+        // Flush remaining in-horizon returns.
+        for (tr, node) in returns {
+            if tr < duration_ms {
+                events.push(ChurnEvent { t_ms: tr, node, kind: ChurnKind::NodeUp });
+            }
+        }
+        events.sort_by(|a, b| a.t_ms.partial_cmp(&b.t_ms).unwrap().then(a.node.cmp(&b.node)));
+        ChurnTrace { events, duration_ms, total_nodes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        // Aggressive rates so every seed produces a busy trace (expected
+        // ~10 failures: emptiness would be a one-in-20k fluke).
+        let g = ChurnGen { mtbf_ms: 60_000.0, ..ChurnGen::default() };
+        let a = g.generate(8, 600_000.0, 7);
+        let b = g.generate(8, 600_000.0, 7);
+        assert_eq!(a, b, "same seed must reproduce the identical churn trace");
+        assert!(!a.events.is_empty(), "these rates must produce churn in 10 min");
+        let c = g.generate(8, 600_000.0, 8);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn generated_traces_are_coherent_and_respect_the_floor() {
+        for seed in [1u64, 2, 3, 11, 42] {
+            let g = ChurnGen { min_alive: 3, ..ChurnGen::default() };
+            let t = g.generate(6, 900_000.0, seed);
+            // Time-sorted.
+            assert!(t.events.windows(2).all(|w| w[0].t_ms <= w[1].t_ms), "seed {seed}");
+            let min = t.min_alive().expect("incoherent trace");
+            assert!(min >= 3, "seed {seed}: floor violated ({min})");
+        }
+    }
+
+    #[test]
+    fn reclaims_carry_their_notice_and_return_later() {
+        let g = ChurnGen { spot_fraction: 1.0, notice_ms: 5_000.0, ..ChurnGen::default() };
+        let t = g.generate(8, 1_200_000.0, 5);
+        let mut reclaims = 0;
+        for e in &t.events {
+            match e.kind {
+                ChurnKind::SpotReclaim { notice_ms } => {
+                    assert_eq!(notice_ms, 5_000.0);
+                    reclaims += 1;
+                }
+                ChurnKind::NodeDown => panic!("spot_fraction=1.0 generated a hard failure"),
+                ChurnKind::NodeUp => {}
+            }
+        }
+        assert!(reclaims > 0, "no reclaims in 20 minutes");
+        // Every NodeUp matches an earlier departure of the same node.
+        let mut down: BTreeSet<usize> = BTreeSet::new();
+        for e in &t.events {
+            match e.kind {
+                ChurnKind::NodeUp => assert!(down.remove(&e.node), "up of an alive node"),
+                _ => assert!(down.insert(e.node), "double departure of node {}", e.node),
+            }
+        }
+    }
+
+    #[test]
+    fn scripted_and_quiet_traces() {
+        let t = ChurnTrace::quiet(4, 60_000.0);
+        assert_eq!(t.min_alive(), Some(4));
+        let s = ChurnTrace::scripted(
+            4,
+            60_000.0,
+            vec![
+                ChurnEvent { t_ms: 10_000.0, node: 1, kind: ChurnKind::SpotReclaim { notice_ms: 5_000.0 } },
+                ChurnEvent { t_ms: 30_000.0, node: 1, kind: ChurnKind::NodeUp },
+                ChurnEvent { t_ms: 40_000.0, node: 2, kind: ChurnKind::NodeDown },
+            ],
+        );
+        assert_eq!(s.min_alive(), Some(3));
+        // Commitment floor: a reclaimed node is unallocatable from its
+        // notice, so overlapping notice windows dip below the capacity
+        // floor even when the actual losses never overlap.
+        let o = ChurnTrace::scripted(
+            4,
+            60_000.0,
+            vec![
+                ChurnEvent { t_ms: 10_000.0, node: 0, kind: ChurnKind::SpotReclaim { notice_ms: 30_000.0 } },
+                ChurnEvent { t_ms: 20_000.0, node: 1, kind: ChurnKind::SpotReclaim { notice_ms: 30_000.0 } },
+                ChurnEvent { t_ms: 45_000.0, node: 0, kind: ChurnKind::NodeUp },
+            ],
+        );
+        assert_eq!(o.min_alive(), Some(3), "losses never overlap");
+        assert_eq!(o.min_available(), Some(2), "notice windows do overlap");
+        // Incoherent scripts are rejected.
+        let bad = ChurnTrace::scripted(
+            4,
+            60_000.0,
+            vec![ChurnEvent { t_ms: 1.0, node: 0, kind: ChurnKind::NodeUp }],
+        );
+        assert_eq!(bad.min_alive(), None);
+        assert_eq!(ChurnKind::NodeDown.label(), "node-down");
+        assert_eq!(ChurnKind::NodeUp.label(), "node-up");
+        assert_eq!(ChurnKind::SpotReclaim { notice_ms: 1.0 }.label(), "spot-reclaim");
+    }
+}

@@ -1,0 +1,88 @@
+//! The failure detector: heartbeat staleness layered on the monitor's
+//! clock-driven observation cadence ([`crate::monitor::Heartbeats`]).
+//!
+//! Every alive node beats on each monitor tick; a node silent for longer
+//! than `suspect_after_ms` is declared failed. Detection delay is therefore
+//! *emergent* — staleness threshold plus up to one monitor period — exactly
+//! the reactive-recovery latency the churn benches measure against the
+//! proactive (notice-driven) path, which needs no detection at all.
+
+use crate::monitor::Heartbeats;
+
+/// Heartbeat-staleness failure detector over physical node ids.
+#[derive(Clone, Debug)]
+pub struct FailureDetector {
+    /// Silence longer than this declares a node failed. Shorter detects
+    /// faster but false-positives on long monitor gaps; the co-serving
+    /// executor drives beats at `CoServeConfig::monitor_ms`, so this must
+    /// comfortably exceed one monitor period.
+    pub suspect_after_ms: f64,
+    beats: Heartbeats,
+}
+
+impl FailureDetector {
+    pub fn new(suspect_after_ms: f64) -> Self {
+        FailureDetector { suspect_after_ms, beats: Heartbeats::new() }
+    }
+
+    /// Record a heartbeat from `node` (drives re-registration too: a
+    /// returned node starts beating again).
+    pub fn beat(&mut self, node: usize, now_ms: f64) {
+        self.beats.beat(node, now_ms);
+    }
+
+    /// Stop watching `node` (its failure was handled, or it was
+    /// administratively retired — a drained spot node going away is not a
+    /// failure to detect).
+    pub fn forget(&mut self, node: usize) {
+        self.beats.forget(node);
+    }
+
+    /// Nodes now silent beyond the threshold, in node order. Each suspect
+    /// is reported exactly once: it is dropped from tracking until it beats
+    /// again.
+    pub fn suspects(&mut self, now_ms: f64) -> Vec<usize> {
+        let stale = self.beats.stale(now_ms, self.suspect_after_ms);
+        for &n in &stale {
+            self.beats.forget(n);
+        }
+        stale
+    }
+
+    pub fn last_beat(&self, node: usize) -> Option<f64> {
+        self.beats.last_beat(node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detects_silence_after_the_threshold_exactly_once() {
+        let mut d = FailureDetector::new(7_500.0);
+        for t in 0..4 {
+            d.beat(0, t as f64 * 5_000.0);
+            d.beat(1, t as f64 * 5_000.0);
+        }
+        // Node 1 dies right after t=15000; node 0 keeps beating.
+        d.beat(0, 20_000.0);
+        assert!(d.suspects(20_000.0).is_empty(), "not yet stale");
+        d.beat(0, 25_000.0);
+        assert_eq!(d.suspects(25_000.0), vec![1], "silent past the threshold");
+        // Reported once: the next sweep is clean.
+        assert!(d.suspects(30_000.0).is_empty());
+        // A returned node re-registers by beating.
+        d.beat(1, 35_000.0);
+        assert_eq!(d.last_beat(1), Some(35_000.0));
+        assert!(d.suspects(40_000.0).is_empty());
+    }
+
+    #[test]
+    fn forget_suppresses_detection_of_handled_nodes() {
+        let mut d = FailureDetector::new(5_000.0);
+        d.beat(3, 0.0);
+        d.forget(3); // drained proactively: its silence is not a failure
+        assert!(d.suspects(100_000.0).is_empty());
+    }
+}

@@ -1,0 +1,111 @@
+//! Fault-tolerant elastic serving: node churn, failure detection, and
+//! checkpointed recovery for the co-serving layer.
+//!
+//! TridentServe's planners assume a fixed, healthy GPU pool; a production
+//! cluster loses and regains nodes constantly — spot reclamation, ECC
+//! faults, maintenance drains. This subsystem closes that gap on top of the
+//! PR-3 `migrate` machinery (stage-boundary checkpoints +
+//! `Engine::enqueue_resume`):
+//!
+//! * [`churn`] — a deterministic, seeded **churn model**: [`ChurnTrace`]s
+//!   of `NodeDown` / `NodeUp` / `SpotReclaim { notice_ms }` events,
+//!   generated like `workload::TraceGen` traces ([`ChurnGen`]) or scripted
+//!   for benches.
+//! * [`detector`] — the **failure detector**: per-node heartbeat staleness
+//!   layered on the monitor cadence ([`crate::monitor::Heartbeats`]).
+//!   Reclaim notices bypass detection entirely (the provider told us);
+//!   hard failures surface only when heartbeats go stale, so reactive
+//!   recovery pays the detection lag by construction.
+//! * The **recovery orchestrator** lives in [`crate::coserve::exec`]
+//!   (`run_coserve_faulty`): on a membership change it shrinks the
+//!   arbiter's node pool, forces a `ResizePolicy::Preempt`-style cut on the
+//!   surviving nodes of affected lanes, re-runs the MCKP over the degraded
+//!   pool, and re-adopts recovered requests via `enqueue_resume`. Work lost
+//!   on a dead node is re-queued from its last durable checkpoint — never
+//!   silently dropped. `NodeUp` triggers re-expansion.
+//!
+//! Durability model: stage-boundary tensors (the E→D condition, the D→C
+//! latent) are asynchronously mirrored to pinned host memory when they
+//! enter the handoff buffers, so a *stage boundary is always a durable
+//! checkpoint*. Only intra-Diffuse step progress is volatile: a hard node
+//! loss discards the running plan's un-checkpointed denoising steps and
+//! falls back to the last stage boundary (or a full restart when nothing
+//! had completed). A reclaim notice lets proactive recovery cut at a step
+//! boundary *before* the loss, preserving everything.
+//!
+//! Accounting surfaces through [`crate::metrics::FaultStats`] (detections,
+//! lost/recovered/restarted requests, per-failure blackout) on
+//! `CoServeReport`; `benches/churn_recovery.rs` compares proactive vs
+//! reactive vs cold-restart recovery under a forced spot-reclaim trace.
+
+pub mod churn;
+pub mod detector;
+
+pub use churn::{ChurnEvent, ChurnGen, ChurnKind, ChurnTrace};
+pub use detector::FailureDetector;
+
+/// How the orchestrator recovers in-flight work from a node loss.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Act on reclaim notices: checkpoint the victim lane at stage/step
+    /// boundaries and rebuild *before* the capacity disappears — zero
+    /// completed work re-executes when the notice window suffices. Hard
+    /// (unannounced) failures still recover reactively.
+    Proactive,
+    /// Ignore notices: every loss is discovered by heartbeat staleness and
+    /// recovered after the fact. Durable stage boundaries survive; the dead
+    /// node's in-flight Diffuse step progress re-executes.
+    Reactive,
+    /// No checkpoint machinery at all (the crash-restart baseline): every
+    /// in-flight request of a resizing lane restarts from scratch and the
+    /// rebuilt lane pays a full cold bootstrap — all stage weights stream
+    /// from host to every GPU of the node, sharing the host link — before
+    /// it serves again.
+    ColdRestart,
+}
+
+impl RecoveryPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RecoveryPolicy::Proactive => "proactive",
+            RecoveryPolicy::Reactive => "reactive",
+            RecoveryPolicy::ColdRestart => "cold-restart",
+        }
+    }
+}
+
+/// Everything `run_coserve_faulty` needs to inject and survive churn.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub churn: ChurnTrace,
+    pub recovery: RecoveryPolicy,
+    /// Heartbeat-staleness threshold handed to the [`FailureDetector`];
+    /// must comfortably exceed `CoServeConfig::monitor_ms`.
+    pub suspect_after_ms: f64,
+}
+
+impl FaultPlan {
+    pub fn new(churn: ChurnTrace, recovery: RecoveryPolicy) -> Self {
+        FaultPlan { churn, recovery, suspect_after_ms: 7_500.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovery_policy_labels() {
+        assert_eq!(RecoveryPolicy::Proactive.label(), "proactive");
+        assert_eq!(RecoveryPolicy::Reactive.label(), "reactive");
+        assert_eq!(RecoveryPolicy::ColdRestart.label(), "cold-restart");
+        assert_ne!(RecoveryPolicy::Proactive, RecoveryPolicy::ColdRestart);
+    }
+
+    #[test]
+    fn fault_plan_defaults() {
+        let p = FaultPlan::new(ChurnTrace::quiet(4, 1000.0), RecoveryPolicy::Proactive);
+        assert!(p.suspect_after_ms > 5_000.0, "must exceed the default monitor period");
+        assert_eq!(p.churn.total_nodes, 4);
+    }
+}

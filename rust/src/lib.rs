@@ -24,6 +24,9 @@
 //!   lanes sharing one GPU cluster.
 //! * [`migrate`] — preemptive lane resizing: stage-boundary preemption and
 //!   Diffuse-step checkpoint/resume for co-serving GPU handoffs.
+//! * [`faults`] — fault-tolerant elastic serving: seeded node-churn traces,
+//!   heartbeat failure detection, and checkpointed recovery orchestration
+//!   over the co-serving arbiter.
 //! * [`cascade`] — query-aware cascade serving: confidence router over
 //!   cheap/full pipeline variants, jointly optimized with the arbiter.
 //! * [`metrics`] — SLO attainment, latency percentiles, Fig-10 reporting.
@@ -40,6 +43,7 @@ pub mod config;
 pub mod coserve;
 pub mod dispatch;
 pub mod engine;
+pub mod faults;
 pub mod harness;
 pub mod ilp;
 pub mod metrics;

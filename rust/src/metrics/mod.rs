@@ -254,6 +254,102 @@ impl std::fmt::Display for MigrationStats {
     }
 }
 
+/// Counters for the faults subsystem ([`crate::faults`]): node churn,
+/// failure detection, and checkpointed recovery in the co-serving layer.
+/// Surfaced through `CoServeReport` in both Display and JSON form; all-zero
+/// (and hidden from Display) on runs without fault injection.
+#[derive(Clone, Debug, Default)]
+pub struct FaultStats {
+    /// Capacity-loss events applied (hard `NodeDown` plus spot reclaims
+    /// whose deadline expired).
+    pub node_losses: usize,
+    /// Spot-reclaim notices received (acted on only under proactive
+    /// recovery).
+    pub reclaim_notices: usize,
+    /// Losses detected via heartbeat staleness (proactively handled
+    /// reclaims never need detecting).
+    pub detections: usize,
+    /// `NodeUp` re-expansions applied to the pool.
+    pub node_returns: usize,
+    /// Requests re-adopted by a fault-initiated rebuild with completed work
+    /// preserved (resumed from a stage/step checkpoint).
+    pub recovered: usize,
+    /// Requests re-queued from scratch by a fault-initiated rebuild
+    /// (nothing durable survived, or cold-restart recovery).
+    pub restarted: usize,
+    /// Executed Diffuse time discarded by failures (work that must
+    /// re-execute), ms.
+    pub lost_diffuse_ms: f64,
+    /// Completed stage executions discarded and re-run from scratch
+    /// (checkpointed recovery keeps this at zero; the cold-restart baseline
+    /// re-executes every completed stage of every affected request).
+    pub re_executed_stages: usize,
+    /// Per capacity loss: time from the loss (or, for a proactively-drained
+    /// node, zero if the lane was already rebuilt) until the victim lane is
+    /// serving again — including the cold-restart weight-reload gate.
+    pub blackout_ms: Vec<f64>,
+}
+
+impl FaultStats {
+    /// True when the run actually injected churn (controls Display).
+    pub fn active(&self) -> bool {
+        self.node_losses + self.reclaim_notices + self.node_returns + self.detections > 0
+    }
+
+    pub fn mean_blackout_s(&self) -> f64 {
+        if self.blackout_ms.is_empty() {
+            return 0.0;
+        }
+        self.blackout_ms.iter().sum::<f64>() / self.blackout_ms.len() as f64 / 1000.0
+    }
+
+    pub fn max_blackout_s(&self) -> f64 {
+        self.blackout_ms.iter().fold(0.0f64, |a, &b| a.max(b)) / 1000.0
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("node_losses".into(), Json::Num(self.node_losses as f64));
+        obj.insert("reclaim_notices".into(), Json::Num(self.reclaim_notices as f64));
+        obj.insert("detections".into(), Json::Num(self.detections as f64));
+        obj.insert("node_returns".into(), Json::Num(self.node_returns as f64));
+        obj.insert("recovered".into(), Json::Num(self.recovered as f64));
+        obj.insert("restarted".into(), Json::Num(self.restarted as f64));
+        obj.insert("lost_diffuse_ms".into(), Json::Num(self.lost_diffuse_ms));
+        obj.insert(
+            "re_executed_stages".into(),
+            Json::Num(self.re_executed_stages as f64),
+        );
+        obj.insert(
+            "blackout_ms".into(),
+            Json::Arr(self.blackout_ms.iter().map(|&b| Json::Num(b)).collect()),
+        );
+        obj.insert("mean_blackout_s".into(), Json::Num(self.mean_blackout_s()));
+        obj.insert("max_blackout_s".into(), Json::Num(self.max_blackout_s()));
+        Json::Obj(obj)
+    }
+}
+
+impl std::fmt::Display for FaultStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "losses={} notices={} detections={} returns={} recovered={} restarted={} \
+             lost_diffuse={:.2}s re_exec_stages={} blackout_mean={:.2}s blackout_max={:.2}s",
+            self.node_losses,
+            self.reclaim_notices,
+            self.detections,
+            self.node_returns,
+            self.recovered,
+            self.restarted,
+            self.lost_diffuse_ms / 1000.0,
+            self.re_executed_stages,
+            self.mean_blackout_s(),
+            self.max_blackout_s(),
+        )
+    }
+}
+
 impl std::fmt::Display for Summary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
@@ -397,6 +493,30 @@ mod tests {
         let shown = format!("{m}");
         assert!(shown.contains("resizes=3"), "{shown}");
         assert!(shown.contains("resumed=3"), "{shown}");
+    }
+
+    #[test]
+    fn fault_stats_accounting_and_json() {
+        let mut s = FaultStats::default();
+        assert!(!s.active(), "all-zero stats are inactive");
+        assert_eq!(s.mean_blackout_s(), 0.0);
+        s.node_losses = 2;
+        s.reclaim_notices = 1;
+        s.detections = 1;
+        s.recovered = 5;
+        s.restarted = 2;
+        s.lost_diffuse_ms = 1500.0;
+        s.blackout_ms = vec![1000.0, 3000.0];
+        assert!(s.active());
+        assert!((s.mean_blackout_s() - 2.0).abs() < 1e-9);
+        assert!((s.max_blackout_s() - 3.0).abs() < 1e-9);
+        let parsed = crate::util::json::Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("node_losses").unwrap().as_i64(), Some(2));
+        assert_eq!(parsed.get("recovered").unwrap().as_i64(), Some(5));
+        assert_eq!(parsed.get("max_blackout_s").unwrap().as_f64(), Some(3.0));
+        let shown = format!("{s}");
+        assert!(shown.contains("losses=2"), "{shown}");
+        assert!(shown.contains("recovered=5"), "{shown}");
     }
 
     #[test]

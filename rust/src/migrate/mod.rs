@@ -180,6 +180,14 @@ pub struct StageCheckpoint {
     /// True when the checkpoint exceeded the device HB capacity and spilled
     /// to pinned host memory (slower write and restore).
     pub spilled: bool,
+    /// True when the checkpoint was written *toward its destination*: the
+    /// target partition was known at capture time (planned resizes and
+    /// reclaim-notice recoveries both know it), so the restore skips the
+    /// inter-node hop ([`crate::perfmodel::PerfModel::ckpt_restore_targeted_ms`]).
+    /// False for checkpoints recovered after an unannounced node loss — the
+    /// durable stage-boundary tensor sits wherever it was mirrored and must
+    /// travel to the rebuilt partition.
+    pub targeted: bool,
 }
 
 impl StageCheckpoint {
@@ -292,6 +300,7 @@ mod tests {
             diffuse_steps_done: 0,
             ckpt_gb: 0.0,
             spilled: false,
+            targeted: true,
         };
         assert!(!ck.resumed(), "nothing preserved -> restart");
         ck.encode_done = true;

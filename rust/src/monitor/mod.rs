@@ -1,10 +1,55 @@
 //! The Monitor (§5.1): clock-driven collection of per-stage and
 //! per-placement-type throughput over a sliding window `T_win`, plus the
-//! §5.3 imbalance trigger that starts a placement switch.
+//! §5.3 imbalance trigger that starts a placement switch, and the
+//! [`Heartbeats`] recorder the faults subsystem's failure detector layers
+//! its staleness signal on.
 
 use crate::config::Stage;
 use crate::placement::{Pi, Rates};
 use crate::util::stats::SlidingWindow;
+
+/// Per-source liveness recorder: the substrate of the faults subsystem's
+/// failure detector ([`crate::faults::FailureDetector`]). Sources (cluster
+/// nodes, in co-serving) beat on every monitor tick while healthy; a source
+/// whose last beat is older than the staleness threshold is suspect. Kept
+/// here, beside the throughput windows, because it is the same
+/// clock-driven observation discipline — collection on the monitor
+/// cadence, judgement against a window.
+#[derive(Clone, Debug, Default)]
+pub struct Heartbeats {
+    last: std::collections::BTreeMap<usize, f64>,
+}
+
+impl Heartbeats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a beat from `source` at `now_ms` (registers unknown sources).
+    pub fn beat(&mut self, source: usize, now_ms: f64) {
+        self.last.insert(source, now_ms);
+    }
+
+    /// Stop tracking `source` (known-dead, or administratively removed).
+    pub fn forget(&mut self, source: usize) {
+        self.last.remove(&source);
+    }
+
+    /// Last beat observed from `source`, if it is tracked.
+    pub fn last_beat(&self, source: usize) -> Option<f64> {
+        self.last.get(&source).copied()
+    }
+
+    /// Tracked sources whose last beat is strictly older than
+    /// `stale_after_ms`, in source order (deterministic).
+    pub fn stale(&self, now_ms: f64, stale_after_ms: f64) -> Vec<usize> {
+        self.last
+            .iter()
+            .filter(|(_, &t)| now_ms - t > stale_after_ms)
+            .map(|(&s, _)| s)
+            .collect()
+    }
+}
 
 /// Live throughput observer.
 #[derive(Clone, Debug)]
@@ -131,6 +176,24 @@ mod tests {
         m.record(0.0, Stage::Encode, Pi::E, 1.0);
         m.record(0.0, Stage::Diffuse, Pi::D, 1.0);
         assert!(!m.pattern_change(100.0));
+    }
+
+    #[test]
+    fn heartbeats_staleness_is_a_strict_window() {
+        let mut hb = Heartbeats::new();
+        hb.beat(0, 0.0);
+        hb.beat(1, 0.0);
+        hb.beat(0, 5_000.0); // node 0 keeps beating, node 1 goes silent
+        assert!(hb.stale(7_000.0, 10_000.0).is_empty());
+        assert_eq!(hb.stale(10_001.0, 10_000.0), vec![1]);
+        // Exactly at the threshold is not yet stale (strict inequality).
+        assert!(hb.stale(10_000.0, 10_000.0).is_empty());
+        // A beat revives the source; forget() stops tracking it entirely.
+        hb.beat(1, 12_000.0);
+        assert!(hb.stale(15_000.0, 10_000.0).is_empty());
+        hb.forget(0);
+        assert_eq!(hb.last_beat(0), None);
+        assert_eq!(hb.last_beat(1), Some(12_000.0));
     }
 
     #[test]

@@ -255,6 +255,22 @@ impl PerfModel {
         }
         t
     }
+
+    /// Restore time when the checkpoint was *placed at its target*: planned
+    /// resizes and reclaim-notice recoveries know the destination partition
+    /// at capture time, so the checkpoint is written toward the destination
+    /// node during the preemption window (off the critical path — the lane
+    /// is waiting for its other cuts anyway) and the resumed plan only pays
+    /// a local device read at HBM speed, skipping the inter-node restore
+    /// hop of [`Self::ckpt_restore_ms`]. A spilled checkpoint still pays
+    /// the pinned-host read.
+    pub fn ckpt_restore_targeted_ms(&self, gb: f64, spilled: bool) -> f64 {
+        let mut t = self.transfer_ms(gb, self.cluster.hbm_gbps);
+        if spilled {
+            t += gb / self.cluster.host_gbps * 1e3;
+        }
+        t
+    }
 }
 
 #[cfg(test)]
@@ -401,6 +417,34 @@ mod tests {
         // Costs grow with checkpoint size and never drop below link latency.
         assert!(m.ckpt_write_ms(2.0 * gb, false) > m.ckpt_write_ms(gb, false));
         assert!(m.ckpt_restore_ms(0.0, false) >= m.cluster.link_latency_ms);
+    }
+
+    #[test]
+    fn targeted_checkpoint_placement_skips_the_inter_node_restore_hop() {
+        // Pin the saved restore cost exactly: when the destination partition
+        // is known at capture time (planned resizes, reclaim notices), the
+        // resumed plan reads the checkpoint locally at HBM speed instead of
+        // paying the inter-node hop.
+        let m = PerfModel::paper();
+        let p = PipelineSpec::flux();
+        let shape = p.shape("2048p").unwrap();
+        let gb = m.latent_ckpt_gb(shape);
+        let untargeted = m.ckpt_restore_ms(gb, false);
+        let targeted = m.ckpt_restore_targeted_ms(gb, false);
+        assert!(targeted < untargeted, "{targeted} !< {untargeted}");
+        // The saving is exactly the bandwidth delta between the inter-node
+        // link and HBM on the checkpoint volume.
+        let want_saving =
+            gb / m.cluster.inter_gbps * 1e3 - gb / m.cluster.hbm_gbps * 1e3;
+        assert!(
+            ((untargeted - targeted) - want_saving).abs() < 1e-9,
+            "saving {} vs want {want_saving}",
+            untargeted - targeted
+        );
+        // Spill penalty applies to both placements equally.
+        let d_spill = m.ckpt_restore_targeted_ms(gb, true) - targeted;
+        assert!((d_spill - gb / m.cluster.host_gbps * 1e3).abs() < 1e-9);
+        assert!(m.ckpt_restore_targeted_ms(gb, true) < m.ckpt_restore_ms(gb, true));
     }
 
     #[test]

@@ -191,7 +191,8 @@ fn arrival_routing_conserves_and_partitions_the_stream() {
     // Predicted-difficulty routing: requests predicted hard at arrival skip
     // the cheap pass entirely. The escalation-conservation contract must
     // hold with the stream partitioned three ways — cheap-kept,
-    // cheap-then-escalated, and direct-to-heavy.
+    // cheap-then-escalated, and direct-to-heavy — while the feedback
+    // controller walks the arrival cut against observed escalation waste.
     let cluster = ClusterSpec::l20(4);
     let (cheap, heavy) = setups(&cluster);
     let trace = logical_trace(&heavy, DifficultyModel::Uniform, 9);
@@ -213,16 +214,37 @@ fn arrival_routing_conserves_and_partitions_the_stream() {
     assert_conservation(&report, &trace);
     assert_eq!(report.coserve.vram_violations, 0);
 
-    // The direct set is exactly the predicted-difficulty rule, re-derived.
+    // The direct set is exactly the arrival rule under the *controlled*
+    // cut, re-derived by replaying the recorded cut trace: each request is
+    // judged against the cut in force at its arrival (the last adjustment
+    // strictly before it — ticks at the same timestamp run after arrivals).
+    assert!(!report.arrival_cut_trace.is_empty(), "cut trace must be recorded");
+    let cut_at = |t: f64| {
+        report
+            .arrival_cut_trace
+            .iter()
+            .take_while(|(tc, _)| *tc < t)
+            .last()
+            .map(|&(_, c)| c)
+            .unwrap_or(cut)
+    };
     let expected: std::collections::BTreeSet<u64> = trace
         .requests
         .iter()
-        .filter(|r| quality.predicted_difficulty(r.id, r.difficulty) > cut)
+        .filter(|r| quality.predicted_difficulty(r.id, r.difficulty) > cut_at(r.arrival_ms))
         .map(|r| r.id)
         .collect();
     assert_eq!(report.direct, expected, "direct routing must match the arrival rule");
-    // Uniform difficulty with a 0.75 cut: a real minority goes direct, and
-    // the cheap-routed majority still produces escalations.
+    // Uniform difficulty at τ=0.5 escalates ~a third of the cheap stream at
+    // the initial 0.75 cut — above the 25% waste target — so the controller
+    // must have walked the cut down from its day-one value.
+    assert!(
+        report.final_arrival_cut < cut,
+        "controller never adapted the cut: {} vs initial {cut}",
+        report.final_arrival_cut
+    );
+    // A real minority goes direct, and the cheap-routed majority still
+    // produces escalations.
     assert!(report.direct_routed() > 20, "only {} direct-routed", report.direct_routed());
     assert!(
         report.direct_routed() * 2 < trace.requests.len(),

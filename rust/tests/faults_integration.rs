@@ -1,0 +1,272 @@
+//! Faults integration: co-serving under injected node churn, end-to-end.
+//! Pins the three contracts the subsystem lives by:
+//!
+//! * **Determinism** — the same seed reproduces the identical churn trace
+//!   AND the identical co-serving report (counters, blackouts, per-lane
+//!   outcomes);
+//! * **Conservation** — with failures active, issued == completed +
+//!   re-queued-then-completed: every trace request is accounted exactly
+//!   once per lane, none is lost to a dead node, none is duplicated by a
+//!   recovery, across seeds and all three recovery policies;
+//! * **Recovery semantics** — reclaim notices under proactive recovery
+//!   need no detection and preserve completed work; reactive recovery
+//!   detects by heartbeat staleness; every capacity loss produces exactly
+//!   one per-failure blackout record.
+
+use std::collections::HashSet;
+
+use tridentserve::config::ClusterSpec;
+use tridentserve::coserve::{
+    run_coserve_faulty, ClusterArbiter, CoServeConfig, CoServeReport, FaultPlan, PipelineSetup,
+    RecoveryPolicy,
+};
+use tridentserve::faults::{ChurnEvent, ChurnGen, ChurnKind, ChurnTrace};
+use tridentserve::request::Outcome;
+use tridentserve::workload::{mixed, DifficultyModel, LoadShape, MixedSpec, MixedTrace, WorkloadKind};
+
+const DURATION_MS: f64 = 180_000.0;
+
+fn scenario(cluster: &ClusterSpec, seed: u64) -> (Vec<PipelineSetup>, MixedTrace) {
+    let sd3 = PipelineSetup::new("sd3", cluster);
+    let flux = PipelineSetup::new("flux", cluster);
+    let trace = {
+        let specs = [
+            MixedSpec {
+                pipeline: &sd3.pipeline,
+                profile: &sd3.profile,
+                kind: WorkloadKind::Medium,
+                rate_scale: 0.15,
+                load: LoadShape::Flat,
+                difficulty: DifficultyModel::Uniform,
+            },
+            MixedSpec {
+                pipeline: &flux.pipeline,
+                profile: &flux.profile,
+                kind: WorkloadKind::Medium,
+                rate_scale: 0.3,
+                load: LoadShape::Flat,
+                difficulty: DifficultyModel::Uniform,
+            },
+        ];
+        mixed(&specs, DURATION_MS, seed)
+    };
+    (vec![sd3, flux], trace)
+}
+
+fn cfg(seed: u64) -> CoServeConfig {
+    CoServeConfig { seed, monitor_ms: 2_500.0, ..Default::default() }
+}
+
+fn gen_churn(cluster: &ClusterSpec, seed: u64) -> ChurnTrace {
+    // Aggressive churn (expected ~6 failures per 3-minute trace) so no
+    // seed can plausibly produce an event-free run.
+    ChurnGen {
+        mtbf_ms: 30_000.0,
+        mean_downtime_ms: 45_000.0,
+        spot_fraction: 0.5,
+        notice_ms: 15_000.0,
+        min_alive: 3,
+    }
+    .generate(cluster.nodes, DURATION_MS, seed)
+}
+
+fn run(
+    cluster: &ClusterSpec,
+    setups: &[PipelineSetup],
+    trace: &MixedTrace,
+    seed: u64,
+    churn: &ChurnTrace,
+    recovery: RecoveryPolicy,
+) -> CoServeReport {
+    let mut arbiter = ClusterArbiter::new(cluster.gpus_per_node);
+    arbiter.cooldown_ms = 20_000.0;
+    arbiter.trigger_streak = 1;
+    let plan = FaultPlan::new(churn.clone(), recovery);
+    run_coserve_faulty(setups, cluster, &mut arbiter, trace, &cfg(seed), &plan)
+}
+
+/// Issued == completed + re-queued-then-completed, with no duplication:
+/// every trace request appears in its lane's completions exactly once (a
+/// recovered request completes once, under its original id), and nothing
+/// foreign appears.
+fn assert_conservation(report: &CoServeReport, trace: &MixedTrace) {
+    assert_eq!(report.lanes.len(), trace.n_pipelines);
+    for (p, lane) in report.lanes.iter().enumerate() {
+        let expected: HashSet<u64> = trace.of_pipeline(p).map(|r| r.id).collect();
+        let mut seen = HashSet::new();
+        for c in &lane.metrics.completions {
+            assert!(
+                expected.contains(&c.id),
+                "lane {p} recorded request {} it never received",
+                c.id
+            );
+            assert!(seen.insert(c.id), "lane {p} double-recorded request {}", c.id);
+            if c.outcome == Outcome::Completed {
+                assert!(c.finish_ms.is_finite());
+                assert!(c.finish_ms >= c.arrival_ms);
+            }
+        }
+        assert_eq!(
+            seen.len(),
+            expected.len(),
+            "lane {p} lost {} request(s) to churn",
+            expected.len() - seen.len()
+        );
+    }
+    let total: usize = report.lanes.iter().map(|l| l.metrics.completions.len()).sum();
+    assert_eq!(total, trace.requests.len());
+}
+
+#[test]
+fn same_seed_identical_churn_and_report() {
+    let cluster = ClusterSpec::l20(5);
+    let (setups, trace) = scenario(&cluster, 7);
+    let churn_a = gen_churn(&cluster, 7);
+    let churn_b = gen_churn(&cluster, 7);
+    assert_eq!(churn_a, churn_b, "same seed must produce the identical churn trace");
+    assert!(!churn_a.events.is_empty(), "churn rates too low to exercise anything");
+    assert_ne!(churn_a, gen_churn(&cluster, 8), "different seeds must differ");
+
+    let a = run(&cluster, &setups, &trace, 7, &churn_a, RecoveryPolicy::Reactive);
+    let b = run(&cluster, &setups, &trace, 7, &churn_b, RecoveryPolicy::Reactive);
+    assert_eq!(a.arbitrations, b.arbitrations);
+    assert_eq!(a.moved_gpus, b.moved_gpus);
+    assert_eq!(a.faults.node_losses, b.faults.node_losses);
+    assert_eq!(a.faults.detections, b.faults.detections);
+    assert_eq!(a.faults.recovered, b.faults.recovered);
+    assert_eq!(a.faults.restarted, b.faults.restarted);
+    assert_eq!(a.faults.blackout_ms, b.faults.blackout_ms);
+    assert_eq!(a.faults.lost_diffuse_ms, b.faults.lost_diffuse_ms);
+    assert_eq!(a.migration.blackout_ms, b.migration.blackout_ms);
+    for (la, lb) in a.lanes.iter().zip(&b.lanes) {
+        assert_eq!(la.metrics.completions.len(), lb.metrics.completions.len());
+        assert_eq!(la.metrics.slo_attainment(), lb.metrics.slo_attainment());
+        assert_eq!(la.nodes_final, lb.nodes_final);
+    }
+}
+
+#[test]
+fn conservation_holds_across_seeds_and_policies() {
+    let cluster = ClusterSpec::l20(5);
+    for (seed, recovery) in [
+        (3u64, RecoveryPolicy::Reactive),
+        (5, RecoveryPolicy::Proactive),
+        (9, RecoveryPolicy::ColdRestart),
+        (11, RecoveryPolicy::Reactive),
+    ] {
+        let (setups, trace) = scenario(&cluster, seed);
+        let churn = gen_churn(&cluster, seed);
+        assert!(
+            !churn.events.is_empty(),
+            "seed {seed}: churn trace empty — nothing exercised"
+        );
+        let report = run(&cluster, &setups, &trace, seed, &churn, recovery);
+        assert_eq!(
+            report.vram_violations, 0,
+            "seed {seed} {recovery:?}: VRAM ledger violated under churn"
+        );
+        assert_conservation(&report, &trace);
+        assert!(
+            report.faults.node_losses > 0,
+            "seed {seed}: no capacity loss ever applied"
+        );
+        // Exactly one per-failure blackout record per capacity loss.
+        assert_eq!(
+            report.faults.blackout_ms.len(),
+            report.faults.node_losses,
+            "seed {seed} {recovery:?}: blackout accounting out of step"
+        );
+        // The system kept serving: churn must not collapse completion.
+        let completed: usize = report
+            .lanes
+            .iter()
+            .map(|l| {
+                l.metrics
+                    .completions
+                    .iter()
+                    .filter(|c| c.outcome == Outcome::Completed)
+                    .count()
+            })
+            .sum();
+        assert!(
+            completed * 2 > trace.requests.len(),
+            "seed {seed} {recovery:?}: only {completed}/{} completed",
+            trace.requests.len()
+        );
+    }
+}
+
+#[test]
+fn proactive_needs_no_detection_and_reactive_detects() {
+    // One scripted reclaim with a generous notice, one hard failure later.
+    let cluster = ClusterSpec::l20(5);
+    let (setups, trace) = scenario(&cluster, 13);
+    let churn = ChurnTrace::scripted(
+        cluster.nodes,
+        DURATION_MS,
+        vec![
+            ChurnEvent {
+                t_ms: 40_000.0,
+                node: 4,
+                kind: ChurnKind::SpotReclaim { notice_ms: 20_000.0 },
+            },
+            ChurnEvent { t_ms: 90_000.0, node: 4, kind: ChurnKind::NodeUp },
+            ChurnEvent { t_ms: 120_000.0, node: 3, kind: ChurnKind::NodeDown },
+        ],
+    );
+    assert_eq!(churn.min_alive(), Some(4));
+
+    let pro = run(&cluster, &setups, &trace, 13, &churn, RecoveryPolicy::Proactive);
+    assert_eq!(pro.faults.reclaim_notices, 1);
+    assert_eq!(pro.faults.node_losses, 2);
+    assert_eq!(pro.faults.node_returns, 1);
+    // The reclaim was handled from its notice — only the hard NodeDown
+    // needed heartbeat detection.
+    assert_eq!(pro.faults.detections, 1, "proactive must not detect announced reclaims");
+    // The drained node was empty at its loss: one zero-blackout record.
+    assert!(
+        pro.faults.blackout_ms.iter().any(|&b| b == 0.0),
+        "proactive reclaim should reach the loss with the node already drained: {:?}",
+        pro.faults.blackout_ms
+    );
+    assert_eq!(pro.faults.re_executed_stages, 0);
+    assert_conservation(&pro, &trace);
+
+    let rea = run(&cluster, &setups, &trace, 13, &churn, RecoveryPolicy::Reactive);
+    // Reactive ignores the notice: both losses are detected by staleness.
+    assert_eq!(rea.faults.detections, 2, "reactive must detect every loss");
+    assert_eq!(rea.faults.node_losses, 2);
+    // Detection lag bounds the blackout from below: no reactive blackout
+    // can beat the staleness threshold.
+    let plan = FaultPlan::new(churn, RecoveryPolicy::Reactive);
+    for &b in &rea.faults.blackout_ms {
+        assert!(
+            b >= plan.suspect_after_ms,
+            "reactive blackout {b}ms under the detection threshold {}ms",
+            plan.suspect_after_ms
+        );
+    }
+    assert_conservation(&rea, &trace);
+}
+
+#[test]
+fn node_returns_re_expand_the_pool() {
+    // Lose a node, get it back, and end with every node allocated again.
+    let cluster = ClusterSpec::l20(5);
+    let (setups, trace) = scenario(&cluster, 17);
+    let churn = ChurnTrace::scripted(
+        cluster.nodes,
+        DURATION_MS,
+        vec![
+            ChurnEvent { t_ms: 30_000.0, node: 2, kind: ChurnKind::NodeDown },
+            ChurnEvent { t_ms: 80_000.0, node: 2, kind: ChurnKind::NodeUp },
+        ],
+    );
+    let report = run(&cluster, &setups, &trace, 17, &churn, RecoveryPolicy::Reactive);
+    assert_eq!(report.faults.node_losses, 1);
+    assert_eq!(report.faults.node_returns, 1);
+    assert!(report.arbitrations >= 2, "shrink and re-expansion must both apply");
+    let nodes: usize = report.lanes.iter().map(|l| l.nodes_final).sum();
+    assert_eq!(nodes, cluster.nodes, "the returned node must be re-allocated");
+    assert_conservation(&report, &trace);
+}
