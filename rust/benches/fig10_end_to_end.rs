@@ -10,6 +10,7 @@
 //! Environment knobs: FIG10_MINUTES (default 6), FIG10_SEED (default 0).
 
 use tridentserve::harness::{Setup, ALL_PIPELINES, ALL_POLICIES};
+use tridentserve::util::bench::BenchRecorder;
 use tridentserve::workload::WorkloadKind;
 
 fn main() {
@@ -18,6 +19,7 @@ fn main() {
     let t0 = std::time::Instant::now();
 
     println!("=== Fig 10: end-to-end ({minutes:.0}-min traces, 128 GPUs, seed {seed}) ===\n");
+    let mut out = BenchRecorder::new("fig10_end_to_end");
     let mut wins = 0usize;
     let mut cells = 0usize;
 
@@ -46,6 +48,10 @@ fn main() {
                 );
                 if policy == "trident" {
                     trident_slo = s.slo_attainment;
+                    out.record(
+                        &format!("trident_slo_{pipeline}_{}", workload.label()),
+                        s.slo_attainment,
+                    );
                     assert_eq!(s.oom, 0, "{pipeline}/{}: trident must never OOM", workload.label());
                 } else {
                     best_slo = best_slo.max(s.slo_attainment);
@@ -68,5 +74,11 @@ fn main() {
         wins * 10 >= cells * 8,
         "trident should lead SLO attainment in >=80% of cells, got {wins}/{cells}"
     );
+    out.record("win_cells", wins as f64);
+    out.record("total_cells", cells as f64);
+    match out.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => println!("WARN: could not write bench json: {e}"),
+    }
     println!("fig10 shape checks OK");
 }

@@ -2,10 +2,16 @@
 //!
 //! Times the coordinator's inner loops in isolation so optimization work
 //! has a stable before/after signal:
-//!   * dispatcher tick (feasibility filtering + MCKP solve + plan build)
+//!   * dispatcher tick (candidate-cache lookup + MCKP solve + plan build),
+//!     cold and warm-started
 //!   * engine advance/complete cycle (the per-event cost)
 //!   * orchestrator replan (Algorithm 2 end-to-end)
-//!   * whole-sim throughput (simulated events per wall second)
+//!   * whole-sim throughput (simulated ms per wall ms)
+//!
+//! Machine-readable output: every run writes `BENCH_perf_hotpath.json`
+//! (`{bench, metric, value}` records — see `util::bench`) so the perf
+//! trajectory is tracked across PRs. `PERF_SMOKE=1` shrinks iteration
+//! counts for CI's perf-smoke job.
 
 use std::time::Instant;
 
@@ -18,6 +24,7 @@ use tridentserve::perfmodel::PerfModel;
 use tridentserve::placement::{Orchestrator, Pi, PlacementPlan};
 use tridentserve::profiler::Profile;
 use tridentserve::request::Request;
+use tridentserve::util::bench::BenchRecorder;
 use tridentserve::util::Rng;
 use tridentserve::workload::WorkloadKind;
 
@@ -29,16 +36,21 @@ impl StageExec for NoopExec {
 }
 
 fn main() {
+    let quick = std::env::var("PERF_SMOKE").is_ok();
     let pipeline = PipelineSpec::flux();
     let cluster = ClusterSpec::l20_128();
     let consts = SolverConstants::default();
     let model = PerfModel::new(cluster.clone());
     let profile = Profile::build(&model, &pipeline, &consts);
     let topo = Topology::new(cluster.clone());
+    let mut out = BenchRecorder::new("perf_hotpath");
 
-    println!("=== perf_hotpath microbenchmarks ===\n");
+    println!(
+        "=== perf_hotpath microbenchmarks{} ===\n",
+        if quick { " (PERF_SMOKE)" } else { "" }
+    );
 
-    // --- Dispatcher tick.
+    // --- Dispatcher tick (cold + warm-started).
     {
         let orch = Orchestrator::new(&profile, &pipeline, &consts, &cluster);
         let w: Vec<f64> = pipeline.shapes.iter().map(|_| 1.0).collect();
@@ -59,13 +71,12 @@ fn main() {
                 }
             })
             .collect();
-        let view = ClusterView {
-            placement,
-            idle: vec![true; 128],
-            free_at_ms: vec![0.0; 128],
-            now_ms: 0.0,
-        };
-        let iters = 200;
+        let idle = vec![true; 128];
+        let free_at_ms = vec![0.0; 128];
+        let view =
+            ClusterView { placement: &placement, idle: &idle, free_at_ms: &free_at_ms, now_ms: 0.0 };
+        let iters = if quick { 20 } else { 200 };
+
         let t0 = Instant::now();
         let mut total_plans = 0;
         let mut total_nodes = 0u64;
@@ -78,9 +89,28 @@ fn main() {
         }
         let per = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
         println!(
-            "dispatcher tick (64 pending, 128 GPUs): {per:.3} ms/tick ({} plans, {} B&B nodes, {:.3} ms solve avg)",
+            "dispatcher tick cold (64 pending, 128 GPUs): {per:.3} ms/tick ({} plans, {} B&B nodes, {:.3} ms solve avg)",
             total_plans / iters, total_nodes / iters as u64, solve_ms / iters as f64
         );
+        out.record("dispatcher_tick_ms", per);
+        out.record("dispatcher_solve_ms", solve_ms / iters as f64);
+        out.record("dispatcher_bb_nodes", (total_nodes / iters as u64) as f64);
+
+        // Warm-started: each tick seeds the next (steady-state shape).
+        let t0 = Instant::now();
+        let mut hint = None;
+        let mut warm_hits = 0usize;
+        for _ in 0..iters {
+            let (_, st, next) = disp.dispatch_warm(&pending, &view, hint.as_ref());
+            warm_hits += st.warm_hits;
+            hint = Some(next);
+        }
+        let per_warm = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        println!(
+            "dispatcher tick warm (64 pending, 128 GPUs): {per_warm:.3} ms/tick ({} seed hits avg)",
+            warm_hits / iters
+        );
+        out.record("dispatcher_tick_warm_ms", per_warm);
     }
 
     // --- Engine advance/complete cycle.
@@ -90,7 +120,7 @@ fn main() {
             PlacementPlan::uniform(128, Pi::Edc),
             &profile,
         );
-        let n = 20_000u64;
+        let n: u64 = if quick { 2_000 } else { 20_000 };
         let t0 = Instant::now();
         let mut done = 0u64;
         for i in 0..n {
@@ -113,6 +143,7 @@ fn main() {
         }
         let per_us = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
         println!("engine enqueue+advance+complete: {per_us:.1} us/plan ({done} completed)");
+        out.record("engine_plan_us", per_us);
     }
 
     // --- Orchestrator replan.
@@ -120,7 +151,7 @@ fn main() {
         let orch = Orchestrator::new(&profile, &pipeline, &consts, &cluster);
         let w: Vec<f64> = pipeline.shapes.iter().map(|_| 1.0).collect();
         let rates = orch.estimated_rates(&w);
-        let iters = 2_000;
+        let iters = if quick { 200 } else { 2_000 };
         let t0 = Instant::now();
         for _ in 0..iters {
             let plan = orch.plan(&w, 128, &rates);
@@ -128,21 +159,31 @@ fn main() {
         }
         let per_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
         println!("orchestrator plan (Algorithm 2, 128 GPUs): {per_us:.1} us/plan");
+        out.record("orchestrator_plan_us", per_us);
     }
 
     // --- Whole-sim throughput.
     {
+        let sim_minutes = if quick { 1.0 } else { 5.0 };
         let setup = Setup::new("flux", 128);
         let t0 = Instant::now();
-        let m = setup.run("trident", WorkloadKind::Medium, 5.0 * 60_000.0, 0);
+        let m = setup.run("trident", WorkloadKind::Medium, sim_minutes * 60_000.0, 0);
         let wall = t0.elapsed().as_secs_f64();
         let s = m.summary();
+        // drain_factor 2.0: the simulated horizon is twice the trace span.
+        let sim_per_wall = sim_minutes * 60_000.0 * 2.0 / (wall * 1e3);
         println!(
-            "whole sim (flux/medium, 5 min, 128 GPUs): {wall:.2}s wall, {} reqs, {:.0} sim-ms/wall-ms",
+            "whole sim (flux/medium, {sim_minutes:.0} min, 128 GPUs): {wall:.2}s wall, {} reqs, {sim_per_wall:.0} sim-ms/wall-ms",
             s.n,
-            5.0 * 60_000.0 * 2.0 / (wall * 1e3)
         );
+        out.record("whole_sim_wall_s", wall);
+        out.record("whole_sim_ms_per_wall_ms", sim_per_wall);
+        out.record("whole_sim_requests", s.n as f64);
     }
 
-    println!("\nperf_hotpath done");
+    match out.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => println!("\nWARN: could not write bench json: {e}"),
+    }
+    println!("perf_hotpath done");
 }

@@ -15,6 +15,7 @@ use tridentserve::perfmodel::PerfModel;
 use tridentserve::placement::Orchestrator;
 use tridentserve::profiler::Profile;
 use tridentserve::request::Request;
+use tridentserve::util::bench::BenchRecorder;
 use tridentserve::util::Rng;
 
 fn main() {
@@ -25,6 +26,7 @@ fn main() {
 
     println!("=== Table 4: dispatcher solve time per tick ===\n");
     println!("{:<8} {:>10} {:>12} {:>12} {:>10}", "#GPUs", "pending", "median(ms)", "p95(ms)", "optimal");
+    let mut out = BenchRecorder::new("tab4_solver_scaling");
     let mut medians = Vec::new();
     for &g in &gpu_counts {
         let cluster = ClusterSpec::l20(g / 8);
@@ -57,10 +59,11 @@ fn main() {
                 })
                 .collect();
             let idle: Vec<bool> = (0..g).map(|_| rng.f64() < 0.6).collect();
+            let free_at_ms = vec![0.0; g];
             let view = ClusterView {
-                placement: placement.clone(),
-                idle,
-                free_at_ms: vec![0.0; g],
+                placement: &placement,
+                idle: &idle,
+                free_at_ms: &free_at_ms,
                 now_ms: 0.0,
             };
             let t0 = Instant::now();
@@ -72,6 +75,8 @@ fn main() {
         let median = times[times.len() / 2];
         let p95 = times[times.len() - 1];
         println!("{:<8} {:>10} {:>12.1} {:>12.1} {:>10}", g, n_pending, median, p95, all_optimal);
+        out.record(&format!("solve_median_ms_{g}gpus"), median);
+        out.record(&format!("solve_p95_ms_{g}gpus"), p95);
         medians.push(median);
     }
 
@@ -87,5 +92,9 @@ fn main() {
         growth < gpu_growth * gpu_growth,
         "solve time must grow sub-quadratically in cluster size"
     );
-    println!("\ntab4 shape checks OK");
+    match out.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => println!("\nWARN: could not write bench json: {e}"),
+    }
+    println!("tab4 shape checks OK");
 }

@@ -41,7 +41,14 @@ impl BaseCtx {
         cluster: ClusterSpec,
     ) -> Self {
         let topo = Topology::new(cluster.clone());
-        BaseCtx { pipeline, profile, consts, cluster, topo, mem_reserve_gb: 1.0 }
+        BaseCtx {
+            pipeline,
+            profile,
+            consts,
+            cluster,
+            topo,
+            mem_reserve_gb: crate::dispatch::DEFAULT_MEM_RESERVE_GB,
+        }
     }
 
     /// Activation headroom on a fully co-located (EDC) GPU.
@@ -77,7 +84,7 @@ impl BaseCtx {
     /// Find an idle intra-node GPU set of size `k` with placement `pi`.
     pub fn idle_set(
         &self,
-        view: &ClusterView,
+        view: &ClusterView<'_>,
         taken: &[bool],
         pi_filter: impl Fn(usize) -> bool,
         k: usize,
@@ -175,7 +182,7 @@ impl ServingPolicy for B1Static {
     fn dispatch(
         &mut self,
         pending: &mut Vec<Request>,
-        view: &ClusterView,
+        view: &ClusterView<'_>,
     ) -> (Vec<RequestPlans>, Option<SolveStats>) {
         // FIFO with head-of-line blocking: stop at the first request that
         // cannot be placed.
@@ -267,7 +274,7 @@ impl ServingPolicy for B2Bucketed {
     fn dispatch(
         &mut self,
         pending: &mut Vec<Request>,
-        view: &ClusterView,
+        view: &ClusterView<'_>,
     ) -> (Vec<RequestPlans>, Option<SolveStats>) {
         // FIFO per bucket: HOL blocking applies within each bucket only.
         let mut taken = vec![false; view.placement.pi.len()];
@@ -334,7 +341,7 @@ impl ServingPolicy for BDynamicPipeline {
     fn dispatch(
         &mut self,
         pending: &mut Vec<Request>,
-        view: &ClusterView,
+        view: &ClusterView<'_>,
     ) -> (Vec<RequestPlans>, Option<SolveStats>) {
         let order: Vec<usize> = if self.srtf {
             self.ctx.srtf_order(pending, view.now_ms)
@@ -481,7 +488,7 @@ impl ServingPolicy for BStageLevel {
     fn dispatch(
         &mut self,
         pending: &mut Vec<Request>,
-        view: &ClusterView,
+        view: &ClusterView<'_>,
     ) -> (Vec<RequestPlans>, Option<SolveStats>) {
         let order: Vec<usize> = if self.dynamic_srtf {
             self.ctx.srtf_order(pending, view.now_ms)
@@ -737,12 +744,10 @@ mod tests {
         let mut b3 = BDynamicPipeline::b3(c.clone());
         let placement = b3.initial_placement(128);
         // Zero idle GPUs: head cannot be placed; nothing dispatches.
-        let view = ClusterView {
-            placement,
-            idle: vec![false; 128],
-            free_at_ms: vec![1e9; 128],
-            now_ms: 0.0,
-        };
+        let idle = vec![false; 128];
+        let free_at_ms = vec![1e9; 128];
+        let view =
+            ClusterView { placement: &placement, idle: &idle, free_at_ms: &free_at_ms, now_ms: 0.0 };
         let mut pending: Vec<Request> = (0..3)
             .map(|i| Request {
                 id: i,

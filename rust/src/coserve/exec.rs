@@ -22,14 +22,14 @@
 //! conserve requests exactly: nothing in flight is lost, nothing pending is
 //! dropped, and no completed stage can execute on two partitions.
 
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use crate::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
 use crate::coserve::arbiter::{ArbiterPolicy, LaneSignal};
 use crate::dispatch::{ClusterView, RequestPlans};
 use crate::engine::{Engine, PlanId, PlanState};
 use crate::faults::{ChurnKind, FailureDetector, FaultPlan, RecoveryPolicy};
+use crate::lane::{EventQueue, LaneCore, Progress};
 use crate::metrics::{FaultStats, Metrics, MigrationStats};
 use crate::migrate::{plan_diffuse_cut, DiffuseCut, ResizePolicy, ResumeSpec, StageCheckpoint};
 use crate::util::json::Json;
@@ -285,10 +285,10 @@ impl std::fmt::Display for CoServeReport {
 }
 
 // ---------------------------------------------------------------------------
-// Event machinery (same shape as sim::run_sim, with lane-tagged events)
+// Event machinery (the shared lane core, with lane-tagged events)
 // ---------------------------------------------------------------------------
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[derive(Clone, Copy, Debug)]
 enum EventKind {
     /// A plan finished on lane `lane`'s engine of generation `gen`
     /// (generations increment on rebuild, making stale events inert).
@@ -304,31 +304,6 @@ enum EventKind {
     ChurnArrive(usize),
     /// Capacity actually disappears (a reclaim's deadline expired).
     NodeLoss { node: usize },
-}
-
-#[derive(PartialEq)]
-struct Ev(f64, u64, EventKind);
-
-impl Eq for Ev {}
-impl PartialOrd for Ev {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Ev {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.partial_cmp(&other.0).unwrap().then(self.1.cmp(&other.1))
-    }
-}
-
-struct Prog {
-    shape_idx: usize,
-    arrival_ms: f64,
-    deadline_ms: f64,
-    vr_type: usize,
-    plan_chain: Vec<PlanId>,
-    done_plans: usize,
-    stage_ms: [f64; 3],
 }
 
 // ---------------------------------------------------------------------------
@@ -351,10 +326,9 @@ struct Lane {
     monitor: Monitor,
     model: PerfModel,
     metrics: Metrics,
-    pending: Vec<Request>,
-    progress: HashMap<RequestId, Prog>,
-    req_meta: HashMap<RequestId, (f64, f64)>,
-    oom_seen: usize,
+    /// Shared lane event core: pending queue + request-progress table +
+    /// OOM/completion/close-out handlers (`crate::lane`).
+    core: LaneCore,
     exec_rng: Rng,
     arrivals: SlidingWindow,
     /// True while waiting for in-flight plans to finish before a handoff.
@@ -426,10 +400,8 @@ impl Lane {
             monitor: Monitor::new(setup.pipeline.t_win_ms, setup.consts.imbalance_trigger),
             model: PerfModel::new(cluster),
             metrics: Metrics::new(cfg.span_ms),
-            pending: Vec::new(),
-            progress: HashMap::new(),
-            req_meta: HashMap::new(),
-            oom_seen: 0,
+            // coserve records an OOM's true arrival (not the abort time).
+            core: LaneCore::new(false),
             exec_rng: Rng::new(cfg.seed ^ 0xE1EC ^ ((idx as u64 + 1) << 17)),
             arrivals: SlidingWindow::new(cfg.demand_window_ms),
             draining: false,
@@ -453,7 +425,7 @@ impl Lane {
 
     /// True when nothing is running or queued on any GPU of the partition.
     fn engine_idle(&self) -> bool {
-        self.engine.idle_mask().iter().all(|&b| b)
+        self.engine.all_idle()
     }
 
     /// VRAM-ledger invariants on an idle engine: every activation
@@ -477,9 +449,11 @@ impl Lane {
     /// callers drain first. Pending requests and their metadata survive.
     fn rebuild(&mut self, nodes: usize, now_ms: f64) {
         debug_assert!(self.engine_idle(), "rebuild on a busy engine");
-        // Anything still tracked in progress at a drain point would be a
+        // Anything still in flight at a drain point would be a
         // conservation bug; account for it rather than silently dropping.
-        let leftover: Vec<(RequestId, Prog)> = self.progress.drain().collect();
+        // (Identity entries of still-pending requests survive the drain —
+        // the pending queue itself survives the rebuild.)
+        let leftover: Vec<(RequestId, Progress)> = self.core.progress.drain_dispatched_sorted();
         for (id, pr) in leftover {
             self.metrics.record(Completion {
                 id,
@@ -508,7 +482,7 @@ impl Lane {
         );
         self.model = PerfModel::new(cluster);
         self.monitor = Monitor::new(self.pipeline.t_win_ms, self.consts.imbalance_trigger);
-        self.oom_seen = 0;
+        self.core.reset_oom_watermark();
         self.generation += 1;
         self.draining = false;
         self.dead_gpus = vec![false; nodes * self.template.gpus_per_node];
@@ -533,8 +507,7 @@ impl Lane {
                 stage_ms: [0.0; 3],
             });
         } else {
-            self.req_meta.insert(r.id, (r.arrival_ms, r.deadline_ms));
-            self.pending.push(r);
+            self.core.admit(r);
         }
     }
 
@@ -559,20 +532,7 @@ impl Lane {
             }
             None => (self.engine.enqueue(rp, &self.profile), [0.0; 3]),
         };
-        let (arrival_ms, deadline_ms) =
-            self.req_meta.get(&rp.req).copied().unwrap_or((0.0, f64::MAX));
-        self.progress.insert(
-            rp.req,
-            Prog {
-                shape_idx: rp.shape_idx,
-                arrival_ms,
-                deadline_ms,
-                vr_type: rp.vr_type,
-                plan_chain: ids,
-                done_plans: 0,
-                stage_ms: seed_stage_ms,
-            },
-        );
+        self.core.track_dispatch(rp, ids, seed_stage_ms);
     }
 
     /// Start every startable plan; returns (plan id, finish time) pairs for
@@ -593,13 +553,16 @@ impl Lane {
     /// seeing a stale burst forever.
     fn tick(&mut self, now_ms: f64, jitter: f64) -> Vec<(PlanId, f64)> {
         if !self.draining && now_ms >= self.gate_until_ms {
-            let view = ClusterView {
-                placement: self.engine.placement.clone(),
-                idle: self.engine.idle_mask(),
-                free_at_ms: self.engine.free_at_estimate(now_ms),
-                now_ms,
+            self.engine.refresh_free_view(now_ms);
+            let (plans, stats) = {
+                let view = ClusterView {
+                    placement: &self.engine.placement,
+                    idle: self.engine.idle(),
+                    free_at_ms: self.engine.free_view(),
+                    now_ms,
+                };
+                self.policy.dispatch(&mut self.core.pending, &view)
             };
-            let (plans, stats) = self.policy.dispatch(&mut self.pending, &view);
             if let Some(s) = stats {
                 self.metrics.record_solve(s);
             }
@@ -613,121 +576,29 @@ impl Lane {
     }
 
     fn drain_ooms(&mut self) {
-        while self.oom_seen < self.engine.ooms.len() {
-            let ab = self.engine.ooms[self.oom_seen].clone();
-            self.oom_seen += 1;
-            self.pending.retain(|r| r.id != ab.req);
-            if let Some(pr) = self.progress.remove(&ab.req) {
-                // Note: unlike sim::drain_ooms (which stamps the abort time),
-                // the true arrival is recorded — metric-neutral (latency and
-                // on_time never read an OOM record's arrival) but truthful.
-                self.metrics.record(Completion {
-                    id: ab.req,
-                    shape_idx: pr.shape_idx,
-                    arrival_ms: pr.arrival_ms,
-                    deadline_ms: pr.deadline_ms,
-                    finish_ms: ab.at_ms,
-                    outcome: Outcome::OomRejected,
-                    vr_type: Some(pr.vr_type),
-                    stage_ms: pr.stage_ms,
-                });
-            }
-        }
+        self.core.drain_ooms(&self.engine, &mut self.metrics);
     }
 
-    /// Mirror of `sim`'s completion handling: proactive push toward the
-    /// successor, monitor accounting, request completion bookkeeping.
+    /// Completion handling (shared with `sim` via the lane core):
+    /// proactive push toward the successor, monitor accounting, request
+    /// completion bookkeeping. A successor withdrawn by a preemptive
+    /// resize does not receive the push — its stage re-plans (and its
+    /// input restores from the checkpoint) on the new partition.
     fn handle_done(&mut self, pid: PlanId, now_ms: f64) {
-        if self.engine.plans[pid].state != PlanState::Running {
-            return; // cancelled while queued
-        }
-        let req = self.engine.plans[pid].req;
-        let stage = self.engine.plans[pid].stage;
-        let merged = self.engine.plans[pid].merged_stages.clone();
-        let shape_idx = self.engine.plans[pid].shape_idx;
-        let pi = self.engine.pi_of(self.engine.plans[pid].gpus[0]);
-        let total_ms = self.engine.plans[pid].prepare_ms + self.engine.plans[pid].exec_ms;
-
-        let (succ, q_gb) = match self.progress.get(&req) {
-            Some(pr) => {
-                let pos = pr.plan_chain.iter().position(|&p| p == pid);
-                // A successor withdrawn by a preemptive resize must not
-                // receive the proactive push: its stage re-plans (and its
-                // input restores from the checkpoint) on the new partition.
-                let succ = pos
-                    .and_then(|i| pr.plan_chain.get(i + 1))
-                    .copied()
-                    .filter(|&s| self.engine.plans[s].state == PlanState::Waiting);
-                let shape = &self.pipeline.shapes[shape_idx];
-                let q = match stage {
-                    Stage::Encode => self.model.q_ed_gb(shape),
-                    Stage::Diffuse => self.model.q_dc_gb(shape),
-                    Stage::Decode => 0.0,
-                };
-                (succ, q)
-            }
-            None => (None, 0.0),
-        };
-        self.engine.complete(pid, now_ms, q_gb, succ);
-
-        self.monitor.record(now_ms, stage, pi, 1.0);
-        for &s in &merged {
-            self.monitor.record(now_ms, s, pi, 1.0);
-        }
-
-        if let Some(pr) = self.progress.get_mut(&req) {
-            let si = match stage {
-                Stage::Encode => 0,
-                Stage::Diffuse => 1,
-                Stage::Decode => 2,
-            };
-            pr.stage_ms[si] += total_ms;
-            pr.done_plans += 1;
-            if pr.done_plans == pr.plan_chain.len() {
-                let pr = self.progress.remove(&req).unwrap();
-                self.metrics.record(Completion {
-                    id: req,
-                    shape_idx: pr.shape_idx,
-                    arrival_ms: pr.arrival_ms,
-                    deadline_ms: pr.deadline_ms,
-                    finish_ms: now_ms,
-                    outcome: Outcome::Completed,
-                    vr_type: Some(pr.vr_type),
-                    stage_ms: pr.stage_ms,
-                });
-            }
-        }
+        self.core.handle_done(
+            pid,
+            now_ms,
+            &self.pipeline,
+            &self.model,
+            &mut self.engine,
+            &mut self.monitor,
+            &mut self.metrics,
+        );
     }
 
     /// Horizon close-out: everything still tracked is an SLO miss.
     fn finalize(&mut self) {
-        let leftover: Vec<(RequestId, Prog)> = self.progress.drain().collect();
-        for (id, pr) in leftover {
-            if pr.done_plans < pr.plan_chain.len() {
-                self.metrics.record(Completion {
-                    id,
-                    shape_idx: pr.shape_idx,
-                    arrival_ms: pr.arrival_ms,
-                    deadline_ms: pr.deadline_ms,
-                    finish_ms: f64::INFINITY,
-                    outcome: Outcome::Unfinished,
-                    vr_type: Some(pr.vr_type),
-                    stage_ms: pr.stage_ms,
-                });
-            }
-        }
-        for r in self.pending.drain(..) {
-            self.metrics.record(Completion {
-                id: r.id,
-                shape_idx: r.shape_idx,
-                arrival_ms: r.arrival_ms,
-                deadline_ms: r.deadline_ms,
-                finish_ms: f64::INFINITY,
-                outcome: Outcome::Unfinished,
-                vr_type: None,
-                stage_ms: [0.0; 3],
-            });
-        }
+        self.core.finalize(&mut self.metrics);
     }
 
     // -----------------------------------------------------------------
@@ -774,11 +645,9 @@ impl Lane {
     /// boundary).
     fn begin_preempt(&mut self, now_ms: f64) -> Vec<(PlanId, f64)> {
         let mut cut_events = Vec::new();
-        // Deterministic order (HashMap iteration is not): cut events at
-        // equal timestamps must enter the heap in a seed-stable sequence.
-        let mut chains: Vec<(RequestId, Vec<PlanId>)> =
-            self.progress.iter().map(|(id, p)| (*id, p.plan_chain.clone())).collect();
-        chains.sort_by_key(|(id, _)| *id);
+        // The progress table iterates in id order, so cut events at equal
+        // timestamps enter the heap in a seed-stable sequence.
+        let chains = self.core.progress.dispatched_chains_sorted();
         for (_, chain) in chains {
             for pid in chain {
                 match self.engine.plans[pid].state {
@@ -812,7 +681,7 @@ impl Lane {
         let req = self.engine.plans[pid].req;
         let started = self.engine.plans[pid].started_ms;
         self.engine.preempt_running(pid, now_ms);
-        if let Some(pr) = self.progress.get_mut(&req) {
+        if let Some(pr) = self.core.progress.get_mut(req) {
             pr.stage_ms[1] += (now_ms - started).max(0.0);
         }
         true
@@ -828,9 +697,9 @@ impl Lane {
         let steps_total = self.pipeline.steps.max(1);
         let cap_hb = self.template.cap_hb_gb;
         let mut out = Vec::new();
-        let mut progress: Vec<(RequestId, Prog)> = self.progress.drain().collect();
-        // Deterministic capture order (HashMap iteration is not).
-        progress.sort_by_key(|(id, _)| *id);
+        // The table drains in id order (deterministic capture); identity
+        // entries of still-pending requests stay behind with the queue.
+        let progress: Vec<(RequestId, Progress)> = self.core.progress.drain_dispatched_sorted();
         for (id, pr) in progress {
             let mut has_encode = false;
             let mut encode_done = false;
@@ -959,8 +828,7 @@ impl Lane {
                     seed_stage_ms: ck.stage_ms,
                 },
             );
-            self.req_meta.insert(ck.id, (ck.arrival_ms, ck.deadline_ms));
-            self.pending.push(Request {
+            self.core.admit(Request {
                 id: ck.id,
                 pipeline_id: self.idx,
                 shape_idx: ck.shape_idx,
@@ -1036,9 +904,7 @@ impl Lane {
     fn begin_cold(&mut self, now_ms: f64) {
         self.cold_restart = true;
         self.cuts.clear();
-        let mut chains: Vec<(RequestId, Vec<PlanId>)> =
-            self.progress.iter().map(|(id, p)| (*id, p.plan_chain.clone())).collect();
-        chains.sort_by_key(|(id, _)| *id);
+        let chains = self.core.progress.dispatched_chains_sorted();
         for (_, chain) in chains {
             for pid in chain {
                 match self.engine.plans[pid].state {
@@ -1051,7 +917,7 @@ impl Lane {
                         let exec = self.engine.plans[pid].exec_ms;
                         self.engine.preempt_running(pid, now_ms);
                         if stage == Stage::Diffuse {
-                            if let Some(pr) = self.progress.get_mut(&req) {
+                            if let Some(pr) = self.core.progress.get_mut(req) {
                                 // Execution time only (prepare excluded),
                                 // like kill_dead: the lost-work metric must
                                 // measure the same quantity across recovery
@@ -1071,8 +937,7 @@ impl Lane {
     /// completed work being discarded (every completed stage re-executes),
     /// and re-queue each request from scratch — conserved, never dropped.
     fn capture_restarts(&mut self, fstats: &mut FaultStats) {
-        let mut progress: Vec<(RequestId, Prog)> = self.progress.drain().collect();
-        progress.sort_by_key(|(id, _)| *id);
+        let progress: Vec<(RequestId, Progress)> = self.core.progress.drain_dispatched_sorted();
         for (id, pr) in progress {
             let mut encode_done = false;
             let mut diffuse_done = false;
@@ -1091,8 +956,7 @@ impl Lane {
             fstats.re_executed_stages += encode_done as usize + diffuse_done as usize;
             fstats.lost_diffuse_ms += pr.stage_ms[1];
             fstats.restarted += 1;
-            self.req_meta.insert(id, (pr.arrival_ms, pr.deadline_ms));
-            self.pending.push(Request {
+            self.core.admit(Request {
                 id,
                 pipeline_id: self.idx,
                 shape_idx: pr.shape_idx,
@@ -1238,7 +1102,7 @@ fn lane_signals(
                 lane.arrivals.rate_per_sec(now) * (cfg.demand_window_ms / 1000.0) / elapsed_s;
             let demand_rps = if lane.arrivals.len() >= 8 { observed } else { avg_rps[p] };
             let gpus = lane.gpus();
-            let backlog = lane.pending.len();
+            let backlog = lane.core.pending.len();
             let trigger = lane.monitor.pattern_change(now)
                 || backlog as f64 > gpus as f64 * cfg.backlog_trigger_per_gpu;
             LaneSignal {
@@ -1588,22 +1452,17 @@ fn run_coserve_engine(
         fs
     });
 
-    // Event heap.
+    // Event heap (the shared lane core's queue).
     let horizon = trace.duration_ms * cfg.drain_factor;
-    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
-    let mut seq = 0u64;
-    let push = |heap: &mut BinaryHeap<Reverse<Ev>>, seq: &mut u64, t: f64, k: EventKind| {
-        *seq += 1;
-        heap.push(Reverse(Ev(t, *seq, k)));
-    };
+    let mut events: EventQueue<EventKind> = EventQueue::new();
     for (i, r) in trace.requests.iter().enumerate() {
-        push(&mut heap, &mut seq, r.arrival_ms, EventKind::Arrival(i));
+        events.push(r.arrival_ms, EventKind::Arrival(i));
     }
-    push(&mut heap, &mut seq, 0.0, EventKind::Tick);
-    push(&mut heap, &mut seq, cfg.monitor_ms, EventKind::MonitorTick);
+    events.push(0.0, EventKind::Tick);
+    events.push(cfg.monitor_ms, EventKind::MonitorTick);
     if let Some(f) = faults {
         for (i, e) in f.churn.events.iter().enumerate() {
-            push(&mut heap, &mut seq, e.t_ms, EventKind::ChurnArrive(i));
+            events.push(e.t_ms, EventKind::ChurnArrive(i));
         }
     }
 
@@ -1617,13 +1476,13 @@ fn run_coserve_engine(
     // Per-lane watermark into metrics.completions for the hook pump.
     let mut hook_marks = vec![0usize; n];
 
-    while let Some(Reverse(Ev(now, _, kind))) = heap.pop() {
+    while let Some((now, kind)) = events.pop() {
         if now > horizon {
             break;
         }
         match kind {
             EventKind::Arrival(i) => {
-                let mut r = trace.requests[i].clone();
+                let mut r = trace.requests[i];
                 let mut p = r.pipeline_id;
                 // Arrival routing (cascade): the hook may redirect a trace
                 // request to a different lane before any lane sees it.
@@ -1638,9 +1497,7 @@ fn run_coserve_engine(
             EventKind::Tick => {
                 for (p, lane) in lanes.iter_mut().enumerate() {
                     for (plan, finish) in lane.tick(now, cfg.jitter) {
-                        push(
-                            &mut heap,
-                            &mut seq,
+                        events.push(
                             finish,
                             EventKind::PlanDone { lane: p, gen: lane.generation, plan },
                         );
@@ -1659,7 +1516,7 @@ fn run_coserve_engine(
                     &mut migration, &mut fstate, gpn, resize, now,
                 );
                 if now + cfg.tick_ms <= horizon {
-                    push(&mut heap, &mut seq, now + cfg.tick_ms, EventKind::Tick);
+                    events.push(now + cfg.tick_ms, EventKind::Tick);
                 }
             }
             EventKind::MonitorTick => {
@@ -1696,9 +1553,7 @@ fn run_coserve_engine(
                 if let Some((target, cut_events)) = fault_action {
                     for (p, pid, t_cut) in cut_events {
                         let gen = lanes[p].generation;
-                        push(
-                            &mut heap,
-                            &mut seq,
+                        events.push(
                             t_cut,
                             EventKind::PreemptCut { lane: p, gen, plan: pid },
                         );
@@ -1745,9 +1600,7 @@ fn run_coserve_engine(
                             }
                             for (p, pid, t_cut) in cut_events {
                                 let gen = lanes[p].generation;
-                                push(
-                                    &mut heap,
-                                    &mut seq,
+                                events.push(
                                     t_cut,
                                     EventKind::PreemptCut { lane: p, gen, plan: pid },
                                 );
@@ -1778,7 +1631,7 @@ fn run_coserve_engine(
                     &mut migration, &mut fstate, gpn, resize, now,
                 );
                 if now + cfg.monitor_ms <= horizon {
-                    push(&mut heap, &mut seq, now + cfg.monitor_ms, EventKind::MonitorTick);
+                    events.push(now + cfg.monitor_ms, EventKind::MonitorTick);
                 }
             }
             EventKind::PlanDone { lane: p, gen, plan } => {
@@ -1787,9 +1640,7 @@ fn run_coserve_engine(
                 }
                 lanes[p].handle_done(plan, now);
                 for (plan, finish) in lanes[p].advance(now, cfg.jitter) {
-                    push(
-                        &mut heap,
-                        &mut seq,
+                    events.push(
                         finish,
                         EventKind::PlanDone { lane: p, gen: lanes[p].generation, plan },
                     );
@@ -1840,9 +1691,7 @@ fn run_coserve_engine(
                             fs.known_avail[ev.node] = false;
                             initiate = true;
                         }
-                        push(
-                            &mut heap,
-                            &mut seq,
+                        events.push(
                             now + notice_ms.max(0.0),
                             EventKind::NodeLoss { node: ev.node },
                         );
@@ -1865,9 +1714,7 @@ fn run_coserve_engine(
                     );
                     for (p, pid, t_cut) in cut_events {
                         let gen = lanes[p].generation;
-                        push(
-                            &mut heap,
-                            &mut seq,
+                        events.push(
                             t_cut,
                             EventKind::PreemptCut { lane: p, gen, plan: pid },
                         );

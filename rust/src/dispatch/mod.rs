@@ -10,14 +10,21 @@
 //!    stage co-resides; otherwise run on an auxiliary replica at the
 //!    profiled optimal parallelism).
 
+use std::borrow::Cow;
+use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::cluster::topology::{GpuId, Topology};
 use crate::config::{PipelineSpec, SolverConstants, Stage};
 use crate::ilp::{Item, Mckp};
+use crate::perfmodel::DEGREES;
 use crate::placement::{Pi, PlacementPlan};
 use crate::profiler::Profile;
 use crate::request::{Request, RequestId};
+
+/// VRAM headroom reserve the feasibility filter assumes by default
+/// (matches the orchestrator's).
+pub const DEFAULT_MEM_RESERVE_GB: f64 = 1.0;
 
 /// One stage's dispatch plan `Γ_r^s = (r, G_r^s, {s: φ_s})`.
 #[derive(Clone, Debug)]
@@ -44,16 +51,18 @@ pub struct RequestPlans {
     pub c_on_subset: bool,
 }
 
-/// What the dispatcher needs to know about the cluster at a tick.
-#[derive(Clone, Debug)]
-pub struct ClusterView {
+/// What the dispatcher needs to know about the cluster at a tick. All
+/// slices are borrowed from the engine's incrementally-maintained state —
+/// building a view per tick costs no allocation and no placement clone.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterView<'a> {
     /// Current placement metadata (may already be `P_switch` — §5.3).
-    pub placement: PlacementPlan,
+    pub placement: &'a PlacementPlan,
     /// Idle GPUs right now (eligible to start a D plan immediately).
-    pub idle: Vec<bool>,
+    pub idle: &'a [bool],
     /// For auxiliary selection: earliest time each GPU frees up (= now for
     /// idle GPUs). Indexed by GpuId.
-    pub free_at_ms: Vec<f64>,
+    pub free_at_ms: &'a [f64],
     pub now_ms: f64,
 }
 
@@ -98,6 +107,126 @@ pub struct SolveStats {
     pub optimal: bool,
     pub candidates: usize,
     pub dispatched: usize,
+    /// Warm-start seed entries that projected onto this tick's candidate
+    /// set (0 on cold solves).
+    pub warm_hits: usize,
+}
+
+/// One precomputed dispatch candidate for a (shape, Primary type, degree)
+/// cell: everything the per-tick item assembly needs that does not depend
+/// on the current placement or the request's deadline.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    /// Pre-profiled runtime `t_{r,i,k}` of the stages the type hosts.
+    pub runtime_ms: f64,
+    /// Decode headroom some stage host must offer when C is *not*
+    /// co-resident on the primary (0.0 when it is — no external host
+    /// needed). Compared against the tick's `best_c_headroom`.
+    pub need_c_headroom_gb: f64,
+    /// Communication penalty `Q_{r,i}` (Appendix C.2 Eq. 3).
+    pub comm_penalty: f64,
+    /// Tie-break toward the profiled optimal degree.
+    pub k_bias: f64,
+    /// Strict-but-small VR-order preference.
+    pub type_bias: f64,
+}
+
+/// The per-(shape, vr-type, degree) runtime/feasibility table, computed
+/// once from the [`Profile`]: `Dispatcher::dispatch` assembles its MCKP
+/// items by lookup instead of re-running the `perfmodel`-backed filters
+/// per pending request per tick. Build cost is one sweep over
+/// `n_shapes × 4 × |DEGREES|` cells — less than a single tick's worth of
+/// the old per-request recomputation.
+#[derive(Clone, Debug)]
+pub struct CandidateCache {
+    /// `cand[shape][type][degree_idx]`; `None` = statically infeasible.
+    cand: Vec<[[Option<Candidate>; DEGREES.len()]; 4]>,
+    /// The reserve the table was built under (placement-independent).
+    pub mem_reserve_gb: f64,
+}
+
+impl CandidateCache {
+    /// Precompute the table. `mem_reserve_gb` must match the dispatcher's
+    /// (the feasibility filters depend on it).
+    pub fn build(
+        profile: &Profile,
+        pipeline: &PipelineSpec,
+        consts: &SolverConstants,
+        topo: &Topology,
+        mem_reserve_gb: f64,
+    ) -> Self {
+        // A scratch dispatcher (empty cache) to reuse the filter methods;
+        // none of them consult the cache.
+        let scratch = CandidateCache { cand: Vec::new(), mem_reserve_gb };
+        let d = Dispatcher {
+            profile,
+            pipeline,
+            consts,
+            topo,
+            mem_reserve_gb,
+            solve_budget_ms: 0.0,
+            cache: Cow::Owned(scratch),
+        };
+        let mut cand = Vec::with_capacity(profile.n_shapes());
+        for s in 0..profile.n_shapes() {
+            let k_opt = profile.optimal_degree(s, Stage::Diffuse);
+            let mut per_shape: [[Option<Candidate>; DEGREES.len()]; 4] = Default::default();
+            for (i, row) in per_shape.iter_mut().enumerate() {
+                let cap = d.cap_gb(i);
+                if cap <= 0.0 {
+                    continue;
+                }
+                for (ki, &k) in DEGREES.iter().enumerate() {
+                    if k > topo.spec.gpus_per_node {
+                        continue;
+                    }
+                    if !d.degree_allowed(s, k, i) {
+                        continue;
+                    }
+                    if profile.act_gb(s, Stage::Diffuse, k) > cap {
+                        continue;
+                    }
+                    let kc = profile.optimal_degree(s, Stage::Decode).min(k);
+                    let need_c_headroom_gb = if Pi::PRIMARY[i].contains(Stage::Decode) {
+                        if profile.act_gb(s, Stage::Decode, kc) > cap {
+                            continue;
+                        }
+                        0.0
+                    } else {
+                        profile.act_gb(s, Stage::Decode, 1)
+                    };
+                    let k_bias =
+                        0.01 * ((k as f64).log2() - (k_opt as f64).log2()).abs();
+                    let type_bias = 0.3 * i as f64;
+                    row[ki] = Some(Candidate {
+                        runtime_ms: d.estimate_runtime_ms(s, i, k),
+                        need_c_headroom_gb,
+                        comm_penalty: d.comm_penalty(s, i),
+                        k_bias,
+                        type_bias,
+                    });
+                }
+            }
+            cand.push(per_shape);
+        }
+        CandidateCache { cand, mem_reserve_gb }
+    }
+
+    #[inline]
+    pub fn get(&self, shape_idx: usize, vr_type: usize, degree_idx: usize) -> Option<Candidate> {
+        self.cand[shape_idx][vr_type][degree_idx]
+    }
+}
+
+/// Warm-start carry-over between dispatcher ticks: per request, the
+/// `(vr type, degree)` of its best-known config — the previous solve's
+/// choice where one was made, its top-profit candidate otherwise (chosen
+/// requests that dispatched leave the pending set, so their entries
+/// project away by id). Seeds the next branch-and-bound with a
+/// near-optimal incumbent so pruning starts tight on contended ticks.
+#[derive(Clone, Debug, Default)]
+pub struct WarmHint {
+    pub choice: HashMap<RequestId, (usize, usize)>,
 }
 
 /// The Resource-Aware Dispatcher.
@@ -107,10 +236,18 @@ pub struct Dispatcher<'a> {
     pub consts: &'a SolverConstants,
     pub topo: &'a Topology,
     /// VRAM headroom reserve used in the feasibility filter (matches the
-    /// orchestrator's).
-    pub mem_reserve_gb: f64,
+    /// orchestrator's). Private because the candidate cache snapshots it
+    /// at build: change it via [`Dispatcher::set_mem_reserve_gb`], which
+    /// rebuilds the cache so the two can never diverge.
+    mem_reserve_gb: f64,
     /// Time budget per ILP solve, ms.
     pub solve_budget_ms: f64,
+    /// Candidate table: owned when built by [`Dispatcher::new`], borrowed
+    /// when a persistent owner (e.g. `TridentPolicy`) shares one across
+    /// ticks via [`Dispatcher::with_cache`]. Private — a swapped-in table
+    /// built under a different profile/reserve would silently disagree
+    /// with the dispatcher's own filters.
+    cache: Cow<'a, CandidateCache>,
 }
 
 impl<'a> Dispatcher<'a> {
@@ -120,14 +257,55 @@ impl<'a> Dispatcher<'a> {
         consts: &'a SolverConstants,
         topo: &'a Topology,
     ) -> Self {
+        let cache =
+            CandidateCache::build(profile, pipeline, consts, topo, DEFAULT_MEM_RESERVE_GB);
         Dispatcher {
             profile,
             pipeline,
             consts,
             topo,
-            mem_reserve_gb: 1.0,
+            mem_reserve_gb: DEFAULT_MEM_RESERVE_GB,
             solve_budget_ms: 80.0,
+            cache: Cow::Owned(cache),
         }
+    }
+
+    /// Like [`Dispatcher::new`], but borrowing a candidate table the
+    /// caller keeps alive across ticks (no per-tick rebuild at all).
+    pub fn with_cache(
+        profile: &'a Profile,
+        pipeline: &'a PipelineSpec,
+        consts: &'a SolverConstants,
+        topo: &'a Topology,
+        cache: &'a CandidateCache,
+    ) -> Self {
+        Dispatcher {
+            profile,
+            pipeline,
+            consts,
+            topo,
+            mem_reserve_gb: cache.mem_reserve_gb,
+            solve_budget_ms: 80.0,
+            cache: Cow::Borrowed(cache),
+        }
+    }
+
+    /// Change the VRAM reserve and rebuild the candidate table under it
+    /// (the table's feasibility cells depend on the reserve, so the two
+    /// must move together).
+    pub fn set_mem_reserve_gb(&mut self, gb: f64) {
+        self.mem_reserve_gb = gb;
+        self.cache = Cow::Owned(CandidateCache::build(
+            self.profile,
+            self.pipeline,
+            self.consts,
+            self.topo,
+            gb,
+        ));
+    }
+
+    pub fn mem_reserve_gb(&self) -> f64 {
+        self.mem_reserve_gb
     }
 
     /// `cap(i)`: activation headroom on a Primary GPU of type `i`.
@@ -226,12 +404,28 @@ impl<'a> Dispatcher<'a> {
     pub fn dispatch(
         &self,
         pending: &[Request],
-        view: &ClusterView,
+        view: &ClusterView<'_>,
     ) -> (Vec<RequestPlans>, SolveStats) {
+        let (plans, stats, _) = self.dispatch_warm(pending, view, None);
+        (plans, stats)
+    }
+
+    /// [`Dispatcher::dispatch`] with warm-start carry-over: `warm` is the
+    /// previous tick's solution (projected onto still-pending requests by
+    /// id — departed requests simply miss), and the returned [`WarmHint`]
+    /// is this tick's solution for the next call to consume.
+    pub fn dispatch_warm(
+        &self,
+        pending: &[Request],
+        view: &ClusterView<'_>,
+        warm: Option<&WarmHint>,
+    ) -> (Vec<RequestPlans>, SolveStats, WarmHint) {
         let t_start = Instant::now();
 
         // Idle primary replicas per type, grouped per node for the
-        // intra-machine GPU-set search.
+        // intra-machine GPU-set search. (The idle slice itself is
+        // maintained incrementally by the engine; this pass is a plain
+        // bool scan, not a queue walk.)
         let mut idle_by_type: [Vec<GpuId>; 4] = Default::default();
         for g in 0..view.placement.pi.len() {
             if !view.idle[g] {
@@ -243,57 +437,58 @@ impl<'a> Dispatcher<'a> {
         }
         let capacities: Vec<u64> = idle_by_type.iter().map(|v| v.len() as u64).collect();
 
-        // Build the filtered ILP.
-        let c_headroom = self.best_c_headroom(&view.placement);
+        // Assemble the filtered ILP by candidate-cache lookup: the
+        // per-(shape, type, degree) feasibility filters and runtime
+        // estimates were precomputed once from the Profile; only the
+        // placement-dependent Decode-headroom gate and the deadline-aware
+        // reward remain per-tick work.
+        let c_headroom = self.best_c_headroom(view.placement);
+        let cache: &CandidateCache = &self.cache;
         let mut items = Vec::new();
         let mut meta: Vec<(usize, usize, usize)> = Vec::new(); // (pending_idx, i, k)
+        let mut seed: Vec<Option<usize>> = vec![None; pending.len()];
+        // Per group: this tick's top-profit (profit, i, k) — the carry-over
+        // hint for requests the solver leaves pending (see below).
+        let mut best_cand: Vec<Option<(f64, usize, usize)>> = vec![None; pending.len()];
+        let mut warm_hits = 0usize;
         for (ri, r) in pending.iter().enumerate() {
+            let hint = warm.and_then(|w| w.choice.get(&r.id)).copied();
             // Best conceivable runtime for the reward estimate.
             let mut best_rt = f64::INFINITY;
-            let mut cand: Vec<(usize, usize, f64)> = Vec::new();
+            let mut cand: Vec<(usize, usize, Candidate)> = Vec::new();
             for i in 0..4 {
                 if capacities[i] == 0 {
                     continue;
                 }
-                for &k in &crate::perfmodel::DEGREES {
-                    if k > self.topo.spec.gpus_per_node {
+                for (ki, &k) in DEGREES.iter().enumerate() {
+                    let Some(c) = cache.get(r.shape_idx, i, ki) else { continue };
+                    if c.need_c_headroom_gb > c_headroom {
                         continue;
                     }
-                    if !self.degree_allowed(r.shape_idx, k, i)
-                        || !self.type_feasible(r.shape_idx, i, k, c_headroom)
-                    {
-                        continue;
-                    }
-                    let rt = self.estimate_runtime_ms(r.shape_idx, i, k);
-                    best_rt = best_rt.min(rt);
-                    cand.push((i, k, rt));
+                    best_rt = best_rt.min(c.runtime_ms);
+                    cand.push((i, k, c));
                 }
             }
             if cand.is_empty() {
                 continue;
             }
-            let k_opt = self.profile.optimal_degree(r.shape_idx, Stage::Diffuse);
-            for (i, k, rt) in cand {
+            for (i, k, c) in cand {
                 // Per-item reward: the C3a link between the *chosen*
                 // (i, k)'s runtime and the deadline — a config that makes
                 // the deadline earns C_on; one that cannot earns only the
-                // aged C_late.
-                let w_r = self.reward(r, view.now_ms, rt);
-                // Tiny tie-break toward the profiled optimal degree: the
-                // SLO reward is degree-independent among on-time configs,
-                // so without this the solver may park a heavy request on
-                // k=1 when k_opt GPUs are just as available.
-                let k_bias = 0.01 * ((k as f64).log2() - (k_opt as f64).log2()).abs();
-                // Shortness tie-break (SRTF flavour under scarcity): worth
-                // at most ~1 against the O(1000) SLO reward.
+                // aged C_late. The cached biases: k_bias ties toward the
+                // profiled optimal degree, type_bias prefers V0<V1<V2<V3,
+                // srtf_bias favours short requests under scarcity.
+                let w_r = self.reward(r, view.now_ms, c.runtime_ms);
                 let srtf_bias = 1.0 / (1.0 + best_rt / 1000.0);
-                // Strict-but-small VR-order preference (V0 < V1 < V2 < V3):
-                // the per-token Q penalty vanishes for small requests, yet
-                // scattering them over D-heavy primaries fragments the
-                // capacity heavy requests need.
-                let type_bias = 0.3 * i as f64;
-                let profit =
-                    w_r - self.comm_penalty(r.shape_idx, i) - k_bias - type_bias + srtf_bias;
+                let profit = w_r - c.comm_penalty - c.k_bias - c.type_bias + srtf_bias;
+                if hint == Some((i, k)) {
+                    seed[ri] = Some(items.len());
+                    warm_hits += 1;
+                }
+                if best_cand[ri].map_or(true, |(bp, _, _)| profit > bp) {
+                    best_cand[ri] = Some((profit, i, k));
+                }
                 items.push(Item {
                     group: ri,
                     profit,
@@ -307,18 +502,38 @@ impl<'a> Dispatcher<'a> {
         let problem = Mckp { n_groups: pending.len(), capacities, items };
         // §Perf: the greedy incumbent is within a fraction of a percent of
         // optimal on dispatch instances (profits are dominated by the W_r
-        // reward classes); a bounded B&B polish catches the remaining
-        // capacity-packing wins without re-proving engineered near-ties.
-        let sol = problem.solve_with_budget(self.solve_budget_ms, 40_000, 0.0);
+        // reward classes); warm-starting from the previous tick's solution
+        // tightens the incumbent further, and a bounded B&B polish catches
+        // the remaining capacity-packing wins without re-proving
+        // engineered near-ties.
+        let sol = problem.solve_seeded(
+            self.solve_budget_ms,
+            40_000,
+            0.0,
+            warm.map(|_| seed.as_slice()),
+        );
 
-        // Materialise plans: find intra-node idle GPU sets.
+        // Materialise plans: find intra-node idle GPU sets. The next-tick
+        // hint records, per request, the best-known config: the solver's
+        // choice where one was made (requests that then dispatch leave
+        // `pending` and project away on their own), and this tick's
+        // top-profit candidate for requests left pending — so the seed
+        // engages on the contended ticks where B&B actually has work to
+        // do, not only when a chosen request failed materialisation.
         let mut taken = vec![false; view.placement.pi.len()];
         let mut plans = Vec::new();
         let mut balancer = TickBalancer::default();
+        let mut next = WarmHint::default();
         for (ri, choice) in sol.chosen.iter().enumerate() {
-            let Some(item_idx) = choice else { continue };
+            let Some(item_idx) = choice else {
+                if let Some((_, i, k)) = best_cand[ri] {
+                    next.choice.insert(pending[ri].id, (i, k));
+                }
+                continue;
+            };
             let (_, i, k) = meta[*item_idx];
             let r = &pending[ri];
+            next.choice.insert(r.id, (i, k));
             let Some(gpus) =
                 pick_intra_node_set(&idle_by_type[i], &taken, k, self.topo)
             else {
@@ -336,8 +551,9 @@ impl<'a> Dispatcher<'a> {
             optimal: sol.optimal,
             candidates: meta.len(),
             dispatched: plans.len(),
+            warm_hits,
         };
-        (plans, stats)
+        (plans, stats, next)
     }
 
     /// Runtime of the stages hosted by the primary type (the pre-profiled
@@ -361,7 +577,7 @@ impl<'a> Dispatcher<'a> {
         vr_type: usize,
         d_gpus: Vec<GpuId>,
         k: usize,
-        view: &ClusterView,
+        view: &ClusterView<'_>,
         balancer: &mut TickBalancer,
     ) -> RequestPlans {
         let prim = Pi::PRIMARY[vr_type];
@@ -408,7 +624,7 @@ impl<'a> Dispatcher<'a> {
     /// Idle-or-earliest-to-finish auxiliary GPU hosting `stage`, spread by
     /// the per-tick balancer. Falls back to stage hosts ordered by metadata
     /// memory headroom (most room first), then load/free time.
-    fn pick_aux(&self, stage: Stage, view: &ClusterView, balancer: &mut TickBalancer) -> GpuId {
+    fn pick_aux(&self, stage: Stage, view: &ClusterView<'_>, balancer: &mut TickBalancer) -> GpuId {
         let aux_pi = if stage == Stage::Encode { Pi::E } else { Pi::C };
         if let Some(g) = balancer.pick(
             (0..view.placement.pi.len()).filter(|&g| view.placement.pi[g] == aux_pi),
@@ -483,13 +699,33 @@ mod tests {
         Fixture { pipeline: p, profile, consts, topo: Topology::new(cluster) }
     }
 
-    fn view_for(f: &Fixture, now_ms: f64) -> ClusterView {
+    /// Owned backing store for a borrowed [`ClusterView`] (tests and
+    /// benches keep the data alive and hand out views per call).
+    struct ViewData {
+        placement: PlacementPlan,
+        idle: Vec<bool>,
+        free_at_ms: Vec<f64>,
+        now_ms: f64,
+    }
+
+    impl ViewData {
+        fn view(&self) -> ClusterView<'_> {
+            ClusterView {
+                placement: &self.placement,
+                idle: &self.idle,
+                free_at_ms: &self.free_at_ms,
+                now_ms: self.now_ms,
+            }
+        }
+    }
+
+    fn view_for(f: &Fixture, now_ms: f64) -> ViewData {
         let orch = Orchestrator::new(&f.profile, &f.pipeline, &f.consts, &f.topo.spec);
         let w: Vec<f64> = f.pipeline.shapes.iter().map(|_| 1.0).collect();
         let rates = orch.estimated_rates(&w);
         let placement = orch.plan(&w, f.topo.total_gpus(), &rates);
         let g = placement.pi.len();
-        ClusterView { placement, idle: vec![true; g], free_at_ms: vec![now_ms; g], now_ms }
+        ViewData { placement, idle: vec![true; g], free_at_ms: vec![now_ms; g], now_ms }
     }
 
     fn req(f: &Fixture, id: u64, shape: &str, now: f64) -> Request {
@@ -509,9 +745,9 @@ mod tests {
     fn dispatches_single_request() {
         let f = fixture(PipelineSpec::flux());
         let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
-        let view = view_for(&f, 0.0);
+        let vd = view_for(&f, 0.0);
         let r = req(&f, 1, "1024p", 0.0);
-        let (plans, stats) = d.dispatch(&[r], &view);
+        let (plans, stats) = d.dispatch(&[r], &vd.view());
         assert_eq!(plans.len(), 1);
         assert!(stats.optimal);
         let p = &plans[0];
@@ -523,9 +759,9 @@ mod tests {
     fn derived_plans_follow_primary_type() {
         let f = fixture(PipelineSpec::flux());
         let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
-        let view = view_for(&f, 0.0);
+        let vd = view_for(&f, 0.0);
         let r = req(&f, 1, "512p", 0.0);
-        let (plans, _) = d.dispatch(&[r], &view);
+        let (plans, _) = d.dispatch(&[r], &vd.view());
         let p = &plans[0];
         let prim = Pi::PRIMARY[p.vr_type];
         if prim.contains(Stage::Encode) {
@@ -543,13 +779,13 @@ mod tests {
     fn respects_idle_capacity() {
         let f = fixture(PipelineSpec::flux());
         let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
-        let mut view = view_for(&f, 0.0);
+        let mut vd = view_for(&f, 0.0);
         // Only 2 idle GPUs in the whole cluster.
-        for g in 0..view.idle.len() {
-            view.idle[g] = g < 2 && view.placement.pi[g].is_primary();
+        for g in 0..vd.idle.len() {
+            vd.idle[g] = g < 2 && vd.placement.pi[g].is_primary();
         }
         let reqs: Vec<Request> = (0..10).map(|i| req(&f, i, "1024p", 0.0)).collect();
-        let (plans, _) = d.dispatch(&reqs, &view);
+        let (plans, _) = d.dispatch(&reqs, &vd.view());
         let used: usize = plans.iter().map(|p| p.d.gpus.len()).sum();
         assert!(used <= 2, "used {used} GPUs with only 2 idle");
     }
@@ -558,9 +794,9 @@ mod tests {
     fn no_gpu_double_booked_within_tick() {
         let f = fixture(PipelineSpec::flux());
         let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
-        let view = view_for(&f, 0.0);
+        let vd = view_for(&f, 0.0);
         let reqs: Vec<Request> = (0..64).map(|i| req(&f, i, "1024p", 0.0)).collect();
-        let (plans, _) = d.dispatch(&reqs, &view);
+        let (plans, _) = d.dispatch(&reqs, &vd.view());
         let mut seen = std::collections::HashSet::new();
         for p in &plans {
             for g in &p.d.gpus {
@@ -599,7 +835,7 @@ mod tests {
         // efficiency.
         let f = fixture(PipelineSpec::hunyuan());
         let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
-        let view = view_for(&f, 0.0);
+        let vd = view_for(&f, 0.0);
         let heavy = f.pipeline.shapes.iter().position(|s| s.name == "720p8s").unwrap();
         let r = Request {
             id: 1,
@@ -610,7 +846,7 @@ mod tests {
             batch: 1,
             difficulty: 0.5,
         };
-        let (plans, _) = d.dispatch(&[r], &view);
+        let (plans, _) = d.dispatch(&[r], &vd.view());
         assert_eq!(plans.len(), 1, "heavy request must still dispatch");
     }
 
@@ -619,10 +855,10 @@ mod tests {
         let f = fixture(PipelineSpec::flux());
         let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
         run_prop(0xD15, 25, |rng: &mut Rng, _| {
-            let mut view = view_for(&f, 0.0);
+            let mut vd = view_for(&f, 0.0);
             // Random idleness.
-            for g in 0..view.idle.len() {
-                view.idle[g] = rng.f64() < 0.5;
+            for g in 0..vd.idle.len() {
+                vd.idle[g] = rng.f64() < 0.5;
             }
             let n = 1 + rng.below(40);
             let reqs: Vec<Request> = (0..n)
@@ -639,7 +875,7 @@ mod tests {
                     }
                 })
                 .collect();
-            let (plans, stats) = d.dispatch(&reqs, &view);
+            let (plans, stats) = d.dispatch(&reqs, &vd.view());
             // Invariants: intra-node sets, idle GPUs only, no double
             // booking, degree == set size, dispatched <= pending.
             let mut seen = std::collections::HashSet::new();
@@ -647,15 +883,116 @@ mod tests {
                 assert_eq!(p.d.gpus.len(), p.d.degree);
                 assert!(f.topo.is_intra_node(&p.d.gpus));
                 for g in &p.d.gpus {
-                    assert!(view.idle[*g], "dispatched to busy gpu");
+                    assert!(vd.idle[*g], "dispatched to busy gpu");
                     assert!(seen.insert(*g));
                 }
                 // The chosen primary type actually hosts Diffuse.
                 for g in &p.d.gpus {
-                    assert!(view.placement.pi[*g].contains(Stage::Diffuse));
+                    assert!(vd.placement.pi[*g].contains(Stage::Diffuse));
                 }
             }
             assert!(stats.dispatched <= n);
         });
+    }
+
+    #[test]
+    fn candidate_cache_matches_direct_filters() {
+        // The precomputed table must agree cell-by-cell with the
+        // first-principles filters it replaces (under unbounded Decode
+        // headroom, which removes the only placement-dependent gate).
+        for p in [PipelineSpec::flux(), PipelineSpec::hunyuan()] {
+            let f = fixture(p);
+            let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
+            for s in 0..f.profile.n_shapes() {
+                for i in 0..4 {
+                    for (ki, &k) in crate::perfmodel::DEGREES.iter().enumerate() {
+                        let direct = k <= f.topo.spec.gpus_per_node
+                            && d.degree_allowed(s, k, i)
+                            && d.type_feasible(s, i, k, f64::INFINITY);
+                        let cached = d.cache.get(s, i, ki);
+                        assert_eq!(
+                            direct,
+                            cached.is_some(),
+                            "shape {s} type {i} k {k}: cache/filter disagree"
+                        );
+                        if let Some(c) = cached {
+                            assert_eq!(c.runtime_ms, d.estimate_runtime_ms(s, i, k));
+                            assert_eq!(c.comm_penalty, d.comm_penalty(s, i));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_hint_round_trips_and_matches_cold_dispatch() {
+        // A warm-started tick on the same pending set must dispatch the
+        // same plans as the cold tick that produced the hint, and report
+        // the projected seed entries via warm_hits.
+        let f = fixture(PipelineSpec::flux());
+        let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
+        let vd = view_for(&f, 0.0);
+        let reqs: Vec<Request> = (0..48).map(|i| req(&f, i, "1024p", 0.0)).collect();
+        let (cold_plans, cold_stats, hint) = d.dispatch_warm(&reqs, &vd.view(), None);
+        assert_eq!(cold_stats.warm_hits, 0, "cold solve must not report seeds");
+        assert!(!hint.choice.is_empty(), "solution must produce a hint");
+        let (warm_plans, warm_stats, _) = d.dispatch_warm(&reqs, &vd.view(), Some(&hint));
+        assert!(warm_stats.warm_hits > 0, "hint must project onto the same pending set");
+        assert_eq!(cold_plans.len(), warm_plans.len());
+        for (a, b) in cold_plans.iter().zip(&warm_plans) {
+            assert_eq!(a.req, b.req);
+            assert_eq!(a.vr_type, b.vr_type);
+            assert_eq!(a.d.degree, b.d.degree);
+        }
+    }
+
+    #[test]
+    fn warm_hint_covers_requests_left_pending() {
+        // On a capacity-starved tick the solver leaves most requests
+        // unchosen; the returned hint must still carry a config for them
+        // (their top-profit candidate) so the NEXT tick's seed engages —
+        // the regime where warm-starting actually matters.
+        let f = fixture(PipelineSpec::flux());
+        let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
+        let mut vd = view_for(&f, 0.0);
+        // Idle = the first two primary GPUs anywhere in the placement.
+        let mut left = 2;
+        for g in 0..vd.idle.len() {
+            vd.idle[g] = vd.placement.pi[g].is_primary() && left > 0;
+            if vd.idle[g] {
+                left -= 1;
+            }
+        }
+        let reqs: Vec<Request> = (0..10).map(|i| req(&f, i, "512p", 0.0)).collect();
+        let (plans, _, hint) = d.dispatch_warm(&reqs, &vd.view(), None);
+        assert!(plans.len() < reqs.len(), "capacity must starve some requests");
+        assert_eq!(
+            hint.choice.len(),
+            reqs.len(),
+            "every request (chosen or left pending) carries a hint"
+        );
+        // Re-solving the starved tick with the hint projects those seeds.
+        let (_, stats, _) = d.dispatch_warm(&reqs, &vd.view(), Some(&hint));
+        assert!(stats.warm_hits >= reqs.len() - plans.len());
+    }
+
+    #[test]
+    fn stale_warm_hints_are_ignored() {
+        // Hints for departed requests or infeasible (type, degree) pairs
+        // must not disturb the solve.
+        let f = fixture(PipelineSpec::flux());
+        let d = Dispatcher::new(&f.profile, &f.pipeline, &f.consts, &f.topo);
+        let vd = view_for(&f, 0.0);
+        let reqs: Vec<Request> = (0..8).map(|i| req(&f, i, "1024p", 0.0)).collect();
+        let mut hint = WarmHint::default();
+        hint.choice.insert(9_999, (0, 8)); // departed request
+        for r in &reqs {
+            hint.choice.insert(r.id, (3, 999)); // degree that never exists
+        }
+        let (cold, _) = d.dispatch(&reqs, &vd.view());
+        let (warm, stats, _) = d.dispatch_warm(&reqs, &vd.view(), Some(&hint));
+        assert_eq!(stats.warm_hits, 0);
+        assert_eq!(cold.len(), warm.len());
     }
 }

@@ -79,7 +79,7 @@ pub struct StartedPlan {
 }
 
 /// Record of a request aborted inside the engine (failed reservation).
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct OomAbort {
     pub req: RequestId,
     pub at_ms: f64,
@@ -98,6 +98,16 @@ pub struct Engine {
     pub plans: Vec<ExecPlan>,
     queues: Vec<VecDeque<PlanId>>,
     running: Vec<Option<PlanId>>,
+    /// Per-GPU idleness, maintained incrementally on enqueue / complete /
+    /// withdraw / preempt events (the dispatcher's view used to rescan
+    /// every queue per tick).
+    idle: Vec<bool>,
+    /// Count of `true` entries in `idle` (O(1) whole-engine idleness).
+    idle_count: usize,
+    /// Scratch for [`Self::refresh_free_view`] — lets per-tick callers
+    /// borrow the earliest-free estimates instead of allocating a fresh
+    /// `Vec` per tick.
+    free_view: Vec<f64>,
     /// Per-GPU earliest-free estimate for the Monitor's worker status.
     pub free_at_ms: Vec<f64>,
     /// Estimated outstanding (queued + running) work per GPU, ms — the
@@ -164,6 +174,9 @@ impl Engine {
             plans: Vec::new(),
             queues: vec![VecDeque::new(); g],
             running: vec![None; g],
+            idle: vec![true; g],
+            idle_count: g,
+            free_view: vec![0.0; g],
             free_at_ms: vec![0.0; g],
             committed_ms: vec![0.0; g],
             weights_gb,
@@ -186,13 +199,42 @@ impl Engine {
         self.switches += 1;
     }
 
-    /// True iff the GPU has nothing running and nothing queued.
-    pub fn gpu_idle(&self, g: GpuId) -> bool {
-        self.running[g].is_none() && self.queues[g].is_empty()
+    /// Re-derive one GPU's cached idleness after its queue/running state
+    /// changed (the only two inputs to idleness).
+    fn refresh_idle(&mut self, g: GpuId) {
+        let now_idle = self.running[g].is_none() && self.queues[g].is_empty();
+        if now_idle != self.idle[g] {
+            self.idle[g] = now_idle;
+            if now_idle {
+                self.idle_count += 1;
+            } else {
+                self.idle_count -= 1;
+            }
+        }
     }
 
+    /// True iff the GPU has nothing running and nothing queued.
+    pub fn gpu_idle(&self, g: GpuId) -> bool {
+        self.idle[g]
+    }
+
+    /// Borrowed per-GPU idleness (maintained incrementally — no per-tick
+    /// rescan or allocation).
+    pub fn idle(&self) -> &[bool] {
+        &self.idle
+    }
+
+    /// True when nothing is running or queued anywhere (O(1)).
+    pub fn all_idle(&self) -> bool {
+        self.idle_count == self.idle.len()
+    }
+
+    /// Owned copy of the idle view — test-only: production callers use
+    /// the borrowed [`Self::idle`] and must not reintroduce the per-tick
+    /// allocation this replaced.
+    #[cfg(test)]
     pub fn idle_mask(&self) -> Vec<bool> {
-        (0..self.topo.total_gpus()).map(|g| self.gpu_idle(g)).collect()
+        self.idle.clone()
     }
 
     /// Outstanding (waiting or running) plans that touch any GPU in
@@ -270,9 +312,11 @@ impl Engine {
                 est_ms,
                 exec_scale: 1.0,
             });
-            for &g in &self.plans[id].gpus {
+            for gi in 0..self.plans[id].gpus.len() {
+                let g = self.plans[id].gpus[gi];
                 self.queues[g].push_back(id);
                 self.committed_ms[g] += est_ms;
+                self.refresh_idle(g);
             }
             ids.push(id);
             pred = Some(id);
@@ -331,9 +375,11 @@ impl Engine {
                 est_ms,
                 exec_scale: scale,
             });
-            for &g in &self.plans[id].gpus {
+            for gi in 0..self.plans[id].gpus.len() {
+                let g = self.plans[id].gpus[gi];
                 self.queues[g].push_back(id);
                 self.committed_ms[g] += est_ms;
+                self.refresh_idle(g);
             }
             ids.push(id);
             pred = Some(id);
@@ -542,6 +588,9 @@ impl Engine {
                 self.queues[g].retain(|&p| p != id);
             }
         }
+        for &g in &gpus {
+            self.refresh_idle(g);
+        }
 
         // Proactive push (§5.2): stage output into the successor's HB.
         if let Some(sid) = succ {
@@ -591,6 +640,7 @@ impl Engine {
         for g in gpus {
             self.queues[g].retain(|&p| p != id);
             self.committed_ms[g] = (self.committed_ms[g] - est).max(0.0);
+            self.refresh_idle(g);
         }
     }
 
@@ -620,6 +670,7 @@ impl Engine {
             } else {
                 self.queues[g].retain(|&p| p != id);
             }
+            self.refresh_idle(g);
         }
     }
 
@@ -633,6 +684,7 @@ impl Engine {
                 for g in gpus {
                     self.queues[g].retain(|&p| p != id);
                     self.committed_ms[g] = (self.committed_ms[g] - est).max(0.0);
+                    self.refresh_idle(g);
                 }
             }
         }
@@ -645,10 +697,28 @@ impl Engine {
     }
 
     /// Backlog-aware earliest-free estimates: now + estimated outstanding
-    /// work (queued + running) per GPU. This is what the Monitor reports to
-    /// the Dispatcher as "earliest-to-finish" (§5.1).
+    /// work (queued + running) per GPU — test-only reference for the
+    /// scratch-buffer path; production callers use
+    /// [`Self::refresh_free_view`] + [`Self::free_view`].
+    #[cfg(test)]
     pub fn free_at_estimate(&self, now_ms: f64) -> Vec<f64> {
         (0..self.committed_ms.len()).map(|g| now_ms + self.committed_ms[g]).collect()
+    }
+
+    /// Fill the internal free-view scratch with `now + committed` — the
+    /// backlog-aware "earliest-to-finish" view the Monitor reports to the
+    /// Dispatcher (§5.1); per-tick callers borrow it via
+    /// [`Self::free_view`] instead of allocating a fresh `Vec` every tick.
+    pub fn refresh_free_view(&mut self, now_ms: f64) {
+        self.free_view.resize(self.committed_ms.len(), 0.0);
+        for g in 0..self.committed_ms.len() {
+            self.free_view[g] = now_ms + self.committed_ms[g];
+        }
+    }
+
+    /// The estimates filled by the last [`Self::refresh_free_view`].
+    pub fn free_view(&self) -> &[f64] {
+        &self.free_view
     }
 }
 
@@ -849,6 +919,69 @@ mod tests {
         eng.enqueue(&rp(1, vec![4]), &profile);
         let m = eng.idle_mask();
         assert!(!m[4] && m[3]);
+    }
+
+    #[test]
+    fn incremental_idle_view_matches_queue_state_through_lifecycle() {
+        // The cached idle view must agree with first-principles queue
+        // state after every mutation path: enqueue, start, complete,
+        // withdraw, preempt, cancel.
+        let (_p, profile, topo) = fixture();
+        let mut eng = Engine::new(topo, PlacementPlan::uniform(8, Pi::Edc), &profile);
+        // First principles: a GPU is busy iff some outstanding (waiting or
+        // running) plan claims it.
+        let check = |eng: &Engine| {
+            for g in 0..8 {
+                let expected = !eng.plans.iter().any(|p| {
+                    matches!(p.state, PlanState::Waiting | PlanState::Running)
+                        && p.gpus.contains(&g)
+                });
+                assert_eq!(eng.idle()[g], expected, "gpu {g} idle cache diverged");
+            }
+            assert_eq!(eng.all_idle(), eng.idle().iter().all(|&b| b));
+        };
+        assert!(eng.all_idle());
+        let a = eng.enqueue(&rp(1, vec![0]), &profile);
+        let b = eng.enqueue(&rp(2, vec![0]), &profile);
+        let c = eng.enqueue(&rp(3, vec![5]), &profile);
+        assert!(!eng.all_idle());
+        assert!(!eng.idle()[0] && !eng.idle()[5] && eng.idle()[1]);
+        check(&eng);
+
+        let started = eng.advance(0.0, &mut FixedExec(10.0), &profile);
+        assert_eq!(started.len(), 2);
+        check(&eng);
+
+        // Withdraw the queued second plan on GPU 0: still busy (running).
+        eng.withdraw_plan(b[0]);
+        assert!(!eng.idle()[0]);
+        check(&eng);
+
+        // Preempt the runner on GPU 5: idle again.
+        eng.preempt_running(c[0], 5.0);
+        assert!(eng.idle()[5]);
+        check(&eng);
+
+        // Complete the runner on GPU 0: everything idle.
+        eng.complete(a[0], 10.0, 0.0, None);
+        assert!(eng.all_idle());
+        check(&eng);
+
+        // Cancel path: enqueue then cancel the whole request.
+        eng.enqueue(&rp(9, vec![2]), &profile);
+        assert!(!eng.idle()[2]);
+        eng.cancel_request(9, 11.0);
+        assert!(eng.idle()[2]);
+        check(&eng);
+    }
+
+    #[test]
+    fn free_view_matches_free_at_estimate() {
+        let (_p, profile, topo) = fixture();
+        let mut eng = Engine::new(topo, PlacementPlan::uniform(8, Pi::Edc), &profile);
+        eng.enqueue(&rp(1, vec![0]), &profile);
+        eng.refresh_free_view(42.0);
+        assert_eq!(eng.free_view(), eng.free_at_estimate(42.0).as_slice());
     }
 
     #[test]

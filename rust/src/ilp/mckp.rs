@@ -74,6 +74,25 @@ impl Mckp {
         node_budget: u64,
         quantum: f64,
     ) -> Solution {
+        self.solve_seeded(time_budget_ms, node_budget, quantum, None)
+    }
+
+    /// [`Mckp::solve_with_budget`] warm-started from a previous solution:
+    /// `seed[g]` is the item index the caller's last solve chose for group
+    /// `g` (the dispatch ILP projects the previous tick's solution onto
+    /// still-pending groups). Seed entries that no longer apply — wrong
+    /// group, non-positive profit, or over the remaining capacity — are
+    /// dropped individually; the surviving subset becomes the initial
+    /// incumbent when it beats the greedy one, so branch-and-bound pruning
+    /// starts from a near-optimal bound. With `seed = None` this is
+    /// exactly the cold solve.
+    pub fn solve_seeded(
+        &self,
+        time_budget_ms: f64,
+        node_budget: u64,
+        quantum: f64,
+        seed: Option<&[Option<usize>]>,
+    ) -> Solution {
         let q = |p: f64| if quantum > 0.0 { (p / quantum).round() * quantum } else { p };
         // Group items; drop non-positive profits (never beneficial: the
         // objective only gains from dispatching).
@@ -136,6 +155,29 @@ impl Mckp {
         }
         ctx.best = greedy;
         ctx.best_obj = greedy_obj;
+
+        // Warm start: replay the caller's previous solution under the
+        // current capacities, dropping entries that no longer fit, and
+        // adopt it as the incumbent when it strictly beats the greedy one.
+        if let Some(seed) = seed {
+            let mut caps = self.capacities.clone();
+            let mut warm = vec![None; self.n_groups];
+            let mut warm_obj = 0.0;
+            for (g, choice) in seed.iter().enumerate().take(self.n_groups) {
+                let Some(idx) = choice else { continue };
+                let Some(it) = self.items.get(*idx) else { continue };
+                if it.group != g || it.profit <= 0.0 || caps[it.resource] < it.weight {
+                    continue;
+                }
+                caps[it.resource] -= it.weight;
+                warm[g] = Some(*idx);
+                warm_obj += q(it.profit);
+            }
+            if warm_obj > ctx.best_obj {
+                ctx.best = warm;
+                ctx.best_obj = warm_obj;
+            }
+        }
 
         // Early exit: dispatch ILP instances are tie-heavy (most requests
         // share W_r = C_on), so the greedy incumbent frequently already
@@ -473,6 +515,130 @@ mod tests {
                 assert!(used[r] <= capacities[r], "resource {r} over capacity");
             }
         });
+    }
+
+    /// Feasibility check shared by the warm-start property tests.
+    fn assert_feasible(p: &Mckp, s: &Solution) {
+        let mut used = vec![0u64; p.capacities.len()];
+        for (g, c) in s.chosen.iter().enumerate() {
+            if let Some(idx) = c {
+                let it = &p.items[*idx];
+                assert_eq!(it.group, g, "chosen item belongs to the wrong group");
+                assert!(it.profit > 0.0, "non-beneficial item chosen");
+                used[it.resource] += it.weight;
+            }
+        }
+        for (r, &u) in used.iter().enumerate() {
+            assert!(u <= p.capacities[r], "resource {r} over capacity");
+        }
+    }
+
+    fn random_instance(rng: &mut Rng) -> Mckp {
+        let n_groups = 1 + rng.below(6);
+        let n_res = 1 + rng.below(3);
+        let capacities: Vec<u64> = (0..n_res).map(|_| 1 + rng.below(12) as u64).collect();
+        let mut items = Vec::new();
+        for g in 0..n_groups {
+            for _ in 0..rng.below(5) {
+                items.push(Item {
+                    group: g,
+                    profit: (rng.f64() * 25.0) - 3.0,
+                    resource: rng.below(n_res),
+                    weight: 1 + rng.below(8) as u64,
+                });
+            }
+        }
+        Mckp { n_groups, capacities, items }
+    }
+
+    #[test]
+    fn prop_warm_start_matches_cold_profit() {
+        // Warm-started solves must return the same (optimal) profit as
+        // cold solves on arbitrary instances, for arbitrary seeds — valid
+        // previous solutions, random garbage, or hostile over-capacity
+        // picks alike.
+        run_prop(0xB02, 60, |rng: &mut Rng, _| {
+            let p = random_instance(rng);
+            let cold = p.solve(1000.0);
+            assert!(cold.optimal);
+
+            // Three seed flavours: the cold solution itself, a random
+            // (often invalid) guess, and an intentionally over-greedy one.
+            let self_seed: Vec<Option<usize>> = cold.chosen.clone();
+            let random_seed: Vec<Option<usize>> = (0..p.n_groups)
+                .map(|_| {
+                    if p.items.is_empty() || rng.f64() < 0.3 {
+                        None
+                    } else {
+                        Some(rng.below(p.items.len()))
+                    }
+                })
+                .collect();
+            let hostile_seed: Vec<Option<usize>> =
+                (0..p.n_groups).map(|_| p.items.len().checked_sub(1)).collect();
+
+            for seed in [&self_seed, &random_seed, &hostile_seed] {
+                let warm = p.solve_seeded(1000.0, 2_000_000, 0.0, Some(seed));
+                assert!(warm.optimal);
+                assert!(
+                    (warm.objective - cold.objective).abs() < 1e-9,
+                    "warm {} != cold {}",
+                    warm.objective,
+                    cold.objective
+                );
+                assert_feasible(&p, &warm);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_budget_exhausted_solve_returns_feasible_incumbent() {
+        // With the node budget slammed shut, the solver must still return
+        // a feasible solution at least as good as the projected seed (the
+        // incumbent survives the early exit).
+        run_prop(0xB03, 40, |rng: &mut Rng, _| {
+            let p = random_instance(rng);
+            let cold = p.solve(1000.0);
+            let starved = p.solve_seeded(1000.0, 1, 0.0, Some(&cold.chosen));
+            assert_feasible(&p, &starved);
+            // The seed is the cold optimum, so the starved solve must
+            // attain it exactly (it cannot exceed it).
+            assert!(
+                (starved.objective - cold.objective).abs() < 1e-9,
+                "starved {} != seeded optimum {}",
+                starved.objective,
+                cold.objective
+            );
+        });
+    }
+
+    #[test]
+    fn seed_entries_that_no_longer_fit_are_dropped_individually() {
+        // Group 0's seed survives; group 1's would blow the remaining
+        // capacity and must be dropped without poisoning the solve.
+        let p = Mckp {
+            n_groups: 2,
+            capacities: vec![4],
+            items: vec![item(0, 10.0, 0, 4), item(1, 9.0, 0, 4)],
+        };
+        let s = p.solve_seeded(100.0, 1_000_000, 0.0, Some(&[Some(0), Some(1)]));
+        assert!(s.optimal);
+        assert_eq!(s.chosen, vec![Some(0), None]);
+        assert!((s.objective - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn seed_with_wrong_group_is_ignored() {
+        let p = Mckp {
+            n_groups: 2,
+            capacities: vec![8],
+            items: vec![item(0, 5.0, 0, 2), item(1, 7.0, 0, 2)],
+        };
+        // Both groups seeded with item 0 (group 0's item): the group-1
+        // entry is invalid and ignored.
+        let s = p.solve_seeded(100.0, 1_000_000, 0.0, Some(&[Some(0), Some(0)]));
+        assert!(s.optimal);
+        assert!((s.objective - 12.0).abs() < 1e-9);
     }
 
     #[test]

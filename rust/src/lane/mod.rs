@@ -1,0 +1,639 @@
+//! The shared lane event core: the event heap and request-progress
+//! bookkeeping that every discrete-event serving loop needs.
+//!
+//! Before this module, `sim::run_sim` and `coserve::exec` each carried
+//! their own copy of the same machinery — a `BinaryHeap` of `(time, seq,
+//! kind)` events, a `HashMap<RequestId, Progress>` of in-flight request
+//! state, a `HashMap<RequestId, (arrival, deadline)>` side table, and
+//! near-identical completion/OOM/close-out handlers (an explicit ROADMAP
+//! open item). Both now consume this module:
+//!
+//! * [`EventQueue`] — the time-ordered heap with a deterministic sequence
+//!   tie-break, generic over the caller's event kind (which needs no trait
+//!   bounds at all: ordering uses only time and insertion sequence).
+//! * [`ProgressTable`] — flat `Vec`-indexed request state. Trace request
+//!   ids are dense (`0..n`), so the hot path is a direct slot index with
+//!   no hashing; sparse ids (the cascade layer tags escalations with bit
+//!   63) fall back to an ordered map. Iteration and drains are in id
+//!   order, which also makes resize/capture ordering deterministic without
+//!   the sort-after-collect dance the executors used to do.
+//! * [`LaneCore`] — pending queue + progress table + the shared handlers
+//!   (dispatch tracking, plan completion, OOM drain, horizon close-out).
+//!
+//! The extraction is behavior-preserving: same-seed runs produce the same
+//! reports as the pre-refactor per-module loops (the one historical quirk —
+//! `sim` stamps an OOM record's arrival with the abort time while `coserve`
+//! keeps the true arrival — is kept behind
+//! [`LaneCore::oom_arrival_is_abort_time`]).
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+
+use crate::config::{PipelineSpec, Stage};
+use crate::dispatch::RequestPlans;
+use crate::engine::{Engine, PlanId, PlanState};
+use crate::metrics::Metrics;
+use crate::monitor::Monitor;
+use crate::perfmodel::PerfModel;
+use crate::request::{Completion, Outcome, Request, RequestId};
+
+// ---------------------------------------------------------------------------
+// Event queue
+// ---------------------------------------------------------------------------
+
+/// Heap entry: ordered by (time, insertion sequence). The kind takes no
+/// part in ordering, so `K` needs no bounds.
+struct Ev<K>(f64, u64, K);
+
+impl<K> PartialEq for Ev<K> {
+    fn eq(&self, other: &Self) -> bool {
+        // The sequence number is unique per queue, so it identifies the
+        // entry (and equal seq implies equal time).
+        self.1 == other.1
+    }
+}
+impl<K> Eq for Ev<K> {}
+impl<K> PartialOrd for Ev<K> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<K> Ord for Ev<K> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap().then(self.1.cmp(&other.1))
+    }
+}
+
+/// Deterministic discrete-event queue: events pop in time order, ties in
+/// insertion order (the same `(t, seq)` discipline both executors used).
+pub struct EventQueue<K> {
+    heap: BinaryHeap<Reverse<Ev<K>>>,
+    seq: u64,
+}
+
+impl<K> Default for EventQueue<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K> EventQueue<K> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, t_ms: f64, kind: K) {
+        self.seq += 1;
+        self.heap.push(Reverse(Ev(t_ms, self.seq, kind)));
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, K)> {
+        self.heap.pop().map(|Reverse(Ev(t, _, k))| (t, k))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request progress
+// ---------------------------------------------------------------------------
+
+/// Per-request lifecycle state. An entry is created at arrival (identity
+/// only — `plan_chain` empty) and upgraded at dispatch; `plan_chain`
+/// non-empty therefore means "dispatched / in flight".
+#[derive(Clone, Debug)]
+pub struct Progress {
+    pub shape_idx: usize,
+    pub arrival_ms: f64,
+    pub deadline_ms: f64,
+    /// VR/Primary type the Diffuse plan landed on.
+    pub vr_type: usize,
+    /// The enqueued stage-plan chain (empty until dispatched).
+    pub plan_chain: Vec<PlanId>,
+    pub done_plans: usize,
+    /// Accumulated per-stage service time (E, D, C), ms.
+    pub stage_ms: [f64; 3],
+}
+
+impl Progress {
+    pub fn dispatched(&self) -> bool {
+        !self.plan_chain.is_empty()
+    }
+}
+
+/// Stage -> `stage_ms` slot.
+pub fn stage_slot(stage: Stage) -> usize {
+    match stage {
+        Stage::Encode => 0,
+        Stage::Diffuse => 1,
+        Stage::Decode => 2,
+    }
+}
+
+/// Ids below this index straight into the dense slab; anything above (the
+/// cascade layer's bit-63-tagged escalations, for instance) goes to the
+/// ordered fallback map. Dense storage is proportional to the largest
+/// dense id seen, i.e. the trace length.
+const DENSE_LIMIT: u64 = 1 << 20;
+
+/// Flat request-state table: dense ids index a `Vec` slab directly (no
+/// hashing on the hot path), sparse ids fall back to a `BTreeMap`. All
+/// iteration/drain orders are ascending by id, hence deterministic.
+///
+/// Entries are boxed so an empty slot costs one pointer: a coserve lane's
+/// slab grows to the largest *global* trace id it admits, and with L
+/// lanes round-robining a trace most slots of each lane's slab stay
+/// vacant — boxing keeps that waste at 8 B/slot instead of
+/// `size_of::<Progress>()`.
+#[derive(Default)]
+pub struct ProgressTable {
+    dense: Vec<Option<Box<Progress>>>,
+    sparse: BTreeMap<RequestId, Progress>,
+    /// Ids whose entry is dispatched (non-empty chain): keeps the
+    /// preempt/capture iteration O(in-flight) instead of a scan over
+    /// every slab slot ever used.
+    dispatched_ids: BTreeSet<RequestId>,
+    len: usize,
+}
+
+impl ProgressTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, id: RequestId) -> Option<&Progress> {
+        if id < DENSE_LIMIT {
+            self.dense.get(id as usize).and_then(|s| s.as_deref())
+        } else {
+            self.sparse.get(&id)
+        }
+    }
+
+    pub fn get_mut(&mut self, id: RequestId) -> Option<&mut Progress> {
+        if id < DENSE_LIMIT {
+            self.dense.get_mut(id as usize).and_then(|s| s.as_deref_mut())
+        } else {
+            self.sparse.get_mut(&id)
+        }
+    }
+
+    pub fn insert(&mut self, id: RequestId, p: Progress) {
+        if p.dispatched() {
+            self.dispatched_ids.insert(id);
+        } else {
+            self.dispatched_ids.remove(&id);
+        }
+        if id < DENSE_LIMIT {
+            let i = id as usize;
+            if self.dense.len() <= i {
+                self.dense.resize_with(i + 1, || None);
+            }
+            if self.dense[i].replace(Box::new(p)).is_none() {
+                self.len += 1;
+            }
+        } else if self.sparse.insert(id, p).is_none() {
+            self.len += 1;
+        }
+    }
+
+    pub fn remove(&mut self, id: RequestId) -> Option<Progress> {
+        let out = if id < DENSE_LIMIT {
+            self.dense.get_mut(id as usize).and_then(|s| s.take()).map(|b| *b)
+        } else {
+            self.sparse.remove(&id)
+        };
+        if out.is_some() {
+            self.dispatched_ids.remove(&id);
+            self.len -= 1;
+        }
+        out
+    }
+
+    /// Remove the entry only if the request was dispatched; identity-only
+    /// entries (still pending) are left in place.
+    pub fn remove_dispatched(&mut self, id: RequestId) -> Option<Progress> {
+        if self.get(id).is_some_and(|p| p.dispatched()) {
+            self.remove(id)
+        } else {
+            None
+        }
+    }
+
+    /// Record a request's identity at arrival (no-op if already tracked).
+    pub fn track_meta(&mut self, id: RequestId, arrival_ms: f64, deadline_ms: f64) {
+        if self.get(id).is_none() {
+            self.insert(
+                id,
+                Progress {
+                    shape_idx: 0,
+                    arrival_ms,
+                    deadline_ms,
+                    vr_type: 0,
+                    plan_chain: Vec::new(),
+                    done_plans: 0,
+                    stage_ms: [0.0; 3],
+                },
+            );
+        }
+    }
+
+    /// Upgrade an entry at dispatch: identity (arrival/deadline) is kept
+    /// from arrival tracking; chain/progress state is reset.
+    pub fn begin_dispatch(
+        &mut self,
+        id: RequestId,
+        shape_idx: usize,
+        vr_type: usize,
+        plan_chain: Vec<PlanId>,
+        seed_stage_ms: [f64; 3],
+    ) {
+        let updated = match self.get_mut(id) {
+            Some(p) => {
+                p.shape_idx = shape_idx;
+                p.vr_type = vr_type;
+                p.plan_chain = plan_chain;
+                p.done_plans = 0;
+                p.stage_ms = seed_stage_ms;
+                Some(p.dispatched())
+            }
+            None => None,
+        };
+        match updated {
+            Some(true) => {
+                self.dispatched_ids.insert(id);
+            }
+            Some(false) => {
+                self.dispatched_ids.remove(&id);
+            }
+            None => self.insert(
+                id,
+                Progress {
+                    shape_idx,
+                    arrival_ms: 0.0,
+                    deadline_ms: f64::MAX,
+                    vr_type,
+                    plan_chain,
+                    done_plans: 0,
+                    stage_ms: seed_stage_ms,
+                },
+            ),
+        }
+    }
+
+    /// Plan chains of every dispatched request, ascending by id.
+    /// O(in-flight), not O(slab): walks the dispatched-id index.
+    pub fn dispatched_chains_sorted(&self) -> Vec<(RequestId, Vec<PlanId>)> {
+        self.dispatched_ids
+            .iter()
+            .map(|&id| {
+                let p = self.get(id).expect("dispatched index out of sync");
+                (id, p.plan_chain.clone())
+            })
+            .collect()
+    }
+
+    /// Drain every dispatched entry (ascending by id), keeping
+    /// identity-only entries for still-pending requests. O(in-flight).
+    pub fn drain_dispatched_sorted(&mut self) -> Vec<(RequestId, Progress)> {
+        let ids = std::mem::take(&mut self.dispatched_ids);
+        ids.into_iter()
+            .map(|id| {
+                let p = self.remove(id).expect("dispatched index out of sync");
+                (id, p)
+            })
+            .collect()
+    }
+
+    /// Drain everything (ascending by id).
+    pub fn drain_all_sorted(&mut self) -> Vec<(RequestId, Progress)> {
+        let mut out = Vec::new();
+        for (i, slot) in self.dense.iter_mut().enumerate() {
+            if let Some(p) = slot.take() {
+                out.push((i as RequestId, *p));
+            }
+        }
+        out.extend(std::mem::take(&mut self.sparse));
+        self.dispatched_ids.clear();
+        self.len = 0;
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lane core
+// ---------------------------------------------------------------------------
+
+/// Pending queue + progress table + the request-lifecycle handlers shared
+/// by `sim::run_sim` and every `coserve` lane.
+pub struct LaneCore {
+    pub pending: Vec<Request>,
+    pub progress: ProgressTable,
+    /// Watermark into `Engine::ooms` (the engine log is append-only).
+    oom_seen: usize,
+    /// Historical quirk kept for report compatibility: `sim` stamps an OOM
+    /// record's `arrival_ms` with the abort time, `coserve` records the
+    /// true arrival.
+    pub oom_arrival_is_abort_time: bool,
+}
+
+impl LaneCore {
+    pub fn new(oom_arrival_is_abort_time: bool) -> Self {
+        LaneCore {
+            pending: Vec::new(),
+            progress: ProgressTable::new(),
+            oom_seen: 0,
+            oom_arrival_is_abort_time,
+        }
+    }
+
+    /// Reset the OOM watermark after the caller swapped in a fresh engine
+    /// (whose abort log starts empty again).
+    pub fn reset_oom_watermark(&mut self) {
+        self.oom_seen = 0;
+    }
+
+    /// Admit a request the policy can serve: track identity, queue it.
+    pub fn admit(&mut self, r: Request) {
+        self.progress.track_meta(r.id, r.arrival_ms, r.deadline_ms);
+        self.pending.push(r);
+    }
+
+    /// Bookkeeping for a freshly dispatched plan chain (`seed_stage_ms`
+    /// carries service time banked before a migration resume).
+    pub fn track_dispatch(
+        &mut self,
+        rp: &RequestPlans,
+        plan_chain: Vec<PlanId>,
+        seed_stage_ms: [f64; 3],
+    ) {
+        self.progress
+            .begin_dispatch(rp.req, rp.shape_idx, rp.vr_type, plan_chain, seed_stage_ms);
+    }
+
+    /// Account every OOM abort the engine logged since the last drain.
+    pub fn drain_ooms(&mut self, engine: &Engine, metrics: &mut Metrics) {
+        if self.oom_seen >= engine.ooms.len() {
+            return;
+        }
+        // Aborts of dispatched requests are no longer in `pending` (the
+        // policy removed them at dispatch), so the old per-abort
+        // `pending.retain` scan only ever mattered for the defensive
+        // never-dispatched case — batch it, and skip it entirely when the
+        // batch is empty.
+        let mut drop_pending: Vec<RequestId> = Vec::new();
+        while self.oom_seen < engine.ooms.len() {
+            let ab = engine.ooms[self.oom_seen];
+            self.oom_seen += 1;
+            match self.progress.remove_dispatched(ab.req) {
+                Some(pr) => {
+                    let arrival_ms =
+                        if self.oom_arrival_is_abort_time { ab.at_ms } else { pr.arrival_ms };
+                    metrics.record(Completion {
+                        id: ab.req,
+                        shape_idx: pr.shape_idx,
+                        arrival_ms,
+                        deadline_ms: pr.deadline_ms,
+                        finish_ms: ab.at_ms,
+                        outcome: Outcome::OomRejected,
+                        vr_type: Some(pr.vr_type),
+                        stage_ms: pr.stage_ms,
+                    });
+                }
+                None => drop_pending.push(ab.req),
+            }
+        }
+        if !drop_pending.is_empty() {
+            self.pending.retain(|r| !drop_pending.contains(&r.id));
+        }
+    }
+
+    /// A plan's completion event fired: proactive push toward the
+    /// successor, monitor accounting, request completion bookkeeping.
+    #[allow(clippy::too_many_arguments)]
+    pub fn handle_done(
+        &mut self,
+        pid: PlanId,
+        now_ms: f64,
+        pipeline: &PipelineSpec,
+        model: &PerfModel,
+        engine: &mut Engine,
+        monitor: &mut Monitor,
+        metrics: &mut Metrics,
+    ) {
+        if engine.plans[pid].state != PlanState::Running {
+            return; // cancelled while queued, or a stale event
+        }
+        let req = engine.plans[pid].req;
+        let stage = engine.plans[pid].stage;
+        let merged = engine.plans[pid].merged_stages.clone();
+        let shape_idx = engine.plans[pid].shape_idx;
+        let pi = engine.pi_of(engine.plans[pid].gpus[0]);
+        let total_ms = engine.plans[pid].prepare_ms + engine.plans[pid].exec_ms;
+
+        // Successor + inter-stage volume for the proactive push. A
+        // successor withdrawn by a preemptive resize must not receive the
+        // push: its stage re-plans on the new partition.
+        let (succ, q_gb) = match self.progress.get(req) {
+            Some(pr) if pr.dispatched() => {
+                let pos = pr.plan_chain.iter().position(|&p| p == pid);
+                let succ = pos
+                    .and_then(|i| pr.plan_chain.get(i + 1))
+                    .copied()
+                    .filter(|&s| engine.plans[s].state == PlanState::Waiting);
+                let shape = &pipeline.shapes[shape_idx];
+                let q = match stage {
+                    Stage::Encode => model.q_ed_gb(shape),
+                    Stage::Diffuse => model.q_dc_gb(shape),
+                    Stage::Decode => 0.0,
+                };
+                (succ, q)
+            }
+            _ => (None, 0.0),
+        };
+        engine.complete(pid, now_ms, q_gb, succ);
+
+        // Monitor sees every stage this run served.
+        monitor.record(now_ms, stage, pi, 1.0);
+        for &s in &merged {
+            monitor.record(now_ms, s, pi, 1.0);
+        }
+
+        if let Some(pr) = self.progress.get_mut(req) {
+            if !pr.dispatched() {
+                return;
+            }
+            pr.stage_ms[stage_slot(stage)] += total_ms;
+            pr.done_plans += 1;
+            if pr.done_plans == pr.plan_chain.len() {
+                let pr = self.progress.remove(req).unwrap();
+                metrics.record(Completion {
+                    id: req,
+                    shape_idx: pr.shape_idx,
+                    arrival_ms: pr.arrival_ms,
+                    deadline_ms: pr.deadline_ms,
+                    finish_ms: now_ms,
+                    outcome: Outcome::Completed,
+                    vr_type: Some(pr.vr_type),
+                    stage_ms: pr.stage_ms,
+                });
+            }
+        }
+    }
+
+    /// Horizon close-out: every in-flight request is an SLO miss, every
+    /// still-pending request an unfinished record without a VR type.
+    pub fn finalize(&mut self, metrics: &mut Metrics) {
+        for (id, pr) in self.progress.drain_all_sorted() {
+            if pr.dispatched() && pr.done_plans < pr.plan_chain.len() {
+                metrics.record(Completion {
+                    id,
+                    shape_idx: pr.shape_idx,
+                    arrival_ms: pr.arrival_ms,
+                    deadline_ms: pr.deadline_ms,
+                    finish_ms: f64::INFINITY,
+                    outcome: Outcome::Unfinished,
+                    vr_type: Some(pr.vr_type),
+                    stage_ms: pr.stage_ms,
+                });
+            }
+        }
+        for r in self.pending.drain(..) {
+            metrics.record(Completion {
+                id: r.id,
+                shape_idx: r.shape_idx,
+                arrival_ms: r.arrival_ms,
+                deadline_ms: r.deadline_ms,
+                finish_ms: f64::INFINITY,
+                outcome: Outcome::Unfinished,
+                vr_type: None,
+                stage_ms: [0.0; 3],
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_queue_orders_by_time_then_insertion() {
+        let mut q: EventQueue<&'static str> = EventQueue::new();
+        q.push(5.0, "late");
+        q.push(1.0, "first");
+        q.push(1.0, "second"); // same time: insertion order breaks the tie
+        q.push(0.5, "earliest");
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.pop(), Some((0.5, "earliest")));
+        assert_eq!(q.pop(), Some((1.0, "first")));
+        assert_eq!(q.pop(), Some((1.0, "second")));
+        assert_eq!(q.pop(), Some((5.0, "late")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn event_queue_kind_needs_no_bounds() {
+        // A kind that is neither Ord nor Eq still works.
+        struct Opaque(#[allow(dead_code)] f64);
+        let mut q: EventQueue<Opaque> = EventQueue::new();
+        q.push(2.0, Opaque(0.0));
+        q.push(1.0, Opaque(1.0));
+        assert_eq!(q.pop().unwrap().0, 1.0);
+    }
+
+    fn prog(chain: Vec<PlanId>) -> Progress {
+        Progress {
+            shape_idx: 1,
+            arrival_ms: 10.0,
+            deadline_ms: 100.0,
+            vr_type: 2,
+            plan_chain: chain,
+            done_plans: 0,
+            stage_ms: [0.0; 3],
+        }
+    }
+
+    #[test]
+    fn progress_table_dense_and_sparse_paths() {
+        let mut t = ProgressTable::new();
+        t.insert(3, prog(vec![1]));
+        t.insert(DENSE_LIMIT + 7, prog(vec![2]));
+        t.insert(0, prog(Vec::new()));
+        assert_eq!(t.len(), 3);
+        assert!(t.get(3).unwrap().dispatched());
+        assert!(!t.get(0).unwrap().dispatched());
+        assert!(t.get(DENSE_LIMIT + 7).is_some());
+        assert!(t.get(99).is_none());
+
+        // Sorted iteration: dense ids first (ascending), sparse after.
+        let chains = t.dispatched_chains_sorted();
+        assert_eq!(
+            chains,
+            vec![(3, vec![1]), (DENSE_LIMIT + 7, vec![2])]
+        );
+
+        assert!(t.remove_dispatched(0).is_none(), "identity-only entry stays");
+        assert_eq!(t.len(), 3);
+        assert!(t.remove_dispatched(3).is_some());
+        assert_eq!(t.len(), 2);
+        assert!(t.remove(DENSE_LIMIT + 7).is_some());
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn drain_dispatched_keeps_identity_entries() {
+        let mut t = ProgressTable::new();
+        t.track_meta(0, 1.0, 2.0);
+        t.track_meta(5, 3.0, 4.0);
+        t.begin_dispatch(5, 2, 1, vec![10, 11], [0.0; 3]);
+        t.insert(DENSE_LIMIT + 1, prog(vec![12]));
+
+        let drained = t.drain_dispatched_sorted();
+        let ids: Vec<RequestId> = drained.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![5, DENSE_LIMIT + 1]);
+        // Identity of request 5 came from arrival tracking.
+        assert_eq!(drained[0].1.arrival_ms, 3.0);
+        assert_eq!(drained[0].1.deadline_ms, 4.0);
+        // The never-dispatched entry survived.
+        assert_eq!(t.len(), 1);
+        assert!(t.get(0).is_some());
+
+        let rest = t.drain_all_sorted();
+        assert_eq!(rest.len(), 1);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn begin_dispatch_without_meta_uses_sentinel_identity() {
+        let mut t = ProgressTable::new();
+        t.begin_dispatch(9, 4, 3, vec![1], [1.0, 2.0, 3.0]);
+        let p = t.get(9).unwrap();
+        assert_eq!(p.arrival_ms, 0.0);
+        assert_eq!(p.deadline_ms, f64::MAX);
+        assert_eq!(p.stage_ms, [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn track_meta_is_idempotent() {
+        let mut t = ProgressTable::new();
+        t.track_meta(1, 5.0, 6.0);
+        t.track_meta(1, 7.0, 8.0); // second arrival record must not clobber
+        assert_eq!(t.get(1).unwrap().arrival_ms, 5.0);
+        assert_eq!(t.len(), 1);
+    }
+}

@@ -12,6 +12,8 @@
 //! * [`ilp`] — 0/1 branch-and-bound solvers (PuLP stand-in).
 //! * [`placement`] — placement plans + the Dynamic Orchestrator (§6.1).
 //! * [`dispatch`] — dispatch plans + the Resource-Aware Dispatcher (§6.2).
+//! * [`lane`] — the shared lane event core: deterministic event queue +
+//!   flat request-progress table consumed by both `sim` and `coserve`.
 //! * [`monitor`] — sliding-window throughput + the §5.3 switch trigger.
 //! * [`engine`] — the Runtime Engine: three-step dispatch execution and
 //!   Adjust-on-Dispatch placement switching (§5).
@@ -46,6 +48,7 @@ pub mod engine;
 pub mod faults;
 pub mod harness;
 pub mod ilp;
+pub mod lane;
 pub mod metrics;
 pub mod migrate;
 pub mod monitor;

@@ -124,7 +124,13 @@ impl<'a> Orchestrator<'a> {
         consts: &'a SolverConstants,
         cluster: &'a ClusterSpec,
     ) -> Self {
-        Orchestrator { profile, pipeline, consts, cluster, mem_reserve_gb: 1.0 }
+        Orchestrator {
+            profile,
+            pipeline,
+            consts,
+            cluster,
+            mem_reserve_gb: crate::dispatch::DEFAULT_MEM_RESERVE_GB,
+        }
     }
 
     /// Residual activation budget `cap(t)` of a Primary GPU of VR type `t`.

@@ -10,8 +10,10 @@ pub type RequestId = u64;
 pub type PipelineId = usize;
 
 /// One inference request (or request batch — `batch > 1` after dynamic
-/// batching, Appendix E.1) flowing through the E→D→C chain.
-#[derive(Clone, Debug)]
+/// batching, Appendix E.1) flowing through the E→D→C chain. All fields
+/// are plain scalars, so the struct is `Copy`: the event loops move it by
+/// value instead of cloning per arrival.
+#[derive(Clone, Copy, Debug)]
 pub struct Request {
     pub id: RequestId,
     /// Which pipeline serves this request (mixed multi-pipeline traces tag

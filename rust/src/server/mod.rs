@@ -311,10 +311,13 @@ pub fn serve(cfg: &LiveConfig) -> Result<LiveReport> {
 
         // Dispatch tick.
         if !pending.is_empty() {
+            let idle: Vec<bool> = busy.iter().map(|b| !b).collect();
+            let free_at_ms: Vec<f64> =
+                busy.iter().map(|&b| if b { now + 1e9 } else { now }).collect();
             let view = ClusterView {
-                placement: placement.clone(),
-                idle: busy.iter().map(|b| !b).collect(),
-                free_at_ms: busy.iter().map(|&b| if b { now + 1e9 } else { now }).collect(),
+                placement: &placement,
+                idle: &idle,
+                free_at_ms: &free_at_ms,
                 now_ms: now,
             };
             let (plans, stats) = policy.dispatch(&mut pending, &view);

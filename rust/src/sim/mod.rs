@@ -5,20 +5,22 @@
 //! service times. The same engine/planner code also runs in real mode under
 //! `server::LiveServer` with PJRT-measured times — the simulation swaps only
 //! the [`StageExec`] implementation and the clock.
+//!
+//! The event heap and request bookkeeping live in [`crate::lane`], the
+//! substrate shared with the co-serving executor; this module only owns the
+//! single-pipeline event kinds and the policy/monitor wiring.
 
 pub mod policy;
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
-
 use crate::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
-use crate::dispatch::{ClusterView, RequestPlans};
+use crate::dispatch::ClusterView;
 use crate::engine::{Engine, PlanId, StageExec};
+use crate::lane::{EventQueue, LaneCore};
 use crate::metrics::Metrics;
 use crate::monitor::Monitor;
 use crate::perfmodel::PerfModel;
 use crate::profiler::Profile;
-use crate::request::{Completion, Outcome, Request, RequestId};
+use crate::request::{Completion, Outcome};
 use crate::util::Rng;
 use crate::workload::Trace;
 
@@ -73,40 +75,12 @@ impl<'a> StageExec for SimExec<'a> {
     }
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[derive(Clone, Copy, Debug)]
 enum EventKind {
     PlanDone(PlanId),
     Arrival(usize),
     Tick,
     MonitorTick,
-}
-
-#[derive(PartialEq)]
-struct Ev(f64, u64, EventKind);
-
-impl Eq for Ev {}
-impl PartialOrd for Ev {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Ev {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0
-            .partial_cmp(&other.0)
-            .unwrap()
-            .then(self.1.cmp(&other.1))
-    }
-}
-
-struct ReqProgress {
-    shape_idx: usize,
-    arrival_ms: f64,
-    deadline_ms: f64,
-    vr_type: usize,
-    plan_chain: Vec<PlanId>,
-    done_plans: usize,
-    stage_ms: [f64; 3],
 }
 
 /// Run one policy over one trace; returns collected metrics.
@@ -130,31 +104,23 @@ pub fn run_sim(
     let mut exec = SimExec { profile, rng: Rng::new(cfg.seed ^ 0xE1EC), jitter: cfg.jitter };
 
     let horizon = trace.duration_ms * cfg.drain_factor;
-    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
-    let mut seq = 0u64;
-    let push = |heap: &mut BinaryHeap<Reverse<Ev>>, seq: &mut u64, t: f64, k: EventKind| {
-        *seq += 1;
-        heap.push(Reverse(Ev(t, *seq, k)));
-    };
-
+    let mut events: EventQueue<EventKind> = EventQueue::new();
     for (i, r) in trace.requests.iter().enumerate() {
-        push(&mut heap, &mut seq, r.arrival_ms, EventKind::Arrival(i));
+        events.push(r.arrival_ms, EventKind::Arrival(i));
     }
-    push(&mut heap, &mut seq, 0.0, EventKind::Tick);
-    push(&mut heap, &mut seq, cfg.monitor_ms, EventKind::MonitorTick);
+    events.push(0.0, EventKind::Tick);
+    events.push(cfg.monitor_ms, EventKind::MonitorTick);
 
-    let mut pending: Vec<Request> = Vec::new();
-    let mut progress: HashMap<RequestId, ReqProgress> = HashMap::new();
-    let mut req_meta: HashMap<RequestId, (f64, f64)> = HashMap::new(); // arrival, deadline
-    let mut oom_seen = 0usize;
+    // `sim` historically stamps OOM records' arrival with the abort time.
+    let mut core = LaneCore::new(true);
 
-    while let Some(Reverse(Ev(now, _, kind))) = heap.pop() {
+    while let Some((now, kind)) = events.pop() {
         if now > horizon {
             break;
         }
         match kind {
             EventKind::Arrival(i) => {
-                let r = trace.requests[i].clone();
+                let r = trace.requests[i];
                 if policy.infeasible(r.shape_idx) {
                     // No placement this policy can ever run it on: the
                     // paper's "baseline OOMs" case.
@@ -169,30 +135,33 @@ pub fn run_sim(
                         stage_ms: [0.0; 3],
                     });
                 } else {
-                    req_meta.insert(r.id, (r.arrival_ms, r.deadline_ms));
-                    pending.push(r);
+                    core.admit(r);
                 }
             }
             EventKind::Tick => {
-                let view = ClusterView {
-                    placement: engine.placement.clone(),
-                    idle: engine.idle_mask(),
-                    free_at_ms: engine.free_at_estimate(now),
-                    now_ms: now,
+                engine.refresh_free_view(now);
+                let (plans, stats) = {
+                    let view = ClusterView {
+                        placement: &engine.placement,
+                        idle: engine.idle(),
+                        free_at_ms: engine.free_view(),
+                        now_ms: now,
+                    };
+                    policy.dispatch(&mut core.pending, &view)
                 };
-                let (plans, stats) = policy.dispatch(&mut pending, &view);
                 if let Some(s) = stats {
                     metrics.record_solve(s);
                 }
                 for rp in &plans {
-                    enqueue_plans(rp, &mut engine, profile, &mut progress, &req_meta);
+                    let ids = engine.enqueue(rp, profile);
+                    core.track_dispatch(rp, ids, [0.0; 3]);
                 }
-                start_ready(
-                    now, &mut engine, &mut exec, profile, &mut heap, &mut seq,
-                );
-                drain_ooms(&mut engine, &mut oom_seen, &mut progress, &mut metrics, &mut pending);
+                for sp in engine.advance(now, &mut exec, profile) {
+                    events.push(sp.finish_ms, EventKind::PlanDone(sp.plan));
+                }
+                core.drain_ooms(&engine, &mut metrics);
                 if now + cfg.tick_ms <= horizon {
-                    push(&mut heap, &mut seq, now + cfg.tick_ms, EventKind::Tick);
+                    events.push(now + cfg.tick_ms, EventKind::Tick);
                 }
             }
             EventKind::MonitorTick => {
@@ -201,188 +170,22 @@ pub fn run_sim(
                     metrics.record_switch(now);
                 }
                 if now + cfg.monitor_ms <= horizon {
-                    push(&mut heap, &mut seq, now + cfg.monitor_ms, EventKind::MonitorTick);
+                    events.push(now + cfg.monitor_ms, EventKind::MonitorTick);
                 }
             }
             EventKind::PlanDone(pid) => {
-                handle_done(
-                    pid, now, pipeline, profile, &model, &mut engine, &mut monitor,
-                    &mut metrics, &mut progress,
+                core.handle_done(
+                    pid, now, pipeline, &model, &mut engine, &mut monitor, &mut metrics,
                 );
-                start_ready(now, &mut engine, &mut exec, profile, &mut heap, &mut seq);
-                drain_ooms(&mut engine, &mut oom_seen, &mut progress, &mut metrics, &mut pending);
+                for sp in engine.advance(now, &mut exec, profile) {
+                    events.push(sp.finish_ms, EventKind::PlanDone(sp.plan));
+                }
+                core.drain_ooms(&engine, &mut metrics);
             }
         }
     }
 
     // Requests that never finished inside the horizon are SLO misses.
-    for (_, pr) in progress.drain() {
-        if pr.done_plans < pr.plan_chain.len() {
-            metrics.record(unfinished(&pr));
-        }
-    }
-    for r in pending.drain(..) {
-        metrics.record(Completion {
-            id: r.id,
-            shape_idx: r.shape_idx,
-            arrival_ms: r.arrival_ms,
-            deadline_ms: r.deadline_ms,
-            finish_ms: f64::INFINITY,
-            outcome: Outcome::Unfinished,
-            vr_type: None,
-            stage_ms: [0.0; 3],
-        });
-    }
+    core.finalize(&mut metrics);
     metrics
-}
-
-fn unfinished(pr: &ReqProgress) -> Completion {
-    Completion {
-        id: 0,
-        shape_idx: pr.shape_idx,
-        arrival_ms: pr.arrival_ms,
-        deadline_ms: pr.deadline_ms,
-        finish_ms: f64::INFINITY,
-        outcome: Outcome::Unfinished,
-        vr_type: Some(pr.vr_type),
-        stage_ms: pr.stage_ms,
-    }
-}
-
-fn enqueue_plans(
-    rp: &RequestPlans,
-    engine: &mut Engine,
-    profile: &Profile,
-    progress: &mut HashMap<RequestId, ReqProgress>,
-    req_meta: &HashMap<RequestId, (f64, f64)>,
-) {
-    let ids = engine.enqueue(rp, profile);
-    let (arrival_ms, deadline_ms) = req_meta.get(&rp.req).copied().unwrap_or((0.0, f64::MAX));
-    progress.insert(
-        rp.req,
-        ReqProgress {
-            shape_idx: rp.shape_idx,
-            arrival_ms,
-            deadline_ms,
-            vr_type: rp.vr_type,
-            plan_chain: ids,
-            done_plans: 0,
-            stage_ms: [0.0; 3],
-        },
-    );
-}
-
-fn start_ready(
-    now: f64,
-    engine: &mut Engine,
-    exec: &mut SimExec,
-    profile: &Profile,
-    heap: &mut BinaryHeap<Reverse<Ev>>,
-    seq: &mut u64,
-) {
-    for sp in engine.advance(now, exec, profile) {
-        *seq += 1;
-        heap.push(Reverse(Ev(sp.finish_ms, *seq, EventKind::PlanDone(sp.plan))));
-    }
-}
-
-fn drain_ooms(
-    engine: &mut Engine,
-    seen: &mut usize,
-    progress: &mut HashMap<RequestId, ReqProgress>,
-    metrics: &mut Metrics,
-    pending: &mut Vec<Request>,
-) {
-    while *seen < engine.ooms.len() {
-        let ab = engine.ooms[*seen].clone();
-        *seen += 1;
-        pending.retain(|r| r.id != ab.req);
-        if let Some(pr) = progress.remove(&ab.req) {
-            metrics.record(Completion {
-                id: ab.req,
-                shape_idx: pr.shape_idx,
-                arrival_ms: ab.at_ms,
-                deadline_ms: pr.deadline_ms,
-                finish_ms: ab.at_ms,
-                outcome: Outcome::OomRejected,
-                vr_type: Some(pr.vr_type),
-                stage_ms: pr.stage_ms,
-            });
-        }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn handle_done(
-    pid: PlanId,
-    now: f64,
-    pipeline: &PipelineSpec,
-    profile: &Profile,
-    model: &PerfModel,
-    engine: &mut Engine,
-    monitor: &mut Monitor,
-    metrics: &mut Metrics,
-    progress: &mut HashMap<RequestId, ReqProgress>,
-) {
-    if engine.plans[pid].state != crate::engine::PlanState::Running {
-        return; // cancelled while queued
-    }
-    let req = engine.plans[pid].req;
-    let stage = engine.plans[pid].stage;
-    let merged = engine.plans[pid].merged_stages.clone();
-    let shape_idx = engine.plans[pid].shape_idx;
-    let pi = engine.pi_of(engine.plans[pid].gpus[0]);
-    let total_ms = engine.plans[pid].prepare_ms + engine.plans[pid].exec_ms;
-
-    // Successor + inter-stage volume for the proactive push.
-    let (succ, q_gb) = {
-        let pr = progress.get(&req);
-        match pr {
-            Some(pr) => {
-                let pos = pr.plan_chain.iter().position(|&p| p == pid);
-                let succ = pos.and_then(|i| pr.plan_chain.get(i + 1)).copied();
-                let shape = &pipeline.shapes[shape_idx];
-                let q = match stage {
-                    Stage::Encode => model.q_ed_gb(shape),
-                    Stage::Diffuse => model.q_dc_gb(shape),
-                    Stage::Decode => 0.0,
-                };
-                (succ, q)
-            }
-            None => (None, 0.0),
-        }
-    };
-    engine.complete(pid, now, q_gb, succ);
-
-    // Monitor sees every stage this run served.
-    monitor.record(now, stage, pi, 1.0);
-    for &s in &merged {
-        monitor.record(now, s, pi, 1.0);
-    }
-
-    if let Some(pr) = progress.get_mut(&req) {
-        let si = match stage {
-            Stage::Encode => 0,
-            Stage::Diffuse => 1,
-            Stage::Decode => 2,
-        };
-        pr.stage_ms[si] += total_ms;
-        pr.done_plans += 1;
-        if pr.done_plans == pr.plan_chain.len() {
-            let pr = progress.remove(&req).unwrap();
-            // Arrival/deadline come from the profile-backed trace request;
-            // the engine does not track them, so look them up in the plans.
-            metrics.record(Completion {
-                id: req,
-                shape_idx: pr.shape_idx,
-                arrival_ms: pr.arrival_ms,
-                deadline_ms: pr.deadline_ms,
-                finish_ms: now,
-                outcome: Outcome::Completed,
-                vr_type: Some(pr.vr_type),
-                stage_ms: pr.stage_ms,
-            });
-        }
-    }
-    let _ = profile;
 }

@@ -10,7 +10,10 @@ use std::collections::VecDeque;
 
 use crate::cluster::Topology;
 use crate::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
-use crate::dispatch::{ClusterView, Dispatcher, RequestPlans, SolveStats, StagePlan};
+use crate::dispatch::{
+    CandidateCache, ClusterView, Dispatcher, RequestPlans, SolveStats, StagePlan, WarmHint,
+    DEFAULT_MEM_RESERVE_GB,
+};
 use crate::monitor::Monitor;
 use crate::placement::{Orchestrator, Pi, PlacementPlan, Rates};
 use crate::profiler::Profile;
@@ -39,7 +42,7 @@ pub trait ServingPolicy {
     fn dispatch(
         &mut self,
         pending: &mut Vec<Request>,
-        view: &ClusterView,
+        view: &ClusterView<'_>,
     ) -> (Vec<RequestPlans>, Option<SolveStats>);
 
     /// True when no placement this policy can ever produce fits the shape
@@ -70,6 +73,13 @@ pub struct TridentPolicy {
     /// placement from scratch anyway. None outside coserve / when no
     /// resize is pending.
     pub pending_resize: Option<usize>,
+    /// Precomputed per-(shape, vr-type, degree) dispatch candidates,
+    /// shared with the per-tick [`Dispatcher`] so item assembly is pure
+    /// lookup (built once per placement-independent profile).
+    cand_cache: CandidateCache,
+    /// Previous tick's MCKP solution, projected onto still-pending
+    /// requests to warm-start the next solve.
+    warm: WarmHint,
     /// Sliding histogram of recent arrivals for re-planning.
     recent_shapes: VecDeque<usize>,
     recent_cap: usize,
@@ -91,6 +101,8 @@ impl TridentPolicy {
         cluster: ClusterSpec,
     ) -> Self {
         let topo = Topology::new(cluster.clone());
+        let cand_cache =
+            CandidateCache::build(&profile, &pipeline, &consts, &topo, DEFAULT_MEM_RESERVE_GB);
         // Observation window sized to T_win worth of arrivals: long enough
         // to smooth sampling noise, short enough to track pattern shifts.
         let recent_cap = ((pipeline.rate_req_s * pipeline.t_win_ms / 1000.0) as usize)
@@ -105,6 +117,8 @@ impl TridentPolicy {
             stage_aware: true,
             use_ilp: true,
             pending_resize: None,
+            cand_cache,
+            warm: WarmHint::default(),
             recent_shapes: VecDeque::new(),
             recent_cap,
             last_backlog: 0,
@@ -149,9 +163,8 @@ impl TridentPolicy {
     fn dispatch_greedy(
         &self,
         pending: &mut Vec<Request>,
-        view: &ClusterView,
+        view: &ClusterView<'_>,
     ) -> Vec<RequestPlans> {
-        let disp = Dispatcher::new(&self.profile, &self.pipeline, &self.consts, &self.topo);
         let mut order: Vec<usize> = (0..pending.len()).collect();
         order.sort_by(|&a, &b| {
             let ta = self
@@ -191,7 +204,7 @@ impl TridentPolicy {
                             taken[g] = true;
                         }
                         plans.push(build_request_plans(
-                            r, i, gpus, k, &self.profile, &disp, view, &mut balancer,
+                            r, i, gpus, k, &self.profile, view, &mut balancer,
                         ));
                         dispatched.push(ri);
                         break 'outer;
@@ -212,8 +225,7 @@ pub fn build_request_plans(
     d_gpus: Vec<usize>,
     k: usize,
     profile: &Profile,
-    _disp: &Dispatcher,
-    view: &ClusterView,
+    view: &ClusterView<'_>,
     balancer: &mut crate::dispatch::TickBalancer,
 ) -> RequestPlans {
     let prim = Pi::PRIMARY[vr_type];
@@ -252,7 +264,7 @@ pub fn build_request_plans(
 /// per-tick balancer.
 pub fn cheapest_aux(
     stage: Stage,
-    view: &ClusterView,
+    view: &ClusterView<'_>,
     balancer: &mut crate::dispatch::TickBalancer,
 ) -> usize {
     let aux_pi = if stage == Stage::Encode { Pi::E } else { Pi::C };
@@ -388,7 +400,7 @@ impl ServingPolicy for TridentPolicy {
     fn dispatch(
         &mut self,
         pending: &mut Vec<Request>,
-        view: &ClusterView,
+        view: &ClusterView<'_>,
     ) -> (Vec<RequestPlans>, Option<SolveStats>) {
         self.note_arrivals(pending);
         self.last_backlog = pending.len();
@@ -399,8 +411,17 @@ impl ServingPolicy for TridentPolicy {
             let plans = self.dispatch_greedy(pending, view);
             return (plans, None);
         }
-        let disp = Dispatcher::new(&self.profile, &self.pipeline, &self.consts, &self.topo);
-        let (mut plans, stats) = disp.dispatch(pending, view);
+        // Candidate table persists across ticks; the previous tick's
+        // solution warm-starts this solve.
+        let disp = Dispatcher::with_cache(
+            &self.profile,
+            &self.pipeline,
+            &self.consts,
+            &self.topo,
+            &self.cand_cache,
+        );
+        let (mut plans, stats, warm) = disp.dispatch_warm(pending, view, Some(&self.warm));
+        self.warm = warm;
         if !self.stage_aware {
             // Ablation: align all stages' resources with the Diffuse plan.
             for p in &mut plans {
@@ -449,12 +470,9 @@ mod tests {
     fn dispatch_removes_dispatched_from_pending() {
         let mut t = trident(PipelineSpec::flux());
         let plan = t.initial_placement(128);
-        let view = ClusterView {
-            placement: plan,
-            idle: vec![true; 128],
-            free_at_ms: vec![0.0; 128],
-            now_ms: 0.0,
-        };
+        let idle = vec![true; 128];
+        let free_at_ms = vec![0.0; 128];
+        let view = ClusterView { placement: &plan, idle: &idle, free_at_ms: &free_at_ms, now_ms: 0.0 };
         let mut pending: Vec<Request> = (0..4)
             .map(|i| Request {
                 id: i,
@@ -477,12 +495,9 @@ mod tests {
         let mut t = trident(PipelineSpec::flux());
         t.use_ilp = false;
         let plan = t.initial_placement(128);
-        let view = ClusterView {
-            placement: plan,
-            idle: vec![true; 128],
-            free_at_ms: vec![0.0; 128],
-            now_ms: 0.0,
-        };
+        let idle = vec![true; 128];
+        let free_at_ms = vec![0.0; 128];
+        let view = ClusterView { placement: &plan, idle: &idle, free_at_ms: &free_at_ms, now_ms: 0.0 };
         let mut pending: Vec<Request> = (0..4)
             .map(|i| Request {
                 id: i,
@@ -504,12 +519,9 @@ mod tests {
         let mut t = trident(PipelineSpec::flux());
         t.stage_aware = false;
         let plan = t.initial_placement(128);
-        let view = ClusterView {
-            placement: plan,
-            idle: vec![true; 128],
-            free_at_ms: vec![0.0; 128],
-            now_ms: 0.0,
-        };
+        let idle = vec![true; 128];
+        let free_at_ms = vec![0.0; 128];
+        let view = ClusterView { placement: &plan, idle: &idle, free_at_ms: &free_at_ms, now_ms: 0.0 };
         let mut pending = vec![Request {
             id: 0,
             pipeline_id: 0,
@@ -545,12 +557,9 @@ mod tests {
         let mut t = trident(PipelineSpec::flux());
         let plan = t.initial_placement(128);
         t.pending_resize = Some(64);
-        let view = ClusterView {
-            placement: plan,
-            idle: vec![true; 128],
-            free_at_ms: vec![0.0; 128],
-            now_ms: 0.0,
-        };
+        let idle = vec![true; 128];
+        let free_at_ms = vec![0.0; 128];
+        let view = ClusterView { placement: &plan, idle: &idle, free_at_ms: &free_at_ms, now_ms: 0.0 };
         let mut pending = vec![Request {
             id: 0,
             pipeline_id: 0,

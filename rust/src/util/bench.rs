@@ -1,0 +1,110 @@
+//! Machine-readable bench output.
+//!
+//! Every bench records `{bench, metric, value}` rows through a
+//! [`BenchRecorder`] and writes them to `BENCH_<name>.json` (repo root by
+//! default, `BENCH_OUT_DIR` to override) so the perf trajectory is tracked
+//! across PRs: CI's perf-smoke job uploads the file as an artifact, and a
+//! reviewer can diff the numbers instead of eyeballing stdout.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Collects `{bench, metric, value}` records and serialises them as a JSON
+/// array (one object per record).
+pub struct BenchRecorder {
+    bench: String,
+    records: Vec<(String, f64)>,
+}
+
+impl BenchRecorder {
+    pub fn new(bench: &str) -> Self {
+        BenchRecorder { bench: bench.to_string(), records: Vec::new() }
+    }
+
+    /// Append one record. Non-finite values are clamped to 0 (JSON has no
+    /// NaN/Inf and a poisoned file would break downstream diffing).
+    pub fn record(&mut self, metric: &str, value: f64) {
+        let v = if value.is_finite() { value } else { 0.0 };
+        self.records.push((metric.to_string(), v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The records as a JSON value (an array of `{bench, metric, value}`).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.records
+                .iter()
+                .map(|(metric, value)| {
+                    let mut obj = BTreeMap::new();
+                    obj.insert("bench".to_string(), Json::Str(self.bench.clone()));
+                    obj.insert("metric".to_string(), Json::Str(metric.clone()));
+                    obj.insert("value".to_string(), Json::Num(*value));
+                    Json::Obj(obj)
+                })
+                .collect(),
+        )
+    }
+
+    /// Default output path: `$BENCH_OUT_DIR/BENCH_<name>.json`, falling
+    /// back to the current directory (the repo root under `cargo bench`).
+    pub fn default_path(&self) -> PathBuf {
+        let dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| ".".to_string());
+        PathBuf::from(dir).join(format!("BENCH_{}.json", self.bench))
+    }
+
+    /// Write to an explicit directory; returns the file path.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, format!("{}\n", self.to_json().to_string()))?;
+        Ok(path)
+    }
+
+    /// Write to the default path; returns it.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let path = self.default_path();
+        std::fs::write(&path, format!("{}\n", self.to_json().to_string()))?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_serialise_round_trip() {
+        let mut b = BenchRecorder::new("unit");
+        b.record("alpha_ms", 1.5);
+        b.record("beta", 2.0);
+        b.record("bad", f64::NAN); // clamped, not poisoned
+        assert_eq!(b.len(), 3);
+        let text = b.to_json().to_string();
+        let parsed = Json::parse(&text).expect("recorder output must parse");
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].get("bench").and_then(|j| j.as_str()), Some("unit"));
+        assert_eq!(arr[0].get("metric").and_then(|j| j.as_str()), Some("alpha_ms"));
+        assert_eq!(arr[0].get("value").and_then(|j| j.as_f64()), Some(1.5));
+        assert_eq!(arr[2].get("value").and_then(|j| j.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn writes_file_to_explicit_dir() {
+        let mut b = BenchRecorder::new("unit_write");
+        b.record("m", 3.0);
+        let dir = std::env::temp_dir();
+        let path = b.write_to(&dir).expect("write must succeed");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("unit_write"));
+        let _ = std::fs::remove_file(path);
+    }
+}

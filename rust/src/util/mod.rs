@@ -4,6 +4,7 @@
 //! the crates vendored for the `xla` dependency are available). Each piece is
 //! deliberately minimal but complete for this repo's needs.
 
+pub mod bench;
 pub mod error;
 pub mod json;
 pub mod prop;
