@@ -5,14 +5,37 @@
 //!
 //!     cargo run --release --example coserve
 //!
-//! Environment knobs: COSERVE_MINUTES (default 10), COSERVE_SEED (default 0).
+//! Environment knobs: COSERVE_MINUTES (default 10), COSERVE_SEED (default 0),
+//! COSERVE_TRACE (unset = off; `1` or a path = trace the preemptive run,
+//! print its latency breakdown and write a Perfetto-loadable Chrome trace
+//! JSON to the path, default `coserve_trace.json`).
 
 use tridentserve::baselines::StaticPartition;
 use tridentserve::config::ClusterSpec;
 use tridentserve::coserve::{
-    run_coserve, CoServeConfig, CoServeReport, ClusterArbiter, PipelineSetup, ResizePolicy,
+    run_coserve, run_coserve_traced, CoServeConfig, CoServeReport, ClusterArbiter, PipelineSetup,
+    ResizePolicy,
 };
+use tridentserve::obs::export::to_chrome_trace;
+use tridentserve::obs::report::BreakdownReport;
+use tridentserve::obs::{TraceConfig, Tracer};
 use tridentserve::workload::{mixed, DifficultyModel, LoadShape, MixedSpec, WorkloadKind};
+
+/// `(tracer, sink, output path)` from a `*_TRACE` env var: unset → off.
+fn trace_from_env(
+    var: &str,
+    default_path: &str,
+) -> (Tracer, Option<std::rc::Rc<std::cell::RefCell<tridentserve::obs::RingSink>>>, String) {
+    match std::env::var(var) {
+        Err(_) => (Tracer::off(), None, String::new()),
+        Ok(v) => {
+            let path =
+                if v.is_empty() || v == "1" || v == "true" { default_path.to_string() } else { v };
+            let (tracer, sink) = Tracer::ring(&TraceConfig::full());
+            (tracer, sink, path)
+        }
+    }
+}
 
 fn print_report(report: &CoServeReport) {
     println!(
@@ -103,11 +126,28 @@ fn main() {
     print_report(&dynamic);
 
     // Same arbiter, preemptive handoff: lane resizes checkpoint in-flight
-    // work at stage/step boundaries instead of draining whole chains.
+    // work at stage/step boundaries instead of draining whole chains. This
+    // run carries the (optional) tracer: it is the one with cuts/resumes,
+    // so its breakdown shows blackout next to queue/exec/handoff.
+    let (tracer, sink, trace_path) = trace_from_env("COSERVE_TRACE", "coserve_trace.json");
     let preempt_cfg = CoServeConfig { resize: ResizePolicy::Preempt, ..cfg.clone() };
     let mut arbiter_p = ClusterArbiter::new(cluster.gpus_per_node);
-    let preempt = run_coserve(&setups, &cluster, &mut arbiter_p, &trace, &preempt_cfg);
+    let preempt = run_coserve_traced(&setups, &cluster, &mut arbiter_p, &trace, &preempt_cfg, &tracer);
     print_report(&preempt);
+    if let Some(sink) = sink {
+        let events = sink.borrow().snapshot();
+        let breakdown = BreakdownReport::from_events(&events);
+        println!(
+            "--- latency breakdown (preemptive run, {} events, max residual {:.3} ms) ---",
+            events.len(),
+            breakdown.max_residual_ms(),
+        );
+        print!("{breakdown}");
+        match std::fs::write(&trace_path, to_chrome_trace(&events).to_string()) {
+            Ok(()) => println!("wrote Perfetto trace to {trace_path}\n"),
+            Err(e) => println!("WARN: could not write {trace_path}: {e}\n"),
+        }
+    }
 
     let mut fixed = StaticPartition::new();
     let static_report = run_coserve(&setups, &cluster, &mut fixed, &trace, &cfg);

@@ -8,14 +8,20 @@
 //!
 //!     cargo run --release --example faults
 //!
-//! Environment knobs: FAULTS_MINUTES (default 8), FAULTS_SEED (default 0).
+//! Environment knobs: FAULTS_MINUTES (default 8), FAULTS_SEED (default 0),
+//! FAULTS_TRACE (unset = off; `1` or a path = trace the reactive run, print
+//! its latency breakdown — kills/blackouts included — and write a
+//! Perfetto-loadable Chrome trace JSON, default `faults_trace.json`).
 
 use tridentserve::config::ClusterSpec;
 use tridentserve::coserve::{
-    run_coserve, run_coserve_faulty, ClusterArbiter, CoServeConfig, CoServeReport, FaultPlan,
-    PipelineSetup, RecoveryPolicy,
+    run_coserve, run_coserve_faulty_traced, ClusterArbiter, CoServeConfig, CoServeReport,
+    FaultPlan, PipelineSetup, RecoveryPolicy,
 };
 use tridentserve::faults::ChurnGen;
+use tridentserve::obs::export::to_chrome_trace;
+use tridentserve::obs::report::BreakdownReport;
+use tridentserve::obs::{RingSink, TraceConfig, Tracer};
 use tridentserve::workload::{mixed, DifficultyModel, LoadShape, MixedSpec, MixedTrace, WorkloadKind};
 
 fn arbiter(cluster: &ClusterSpec) -> ClusterArbiter {
@@ -31,9 +37,26 @@ fn run_policy(
     trace: &MixedTrace,
     cfg: &CoServeConfig,
     plan: &FaultPlan,
+    tracer: &Tracer,
 ) -> CoServeReport {
     let mut arb = arbiter(cluster);
-    run_coserve_faulty(setups, cluster, &mut arb, trace, cfg, plan)
+    run_coserve_faulty_traced(setups, cluster, &mut arb, trace, cfg, plan, tracer)
+}
+
+/// `(tracer, sink, output path)` from `FAULTS_TRACE`: unset → off.
+fn trace_from_env() -> (Tracer, Option<std::rc::Rc<std::cell::RefCell<RingSink>>>, String) {
+    match std::env::var("FAULTS_TRACE") {
+        Err(_) => (Tracer::off(), None, String::new()),
+        Ok(v) => {
+            let path = if v.is_empty() || v == "1" || v == "true" {
+                "faults_trace.json".to_string()
+            } else {
+                v
+            };
+            let (tracer, sink) = Tracer::ring(&TraceConfig::full());
+            (tracer, sink, path)
+        }
+    }
 }
 
 fn main() {
@@ -97,12 +120,33 @@ fn main() {
     let horizon = duration_ms * cfg.drain_factor;
     let mut baseline_arb = arbiter(&cluster);
     let quiet = run_coserve(&setups, &cluster, &mut baseline_arb, &trace, &cfg);
-    let proactive =
-        run_policy(&setups, &cluster, &trace, &cfg, &FaultPlan::new(churn.clone(), RecoveryPolicy::Proactive));
-    let reactive =
-        run_policy(&setups, &cluster, &trace, &cfg, &FaultPlan::new(churn.clone(), RecoveryPolicy::Reactive));
-    let cold =
-        run_policy(&setups, &cluster, &trace, &cfg, &FaultPlan::new(churn.clone(), RecoveryPolicy::ColdRestart));
+    // The reactive run carries the (optional) tracer: it exercises the full
+    // detect → kill → recover path, so its breakdown shows fault blackout.
+    let (tracer, sink, trace_path) = trace_from_env();
+    let proactive = run_policy(
+        &setups,
+        &cluster,
+        &trace,
+        &cfg,
+        &FaultPlan::new(churn.clone(), RecoveryPolicy::Proactive),
+        &Tracer::off(),
+    );
+    let reactive = run_policy(
+        &setups,
+        &cluster,
+        &trace,
+        &cfg,
+        &FaultPlan::new(churn.clone(), RecoveryPolicy::Reactive),
+        &tracer,
+    );
+    let cold = run_policy(
+        &setups,
+        &cluster,
+        &trace,
+        &cfg,
+        &FaultPlan::new(churn.clone(), RecoveryPolicy::ColdRestart),
+        &Tracer::off(),
+    );
 
     println!(
         "{:<14} {:>9} {:>8} {:>12} {:>12} {:>10} {:>10}",
@@ -129,6 +173,21 @@ fn main() {
     println!("proactive: {proactive}");
     println!("reactive:  {reactive}");
     println!("cold:      {cold}");
+
+    if let Some(sink) = sink {
+        let events = sink.borrow().snapshot();
+        let breakdown = BreakdownReport::from_events(&events);
+        println!(
+            "\n--- latency breakdown (reactive run, {} events, max residual {:.3} ms) ---",
+            events.len(),
+            breakdown.max_residual_ms(),
+        );
+        print!("{breakdown}");
+        match std::fs::write(&trace_path, to_chrome_trace(&events).to_string()) {
+            Ok(()) => println!("wrote Perfetto trace to {trace_path}"),
+            Err(e) => println!("WARN: could not write {trace_path}: {e}"),
+        }
+    }
 
     for (name, r) in [("proactive", &proactive), ("reactive", &reactive), ("cold", &cold)] {
         assert_eq!(r.vram_violations, 0, "{name}: VRAM ledger violated under churn");

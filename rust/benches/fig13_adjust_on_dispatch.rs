@@ -43,6 +43,7 @@ fn probe_request(
         c: StagePlan { req: 1, stage: Stage::Decode, gpus, degree: k },
         e_merged: true,
         c_on_subset: true,
+        profit: 0.0,
     };
     engine.enqueue(&rp, profile);
     let started = engine.advance(start_ms, &mut ProfiledExec(profile), profile);

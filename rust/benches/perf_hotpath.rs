@@ -20,6 +20,7 @@ use tridentserve::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
 use tridentserve::dispatch::{ClusterView, Dispatcher, RequestPlans, StagePlan};
 use tridentserve::engine::{Engine, StageExec};
 use tridentserve::harness::Setup;
+use tridentserve::obs::{EventBody, TraceConfig, Tracer};
 use tridentserve::perfmodel::PerfModel;
 use tridentserve::placement::{Orchestrator, Pi, PlacementPlan};
 use tridentserve::profiler::Profile;
@@ -134,6 +135,7 @@ fn main() {
                 c: StagePlan { req: i, stage: Stage::Decode, gpus: vec![g], degree: 1 },
                 e_merged: true,
                 c_on_subset: true,
+                profit: 0.0,
             };
             engine.enqueue(&rp, &profile);
             for sp in engine.advance(i as f64, &mut NoopExec, &profile) {
@@ -179,6 +181,53 @@ fn main() {
         out.record("whole_sim_wall_s", wall);
         out.record("whole_sim_ms_per_wall_ms", sim_per_wall);
         out.record("whole_sim_requests", s.n as f64);
+    }
+
+    // --- Trace emission overhead (obs). The off path must short-circuit
+    // before the event closure runs (no allocation, ~an Option check); the
+    // on path pays closure + ring push.
+    {
+        let n: u64 = if quick { 200_000 } else { 2_000_000 };
+        let off = Tracer::off();
+        let t0 = Instant::now();
+        for i in 0..n {
+            off.emit_req(i as f64, i, || EventBody::Arrive { req: i, shape_idx: 0 });
+        }
+        let off_ns = t0.elapsed().as_secs_f64() * 1e9 / n as f64;
+
+        let (on, sink) = Tracer::ring(&TraceConfig::On { capacity: 1 << 16, sample_every: 1 });
+        let on = on.for_lane(0);
+        let t0 = Instant::now();
+        for i in 0..n {
+            on.emit_req(i as f64, i, || EventBody::Arrive { req: i, shape_idx: 0 });
+        }
+        let on_ns = t0.elapsed().as_secs_f64() * 1e9 / n as f64;
+        let retained = sink.map_or(0, |s| s.borrow().events.len());
+        println!(
+            "trace emit ({n} events): off {off_ns:.2} ns/event, on {on_ns:.1} ns/event ({retained} retained)"
+        );
+        out.record("trace_emit_off_ns", off_ns);
+        out.record("trace_emit_on_ns", on_ns);
+
+        // Whole-sim cost with full tracing vs. tracing off, same seed.
+        let sim_minutes = if quick { 0.5 } else { 2.0 };
+        let setup = Setup::new("flux", 128);
+        let horizon = sim_minutes * 60_000.0;
+        let t0 = Instant::now();
+        let m_off = setup.run_traced("trident", WorkloadKind::Medium, horizon, 0, &Tracer::off());
+        let wall_off = t0.elapsed().as_secs_f64();
+        let (tr, sink) = Tracer::ring(&TraceConfig::full());
+        let t0 = Instant::now();
+        let m_on = setup.run_traced("trident", WorkloadKind::Medium, horizon, 0, &tr);
+        let wall_on = t0.elapsed().as_secs_f64();
+        assert_eq!(m_off.summary().n, m_on.summary().n, "tracing must not perturb the sim");
+        let events = sink.map_or(0, |s| s.borrow().events.len());
+        println!(
+            "traced sim (flux/medium, {sim_minutes} min): off {wall_off:.2}s, on {wall_on:.2}s ({events} events)"
+        );
+        out.record("sim_trace_off_s", wall_off);
+        out.record("sim_trace_on_s", wall_on);
+        out.record("sim_trace_events", events as f64);
     }
 
     match out.write() {

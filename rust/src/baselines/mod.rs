@@ -113,6 +113,7 @@ impl BaseCtx {
             c: StagePlan { req: r.id, stage: Stage::Decode, gpus, degree: k },
             e_merged: true,
             c_on_subset: true,
+            profit: 0.0,
         }
     }
 
@@ -550,6 +551,7 @@ impl ServingPolicy for BStageLevel {
                 c: StagePlan { req: r.id, stage: Stage::Decode, gpus: vec![c_gpu], degree: 1 },
                 e_merged: false,
                 c_on_subset: false,
+                profit: 0.0,
             });
             dispatched.push(ri);
         }

@@ -13,10 +13,12 @@ use crate::cascade::router::{ConfidenceRouter, QualityModel};
 use crate::config::ClusterSpec;
 use crate::coserve::arbiter::ArbiterPolicy;
 use crate::coserve::exec::{
-    run_coserve, run_coserve_hooked, CoServeConfig, CoServeReport, LaneHook, PipelineSetup,
+    run_coserve_hooked_traced, run_coserve_traced, CoServeConfig, CoServeReport, LaneHook,
+    PipelineSetup,
 };
 use crate::coserve::LaneSignal;
 use crate::metrics::Metrics;
+use crate::obs::{EventBody, Tracer, CONTROL_LANE};
 use crate::request::{Completion, Outcome, Request, RequestId};
 use crate::util::stats::SlidingWindow;
 use crate::util::Rng;
@@ -184,6 +186,9 @@ struct CascadeHook {
     /// Ids routed straight to the heavy lane at arrival.
     direct: BTreeSet<RequestId>,
     threshold_trace: Vec<(f64, f64)>,
+    /// Control-lane tracer: escalations and threshold-controller moves are
+    /// routing *decisions*, so they land in the decision log.
+    tracer: Tracer,
 }
 
 impl LaneHook for CascadeHook {
@@ -239,6 +244,7 @@ impl LaneHook for CascadeHook {
             return None;
         }
         self.escalated.insert(c.id);
+        self.tracer.emit_req(now_ms, c.id, || EventBody::Escalate { req: c.id, difficulty: d });
         Some((
             HEAVY_LANE,
             Request {
@@ -255,7 +261,12 @@ impl LaneHook for CascadeHook {
 
     fn shape_signals(&mut self, now_ms: f64, signals: &mut [LaneSignal]) {
         if let Some(ctrl) = &mut self.controller {
-            self.router.threshold = ctrl.adjust(self.router.threshold);
+            let from = self.router.threshold;
+            self.router.threshold = ctrl.adjust(from);
+            if self.router.threshold != from {
+                let to = self.router.threshold;
+                self.tracer.emit(now_ms, || EventBody::ThresholdMove { from, to });
+            }
         }
         self.threshold_trace.push((now_ms, self.router.threshold));
         // Walk the arrival cut: the controller holds aggressiveness
@@ -309,13 +320,33 @@ pub fn run_cascade(
     quality: QualityModel,
     cfg: &CoServeConfig,
 ) -> CascadeReport {
+    run_cascade_traced(
+        cheap, heavy, cluster, arbiter, trace, mode, quality, cfg, &Tracer::off(),
+    )
+}
+
+/// [`run_cascade`] with request/decision tracing: lane 0 (cheap) and lane 1
+/// (heavy) request spans, plus Escalate/ThresholdMove decision events on
+/// [`CONTROL_LANE`]. With `Tracer::off()` this is exactly `run_cascade`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_cascade_traced(
+    cheap: &PipelineSetup,
+    heavy: &PipelineSetup,
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &Trace,
+    mode: RouterMode,
+    quality: QualityModel,
+    cfg: &CoServeConfig,
+    tracer: &Tracer,
+) -> CascadeReport {
     let label = mode.label();
     let difficulty: HashMap<RequestId, f64> =
         trace.requests.iter().map(|r| (r.id, r.difficulty)).collect();
 
     let (initial_threshold, controller, predicted_cut) = match mode {
         RouterMode::AlwaysHeavy => {
-            return run_always_heavy(heavy, cluster, arbiter, trace, quality, cfg, label);
+            return run_always_heavy(heavy, cluster, arbiter, trace, quality, cfg, label, tracer);
         }
         RouterMode::StaticThreshold(t) => (t, None, None),
         RouterMode::ArrivalRouted { predicted_cut, threshold } => {
@@ -362,9 +393,11 @@ pub fn run_cascade(
         escalated: BTreeSet::new(),
         direct: BTreeSet::new(),
         threshold_trace: Vec::new(),
+        tracer: tracer.for_lane(CONTROL_LANE),
     };
     let setups = [cheap.clone(), heavy.clone()];
-    let coserve = run_coserve_hooked(&setups, cluster, arbiter, &mixed, cfg, &mut hook);
+    let coserve =
+        run_coserve_hooked_traced(&setups, cluster, arbiter, &mixed, cfg, &mut hook, tracer);
     let direct = hook.direct.clone();
 
     // Fold the two lanes into per-logical-request completions + verdicts.
@@ -473,13 +506,15 @@ fn run_always_heavy(
     _quality: QualityModel,
     cfg: &CoServeConfig,
     label: String,
+    tracer: &Tracer,
 ) -> CascadeReport {
     let mixed = MixedTrace {
         requests: trace.requests.clone(),
         duration_ms: trace.duration_ms,
         n_pipelines: 1,
     };
-    let coserve = run_coserve(std::slice::from_ref(heavy), cluster, arbiter, &mixed, cfg);
+    let coserve =
+        run_coserve_traced(std::slice::from_ref(heavy), cluster, arbiter, &mixed, cfg, tracer);
     let mut logical = Metrics::new(cfg.span_ms);
     for c in &coserve.lanes[0].metrics.completions {
         logical.record(c.clone());

@@ -39,6 +39,7 @@ pub mod router;
 
 pub use controller::ThresholdController;
 pub use exec::{
-    calibrate_threshold, run_cascade, CascadeReport, RouterMode, CHEAP_LANE, ESC_BIT, HEAVY_LANE,
+    calibrate_threshold, run_cascade, run_cascade_traced, CascadeReport, RouterMode, CHEAP_LANE,
+    ESC_BIT, HEAVY_LANE,
 };
 pub use router::{ConfidenceRouter, QualityModel};

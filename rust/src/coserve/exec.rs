@@ -32,6 +32,7 @@ use crate::faults::{ChurnKind, FailureDetector, FaultPlan, RecoveryPolicy};
 use crate::lane::{EventQueue, LaneCore, Progress};
 use crate::metrics::{FaultStats, Metrics, MigrationStats};
 use crate::migrate::{plan_diffuse_cut, DiffuseCut, ResizePolicy, ResumeSpec, StageCheckpoint};
+use crate::obs::{EventBody, Tracer, CONTROL_LANE};
 use crate::util::json::Json;
 use crate::monitor::Monitor;
 use crate::perfmodel::PerfModel;
@@ -518,6 +519,12 @@ impl Lane {
         // restore transfer.
         let (ids, seed_stage_ms) = match self.resume.remove(&rp.req) {
             Some(spec) => {
+                self.core.tracer.emit_req(now_ms, rp.req, || EventBody::Resume {
+                    req: rp.req,
+                    restore_ms: spec.restore_ms,
+                    skip_encode: spec.skip_encode,
+                    diffuse_frac: spec.diffuse_frac,
+                });
                 let ids = self.engine.enqueue_resume(
                     rp,
                     &self.profile,
@@ -532,7 +539,7 @@ impl Lane {
             }
             None => (self.engine.enqueue(rp, &self.profile), [0.0; 3]),
         };
-        self.core.track_dispatch(rp, ids, seed_stage_ms);
+        self.core.track_dispatch(rp, ids, seed_stage_ms, now_ms);
     }
 
     /// Start every startable plan; returns (plan id, finish time) pairs for
@@ -564,6 +571,13 @@ impl Lane {
                 self.policy.dispatch(&mut self.core.pending, &view)
             };
             if let Some(s) = stats {
+                // Wall-clock solve fields stay out of the trace (see
+                // `sim::run_sim_traced`): same seed must mean same bytes.
+                self.core.tracer.emit(now_ms, || EventBody::Decision {
+                    candidates: s.candidates,
+                    dispatched: s.dispatched,
+                    warm_hits: s.warm_hits,
+                });
                 self.metrics.record_solve(s);
             }
             for rp in &plans {
@@ -597,8 +611,8 @@ impl Lane {
     }
 
     /// Horizon close-out: everything still tracked is an SLO miss.
-    fn finalize(&mut self) {
-        self.core.finalize(&mut self.metrics);
+    fn finalize(&mut self, now_ms: f64) {
+        self.core.finalize(now_ms, &mut self.metrics);
     }
 
     // -----------------------------------------------------------------
@@ -680,6 +694,12 @@ impl Lane {
         }
         let req = self.engine.plans[pid].req;
         let started = self.engine.plans[pid].started_ms;
+        self.core.tracer.emit_req(now_ms, req, || EventBody::Cut {
+            req,
+            start_ms: started,
+            prepare_ms: self.engine.plans[pid].prepare_ms,
+            steps_done: self.cuts.get(&pid).map_or(0, |c| c.steps_done),
+        });
         self.engine.preempt_running(pid, now_ms);
         if let Some(pr) = self.core.progress.get_mut(req) {
             pr.stage_ms[1] += (now_ms - started).max(0.0);
@@ -885,6 +905,12 @@ impl Lane {
                         fstats.lost_diffuse_ms +=
                             (now_ms - started - prepare).clamp(0.0, exec);
                     }
+                    self.core.tracer.emit_req(now_ms, req, || EventBody::Kill {
+                        req,
+                        stage,
+                        start_ms: started,
+                        prepare_ms: prepare,
+                    });
                     // Any scheduled orderly cut never happened: the plan
                     // died first, so its step progress is NOT banked.
                     self.cuts.remove(&pid);
@@ -915,6 +941,12 @@ impl Lane {
                         let started = self.engine.plans[pid].started_ms;
                         let prepare = self.engine.plans[pid].prepare_ms;
                         let exec = self.engine.plans[pid].exec_ms;
+                        self.core.tracer.emit_req(now_ms, req, || EventBody::Kill {
+                            req,
+                            stage,
+                            start_ms: started,
+                            prepare_ms: prepare,
+                        });
                         self.engine.preempt_running(pid, now_ms);
                         if stage == Stage::Diffuse {
                             if let Some(pr) = self.core.progress.get_mut(req) {
@@ -1052,12 +1084,13 @@ fn assign_owners(fs: &mut FaultState, alloc: &[usize]) {
 /// started here — for hard failures the control plane only learns of the
 /// loss when heartbeats go stale; for proactively-drained reclaims the node
 /// is already unowned and the loss hits idle capacity.
-fn apply_node_loss(node: usize, now: f64, lanes: &mut [Lane], fs: &mut FaultState) {
+fn apply_node_loss(node: usize, now: f64, lanes: &mut [Lane], fs: &mut FaultState, ctl: &Tracer) {
     if !fs.world_alive[node] {
         return;
     }
     fs.world_alive[node] = false;
     fs.stats.node_losses += 1;
+    ctl.emit(now, || EventBody::NodeLoss { node });
     match fs.owner_of[node] {
         None => {
             // No lane owns it: the loss hits idle capacity — zero blackout.
@@ -1134,6 +1167,7 @@ fn start_fault_recovery(
     cfg: &CoServeConfig,
     gpn: usize,
     now: f64,
+    ctl: &Tracer,
 ) -> (Vec<usize>, Vec<(usize, PlanId, f64)>) {
     let n = lanes.len();
     let mut signals = lane_signals(lanes, avg_rps, per_gpu, cfg, now);
@@ -1144,6 +1178,14 @@ fn start_fault_recovery(
     assert_eq!(target.len(), n, "arbiter returned wrong lane count");
     assert_eq!(target.iter().sum::<usize>(), total, "arbiter must cover the degraded pool");
     assert!(target.iter().all(|&x| x >= 1), "every lane needs >= 1 node");
+    ctl.emit(now, || EventBody::Recovery {
+        policy: match fs.recovery {
+            RecoveryPolicy::Proactive => "proactive",
+            RecoveryPolicy::Reactive => "reactive",
+            RecoveryPolicy::ColdRestart => "cold_restart",
+        },
+    });
+    ctl.emit(now, || EventBody::Repartition { alloc: target.clone(), fault: true });
     let mut cut_events: Vec<(usize, PlanId, f64)> = Vec::new();
     for (p, lane) in lanes.iter_mut().enumerate() {
         let resizes = target[p] != alloc[p]
@@ -1190,6 +1232,7 @@ fn try_swap(
     gpn: usize,
     resize: ResizePolicy,
     now: f64,
+    ctl: &Tracer,
 ) {
     let Some(target) = pending_alloc.as_ref() else { return };
     for (p, lane) in lanes.iter().enumerate() {
@@ -1242,6 +1285,7 @@ fn try_swap(
     if resized {
         migration.blackout_ms.push(blackout_ms);
     }
+    ctl.emit(now, || EventBody::Swap { alloc: target.clone(), blackout_ms });
     *alloc = target;
     *arbitrations += 1;
     if let Some(fs) = fstate.as_mut() {
@@ -1349,7 +1393,48 @@ pub fn run_coserve_hooked(
     cfg: &CoServeConfig,
     hook: &mut dyn LaneHook,
 ) -> CoServeReport {
-    run_coserve_engine(setups, cluster, arbiter, trace, cfg, hook, None)
+    run_coserve_engine(setups, cluster, arbiter, trace, cfg, hook, None, &Tracer::off())
+}
+
+/// [`run_coserve`] with request/decision tracing: lane `p`'s request spans
+/// are tagged lane `p`, arbiter/churn events go to [`CONTROL_LANE`]. With
+/// `Tracer::off()` this is exactly `run_coserve`.
+pub fn run_coserve_traced(
+    setups: &[PipelineSetup],
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &MixedTrace,
+    cfg: &CoServeConfig,
+    tracer: &Tracer,
+) -> CoServeReport {
+    run_coserve_engine(setups, cluster, arbiter, trace, cfg, &mut NoopHook, None, tracer)
+}
+
+/// [`run_coserve_hooked`] with tracing (the cascade layer's traced entry).
+pub fn run_coserve_hooked_traced(
+    setups: &[PipelineSetup],
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &MixedTrace,
+    cfg: &CoServeConfig,
+    hook: &mut dyn LaneHook,
+    tracer: &Tracer,
+) -> CoServeReport {
+    run_coserve_engine(setups, cluster, arbiter, trace, cfg, hook, None, tracer)
+}
+
+/// [`run_coserve_faulty`] with tracing (churn detections, recoveries and
+/// blackouts land in the decision log).
+pub fn run_coserve_faulty_traced(
+    setups: &[PipelineSetup],
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &MixedTrace,
+    cfg: &CoServeConfig,
+    faults: &FaultPlan,
+    tracer: &Tracer,
+) -> CoServeReport {
+    run_coserve_engine(setups, cluster, arbiter, trace, cfg, &mut NoopHook, Some(faults), tracer)
 }
 
 /// [`run_coserve`] under injected node churn: the faults subsystem's
@@ -1363,7 +1448,9 @@ pub fn run_coserve_faulty(
     cfg: &CoServeConfig,
     faults: &FaultPlan,
 ) -> CoServeReport {
-    run_coserve_engine(setups, cluster, arbiter, trace, cfg, &mut NoopHook, Some(faults))
+    run_coserve_engine(
+        setups, cluster, arbiter, trace, cfg, &mut NoopHook, Some(faults), &Tracer::off(),
+    )
 }
 
 /// [`run_coserve_faulty`] with a [`LaneHook`] (churn under a cascade).
@@ -1376,9 +1463,10 @@ pub fn run_coserve_faulty_hooked(
     hook: &mut dyn LaneHook,
     faults: &FaultPlan,
 ) -> CoServeReport {
-    run_coserve_engine(setups, cluster, arbiter, trace, cfg, hook, Some(faults))
+    run_coserve_engine(setups, cluster, arbiter, trace, cfg, hook, Some(faults), &Tracer::off())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_coserve_engine(
     setups: &[PipelineSetup],
     cluster: &ClusterSpec,
@@ -1387,6 +1475,7 @@ fn run_coserve_engine(
     cfg: &CoServeConfig,
     hook: &mut dyn LaneHook,
     faults: Option<&FaultPlan>,
+    tracer: &Tracer,
 ) -> CoServeReport {
     let n = setups.len();
     assert!(n > 0, "no pipelines");
@@ -1423,6 +1512,10 @@ fn run_coserve_engine(
         .enumerate()
         .map(|(p, s)| Lane::new(s, cluster, alloc[p], cfg, p))
         .collect();
+    for (p, lane) in lanes.iter_mut().enumerate() {
+        lane.core.tracer = tracer.for_lane(p as u32);
+    }
+    let ctl = tracer.for_lane(CONTROL_LANE);
 
     // Fault-run state: membership, detector, ownership, counters.
     let mut fstate: Option<FaultState> = faults.map(|f| {
@@ -1513,7 +1606,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl,
                 );
                 if now + cfg.tick_ms <= horizon {
                     events.push(now + cfg.tick_ms, EventKind::Tick);
@@ -1540,12 +1633,13 @@ fn run_coserve_engine(
                         fs.handled.insert(nd);
                         fs.known_avail[nd] = false;
                         fs.stats.detections += 1;
+                        ctl.emit(now, || EventBody::ChurnDetect { node: nd });
                         initiate = true;
                     }
                     if initiate {
                         fault_action = Some(start_fault_recovery(
                             &mut lanes, arbiter, hook, fs, &alloc, &avg_rps, &per_gpu,
-                            cfg, gpn, now,
+                            cfg, gpn, now, &ctl,
                         ));
                     }
                 }
@@ -1580,6 +1674,10 @@ fn run_coserve_engine(
                         assert_eq!(target.iter().sum::<usize>(), allocatable);
                         assert!(target.iter().all(|&x| x >= 1));
                         if target != alloc {
+                            ctl.emit(now, || EventBody::Repartition {
+                                alloc: target.clone(),
+                                fault: false,
+                            });
                             let mut cut_events: Vec<(usize, PlanId, f64)> = Vec::new();
                             for (p, lane) in lanes.iter_mut().enumerate() {
                                 lane.draining = target[p] != alloc[p];
@@ -1619,16 +1717,17 @@ fn run_coserve_engine(
                         continue;
                     }
                     let g = lane.gpus();
-                    let Lane { policy, monitor, engine, metrics, .. } = lane;
+                    let Lane { policy, monitor, engine, metrics, core, .. } = lane;
                     if let Some(plan) = policy.maybe_switch(now, monitor, g) {
                         engine.apply_switch(plan);
+                        core.tracer.emit(now, || EventBody::PlacementSwitch);
                         metrics.record_switch(now);
                     }
                 }
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl,
                 );
                 if now + cfg.monitor_ms <= horizon {
                     events.push(now + cfg.monitor_ms, EventKind::MonitorTick);
@@ -1652,7 +1751,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl,
                 );
             }
             EventKind::PreemptCut { lane: p, gen, plan } => {
@@ -1662,7 +1761,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl,
                 );
             }
             EventKind::ChurnArrive(i) => {
@@ -1674,7 +1773,7 @@ fn run_coserve_engine(
                     ChurnKind::NodeDown => {
                         // Unannounced: capacity is gone now; the control
                         // plane learns of it when heartbeats go stale.
-                        apply_node_loss(ev.node, now, &mut lanes, fs);
+                        apply_node_loss(ev.node, now, &mut lanes, fs, &ctl);
                     }
                     ChurnKind::SpotReclaim { notice_ms } => {
                         fs.stats.reclaim_notices += 1;
@@ -1703,6 +1802,7 @@ fn run_coserve_engine(
                             fs.handled.remove(&ev.node);
                             fs.detector.beat(ev.node, now);
                             fs.stats.node_returns += 1;
+                            ctl.emit(now, || EventBody::NodeReturn { node: ev.node });
                             initiate = true; // re-expand over the grown pool
                         }
                     }
@@ -1710,7 +1810,7 @@ fn run_coserve_engine(
                 if initiate {
                     let (target, cut_events) = start_fault_recovery(
                         &mut lanes, arbiter, hook, fs, &alloc, &avg_rps, &per_gpu, cfg,
-                        gpn, now,
+                        gpn, now, &ctl,
                     );
                     for (p, pid, t_cut) in cut_events {
                         let gen = lanes[p].generation;
@@ -1725,16 +1825,16 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl,
                 );
             }
             EventKind::NodeLoss { node } => {
                 let fs = fstate.as_mut().expect("node loss without fault state");
-                apply_node_loss(node, now, &mut lanes, fs);
+                apply_node_loss(node, now, &mut lanes, fs, &ctl);
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl,
                 );
             }
         }
@@ -1749,7 +1849,7 @@ fn run_coserve_engine(
     let mut reports = Vec::with_capacity(n);
     for lane in lanes.iter_mut() {
         migration.migrated_gb += lane.restored_gb;
-        lane.finalize();
+        lane.finalize(horizon);
         for g in 0..lane.gpus() {
             if lane.engine.vram.gpu(g).used_gb() > lane.engine.vram.capacity_gb() + 1e-6 {
                 vram_violations += 1;

@@ -49,6 +49,10 @@ pub struct RequestPlans {
     pub e_merged: bool,
     /// True when C runs on a subset of G^D.
     pub c_on_subset: bool,
+    /// MCKP profit of the chosen (type, degree) item — the dispatch
+    /// decision's score, surfaced in trace `Dispatch` events. 0.0 for
+    /// plans built outside the ILP (greedy fallback, baselines, tests).
+    pub profit: f64,
 }
 
 /// What the dispatcher needs to know about the cluster at a tick. All
@@ -542,7 +546,8 @@ impl<'a> Dispatcher<'a> {
             for &g in &gpus {
                 taken[g] = true;
             }
-            plans.push(self.build_plans(r, i, gpus, k, view, &mut balancer));
+            let profit = problem.items[*item_idx].profit;
+            plans.push(self.build_plans(r, i, gpus, k, profit, view, &mut balancer));
         }
 
         let stats = SolveStats {
@@ -571,12 +576,14 @@ impl<'a> Dispatcher<'a> {
     }
 
     /// Derive `Γ^E` and `Γ^C` from `Γ^D` (§6.2 "Solution for Γ^E and Γ^C").
+    #[allow(clippy::too_many_arguments)]
     fn build_plans(
         &self,
         r: &Request,
         vr_type: usize,
         d_gpus: Vec<GpuId>,
         k: usize,
+        profit: f64,
         view: &ClusterView<'_>,
         balancer: &mut TickBalancer,
     ) -> RequestPlans {
@@ -618,6 +625,7 @@ impl<'a> Dispatcher<'a> {
             c: c_plan,
             e_merged,
             c_on_subset,
+            profit,
         }
     }
 

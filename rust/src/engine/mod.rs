@@ -759,6 +759,7 @@ mod tests {
             c: StagePlan { req, stage: Stage::Decode, gpus, degree: k },
             e_merged: true,
             c_on_subset: true,
+            profit: 0.0,
         }
     }
 
@@ -808,6 +809,7 @@ mod tests {
             c: StagePlan { req: 7, stage: Stage::Decode, gpus: vec![2], degree: 1 },
             e_merged: false,
             c_on_subset: true,
+            profit: 0.0,
         };
         let ids = eng.enqueue(&plans, &profile);
         assert_eq!(ids.len(), 3);
@@ -870,6 +872,7 @@ mod tests {
             c: StagePlan { req: 5, stage: Stage::Decode, gpus: vec![2], degree: 1 },
             e_merged: false,
             c_on_subset: true,
+            profit: 0.0,
         };
         let ids = eng.enqueue(&plans, &profile);
         let started = eng.advance(0.0, &mut FixedExec(10.0), &profile);
@@ -897,6 +900,7 @@ mod tests {
             c: StagePlan { req, stage: Stage::Decode, gpus: vec![2], degree: 1 },
             e_merged: false,
             c_on_subset: true,
+            profit: 0.0,
         };
         let ids_a = eng.enqueue(&mk(1), &profile);
         let ids_b = eng.enqueue(&mk(2), &profile);

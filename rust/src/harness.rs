@@ -7,7 +7,8 @@ use crate::config::{ClusterSpec, PipelineSpec, SolverConstants};
 use crate::metrics::Metrics;
 use crate::perfmodel::PerfModel;
 use crate::profiler::Profile;
-use crate::sim::{run_sim, ServingPolicy, SimConfig, TridentPolicy};
+use crate::obs::Tracer;
+use crate::sim::{run_sim_traced, ServingPolicy, SimConfig, TridentPolicy};
 use crate::workload::{DifficultyModel, TraceGen, WorkloadKind};
 
 /// Everything needed to run experiments on one pipeline.
@@ -99,6 +100,32 @@ impl Setup {
         seed: u64,
         rate_scale: f64,
     ) -> Metrics {
+        self.run_scaled_traced(policy_name, workload, duration_ms, seed, rate_scale, &Tracer::off())
+    }
+
+    /// Like [`Setup::run`], recording request spans and control-plane
+    /// decisions into `tracer` (see [`crate::obs`]).
+    pub fn run_traced(
+        &self,
+        policy_name: &str,
+        workload: WorkloadKind,
+        duration_ms: f64,
+        seed: u64,
+        tracer: &Tracer,
+    ) -> Metrics {
+        self.run_scaled_traced(policy_name, workload, duration_ms, seed, 1.0, tracer)
+    }
+
+    /// The general form: arrival-rate multiplier plus tracing.
+    pub fn run_scaled_traced(
+        &self,
+        policy_name: &str,
+        workload: WorkloadKind,
+        duration_ms: f64,
+        seed: u64,
+        rate_scale: f64,
+        tracer: &Tracer,
+    ) -> Metrics {
         let tg = TraceGen {
             pipeline: &self.pipeline,
             profile: &self.profile,
@@ -108,7 +135,7 @@ impl Setup {
         let trace = tg.generate(workload, duration_ms, seed);
         let mut policy = self.policy(policy_name);
         let cfg = SimConfig { seed, ..Default::default() };
-        run_sim(
+        run_sim_traced(
             &self.pipeline,
             &self.profile,
             &self.consts,
@@ -116,6 +143,7 @@ impl Setup {
             policy.as_mut(),
             &trace,
             &cfg,
+            tracer,
         )
     }
 }

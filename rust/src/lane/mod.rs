@@ -34,6 +34,7 @@ use crate::dispatch::RequestPlans;
 use crate::engine::{Engine, PlanId, PlanState};
 use crate::metrics::Metrics;
 use crate::monitor::Monitor;
+use crate::obs::{EventBody, Tracer};
 use crate::perfmodel::PerfModel;
 use crate::request::{Completion, Outcome, Request, RequestId};
 
@@ -348,6 +349,14 @@ pub struct LaneCore {
     /// record's `arrival_ms` with the abort time, `coserve` records the
     /// true arrival.
     pub oom_arrival_is_abort_time: bool,
+    /// Request-lifecycle trace sink (off by default: every emission
+    /// short-circuits before constructing an event). Every executor built
+    /// on `LaneCore` — `sim`, `coserve`, `cascade`, `migrate`, `faults` —
+    /// gets Arrive/Dispatch/StageDone/Done/Oom/Drop spans from these
+    /// shared choke points; executor-specific events (Cut, Kill, Resume,
+    /// control-plane decisions) are emitted by the callers on the same
+    /// tracer.
+    pub tracer: Tracer,
 }
 
 impl LaneCore {
@@ -357,6 +366,7 @@ impl LaneCore {
             progress: ProgressTable::new(),
             oom_seen: 0,
             oom_arrival_is_abort_time,
+            tracer: Tracer::off(),
         }
     }
 
@@ -369,6 +379,10 @@ impl LaneCore {
     /// Admit a request the policy can serve: track identity, queue it.
     pub fn admit(&mut self, r: Request) {
         self.progress.track_meta(r.id, r.arrival_ms, r.deadline_ms);
+        self.tracer.emit_req(r.arrival_ms, r.id, || EventBody::Arrive {
+            req: r.id,
+            shape_idx: r.shape_idx,
+        });
         self.pending.push(r);
     }
 
@@ -379,7 +393,15 @@ impl LaneCore {
         rp: &RequestPlans,
         plan_chain: Vec<PlanId>,
         seed_stage_ms: [f64; 3],
+        now_ms: f64,
     ) {
+        self.tracer.emit_req(now_ms, rp.req, || EventBody::Dispatch {
+            req: rp.req,
+            shape_idx: rp.shape_idx,
+            vr_type: rp.vr_type,
+            degree: rp.d.degree,
+            profit: rp.profit,
+        });
         self.progress
             .begin_dispatch(rp.req, rp.shape_idx, rp.vr_type, plan_chain, seed_stage_ms);
     }
@@ -398,6 +420,7 @@ impl LaneCore {
         while self.oom_seen < engine.ooms.len() {
             let ab = engine.ooms[self.oom_seen];
             self.oom_seen += 1;
+            self.tracer.emit_req(ab.at_ms, ab.req, || EventBody::Oom { req: ab.req });
             match self.progress.remove_dispatched(ab.req) {
                 Some(pr) => {
                     let arrival_ms =
@@ -444,6 +467,21 @@ impl LaneCore {
         let pi = engine.pi_of(engine.plans[pid].gpus[0]);
         let total_ms = engine.plans[pid].prepare_ms + engine.plans[pid].exec_ms;
 
+        self.tracer.emit_req(now_ms, req, || {
+            let plan = &engine.plans[pid];
+            EventBody::StageDone {
+                req,
+                stage,
+                start_ms: plan.started_ms,
+                prepare_ms: plan.prepare_ms,
+                degree: plan.degree,
+                node: engine.topo.node_of(plan.gpus[0]),
+                steps: if stage == Stage::Diffuse { plan.plan_steps(pipeline.steps) } else { 0 },
+                merged_e: merged.contains(&Stage::Encode),
+                merged_c: merged.contains(&Stage::Decode),
+            }
+        });
+
         // Successor + inter-stage volume for the proactive push. A
         // successor withdrawn by a preemptive resize must not receive the
         // push: its stage re-plans on the new partition.
@@ -480,6 +518,8 @@ impl LaneCore {
             pr.done_plans += 1;
             if pr.done_plans == pr.plan_chain.len() {
                 let pr = self.progress.remove(req).unwrap();
+                self.tracer
+                    .emit_req(now_ms, req, || EventBody::Done { req, vr_type: pr.vr_type });
                 metrics.record(Completion {
                     id: req,
                     shape_idx: pr.shape_idx,
@@ -496,9 +536,13 @@ impl LaneCore {
 
     /// Horizon close-out: every in-flight request is an SLO miss, every
     /// still-pending request an unfinished record without a VR type.
-    pub fn finalize(&mut self, metrics: &mut Metrics) {
+    /// `now_ms` is the horizon time stamped on Drop trace events (the
+    /// metrics records keep their historical `finish_ms = INFINITY`).
+    pub fn finalize(&mut self, now_ms: f64, metrics: &mut Metrics) {
         for (id, pr) in self.progress.drain_all_sorted() {
             if pr.dispatched() && pr.done_plans < pr.plan_chain.len() {
+                self.tracer
+                    .emit_req(now_ms, id, || EventBody::Drop { req: id, dispatched: true });
                 metrics.record(Completion {
                     id,
                     shape_idx: pr.shape_idx,
@@ -512,6 +556,8 @@ impl LaneCore {
             }
         }
         for r in self.pending.drain(..) {
+            self.tracer
+                .emit_req(now_ms, r.id, || EventBody::Drop { req: r.id, dispatched: false });
             metrics.record(Completion {
                 id: r.id,
                 shape_idx: r.shape_idx,

@@ -31,6 +31,9 @@
 //!   over the co-serving arbiter.
 //! * [`cascade`] — query-aware cascade serving: confidence router over
 //!   cheap/full pipeline variants, jointly optimized with the arbiter.
+//! * [`obs`] — stage-level request tracing + control-plane decision log:
+//!   ring-buffered tracer, JSONL/Perfetto exporters, latency-breakdown
+//!   report.
 //! * [`metrics`] — SLO attainment, latency percentiles, Fig-10 reporting.
 //! * [`runtime`] — artifact manifest; with feature `pjrt`, the PJRT
 //!   loader/executor for the AOT HLO artifacts.
@@ -52,6 +55,7 @@ pub mod lane;
 pub mod metrics;
 pub mod migrate;
 pub mod monitor;
+pub mod obs;
 pub mod perfmodel;
 pub mod placement;
 pub mod profiler;

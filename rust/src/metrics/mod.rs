@@ -34,6 +34,11 @@ pub struct Summary {
     pub p95_latency_ms: f64,
     pub p99_latency_ms: f64,
     pub mean_solve_ms: f64,
+    /// Total dispatcher solves recorded (ticks where the ILP ran).
+    pub solves: usize,
+    /// Candidate-cache warm hits across all solves (Table-4 incremental
+    /// control-plane telemetry).
+    pub warm_hits: usize,
     /// Quality attainment (cascade runs); None when no verdicts recorded.
     pub quality_attainment: Option<f64>,
 }
@@ -116,17 +121,18 @@ impl Metrics {
     }
 
     /// Completions per second in consecutive spans (Fig 11 series).
+    /// Completions finishing at or past the horizon boundary (the last tick
+    /// lands exactly on `horizon_ms` when it divides evenly) are clamped
+    /// into the final span instead of being silently dropped.
     pub fn throughput_series(&self, horizon_ms: f64) -> Vec<f64> {
         let spans = (horizon_ms / self.span_ms).ceil() as usize;
         let mut counts = vec![0.0; spans.max(1)];
         for c in &self.completions {
-            if c.outcome != Outcome::Completed {
+            if c.outcome != Outcome::Completed || !c.finish_ms.is_finite() {
                 continue;
             }
-            let idx = (c.finish_ms / self.span_ms) as usize;
-            if idx < counts.len() {
-                counts[idx] += 1.0;
-            }
+            let idx = ((c.finish_ms / self.span_ms) as usize).min(counts.len() - 1);
+            counts[idx] += 1.0;
         }
         counts.iter().map(|c| c / (self.span_ms / 1000.0)).collect()
     }
@@ -156,6 +162,8 @@ impl Metrics {
             // 0.0 sentinel: policies without an ILP record no solves.
             mean_solve_ms: mean(&self.solve_stats.iter().map(|s| s.solve_ms).collect::<Vec<_>>())
                 .unwrap_or(0.0),
+            solves: self.solve_stats.len(),
+            warm_hits: self.solve_stats.iter().map(|s| s.warm_hits).sum(),
         }
     }
 }
@@ -173,6 +181,8 @@ impl Metrics {
         obj.insert("p95_latency_ms".into(), Json::Num(s.p95_latency_ms));
         obj.insert("p99_latency_ms".into(), Json::Num(s.p99_latency_ms));
         obj.insert("mean_solve_ms".into(), Json::Num(s.mean_solve_ms));
+        obj.insert("solves".into(), Json::Num(s.solves as f64));
+        obj.insert("warm_hits".into(), Json::Num(s.warm_hits as f64));
         if let Some(q) = s.quality_attainment {
             obj.insert("quality_attainment".into(), Json::Num(q));
         }
@@ -363,6 +373,9 @@ impl std::fmt::Display for Summary {
             self.p99_latency_ms / 1000.0,
             self.mean_solve_ms,
         )?;
+        if self.solves > 0 {
+            write!(f, " warm={}/{}", self.warm_hits, self.solves)?;
+        }
         if let Some(q) = self.quality_attainment {
             write!(f, " quality={q:.3}")?;
         }
@@ -416,6 +429,53 @@ mod tests {
         assert_eq!(s.len(), 2);
         assert!((s[0] - 2.0).abs() < 1e-9);
         assert!((s[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_series_clamps_boundary_completions_into_final_span() {
+        let mut m = Metrics::new(1000.0);
+        // finish_ms exactly on the horizon boundary (idx == counts.len())
+        // and past it: both must land in the final span, not vanish.
+        m.record(comp(2000.0, 1e9, Outcome::Completed, 0));
+        m.record(comp(2300.0, 1e9, Outcome::Completed, 0));
+        m.record(comp(500.0, 1e9, Outcome::Completed, 0));
+        // Unfinished records carry finish_ms = INFINITY and stay excluded.
+        m.record(comp(f64::INFINITY, 1e9, Outcome::Unfinished, 0));
+        let s = m.throughput_series(2000.0);
+        assert_eq!(s.len(), 2);
+        assert!((s[0] - 1.0).abs() < 1e-9, "{s:?}");
+        assert!((s[1] - 2.0).abs() < 1e-9, "boundary completions dropped: {s:?}");
+        // Total completions are conserved across the series.
+        let total: f64 = s.iter().sum::<f64>() * (m.span_ms / 1000.0);
+        assert!((total - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_surfaces_warm_hits_and_solve_counts() {
+        let mut m = Metrics::new(1000.0);
+        m.record(comp(50.0, 100.0, Outcome::Completed, 0));
+        let s0 = m.summary();
+        assert_eq!((s0.solves, s0.warm_hits), (0, 0));
+        assert!(!format!("{s0}").contains("warm="), "no solves -> no warm field");
+        for (w, c) in [(0usize, 4usize), (3, 4), (4, 4)] {
+            m.record_solve(SolveStats {
+                solve_ms: 0.5,
+                nodes: 10,
+                optimal: true,
+                candidates: c,
+                dispatched: c,
+                warm_hits: w,
+            });
+        }
+        let s = m.summary();
+        assert_eq!(s.solves, 3);
+        assert_eq!(s.warm_hits, 7);
+        assert!((s.mean_solve_ms - 0.5).abs() < 1e-9);
+        let shown = format!("{s}");
+        assert!(shown.contains("warm=7/3"), "{shown}");
+        let parsed = crate::util::json::Json::parse(&m.to_json("w").to_string()).unwrap();
+        assert_eq!(parsed.get("warm_hits").unwrap().as_i64(), Some(7));
+        assert_eq!(parsed.get("solves").unwrap().as_i64(), Some(3));
     }
 
     #[test]

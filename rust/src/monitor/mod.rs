@@ -197,6 +197,71 @@ mod tests {
     }
 
     #[test]
+    fn heartbeats_forget_then_beat_retracks() {
+        let mut hb = Heartbeats::new();
+        // stale/forget on an empty recorder are safe no-ops.
+        assert!(hb.stale(1e9, 0.0).is_empty());
+        hb.forget(3);
+        assert_eq!(hb.last_beat(3), None);
+        // A beat after forget re-registers the source from scratch: its
+        // staleness clock restarts at the new beat, with no memory of the
+        // pre-forget history.
+        hb.beat(3, 0.0);
+        hb.forget(3);
+        assert!(hb.stale(100_000.0, 1_000.0).is_empty(), "forgotten sources never go stale");
+        hb.beat(3, 100_000.0);
+        assert_eq!(hb.last_beat(3), Some(100_000.0));
+        assert!(hb.stale(100_500.0, 1_000.0).is_empty());
+        assert_eq!(hb.stale(101_001.0, 1_000.0), vec![3]);
+    }
+
+    #[test]
+    fn heartbeats_stale_order_is_deterministic() {
+        let mut hb = Heartbeats::new();
+        for s in [5usize, 1, 9, 3] {
+            hb.beat(s, 0.0);
+        }
+        // All stale at once: reported ascending by source id regardless of
+        // beat insertion order.
+        assert_eq!(hb.stale(10_000.0, 1_000.0), vec![1, 3, 5, 9]);
+    }
+
+    #[test]
+    fn pattern_change_empty_window_is_quiet() {
+        let mut m = Monitor::new(10_000.0, 1.5);
+        // No samples at all: zero events, below min_events, no trigger (and
+        // no NaN from the 0/0 rate ratio path).
+        assert!(!m.pattern_change(0.0));
+        assert!(!m.pattern_change(1e9));
+        assert_eq!(m.stage_rates(1000.0), [0.0; 3]);
+    }
+
+    #[test]
+    fn pattern_change_single_stage_evidence_triggers_on_starved_stages() {
+        let mut m = Monitor::new(10_000.0, 1.5);
+        // All the evidence on one stage: min rate is 0, max > 0 — the
+        // degenerate-imbalance branch must fire once min_events is met.
+        for i in 0..19 {
+            m.record(i as f64 * 100.0, Stage::Diffuse, Pi::D, 1.0);
+        }
+        assert!(!m.pattern_change(2_000.0), "19 events is below min_events");
+        m.record(1_900.0, Stage::Diffuse, Pi::D, 1.0);
+        assert!(m.pattern_change(2_000.0), "starved E/C stages are maximal imbalance");
+    }
+
+    #[test]
+    fn pattern_change_after_window_expiry_goes_quiet_again() {
+        let mut m = Monitor::new(1_000.0, 1.5);
+        for i in 0..30 {
+            m.record(i as f64 * 10.0, Stage::Diffuse, Pi::D, 1.0);
+        }
+        assert!(m.pattern_change(300.0));
+        // Once the burst ages out of the sliding window the event floor
+        // fails again: a stale burst must not trigger forever.
+        assert!(!m.pattern_change(10_000.0));
+    }
+
+    #[test]
     fn observed_rates_by_placement_type() {
         let mut m = Monitor::new(1_000.0, 1.5);
         for i in 0..10 {

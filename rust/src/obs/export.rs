@@ -1,0 +1,426 @@
+//! Trace exporters: structured JSONL (one sorted-key object per event) and
+//! Chrome trace-event JSON loadable in Perfetto / `chrome://tracing`.
+//!
+//! Both build on [`crate::util::json::Json`], whose objects are `BTreeMap`s
+//! — keys serialise in sorted order, so identical event streams produce
+//! byte-identical output (the determinism acceptance test diffs raw bytes).
+
+use std::collections::BTreeMap;
+
+use crate::config::Stage;
+use crate::util::json::Json;
+
+use super::{EventBody, TraceEvent, CONTROL_LANE};
+
+fn stage_name(s: Stage) -> &'static str {
+    match s {
+        Stage::Encode => "encode",
+        Stage::Diffuse => "diffuse",
+        Stage::Decode => "decode",
+    }
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// Lane stamp as JSON: `-1` for cluster-level control events.
+fn lane_json(lane: u32) -> Json {
+    if lane == CONTROL_LANE {
+        Json::Num(-1.0)
+    } else {
+        Json::Num(lane as f64)
+    }
+}
+
+/// One event as a flat JSON object (`kind` + `t_ms` + `lane` + body
+/// fields).
+pub fn event_json(ev: &TraceEvent) -> Json {
+    let mut o: BTreeMap<String, Json> = BTreeMap::new();
+    o.insert("t_ms".into(), num(ev.t_ms));
+    o.insert("lane".into(), lane_json(ev.lane));
+    let kind = match &ev.body {
+        EventBody::Arrive { req, shape_idx } => {
+            o.insert("req".into(), num(*req as f64));
+            o.insert("shape_idx".into(), num(*shape_idx as f64));
+            "arrive"
+        }
+        EventBody::Dispatch { req, shape_idx, vr_type, degree, profit } => {
+            o.insert("req".into(), num(*req as f64));
+            o.insert("shape_idx".into(), num(*shape_idx as f64));
+            o.insert("vr_type".into(), num(*vr_type as f64));
+            o.insert("degree".into(), num(*degree as f64));
+            o.insert("profit".into(), num(*profit));
+            "dispatch"
+        }
+        EventBody::Resume { req, restore_ms, skip_encode, diffuse_frac } => {
+            o.insert("req".into(), num(*req as f64));
+            o.insert("restore_ms".into(), num(*restore_ms));
+            o.insert("skip_encode".into(), Json::Bool(*skip_encode));
+            o.insert("diffuse_frac".into(), num(*diffuse_frac));
+            "resume"
+        }
+        EventBody::StageDone {
+            req,
+            stage,
+            start_ms,
+            prepare_ms,
+            degree,
+            node,
+            steps,
+            merged_e,
+            merged_c,
+        } => {
+            o.insert("req".into(), num(*req as f64));
+            o.insert("stage".into(), Json::Str(stage_name(*stage).into()));
+            o.insert("start_ms".into(), num(*start_ms));
+            o.insert("prepare_ms".into(), num(*prepare_ms));
+            o.insert("degree".into(), num(*degree as f64));
+            o.insert("node".into(), num(*node as f64));
+            o.insert("steps".into(), num(*steps as f64));
+            o.insert("merged_e".into(), Json::Bool(*merged_e));
+            o.insert("merged_c".into(), Json::Bool(*merged_c));
+            "stage_done"
+        }
+        EventBody::Cut { req, start_ms, prepare_ms, steps_done } => {
+            o.insert("req".into(), num(*req as f64));
+            o.insert("start_ms".into(), num(*start_ms));
+            o.insert("prepare_ms".into(), num(*prepare_ms));
+            o.insert("steps_done".into(), num(*steps_done as f64));
+            "cut"
+        }
+        EventBody::Kill { req, stage, start_ms, prepare_ms } => {
+            o.insert("req".into(), num(*req as f64));
+            o.insert("stage".into(), Json::Str(stage_name(*stage).into()));
+            o.insert("start_ms".into(), num(*start_ms));
+            o.insert("prepare_ms".into(), num(*prepare_ms));
+            "kill"
+        }
+        EventBody::Done { req, vr_type } => {
+            o.insert("req".into(), num(*req as f64));
+            o.insert("vr_type".into(), num(*vr_type as f64));
+            "done"
+        }
+        EventBody::Oom { req } => {
+            o.insert("req".into(), num(*req as f64));
+            "oom"
+        }
+        EventBody::Drop { req, dispatched } => {
+            o.insert("req".into(), num(*req as f64));
+            o.insert("dispatched".into(), Json::Bool(*dispatched));
+            "drop"
+        }
+        EventBody::Decision { candidates, dispatched, warm_hits } => {
+            o.insert("candidates".into(), num(*candidates as f64));
+            o.insert("dispatched".into(), num(*dispatched as f64));
+            o.insert("warm_hits".into(), num(*warm_hits as f64));
+            "decision"
+        }
+        EventBody::Repartition { alloc, fault } => {
+            o.insert(
+                "alloc".into(),
+                Json::Arr(alloc.iter().map(|&n| num(n as f64)).collect()),
+            );
+            o.insert("fault".into(), Json::Bool(*fault));
+            "repartition"
+        }
+        EventBody::Swap { alloc, blackout_ms } => {
+            o.insert(
+                "alloc".into(),
+                Json::Arr(alloc.iter().map(|&n| num(n as f64)).collect()),
+            );
+            o.insert("blackout_ms".into(), num(*blackout_ms));
+            "swap"
+        }
+        EventBody::PlacementSwitch => "placement_switch",
+        EventBody::ChurnDetect { node } => {
+            o.insert("node".into(), num(*node as f64));
+            "churn_detect"
+        }
+        EventBody::NodeLoss { node } => {
+            o.insert("node".into(), num(*node as f64));
+            "node_loss"
+        }
+        EventBody::NodeReturn { node } => {
+            o.insert("node".into(), num(*node as f64));
+            "node_return"
+        }
+        EventBody::Recovery { policy } => {
+            o.insert("policy".into(), Json::Str((*policy).into()));
+            "recovery"
+        }
+        EventBody::ThresholdMove { from, to } => {
+            o.insert("from".into(), num(*from));
+            o.insert("to".into(), num(*to));
+            "threshold_move"
+        }
+        EventBody::Escalate { req, difficulty } => {
+            o.insert("req".into(), num(*req as f64));
+            o.insert("difficulty".into(), num(*difficulty));
+            "escalate"
+        }
+    };
+    o.insert("kind".into(), Json::Str(kind.into()));
+    Json::Obj(o)
+}
+
+/// Structured JSONL: one compact, key-sorted object per line. Byte-stable
+/// for identical event streams.
+pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&event_json(ev).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Chrome trace-event pid for a lane: lanes map to processes 1.., the
+/// control plane to process 0.
+fn pid_of(lane: u32) -> f64 {
+    if lane == CONTROL_LANE {
+        0.0
+    } else {
+        (lane + 1) as f64
+    }
+}
+
+/// Thread id for a request's track (escalation tag folded into low bits so
+/// ids stay inside the exactly-representable f64 integer range).
+fn tid_of(req: u64) -> f64 {
+    ((req & ((1u64 << 40) - 1)) | ((req >> 63) << 40)) as f64
+}
+
+fn chrome_event(
+    name: &str,
+    ph: &str,
+    ts_ms: f64,
+    lane: u32,
+    tid: f64,
+    extra: &[(&str, Json)],
+) -> Json {
+    let mut o: BTreeMap<String, Json> = BTreeMap::new();
+    o.insert("name".into(), Json::Str(name.into()));
+    o.insert("ph".into(), Json::Str(ph.into()));
+    o.insert("ts".into(), num(ts_ms * 1000.0)); // trace-event ts is in µs
+    o.insert("pid".into(), num(pid_of(lane)));
+    o.insert("tid".into(), num(tid));
+    for (k, v) in extra {
+        o.insert((*k).into(), v.clone());
+    }
+    Json::Obj(o)
+}
+
+fn args(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(pairs.iter().map(|(k, v)| ((*k).to_string(), v.clone())).collect())
+}
+
+/// Chrome trace-event JSON (`{"traceEvents": [...]}`): stage executions as
+/// complete (`ph:"X"`) slices on a per-request track inside a per-lane
+/// process, everything else as instant (`ph:"i"`) markers. Loadable in
+/// Perfetto or `chrome://tracing`.
+pub fn to_chrome_trace(events: &[TraceEvent]) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+    let mut lanes_seen: std::collections::BTreeSet<u32> = Default::default();
+    for ev in events {
+        lanes_seen.insert(ev.lane);
+        match &ev.body {
+            EventBody::StageDone { req, stage, start_ms, prepare_ms, degree, node, steps, .. } => {
+                let dur = (ev.t_ms - start_ms).max(0.0);
+                out.push(chrome_event(
+                    stage_name(*stage),
+                    "X",
+                    *start_ms,
+                    ev.lane,
+                    tid_of(*req),
+                    &[
+                        ("dur", num(dur * 1000.0)),
+                        (
+                            "args",
+                            args(&[
+                                ("prepare_ms", num(*prepare_ms)),
+                                ("degree", num(*degree as f64)),
+                                ("node", num(*node as f64)),
+                                ("steps", num(*steps as f64)),
+                            ]),
+                        ),
+                    ],
+                ));
+            }
+            EventBody::Cut { req, start_ms, prepare_ms, steps_done } => {
+                let dur = (ev.t_ms - start_ms).max(0.0);
+                out.push(chrome_event(
+                    "diffuse (cut)",
+                    "X",
+                    *start_ms,
+                    ev.lane,
+                    tid_of(*req),
+                    &[
+                        ("dur", num(dur * 1000.0)),
+                        (
+                            "args",
+                            args(&[
+                                ("prepare_ms", num(*prepare_ms)),
+                                ("steps_done", num(*steps_done as f64)),
+                            ]),
+                        ),
+                    ],
+                ));
+            }
+            EventBody::Kill { req, stage, start_ms, prepare_ms } => {
+                let dur = (ev.t_ms - start_ms).max(0.0);
+                out.push(chrome_event(
+                    &format!("{} (killed)", stage_name(*stage)),
+                    "X",
+                    *start_ms,
+                    ev.lane,
+                    tid_of(*req),
+                    &[
+                        ("dur", num(dur * 1000.0)),
+                        ("args", args(&[("prepare_ms", num(*prepare_ms))])),
+                    ],
+                ));
+            }
+            body => {
+                // Everything else is an instant marker; request-span
+                // instants land on the request's track, decisions on the
+                // lane's (or control process') track 0.
+                let json = event_json(ev);
+                let kind = json.get("kind").and_then(|j| j.as_str()).unwrap_or("event");
+                let tid = body.req().map(tid_of).unwrap_or(0.0);
+                out.push(chrome_event(
+                    kind,
+                    "i",
+                    ev.t_ms,
+                    ev.lane,
+                    tid,
+                    &[("s", Json::Str("t".into())), ("args", json.clone())],
+                ));
+            }
+        }
+    }
+    // Name the processes so Perfetto shows lanes instead of bare pids.
+    for lane in lanes_seen {
+        let name =
+            if lane == CONTROL_LANE { "control".to_string() } else { format!("lane {lane}") };
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("name".into(), Json::Str("process_name".into()));
+        o.insert("ph".into(), Json::Str("M".into()));
+        o.insert("pid".into(), num(pid_of(lane)));
+        o.insert("tid".into(), num(0.0));
+        o.insert("ts".into(), num(0.0));
+        o.insert("args".into(), args(&[("name", Json::Str(name))]));
+        out.push(Json::Obj(o));
+    }
+    let mut top: BTreeMap<String, Json> = BTreeMap::new();
+    top.insert("traceEvents".into(), Json::Arr(out));
+    Json::Obj(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{EventBody, TraceEvent};
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent { t_ms: 0.0, lane: 0, body: EventBody::Arrive { req: 1, shape_idx: 2 } },
+            TraceEvent {
+                t_ms: 10.0,
+                lane: 0,
+                body: EventBody::Dispatch {
+                    req: 1,
+                    shape_idx: 2,
+                    vr_type: 1,
+                    degree: 2,
+                    profit: 3.5,
+                },
+            },
+            TraceEvent {
+                t_ms: 110.0,
+                lane: 0,
+                body: EventBody::StageDone {
+                    req: 1,
+                    stage: Stage::Diffuse,
+                    start_ms: 10.0,
+                    prepare_ms: 4.0,
+                    degree: 2,
+                    node: 0,
+                    steps: 28,
+                    merged_e: true,
+                    merged_c: false,
+                },
+            },
+            TraceEvent {
+                t_ms: 200.0,
+                lane: 1,
+                body: EventBody::Cut { req: 7, start_ms: 150.0, prepare_ms: 2.0, steps_done: 5 },
+            },
+            TraceEvent {
+                t_ms: 250.0,
+                lane: CONTROL_LANE,
+                body: EventBody::Repartition { alloc: vec![8, 8], fault: false },
+            },
+            TraceEvent { t_ms: 300.0, lane: 0, body: EventBody::Done { req: 1, vr_type: 1 } },
+        ]
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_are_stable() {
+        let evs = sample_events();
+        let a = to_jsonl(&evs);
+        let b = to_jsonl(&evs);
+        assert_eq!(a, b, "same events must serialise byte-identically");
+        for line in a.lines() {
+            let v = Json::parse(line).expect("each JSONL line must parse");
+            assert!(v.get("kind").and_then(|j| j.as_str()).is_some());
+            assert!(v.get("t_ms").and_then(|j| j.as_f64()).is_some());
+            assert!(v.get("lane").and_then(|j| j.as_f64()).is_some());
+        }
+        assert_eq!(a.lines().count(), evs.len());
+    }
+
+    #[test]
+    fn chrome_trace_is_schema_valid() {
+        // The trace-event schema requirements Perfetto's importer enforces:
+        // a traceEvents array whose entries carry name/ph/pid/tid/ts, with
+        // a non-negative dur on complete ("X") slices.
+        let text = to_chrome_trace(&sample_events()).to_string();
+        let v = Json::parse(&text).expect("chrome trace must be valid JSON");
+        let evs = v.get("traceEvents").and_then(|j| j.as_arr()).expect("traceEvents array");
+        assert!(!evs.is_empty());
+        let mut slices = 0;
+        for e in evs {
+            for key in ["name", "ph"] {
+                assert!(e.get(key).and_then(|j| j.as_str()).is_some(), "missing {key}: {e:?}");
+            }
+            for key in ["pid", "tid", "ts"] {
+                assert!(e.get(key).and_then(|j| j.as_f64()).is_some(), "missing {key}: {e:?}");
+            }
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            assert!(matches!(ph, "X" | "i" | "M"), "unexpected phase {ph}");
+            if ph == "X" {
+                slices += 1;
+                let dur = e.get("dur").and_then(|j| j.as_f64()).expect("X slice needs dur");
+                assert!(dur >= 0.0);
+            }
+            if ph == "i" {
+                assert_eq!(e.get("s").and_then(|j| j.as_str()), Some("t"));
+            }
+        }
+        assert_eq!(slices, 2, "one StageDone + one Cut slice expected");
+        // Process-name metadata present for every pid used.
+        assert!(evs.iter().any(|e| {
+            e.get("ph").and_then(|j| j.as_str()) == Some("M")
+                && e.get("pid").and_then(|j| j.as_f64()) == Some(0.0)
+        }));
+    }
+
+    #[test]
+    fn escalated_ids_fold_into_representable_tids() {
+        let esc = 5u64 | (1 << 63);
+        assert_eq!(tid_of(5), 5.0);
+        assert_eq!(tid_of(esc), (5u64 | (1 << 40)) as f64);
+        assert!(tid_of(esc) < 2f64.powi(53), "tid must be exactly representable");
+    }
+}

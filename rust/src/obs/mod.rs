@@ -1,0 +1,356 @@
+//! Observability: stage-level request tracing and the control-plane
+//! decision log (ISSUE 6 / DESIGN.md §Observability).
+//!
+//! The paper's whole argument is stage-level — resource needs diverge
+//! across Encode/Diffuse/Decode and across requests — yet aggregates like
+//! [`crate::metrics::Metrics`] can't show *where* a request's latency went
+//! or *why* the control plane chose a placement, degree, escalation, or
+//! preempt cut. This module records both:
+//!
+//! * **Request spans** — every lifecycle edge of a request (arrival,
+//!   dispatch, per-stage completion with start/prepare timestamps, preempt
+//!   cuts, fault kills, resume, completion, OOM, horizon drop) annotated
+//!   with lane, node, VR type and dispatch degree. The
+//!   [`report::BreakdownReport`] reconstructs queue / transfer / per-stage
+//!   exec / handoff / blackout components from these edges, tiling each
+//!   served request's `[arrival, finish]` interval exactly (telescoping by
+//!   construction, so component sums equal end-to-end latency to float
+//!   associativity).
+//! * **Control-plane decisions** — dispatch-solve outcomes, arbiter
+//!   repartitions, lane swaps, placement switches, churn
+//!   detections/losses/returns, recovery starts, cascade threshold moves
+//!   and escalations.
+//!
+//! Design constraints (ISSUE 6 acceptance criteria):
+//!
+//! * **Deterministic** — events carry only simulation-time quantities
+//!   (never wall-clock values like `SolveStats::solve_ms` or B&B node
+//!   counts, which vary with the solver's time budget), and every emission
+//!   point sits on the deterministic event-loop path, so the same seed
+//!   yields a byte-identical JSONL trace.
+//! * **Near-zero cost when off** — the event constructor is a closure that
+//!   is *never invoked* when the sink is absent: `TraceConfig::Off` costs
+//!   one `Option` check per call site and performs no allocation.
+//! * **Bounded** — the default [`RingSink`] drops the oldest events past
+//!   its capacity and counts what it dropped (`dropped`), so tracing a
+//!   long run cannot exhaust memory.
+//!
+//! Instrumentation lives at the shared choke points —
+//! [`crate::lane::LaneCore`] (admit/dispatch/stage-done/complete/oom/
+//! finalize) and the co-serving executor (cuts, kills, resumes, arbiter
+//! moves, churn) — so sim, coserve, cascade, migrate and faults runs are
+//! all covered by the same hooks.
+
+pub mod export;
+pub mod report;
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::config::Stage;
+use crate::request::RequestId;
+
+/// Lane stamp used for cluster-level (arbiter/churn) events that belong to
+/// no single lane.
+pub const CONTROL_LANE: u32 = u32::MAX;
+
+/// Cascade escalation ids carry a tag bit (`cascade::ESC_BIT`); sampling
+/// masks it so a request and its escalation fall in the same sample.
+const SAMPLE_ID_MASK: u64 = !(1u64 << 63);
+
+/// Whether and how to trace a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceConfig {
+    /// No sink: every emission short-circuits before building its event.
+    Off,
+    /// Ring-buffered recording.
+    On {
+        /// Maximum retained events (oldest dropped beyond this).
+        capacity: usize,
+        /// Record request-span events only for ids divisible by this
+        /// (1 = every request). Decision events are always recorded.
+        sample_every: u64,
+    },
+}
+
+impl TraceConfig {
+    /// Everything, with a capacity comfortably above any test/example run.
+    pub fn full() -> TraceConfig {
+        TraceConfig::On { capacity: 1 << 22, sample_every: 1 }
+    }
+}
+
+/// One trace record: when, which lane, what happened.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub t_ms: f64,
+    /// Emitting lane (coserve pipeline index; 0 in single-pipeline sim;
+    /// [`CONTROL_LANE`] for cluster-level events).
+    pub lane: u32,
+    pub body: EventBody,
+}
+
+/// What happened. Request-span bodies carry a `req`; decision bodies
+/// describe control-plane moves.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventBody {
+    /// Request entered a lane's pending queue (re-emitted when a migrated
+    /// or restarted request is re-admitted; span reconstruction keys on
+    /// the first).
+    Arrive { req: RequestId, shape_idx: usize },
+    /// Request left pending with a plan chain: the chosen config.
+    Dispatch { req: RequestId, shape_idx: usize, vr_type: usize, degree: usize, profit: f64 },
+    /// A migrated request's checkpoint was consumed at re-dispatch.
+    Resume { req: RequestId, restore_ms: f64, skip_encode: bool, diffuse_frac: f64 },
+    /// One stage plan ran to completion. `t_ms` is the completion time;
+    /// `start_ms + prepare_ms .. t_ms` is the execution region.
+    StageDone {
+        req: RequestId,
+        stage: Stage,
+        start_ms: f64,
+        prepare_ms: f64,
+        degree: usize,
+        /// Node hosting the plan's first GPU.
+        node: usize,
+        /// Denoising steps this plan covered (Diffuse plans only; 0 else).
+        steps: u32,
+        /// Merged Encode prefix / Decode suffix ran inside this plan.
+        merged_e: bool,
+        merged_c: bool,
+    },
+    /// A running Diffuse plan was stopped at a step boundary (preemptive
+    /// resize). The executed region `start_ms .. t_ms` is preserved work.
+    Cut { req: RequestId, start_ms: f64, prepare_ms: f64, steps_done: u32 },
+    /// A running plan died with its node (fault) or was killed by a cold
+    /// restart. The executed region `start_ms .. t_ms` is lost work.
+    Kill { req: RequestId, stage: Stage, start_ms: f64, prepare_ms: f64 },
+    /// Request completed its full chain.
+    Done { req: RequestId, vr_type: usize },
+    /// Request aborted on a failed activation reservation.
+    Oom { req: RequestId },
+    /// Request was still queued/running when the horizon closed.
+    Drop { req: RequestId, dispatched: bool },
+    /// One dispatcher solve (wall-clock solve time and B&B node counts are
+    /// deliberately excluded: they are not seed-deterministic).
+    Decision { candidates: usize, dispatched: usize, warm_hits: usize },
+    /// Cluster arbiter chose a new per-lane node partition.
+    Repartition { alloc: Vec<usize>, fault: bool },
+    /// A lane pair actually exchanged GPUs (the repartition landed).
+    Swap { alloc: Vec<usize>, blackout_ms: f64 },
+    /// Intra-lane placement switch (Adjust-on-Dispatch).
+    PlacementSwitch,
+    /// Heartbeat monitor declared a node dead.
+    ChurnDetect { node: usize },
+    /// A node was lost (churn trace NodeDown / reclaim deadline).
+    NodeLoss { node: usize },
+    /// A lost node came back.
+    NodeReturn { node: usize },
+    /// Fault recovery began under the named policy.
+    Recovery { policy: &'static str },
+    /// Cascade threshold controller moved the escalation threshold.
+    ThresholdMove { from: f64, to: f64 },
+    /// Cascade router escalated a cheap-lane completion to the heavy lane.
+    Escalate { req: RequestId, difficulty: f64 },
+}
+
+impl EventBody {
+    /// The request id of a span event (None for decision events). Used by
+    /// sampling and by the span reconstruction in [`report`].
+    pub fn req(&self) -> Option<RequestId> {
+        match self {
+            EventBody::Arrive { req, .. }
+            | EventBody::Dispatch { req, .. }
+            | EventBody::Resume { req, .. }
+            | EventBody::StageDone { req, .. }
+            | EventBody::Cut { req, .. }
+            | EventBody::Kill { req, .. }
+            | EventBody::Done { req, .. }
+            | EventBody::Oom { req }
+            | EventBody::Drop { req, .. }
+            | EventBody::Escalate { req, .. } => Some(*req),
+            _ => None,
+        }
+    }
+}
+
+/// Consumer of trace events. The default is [`RingSink`]; tests can
+/// substitute counters or filters.
+pub trait TraceSink {
+    fn record(&mut self, ev: TraceEvent);
+}
+
+/// Bounded in-memory sink: keeps the newest `capacity` events, counts the
+/// rest.
+pub struct RingSink {
+    capacity: usize,
+    pub events: VecDeque<TraceEvent>,
+    pub dropped: u64,
+}
+
+impl RingSink {
+    pub fn new(capacity: usize) -> Self {
+        RingSink { capacity: capacity.max(1), events: VecDeque::new(), dropped: 0 }
+    }
+
+    /// The retained events in arrival order.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.events.iter().cloned().collect()
+    }
+}
+
+impl TraceSink for RingSink {
+    fn record(&mut self, ev: TraceEvent) {
+        if self.events.len() == self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+}
+
+/// Cheap, cloneable emission handle. Every instrumented component holds
+/// one; clones share the sink. `Tracer::off()` (the default everywhere) is
+/// a `None` sink: emission closures are never invoked, so the off path
+/// allocates nothing.
+#[derive(Clone)]
+pub struct Tracer {
+    lane: u32,
+    sample_every: u64,
+    sink: Option<Rc<RefCell<dyn TraceSink>>>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::off()
+    }
+}
+
+impl Tracer {
+    /// Disabled tracer: all emissions short-circuit.
+    pub fn off() -> Tracer {
+        Tracer { lane: CONTROL_LANE, sample_every: 1, sink: None }
+    }
+
+    /// Build a tracer per `cfg`, returning the ring sink handle (None when
+    /// off) for later export.
+    pub fn ring(cfg: &TraceConfig) -> (Tracer, Option<Rc<RefCell<RingSink>>>) {
+        match *cfg {
+            TraceConfig::Off => (Tracer::off(), None),
+            TraceConfig::On { capacity, sample_every } => {
+                let sink = Rc::new(RefCell::new(RingSink::new(capacity)));
+                let dyn_sink: Rc<RefCell<dyn TraceSink>> = sink.clone();
+                (
+                    Tracer {
+                        lane: CONTROL_LANE,
+                        sample_every: sample_every.max(1),
+                        sink: Some(dyn_sink),
+                    },
+                    Some(sink),
+                )
+            }
+        }
+    }
+
+    /// Wrap an arbitrary sink (tests).
+    pub fn with_sink(sink: Rc<RefCell<dyn TraceSink>>) -> Tracer {
+        Tracer { lane: CONTROL_LANE, sample_every: 1, sink: Some(sink) }
+    }
+
+    /// A clone stamped with a lane id.
+    pub fn for_lane(&self, lane: u32) -> Tracer {
+        Tracer { lane, sample_every: self.sample_every, sink: self.sink.clone() }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Record a decision event. `body` runs only when a sink is attached.
+    #[inline]
+    pub fn emit<F: FnOnce() -> EventBody>(&self, t_ms: f64, body: F) {
+        if let Some(sink) = &self.sink {
+            sink.borrow_mut().record(TraceEvent { t_ms, lane: self.lane, body: body() });
+        }
+    }
+
+    /// Record a request-span event, subject to sampling: when
+    /// `sample_every > 1`, only ids divisible by it (escalation tag masked)
+    /// are kept, so a request's whole span is kept or dropped atomically.
+    #[inline]
+    pub fn emit_req<F: FnOnce() -> EventBody>(&self, t_ms: f64, req: RequestId, body: F) {
+        if let Some(sink) = &self.sink {
+            if self.sample_every > 1 && (req & SAMPLE_ID_MASK) % self.sample_every != 0 {
+                return;
+            }
+            sink.borrow_mut().record(TraceEvent { t_ms, lane: self.lane, body: body() });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arrive(req: RequestId) -> EventBody {
+        EventBody::Arrive { req, shape_idx: 0 }
+    }
+
+    #[test]
+    fn off_tracer_never_invokes_the_event_closure() {
+        let t = Tracer::off();
+        let mut called = false;
+        t.emit(0.0, || {
+            called = true;
+            arrive(1)
+        });
+        t.emit_req(0.0, 1, || {
+            called = true;
+            arrive(1)
+        });
+        assert!(!called, "TraceConfig::Off must short-circuit before event construction");
+        assert!(!t.enabled());
+    }
+
+    #[test]
+    fn ring_sink_drops_oldest_and_counts() {
+        let (t, sink) = Tracer::ring(&TraceConfig::On { capacity: 2, sample_every: 1 });
+        let sink = sink.unwrap();
+        for i in 0..5u64 {
+            t.emit_req(i as f64, i, || arrive(i));
+        }
+        let s = sink.borrow();
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(s.dropped, 3);
+        assert_eq!(s.events[0].body.req(), Some(3));
+        assert_eq!(s.events[1].body.req(), Some(4));
+    }
+
+    #[test]
+    fn sampling_keeps_divisible_ids_and_all_decisions() {
+        let (t, sink) = Tracer::ring(&TraceConfig::On { capacity: 1024, sample_every: 4 });
+        let sink = sink.unwrap();
+        for i in 0..16u64 {
+            t.emit_req(0.0, i, || arrive(i));
+        }
+        // The escalation tag bit must not change the sampling decision.
+        t.emit_req(0.0, 4 | (1 << 63), || arrive(4 | (1 << 63)));
+        t.emit(0.0, || EventBody::PlacementSwitch);
+        let s = sink.borrow();
+        let reqs: Vec<_> = s.events.iter().filter_map(|e| e.body.req()).collect();
+        assert_eq!(reqs, vec![0, 4, 8, 12, 4 | (1 << 63)]);
+        assert!(s.events.iter().any(|e| e.body == EventBody::PlacementSwitch));
+    }
+
+    #[test]
+    fn for_lane_stamps_events() {
+        let (t, sink) = Tracer::ring(&TraceConfig::full());
+        let sink = sink.unwrap();
+        t.for_lane(3).emit_req(1.0, 9, || arrive(9));
+        t.emit(2.0, || EventBody::PlacementSwitch);
+        let s = sink.borrow();
+        assert_eq!(s.events[0].lane, 3);
+        assert_eq!(s.events[1].lane, CONTROL_LANE);
+    }
+}

@@ -1,0 +1,443 @@
+//! Latency-breakdown report: decompose each served request's end-to-end
+//! latency into queue / per-stage execution / handoff transfer / blackout
+//! components from its trace span, then aggregate per lane and per VR
+//! type — the paper's stage-discrepancy analysis, reproducible from any
+//! traced run.
+//!
+//! Reconstruction is *telescoping by construction*: the request's
+//! execution segments ([`EventBody::StageDone`] / [`EventBody::Cut`] /
+//! [`EventBody::Kill`] intervals) are walked in start order with a cursor
+//! beginning at arrival; every inter-segment gap is attributed (first gap
+//! → queue, gap after a cut/kill → blackout, otherwise handoff) and every
+//! segment splits into prepare (transfer) + execution. Component sums
+//! therefore equal `finish - arrival` exactly up to float associativity —
+//! the conservation property the acceptance tests assert across sim,
+//! coserve, migrate and faults runs.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::config::Stage;
+use crate::request::RequestId;
+use crate::util::json::Json;
+
+use super::{EventBody, TraceEvent};
+
+/// Where a request's latency went (all ms).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Components {
+    /// Arrival → first execution segment (includes re-queues after a
+    /// withdraw that executed nothing).
+    pub queue_ms: f64,
+    /// Stage Preparation inside segments: reinstance, replica loads,
+    /// input/handoff fetch.
+    pub transfer_ms: f64,
+    /// Pure execution per stage (E, D, C); re-executed work after a fault
+    /// accumulates here a second time.
+    pub exec_ms: [f64; 3],
+    /// Inter-segment gaps on the normal path (predecessor→successor
+    /// readiness, dispatch-tick quantisation).
+    pub handoff_ms: f64,
+    /// Inter-segment gaps following a preempt cut or fault kill:
+    /// checkpoint/restore and rebuild downtime seen by this request.
+    pub blackout_ms: f64,
+}
+
+impl Components {
+    pub fn sum_ms(&self) -> f64 {
+        self.queue_ms
+            + self.transfer_ms
+            + self.exec_ms.iter().sum::<f64>()
+            + self.handoff_ms
+            + self.blackout_ms
+    }
+
+    fn accumulate(&mut self, other: &Components) {
+        self.queue_ms += other.queue_ms;
+        self.transfer_ms += other.transfer_ms;
+        for i in 0..3 {
+            self.exec_ms[i] += other.exec_ms[i];
+        }
+        self.handoff_ms += other.handoff_ms;
+        self.blackout_ms += other.blackout_ms;
+    }
+
+    fn scale(&self, f: f64) -> Components {
+        Components {
+            queue_ms: self.queue_ms * f,
+            transfer_ms: self.transfer_ms * f,
+            exec_ms: [self.exec_ms[0] * f, self.exec_ms[1] * f, self.exec_ms[2] * f],
+            handoff_ms: self.handoff_ms * f,
+            blackout_ms: self.blackout_ms * f,
+        }
+    }
+}
+
+/// One served request's reconstructed span.
+#[derive(Clone, Debug)]
+pub struct RequestBreakdown {
+    pub req: RequestId,
+    pub lane: u32,
+    pub vr_type: usize,
+    /// Cascade heavy-lane re-run (id carries the escalation tag bit).
+    pub escalated: bool,
+    pub arrival_ms: f64,
+    pub finish_ms: f64,
+    pub comps: Components,
+}
+
+impl RequestBreakdown {
+    pub fn latency_ms(&self) -> f64 {
+        self.finish_ms - self.arrival_ms
+    }
+
+    /// Conservation residual: how far the component sum is from the
+    /// end-to-end latency (should be float noise).
+    pub fn residual_ms(&self) -> f64 {
+        (self.comps.sum_ms() - self.latency_ms()).abs()
+    }
+}
+
+fn stage_slot(stage: Stage) -> usize {
+    match stage {
+        Stage::Encode => 0,
+        Stage::Diffuse => 1,
+        Stage::Decode => 2,
+    }
+}
+
+struct Seg {
+    start_ms: f64,
+    end_ms: f64,
+    prepare_ms: f64,
+    slot: usize,
+    /// Segment ended in a cut/kill: the following gap is blackout.
+    interrupted: bool,
+}
+
+#[derive(Default)]
+struct Acc {
+    arrival_ms: Option<f64>,
+    segs: Vec<Seg>,
+    done: Option<(f64, usize)>,
+}
+
+/// Reconstruct per-request breakdowns from a trace. Only *served* requests
+/// (those with a [`EventBody::Done`] event) appear; OOM-rejected and
+/// horizon-dropped requests have no defined end-to-end latency.
+pub fn build_breakdowns(events: &[TraceEvent]) -> Vec<RequestBreakdown> {
+    let mut by_req: BTreeMap<(u32, RequestId), Acc> = BTreeMap::new();
+    for ev in events {
+        let Some(req) = ev.body.req() else { continue };
+        let acc = by_req.entry((ev.lane, req)).or_default();
+        match &ev.body {
+            // Migrated/restarted requests are re-admitted with their
+            // original arrival stamp; the first Arrive wins either way.
+            EventBody::Arrive { .. } => {
+                if acc.arrival_ms.is_none() {
+                    acc.arrival_ms = Some(ev.t_ms);
+                }
+            }
+            EventBody::StageDone { stage, start_ms, prepare_ms, .. } => acc.segs.push(Seg {
+                start_ms: *start_ms,
+                end_ms: ev.t_ms,
+                prepare_ms: *prepare_ms,
+                slot: stage_slot(*stage),
+                interrupted: false,
+            }),
+            EventBody::Cut { start_ms, prepare_ms, .. } => acc.segs.push(Seg {
+                start_ms: *start_ms,
+                end_ms: ev.t_ms,
+                prepare_ms: *prepare_ms,
+                slot: stage_slot(Stage::Diffuse),
+                interrupted: true,
+            }),
+            EventBody::Kill { stage, start_ms, prepare_ms, .. } => acc.segs.push(Seg {
+                start_ms: *start_ms,
+                end_ms: ev.t_ms,
+                prepare_ms: *prepare_ms,
+                slot: stage_slot(*stage),
+                interrupted: true,
+            }),
+            EventBody::Done { vr_type, .. } => acc.done = Some((ev.t_ms, *vr_type)),
+            _ => {}
+        }
+    }
+
+    let mut out = Vec::new();
+    for ((lane, req), mut acc) in by_req {
+        let Some((finish_ms, vr_type)) = acc.done else { continue };
+        let Some(arrival_ms) = acc.arrival_ms else { continue };
+        acc.segs.sort_by(|a, b| {
+            a.start_ms.partial_cmp(&b.start_ms).unwrap().then(
+                a.end_ms.partial_cmp(&b.end_ms).unwrap(),
+            )
+        });
+        let mut comps = Components::default();
+        let mut cursor = arrival_ms;
+        let mut prev_interrupted = false;
+        let mut first_gap = true;
+        for seg in &acc.segs {
+            // Clamp against the cursor so a (never expected) overlap still
+            // tiles the interval instead of double-counting.
+            let s = seg.start_ms.max(cursor);
+            let e = seg.end_ms.max(s);
+            let gap = s - cursor;
+            if first_gap {
+                comps.queue_ms += gap;
+                first_gap = false;
+            } else if prev_interrupted {
+                comps.blackout_ms += gap;
+            } else {
+                comps.handoff_ms += gap;
+            }
+            let len = e - s;
+            let prep = seg.prepare_ms.clamp(0.0, len);
+            comps.transfer_ms += prep;
+            comps.exec_ms[seg.slot] += len - prep;
+            cursor = e;
+            prev_interrupted = seg.interrupted;
+        }
+        // Tail between the last segment's end and the recorded completion:
+        // zero in practice (completion is stamped at the final stage's
+        // event time) but folded in so the sum telescopes regardless.
+        let tail = finish_ms - cursor;
+        if first_gap {
+            comps.queue_ms += tail;
+        } else {
+            comps.handoff_ms += tail;
+        }
+        out.push(RequestBreakdown {
+            req,
+            lane,
+            vr_type,
+            escalated: req & (1 << 63) != 0,
+            arrival_ms,
+            finish_ms,
+            comps,
+        });
+    }
+    out
+}
+
+/// One aggregated row (a lane, or a VR type).
+#[derive(Clone, Debug)]
+pub struct BreakdownRow {
+    pub group: String,
+    pub n: usize,
+    pub mean_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub mean: Components,
+}
+
+/// Aggregated latency breakdown over one trace.
+#[derive(Clone, Debug, Default)]
+pub struct BreakdownReport {
+    pub requests: Vec<RequestBreakdown>,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+fn aggregate(group: String, reqs: &[&RequestBreakdown]) -> BreakdownRow {
+    let n = reqs.len();
+    let mut mean = Components::default();
+    let mut lats: Vec<f64> = reqs.iter().map(|r| r.latency_ms()).collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for r in reqs {
+        mean.accumulate(&r.comps);
+    }
+    let inv = if n > 0 { 1.0 / n as f64 } else { 0.0 };
+    BreakdownRow {
+        group,
+        n,
+        mean_latency_ms: lats.iter().sum::<f64>() * inv,
+        p95_latency_ms: percentile(&lats, 0.95),
+        mean: mean.scale(inv),
+    }
+}
+
+impl BreakdownReport {
+    pub fn from_events(events: &[TraceEvent]) -> Self {
+        BreakdownReport { requests: build_breakdowns(events) }
+    }
+
+    /// Largest conservation residual across requests (test hook: must be
+    /// float noise).
+    pub fn max_residual_ms(&self) -> f64 {
+        self.requests.iter().map(|r| r.residual_ms()).fold(0.0, f64::max)
+    }
+
+    /// Aggregated rows: one per lane, then one per VR type.
+    pub fn rows(&self) -> Vec<BreakdownRow> {
+        let mut rows = Vec::new();
+        let lanes: std::collections::BTreeSet<u32> =
+            self.requests.iter().map(|r| r.lane).collect();
+        for lane in lanes {
+            let group: Vec<&RequestBreakdown> =
+                self.requests.iter().filter(|r| r.lane == lane).collect();
+            rows.push(aggregate(format!("lane {lane}"), &group));
+        }
+        let vrs: std::collections::BTreeSet<usize> =
+            self.requests.iter().map(|r| r.vr_type).collect();
+        for vr in vrs {
+            let group: Vec<&RequestBreakdown> =
+                self.requests.iter().filter(|r| r.vr_type == vr).collect();
+            rows.push(aggregate(format!("vr V{vr}"), &group));
+        }
+        rows
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows()
+            .into_iter()
+            .map(|r| {
+                let mut o: BTreeMap<String, Json> = BTreeMap::new();
+                o.insert("group".into(), Json::Str(r.group));
+                o.insert("n".into(), Json::Num(r.n as f64));
+                o.insert("mean_latency_ms".into(), Json::Num(r.mean_latency_ms));
+                o.insert("p95_latency_ms".into(), Json::Num(r.p95_latency_ms));
+                o.insert("queue_ms".into(), Json::Num(r.mean.queue_ms));
+                o.insert("transfer_ms".into(), Json::Num(r.mean.transfer_ms));
+                o.insert("encode_ms".into(), Json::Num(r.mean.exec_ms[0]));
+                o.insert("diffuse_ms".into(), Json::Num(r.mean.exec_ms[1]));
+                o.insert("decode_ms".into(), Json::Num(r.mean.exec_ms[2]));
+                o.insert("handoff_ms".into(), Json::Num(r.mean.handoff_ms));
+                o.insert("blackout_ms".into(), Json::Num(r.mean.blackout_ms));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top: BTreeMap<String, Json> = BTreeMap::new();
+        top.insert("served".into(), Json::Num(self.requests.len() as f64));
+        top.insert("rows".into(), Json::Arr(rows));
+        Json::Obj(top)
+    }
+}
+
+impl fmt::Display for BreakdownReport {
+    /// Per-lane / per-VR mean latency decomposition, seconds.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{:<10} {:>6} {:>8} {:>8} | {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} {:>8}",
+            "group", "n", "mean(s)", "p95(s)", "queue", "xfer", "encode", "diffuse", "decode",
+            "handoff", "blackout"
+        )?;
+        for r in self.rows() {
+            writeln!(
+                f,
+                "{:<10} {:>6} {:>8.1} {:>8.1} | {:>7.1} {:>7.1} {:>7.1} {:>7.1} {:>7.1} {:>7.1} {:>8.1}",
+                r.group,
+                r.n,
+                r.mean_latency_ms / 1000.0,
+                r.p95_latency_ms / 1000.0,
+                r.mean.queue_ms / 1000.0,
+                r.mean.transfer_ms / 1000.0,
+                r.mean.exec_ms[0] / 1000.0,
+                r.mean.exec_ms[1] / 1000.0,
+                r.mean.exec_ms[2] / 1000.0,
+                r.mean.handoff_ms / 1000.0,
+                r.mean.blackout_ms / 1000.0,
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t_ms: f64, lane: u32, body: EventBody) -> TraceEvent {
+        TraceEvent { t_ms, lane, body }
+    }
+
+    fn stage_done(t: f64, req: u64, stage: Stage, start: f64, prep: f64) -> TraceEvent {
+        ev(
+            t,
+            0,
+            EventBody::StageDone {
+                req,
+                stage,
+                start_ms: start,
+                prepare_ms: prep,
+                degree: 1,
+                node: 0,
+                steps: 0,
+                merged_e: false,
+                merged_c: false,
+            },
+        )
+    }
+
+    #[test]
+    fn preempted_span_decomposes_and_conserves() {
+        // arrival 0, E [10,20] (prep 2), gap 5 handoff, D cut [25,95]
+        // (prep 1), blackout 105, resumed D [200,260] (prep 3), C [260,280].
+        let events = vec![
+            ev(0.0, 0, EventBody::Arrive { req: 1, shape_idx: 0 }),
+            stage_done(20.0, 1, Stage::Encode, 10.0, 2.0),
+            ev(95.0, 0, EventBody::Cut { req: 1, start_ms: 25.0, prepare_ms: 1.0, steps_done: 5 }),
+            // Second Arrive from re-admission: must not reset the span.
+            ev(95.0, 0, EventBody::Arrive { req: 1, shape_idx: 0 }),
+            stage_done(260.0, 1, Stage::Diffuse, 200.0, 3.0),
+            stage_done(280.0, 1, Stage::Decode, 260.0, 0.0),
+            ev(280.0, 0, EventBody::Done { req: 1, vr_type: 2 }),
+        ];
+        let bds = build_breakdowns(&events);
+        assert_eq!(bds.len(), 1);
+        let b = &bds[0];
+        assert_eq!(b.vr_type, 2);
+        assert!((b.comps.queue_ms - 10.0).abs() < 1e-9);
+        assert!((b.comps.handoff_ms - 5.0).abs() < 1e-9);
+        assert!((b.comps.blackout_ms - 105.0).abs() < 1e-9, "{:?}", b.comps);
+        assert!((b.comps.transfer_ms - 6.0).abs() < 1e-9);
+        assert!((b.comps.exec_ms[0] - 8.0).abs() < 1e-9);
+        assert!((b.comps.exec_ms[1] - (69.0 + 57.0)).abs() < 1e-9);
+        assert!((b.comps.exec_ms[2] - 20.0).abs() < 1e-9);
+        assert!(b.residual_ms() < 1e-9, "conservation: {}", b.residual_ms());
+        assert!((b.latency_ms() - 280.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unserved_requests_are_excluded() {
+        let events = vec![
+            ev(0.0, 0, EventBody::Arrive { req: 1, shape_idx: 0 }),
+            ev(5.0, 0, EventBody::Oom { req: 1 }),
+            ev(0.0, 0, EventBody::Arrive { req: 2, shape_idx: 0 }),
+            ev(9.0, 0, EventBody::Drop { req: 2, dispatched: false }),
+        ];
+        assert!(build_breakdowns(&events).is_empty());
+    }
+
+    #[test]
+    fn rows_group_by_lane_and_vr() {
+        let mut events = Vec::new();
+        for (lane, req, vr) in [(0u32, 1u64, 0usize), (0, 2, 1), (1, 3, 0)] {
+            events.push(ev(0.0, lane, EventBody::Arrive { req, shape_idx: 0 }));
+            let mut sd = stage_done(100.0, req, Stage::Diffuse, 10.0, 2.0);
+            sd.lane = lane;
+            events.push(sd);
+            events.push(ev(100.0, lane, EventBody::Done { req, vr_type: vr }));
+        }
+        let rep = BreakdownReport::from_events(&events);
+        let rows = rep.rows();
+        let names: Vec<&str> = rows.iter().map(|r| r.group.as_str()).collect();
+        assert_eq!(names, vec!["lane 0", "lane 1", "vr V0", "vr V1"]);
+        assert_eq!(rows[0].n, 2);
+        assert_eq!(rows[2].n, 2);
+        assert!((rows[0].mean_latency_ms - 100.0).abs() < 1e-9);
+        assert!(rep.max_residual_ms() < 1e-9);
+        // Display renders one line per row plus the header.
+        assert_eq!(format!("{rep}").lines().count(), 1 + rows.len());
+        // JSON round-trips.
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(j.get("served").and_then(|v| v.as_f64()), Some(3.0));
+    }
+}

@@ -18,6 +18,7 @@ use crate::engine::{Engine, PlanId, StageExec};
 use crate::lane::{EventQueue, LaneCore};
 use crate::metrics::Metrics;
 use crate::monitor::Monitor;
+use crate::obs::{EventBody, Tracer, CONTROL_LANE};
 use crate::perfmodel::PerfModel;
 use crate::profiler::Profile;
 use crate::request::{Completion, Outcome};
@@ -93,6 +94,23 @@ pub fn run_sim(
     trace: &Trace,
     cfg: &SimConfig,
 ) -> Metrics {
+    run_sim_traced(pipeline, profile, consts, cluster, policy, trace, cfg, &Tracer::off())
+}
+
+/// [`run_sim`] with request/decision tracing: the single-pipeline lane is
+/// lane 0, control-plane events (dispatch decisions, placement switches)
+/// go to [`CONTROL_LANE`]. With `Tracer::off()` this is exactly `run_sim`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sim_traced(
+    pipeline: &PipelineSpec,
+    profile: &Profile,
+    consts: &SolverConstants,
+    cluster: &ClusterSpec,
+    policy: &mut dyn ServingPolicy,
+    trace: &Trace,
+    cfg: &SimConfig,
+    tracer: &Tracer,
+) -> Metrics {
     let model = PerfModel::new(cluster.clone());
     let topo = crate::cluster::Topology::new(cluster.clone());
     let g = topo.total_gpus();
@@ -113,6 +131,8 @@ pub fn run_sim(
 
     // `sim` historically stamps OOM records' arrival with the abort time.
     let mut core = LaneCore::new(true);
+    core.tracer = tracer.for_lane(0);
+    let ctl = tracer.for_lane(CONTROL_LANE);
 
     while let Some((now, kind)) = events.pop() {
         if now > horizon {
@@ -150,11 +170,19 @@ pub fn run_sim(
                     policy.dispatch(&mut core.pending, &view)
                 };
                 if let Some(s) = stats {
+                    // Wall-clock solve fields (solve_ms/nodes/optimal) are
+                    // intentionally NOT traced: the trace must be a pure
+                    // function of the seed.
+                    ctl.emit(now, || EventBody::Decision {
+                        candidates: s.candidates,
+                        dispatched: s.dispatched,
+                        warm_hits: s.warm_hits,
+                    });
                     metrics.record_solve(s);
                 }
                 for rp in &plans {
                     let ids = engine.enqueue(rp, profile);
-                    core.track_dispatch(rp, ids, [0.0; 3]);
+                    core.track_dispatch(rp, ids, [0.0; 3], now);
                 }
                 for sp in engine.advance(now, &mut exec, profile) {
                     events.push(sp.finish_ms, EventKind::PlanDone(sp.plan));
@@ -167,6 +195,7 @@ pub fn run_sim(
             EventKind::MonitorTick => {
                 if let Some(new_placement) = policy.maybe_switch(now, &mut monitor, g) {
                     engine.apply_switch(new_placement);
+                    ctl.emit(now, || EventBody::PlacementSwitch);
                     metrics.record_switch(now);
                 }
                 if now + cfg.monitor_ms <= horizon {
@@ -186,6 +215,6 @@ pub fn run_sim(
     }
 
     // Requests that never finished inside the horizon are SLO misses.
-    core.finalize(&mut metrics);
+    core.finalize(horizon, &mut metrics);
     metrics
 }

@@ -257,6 +257,7 @@ pub fn build_request_plans(
         c,
         e_merged,
         c_on_subset,
+        profit: 0.0,
     }
 }
 

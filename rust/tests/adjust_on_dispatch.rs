@@ -46,6 +46,7 @@ fn colocated_plan(req: u64, shape_idx: usize, gpus: Vec<usize>) -> RequestPlans 
         c: StagePlan { req, stage: Stage::Decode, gpus, degree: k },
         e_merged: true,
         c_on_subset: true,
+        profit: 0.0,
     }
 }
 

@@ -1,0 +1,228 @@
+//! Observability integration (ISSUE 6 acceptance): the trace subsystem is
+//! pinned on three contracts, end-to-end over real runs —
+//!
+//! * **Determinism** — the same seed yields a byte-identical JSONL trace
+//!   (events carry only simulation-time quantities), and attaching a
+//!   tracer does not perturb the run it observes;
+//! * **Conservation** — every served request's breakdown components
+//!   (queue / transfer / per-stage exec / handoff / blackout) sum to its
+//!   end-to-end latency within float tolerance, across the single-pipeline
+//!   sim, co-serving, preemptive migration and fault-recovery paths;
+//! * **Exportability** — the Chrome trace-event JSON built from a real
+//!   run's events satisfies the schema Perfetto's importer enforces.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use tridentserve::config::ClusterSpec;
+use tridentserve::coserve::{
+    run_coserve_faulty_traced, run_coserve_traced, ClusterArbiter, CoServeConfig, CoServeReport,
+    FaultPlan, PipelineSetup, RecoveryPolicy, ResizePolicy,
+};
+use tridentserve::faults::ChurnGen;
+use tridentserve::harness::Setup;
+use tridentserve::obs::export::{to_chrome_trace, to_jsonl};
+use tridentserve::obs::report::BreakdownReport;
+use tridentserve::obs::{EventBody, RingSink, TraceConfig, TraceEvent, Tracer};
+use tridentserve::request::Outcome;
+use tridentserve::util::json::Json;
+use tridentserve::workload::{
+    mixed, DifficultyModel, LoadShape, MixedSpec, MixedTrace, WorkloadKind,
+};
+
+const DURATION_MS: f64 = 120_000.0;
+
+/// Conservation tolerance: residuals are pure float-associativity noise
+/// (sub-nanosecond on millisecond-scale sums).
+const RESIDUAL_TOL_MS: f64 = 1e-6;
+
+fn ring() -> (Tracer, Rc<RefCell<RingSink>>) {
+    let (tracer, sink) = Tracer::ring(&TraceConfig::full());
+    (tracer, sink.expect("full config always has a sink"))
+}
+
+fn scenario(cluster: &ClusterSpec, seed: u64) -> (Vec<PipelineSetup>, MixedTrace) {
+    let sd3 = PipelineSetup::new("sd3", cluster);
+    let flux = PipelineSetup::new("flux", cluster);
+    let trace = {
+        let specs = [
+            MixedSpec {
+                pipeline: &sd3.pipeline,
+                profile: &sd3.profile,
+                kind: WorkloadKind::Medium,
+                rate_scale: 0.2,
+                load: LoadShape::Step { at: 0.5, before: 1.4, after: 0.4 },
+                difficulty: DifficultyModel::Uniform,
+            },
+            MixedSpec {
+                pipeline: &flux.pipeline,
+                profile: &flux.profile,
+                kind: WorkloadKind::Medium,
+                rate_scale: 0.2,
+                load: LoadShape::Step { at: 0.5, before: 0.4, after: 1.4 },
+                difficulty: DifficultyModel::Uniform,
+            },
+        ];
+        mixed(&specs, DURATION_MS, seed)
+    };
+    (vec![sd3, flux], trace)
+}
+
+fn arbiter(cluster: &ClusterSpec) -> ClusterArbiter {
+    let mut a = ClusterArbiter::new(cluster.gpus_per_node);
+    a.cooldown_ms = 20_000.0;
+    a.trigger_streak = 1;
+    a
+}
+
+fn completed(report: &CoServeReport) -> usize {
+    report
+        .lanes
+        .iter()
+        .map(|l| l.metrics.completions.iter().filter(|c| c.outcome == Outcome::Completed).count())
+        .sum()
+}
+
+/// The trace's Done events must match the metrics' Completed outcomes
+/// one-for-one, and every reconstructed span must conserve latency.
+fn assert_conserves(events: &[TraceEvent], n_completed: usize, label: &str) {
+    let report = BreakdownReport::from_events(events);
+    assert!(!report.requests.is_empty(), "{label}: no served request reconstructed");
+    assert_eq!(
+        report.requests.len(),
+        n_completed,
+        "{label}: trace spans out of step with metrics completions"
+    );
+    assert!(
+        report.max_residual_ms() < RESIDUAL_TOL_MS,
+        "{label}: breakdown does not conserve latency (max residual {} ms)",
+        report.max_residual_ms()
+    );
+}
+
+/// The schema requirements Perfetto's importer enforces, checked on real
+/// events (the unit test in `obs::export` covers hand-built ones).
+fn assert_chrome_valid(events: &[TraceEvent], label: &str) {
+    let text = to_chrome_trace(events).to_string();
+    let v = Json::parse(&text).unwrap_or_else(|e| panic!("{label}: invalid JSON: {e:?}"));
+    let evs = v.get("traceEvents").and_then(|j| j.as_arr()).expect("traceEvents array");
+    assert!(!evs.is_empty(), "{label}: empty chrome trace");
+    for e in evs {
+        for key in ["name", "ph"] {
+            assert!(e.get(key).and_then(|j| j.as_str()).is_some(), "{label}: missing {key}");
+        }
+        for key in ["pid", "tid", "ts"] {
+            assert!(e.get(key).and_then(|j| j.as_f64()).is_some(), "{label}: missing {key}");
+        }
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        assert!(matches!(ph, "X" | "i" | "M"), "{label}: unexpected phase {ph}");
+        if ph == "X" {
+            let dur = e.get("dur").and_then(|j| j.as_f64()).expect("X slice needs dur");
+            assert!(dur >= 0.0, "{label}: negative slice duration");
+        }
+    }
+    assert!(
+        evs.iter().any(|e| e.get("ph").and_then(|j| j.as_str()) == Some("X")),
+        "{label}: a real run must produce at least one stage slice"
+    );
+}
+
+fn has_kind(events: &[TraceEvent], f: impl Fn(&EventBody) -> bool) -> bool {
+    events.iter().any(|e| f(&e.body))
+}
+
+#[test]
+fn sim_trace_is_deterministic_conserves_and_does_not_perturb() {
+    let setup = Setup::new("sd3", 64);
+    let (t1, s1) = ring();
+    let m1 = setup.run_traced("trident", WorkloadKind::Medium, 60_000.0, 11, &t1);
+    let (t2, s2) = ring();
+    let m2 = setup.run_traced("trident", WorkloadKind::Medium, 60_000.0, 11, &t2);
+
+    let e1 = s1.borrow().snapshot();
+    let e2 = s2.borrow().snapshot();
+    assert!(!e1.is_empty());
+    assert_eq!(s1.borrow().dropped, 0, "full() capacity must hold a short run");
+    let (j1, j2) = (to_jsonl(&e1), to_jsonl(&e2));
+    assert_eq!(j1, j2, "same seed must produce a byte-identical JSONL trace");
+
+    // Observing the run must not change it.
+    let m0 = setup.run("trident", WorkloadKind::Medium, 60_000.0, 11);
+    for (m, label) in [(&m1, "first traced"), (&m2, "second traced")] {
+        assert_eq!(m.summary().n, m0.summary().n, "{label} run diverged from untraced");
+        assert_eq!(
+            m.summary().slo_attainment,
+            m0.summary().slo_attainment,
+            "{label} run diverged from untraced"
+        );
+    }
+
+    let n_completed =
+        m1.completions.iter().filter(|c| c.outcome == Outcome::Completed).count();
+    assert_conserves(&e1, n_completed, "sim");
+    assert!(has_kind(&e1, |b| matches!(b, EventBody::Decision { .. })), "no solve decisions");
+    assert!(has_kind(&e1, |b| matches!(b, EventBody::Dispatch { .. })), "no dispatches");
+}
+
+#[test]
+fn coserve_preempt_trace_conserves_and_exports() {
+    let cluster = ClusterSpec::l20(4);
+    let (setups, trace) = scenario(&cluster, 3);
+    let cfg = CoServeConfig { seed: 3, resize: ResizePolicy::Preempt, ..Default::default() };
+    let (tracer, sink) = ring();
+    let mut arb = arbiter(&cluster);
+    let report = run_coserve_traced(&setups, &cluster, &mut arb, &trace, &cfg, &tracer);
+
+    let events = sink.borrow().snapshot();
+    assert_conserves(&events, completed(&report), "coserve-preempt");
+    assert_chrome_valid(&events, "coserve-preempt");
+    // The opposed load step must have exercised the arbiter, and the trace
+    // must show it.
+    assert!(report.arbitrations > 0, "load step never triggered the arbiter");
+    assert!(has_kind(&events, |b| matches!(b, EventBody::Swap { .. })), "no swap events");
+    assert!(
+        has_kind(&events, |b| matches!(b, EventBody::Repartition { .. })),
+        "no repartition events"
+    );
+}
+
+#[test]
+fn faults_trace_is_deterministic_and_conserves() {
+    let cluster = ClusterSpec::l20(4);
+    let (setups, trace) = scenario(&cluster, 7);
+    let churn = ChurnGen {
+        mtbf_ms: 30_000.0,
+        mean_downtime_ms: 45_000.0,
+        spot_fraction: 0.5,
+        notice_ms: 15_000.0,
+        min_alive: 3,
+    }
+    .generate(cluster.nodes, DURATION_MS, 7);
+    assert!(!churn.events.is_empty(), "churn trace empty — nothing exercised");
+    let plan = FaultPlan::new(churn, RecoveryPolicy::Reactive);
+    let cfg = CoServeConfig { seed: 7, monitor_ms: 2_500.0, ..Default::default() };
+
+    let run = || {
+        let (tracer, sink) = ring();
+        let mut arb = arbiter(&cluster);
+        let report =
+            run_coserve_faulty_traced(&setups, &cluster, &mut arb, &trace, &cfg, &plan, &tracer);
+        (report, sink.borrow().snapshot())
+    };
+    let (ra, ea) = run();
+    let (rb, eb) = run();
+    assert_eq!(to_jsonl(&ea), to_jsonl(&eb), "same seed must trace byte-identically");
+    assert_eq!(completed(&ra), completed(&rb));
+
+    assert_conserves(&ea, completed(&ra), "faults-reactive");
+    assert!(ra.faults.node_losses > 0, "no capacity loss ever applied");
+    assert!(has_kind(&ea, |b| matches!(b, EventBody::NodeLoss { .. })), "no node-loss events");
+    assert!(
+        has_kind(&ea, |b| matches!(b, EventBody::Recovery { policy } if *policy == "reactive")),
+        "no recovery events"
+    );
+    assert!(
+        has_kind(&ea, |b| matches!(b, EventBody::ChurnDetect { .. })),
+        "reactive recovery must log heartbeat detections"
+    );
+}
