@@ -8,17 +8,23 @@
 //! Environment knobs: COSERVE_MINUTES (default 10), COSERVE_SEED (default 0),
 //! COSERVE_TRACE (unset = off; `1` or a path = trace the preemptive run,
 //! print its latency breakdown and write a Perfetto-loadable Chrome trace
-//! JSON to the path, default `coserve_trace.json`).
+//! JSON to the path, default `coserve_trace.json`), METRICS_OUT (unset =
+//! off; `1` or a path prefix = attach live telemetry to the preemptive run
+//! and write `<prefix>.prom` — a Prometheus text snapshot — plus
+//! `<prefix>.csv` — the per-lane time series —, default prefix
+//! `coserve_metrics`).
 
 use tridentserve::baselines::StaticPartition;
 use tridentserve::config::ClusterSpec;
 use tridentserve::coserve::{
-    run_coserve, run_coserve_traced, CoServeConfig, CoServeReport, ClusterArbiter, PipelineSetup,
-    ResizePolicy,
+    run_coserve, run_coserve_observed, CoServeConfig, CoServeReport, ClusterArbiter,
+    PipelineSetup, ResizePolicy,
 };
 use tridentserve::obs::export::to_chrome_trace;
 use tridentserve::obs::report::BreakdownReport;
 use tridentserve::obs::{TraceConfig, Tracer};
+use tridentserve::telemetry::export::{to_csv, to_prometheus};
+use tridentserve::telemetry::{Registry, Telemetry};
 use tridentserve::workload::{mixed, DifficultyModel, LoadShape, MixedSpec, WorkloadKind};
 
 /// `(tracer, sink, output path)` from a `*_TRACE` env var: unset → off.
@@ -33,6 +39,38 @@ fn trace_from_env(
                 if v.is_empty() || v == "1" || v == "true" { default_path.to_string() } else { v };
             let (tracer, sink) = Tracer::ring(&TraceConfig::full());
             (tracer, sink, path)
+        }
+    }
+}
+
+/// `(telemetry, registry, output prefix)` from a `METRICS_OUT`-style env
+/// var: unset → off (one dead branch per instrument, no registry).
+fn metrics_from_env(
+    var: &str,
+    default_prefix: &str,
+) -> (Telemetry, Option<std::rc::Rc<std::cell::RefCell<Registry>>>, String) {
+    match std::env::var(var) {
+        Err(_) => (Telemetry::off(), None, String::new()),
+        Ok(v) => {
+            let prefix = if v.is_empty() || v == "1" || v == "true" {
+                default_prefix.to_string()
+            } else {
+                v
+            };
+            let (tele, reg) = Telemetry::registry();
+            (tele, Some(reg), prefix)
+        }
+    }
+}
+
+/// Dump the registry next to the run it observed: Prometheus text snapshot
+/// (`<prefix>.prom`) and the full per-lane time series (`<prefix>.csv`).
+fn write_metrics(reg: &Registry, prefix: &str) {
+    for (ext, text) in [("prom", to_prometheus(reg)), ("csv", to_csv(reg))] {
+        let path = format!("{prefix}.{ext}");
+        match std::fs::write(&path, text) {
+            Ok(()) => println!("wrote metrics snapshot to {path}"),
+            Err(e) => println!("WARN: could not write {path}: {e}"),
         }
     }
 }
@@ -130,13 +168,18 @@ fn main() {
     // run carries the (optional) tracer: it is the one with cuts/resumes,
     // so its breakdown shows blackout next to queue/exec/handoff.
     let (tracer, sink, trace_path) = trace_from_env("COSERVE_TRACE", "coserve_trace.json");
+    let (tele, reg, metrics_prefix) = metrics_from_env("METRICS_OUT", "coserve_metrics");
     let preempt_cfg = CoServeConfig { resize: ResizePolicy::Preempt, ..cfg.clone() };
     let mut arbiter_p = ClusterArbiter::new(cluster.gpus_per_node);
-    let preempt = run_coserve_traced(&setups, &cluster, &mut arbiter_p, &trace, &preempt_cfg, &tracer);
+    let preempt = run_coserve_observed(
+        &setups, &cluster, &mut arbiter_p, &trace, &preempt_cfg, &tracer, &tele,
+    );
     print_report(&preempt);
     if let Some(sink) = sink {
+        // Dropped-aware path: the report carries the ring's eviction count,
+        // so a truncated stream warns instead of silently under-reporting.
+        let breakdown = BreakdownReport::from_sink(&sink.borrow());
         let events = sink.borrow().snapshot();
-        let breakdown = BreakdownReport::from_events(&events);
         println!(
             "--- latency breakdown (preemptive run, {} events, max residual {:.3} ms) ---",
             events.len(),
@@ -147,6 +190,10 @@ fn main() {
             Ok(()) => println!("wrote Perfetto trace to {trace_path}\n"),
             Err(e) => println!("WARN: could not write {trace_path}: {e}\n"),
         }
+    }
+    if let Some(reg) = reg {
+        write_metrics(&reg.borrow(), &metrics_prefix);
+        println!();
     }
 
     let mut fixed = StaticPartition::new();

@@ -8,8 +8,14 @@
 //!
 //! Every layer composes here: L1 Pallas kernels (inside the HLO), L2 JAX
 //! stage graphs (the artifacts), L3 Rust coordination (this process).
+//!
+//! Set METRICS_OUT (`1` or a path prefix) to attach live telemetry and
+//! dump a Prometheus snapshot (`<prefix>.prom`) plus the per-lane time
+//! series (`<prefix>.csv`) after the run.
 
-use tridentserve::server::{serve, LiveConfig};
+use tridentserve::server::{serve_observed, LiveConfig};
+use tridentserve::telemetry::export::{to_csv, to_prometheus};
+use tridentserve::telemetry::Telemetry;
 use tridentserve::workload::WorkloadKind;
 
 fn main() -> tridentserve::util::error::Result<()> {
@@ -32,9 +38,24 @@ fn main() -> tridentserve::util::error::Result<()> {
         }
     }
 
+    // METRICS_OUT (unset = off; `1` or a path prefix): attach live
+    // telemetry and write `<prefix>.prom` + `<prefix>.csv` after the run.
+    let (tele, reg, metrics_prefix) = match std::env::var("METRICS_OUT") {
+        Err(_) => (Telemetry::off(), None, String::new()),
+        Ok(v) => {
+            let prefix = if v.is_empty() || v == "1" || v == "true" {
+                "e2e_metrics".to_string()
+            } else {
+                v
+            };
+            let (tele, reg) = Telemetry::registry();
+            (tele, Some(reg), prefix)
+        }
+    };
+
     println!("=== TridentServe end-to-end serving (real PJRT, {} workers) ===", cfg.workers);
     println!("profiling + compiling on every worker; this takes a few seconds...\n");
-    let report = serve(&cfg)?;
+    let report = serve_observed(&cfg, &tele)?;
 
     println!("measured per-(shape, stage) latencies (ms):");
     for (name, ms) in &report.measured_ms {
@@ -48,6 +69,14 @@ fn main() -> tridentserve::util::error::Result<()> {
     println!("mean latency   : {:.0} ms", s.mean_latency_ms);
     println!("p95 latency    : {:.0} ms", s.p95_latency_ms);
     println!("VR distribution: {:?}", report.metrics.vr_distribution());
+    if let Some(reg) = reg {
+        let reg = reg.borrow();
+        for (ext, text) in [("prom", to_prometheus(&reg)), ("csv", to_csv(&reg))] {
+            let path = format!("{metrics_prefix}.{ext}");
+            std::fs::write(&path, text)?;
+            println!("wrote metrics snapshot to {path}");
+        }
+    }
     if report.served == 0 {
         tridentserve::bail!("no requests served — check artifacts");
     }

@@ -25,6 +25,7 @@ use tridentserve::perfmodel::PerfModel;
 use tridentserve::placement::{Orchestrator, Pi, PlacementPlan};
 use tridentserve::profiler::Profile;
 use tridentserve::request::Request;
+use tridentserve::telemetry::{metric, Telemetry};
 use tridentserve::util::bench::BenchRecorder;
 use tridentserve::util::Rng;
 use tridentserve::workload::WorkloadKind;
@@ -228,6 +229,39 @@ fn main() {
         out.record("sim_trace_off_s", wall_off);
         out.record("sim_trace_on_s", wall_on);
         out.record("sim_trace_events", events as f64);
+    }
+
+    // --- Telemetry instrument overhead (telemetry). The off path is a
+    // single Option branch with no allocation — the acceptance bound this
+    // bench pins next to the trace-emit numbers above; the on path pays
+    // the registry borrow + BTreeMap probe (counter) and the histogram
+    // bucket update (observe).
+    {
+        let n: u64 = if quick { 200_000 } else { 2_000_000 };
+        let off = Telemetry::off();
+        let t0 = Instant::now();
+        for i in 0..n {
+            off.add(metric::REQUESTS_COMPLETED, 1);
+            off.observe(metric::REQUEST_LATENCY_MS, (i + 1) as f64);
+        }
+        let off_ns = t0.elapsed().as_secs_f64() * 1e9 / (2 * n) as f64;
+
+        let (tele, reg) = Telemetry::registry();
+        let tele = tele.for_lane(0);
+        let t0 = Instant::now();
+        for i in 0..n {
+            tele.add(metric::REQUESTS_COMPLETED, 1);
+            tele.observe(metric::REQUEST_LATENCY_MS, (i + 1) as f64);
+        }
+        let on_ns = t0.elapsed().as_secs_f64() * 1e9 / (2 * n) as f64;
+        let recorded = reg.borrow().counter(metric::REQUESTS_COMPLETED, 0).unwrap_or(0);
+        assert_eq!(recorded, n, "every on-path add must land in the registry");
+        println!(
+            "telemetry instrument ({} calls): off {off_ns:.2} ns/call, on {on_ns:.1} ns/call",
+            2 * n
+        );
+        out.record("telemetry_instr_off_ns", off_ns);
+        out.record("telemetry_instr_on_ns", on_ns);
     }
 
     match out.write() {

@@ -10,10 +10,22 @@
 //! immediately), spare quality is spent slowly (de-escalation churns the
 //! arbiter's demand signal, so it must be deliberate).
 
-use std::collections::VecDeque;
+use crate::telemetry::VerdictWindow;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Default retained-verdict capacity of the evidence window.
+pub const VERDICT_CAP: usize = 256;
 
 /// Sliding-window threshold feedback controller.
-#[derive(Clone, Debug)]
+///
+/// The verdict evidence lives in a shared
+/// [`crate::telemetry::VerdictWindow`] handle: by default private, but
+/// [`ThresholdController::attach_window`] can swap in a window registered
+/// in a telemetry `Registry`, so the evidence the controller acts on is
+/// the same object the exporters (and tests) snapshot — the cascade half
+/// of the observe→decide closed loop.
+#[derive(Debug)]
 pub struct ThresholdController {
     /// Quality-attainment target the cascade must hold.
     pub quality_floor: f64,
@@ -27,13 +39,28 @@ pub struct ThresholdController {
     pub max_threshold: f64,
     /// Verdicts required in the window before the controller acts.
     pub min_evidence: usize,
-    window: VecDeque<bool>,
-    cap: usize,
-    /// Total verdicts ever observed / the count at the last adjustment:
-    /// the controller refuses to walk the threshold on stale evidence
-    /// (e.g. during the post-trace drain, when no new outputs arrive).
-    observed: u64,
+    window: Rc<RefCell<VerdictWindow>>,
+    /// Observed-count at the last adjustment: the controller refuses to
+    /// walk the threshold on stale evidence (e.g. during the post-trace
+    /// drain, when no new outputs arrive).
     adjusted_at: u64,
+}
+
+impl Clone for ThresholdController {
+    /// Deep copy: a cloned controller must not share evidence with the
+    /// original (the handle exists for registry sharing, not cloning).
+    fn clone(&self) -> Self {
+        ThresholdController {
+            quality_floor: self.quality_floor,
+            margin: self.margin,
+            step: self.step,
+            min_threshold: self.min_threshold,
+            max_threshold: self.max_threshold,
+            min_evidence: self.min_evidence,
+            window: Rc::new(RefCell::new(self.window.borrow().clone())),
+            adjusted_at: self.adjusted_at,
+        }
+    }
 }
 
 impl ThresholdController {
@@ -45,41 +72,44 @@ impl ThresholdController {
             min_threshold: 0.02,
             max_threshold: 0.98,
             min_evidence: 32,
-            window: VecDeque::new(),
-            cap: 256,
-            observed: 0,
+            window: Rc::new(RefCell::new(VerdictWindow::new(VERDICT_CAP))),
             adjusted_at: 0,
         }
+    }
+
+    /// Close the loop: adopt a shared verdict window (typically
+    /// `telemetry.shared_verdicts(metric::CASCADE_VERDICTS, VERDICT_CAP)`),
+    /// so telemetry and the controller observe one evidence stream. Call
+    /// before observing — pre-attach verdicts stay in the old window.
+    pub fn attach_window(&mut self, window: Rc<RefCell<VerdictWindow>>) {
+        self.window = window;
     }
 
     /// Record one routed request's quality verdict: did (or will) the
     /// delivered output meet the bar under the current routing decision?
     pub fn observe(&mut self, quality_ok: bool) {
-        self.window.push_back(quality_ok);
-        self.observed += 1;
-        if self.window.len() > self.cap {
-            self.window.pop_front();
-        }
+        self.window.borrow_mut().observe(quality_ok);
     }
 
     /// Quality attainment over the current window; None below the evidence
     /// floor.
     pub fn window_attainment(&self) -> Option<f64> {
-        if self.window.len() < self.min_evidence {
+        let w = self.window.borrow();
+        if w.len() < self.min_evidence {
             return None;
         }
-        let ok = self.window.iter().filter(|&&q| q).count();
-        Some(ok as f64 / self.window.len() as f64)
+        w.frac_ok()
     }
 
     /// One control tick: returns the adjusted threshold. A tick with no new
     /// verdicts since the previous adjustment is a no-op — stale evidence
     /// must not keep walking the threshold.
     pub fn adjust(&mut self, tau: f64) -> f64 {
-        if self.observed == self.adjusted_at {
+        let observed = self.window.borrow().observed();
+        if observed == self.adjusted_at {
             return tau;
         }
-        self.adjusted_at = self.observed;
+        self.adjusted_at = observed;
         let Some(q) = self.window_attainment() else { return tau };
         if q < self.quality_floor {
             (tau + self.step).min(self.max_threshold)
@@ -174,6 +204,23 @@ mod tests {
         // New evidence re-arms the controller.
         fill(&mut c, 4, 0);
         assert!(c.adjust(t1) < t1);
+    }
+
+    #[test]
+    fn attached_window_is_the_shared_evidence_stream() {
+        use crate::telemetry::{metric, Telemetry};
+        let (tele, _reg) = Telemetry::registry();
+        let shared = tele.shared_verdicts(metric::CASCADE_VERDICTS, VERDICT_CAP).unwrap();
+        let mut c = ThresholdController::new(0.95);
+        c.attach_window(shared.clone());
+        fill(&mut c, 80, 20); // 0.80 < 0.95 → attack, exactly as unattached
+        assert_eq!(shared.borrow().observed(), 100, "verdicts land in the registry window");
+        let t1 = c.adjust(0.4);
+        assert!((t1 - 0.45).abs() < 1e-12);
+        // Cloning forks the evidence: the clone stops seeing shared pushes.
+        let c2 = c.clone();
+        shared.borrow_mut().observe(false);
+        assert_eq!(c2.window.borrow().observed(), 100);
     }
 
     #[test]

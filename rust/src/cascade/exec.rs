@@ -8,17 +8,18 @@
 
 use std::collections::{BTreeSet, HashMap};
 
-use crate::cascade::controller::ThresholdController;
+use crate::cascade::controller::{ThresholdController, VERDICT_CAP};
 use crate::cascade::router::{ConfidenceRouter, QualityModel};
 use crate::config::ClusterSpec;
 use crate::coserve::arbiter::ArbiterPolicy;
 use crate::coserve::exec::{
-    run_coserve_hooked_traced, run_coserve_traced, CoServeConfig, CoServeReport, LaneHook,
+    run_coserve_hooked_observed, run_coserve_observed, CoServeConfig, CoServeReport, LaneHook,
     PipelineSetup,
 };
 use crate::coserve::LaneSignal;
 use crate::metrics::Metrics;
 use crate::obs::{EventBody, Tracer, CONTROL_LANE};
+use crate::telemetry::{metric, Telemetry};
 use crate::request::{Completion, Outcome, Request, RequestId};
 use crate::util::stats::SlidingWindow;
 use crate::util::Rng;
@@ -189,6 +190,12 @@ struct CascadeHook {
     /// Control-lane tracer: escalations and threshold-controller moves are
     /// routing *decisions*, so they land in the decision log.
     tracer: Tracer,
+    /// Control-lane telemetry: escalation counter + rolling escalation-rate
+    /// window, plus the sampled quality-attainment series. The adaptive
+    /// controller's verdict window itself is registered in the same
+    /// registry (see `run_cascade_observed`), so quality evidence is
+    /// observed and acted on through one object.
+    tele: Telemetry,
 }
 
 impl LaneHook for CascadeHook {
@@ -245,6 +252,8 @@ impl LaneHook for CascadeHook {
         }
         self.escalated.insert(c.id);
         self.tracer.emit_req(now_ms, c.id, || EventBody::Escalate { req: c.id, difficulty: d });
+        self.tele.add(metric::CASCADE_ESCALATIONS, 1);
+        self.tele.push_window(metric::CASCADE_ESCALATION_WINDOW, now_ms, 1.0);
         Some((
             HEAVY_LANE,
             Request {
@@ -267,6 +276,12 @@ impl LaneHook for CascadeHook {
                 let to = self.router.threshold;
                 self.tracer.emit(now_ms, || EventBody::ThresholdMove { from, to });
             }
+            if let Some(q) = ctrl.window_attainment() {
+                self.tele.sample(now_ms, metric::CASCADE_QUALITY, q);
+            }
+        }
+        if let Some(rate) = self.tele.window_rate(metric::CASCADE_ESCALATION_WINDOW, now_ms) {
+            self.tele.sample(now_ms, metric::CASCADE_ESCALATION_RATE, rate);
         }
         self.threshold_trace.push((now_ms, self.router.threshold));
         // Walk the arrival cut: the controller holds aggressiveness
@@ -340,13 +355,42 @@ pub fn run_cascade_traced(
     cfg: &CoServeConfig,
     tracer: &Tracer,
 ) -> CascadeReport {
+    run_cascade_observed(
+        cheap, heavy, cluster, arbiter, trace, mode, quality, cfg, tracer, &Telemetry::off(),
+    )
+}
+
+/// [`run_cascade_traced`] with live telemetry: escalation counters, the
+/// rolling escalation-rate series, and the sampled quality-attainment
+/// series all land on [`CONTROL_LANE`] of `tele`'s registry. For
+/// [`RouterMode::Adaptive`], the threshold controller's quality-verdict
+/// evidence is re-homed into the registry
+/// ([`crate::telemetry::metric::CASCADE_VERDICTS`]) before the run starts,
+/// so the observe→decide loop runs through the shared window rather than a
+/// private counter. With `Telemetry::off()` this is exactly
+/// `run_cascade_traced`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_cascade_observed(
+    cheap: &PipelineSetup,
+    heavy: &PipelineSetup,
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &Trace,
+    mode: RouterMode,
+    quality: QualityModel,
+    cfg: &CoServeConfig,
+    tracer: &Tracer,
+    tele: &Telemetry,
+) -> CascadeReport {
     let label = mode.label();
     let difficulty: HashMap<RequestId, f64> =
         trace.requests.iter().map(|r| (r.id, r.difficulty)).collect();
 
-    let (initial_threshold, controller, predicted_cut) = match mode {
+    let (initial_threshold, mut controller, predicted_cut) = match mode {
         RouterMode::AlwaysHeavy => {
-            return run_always_heavy(heavy, cluster, arbiter, trace, quality, cfg, label, tracer);
+            return run_always_heavy(
+                heavy, cluster, arbiter, trace, quality, cfg, label, tracer, tele,
+            );
         }
         RouterMode::StaticThreshold(t) => (t, None, None),
         RouterMode::ArrivalRouted { predicted_cut, threshold } => {
@@ -356,6 +400,16 @@ pub fn run_cascade_traced(
             (initial_threshold, Some(controller), None)
         }
     };
+    // Re-home the adaptive controller's verdict evidence into the telemetry
+    // registry: same capacity, same semantics, but now a shared window the
+    // exporters and integration tests can see. No-op when telemetry is off.
+    if let Some(ctrl) = &mut controller {
+        if let Some(w) =
+            tele.for_lane(CONTROL_LANE).shared_verdicts(metric::CASCADE_VERDICTS, VERDICT_CAP)
+        {
+            ctrl.attach_window(w);
+        }
+    }
 
     assert_eq!(
         cheap.pipeline.shapes.len(),
@@ -394,10 +448,12 @@ pub fn run_cascade_traced(
         direct: BTreeSet::new(),
         threshold_trace: Vec::new(),
         tracer: tracer.for_lane(CONTROL_LANE),
+        tele: tele.for_lane(CONTROL_LANE),
     };
     let setups = [cheap.clone(), heavy.clone()];
-    let coserve =
-        run_coserve_hooked_traced(&setups, cluster, arbiter, &mixed, cfg, &mut hook, tracer);
+    let coserve = run_coserve_hooked_observed(
+        &setups, cluster, arbiter, &mixed, cfg, &mut hook, tracer, tele,
+    );
     let direct = hook.direct.clone();
 
     // Fold the two lanes into per-logical-request completions + verdicts.
@@ -507,14 +563,22 @@ fn run_always_heavy(
     cfg: &CoServeConfig,
     label: String,
     tracer: &Tracer,
+    tele: &Telemetry,
 ) -> CascadeReport {
     let mixed = MixedTrace {
         requests: trace.requests.clone(),
         duration_ms: trace.duration_ms,
         n_pipelines: 1,
     };
-    let coserve =
-        run_coserve_traced(std::slice::from_ref(heavy), cluster, arbiter, &mixed, cfg, tracer);
+    let coserve = run_coserve_observed(
+        std::slice::from_ref(heavy),
+        cluster,
+        arbiter,
+        &mixed,
+        cfg,
+        tracer,
+        tele,
+    );
     let mut logical = Metrics::new(cfg.span_ms);
     for c in &coserve.lanes[0].metrics.completions {
         logical.record(c.clone());

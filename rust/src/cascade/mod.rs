@@ -37,9 +37,9 @@ pub mod controller;
 pub mod exec;
 pub mod router;
 
-pub use controller::ThresholdController;
+pub use controller::{ThresholdController, VERDICT_CAP};
 pub use exec::{
-    calibrate_threshold, run_cascade, run_cascade_traced, CascadeReport, RouterMode, CHEAP_LANE,
-    ESC_BIT, HEAVY_LANE,
+    calibrate_threshold, run_cascade, run_cascade_observed, run_cascade_traced, CascadeReport,
+    RouterMode, CHEAP_LANE, ESC_BIT, HEAVY_LANE,
 };
 pub use router::{ConfidenceRouter, QualityModel};

@@ -99,6 +99,12 @@ impl HandoffBuffers {
         self.bufs.iter().map(|b| b.device_pushes).sum()
     }
 
+    /// Currently staged bytes across every GPU's HB, GB — the telemetry
+    /// occupancy gauge.
+    pub fn total_used_gb(&self) -> f64 {
+        self.bufs.iter().map(|b| b.used_gb).sum()
+    }
+
     pub fn total_host_spills(&self) -> u64 {
         self.bufs.iter().map(|b| b.host_spills).sum()
     }
@@ -242,5 +248,6 @@ mod tests {
         hbs.gpu(0).consume(1.0);
         assert_eq!(hbs.gpu(0).push(0.5), StagePath::Device);
         assert_eq!(hbs.gpu(2).used_gb(), 0.0);
+        assert!((hbs.total_used_gb() - 1.5).abs() < 1e-9); // 0.5 on g0 + 1.0 on g1
     }
 }

@@ -40,6 +40,7 @@ use crate::placement::{Orchestrator, Pi};
 use crate::profiler::Profile;
 use crate::request::{Completion, Outcome, Request, RequestId};
 use crate::sim::{ServingPolicy, SimExec, TridentPolicy};
+use crate::telemetry::{metric, Telemetry};
 use crate::util::stats::SlidingWindow;
 use crate::util::Rng;
 use crate::workload::MixedTrace;
@@ -483,6 +484,9 @@ impl Lane {
         );
         self.model = PerfModel::new(cluster);
         self.monitor = Monitor::new(self.pipeline.t_win_ms, self.consts.imbalance_trigger);
+        // Re-adopt the registry stage-rate windows (cleared on attach, so
+        // the rebuilt monitor starts from fresh evidence either way).
+        self.monitor.attach_telemetry(&self.core.tele);
         self.core.reset_oom_watermark();
         self.generation += 1;
         self.draining = false;
@@ -1233,6 +1237,7 @@ fn try_swap(
     resize: ResizePolicy,
     now: f64,
     ctl: &Tracer,
+    ctl_tele: &Telemetry,
 ) {
     let Some(target) = pending_alloc.as_ref() else { return };
     for (p, lane) in lanes.iter().enumerate() {
@@ -1284,6 +1289,8 @@ fn try_swap(
     }
     if resized {
         migration.blackout_ms.push(blackout_ms);
+        ctl_tele.add(metric::LANE_SWAPS, 1);
+        ctl_tele.observe(metric::RESIZE_BLACKOUT_MS, blackout_ms);
     }
     ctl.emit(now, || EventBody::Swap { alloc: target.clone(), blackout_ms });
     *alloc = target;
@@ -1317,9 +1324,10 @@ fn try_swap(
                 }
                 _ => {
                     if rebuilt[victim] {
-                        fs.stats
-                            .blackout_ms
-                            .push((lanes[victim].gate_until_ms - t_loss).max(0.0));
+                        let black = (lanes[victim].gate_until_ms - t_loss).max(0.0);
+                        fs.stats.blackout_ms.push(black);
+                        ctl_tele.add(metric::FAULT_BLACKOUTS, 1);
+                        ctl_tele.observe(metric::FAULT_BLACKOUT_MS, black);
                         false
                     } else {
                         true
@@ -1393,7 +1401,17 @@ pub fn run_coserve_hooked(
     cfg: &CoServeConfig,
     hook: &mut dyn LaneHook,
 ) -> CoServeReport {
-    run_coserve_engine(setups, cluster, arbiter, trace, cfg, hook, None, &Tracer::off())
+    run_coserve_engine(
+        setups,
+        cluster,
+        arbiter,
+        trace,
+        cfg,
+        hook,
+        None,
+        &Tracer::off(),
+        &Telemetry::off(),
+    )
 }
 
 /// [`run_coserve`] with request/decision tracing: lane `p`'s request spans
@@ -1407,7 +1425,25 @@ pub fn run_coserve_traced(
     cfg: &CoServeConfig,
     tracer: &Tracer,
 ) -> CoServeReport {
-    run_coserve_engine(setups, cluster, arbiter, trace, cfg, &mut NoopHook, None, tracer)
+    run_coserve_observed(setups, cluster, arbiter, trace, cfg, tracer, &Telemetry::off())
+}
+
+/// [`run_coserve_traced`] with live telemetry: per-lane lifecycle
+/// counters/latency histograms/SLO windows stream from the lane cores,
+/// gauges sample on the monitor cadence, resize/fault blackouts land in
+/// control-lane histograms, and every lane Monitor's stage-rate windows
+/// are registered in `tele`'s registry. With `Telemetry::off()` this is
+/// exactly `run_coserve_traced`.
+pub fn run_coserve_observed(
+    setups: &[PipelineSetup],
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &MixedTrace,
+    cfg: &CoServeConfig,
+    tracer: &Tracer,
+    tele: &Telemetry,
+) -> CoServeReport {
+    run_coserve_engine(setups, cluster, arbiter, trace, cfg, &mut NoopHook, None, tracer, tele)
 }
 
 /// [`run_coserve_hooked`] with tracing (the cascade layer's traced entry).
@@ -1420,7 +1456,32 @@ pub fn run_coserve_hooked_traced(
     hook: &mut dyn LaneHook,
     tracer: &Tracer,
 ) -> CoServeReport {
-    run_coserve_engine(setups, cluster, arbiter, trace, cfg, hook, None, tracer)
+    run_coserve_hooked_observed(
+        setups,
+        cluster,
+        arbiter,
+        trace,
+        cfg,
+        hook,
+        tracer,
+        &Telemetry::off(),
+    )
+}
+
+/// [`run_coserve_hooked_traced`] with live telemetry (the cascade layer's
+/// observed entry).
+#[allow(clippy::too_many_arguments)]
+pub fn run_coserve_hooked_observed(
+    setups: &[PipelineSetup],
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &MixedTrace,
+    cfg: &CoServeConfig,
+    hook: &mut dyn LaneHook,
+    tracer: &Tracer,
+    tele: &Telemetry,
+) -> CoServeReport {
+    run_coserve_engine(setups, cluster, arbiter, trace, cfg, hook, None, tracer, tele)
 }
 
 /// [`run_coserve_faulty`] with tracing (churn detections, recoveries and
@@ -1434,7 +1495,43 @@ pub fn run_coserve_faulty_traced(
     faults: &FaultPlan,
     tracer: &Tracer,
 ) -> CoServeReport {
-    run_coserve_engine(setups, cluster, arbiter, trace, cfg, &mut NoopHook, Some(faults), tracer)
+    run_coserve_engine(
+        setups,
+        cluster,
+        arbiter,
+        trace,
+        cfg,
+        &mut NoopHook,
+        Some(faults),
+        tracer,
+        &Telemetry::off(),
+    )
+}
+
+/// [`run_coserve_faulty_traced`] with live telemetry (fault blackouts land
+/// in the control-lane `fault_blackout_ms` histogram).
+#[allow(clippy::too_many_arguments)]
+pub fn run_coserve_faulty_observed(
+    setups: &[PipelineSetup],
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &MixedTrace,
+    cfg: &CoServeConfig,
+    faults: &FaultPlan,
+    tracer: &Tracer,
+    tele: &Telemetry,
+) -> CoServeReport {
+    run_coserve_engine(
+        setups,
+        cluster,
+        arbiter,
+        trace,
+        cfg,
+        &mut NoopHook,
+        Some(faults),
+        tracer,
+        tele,
+    )
 }
 
 /// [`run_coserve`] under injected node churn: the faults subsystem's
@@ -1449,7 +1546,15 @@ pub fn run_coserve_faulty(
     faults: &FaultPlan,
 ) -> CoServeReport {
     run_coserve_engine(
-        setups, cluster, arbiter, trace, cfg, &mut NoopHook, Some(faults), &Tracer::off(),
+        setups,
+        cluster,
+        arbiter,
+        trace,
+        cfg,
+        &mut NoopHook,
+        Some(faults),
+        &Tracer::off(),
+        &Telemetry::off(),
     )
 }
 
@@ -1463,7 +1568,17 @@ pub fn run_coserve_faulty_hooked(
     hook: &mut dyn LaneHook,
     faults: &FaultPlan,
 ) -> CoServeReport {
-    run_coserve_engine(setups, cluster, arbiter, trace, cfg, hook, Some(faults), &Tracer::off())
+    run_coserve_engine(
+        setups,
+        cluster,
+        arbiter,
+        trace,
+        cfg,
+        hook,
+        Some(faults),
+        &Tracer::off(),
+        &Telemetry::off(),
+    )
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1476,6 +1591,7 @@ fn run_coserve_engine(
     hook: &mut dyn LaneHook,
     faults: Option<&FaultPlan>,
     tracer: &Tracer,
+    tele: &Telemetry,
 ) -> CoServeReport {
     let n = setups.len();
     assert!(n > 0, "no pipelines");
@@ -1514,8 +1630,11 @@ fn run_coserve_engine(
         .collect();
     for (p, lane) in lanes.iter_mut().enumerate() {
         lane.core.tracer = tracer.for_lane(p as u32);
+        lane.core.tele = tele.for_lane(p as u32);
+        lane.monitor.attach_telemetry(&lane.core.tele);
     }
     let ctl = tracer.for_lane(CONTROL_LANE);
+    let ctl_tele = tele.for_lane(CONTROL_LANE);
 
     // Fault-run state: membership, detector, ownership, counters.
     let mut fstate: Option<FaultState> = faults.map(|f| {
@@ -1606,13 +1725,18 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now, &ctl,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele,
                 );
                 if now + cfg.tick_ms <= horizon {
                     events.push(now + cfg.tick_ms, EventKind::Tick);
                 }
             }
             EventKind::MonitorTick => {
+                // Telemetry gauges sample on the monitor cadence (one
+                // branch per lane when telemetry is off).
+                for lane in lanes.iter() {
+                    lane.core.sample_gauges(now, &lane.engine);
+                }
                 // Heartbeats + staleness detection (faults runs): every
                 // node with capacity beats on the monitor cadence; nodes
                 // silent past the threshold are declared failed and the
@@ -1727,7 +1851,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now, &ctl,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele,
                 );
                 if now + cfg.monitor_ms <= horizon {
                     events.push(now + cfg.monitor_ms, EventKind::MonitorTick);
@@ -1751,7 +1875,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now, &ctl,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele,
                 );
             }
             EventKind::PreemptCut { lane: p, gen, plan } => {
@@ -1761,7 +1885,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now, &ctl,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele,
                 );
             }
             EventKind::ChurnArrive(i) => {
@@ -1825,7 +1949,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now, &ctl,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele,
                 );
             }
             EventKind::NodeLoss { node } => {
@@ -1834,7 +1958,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now, &ctl,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele,
                 );
             }
         }
@@ -1867,7 +1991,10 @@ fn run_coserve_engine(
     let fault_stats = match fstate {
         Some(mut fs) => {
             for &(_, _, t_loss) in &fs.open {
-                fs.stats.blackout_ms.push((horizon - t_loss).max(0.0));
+                let black = (horizon - t_loss).max(0.0);
+                fs.stats.blackout_ms.push(black);
+                ctl_tele.add(metric::FAULT_BLACKOUTS, 1);
+                ctl_tele.observe(metric::FAULT_BLACKOUT_MS, black);
             }
             fs.stats
         }

@@ -37,6 +37,7 @@ use crate::monitor::Monitor;
 use crate::obs::{EventBody, Tracer};
 use crate::perfmodel::PerfModel;
 use crate::request::{Completion, Outcome, Request, RequestId};
+use crate::telemetry::{metric, Telemetry};
 
 // ---------------------------------------------------------------------------
 // Event queue
@@ -174,6 +175,12 @@ impl ProgressTable {
 
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    /// Number of dispatched (in-flight) entries. O(1): reads the
+    /// dispatched-id index.
+    pub fn dispatched_len(&self) -> usize {
+        self.dispatched_ids.len()
     }
 
     pub fn get(&self, id: RequestId) -> Option<&Progress> {
@@ -357,6 +364,13 @@ pub struct LaneCore {
     /// control-plane decisions) are emitted by the callers on the same
     /// tracer.
     pub tracer: Tracer,
+    /// Live-telemetry handle (off by default: every instrument call is a
+    /// single branch, no allocation — the twin of `tracer`). The shared
+    /// lifecycle choke points below record arrival/completion/OOM/drop
+    /// counters, the served-latency histogram, and the rolling SLO window;
+    /// executors sample gauges on their own cadence via
+    /// [`LaneCore::sample_gauges`].
+    pub tele: Telemetry,
 }
 
 impl LaneCore {
@@ -367,6 +381,7 @@ impl LaneCore {
             oom_seen: 0,
             oom_arrival_is_abort_time,
             tracer: Tracer::off(),
+            tele: Telemetry::off(),
         }
     }
 
@@ -383,7 +398,39 @@ impl LaneCore {
             req: r.id,
             shape_idx: r.shape_idx,
         });
+        self.tele.add(metric::REQUESTS_ARRIVED, 1);
         self.pending.push(r);
+    }
+
+    /// Periodic gauge sampler: queue depth, in-flight plan chains, GPU
+    /// utilization, handoff-buffer occupancy, rolling SLO attainment, and
+    /// streaming latency quantiles, all stamped at `now_ms`. Callers hook
+    /// this at their monitor cadence; when telemetry is off it is one
+    /// branch.
+    pub fn sample_gauges(&self, now_ms: f64, engine: &Engine) {
+        if !self.tele.enabled() {
+            return;
+        }
+        self.tele.sample(now_ms, metric::QUEUE_DEPTH, self.pending.len() as f64);
+        self.tele.sample(now_ms, metric::INFLIGHT_PLANS, self.progress.dispatched_len() as f64);
+        let idle = engine.idle();
+        if !idle.is_empty() {
+            let busy = idle.iter().filter(|&&b| !b).count();
+            self.tele.sample(now_ms, metric::GPU_UTILIZATION, busy as f64 / idle.len() as f64);
+        }
+        self.tele.sample(now_ms, metric::HANDOFF_GB, engine.hb.total_used_gb());
+        if let Some(a) = self.tele.window_mean(metric::SLO_WINDOW, now_ms) {
+            self.tele.sample(now_ms, metric::SLO_ATTAINMENT, a);
+        }
+        for (q, name) in [
+            (0.5, metric::LATENCY_P50_MS),
+            (0.95, metric::LATENCY_P95_MS),
+            (0.99, metric::LATENCY_P99_MS),
+        ] {
+            if let Some(v) = self.tele.hist_quantile(metric::REQUEST_LATENCY_MS, q) {
+                self.tele.sample(now_ms, name, v);
+            }
+        }
     }
 
     /// Bookkeeping for a freshly dispatched plan chain (`seed_stage_ms`
@@ -421,6 +468,7 @@ impl LaneCore {
             let ab = engine.ooms[self.oom_seen];
             self.oom_seen += 1;
             self.tracer.emit_req(ab.at_ms, ab.req, || EventBody::Oom { req: ab.req });
+            self.tele.add(metric::REQUESTS_OOM, 1);
             match self.progress.remove_dispatched(ab.req) {
                 Some(pr) => {
                     let arrival_ms =
@@ -520,6 +568,10 @@ impl LaneCore {
                 let pr = self.progress.remove(req).unwrap();
                 self.tracer
                     .emit_req(now_ms, req, || EventBody::Done { req, vr_type: pr.vr_type });
+                self.tele.add(metric::REQUESTS_COMPLETED, 1);
+                self.tele.observe(metric::REQUEST_LATENCY_MS, now_ms - pr.arrival_ms);
+                let on_time = now_ms <= pr.deadline_ms;
+                self.tele.push_window(metric::SLO_WINDOW, now_ms, if on_time { 1.0 } else { 0.0 });
                 metrics.record(Completion {
                     id: req,
                     shape_idx: pr.shape_idx,
@@ -543,6 +595,7 @@ impl LaneCore {
             if pr.dispatched() && pr.done_plans < pr.plan_chain.len() {
                 self.tracer
                     .emit_req(now_ms, id, || EventBody::Drop { req: id, dispatched: true });
+                self.tele.add(metric::REQUESTS_DROPPED, 1);
                 metrics.record(Completion {
                     id,
                     shape_idx: pr.shape_idx,
@@ -558,6 +611,7 @@ impl LaneCore {
         for r in self.pending.drain(..) {
             self.tracer
                 .emit_req(now_ms, r.id, || EventBody::Drop { req: r.id, dispatched: false });
+            self.tele.add(metric::REQUESTS_DROPPED, 1);
             metrics.record(Completion {
                 id: r.id,
                 shape_idx: r.shape_idx,

@@ -34,6 +34,10 @@
 //! * [`obs`] — stage-level request tracing + control-plane decision log:
 //!   ring-buffered tracer, JSONL/Perfetto exporters, latency-breakdown
 //!   report.
+//! * [`telemetry`] — live streaming metrics: counters/gauges/mergeable
+//!   log-bucketed histograms with per-lane time series, Prometheus/CSV
+//!   exporters, and the shared rolling windows the control plane reads
+//!   (observe→decide closed loop).
 //! * [`metrics`] — SLO attainment, latency percentiles, Fig-10 reporting.
 //! * [`runtime`] — artifact manifest; with feature `pjrt`, the PJRT
 //!   loader/executor for the AOT HLO artifacts.
@@ -64,5 +68,6 @@ pub mod runtime;
 #[cfg(feature = "pjrt")]
 pub mod server;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod workload;

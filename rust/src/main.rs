@@ -1,10 +1,12 @@
 //! TridentServe CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   simulate   run a policy over a workload on the simulated cluster
-//!   serve      live-serve the mini pipeline via PJRT (real request path)
-//!   placement  show the orchestrator's placement plan for a workload
-//!   profile    dump the offline profile table for a pipeline
+//!   simulate     run a policy over a workload on the simulated cluster
+//!   serve        live-serve the mini pipeline via PJRT (real request path)
+//!   placement    show the orchestrator's placement plan for a workload
+//!   profile      dump the offline profile table for a pipeline
+//!   bench-check  diff a fresh BENCH_*.json against the committed baseline
+//!                (CI perf-regression gate; exit 1 on regression)
 //!
 //! Examples:
 //!   tridentserve simulate --pipeline flux --workload dynamic --policy trident
@@ -170,9 +172,31 @@ fn main() -> Result<()> {
                 }
             }
         }
+        "bench-check" => {
+            let baseline_path = get("baseline", "BENCH_perf_hotpath.json");
+            let current_path = get("current", "BENCH_perf_hotpath.json");
+            let baseline = std::fs::read_to_string(&baseline_path)?;
+            let current = std::fs::read_to_string(&current_path)?;
+            let report = tridentserve::util::bench::compare_benches(&baseline, &current)
+                .map_err(tridentserve::util::Error::msg)?;
+            print!("{report}");
+            if report.failed() {
+                println!(
+                    "bench-check FAILED: {} regression(s), {} missing metric(s) \
+                     ({baseline_path} vs {current_path})",
+                    report.regressions().len(),
+                    report.missing.len()
+                );
+                std::process::exit(1);
+            }
+            println!("bench-check passed ({current_path} vs {baseline_path})");
+        }
         _ => {
             println!("tridentserve — stage-level serving for diffusion pipelines");
-            println!("usage: tridentserve <simulate|serve|placement|profile> [--key value ...]");
+            println!(
+                "usage: tridentserve <simulate|serve|placement|profile|bench-check> \
+                 [--key value ...]"
+            );
             println!("see README.md for the full flag reference");
         }
     }

@@ -7,7 +7,7 @@ use std::collections::BTreeMap;
 use crate::dispatch::SolveStats;
 use crate::request::{Completion, Outcome};
 use crate::util::json::Json;
-use crate::util::stats::{mean, percentile};
+use crate::util::stats::{mean, percentile, percentile_sorted};
 
 /// Aggregate recorder for one serving run.
 #[derive(Clone, Debug, Default)]
@@ -104,6 +104,20 @@ impl Metrics {
         percentile(&self.served_latencies(), q).unwrap_or(0.0)
     }
 
+    /// Several served-latency percentiles from ONE collect + sort — the
+    /// per-quantile helpers and [`Metrics::summary`] used to re-filter and
+    /// re-sort the completion list once per quantile, which is O(k·n log n)
+    /// on the summary path of every lane report. Empty runs yield all-0.0
+    /// sentinels, matching [`Metrics::latency_percentile_ms`].
+    pub fn latency_percentiles_ms(&self, qs: &[f64]) -> Vec<f64> {
+        let mut lat = self.served_latencies();
+        if lat.is_empty() {
+            return vec![0.0; qs.len()];
+        }
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        qs.iter().map(|&q| percentile_sorted(&lat, q)).collect()
+    }
+
     pub fn p50_latency_ms(&self) -> f64 {
         self.latency_percentile_ms(50.0)
     }
@@ -151,13 +165,14 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> Summary {
+        let ps = self.latency_percentiles_ms(&[95.0, 99.0]);
         Summary {
             n: self.completions.len(),
             oom: self.oom_count(),
             slo_attainment: self.slo_attainment(),
             mean_latency_ms: self.mean_latency_ms(),
-            p95_latency_ms: self.p95_latency_ms(),
-            p99_latency_ms: self.p99_latency_ms(),
+            p95_latency_ms: ps[0],
+            p99_latency_ms: ps[1],
             quality_attainment: self.quality_attainment(),
             // 0.0 sentinel: policies without an ILP record no solves.
             mean_solve_ms: mean(&self.solve_stats.iter().map(|s| s.solve_ms).collect::<Vec<_>>())
@@ -512,6 +527,27 @@ mod tests {
         assert!(s.p99_latency_ms >= s.p95_latency_ms);
         assert!((m.p99_latency_ms() - 99.01).abs() < 0.5, "{}", m.p99_latency_ms());
         assert!((m.p95_latency_ms() - 95.05).abs() < 0.5, "{}", m.p95_latency_ms());
+    }
+
+    #[test]
+    fn multi_quantile_pass_matches_per_call_path_exactly() {
+        let mut m = Metrics::new(1000.0);
+        // Empty: same 0.0 sentinel as the per-call helpers.
+        assert_eq!(m.latency_percentiles_ms(&[50.0, 95.0, 99.0]), vec![0.0, 0.0, 0.0]);
+        // Record out of order and with an OOM decoy: the single sorted pass
+        // must filter and order exactly like latency_percentile_ms does.
+        for t in [300.0, 100.0, 200.0] {
+            m.record(comp(t, 1e9, Outcome::Completed, 0));
+        }
+        m.record(comp(5.0, 1e9, Outcome::OomRejected, 0));
+        let ps = m.latency_percentiles_ms(&[0.0, 50.0, 95.0, 99.0, 100.0]);
+        assert_eq!(ps, vec![100.0, 200.0, 290.0, 298.0, 300.0]);
+        for (q, p) in [(0.0, ps[0]), (50.0, ps[1]), (95.0, ps[2]), (99.0, ps[3])] {
+            assert!((m.latency_percentile_ms(q) - p).abs() < 1e-9, "q={q}");
+        }
+        let s = m.summary();
+        assert!((s.p95_latency_ms - 290.0).abs() < 1e-9);
+        assert!((s.p99_latency_ms - 298.0).abs() < 1e-9);
     }
 
     #[test]

@@ -6,7 +6,10 @@
 
 use crate::config::Stage;
 use crate::placement::{Pi, Rates};
+use crate::telemetry::{metric, RollingWindow, Telemetry};
 use crate::util::stats::SlidingWindow;
+use std::cell::RefCell;
+use std::rc::Rc;
 
 /// Per-source liveness recorder: the substrate of the faults subsystem's
 /// failure detector ([`crate::faults::FailureDetector`]). Sources (cluster
@@ -52,11 +55,18 @@ impl Heartbeats {
 }
 
 /// Live throughput observer.
-#[derive(Clone, Debug)]
+///
+/// The per-stage windows are `Rc<RefCell<...>>` handles so that
+/// [`Monitor::attach_telemetry`] can swap in windows registered in a
+/// telemetry [`crate::telemetry::Registry`]: the §5.3 trigger then reads
+/// the *same* rolling windows the telemetry exporters snapshot (the
+/// observe→decide closed loop). Unattached, the handles are private and
+/// behavior is unchanged.
+#[derive(Debug)]
 pub struct Monitor {
     window_ms: f64,
     /// Completions per stage (E, D, C).
-    stage_windows: [SlidingWindow; 3],
+    stage_windows: [Rc<RefCell<RollingWindow>>; 3],
     /// Completions attributed to the placement type that served the stage.
     pi_windows: std::collections::BTreeMap<Pi, SlidingWindow>,
     /// Minimum events in the window before the trigger may fire (avoids
@@ -64,6 +74,24 @@ pub struct Monitor {
     pub min_events: usize,
     /// Fire when fastest/slowest stage rate exceeds this (paper: 1.5).
     pub imbalance_trigger: f64,
+}
+
+impl Clone for Monitor {
+    /// Deep copy: a cloned Monitor must not share window state with the
+    /// original (the handles exist for registry sharing, not cloning).
+    fn clone(&self) -> Self {
+        Monitor {
+            window_ms: self.window_ms,
+            stage_windows: [
+                Rc::new(RefCell::new(self.stage_windows[0].borrow().clone())),
+                Rc::new(RefCell::new(self.stage_windows[1].borrow().clone())),
+                Rc::new(RefCell::new(self.stage_windows[2].borrow().clone())),
+            ],
+            pi_windows: self.pi_windows.clone(),
+            min_events: self.min_events,
+            imbalance_trigger: self.imbalance_trigger,
+        }
+    }
 }
 
 fn sidx(s: Stage) -> usize {
@@ -79,9 +107,9 @@ impl Monitor {
         Monitor {
             window_ms,
             stage_windows: [
-                SlidingWindow::new(window_ms),
-                SlidingWindow::new(window_ms),
-                SlidingWindow::new(window_ms),
+                Rc::new(RefCell::new(RollingWindow::new(window_ms))),
+                Rc::new(RefCell::new(RollingWindow::new(window_ms))),
+                Rc::new(RefCell::new(RollingWindow::new(window_ms))),
             ],
             pi_windows: Default::default(),
             min_events: 20,
@@ -89,10 +117,27 @@ impl Monitor {
         }
     }
 
+    /// Close the loop: replace the private per-stage windows with windows
+    /// registered in `tele`'s registry under
+    /// [`crate::telemetry::metric::STAGE_RATE`], so the exporters and the
+    /// §5.3 trigger observe the same signal. No-op when `tele` is off.
+    /// The adopted windows are cleared: a freshly attached Monitor starts
+    /// from zero evidence, exactly like an unattached `Monitor::new` (so a
+    /// lane rebuild that re-attaches gets fresh-window semantics, and an
+    /// observed run's triggers match the unobserved run's).
+    pub fn attach_telemetry(&mut self, tele: &Telemetry) {
+        for (i, name) in metric::STAGE_RATE.iter().enumerate() {
+            if let Some(w) = tele.shared_window(name, self.window_ms) {
+                w.borrow_mut().clear();
+                self.stage_windows[i] = w;
+            }
+        }
+    }
+
     /// Record a stage completion at `t_ms` served by a GPU with placement
     /// `pi`, covering `weight` requests (batch size).
     pub fn record(&mut self, t_ms: f64, stage: Stage, pi: Pi, weight: f64) {
-        self.stage_windows[sidx(stage)].push(t_ms, weight);
+        self.stage_windows[sidx(stage)].borrow_mut().push(t_ms, weight);
         self.pi_windows
             .entry(pi)
             .or_insert_with(|| SlidingWindow::new(self.window_ms))
@@ -102,9 +147,9 @@ impl Monitor {
     /// Per-stage completion rates (req/s) over the window.
     pub fn stage_rates(&mut self, now_ms: f64) -> [f64; 3] {
         [
-            self.stage_windows[0].rate_per_sec(now_ms),
-            self.stage_windows[1].rate_per_sec(now_ms),
-            self.stage_windows[2].rate_per_sec(now_ms),
+            self.stage_windows[0].borrow_mut().rate_per_sec(now_ms),
+            self.stage_windows[1].borrow_mut().rate_per_sec(now_ms),
+            self.stage_windows[2].borrow_mut().rate_per_sec(now_ms),
         ]
     }
 
@@ -124,7 +169,7 @@ impl Monitor {
     /// §5.3 trigger: true when the fastest stage's windowed rate is at least
     /// `imbalance_trigger`× the slowest's (with enough evidence).
     pub fn pattern_change(&mut self, now_ms: f64) -> bool {
-        let events: usize = self.stage_windows.iter().map(|w| w.len()).sum();
+        let events: usize = self.stage_windows.iter().map(|w| w.borrow().len()).sum();
         if events < self.min_events {
             return false;
         }
@@ -259,6 +304,27 @@ mod tests {
         // Once the burst ages out of the sliding window the event floor
         // fails again: a stale burst must not trigger forever.
         assert!(!m.pattern_change(10_000.0));
+    }
+
+    #[test]
+    fn attach_telemetry_shares_the_stage_windows() {
+        let (tele, reg) = Telemetry::registry();
+        let mut m = Monitor::new(10_000.0, 1.5);
+        m.attach_telemetry(&tele.for_lane(0));
+        for i in 0..25 {
+            m.record(i as f64 * 100.0, Stage::Diffuse, Pi::D, 1.0);
+        }
+        // The trigger fires off evidence that is simultaneously visible to
+        // the registry — one window object, two consumers.
+        assert!(m.pattern_change(2_500.0));
+        let w = reg.borrow_mut().window(metric::STAGE_RATE[1], 0, 10_000.0);
+        assert_eq!(w.borrow().len(), 25);
+        assert!(w.borrow_mut().rate_per_sec(2_500.0) > 0.0);
+        // Cloning must fork the state, not alias it.
+        let mut c = m.clone();
+        c.record(2_600.0, Stage::Diffuse, Pi::D, 1.0);
+        assert_eq!(w.borrow().len(), 25);
+        assert!(c.pattern_change(2_600.0));
     }
 
     #[test]

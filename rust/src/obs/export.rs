@@ -167,9 +167,25 @@ pub fn event_json(ev: &TraceEvent) -> Json {
 /// Structured JSONL: one compact, key-sorted object per line. Byte-stable
 /// for identical event streams.
 pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    to_jsonl_with_dropped(events, 0)
+}
+
+/// [`to_jsonl`] plus ring-overflow accounting: when the capturing
+/// [`crate::obs::RingSink`] overflowed (`dropped > 0`), a final
+/// `trace_truncated` line records how many events were evicted — without
+/// it, a truncated trace is indistinguishable from a short run. With
+/// `dropped == 0` the output is byte-identical to [`to_jsonl`].
+pub fn to_jsonl_with_dropped(events: &[TraceEvent], dropped: u64) -> String {
     let mut out = String::new();
     for ev in events {
         out.push_str(&event_json(ev).to_string());
+        out.push('\n');
+    }
+    if dropped > 0 {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("kind".into(), Json::Str("trace_truncated".into()));
+        o.insert("dropped".into(), num(dropped as f64));
+        out.push_str(&Json::Obj(o).to_string());
         out.push('\n');
     }
     out
@@ -220,6 +236,15 @@ fn args(pairs: &[(&str, Json)]) -> Json {
 /// process, everything else as instant (`ph:"i"`) markers. Loadable in
 /// Perfetto or `chrome://tracing`.
 pub fn to_chrome_trace(events: &[TraceEvent]) -> Json {
+    to_chrome_trace_with_dropped(events, 0)
+}
+
+/// [`to_chrome_trace`] plus ring-overflow accounting: a positive `dropped`
+/// count lands both as a top-level `dropped` key and as a
+/// `trace_truncated` metadata record, so Perfetto users see the truncation
+/// in the UI. With `dropped == 0` the output is byte-identical to
+/// [`to_chrome_trace`].
+pub fn to_chrome_trace_with_dropped(events: &[TraceEvent], dropped: u64) -> Json {
     let mut out: Vec<Json> = Vec::new();
     let mut lanes_seen: std::collections::BTreeSet<u32> = Default::default();
     for ev in events {
@@ -312,8 +337,21 @@ pub fn to_chrome_trace(events: &[TraceEvent]) -> Json {
         o.insert("args".into(), args(&[("name", Json::Str(name))]));
         out.push(Json::Obj(o));
     }
+    if dropped > 0 {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("name".into(), Json::Str("trace_truncated".into()));
+        o.insert("ph".into(), Json::Str("M".into()));
+        o.insert("pid".into(), num(0.0));
+        o.insert("tid".into(), num(0.0));
+        o.insert("ts".into(), num(0.0));
+        o.insert("args".into(), args(&[("dropped", num(dropped as f64))]));
+        out.push(Json::Obj(o));
+    }
     let mut top: BTreeMap<String, Json> = BTreeMap::new();
     top.insert("traceEvents".into(), Json::Arr(out));
+    if dropped > 0 {
+        top.insert("dropped".into(), num(dropped as f64));
+    }
     Json::Obj(top)
 }
 
@@ -413,6 +451,32 @@ mod tests {
         assert!(evs.iter().any(|e| {
             e.get("ph").and_then(|j| j.as_str()) == Some("M")
                 && e.get("pid").and_then(|j| j.as_f64()) == Some(0.0)
+        }));
+    }
+
+    #[test]
+    fn dropped_counts_surface_in_both_exporters() {
+        let evs = sample_events();
+        // dropped == 0: byte-identical to the plain exporters.
+        assert_eq!(to_jsonl_with_dropped(&evs, 0), to_jsonl(&evs));
+        assert_eq!(
+            to_chrome_trace_with_dropped(&evs, 0).to_string(),
+            to_chrome_trace(&evs).to_string()
+        );
+        // dropped > 0: one trailing trace_truncated JSONL line...
+        let jl = to_jsonl_with_dropped(&evs, 42);
+        assert_eq!(jl.lines().count(), evs.len() + 1);
+        let last = Json::parse(jl.lines().last().unwrap()).unwrap();
+        assert_eq!(last.get("kind").and_then(|j| j.as_str()), Some("trace_truncated"));
+        assert_eq!(last.get("dropped").and_then(|j| j.as_i64()), Some(42));
+        // ...and a top-level key + metadata record in the chrome trace.
+        let ct = to_chrome_trace_with_dropped(&evs, 42);
+        assert_eq!(ct.get("dropped").and_then(|j| j.as_i64()), Some(42));
+        let recs = ct.get("traceEvents").and_then(|j| j.as_arr()).unwrap();
+        assert!(recs.iter().any(|e| {
+            e.get("name").and_then(|j| j.as_str()) == Some("trace_truncated")
+                && e.get("args").and_then(|a| a.get("dropped")).and_then(|j| j.as_i64())
+                    == Some(42)
         }));
     }
 

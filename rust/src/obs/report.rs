@@ -234,6 +234,11 @@ pub struct BreakdownRow {
 #[derive(Clone, Debug, Default)]
 pub struct BreakdownReport {
     pub requests: Vec<RequestBreakdown>,
+    /// Events the capturing ring sink evicted before export. A positive
+    /// count means the breakdown below is computed from a *truncated*
+    /// stream — early spans may be missing or partial — so the report
+    /// surfaces it rather than presenting the rows as complete.
+    pub dropped: u64,
 }
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -264,7 +269,13 @@ fn aggregate(group: String, reqs: &[&RequestBreakdown]) -> BreakdownRow {
 
 impl BreakdownReport {
     pub fn from_events(events: &[TraceEvent]) -> Self {
-        BreakdownReport { requests: build_breakdowns(events) }
+        BreakdownReport { requests: build_breakdowns(events), dropped: 0 }
+    }
+
+    /// Build from a capturing ring sink, carrying its eviction count so
+    /// truncated traces are flagged instead of silently under-reporting.
+    pub fn from_sink(sink: &super::RingSink) -> Self {
+        BreakdownReport { requests: build_breakdowns(&sink.snapshot()), dropped: sink.dropped }
     }
 
     /// Largest conservation residual across requests (test hook: must be
@@ -315,6 +326,7 @@ impl BreakdownReport {
             .collect();
         let mut top: BTreeMap<String, Json> = BTreeMap::new();
         top.insert("served".into(), Json::Num(self.requests.len() as f64));
+        top.insert("dropped".into(), Json::Num(self.dropped as f64));
         top.insert("rows".into(), Json::Arr(rows));
         Json::Obj(top)
     }
@@ -323,6 +335,13 @@ impl BreakdownReport {
 impl fmt::Display for BreakdownReport {
     /// Per-lane / per-VR mean latency decomposition, seconds.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.dropped > 0 {
+            writeln!(
+                f,
+                "WARNING: trace ring dropped {} events; breakdown is from a truncated stream",
+                self.dropped
+            )?;
+        }
         writeln!(
             f,
             "{:<10} {:>6} {:>8} {:>8} | {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} {:>8}",
@@ -436,8 +455,34 @@ mod tests {
         assert!(rep.max_residual_ms() < 1e-9);
         // Display renders one line per row plus the header.
         assert_eq!(format!("{rep}").lines().count(), 1 + rows.len());
-        // JSON round-trips.
+        // JSON round-trips; an untruncated report records dropped = 0.
         let j = Json::parse(&rep.to_json().to_string()).unwrap();
         assert_eq!(j.get("served").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(j.get("dropped").and_then(|v| v.as_i64()), Some(0));
+    }
+
+    #[test]
+    fn from_sink_carries_the_eviction_count() {
+        use crate::obs::{RingSink, TraceSink};
+        // Capacity 4 keeps exactly one full span (arrive/stage/done for
+        // req 2 plus the tail of req 1) and evicts the rest.
+        let mut sink = RingSink::new(4);
+        for req in [1u64, 2] {
+            sink.record(ev(0.0, 0, EventBody::Arrive { req, shape_idx: 0 }));
+            sink.record(stage_done(100.0, req, Stage::Diffuse, 10.0, 2.0));
+            sink.record(ev(100.0, 0, EventBody::Done { req, vr_type: 0 }));
+        }
+        assert_eq!(sink.dropped, 2);
+        let rep = BreakdownReport::from_sink(&sink);
+        assert_eq!(rep.dropped, 2);
+        // Req 1's Arrive was evicted: only req 2 reconstructs.
+        assert_eq!(rep.requests.len(), 1);
+        assert_eq!(rep.requests[0].req, 2);
+        // The truncation is visible in every surface.
+        let shown = format!("{rep}");
+        assert!(shown.starts_with("WARNING"), "{shown}");
+        assert_eq!(shown.lines().count(), 1 + 1 + rep.rows().len());
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(j.get("dropped").and_then(|v| v.as_i64()), Some(2));
     }
 }

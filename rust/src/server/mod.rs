@@ -29,8 +29,13 @@ use crate::request::{Completion, Outcome, Request};
 use crate::runtime::PjrtRuntime;
 use crate::sim::policy::ServingPolicy;
 use crate::sim::TridentPolicy;
+use crate::telemetry::{metric, Telemetry};
 use crate::util::Rng;
 use crate::workload::{DifficultyModel, TraceGen, WorkloadKind};
+
+/// Gauge-sampling cadence for live telemetry (the leader loop spins much
+/// faster than any dashboard needs).
+const GAUGE_SAMPLE_MS: f64 = 250.0;
 
 /// Live-serving configuration.
 #[derive(Clone, Debug)]
@@ -157,6 +162,16 @@ pub fn measure_profile(
 
 /// Run the live serving loop end to end.
 pub fn serve(cfg: &LiveConfig) -> Result<LiveReport> {
+    serve_observed(cfg, &Telemetry::off())
+}
+
+/// [`serve`] with live telemetry on the leader loop: arrival/completion
+/// counters, the streaming latency histogram, the rolling SLO window, and
+/// wall-clock gauge samples (queue depth, in-flight requests, worker
+/// utilization) on a [`GAUGE_SAMPLE_MS`] cadence. The single live lane
+/// exports as lane 0. With [`Telemetry::off`] this is exactly [`serve`].
+pub fn serve_observed(cfg: &LiveConfig, tele: &Telemetry) -> Result<LiveReport> {
+    let lane = tele.for_lane(0);
     let pipeline = PipelineSpec::mini();
     let consts = SolverConstants::default();
     let cluster = ClusterSpec::tiny(1, cfg.workers);
@@ -248,6 +263,7 @@ pub fn serve(cfg: &LiveConfig) -> Result<LiveReport> {
     let mut live: HashMap<u64, ReqState> = HashMap::new();
     let mut busy = vec![false; cfg.workers];
     let mut served = 0usize;
+    let mut last_sample = f64::NEG_INFINITY;
     let horizon = cfg.duration_ms * 3.0;
 
     let send_stage = |job_txs: &[mpsc::Sender<Job>],
@@ -301,6 +317,7 @@ pub fn serve(cfg: &LiveConfig) -> Result<LiveReport> {
             let mut r = trace.requests[next_arrival].clone();
             r.arrival_ms = now;
             r.deadline_ms = now + profile.slo_ms[r.shape_idx];
+            lane.add(metric::REQUESTS_ARRIVED, 1);
             pending.push(r);
             next_arrival += 1;
         }
@@ -359,6 +376,10 @@ pub fn serve(cfg: &LiveConfig) -> Result<LiveReport> {
             st.next_stage += 1;
             if st.next_stage == 3 {
                 let st = live.remove(&done.req).unwrap();
+                lane.add(metric::REQUESTS_COMPLETED, 1);
+                lane.observe(metric::REQUEST_LATENCY_MS, now - st.arrival_ms);
+                let on_time = now <= st.deadline_ms;
+                lane.push_window(metric::SLO_WINDOW, now, if on_time { 1.0 } else { 0.0 });
                 metrics.record(Completion {
                     id: done.req,
                     shape_idx: st.shape_idx,
@@ -373,6 +394,20 @@ pub fn serve(cfg: &LiveConfig) -> Result<LiveReport> {
             } else {
                 let w = send_stage(&job_txs, st, done.req, &mut rng, enc_len)?;
                 busy[w] = true;
+            }
+        }
+
+        // Gauge samples on a throttled cadence (telemetry off: one branch).
+        if lane.enabled() && now - last_sample >= GAUGE_SAMPLE_MS {
+            last_sample = now;
+            lane.sample(now, metric::QUEUE_DEPTH, pending.len() as f64);
+            lane.sample(now, metric::INFLIGHT_PLANS, live.len() as f64);
+            if !busy.is_empty() {
+                let busy_n = busy.iter().filter(|&&b| b).count();
+                lane.sample(now, metric::GPU_UTILIZATION, busy_n as f64 / busy.len() as f64);
+            }
+            if let Some(a) = lane.window_mean(metric::SLO_WINDOW, now) {
+                lane.sample(now, metric::SLO_ATTAINMENT, a);
             }
         }
 

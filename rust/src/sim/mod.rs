@@ -22,6 +22,7 @@ use crate::obs::{EventBody, Tracer, CONTROL_LANE};
 use crate::perfmodel::PerfModel;
 use crate::profiler::Profile;
 use crate::request::{Completion, Outcome};
+use crate::telemetry::Telemetry;
 use crate::util::Rng;
 use crate::workload::Trace;
 
@@ -111,6 +112,36 @@ pub fn run_sim_traced(
     cfg: &SimConfig,
     tracer: &Tracer,
 ) -> Metrics {
+    run_sim_observed(
+        pipeline,
+        profile,
+        consts,
+        cluster,
+        policy,
+        trace,
+        cfg,
+        tracer,
+        &Telemetry::off(),
+    )
+}
+
+/// [`run_sim_traced`] with live telemetry: lifecycle counters, the served
+/// latency histogram and SLO window stream from the lane core, gauges are
+/// sampled on the monitor cadence, and the Monitor's stage-rate windows
+/// are registered in `tele`'s registry (observe→decide through one
+/// layer). With `Telemetry::off()` this is exactly `run_sim_traced`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sim_observed(
+    pipeline: &PipelineSpec,
+    profile: &Profile,
+    consts: &SolverConstants,
+    cluster: &ClusterSpec,
+    policy: &mut dyn ServingPolicy,
+    trace: &Trace,
+    cfg: &SimConfig,
+    tracer: &Tracer,
+    tele: &Telemetry,
+) -> Metrics {
     let model = PerfModel::new(cluster.clone());
     let topo = crate::cluster::Topology::new(cluster.clone());
     let g = topo.total_gpus();
@@ -132,6 +163,8 @@ pub fn run_sim_traced(
     // `sim` historically stamps OOM records' arrival with the abort time.
     let mut core = LaneCore::new(true);
     core.tracer = tracer.for_lane(0);
+    core.tele = tele.for_lane(0);
+    monitor.attach_telemetry(&core.tele);
     let ctl = tracer.for_lane(CONTROL_LANE);
 
     while let Some((now, kind)) = events.pop() {
@@ -193,6 +226,7 @@ pub fn run_sim_traced(
                 }
             }
             EventKind::MonitorTick => {
+                core.sample_gauges(now, &engine);
                 if let Some(new_placement) = policy.maybe_switch(now, &mut monitor, g) {
                     engine.apply_switch(new_placement);
                     ctl.emit(now, || EventBody::PlacementSwitch);

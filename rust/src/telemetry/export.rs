@@ -1,0 +1,195 @@
+//! Telemetry exporters: Prometheus text exposition and deterministic CSV.
+//!
+//! Both are pure functions of a [`Registry`] snapshot, and both are
+//! deterministic by construction — instruments are keyed in `BTreeMap`s,
+//! values carry only simulation-time quantities, and floats are formatted
+//! with Rust's shortest-round-trip `{}` formatter — so a same-seed run
+//! produces byte-identical output (pinned in `tests/telemetry.rs`, the
+//! same discipline as the PR-6 JSONL trace).
+
+use super::{LogHistogram, Registry, CONTROL_LANE};
+use std::fmt::Write as _;
+
+/// Exposition name prefix for every instrument.
+pub const PROM_PREFIX: &str = "trident_";
+
+/// Quantiles published for every histogram (summary-style exposition).
+pub const PROM_QUANTILES: [f64; 3] = [0.5, 0.95, 0.99];
+
+/// Lane label value: the control lane exports as `-1`, matching the JSONL
+/// trace convention.
+fn lane_label(lane: u32) -> i64 {
+    if lane == CONTROL_LANE {
+        -1
+    } else {
+        lane as i64
+    }
+}
+
+fn write_summary(out: &mut String, name: &str, lane: Option<u32>, h: &LogHistogram) {
+    let labels = |extra: &str| match lane {
+        Some(l) => {
+            if extra.is_empty() {
+                format!("{{lane=\"{}\"}}", lane_label(l))
+            } else {
+                format!("{{lane=\"{}\",{}}}", lane_label(l), extra)
+            }
+        }
+        None => {
+            if extra.is_empty() {
+                String::new()
+            } else {
+                format!("{{{extra}}}")
+            }
+        }
+    };
+    for q in PROM_QUANTILES {
+        if let Some(v) = h.quantile(q) {
+            let _ = writeln!(
+                out,
+                "{PROM_PREFIX}{name}{} {v}",
+                labels(&format!("quantile=\"{q}\""))
+            );
+        }
+    }
+    let _ = writeln!(out, "{PROM_PREFIX}{name}_sum{} {}", labels(""), h.sum());
+    let _ = writeln!(out, "{PROM_PREFIX}{name}_count{} {}", labels(""), h.count());
+}
+
+/// Render the registry as Prometheus text exposition (format 0.0.4).
+///
+/// Counters get the conventional `_total` suffix; histograms are exposed
+/// summary-style (`quantile` label + `_sum`/`_count`), per lane first and
+/// then a label-free cluster roll-up merged across lanes. Rolling windows
+/// are control-loop state, not export surface — their sampled gauges carry
+/// the values.
+pub fn to_prometheus(reg: &Registry) -> String {
+    let mut out = String::new();
+
+    let mut last = "";
+    for (&(name, lane), &v) in reg.counters() {
+        if name != last {
+            let _ = writeln!(out, "# HELP {PROM_PREFIX}{name}_total {name}");
+            let _ = writeln!(out, "# TYPE {PROM_PREFIX}{name}_total counter");
+            last = name;
+        }
+        let _ = writeln!(out, "{PROM_PREFIX}{name}_total{{lane=\"{}\"}} {v}", lane_label(lane));
+    }
+
+    last = "";
+    for (&(name, lane), &v) in reg.gauges() {
+        if name != last {
+            let _ = writeln!(out, "# HELP {PROM_PREFIX}{name} {name}");
+            let _ = writeln!(out, "# TYPE {PROM_PREFIX}{name} gauge");
+            last = name;
+        }
+        let _ = writeln!(out, "{PROM_PREFIX}{name}{{lane=\"{}\"}} {v}", lane_label(lane));
+    }
+
+    last = "";
+    for (&(name, lane), h) in reg.hists() {
+        if name != last {
+            let _ = writeln!(out, "# HELP {PROM_PREFIX}{name} {name}");
+            let _ = writeln!(out, "# TYPE {PROM_PREFIX}{name} summary");
+            last = name;
+        }
+        write_summary(&mut out, name, Some(lane), h);
+    }
+    // Cluster roll-ups, one per histogram name (associative merge across
+    // lanes), exposed without a lane label.
+    last = "";
+    for (&(name, _), _) in reg.hists() {
+        if name == last {
+            continue;
+        }
+        last = name;
+        if let Some(merged) = reg.merged_hist(name) {
+            write_summary(&mut out, name, None, &merged);
+        }
+    }
+    out
+}
+
+/// Render every recorded time series as CSV: header `t_ms,lane,metric,value`,
+/// rows sorted by `(t_ms, lane, metric)` (ties keep per-series record
+/// order — the sort is stable).
+pub fn to_csv(reg: &Registry) -> String {
+    let mut rows: Vec<(f64, i64, &str, f64)> = Vec::new();
+    for (&(name, lane), pts) in reg.series() {
+        let lane = lane_label(lane);
+        for &(t, v) in pts {
+            rows.push((t, lane, name, v));
+        }
+    }
+    rows.sort_by(|a, b| {
+        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(b.2))
+    });
+    let mut out = String::from("t_ms,lane,metric,value\n");
+    for (t, lane, name, v) in rows {
+        let _ = writeln!(out, "{t},{lane},{name},{v}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{metric, Telemetry};
+    use super::*;
+
+    fn sample_registry() -> (Telemetry, std::rc::Rc<std::cell::RefCell<Registry>>) {
+        let (t, reg) = Telemetry::registry();
+        let (l0, l1) = (t.for_lane(0), t.for_lane(1));
+        l0.add(metric::REQUESTS_COMPLETED, 3);
+        l1.add(metric::REQUESTS_COMPLETED, 4);
+        t.add(metric::LANE_SWAPS, 1); // control lane
+        l0.sample(100.0, metric::QUEUE_DEPTH, 2.0);
+        l1.sample(100.0, metric::QUEUE_DEPTH, 5.0);
+        l0.sample(200.0, metric::QUEUE_DEPTH, 1.0);
+        l0.observe(metric::REQUEST_LATENCY_MS, 50.0);
+        l1.observe(metric::REQUEST_LATENCY_MS, 150.0);
+        (t, reg)
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let (_t, reg) = sample_registry();
+        let text = to_prometheus(&reg.borrow());
+        // Counters: _total suffix, HELP/TYPE once per name, control lane -1.
+        assert!(text.contains("# TYPE trident_requests_completed_total counter"));
+        assert!(text.contains("trident_requests_completed_total{lane=\"0\"} 3"));
+        assert!(text.contains("trident_requests_completed_total{lane=\"1\"} 4"));
+        assert!(text.contains("trident_lane_swaps_total{lane=\"-1\"} 1"));
+        // Gauges hold the latest sample.
+        assert!(text.contains("trident_queue_depth{lane=\"0\"} 1"));
+        assert!(text.contains("trident_queue_depth{lane=\"1\"} 5"));
+        // Summaries: per-lane and label-free roll-up.
+        assert!(text.contains("# TYPE trident_request_latency_ms summary"));
+        assert!(text.contains("trident_request_latency_ms{lane=\"0\",quantile=\"0.5\"} 50"));
+        assert!(text.contains("trident_request_latency_ms_count{lane=\"1\"} 1"));
+        assert!(text.contains("trident_request_latency_ms_count 2"));
+        assert!(text.contains("trident_request_latency_ms_sum 200"));
+        let help_lines =
+            text.lines().filter(|l| l.starts_with("# HELP trident_request_latency_ms")).count();
+        assert_eq!(help_lines, 1, "HELP emitted once per metric name");
+    }
+
+    #[test]
+    fn csv_rows_are_time_then_lane_ordered() {
+        let (_t, reg) = sample_registry();
+        let csv = to_csv(&reg.borrow());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "t_ms,lane,metric,value");
+        assert_eq!(lines[1], "100,0,queue_depth,2");
+        assert_eq!(lines[2], "100,1,queue_depth,5");
+        assert_eq!(lines[3], "200,0,queue_depth,1");
+        assert_eq!(lines.len(), 4);
+    }
+
+    #[test]
+    fn exports_are_reproducible_functions_of_the_registry() {
+        let (_t, reg) = sample_registry();
+        let r = reg.borrow();
+        assert_eq!(to_prometheus(&r), to_prometheus(&r));
+        assert_eq!(to_csv(&r), to_csv(&r));
+    }
+}

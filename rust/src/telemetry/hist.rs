@@ -1,0 +1,270 @@
+//! Log-bucketed streaming histogram with a bounded *relative* quantile
+//! error (DDSketch-style). For accuracy parameter `alpha`, any quantile
+//! estimate `m` of a true value `v > 0` satisfies `|m - v| / v <= alpha`:
+//! bucket `i` covers `(gamma^(i-1), gamma^i]` with `gamma =
+//! (1+alpha)/(1-alpha)`, and the reported mid-point `2*gamma^i/(1+gamma)`
+//! is within `alpha` of every value in the bucket.
+//!
+//! Buckets are sparse (`BTreeMap<i32, u64>`) so memory is proportional to
+//! the dynamic range actually observed (~690 buckets span 1..1e6 at the
+//! default alpha), and **merge is associative**: merging two histograms
+//! adds their bucket counts, so per-lane instruments roll up to cluster
+//! totals in any grouping order with the same error bound.
+
+use std::collections::BTreeMap;
+
+/// Default relative accuracy: quantiles within 1%.
+pub const DEFAULT_ALPHA: f64 = 0.01;
+
+/// Streaming log-bucketed histogram. Values `<= 0` land in a dedicated
+/// zero bucket (latencies and blackouts are non-negative; an exact zero
+/// has no log bucket).
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    alpha: f64,
+    gamma: f64,
+    /// `1 / ln(gamma)`, precomputed for the hot record path.
+    inv_ln_gamma: f64,
+    buckets: BTreeMap<i32, u64>,
+    zero_count: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new(DEFAULT_ALPHA)
+    }
+}
+
+impl LogHistogram {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha < 1.0, "alpha must be in (0, 1)");
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        LogHistogram {
+            alpha,
+            gamma,
+            inv_ln_gamma: 1.0 / gamma.ln(),
+            buckets: BTreeMap::new(),
+            zero_count: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.sum / self.count as f64)
+        }
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.min)
+        }
+    }
+
+    pub fn max(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.max)
+        }
+    }
+
+    /// Record one observation. Non-finite values are ignored (a NaN must
+    /// not poison the bucket index).
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v <= 0.0 {
+            self.zero_count += 1;
+        } else {
+            let i = (v.ln() * self.inv_ln_gamma).ceil() as i32;
+            *self.buckets.entry(i).or_insert(0) += 1;
+        }
+    }
+
+    /// Merge `other` into `self` (bucket-count addition: associative and
+    /// commutative). Both sides must share an accuracy parameter.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert!(
+            (self.alpha - other.alpha).abs() < 1e-12,
+            "cannot merge histograms with different alpha ({} vs {})",
+            self.alpha,
+            other.alpha
+        );
+        for (&i, &c) in &other.buckets {
+            *self.buckets.entry(i).or_insert(0) += c;
+        }
+        self.zero_count += other.zero_count;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Quantile estimate for `q` in `[0, 1]`; `None` on an empty histogram.
+    /// The estimate has relative error `<= alpha` against the rank-`q`
+    /// recorded value, and is clamped to the observed `[min, max]` so the
+    /// extremes are exact.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // Nearest-rank: the smallest recorded value whose cumulative count
+        // reaches ceil(q * count) (rank 1 at q=0 keeps min exact).
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        if rank <= self.zero_count {
+            return Some(0.0_f64.max(self.min));
+        }
+        let mut cum = self.zero_count;
+        for (&i, &c) in &self.buckets {
+            cum += c;
+            if cum >= rank {
+                let est = 2.0 * self.gamma.powi(i) / (1.0 + self.gamma);
+                return Some(est.clamp(self.min, self.max));
+            }
+        }
+        Some(self.max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exact_rank(mut xs: Vec<f64>, q: f64) -> f64 {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((q * xs.len() as f64).ceil() as usize).max(1);
+        xs[rank - 1]
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let h = LogHistogram::default();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.mean(), None);
+
+        let mut h = LogHistogram::default();
+        h.record(42.0);
+        assert_eq!(h.quantile(0.0), Some(42.0));
+        assert_eq!(h.quantile(0.5), Some(42.0));
+        assert_eq!(h.quantile(1.0), Some(42.0));
+    }
+
+    #[test]
+    fn zero_and_negative_values_hit_the_zero_bucket() {
+        let mut h = LogHistogram::default();
+        h.record(0.0);
+        h.record(-5.0);
+        h.record(100.0);
+        assert_eq!(h.count(), 3);
+        // q=0.5 → rank 2 → still inside the zero bucket (min is -5, so the
+        // zero-bucket estimate is clamped up to 0 only when min >= 0).
+        assert!(h.quantile(0.5).unwrap() <= 0.0);
+        assert_eq!(h.quantile(1.0), Some(100.0));
+        h.record(f64::NAN); // ignored
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn quantile_relative_error_is_bounded() {
+        // Deterministic LCG over several magnitudes.
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut xs = Vec::new();
+        let mut h = LogHistogram::default();
+        for _ in 0..5000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let u = (state >> 11) as f64 / (1u64 << 53) as f64;
+            let v = 10f64.powf(u * 5.0 - 1.0); // 0.1 .. 10_000
+            xs.push(v);
+            h.record(v);
+        }
+        for q in [0.0, 0.01, 0.1, 0.5, 0.9, 0.95, 0.99, 0.999, 1.0] {
+            let exact = exact_rank(xs.clone(), q);
+            let est = h.quantile(q).unwrap();
+            let rel = (est - exact).abs() / exact;
+            assert!(rel <= h.alpha() + 1e-9, "q={q}: est {est} vs exact {exact} (rel {rel})");
+        }
+        assert!((h.mean().unwrap() - xs.iter().sum::<f64>() / xs.len() as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_is_associative_and_matches_pooled() {
+        let mut state = 7u64;
+        let mut next = |scale: f64| {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 11) as f64 / (1u64 << 53) as f64) * scale + 0.001
+        };
+        let (mut a, mut b, mut c, mut pooled) = (
+            LogHistogram::default(),
+            LogHistogram::default(),
+            LogHistogram::default(),
+            LogHistogram::default(),
+        );
+        for _ in 0..400 {
+            let (x, y, z) = (next(10.0), next(1000.0), next(0.5));
+            a.record(x);
+            b.record(y);
+            c.record(z);
+            pooled.record(x);
+            pooled.record(y);
+            pooled.record(z);
+        }
+        // (a ⊕ b) ⊕ c  ==  a ⊕ (b ⊕ c)  ==  pooled
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        for h in [&ab_c, &a_bc] {
+            assert_eq!(h.count(), pooled.count());
+            assert!((h.sum() - pooled.sum()).abs() < 1e-6);
+            for q in [0.1, 0.5, 0.9, 0.99] {
+                assert_eq!(h.quantile(q), pooled.quantile(q), "q={q}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different alpha")]
+    fn merge_rejects_mismatched_alpha() {
+        let mut a = LogHistogram::new(0.01);
+        let b = LogHistogram::new(0.02);
+        a.merge(&b);
+    }
+}

@@ -1,0 +1,415 @@
+//! Live telemetry: streaming metrics sampled *during* a run (ISSUE 7).
+//!
+//! PR 6's `obs` traces answer "what happened" after the fact; this layer is
+//! the live half — counters, gauges, per-lane time series and mergeable
+//! log-bucketed latency histograms collected at the same
+//! [`crate::lane::LaneCore`]/executor choke points, exported as Prometheus
+//! text exposition or deterministic CSV, and **consumed by the control
+//! plane itself**: [`crate::monitor::Monitor`] stage-rate windows and the
+//! cascade [`crate::cascade::ThresholdController`] verdict window are
+//! [`RollingWindow`]/[`VerdictWindow`] handles that a [`Registry`] can
+//! share, so the signal a controller reacts to is the same object the
+//! exporters snapshot.
+//!
+//! Design constraints (mirroring `obs`):
+//!
+//! * **Near-zero cost when off.** [`Telemetry`] is a cloneable handle with
+//!   an `Option` sink; [`Telemetry::off()`] (the default everywhere) makes
+//!   every instrument call a single branch with no allocation — pinned in
+//!   `benches/perf_hotpath.rs` next to the trace-emit numbers.
+//! * **Deterministic.** Instruments record only simulation-time
+//!   quantities; the CSV and Prometheus snapshots of a same-seed run are
+//!   byte-identical (BTreeMap key order, no wall-clock values).
+//! * **Mergeable.** Per-lane histograms roll up to cluster totals by
+//!   associative bucket addition ([`LogHistogram::merge`]), so the
+//!   exposition can present both per-lane and cluster quantiles from one
+//!   pass of instruments.
+
+pub mod export;
+pub mod hist;
+pub mod window;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+pub use hist::{LogHistogram, DEFAULT_ALPHA};
+pub use window::{RollingWindow, VerdictWindow};
+
+/// Lane stamp for cluster-level instruments (arbiter moves, fault
+/// blackouts): same convention as [`crate::obs::CONTROL_LANE`], exported
+/// as lane `-1`.
+pub use crate::obs::CONTROL_LANE;
+
+/// Default span for rolling windows created implicitly by
+/// [`Telemetry::push_window`].
+pub const DEFAULT_WINDOW_MS: f64 = 60_000.0;
+
+/// Canonical instrument names. `&'static str` keys keep the off→on path
+/// allocation-free and the registry maps deterministically ordered.
+pub mod metric {
+    /// Requests waiting for dispatch (gauge series, per lane).
+    pub const QUEUE_DEPTH: &str = "queue_depth";
+    /// Dispatched plan chains in flight (gauge series, per lane).
+    pub const INFLIGHT_PLANS: &str = "inflight_plans";
+    /// Busy fraction of the lane's GPUs (gauge series, per lane).
+    pub const GPU_UTILIZATION: &str = "gpu_utilization";
+    /// Device handoff-buffer occupancy, GB (gauge series, per lane).
+    pub const HANDOFF_GB: &str = "handoff_gb";
+    /// Rolling-window SLO attainment (gauge series sampled from
+    /// [`SLO_WINDOW`]).
+    pub const SLO_ATTAINMENT: &str = "slo_attainment";
+    /// Rolling window of per-completion on-time verdicts (weight 1/0).
+    pub const SLO_WINDOW: &str = "slo_window";
+    /// End-to-end served latency (log-bucketed histogram, per lane).
+    pub const REQUEST_LATENCY_MS: &str = "request_latency_ms";
+    /// Streaming latency quantiles (gauge series sampled from the
+    /// histogram).
+    pub const LATENCY_P50_MS: &str = "latency_p50_ms";
+    pub const LATENCY_P95_MS: &str = "latency_p95_ms";
+    pub const LATENCY_P99_MS: &str = "latency_p99_ms";
+    /// Lifecycle counters, per lane.
+    pub const REQUESTS_ARRIVED: &str = "requests_arrived";
+    pub const REQUESTS_COMPLETED: &str = "requests_completed";
+    pub const REQUESTS_OOM: &str = "requests_oom";
+    pub const REQUESTS_DROPPED: &str = "requests_dropped";
+    /// Monitor stage-rate windows (shared with
+    /// [`crate::monitor::Monitor`] when attached).
+    pub const STAGE_RATE: [&str; 3] =
+        ["stage_rate_encode", "stage_rate_diffuse", "stage_rate_decode"];
+    /// Cascade escalation instruments (control lane).
+    pub const CASCADE_ESCALATIONS: &str = "cascade_escalations";
+    pub const CASCADE_ESCALATION_WINDOW: &str = "cascade_escalation_window";
+    pub const CASCADE_ESCALATION_RATE: &str = "cascade_escalation_rate";
+    /// Cascade quality-verdict window (shared with the
+    /// [`crate::cascade::ThresholdController`] when attached) + its
+    /// sampled attainment series.
+    pub const CASCADE_VERDICTS: &str = "cascade_quality_verdicts";
+    pub const CASCADE_QUALITY: &str = "cascade_quality_attainment";
+    /// Blackout histograms + counters (control lane): planned resizes vs
+    /// fault recoveries.
+    pub const RESIZE_BLACKOUT_MS: &str = "resize_blackout_ms";
+    pub const FAULT_BLACKOUT_MS: &str = "fault_blackout_ms";
+    pub const LANE_SWAPS: &str = "lane_swaps";
+    pub const FAULT_BLACKOUTS: &str = "fault_blackouts";
+}
+
+/// Instrument key: `(metric name, lane)`. Deterministic `Ord` (str content,
+/// then lane) keeps every export stable.
+pub type Key = (&'static str, u32);
+
+/// The instrument store behind an enabled [`Telemetry`] handle.
+#[derive(Default)]
+pub struct Registry {
+    counters: BTreeMap<Key, u64>,
+    gauges: BTreeMap<Key, f64>,
+    hists: BTreeMap<Key, LogHistogram>,
+    /// Per-instrument time series: `(t_ms, value)` in record order (event
+    /// time is monotone per sampler).
+    series: BTreeMap<Key, Vec<(f64, f64)>>,
+    windows: BTreeMap<Key, Rc<RefCell<RollingWindow>>>,
+    verdicts: BTreeMap<Key, Rc<RefCell<VerdictWindow>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &'static str, lane: u32, delta: u64) {
+        *self.counters.entry((name, lane)).or_insert(0) += delta;
+    }
+
+    pub fn set_gauge(&mut self, name: &'static str, lane: u32, v: f64) {
+        self.gauges.insert((name, lane), v);
+    }
+
+    /// Gauge + time-series point.
+    pub fn sample(&mut self, t_ms: f64, name: &'static str, lane: u32, v: f64) {
+        self.gauges.insert((name, lane), v);
+        self.series.entry((name, lane)).or_default().push((t_ms, v));
+    }
+
+    pub fn observe(&mut self, name: &'static str, lane: u32, v: f64) {
+        self.hists.entry((name, lane)).or_default().record(v);
+    }
+
+    /// Get-or-create the shared rolling window for `(name, lane)`. The
+    /// `window_ms` applies only at creation; later callers share the
+    /// existing window regardless.
+    pub fn window(
+        &mut self,
+        name: &'static str,
+        lane: u32,
+        window_ms: f64,
+    ) -> Rc<RefCell<RollingWindow>> {
+        self.windows
+            .entry((name, lane))
+            .or_insert_with(|| Rc::new(RefCell::new(RollingWindow::new(window_ms))))
+            .clone()
+    }
+
+    /// Get-or-create the shared verdict window for `(name, lane)` (`cap`
+    /// applies only at creation).
+    pub fn verdicts(
+        &mut self,
+        name: &'static str,
+        lane: u32,
+        cap: usize,
+    ) -> Rc<RefCell<VerdictWindow>> {
+        self.verdicts
+            .entry((name, lane))
+            .or_insert_with(|| Rc::new(RefCell::new(VerdictWindow::new(cap))))
+            .clone()
+    }
+
+    pub fn counter(&self, name: &'static str, lane: u32) -> Option<u64> {
+        self.counters.get(&(name, lane)).copied()
+    }
+
+    pub fn gauge(&self, name: &'static str, lane: u32) -> Option<f64> {
+        self.gauges.get(&(name, lane)).copied()
+    }
+
+    pub fn hist(&self, name: &'static str, lane: u32) -> Option<&LogHistogram> {
+        self.hists.get(&(name, lane))
+    }
+
+    /// Cluster roll-up: every lane's `name` histogram merged (associative,
+    /// so grouping order is irrelevant). `None` when no lane recorded it.
+    pub fn merged_hist(&self, name: &str) -> Option<LogHistogram> {
+        let mut out: Option<LogHistogram> = None;
+        for ((n, _), h) in &self.hists {
+            if *n != name {
+                continue;
+            }
+            match &mut out {
+                Some(acc) => acc.merge(h),
+                None => out = Some(h.clone()),
+            }
+        }
+        out
+    }
+
+    pub fn series_of(&self, name: &'static str, lane: u32) -> Option<&[(f64, f64)]> {
+        self.series.get(&(name, lane)).map(|v| v.as_slice())
+    }
+
+    // Exporter views (deterministically ordered).
+    pub fn counters(&self) -> &BTreeMap<Key, u64> {
+        &self.counters
+    }
+
+    pub fn gauges(&self) -> &BTreeMap<Key, f64> {
+        &self.gauges
+    }
+
+    pub fn hists(&self) -> &BTreeMap<Key, LogHistogram> {
+        &self.hists
+    }
+
+    pub fn series(&self) -> &BTreeMap<Key, Vec<(f64, f64)>> {
+        &self.series
+    }
+}
+
+/// Cheap, cloneable instrument handle — the telemetry twin of
+/// [`crate::obs::Tracer`]. Every instrumented component holds one; clones
+/// share the registry. [`Telemetry::off()`] (the default everywhere) is a
+/// `None` registry: every instrument call is one branch, no allocation.
+#[derive(Clone)]
+pub struct Telemetry {
+    lane: u32,
+    sink: Option<Rc<RefCell<Registry>>>,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::off()
+    }
+}
+
+impl Telemetry {
+    /// Disabled handle: all instrument calls short-circuit.
+    pub fn off() -> Telemetry {
+        Telemetry { lane: CONTROL_LANE, sink: None }
+    }
+
+    /// Fresh registry + its enabled handle (control-lane stamped; fan out
+    /// with [`Telemetry::for_lane`]).
+    pub fn registry() -> (Telemetry, Rc<RefCell<Registry>>) {
+        let reg = Rc::new(RefCell::new(Registry::new()));
+        (Telemetry { lane: CONTROL_LANE, sink: Some(reg.clone()) }, reg)
+    }
+
+    /// Handle over an existing registry.
+    pub fn with_registry(reg: Rc<RefCell<Registry>>) -> Telemetry {
+        Telemetry { lane: CONTROL_LANE, sink: Some(reg) }
+    }
+
+    /// A clone stamped with a lane id.
+    pub fn for_lane(&self, lane: u32) -> Telemetry {
+        Telemetry { lane, sink: self.sink.clone() }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    pub fn lane(&self) -> u32 {
+        self.lane
+    }
+
+    /// Increment a counter.
+    #[inline]
+    pub fn add(&self, name: &'static str, delta: u64) {
+        if let Some(reg) = &self.sink {
+            reg.borrow_mut().add(name, self.lane, delta);
+        }
+    }
+
+    /// Record into a streaming histogram.
+    #[inline]
+    pub fn observe(&self, name: &'static str, v: f64) {
+        if let Some(reg) = &self.sink {
+            reg.borrow_mut().observe(name, self.lane, v);
+        }
+    }
+
+    /// Set a gauge (no time-series point).
+    #[inline]
+    pub fn gauge(&self, name: &'static str, v: f64) {
+        if let Some(reg) = &self.sink {
+            reg.borrow_mut().set_gauge(name, self.lane, v);
+        }
+    }
+
+    /// Set a gauge and append a `(t_ms, v)` time-series point.
+    #[inline]
+    pub fn sample(&self, t_ms: f64, name: &'static str, v: f64) {
+        if let Some(reg) = &self.sink {
+            reg.borrow_mut().sample(t_ms, name, self.lane, v);
+        }
+    }
+
+    /// Push a weighted event into the shared rolling window `name`
+    /// (created at [`DEFAULT_WINDOW_MS`] on first touch).
+    #[inline]
+    pub fn push_window(&self, name: &'static str, t_ms: f64, weight: f64) {
+        if let Some(reg) = &self.sink {
+            let w = reg.borrow_mut().window(name, self.lane, DEFAULT_WINDOW_MS);
+            w.borrow_mut().push(t_ms, weight);
+        }
+    }
+
+    /// Mean weight of the shared rolling window `name` (None when off, or
+    /// when the window is absent/empty).
+    pub fn window_mean(&self, name: &'static str, now_ms: f64) -> Option<f64> {
+        let reg = self.sink.as_ref()?;
+        let w = reg.borrow().windows.get(&(name, self.lane)).cloned()?;
+        let m = w.borrow_mut().mean_weight(now_ms);
+        m
+    }
+
+    /// Rate (weight/s) of the shared rolling window `name`.
+    pub fn window_rate(&self, name: &'static str, now_ms: f64) -> Option<f64> {
+        let reg = self.sink.as_ref()?;
+        let w = reg.borrow().windows.get(&(name, self.lane)).cloned()?;
+        let r = w.borrow_mut().rate_per_sec(now_ms);
+        Some(r)
+    }
+
+    /// Quantile of this lane's `name` histogram.
+    pub fn hist_quantile(&self, name: &'static str, q: f64) -> Option<f64> {
+        let reg = self.sink.as_ref()?;
+        let reg = reg.borrow();
+        reg.hist(name, self.lane)?.quantile(q)
+    }
+
+    /// Shared rolling-window handle for closed-loop consumers (None when
+    /// off — the consumer keeps its private window).
+    pub fn shared_window(
+        &self,
+        name: &'static str,
+        window_ms: f64,
+    ) -> Option<Rc<RefCell<RollingWindow>>> {
+        let reg = self.sink.as_ref()?;
+        Some(reg.borrow_mut().window(name, self.lane, window_ms))
+    }
+
+    /// Shared verdict-window handle for closed-loop consumers.
+    pub fn shared_verdicts(
+        &self,
+        name: &'static str,
+        cap: usize,
+    ) -> Option<Rc<RefCell<VerdictWindow>>> {
+        let reg = self.sink.as_ref()?;
+        Some(reg.borrow_mut().verdicts(name, self.lane, cap))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_handle_is_inert() {
+        let t = Telemetry::off();
+        assert!(!t.enabled());
+        t.add(metric::REQUESTS_COMPLETED, 1);
+        t.observe(metric::REQUEST_LATENCY_MS, 5.0);
+        t.sample(0.0, metric::QUEUE_DEPTH, 1.0);
+        t.push_window(metric::SLO_WINDOW, 0.0, 1.0);
+        assert_eq!(t.window_mean(metric::SLO_WINDOW, 0.0), None);
+        assert_eq!(t.hist_quantile(metric::REQUEST_LATENCY_MS, 0.5), None);
+        assert!(t.shared_window(metric::SLO_WINDOW, 1000.0).is_none());
+        assert!(t.shared_verdicts(metric::CASCADE_VERDICTS, 8).is_none());
+    }
+
+    #[test]
+    fn instruments_record_per_lane_and_roll_up() {
+        let (t, reg) = Telemetry::registry();
+        let (l0, l1) = (t.for_lane(0), t.for_lane(1));
+        l0.add(metric::REQUESTS_COMPLETED, 2);
+        l1.add(metric::REQUESTS_COMPLETED, 3);
+        l0.observe(metric::REQUEST_LATENCY_MS, 10.0);
+        l1.observe(metric::REQUEST_LATENCY_MS, 1000.0);
+        l0.sample(5.0, metric::QUEUE_DEPTH, 7.0);
+
+        let r = reg.borrow();
+        assert_eq!(r.counter(metric::REQUESTS_COMPLETED, 0), Some(2));
+        assert_eq!(r.counter(metric::REQUESTS_COMPLETED, 1), Some(3));
+        assert_eq!(r.gauge(metric::QUEUE_DEPTH, 0), Some(7.0));
+        assert_eq!(r.series_of(metric::QUEUE_DEPTH, 0), Some(&[(5.0, 7.0)][..]));
+        let merged = r.merged_hist(metric::REQUEST_LATENCY_MS).unwrap();
+        assert_eq!(merged.count(), 2);
+        assert_eq!(merged.min(), Some(10.0));
+        assert_eq!(merged.max(), Some(1000.0));
+    }
+
+    #[test]
+    fn shared_windows_are_one_object() {
+        let (t, _reg) = Telemetry::registry();
+        let l0 = t.for_lane(0);
+        let handle = l0.shared_window(metric::SLO_WINDOW, 60_000.0).unwrap();
+        // The instrument path and the controller handle see the same window.
+        l0.push_window(metric::SLO_WINDOW, 100.0, 1.0);
+        l0.push_window(metric::SLO_WINDOW, 200.0, 0.0);
+        assert_eq!(handle.borrow().len(), 2);
+        assert_eq!(l0.window_mean(metric::SLO_WINDOW, 200.0), Some(0.5));
+        // And vice versa: a push through the handle is visible to reads.
+        handle.borrow_mut().push(300.0, 0.0);
+        assert!((l0.window_mean(metric::SLO_WINDOW, 300.0).unwrap() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn verdict_handles_share_state() {
+        let (t, _reg) = Telemetry::registry();
+        let a = t.shared_verdicts(metric::CASCADE_VERDICTS, 4).unwrap();
+        let b = t.shared_verdicts(metric::CASCADE_VERDICTS, 999).unwrap(); // cap ignored: existing
+        a.borrow_mut().observe(true);
+        assert_eq!(b.borrow().observed(), 1);
+        assert_eq!(b.borrow().cap(), 4);
+    }
+}

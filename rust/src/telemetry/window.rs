@@ -1,0 +1,171 @@
+//! Rolling windows: the shared observe→decide signal types.
+//!
+//! Two shapes cover every controller in the tree:
+//!
+//! * [`RollingWindow`] — time-based (`window_ms`), weighted events. The
+//!   Monitor's per-stage throughput estimator, the lanes' demand windows,
+//!   and the telemetry samplers' rate/attainment signals are all this type
+//!   (`util::stats::SlidingWindow` is a re-export). Registered in a
+//!   [`crate::telemetry::Registry`] it becomes a *shared* handle: the
+//!   instrument that records into it and the controller that reads it see
+//!   the same window.
+//! * [`VerdictWindow`] — count-capped boolean ring: the cascade
+//!   [`crate::cascade::ThresholdController`]'s quality-verdict evidence,
+//!   with the total-observed counter its stale-evidence guard keys on.
+
+use std::collections::VecDeque;
+
+/// Time-based sliding window over `(t_ms, weight)` events, evicting
+/// entries older than `window_ms` on every push/read.
+#[derive(Clone, Debug)]
+pub struct RollingWindow {
+    window_ms: f64,
+    events: VecDeque<(f64, f64)>, // (t_ms, weight)
+}
+
+impl RollingWindow {
+    pub fn new(window_ms: f64) -> Self {
+        RollingWindow { window_ms, events: Default::default() }
+    }
+
+    pub fn window_ms(&self) -> f64 {
+        self.window_ms
+    }
+
+    pub fn push(&mut self, t_ms: f64, weight: f64) {
+        self.events.push_back((t_ms, weight));
+        self.evict(t_ms);
+    }
+
+    /// Drop all retained events (a consumer re-adopting a shared window
+    /// starts from fresh evidence, e.g. a lane monitor after an engine
+    /// rebuild).
+    pub fn clear(&mut self) {
+        self.events.clear();
+    }
+
+    fn evict(&mut self, now_ms: f64) {
+        while let Some(&(t, _)) = self.events.front() {
+            if now_ms - t > self.window_ms {
+                self.events.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Weighted events per second over the window ending at `now_ms`.
+    pub fn rate_per_sec(&mut self, now_ms: f64) -> f64 {
+        self.evict(now_ms);
+        let sum: f64 = self.events.iter().map(|&(_, w)| w).sum();
+        sum / (self.window_ms / 1000.0)
+    }
+
+    /// Total weight currently in the window ending at `now_ms`.
+    pub fn sum_weight(&mut self, now_ms: f64) -> f64 {
+        self.evict(now_ms);
+        self.events.iter().map(|&(_, w)| w).sum()
+    }
+
+    /// Mean weight per event in the window ending at `now_ms` — the
+    /// attainment read when weights are 0/1 verdicts. `None` when empty
+    /// ("no data" must never masquerade as a measured 0).
+    pub fn mean_weight(&mut self, now_ms: f64) -> Option<f64> {
+        self.evict(now_ms);
+        if self.events.is_empty() {
+            return None;
+        }
+        Some(self.events.iter().map(|&(_, w)| w).sum::<f64>() / self.events.len() as f64)
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Count-capped boolean verdict ring + total-observed counter.
+#[derive(Clone, Debug)]
+pub struct VerdictWindow {
+    cap: usize,
+    window: VecDeque<bool>,
+    observed: u64,
+}
+
+impl VerdictWindow {
+    pub fn new(cap: usize) -> Self {
+        VerdictWindow { cap: cap.max(1), window: VecDeque::new(), observed: 0 }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn observe(&mut self, ok: bool) {
+        self.window.push_back(ok);
+        self.observed += 1;
+        if self.window.len() > self.cap {
+            self.window.pop_front();
+        }
+    }
+
+    /// Total verdicts ever observed (not just the retained window) — the
+    /// stale-evidence guard's clock.
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+
+    /// Fraction of retained verdicts that are `true`; `None` when empty.
+    pub fn frac_ok(&self) -> Option<f64> {
+        if self.window.is_empty() {
+            return None;
+        }
+        let ok = self.window.iter().filter(|&&q| q).count();
+        Some(ok as f64 / self.window.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rolling_window_mean_and_sum() {
+        let mut w = RollingWindow::new(1000.0);
+        assert_eq!(w.mean_weight(0.0), None);
+        w.push(0.0, 1.0);
+        w.push(500.0, 0.0);
+        assert_eq!(w.mean_weight(500.0), Some(0.5));
+        assert_eq!(w.sum_weight(500.0), 1.0);
+        // t=0 ages out at t=1600: only the 0-weight verdict remains.
+        assert_eq!(w.mean_weight(1600.0), Some(0.0));
+        assert_eq!(w.len(), 1);
+    }
+
+    #[test]
+    fn verdict_window_caps_and_counts() {
+        let mut v = VerdictWindow::new(4);
+        assert_eq!(v.frac_ok(), None);
+        for _ in 0..4 {
+            v.observe(false);
+        }
+        assert_eq!(v.frac_ok(), Some(0.0));
+        for _ in 0..4 {
+            v.observe(true); // displaces the failing prefix entirely
+        }
+        assert_eq!(v.frac_ok(), Some(1.0));
+        assert_eq!(v.len(), 4);
+        assert_eq!(v.observed(), 8);
+    }
+}

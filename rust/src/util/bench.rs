@@ -1,10 +1,17 @@
-//! Machine-readable bench output.
+//! Machine-readable bench output and the perf-regression comparator.
 //!
 //! Every bench records `{bench, metric, value}` rows through a
 //! [`BenchRecorder`] and writes them to `BENCH_<name>.json` (repo root by
 //! default, `BENCH_OUT_DIR` to override) so the perf trajectory is tracked
 //! across PRs: CI's perf-smoke job uploads the file as an artifact, and a
 //! reviewer can diff the numbers instead of eyeballing stdout.
+//!
+//! [`compare_benches`] closes the loop: CI diffs a freshly-produced bench
+//! file against the committed baseline with per-metric tolerances (time
+//! suffixes regress *upward*, throughput regresses *downward*, everything
+//! else must match exactly) and fails the job on regression — see the
+//! `bench-check` subcommand in `main.rs`. An empty committed baseline
+//! (`[]`, the bootstrap state) compares as trivially passing.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -76,6 +83,163 @@ impl BenchRecorder {
     }
 }
 
+/// Relative headroom for time-like metrics (`*_ns`/`*_us`/`*_ms`/`*_s`):
+/// wall-clock microbenchmarks on shared CI runners are noisy, so only a
+/// slowdown beyond +75% fails the gate.
+pub const TIME_TOLERANCE: f64 = 0.75;
+/// Relative headroom for throughput-like metrics (`*_rps`, `*_per_sec`):
+/// down is bad; a drop beyond -40% fails.
+pub const RATE_TOLERANCE: f64 = 0.40;
+/// Everything else (counts, ratios, sizes) is deterministic in this
+/// simulator and must match the baseline up to float noise.
+pub const EXACT_TOLERANCE: f64 = 1e-9;
+
+/// Which direction a metric regresses in, and how much headroom it gets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Durations: regression = value grew beyond the tolerance.
+    Time,
+    /// Throughput: regression = value shrank beyond the tolerance.
+    Rate,
+    /// Deterministic outputs: regression = any drift beyond float noise.
+    Exact,
+}
+
+/// Classify a metric by naming convention (the same suffix discipline every
+/// bench in `benches/` already follows).
+pub fn metric_kind(metric: &str) -> MetricKind {
+    let time_suffix = ["_ns", "_us", "_ms", "_s"].iter().any(|s| metric.ends_with(s));
+    if time_suffix || metric.contains("latency") {
+        MetricKind::Time
+    } else if metric.ends_with("_rps") || metric.ends_with("_per_sec") || metric.contains("throughput") {
+        MetricKind::Rate
+    } else {
+        MetricKind::Exact
+    }
+}
+
+/// One baseline/current pair, compared.
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub bench: String,
+    pub metric: String,
+    pub kind: MetricKind,
+    pub baseline: f64,
+    pub current: f64,
+    pub regressed: bool,
+}
+
+impl BenchDelta {
+    fn compare(bench: String, metric: String, baseline: f64, current: f64) -> BenchDelta {
+        let kind = metric_kind(&metric);
+        let regressed = match kind {
+            MetricKind::Time => current > baseline * (1.0 + TIME_TOLERANCE) + 1e-12,
+            MetricKind::Rate => current < baseline * (1.0 - RATE_TOLERANCE) - 1e-12,
+            MetricKind::Exact => {
+                (current - baseline).abs() > baseline.abs().max(1.0) * EXACT_TOLERANCE
+            }
+        };
+        BenchDelta { bench, metric, kind, baseline, current, regressed }
+    }
+}
+
+/// Outcome of diffing a fresh bench file against the committed baseline.
+#[derive(Clone, Debug, Default)]
+pub struct RegressionReport {
+    /// Every metric present in both files, compared.
+    pub deltas: Vec<BenchDelta>,
+    /// `(bench, metric)` present in the baseline but missing from the
+    /// current run — a silently-vanished measurement fails the gate.
+    pub missing: Vec<(String, String)>,
+    /// Present only in the current run (new metrics: informational).
+    pub added: Vec<(String, String)>,
+    /// The committed baseline was `[]` (bootstrap): nothing to gate on.
+    pub empty_baseline: bool,
+}
+
+impl RegressionReport {
+    pub fn regressions(&self) -> Vec<&BenchDelta> {
+        self.deltas.iter().filter(|d| d.regressed).collect()
+    }
+
+    /// Gate verdict: fail on any regressed metric or vanished measurement,
+    /// except in the fail-soft bootstrap state (empty baseline).
+    pub fn failed(&self) -> bool {
+        !self.empty_baseline && (!self.missing.is_empty() || self.deltas.iter().any(|d| d.regressed))
+    }
+}
+
+impl std::fmt::Display for RegressionReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.empty_baseline {
+            return writeln!(f, "bench-check: baseline is empty (bootstrap); nothing to gate on");
+        }
+        for d in &self.deltas {
+            let verdict = if d.regressed { "REGRESSED" } else { "ok" };
+            writeln!(
+                f,
+                "{verdict:>9}  {}/{} [{:?}]  {} -> {}",
+                d.bench, d.metric, d.kind, d.baseline, d.current
+            )?;
+        }
+        for (b, m) in &self.missing {
+            writeln!(f, "  MISSING  {b}/{m}  (in baseline, absent from current run)")?;
+        }
+        for (b, m) in &self.added {
+            writeln!(f, "      new  {b}/{m}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse one `BENCH_*.json` text into `(bench, metric) -> value`. Rejects
+/// anything that isn't an array of `{bench, metric, value}` rows.
+fn parse_bench_records(text: &str) -> Result<BTreeMap<(String, String), f64>, String> {
+    let parsed = Json::parse(text.trim()).map_err(|e| format!("bad bench json: {e}"))?;
+    let arr = parsed.as_arr().ok_or("bench file is not a JSON array")?;
+    let mut out = BTreeMap::new();
+    for row in arr {
+        let bench = row
+            .get("bench")
+            .and_then(|j| j.as_str())
+            .ok_or("row missing string field 'bench'")?;
+        let metric = row
+            .get("metric")
+            .and_then(|j| j.as_str())
+            .ok_or("row missing string field 'metric'")?;
+        let value =
+            row.get("value").and_then(|j| j.as_f64()).ok_or("row missing number field 'value'")?;
+        out.insert((bench.to_string(), metric.to_string()), value);
+    }
+    Ok(out)
+}
+
+/// Diff a fresh bench file against the committed baseline (both as raw
+/// `BENCH_*.json` text). Per-metric tolerances by naming convention; see
+/// [`RegressionReport::failed`] for the gate verdict.
+pub fn compare_benches(baseline: &str, current: &str) -> Result<RegressionReport, String> {
+    let base = parse_bench_records(baseline)?;
+    let cur = parse_bench_records(current)?;
+    if base.is_empty() {
+        return Ok(RegressionReport { empty_baseline: true, ..Default::default() });
+    }
+    let mut report = RegressionReport::default();
+    for ((bench, metric), &bv) in &base {
+        match cur.get(&(bench.clone(), metric.clone())) {
+            Some(&cv) => report
+                .deltas
+                .push(BenchDelta::compare(bench.clone(), metric.clone(), bv, cv)),
+            None => report.missing.push((bench.clone(), metric.clone())),
+        }
+    }
+    for (bench, metric) in cur.keys() {
+        if !base.contains_key(&(bench.clone(), metric.clone())) {
+            report.added.push((bench.clone(), metric.clone()));
+        }
+    }
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +259,78 @@ mod tests {
         assert_eq!(arr[0].get("metric").and_then(|j| j.as_str()), Some("alpha_ms"));
         assert_eq!(arr[0].get("value").and_then(|j| j.as_f64()), Some(1.5));
         assert_eq!(arr[2].get("value").and_then(|j| j.as_f64()), Some(0.0));
+    }
+
+    fn bench_json(rows: &[(&str, &str, f64)]) -> String {
+        let mut b: BTreeMap<&str, BenchRecorder> = BTreeMap::new();
+        for &(bench, metric, v) in rows {
+            b.entry(bench).or_insert_with(|| BenchRecorder::new(bench)).record(metric, v);
+        }
+        let all: Vec<Json> = b
+            .values()
+            .flat_map(|r| r.to_json().as_arr().unwrap().to_vec())
+            .collect();
+        Json::Arr(all).to_string()
+    }
+
+    #[test]
+    fn comparator_applies_per_kind_tolerances() {
+        assert_eq!(metric_kind("emit_ns"), MetricKind::Time);
+        assert_eq!(metric_kind("p99_latency"), MetricKind::Time);
+        assert_eq!(metric_kind("served_rps"), MetricKind::Rate);
+        assert_eq!(metric_kind("events"), MetricKind::Exact);
+        let base = bench_json(&[
+            ("hot", "emit_ns", 100.0),
+            ("hot", "served_rps", 50.0),
+            ("hot", "events", 7.0),
+        ]);
+        // Inside every tolerance: time +50% < +75%, rate -20% < -40%, exact
+        // unchanged.
+        let ok = bench_json(&[
+            ("hot", "emit_ns", 150.0),
+            ("hot", "served_rps", 40.0),
+            ("hot", "events", 7.0),
+        ]);
+        let rep = compare_benches(&base, &ok).unwrap();
+        assert!(!rep.failed(), "{rep}");
+        assert_eq!(rep.regressions().len(), 0);
+        // Each kind violated in its bad direction.
+        let bad = bench_json(&[
+            ("hot", "emit_ns", 200.0),   // +100% > +75%
+            ("hot", "served_rps", 20.0), // -60% > -40%
+            ("hot", "events", 8.0),      // deterministic drift
+        ]);
+        let rep = compare_benches(&base, &bad).unwrap();
+        assert!(rep.failed());
+        assert_eq!(rep.regressions().len(), 3);
+        // Improvements never fail: faster time, higher rate.
+        let better = bench_json(&[
+            ("hot", "emit_ns", 10.0),
+            ("hot", "served_rps", 500.0),
+            ("hot", "events", 7.0),
+        ]);
+        assert!(!compare_benches(&base, &better).unwrap().failed());
+    }
+
+    #[test]
+    fn vanished_metrics_fail_and_new_ones_are_informational() {
+        let base = bench_json(&[("hot", "emit_ns", 100.0)]);
+        let cur = bench_json(&[("hot", "other_ns", 1.0)]);
+        let rep = compare_benches(&base, &cur).unwrap();
+        assert!(rep.failed());
+        assert_eq!(rep.missing, vec![("hot".to_string(), "emit_ns".to_string())]);
+        assert_eq!(rep.added, vec![("hot".to_string(), "other_ns".to_string())]);
+    }
+
+    #[test]
+    fn empty_baseline_is_fail_soft() {
+        let rep = compare_benches("[]\n", &bench_json(&[("hot", "emit_ns", 1.0)])).unwrap();
+        assert!(rep.empty_baseline);
+        assert!(!rep.failed());
+        assert!(format!("{rep}").contains("bootstrap"));
+        // Malformed input is an error, not a pass.
+        assert!(compare_benches("{", "[]").is_err());
+        assert!(compare_benches("[]", "[{\"bench\":1}]").is_err());
     }
 
     #[test]

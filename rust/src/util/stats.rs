@@ -74,48 +74,12 @@ impl Welford {
 }
 
 /// Fixed-capacity sliding window over timestamped counts — the Monitor's
-/// per-stage throughput estimator (§5.1).
-#[derive(Clone, Debug)]
-pub struct SlidingWindow {
-    window_ms: f64,
-    events: std::collections::VecDeque<(f64, f64)>, // (t_ms, weight)
-}
-
-impl SlidingWindow {
-    pub fn new(window_ms: f64) -> Self {
-        SlidingWindow { window_ms, events: Default::default() }
-    }
-
-    pub fn push(&mut self, t_ms: f64, weight: f64) {
-        self.events.push_back((t_ms, weight));
-        self.evict(t_ms);
-    }
-
-    fn evict(&mut self, now_ms: f64) {
-        while let Some(&(t, _)) = self.events.front() {
-            if now_ms - t > self.window_ms {
-                self.events.pop_front();
-            } else {
-                break;
-            }
-        }
-    }
-
-    /// Weighted events per second over the window ending at `now_ms`.
-    pub fn rate_per_sec(&mut self, now_ms: f64) -> f64 {
-        self.evict(now_ms);
-        let sum: f64 = self.events.iter().map(|&(_, w)| w).sum();
-        sum / (self.window_ms / 1000.0)
-    }
-
-    pub fn len(&self) -> usize {
-        self.events.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.events.is_empty()
-    }
-}
+/// per-stage throughput estimator (§5.1). Since PR 7 this is the telemetry
+/// [`crate::telemetry::RollingWindow`] (identical push/evict/rate
+/// semantics), so monitor/lane demand windows and telemetry samplers share
+/// one signal type that a `telemetry::Registry` can hand out as a shared
+/// handle.
+pub use crate::telemetry::window::RollingWindow as SlidingWindow;
 
 #[cfg(test)]
 mod tests {

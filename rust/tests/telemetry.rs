@@ -1,0 +1,382 @@
+//! Telemetry integration (ISSUE 7 acceptance): the live-metrics subsystem
+//! is pinned on four contracts, end-to-end over real runs —
+//!
+//! * **Non-perturbation** — attaching a registry changes nothing about the
+//!   run it observes: completions, SLO attainment and (for the adaptive
+//!   cascade) every threshold decision are identical to the unobserved run;
+//! * **Coverage** — a co-serving run populates per-lane lifecycle counters
+//!   that reconcile exactly with the metrics layer, per-lane gauge series,
+//!   a mergeable latency histogram, and the monitor's stage-rate windows;
+//! * **Exportability** — the Prometheus snapshot parses back line-by-line
+//!   under the text-exposition grammar, and both exporters are
+//!   byte-identical across same-seed runs;
+//! * **Closed loop** — the adaptive cascade controller demonstrably reads
+//!   its quality-verdict evidence from the shared registry window
+//!   ([`metric::CASCADE_VERDICTS`]), not a private counter.
+
+use std::collections::BTreeMap;
+
+use tridentserve::cascade::{
+    calibrate_threshold, run_cascade, run_cascade_observed, QualityModel, RouterMode,
+    ThresholdController, VERDICT_CAP,
+};
+use tridentserve::config::ClusterSpec;
+use tridentserve::coserve::{
+    run_coserve, run_coserve_observed, ClusterArbiter, CoServeConfig, CoServeReport,
+    PipelineSetup,
+};
+use tridentserve::obs::{Tracer, CONTROL_LANE};
+use tridentserve::request::Outcome;
+use tridentserve::telemetry::export::{to_csv, to_prometheus};
+use tridentserve::telemetry::{metric, Telemetry};
+use tridentserve::workload::{
+    mixed, DifficultyModel, LoadShape, MixedSpec, MixedTrace, Trace, TraceGen, WorkloadKind,
+};
+
+const DURATION_MS: f64 = 120_000.0;
+
+/// The opposed-step co-serving scenario from `tests/obs_trace.rs`: two
+/// pipelines on one shared cluster, load shifting between them mid-run so
+/// the arbiter (and therefore lane rebuilds) are exercised.
+fn scenario(cluster: &ClusterSpec, seed: u64) -> (Vec<PipelineSetup>, MixedTrace) {
+    let sd3 = PipelineSetup::new("sd3", cluster);
+    let flux = PipelineSetup::new("flux", cluster);
+    let trace = {
+        let specs = [
+            MixedSpec {
+                pipeline: &sd3.pipeline,
+                profile: &sd3.profile,
+                kind: WorkloadKind::Medium,
+                rate_scale: 0.2,
+                load: LoadShape::Step { at: 0.5, before: 1.4, after: 0.4 },
+                difficulty: DifficultyModel::Uniform,
+            },
+            MixedSpec {
+                pipeline: &flux.pipeline,
+                profile: &flux.profile,
+                kind: WorkloadKind::Medium,
+                rate_scale: 0.2,
+                load: LoadShape::Step { at: 0.5, before: 0.4, after: 1.4 },
+                difficulty: DifficultyModel::Uniform,
+            },
+        ];
+        mixed(&specs, DURATION_MS, seed)
+    };
+    (vec![sd3, flux], trace)
+}
+
+fn arbiter(cluster: &ClusterSpec, cooldown_ms: f64) -> ClusterArbiter {
+    let mut a = ClusterArbiter::new(cluster.gpus_per_node);
+    a.cooldown_ms = cooldown_ms;
+    a.trigger_streak = 1;
+    a
+}
+
+fn lane_completed(report: &CoServeReport, p: usize) -> usize {
+    report.lanes[p]
+        .metrics
+        .completions
+        .iter()
+        .filter(|c| c.outcome == Outcome::Completed)
+        .count()
+}
+
+fn completed(report: &CoServeReport) -> usize {
+    (0..report.lanes.len()).map(|p| lane_completed(report, p)).sum()
+}
+
+/// Run the scenario with a live registry attached; tracing stays off so
+/// the only observer under test is telemetry.
+fn observed_run(seed: u64) -> (CoServeReport, std::rc::Rc<std::cell::RefCell<tridentserve::telemetry::Registry>>) {
+    let cluster = ClusterSpec::l20(4);
+    let (setups, trace) = scenario(&cluster, seed);
+    let cfg = CoServeConfig { seed, ..Default::default() };
+    let (tele, reg) = Telemetry::registry();
+    let mut arb = arbiter(&cluster, 20_000.0);
+    let report =
+        run_coserve_observed(&setups, &cluster, &mut arb, &trace, &cfg, &Tracer::off(), &tele);
+    (report, reg)
+}
+
+#[test]
+fn observed_coserve_populates_the_registry_without_perturbing_the_run() {
+    let cluster = ClusterSpec::l20(4);
+    let (setups, trace) = scenario(&cluster, 3);
+    let cfg = CoServeConfig { seed: 3, ..Default::default() };
+
+    let mut arb = arbiter(&cluster, 20_000.0);
+    let plain = run_coserve(&setups, &cluster, &mut arb, &trace, &cfg);
+    let (observed, reg) = observed_run(3);
+
+    // Observing the run must not change it.
+    assert_eq!(completed(&plain), completed(&observed), "telemetry perturbed completions");
+    for (p, (a, b)) in plain.lanes.iter().zip(observed.lanes.iter()).enumerate() {
+        assert_eq!(a.metrics.summary().n, b.metrics.summary().n, "lane {p} diverged");
+        assert_eq!(
+            a.metrics.summary().slo_attainment,
+            b.metrics.summary().slo_attainment,
+            "lane {p} SLO attainment diverged"
+        );
+    }
+
+    // Per-lane lifecycle counters reconcile exactly with the metrics layer,
+    // and the monitor-cadence gauges produced real series.
+    {
+        let reg = reg.borrow();
+        for p in 0..observed.lanes.len() {
+            let lane = p as u32;
+            let arrived = reg.counter(metric::REQUESTS_ARRIVED, lane).unwrap_or(0);
+            assert!(arrived > 0, "lane {p} never counted an arrival");
+            assert_eq!(
+                reg.counter(metric::REQUESTS_COMPLETED, lane).unwrap_or(0),
+                lane_completed(&observed, p) as u64,
+                "lane {p} completion counter out of step with metrics"
+            );
+            for name in [metric::QUEUE_DEPTH, metric::GPU_UTILIZATION, metric::HANDOFF_GB] {
+                assert!(
+                    reg.series_of(name, lane).is_some_and(|s| !s.is_empty()),
+                    "lane {p} has no {name} series"
+                );
+            }
+        }
+        // The cluster-wide latency roll-up is an associative merge across
+        // lanes and must count every completion exactly once.
+        let merged = reg.merged_hist(metric::REQUEST_LATENCY_MS).expect("latency histogram");
+        assert_eq!(
+            merged.count(),
+            completed(&observed) as u64,
+            "merged latency histogram lost completions"
+        );
+    }
+
+    // The monitor's stage-rate windows were re-homed into the registry
+    // (observe→decide loop): the window the §5.3 trigger reads is the one
+    // we can see here, and a real run left evidence in it.
+    let handle = Telemetry::with_registry(reg.clone());
+    let diffuse = handle
+        .for_lane(0)
+        .shared_window(metric::STAGE_RATE[1], 60_000.0)
+        .expect("registry handle always returns a window");
+    assert!(
+        !diffuse.borrow().is_empty(),
+        "lane 0 monitor never recorded a diffuse completion in the shared window"
+    );
+}
+
+/// Line-by-line parse-back of the Prometheus text exposition: every sample
+/// belongs to a declared family, values are finite floats, label syntax is
+/// well-formed, counters are integral and `_total`-suffixed.
+fn assert_prometheus_conformant(text: &str) {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut samples = 0usize;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap_or_else(|| panic!("TYPE without a name: {line}"));
+            let ty = it.next().unwrap_or_else(|| panic!("TYPE without a type: {line}"));
+            assert!(it.next().is_none(), "trailing tokens on TYPE line: {line}");
+            assert!(
+                matches!(ty, "counter" | "gauge" | "summary"),
+                "unknown metric type {ty}: {line}"
+            );
+            assert!(
+                types.insert(name.to_string(), ty.to_string()).is_none(),
+                "duplicate TYPE declaration for {name}"
+            );
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            assert!(rest.split_whitespace().count() >= 2, "HELP without text: {line}");
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment form: {line}");
+
+        let (head, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("sample without a value: {line}"));
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("unparsable value: {line}"));
+        assert!(v.is_finite(), "non-finite sample value: {line}");
+
+        let name = match head.split_once('{') {
+            Some((n, labels)) => {
+                let labels =
+                    labels.strip_suffix('}').unwrap_or_else(|| panic!("unclosed labels: {line}"));
+                for kv in labels.split(',') {
+                    let (k, val) = kv
+                        .split_once("=\"")
+                        .unwrap_or_else(|| panic!("malformed label {kv}: {line}"));
+                    assert!(val.ends_with('"'), "unterminated label value: {line}");
+                    assert!(
+                        matches!(k, "lane" | "quantile"),
+                        "unexpected label key {k}: {line}"
+                    );
+                }
+                n
+            }
+            None => head,
+        };
+        assert!(name.starts_with("trident_"), "sample without exposition prefix: {line}");
+        assert!(
+            name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+            "illegal character in metric name: {line}"
+        );
+
+        // Family resolution: exact name (counter / gauge / summary quantile
+        // line) or the base name for a summary's `_sum`/`_count` samples.
+        let family_ty = types
+            .get(name)
+            .cloned()
+            .or_else(|| {
+                name.strip_suffix("_sum")
+                    .or_else(|| name.strip_suffix("_count"))
+                    .and_then(|base| types.get(base).cloned())
+            })
+            .unwrap_or_else(|| panic!("sample {name} has no TYPE declaration"));
+        if family_ty == "counter" {
+            assert!(name.ends_with("_total"), "counter without _total suffix: {line}");
+            assert!(
+                v >= 0.0 && v.fract() == 0.0,
+                "counter must be a non-negative integer: {line}"
+            );
+        }
+        samples += 1;
+    }
+    assert!(samples > 0, "empty exposition");
+    for want in ["counter", "gauge", "summary"] {
+        assert!(
+            types.values().any(|t| t == want),
+            "a real run must expose at least one {want}"
+        );
+    }
+}
+
+#[test]
+fn prometheus_snapshot_from_a_real_run_parses_back() {
+    let (_, reg) = observed_run(5);
+    let text = to_prometheus(&reg.borrow());
+    assert_prometheus_conformant(&text);
+    // Spot-check the families this PR's samplers are responsible for.
+    for needle in [
+        "# TYPE trident_requests_arrived_total counter",
+        "# TYPE trident_queue_depth gauge",
+        "# TYPE trident_request_latency_ms summary",
+    ] {
+        assert!(text.contains(needle), "missing {needle}");
+    }
+}
+
+#[test]
+fn same_seed_observed_runs_export_byte_identically() {
+    let (ra, rega) = observed_run(9);
+    let (rb, regb) = observed_run(9);
+    assert_eq!(completed(&ra), completed(&rb));
+
+    let (rega, regb) = (rega.borrow(), regb.borrow());
+    let (prom_a, prom_b) = (to_prometheus(&rega), to_prometheus(&regb));
+    let (csv_a, csv_b) = (to_csv(&rega), to_csv(&regb));
+    assert_eq!(prom_a, prom_b, "same seed must expose byte-identical Prometheus text");
+    assert_eq!(csv_a, csv_b, "same seed must export byte-identical CSV");
+
+    // CSV well-formedness + global sort order: header then
+    // (t_ms, lane, metric)-ordered rows, every field parsable.
+    let mut lines = csv_a.lines();
+    assert_eq!(lines.next(), Some("t_ms,lane,metric,value"));
+    let mut prev: Option<(f64, i64, String)> = None;
+    let mut rows = 0usize;
+    for line in lines {
+        let f: Vec<&str> = line.split(',').collect();
+        assert_eq!(f.len(), 4, "malformed CSV row: {line}");
+        let t: f64 = f[0].parse().unwrap_or_else(|_| panic!("bad t_ms: {line}"));
+        let lane: i64 = f[1].parse().unwrap_or_else(|_| panic!("bad lane: {line}"));
+        let _: f64 = f[3].parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+        assert!(!f[2].is_empty(), "empty metric name: {line}");
+        let key = (t, lane, f[2].to_string());
+        if let Some(p) = &prev {
+            assert!(
+                p.0 < key.0 || (p.0 == key.0 && (p.1, &p.2) <= (key.1, &key.2)),
+                "CSV rows out of order at: {line}"
+            );
+        }
+        prev = Some(key);
+        rows += 1;
+    }
+    assert!(rows > 0, "a real run must produce series rows");
+}
+
+/// ISSUE 7 acceptance: at least one controller demonstrably consumes a
+/// telemetry rolling-window signal. The adaptive cascade controller's
+/// quality-verdict evidence is re-homed into the registry's
+/// [`metric::CASCADE_VERDICTS`] window before the run — so the threshold
+/// decisions it makes are decisions *read out of telemetry* — and the
+/// rewiring must not change a single one of them.
+#[test]
+fn adaptive_cascade_controller_consumes_the_registry_verdict_window() {
+    const CASCADE_DURATION_MS: f64 = 240_000.0;
+    let cluster = ClusterSpec::l20(4);
+    let cheap = PipelineSetup::new("sd3-turbo", &cluster);
+    let heavy = PipelineSetup::new("sd3", &cluster);
+    let drift = DifficultyModel::Drift { from: 0.2, to: 0.55 };
+    let trace: Trace = {
+        let mut tg = TraceGen::new(&heavy.pipeline, &heavy.profile);
+        tg.rate_scale = 0.15;
+        tg.difficulty = drift;
+        tg.steady(WorkloadKind::Medium, CASCADE_DURATION_MS, 11)
+    };
+    let quality = QualityModel { adequacy_cut: 0.55, conf_noise: 0.10 };
+    let floor = 0.92;
+    let tau0 = calibrate_threshold(&quality, &drift, 0.0, floor, 11);
+    let mode = || RouterMode::Adaptive {
+        initial_threshold: tau0,
+        controller: ThresholdController::new(floor),
+    };
+    let cfg = CoServeConfig { seed: 11, monitor_ms: 2_000.0, ..Default::default() };
+
+    let mut arb = arbiter(&cluster, 30_000.0);
+    let plain = run_cascade(&cheap, &heavy, &cluster, &mut arb, &trace, mode(), quality, &cfg);
+
+    let (tele, reg) = Telemetry::registry();
+    let mut arb = arbiter(&cluster, 30_000.0);
+    let observed = run_cascade_observed(
+        &cheap,
+        &heavy,
+        &cluster,
+        &mut arb,
+        &trace,
+        mode(),
+        quality,
+        &cfg,
+        &Tracer::off(),
+        &tele,
+    );
+
+    // Every decision identical: same threshold walk, same escalation set.
+    assert_eq!(
+        plain.threshold_trace, observed.threshold_trace,
+        "registry-backed verdict window changed the controller's decisions"
+    );
+    assert_eq!(plain.final_threshold, observed.final_threshold);
+    assert_eq!(plain.escalated, observed.escalated);
+    assert!(observed.escalations() > 0, "drift never forced an escalation — nothing exercised");
+
+    // The evidence the controller acted on lives in the shared registry
+    // window, and the control-lane series/counters reflect the loop.
+    let ctl = Telemetry::with_registry(reg.clone()).for_lane(CONTROL_LANE);
+    let verdicts = ctl
+        .shared_verdicts(metric::CASCADE_VERDICTS, VERDICT_CAP)
+        .expect("registry handle always returns a window");
+    assert!(
+        verdicts.borrow().observed() > 0,
+        "controller verdicts never landed in the registry window"
+    );
+    let reg = reg.borrow();
+    assert_eq!(
+        reg.counter(metric::CASCADE_ESCALATIONS, CONTROL_LANE).unwrap_or(0),
+        observed.escalations() as u64,
+        "escalation counter out of step with the report"
+    );
+    for name in [metric::CASCADE_QUALITY, metric::CASCADE_ESCALATION_RATE] {
+        assert!(
+            reg.series_of(name, CONTROL_LANE).is_some_and(|s| !s.is_empty()),
+            "control lane has no {name} series"
+        );
+    }
+}
