@@ -8,11 +8,16 @@
 //! Environment knobs: COSERVE_MINUTES (default 10), COSERVE_SEED (default 0),
 //! COSERVE_TRACE (unset = off; `1` or a path = trace the preemptive run,
 //! print its latency breakdown and write a Perfetto-loadable Chrome trace
-//! JSON to the path, default `coserve_trace.json`), METRICS_OUT (unset =
-//! off; `1` or a path prefix = attach live telemetry to the preemptive run
-//! and write `<prefix>.prom` — a Prometheus text snapshot — plus
+//! JSON to the path, default `coserve_trace.json`, plus the lossless JSONL
+//! event stream next to it — `.json` → `.jsonl` — which is what the
+//! `tridentserve diagnose` subcommand replays), METRICS_OUT (unset = off;
+//! `1` or a path prefix = attach live telemetry to the preemptive run and
+//! write `<prefix>.prom` — a Prometheus text snapshot — plus
 //! `<prefix>.csv` — the per-lane time series —, default prefix
-//! `coserve_metrics`).
+//! `coserve_metrics`). With both COSERVE_TRACE and METRICS_OUT set the
+//! demo also prints the inline SLO burn-rate diagnosis of the preemptive
+//! run (computed post-run from the captured artifacts: enabling it cannot
+//! perturb the run).
 
 use tridentserve::baselines::StaticPartition;
 use tridentserve::config::ClusterSpec;
@@ -20,11 +25,12 @@ use tridentserve::coserve::{
     run_coserve, run_coserve_observed, CoServeConfig, CoServeReport, ClusterArbiter,
     PipelineSetup, ResizePolicy,
 };
-use tridentserve::obs::export::to_chrome_trace;
+use tridentserve::diagnose::{diagnose, SloPolicy};
+use tridentserve::obs::export::{to_chrome_trace, to_jsonl_with_dropped};
 use tridentserve::obs::report::BreakdownReport;
 use tridentserve::obs::{TraceConfig, Tracer};
 use tridentserve::telemetry::export::{to_csv, to_prometheus};
-use tridentserve::telemetry::{Registry, Telemetry};
+use tridentserve::telemetry::{metric, Registry, Telemetry, CONTROL_LANE};
 use tridentserve::workload::{mixed, DifficultyModel, LoadShape, MixedSpec, WorkloadKind};
 
 /// `(tracer, sink, output path)` from a `*_TRACE` env var: unset → off.
@@ -60,6 +66,16 @@ fn metrics_from_env(
             let (tele, reg) = Telemetry::registry();
             (tele, Some(reg), prefix)
         }
+    }
+}
+
+/// The lossless JSONL event-stream path that rides along with a Chrome
+/// trace: `foo.json` → `foo.jsonl` (the diagnose CLI replays the JSONL —
+/// the Chrome rendering is lossy).
+fn jsonl_path_of(chrome_path: &str) -> String {
+    match chrome_path.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.jsonl"),
+        None => format!("{chrome_path}.jsonl"),
     }
 }
 
@@ -175,11 +191,13 @@ fn main() {
         &setups, &cluster, &mut arbiter_p, &trace, &preempt_cfg, &tracer, &tele,
     );
     print_report(&preempt);
+    let mut captured: Option<(Vec<tridentserve::obs::TraceEvent>, u64)> = None;
     if let Some(sink) = sink {
         // Dropped-aware path: the report carries the ring's eviction count,
         // so a truncated stream warns instead of silently under-reporting.
         let breakdown = BreakdownReport::from_sink(&sink.borrow());
         let events = sink.borrow().snapshot();
+        let dropped = sink.borrow().dropped;
         println!(
             "--- latency breakdown (preemptive run, {} events, max residual {:.3} ms) ---",
             events.len(),
@@ -187,12 +205,33 @@ fn main() {
         );
         print!("{breakdown}");
         match std::fs::write(&trace_path, to_chrome_trace(&events).to_string()) {
-            Ok(()) => println!("wrote Perfetto trace to {trace_path}\n"),
-            Err(e) => println!("WARN: could not write {trace_path}: {e}\n"),
+            Ok(()) => println!("wrote Perfetto trace to {trace_path}"),
+            Err(e) => println!("WARN: could not write {trace_path}: {e}"),
         }
+        let jsonl_path = jsonl_path_of(&trace_path);
+        match std::fs::write(&jsonl_path, to_jsonl_with_dropped(&events, dropped)) {
+            Ok(()) => println!("wrote JSONL event stream to {jsonl_path}\n"),
+            Err(e) => println!("WARN: could not write {jsonl_path}: {e}\n"),
+        }
+        if let Some(reg) = &reg {
+            // Ring overflow belongs in the metrics snapshot too
+            // (`trident_trace_dropped_total` in the Prometheus export).
+            reg.borrow_mut().add(metric::TRACE_DROPPED, CONTROL_LANE, dropped);
+        }
+        captured = Some((events, dropped));
     }
-    if let Some(reg) = reg {
+    if let Some(reg) = &reg {
         write_metrics(&reg.borrow(), &metrics_prefix);
+        println!();
+    }
+    if let (Some((events, dropped)), Some(reg)) = (&captured, &reg) {
+        // Both artifacts captured: run the inline diagnosis. This reads the
+        // registry + events post-run, so it cannot perturb the run above —
+        // the offline `tridentserve diagnose` replay of the written files
+        // produces the byte-identical report.
+        let report = diagnose(&reg.borrow(), events, *dropped, &SloPolicy::default());
+        println!("--- SLO burn-rate diagnosis (preemptive run) ---");
+        print!("{report}");
         println!();
     }
 

@@ -11,17 +11,26 @@
 //! Environment knobs: FAULTS_MINUTES (default 8), FAULTS_SEED (default 0),
 //! FAULTS_TRACE (unset = off; `1` or a path = trace the reactive run, print
 //! its latency breakdown — kills/blackouts included — and write a
-//! Perfetto-loadable Chrome trace JSON, default `faults_trace.json`).
+//! Perfetto-loadable Chrome trace JSON, default `faults_trace.json`, plus
+//! the lossless JSONL event stream next to it — `.json` → `.jsonl` — for
+//! the `tridentserve diagnose` replay), METRICS_OUT (unset = off; `1` or a
+//! path prefix = attach live telemetry to the reactive run and write
+//! `<prefix>.prom` + `<prefix>.csv`, default prefix `faults_metrics`).
+//! With both set the demo also prints the inline SLO burn-rate diagnosis
+//! of the reactive run (computed post-run from the captured artifacts).
 
 use tridentserve::config::ClusterSpec;
 use tridentserve::coserve::{
-    run_coserve, run_coserve_faulty_traced, ClusterArbiter, CoServeConfig, CoServeReport,
+    run_coserve, run_coserve_faulty_observed, ClusterArbiter, CoServeConfig, CoServeReport,
     FaultPlan, PipelineSetup, RecoveryPolicy,
 };
+use tridentserve::diagnose::{diagnose, SloPolicy};
 use tridentserve::faults::ChurnGen;
-use tridentserve::obs::export::to_chrome_trace;
+use tridentserve::obs::export::{to_chrome_trace, to_jsonl_with_dropped};
 use tridentserve::obs::report::BreakdownReport;
 use tridentserve::obs::{RingSink, TraceConfig, Tracer};
+use tridentserve::telemetry::export::{to_csv, to_prometheus};
+use tridentserve::telemetry::{metric, Registry, Telemetry, CONTROL_LANE};
 use tridentserve::workload::{mixed, DifficultyModel, LoadShape, MixedSpec, MixedTrace, WorkloadKind};
 
 fn arbiter(cluster: &ClusterSpec) -> ClusterArbiter {
@@ -38,9 +47,10 @@ fn run_policy(
     cfg: &CoServeConfig,
     plan: &FaultPlan,
     tracer: &Tracer,
+    tele: &Telemetry,
 ) -> CoServeReport {
     let mut arb = arbiter(cluster);
-    run_coserve_faulty_traced(setups, cluster, &mut arb, trace, cfg, plan, tracer)
+    run_coserve_faulty_observed(setups, cluster, &mut arb, trace, cfg, plan, tracer, tele)
 }
 
 /// `(tracer, sink, output path)` from `FAULTS_TRACE`: unset → off.
@@ -56,6 +66,31 @@ fn trace_from_env() -> (Tracer, Option<std::rc::Rc<std::cell::RefCell<RingSink>>
             let (tracer, sink) = Tracer::ring(&TraceConfig::full());
             (tracer, sink, path)
         }
+    }
+}
+
+/// `(telemetry, registry, output prefix)` from `METRICS_OUT`: unset → off.
+fn metrics_from_env() -> (Telemetry, Option<std::rc::Rc<std::cell::RefCell<Registry>>>, String) {
+    match std::env::var("METRICS_OUT") {
+        Err(_) => (Telemetry::off(), None, String::new()),
+        Ok(v) => {
+            let prefix = if v.is_empty() || v == "1" || v == "true" {
+                "faults_metrics".to_string()
+            } else {
+                v
+            };
+            let (tele, reg) = Telemetry::registry();
+            (tele, Some(reg), prefix)
+        }
+    }
+}
+
+/// The lossless JSONL event-stream path beside a Chrome trace:
+/// `foo.json` → `foo.jsonl` (diagnose replays the JSONL; Chrome is lossy).
+fn jsonl_path_of(chrome_path: &str) -> String {
+    match chrome_path.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.jsonl"),
+        None => format!("{chrome_path}.jsonl"),
     }
 }
 
@@ -123,6 +158,7 @@ fn main() {
     // The reactive run carries the (optional) tracer: it exercises the full
     // detect → kill → recover path, so its breakdown shows fault blackout.
     let (tracer, sink, trace_path) = trace_from_env();
+    let (tele, reg, metrics_prefix) = metrics_from_env();
     let proactive = run_policy(
         &setups,
         &cluster,
@@ -130,6 +166,7 @@ fn main() {
         &cfg,
         &FaultPlan::new(churn.clone(), RecoveryPolicy::Proactive),
         &Tracer::off(),
+        &Telemetry::off(),
     );
     let reactive = run_policy(
         &setups,
@@ -138,6 +175,7 @@ fn main() {
         &cfg,
         &FaultPlan::new(churn.clone(), RecoveryPolicy::Reactive),
         &tracer,
+        &tele,
     );
     let cold = run_policy(
         &setups,
@@ -146,6 +184,7 @@ fn main() {
         &cfg,
         &FaultPlan::new(churn.clone(), RecoveryPolicy::ColdRestart),
         &Tracer::off(),
+        &Telemetry::off(),
     );
 
     println!(
@@ -174,8 +213,10 @@ fn main() {
     println!("reactive:  {reactive}");
     println!("cold:      {cold}");
 
+    let mut captured: Option<(Vec<tridentserve::obs::TraceEvent>, u64)> = None;
     if let Some(sink) = sink {
         let events = sink.borrow().snapshot();
+        let dropped = sink.borrow().dropped;
         let breakdown = BreakdownReport::from_events(&events);
         println!(
             "\n--- latency breakdown (reactive run, {} events, max residual {:.3} ms) ---",
@@ -187,6 +228,31 @@ fn main() {
             Ok(()) => println!("wrote Perfetto trace to {trace_path}"),
             Err(e) => println!("WARN: could not write {trace_path}: {e}"),
         }
+        let jsonl_path = jsonl_path_of(&trace_path);
+        match std::fs::write(&jsonl_path, to_jsonl_with_dropped(&events, dropped)) {
+            Ok(()) => println!("wrote JSONL event stream to {jsonl_path}"),
+            Err(e) => println!("WARN: could not write {jsonl_path}: {e}"),
+        }
+        if let Some(reg) = &reg {
+            reg.borrow_mut().add(metric::TRACE_DROPPED, CONTROL_LANE, dropped);
+        }
+        captured = Some((events, dropped));
+    }
+    if let Some(reg) = &reg {
+        for (ext, text) in [("prom", to_prometheus(&reg.borrow())), ("csv", to_csv(&reg.borrow()))] {
+            let path = format!("{metrics_prefix}.{ext}");
+            match std::fs::write(&path, text) {
+                Ok(()) => println!("wrote metrics snapshot to {path}"),
+                Err(e) => println!("WARN: could not write {path}: {e}"),
+            }
+        }
+    }
+    if let (Some((events, dropped)), Some(reg)) = (&captured, &reg) {
+        // Post-run diagnosis over the captured artifacts: fault-injected
+        // runs are expected to fire blackout-attributed alerts.
+        let report = diagnose(&reg.borrow(), events, *dropped, &SloPolicy::default());
+        println!("\n--- SLO burn-rate diagnosis (reactive run) ---");
+        print!("{report}");
     }
 
     for (name, r) in [("proactive", &proactive), ("reactive", &reactive), ("cold", &cold)] {

@@ -1,0 +1,332 @@
+//! Multi-window, multi-burn-rate SLO alert rules over attainment series.
+//!
+//! The construction is the standard SRE one, scaled from days to
+//! simulation minutes: the **burn rate** at a point is
+//! `(1 - attainment) / (1 - objective)` — how many times faster than
+//! budget the SLO error budget is being spent — and a rule fires only when
+//! the *mean* burn over both a long and a short trailing window clears the
+//! rule's threshold. The long window keeps one bad sample from paging; the
+//! short window makes the alert stop firing promptly once the burn ends.
+//! Two rules with different speeds give the page/ticket split:
+//!
+//! * **Page** — fast burn over short windows: the budget is being torched
+//!   right now, someone (or the control plane) must act.
+//! * **Ticket** — slow sustained burn over long windows: the budget will
+//!   run out eventually; worth a look, not a wake-up.
+//!
+//! Evaluation is a pure function of the attainment series — the
+//! `slo_attainment` points the telemetry layer samples at monitor cadence
+//! (each already a rolling-window mean of per-completion on-time
+//! verdicts) — so the same alerts come out of a live [`super::Registry`]
+//! snapshot and a replayed CSV, and a same-seed run alerts byte-
+//! identically.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One multi-window burn-rate rule: fire when the mean burn over *both*
+/// trailing windows reaches `burn`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BurnRule {
+    /// Long confirmation window (ms): smooths spikes.
+    pub long_ms: f64,
+    /// Short reset window (ms): ends the alert quickly after recovery.
+    pub short_ms: f64,
+    /// Burn-rate threshold (error-budget multiples).
+    pub burn: f64,
+}
+
+/// SLO objective + the page/ticket rule pair evaluated against it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloPolicy {
+    /// Target attainment in (0, 1), e.g. `0.999`.
+    pub objective: f64,
+    pub page: BurnRule,
+    pub ticket: BurnRule,
+}
+
+impl Default for SloPolicy {
+    /// Horizon-scaled defaults: pages confirm over one minute, tickets
+    /// over three — matched to the 60 s attainment window and the
+    /// few-minute example/test runs this repo simulates.
+    fn default() -> Self {
+        SloPolicy {
+            objective: 0.999,
+            page: BurnRule { long_ms: 60_000.0, short_ms: 15_000.0, burn: 10.0 },
+            ticket: BurnRule { long_ms: 180_000.0, short_ms: 60_000.0, burn: 2.0 },
+        }
+    }
+}
+
+impl SloPolicy {
+    /// Default windows/thresholds with a different objective.
+    pub fn with_objective(objective: f64) -> Self {
+        assert!(objective > 0.0 && objective < 1.0, "objective must be in (0, 1)");
+        SloPolicy { objective, ..Default::default() }
+    }
+
+    /// Instantaneous burn rate for one attainment value.
+    pub fn burn(&self, attainment: f64) -> f64 {
+        (1.0 - attainment).max(0.0) / (1.0 - self.objective)
+    }
+
+    /// The lookback an attribution pass should scan before an alert of
+    /// `kind`: the rule's long window (evidence accrues before the alert
+    /// confirms).
+    pub fn lookback_ms(&self, kind: AlertKind) -> f64 {
+        match kind {
+            AlertKind::Page => self.page.long_ms,
+            AlertKind::Ticket => self.ticket.long_ms,
+        }
+    }
+}
+
+/// Page (fast burn) vs ticket (slow burn) semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AlertKind {
+    Page,
+    Ticket,
+}
+
+impl AlertKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AlertKind::Page => "page",
+            AlertKind::Ticket => "ticket",
+        }
+    }
+}
+
+/// One contiguous firing interval of a rule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Alert {
+    pub kind: AlertKind,
+    /// Firing lane; `None` for the merged (cluster-wide) series.
+    pub lane: Option<u32>,
+    /// First firing sample time.
+    pub start_ms: f64,
+    /// Last firing sample time.
+    pub end_ms: f64,
+    /// Highest long-window mean burn seen while firing.
+    pub peak_burn: f64,
+    /// Number of consecutive firing samples merged into this interval.
+    pub points: usize,
+}
+
+impl Alert {
+    /// Flat JSON object (`lane` is `-1` for the merged series, matching
+    /// the trace convention for "no single lane").
+    pub fn to_json(&self) -> Json {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("alert".into(), Json::Str(self.kind.name().into()));
+        o.insert(
+            "lane".into(),
+            Json::Num(self.lane.map(|l| l as f64).unwrap_or(-1.0)),
+        );
+        o.insert("start_ms".into(), Json::Num(self.start_ms));
+        o.insert("end_ms".into(), Json::Num(self.end_ms));
+        o.insert("peak_burn".into(), Json::Num(self.peak_burn));
+        o.insert("points".into(), Json::Num(self.points as f64));
+        Json::Obj(o)
+    }
+}
+
+/// Mean burn over the trailing `(t_end - window_ms, t_end]` slice of
+/// `series` (points assumed time-ordered). `None` when the slice is empty.
+fn window_burn(series: &[(f64, f64)], t_end: f64, window_ms: f64, policy: &SloPolicy) -> Option<f64> {
+    let mut sum = 0.0;
+    let mut n = 0u32;
+    // Series are short (one point per monitor tick); a linear scan from the
+    // back stays O(window) per evaluation point.
+    for &(t, v) in series.iter().rev() {
+        if t > t_end {
+            continue;
+        }
+        if t_end - t > window_ms {
+            break;
+        }
+        sum += policy.burn(v);
+        n += 1;
+    }
+    if n == 0 {
+        None
+    } else {
+        Some(sum / n as f64)
+    }
+}
+
+/// Evaluate one rule over one attainment series: contiguous firing samples
+/// merge into [`Alert`] intervals, returned in time order.
+pub fn evaluate_rule(
+    series: &[(f64, f64)],
+    policy: &SloPolicy,
+    kind: AlertKind,
+    lane: Option<u32>,
+) -> Vec<Alert> {
+    let rule = match kind {
+        AlertKind::Page => policy.page,
+        AlertKind::Ticket => policy.ticket,
+    };
+    let mut out: Vec<Alert> = Vec::new();
+    let mut open: Option<Alert> = None;
+    for &(t, _) in series {
+        let long = window_burn(series, t, rule.long_ms, policy);
+        let short = window_burn(series, t, rule.short_ms, policy);
+        let firing = match (long, short) {
+            (Some(l), Some(s)) => l >= rule.burn && s >= rule.burn,
+            _ => false,
+        };
+        if firing {
+            let burn_now = long.unwrap();
+            match &mut open {
+                Some(a) => {
+                    a.end_ms = t;
+                    a.points += 1;
+                    if burn_now > a.peak_burn {
+                        a.peak_burn = burn_now;
+                    }
+                }
+                None => {
+                    open = Some(Alert {
+                        kind,
+                        lane,
+                        start_ms: t,
+                        end_ms: t,
+                        peak_burn: burn_now,
+                        points: 1,
+                    });
+                }
+            }
+        } else if let Some(a) = open.take() {
+            out.push(a);
+        }
+    }
+    if let Some(a) = open {
+        out.push(a);
+    }
+    out
+}
+
+/// Evaluate both rules for every lane plus the merged cluster series.
+///
+/// Output order is deterministic: lanes ascending, then the merged series;
+/// within a series, pages before tickets, each in time order. The merged
+/// series pools every lane's sample points in `(t, lane)` order, so its
+/// window means weight lanes by their sampling density — a lane that
+/// completes more requests influences the cluster burn proportionally.
+pub fn evaluate(series: &BTreeMap<u32, Vec<(f64, f64)>>, policy: &SloPolicy) -> Vec<Alert> {
+    let mut out = Vec::new();
+    for (&lane, pts) in series {
+        out.extend(evaluate_rule(pts, policy, AlertKind::Page, Some(lane)));
+        out.extend(evaluate_rule(pts, policy, AlertKind::Ticket, Some(lane)));
+    }
+    if series.len() > 1 {
+        let mut pooled: Vec<(f64, f64, u32)> = Vec::new();
+        for (&lane, pts) in series {
+            for &(t, v) in pts {
+                pooled.push((t, v, lane));
+            }
+        }
+        pooled.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.2.cmp(&b.2)));
+        let merged: Vec<(f64, f64)> = pooled.into_iter().map(|(t, v, _)| (t, v)).collect();
+        out.extend(evaluate_rule(&merged, policy, AlertKind::Page, None));
+        out.extend(evaluate_rule(&merged, policy, AlertKind::Ticket, None));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Attainment sampled every 5 s for `n` points, dipping to `low`
+    /// between sample indices `[from, to)`.
+    fn dipped(n: usize, from: usize, to: usize, low: f64) -> Vec<(f64, f64)> {
+        (0..n)
+            .map(|i| {
+                let v = if i >= from && i < to { low } else { 1.0 };
+                (i as f64 * 5_000.0, v)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn clean_series_never_alerts() {
+        let policy = SloPolicy::default();
+        let series = dipped(100, 0, 0, 1.0);
+        assert!(evaluate_rule(&series, &policy, AlertKind::Page, Some(0)).is_empty());
+        assert!(evaluate_rule(&series, &policy, AlertKind::Ticket, Some(0)).is_empty());
+        assert!(evaluate_rule(&[], &policy, AlertKind::Page, Some(0)).is_empty());
+    }
+
+    #[test]
+    fn sustained_fast_burn_pages_and_one_blip_does_not() {
+        let policy = SloPolicy::default();
+        // objective 0.999: attainment 0.9 is burn 100, far past page=10,
+        // sustained for 2 minutes of 5 s samples.
+        let bad = dipped(60, 12, 36, 0.9);
+        let pages = evaluate_rule(&bad, &policy, AlertKind::Page, Some(0));
+        assert_eq!(pages.len(), 1, "one contiguous firing interval");
+        let a = &pages[0];
+        assert_eq!(a.kind, AlertKind::Page);
+        // Fires once the long (60 s) window mean crosses 10x: needs ~2
+        // bad samples among 13 (100 * 2/13 = 15.4 >= 10).
+        assert!(a.start_ms >= 60_000.0 && a.start_ms <= 90_000.0, "start {}", a.start_ms);
+        assert!(a.peak_burn > 10.0);
+        assert!(a.points > 5);
+        // A single bad sample: the long window mean (100/13 = 7.7) stays
+        // under the page threshold.
+        let blip = dipped(60, 20, 21, 0.9);
+        assert!(evaluate_rule(&blip, &policy, AlertKind::Page, Some(0)).is_empty());
+        // ...but a slow sustained trickle tickets without paging.
+        let trickle = dipped(120, 12, 108, 0.997);
+        assert!(evaluate_rule(&trickle, &policy, AlertKind::Page, Some(0)).is_empty());
+        let tickets = evaluate_rule(&trickle, &policy, AlertKind::Ticket, Some(0));
+        assert_eq!(tickets.len(), 1);
+        assert_eq!(tickets[0].kind, AlertKind::Ticket);
+    }
+
+    #[test]
+    fn short_window_ends_the_alert_after_recovery() {
+        let policy = SloPolicy::default();
+        let series = dipped(120, 12, 36, 0.9);
+        let pages = evaluate_rule(&series, &policy, AlertKind::Page, Some(0));
+        assert_eq!(pages.len(), 1);
+        // The 15 s short window drains within 3 samples of recovery even
+        // though the 60 s long window still remembers the burn.
+        assert!(
+            pages[0].end_ms <= 36.0 * 5_000.0 + 20_000.0,
+            "alert should end soon after recovery, ended {}",
+            pages[0].end_ms
+        );
+    }
+
+    #[test]
+    fn evaluation_is_deterministic_and_merged_series_included() {
+        let policy = SloPolicy::default();
+        let mut series: BTreeMap<u32, Vec<(f64, f64)>> = BTreeMap::new();
+        series.insert(0, dipped(60, 12, 36, 0.9));
+        series.insert(1, dipped(60, 0, 0, 1.0));
+        let a = evaluate(&series, &policy);
+        let b = evaluate(&series, &policy);
+        assert_eq!(a, b, "same series must alert identically");
+        // Lane 0 pages; lane 1 is clean; the merged series sees lane 0's
+        // burn diluted by lane 1 (mean burn 50 >= 10: still pages).
+        assert!(a.iter().any(|x| x.lane == Some(0) && x.kind == AlertKind::Page));
+        assert!(!a.iter().any(|x| x.lane == Some(1)));
+        assert!(a.iter().any(|x| x.lane.is_none()));
+        // Single-lane maps skip the redundant merged pass.
+        series.remove(&1);
+        assert!(evaluate(&series, &policy).iter().all(|x| x.lane == Some(0)));
+    }
+
+    #[test]
+    fn burn_math() {
+        let p = SloPolicy::with_objective(0.99);
+        assert!((p.burn(1.0) - 0.0).abs() < 1e-12);
+        assert!((p.burn(0.99) - 1.0).abs() < 1e-9);
+        assert!((p.burn(0.9) - 10.0).abs() < 1e-9);
+        assert_eq!(p.lookback_ms(AlertKind::Page), p.page.long_ms);
+        assert_eq!(p.lookback_ms(AlertKind::Ticket), p.ticket.long_ms);
+    }
+}

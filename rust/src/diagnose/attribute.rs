@@ -1,0 +1,432 @@
+//! Root-cause attribution: join a firing alert window against the obs
+//! trace and the [`RequestBreakdown`] components to rank *why* the SLO
+//! budget burned.
+//!
+//! Each candidate cause is scored in **attributed milliseconds of harm**
+//! over the evidence interval `[alert.start - lookback, alert.end]` (the
+//! rule's long window precedes confirmation, so evidence accrues before
+//! the alert opens). Scores are a ranking signal, not a conserved
+//! decomposition — a fault that kills a plan *and* triggers a swap shows
+//! up in more than one term on purpose, because both are legitimate
+//! evidence for the blackout cause. Escalated (cascade heavy-lane) spans
+//! are carved out of the queue/handoff causes and attributed wholly to
+//! [`Cause::EscalationStorm`]: their latency is the *cost of escalation*,
+//! whatever component it lands in, and splitting it would let a cascade
+//! storm masquerade as queue growth.
+//!
+//! Attribution is a pure function of `(alert, events, breakdowns)`, so a
+//! replayed trace diagnoses identically to the live run.
+
+use std::collections::BTreeMap;
+
+use crate::obs::report::RequestBreakdown;
+use crate::obs::{EventBody, TraceEvent};
+use crate::request::RequestId;
+use crate::util::json::Json;
+
+use super::alert::Alert;
+
+/// Cap on contributing request ids listed per finding (the biggest
+/// contributors, for drill-down; the full count is in `events`).
+pub const MAX_EVIDENCE_REQUESTS: usize = 8;
+
+/// The cause taxonomy. Order is the deterministic tie-break for equal
+/// scores: causes the control plane can act on most directly come first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Cause {
+    /// Requests spent the window waiting in lane queues: demand exceeded
+    /// dispatchable capacity.
+    QueueGrowth,
+    /// Resize/fault blackout: preempt cuts, node-loss kills, lane-swap
+    /// downtime ate the window.
+    Blackout,
+    /// Inter-stage handoff gaps (predecessor→successor readiness,
+    /// dispatch-tick quantisation) dominated.
+    HandoffStall,
+    /// Cascade pressure: escalated re-runs burned the budget.
+    EscalationStorm,
+    /// Nodes died but the heartbeat monitor was slow to notice: losses sat
+    /// undetected, stretching every blackout.
+    ChurnDetectionLag,
+    /// Dispatch solves kept returning nothing while candidates waited.
+    DispatchStarvation,
+}
+
+/// Every cause, in tie-break order.
+pub const ALL_CAUSES: [Cause; 6] = [
+    Cause::QueueGrowth,
+    Cause::Blackout,
+    Cause::HandoffStall,
+    Cause::EscalationStorm,
+    Cause::ChurnDetectionLag,
+    Cause::DispatchStarvation,
+];
+
+impl Cause {
+    pub fn name(self) -> &'static str {
+        match self {
+            Cause::QueueGrowth => "queue_growth",
+            Cause::Blackout => "blackout",
+            Cause::HandoffStall => "handoff_stall",
+            Cause::EscalationStorm => "escalation_storm",
+            Cause::ChurnDetectionLag => "churn_detection_lag",
+            Cause::DispatchStarvation => "dispatch_starvation",
+        }
+    }
+}
+
+/// One ranked cause with its evidence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CauseFinding {
+    pub cause: Cause,
+    /// Attributed milliseconds of harm inside the evidence interval.
+    pub score_ms: f64,
+    /// Evidence count (spans or control-plane events, per cause).
+    pub events: usize,
+    /// The interval the evidence was drawn from.
+    pub from_ms: f64,
+    pub to_ms: f64,
+    /// Largest contributors, biggest first (≤ [`MAX_EVIDENCE_REQUESTS`]).
+    pub requests: Vec<RequestId>,
+}
+
+impl CauseFinding {
+    pub fn to_json(&self) -> Json {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("cause".into(), Json::Str(self.cause.name().into()));
+        o.insert("score_ms".into(), Json::Num(self.score_ms));
+        o.insert("events".into(), Json::Num(self.events as f64));
+        o.insert("from_ms".into(), Json::Num(self.from_ms));
+        o.insert("to_ms".into(), Json::Num(self.to_ms));
+        o.insert(
+            "requests".into(),
+            Json::Arr(self.requests.iter().map(|&r| Json::Num(r as f64)).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Per-cause accumulator: total score plus per-request contributions.
+#[derive(Default)]
+struct Tally {
+    score_ms: f64,
+    events: usize,
+    by_req: BTreeMap<RequestId, f64>,
+}
+
+impl Tally {
+    fn span(&mut self, req: RequestId, ms: f64) {
+        if ms <= 0.0 {
+            return;
+        }
+        self.score_ms += ms;
+        self.events += 1;
+        *self.by_req.entry(req).or_insert(0.0) += ms;
+    }
+
+    fn control(&mut self, ms: f64) {
+        self.score_ms += ms;
+        self.events += 1;
+    }
+
+    fn finding(self, cause: Cause, from_ms: f64, to_ms: f64) -> Option<CauseFinding> {
+        if self.score_ms <= 0.0 {
+            return None;
+        }
+        // Biggest contributors first; equal contributions break ties by
+        // request id so the list is deterministic.
+        let mut reqs: Vec<(RequestId, f64)> = self.by_req.into_iter().collect();
+        reqs.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        reqs.truncate(MAX_EVIDENCE_REQUESTS);
+        Some(CauseFinding {
+            cause,
+            score_ms: self.score_ms,
+            events: self.events,
+            from_ms,
+            to_ms,
+            requests: reqs.into_iter().map(|(r, _)| r).collect(),
+        })
+    }
+}
+
+fn overlaps(a0: f64, a1: f64, b0: f64, b1: f64) -> bool {
+    a0 <= b1 && b0 <= a1
+}
+
+/// Rank causes for one alert. `lookback_ms` extends the evidence interval
+/// before the alert's first firing sample (use the firing rule's long
+/// window — [`super::SloPolicy::lookback_ms`]).
+///
+/// Span evidence is drawn from breakdowns whose `[arrival, finish]`
+/// interval overlaps the evidence window and whose lane matches the
+/// alert's (merged alerts join every lane); control-plane evidence
+/// (swaps, kills, churn, dispatch decisions) is filtered by time only,
+/// since cluster-level moves harm whichever lane is burning.
+pub fn attribute(
+    alert: &Alert,
+    events: &[TraceEvent],
+    breakdowns: &[RequestBreakdown],
+    lookback_ms: f64,
+) -> Vec<CauseFinding> {
+    let from_ms = alert.start_ms - lookback_ms;
+    let to_ms = alert.end_ms;
+    let mut queue = Tally::default();
+    let mut blackout = Tally::default();
+    let mut handoff = Tally::default();
+    let mut escalation = Tally::default();
+    let mut churn = Tally::default();
+    let mut starve = Tally::default();
+
+    for b in breakdowns {
+        if !overlaps(b.arrival_ms, b.finish_ms, from_ms, to_ms) {
+            continue;
+        }
+        if let Some(lane) = alert.lane {
+            if b.lane != lane {
+                continue;
+            }
+        }
+        if b.escalated {
+            // The whole re-run is the price of escalating; see module doc.
+            escalation.span(b.req, b.latency_ms());
+            continue;
+        }
+        queue.span(b.req, b.comps.queue_ms);
+        blackout.span(b.req, b.comps.blackout_ms);
+        handoff.span(b.req, b.comps.handoff_ms);
+    }
+
+    // Control-plane evidence: losses awaiting detection, swap downtime,
+    // killed execution, starved dispatch solves.
+    let mut loss_pending: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    let mut starved_at: Option<f64> = None;
+    for ev in events {
+        let in_window = ev.t_ms >= from_ms && ev.t_ms <= to_ms;
+        match &ev.body {
+            // Losses are tracked even before the window so a detection
+            // inside it scores the full detection lag.
+            EventBody::NodeLoss { node } if ev.t_ms <= to_ms => {
+                loss_pending.entry(*node).or_default().push(ev.t_ms);
+            }
+            EventBody::ChurnDetect { node } if ev.t_ms <= to_ms => {
+                if let Some(pend) = loss_pending.get_mut(node) {
+                    if !pend.is_empty() {
+                        let lost_at = pend.remove(0);
+                        if in_window {
+                            churn.control(ev.t_ms - lost_at);
+                        }
+                    }
+                }
+            }
+            EventBody::Swap { blackout_ms, .. } if in_window => {
+                if *blackout_ms > 0.0 {
+                    blackout.control(*blackout_ms);
+                }
+            }
+            EventBody::Kill { req, start_ms, .. } if in_window => {
+                // Lost (re-executed) work; the span's blackout component
+                // covers the gap after, this covers the wasted run itself.
+                blackout.span(*req, ev.t_ms - start_ms);
+            }
+            EventBody::Decision { candidates, dispatched, .. } if ev.t_ms <= to_ms => {
+                // A starved solve (work waiting, nothing dispatched) harms
+                // until the next solve; close the open gap either way.
+                if let Some(t0) = starved_at.take() {
+                    let gap_end = ev.t_ms.min(to_ms);
+                    if gap_end > t0 {
+                        starve.control(gap_end - t0);
+                    }
+                }
+                if *candidates > 0 && *dispatched == 0 && in_window {
+                    starved_at = Some(ev.t_ms);
+                }
+            }
+            _ => {}
+        }
+    }
+    if let Some(t0) = starved_at {
+        // Starved through the end of the window.
+        if to_ms > t0 {
+            starve.control(to_ms - t0);
+        }
+    }
+
+    let mut out: Vec<CauseFinding> = [
+        queue.finding(Cause::QueueGrowth, from_ms, to_ms),
+        blackout.finding(Cause::Blackout, from_ms, to_ms),
+        handoff.finding(Cause::HandoffStall, from_ms, to_ms),
+        escalation.finding(Cause::EscalationStorm, from_ms, to_ms),
+        churn.finding(Cause::ChurnDetectionLag, from_ms, to_ms),
+        starve.finding(Cause::DispatchStarvation, from_ms, to_ms),
+    ]
+    .into_iter()
+    .flatten()
+    .collect();
+    // Rank by attributed harm; ties (rare, float) break by taxonomy order.
+    out.sort_by(|a, b| b.score_ms.total_cmp(&a.score_ms).then(a.cause.cmp(&b.cause)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Stage;
+    use crate::obs::report::build_breakdowns;
+    use super::super::alert::AlertKind;
+
+    fn alert(lane: Option<u32>, start_ms: f64, end_ms: f64) -> Alert {
+        Alert { kind: AlertKind::Page, lane, start_ms, end_ms, peak_burn: 20.0, points: 3 }
+    }
+
+    fn ev(t_ms: f64, lane: u32, body: EventBody) -> TraceEvent {
+        TraceEvent { t_ms, lane, body }
+    }
+
+    /// arrival → queue gap → one Diffuse segment → done.
+    fn queued_span(events: &mut Vec<TraceEvent>, req: u64, lane: u32, t0: f64, queue_ms: f64) {
+        events.push(ev(t0, lane, EventBody::Arrive { req, shape_idx: 0 }));
+        let s = t0 + queue_ms;
+        events.push(ev(
+            s + 100.0,
+            lane,
+            EventBody::StageDone {
+                req,
+                stage: Stage::Diffuse,
+                start_ms: s,
+                prepare_ms: 0.0,
+                degree: 1,
+                node: 0,
+                steps: 4,
+                merged_e: true,
+                merged_c: true,
+            },
+        ));
+        events.push(ev(s + 100.0, lane, EventBody::Done { req, vr_type: 0 }));
+    }
+
+    #[test]
+    fn queue_heavy_spans_rank_queue_growth_first() {
+        let mut events = Vec::new();
+        for r in 0..5u64 {
+            queued_span(&mut events, r, 0, 1_000.0 * r as f64, 5_000.0);
+        }
+        let bds = build_breakdowns(&events);
+        let causes = attribute(&alert(Some(0), 5_000.0, 12_000.0), &events, &bds, 5_000.0);
+        assert_eq!(causes[0].cause, Cause::QueueGrowth);
+        assert!(causes[0].score_ms >= 5_000.0);
+        assert!(!causes[0].requests.is_empty());
+        assert!(causes[0].requests.len() <= MAX_EVIDENCE_REQUESTS);
+    }
+
+    #[test]
+    fn lane_filter_and_window_filter_apply_to_spans() {
+        let mut events = Vec::new();
+        queued_span(&mut events, 1, 0, 0.0, 5_000.0); // lane 0, in window
+        queued_span(&mut events, 2, 1, 0.0, 50_000.0); // other lane
+        queued_span(&mut events, 3, 0, 500_000.0, 50_000.0); // far future
+        let bds = build_breakdowns(&events);
+        let causes = attribute(&alert(Some(0), 4_000.0, 10_000.0), &events, &bds, 4_000.0);
+        let q = causes.iter().find(|c| c.cause == Cause::QueueGrowth).unwrap();
+        assert_eq!(q.requests, vec![1]);
+        assert!((q.score_ms - 5_000.0).abs() < 1e-9);
+        // A merged alert joins every lane.
+        let causes = attribute(&alert(None, 4_000.0, 10_000.0), &events, &bds, 4_000.0);
+        let q = causes.iter().find(|c| c.cause == Cause::QueueGrowth).unwrap();
+        assert_eq!(q.requests, vec![2, 1], "largest contributor first");
+    }
+
+    #[test]
+    fn escalated_spans_fold_into_escalation_storm_not_queue() {
+        let mut events = Vec::new();
+        let esc = 7u64 | (1 << 63);
+        queued_span(&mut events, esc, 1, 0.0, 9_000.0);
+        let bds = build_breakdowns(&events);
+        assert!(bds[0].escalated);
+        let causes = attribute(&alert(None, 5_000.0, 10_000.0), &events, &bds, 5_000.0);
+        assert_eq!(causes[0].cause, Cause::EscalationStorm);
+        assert!(causes.iter().all(|c| c.cause != Cause::QueueGrowth));
+        assert!((causes[0].score_ms - 9_100.0).abs() < 1e-9, "full re-run latency attributed");
+    }
+
+    #[test]
+    fn churn_lag_pairs_losses_with_detections_across_the_window_edge() {
+        let events = vec![
+            // Loss *before* the window, detected inside it: full lag scored.
+            ev(1_000.0, u32::MAX, EventBody::NodeLoss { node: 3 }),
+            ev(9_000.0, u32::MAX, EventBody::ChurnDetect { node: 3 }),
+            // Detection outside the window: ignored.
+            ev(2_000.0, u32::MAX, EventBody::NodeLoss { node: 4 }),
+            ev(50_000.0, u32::MAX, EventBody::ChurnDetect { node: 4 }),
+            // Unrelated node never detected: no score.
+            ev(3_000.0, u32::MAX, EventBody::NodeLoss { node: 5 }),
+        ];
+        let causes = attribute(&alert(None, 8_000.0, 20_000.0), &events, &[], 3_000.0);
+        assert_eq!(causes.len(), 1);
+        assert_eq!(causes[0].cause, Cause::ChurnDetectionLag);
+        assert!((causes[0].score_ms - 8_000.0).abs() < 1e-9);
+        assert_eq!(causes[0].events, 1);
+    }
+
+    #[test]
+    fn starved_decisions_score_until_the_next_solve() {
+        let events = vec![
+            ev(1_000.0, 0, EventBody::Decision { candidates: 4, dispatched: 0, warm_hits: 0 }),
+            ev(3_000.0, 0, EventBody::Decision { candidates: 4, dispatched: 0, warm_hits: 0 }),
+            ev(6_000.0, 0, EventBody::Decision { candidates: 4, dispatched: 4, warm_hits: 0 }),
+            // Healthy solve: no score.
+            ev(7_000.0, 0, EventBody::Decision { candidates: 2, dispatched: 2, warm_hits: 0 }),
+        ];
+        let causes = attribute(&alert(None, 500.0, 10_000.0), &events, &[], 0.0);
+        assert_eq!(causes.len(), 1);
+        assert_eq!(causes[0].cause, Cause::DispatchStarvation);
+        // 1000→3000 and 3000→6000: 5000 ms starved.
+        assert!((causes[0].score_ms - 5_000.0).abs() < 1e-9);
+        assert_eq!(causes[0].events, 2);
+        // A starved tail with no later solve runs to the window end.
+        let tail = vec![ev(
+            9_000.0,
+            0,
+            EventBody::Decision { candidates: 1, dispatched: 0, warm_hits: 0 },
+        )];
+        let causes = attribute(&alert(None, 500.0, 10_000.0), &tail, &[], 0.0);
+        assert!((causes[0].score_ms - 1_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn swap_and_kill_evidence_feed_blackout() {
+        let mut events = vec![
+            ev(5_000.0, u32::MAX, EventBody::Swap { alloc: vec![4, 4], blackout_ms: 1_200.0 }),
+            ev(
+                6_000.0,
+                0,
+                EventBody::Kill {
+                    req: 9,
+                    stage: Stage::Diffuse,
+                    start_ms: 4_500.0,
+                    prepare_ms: 0.0,
+                },
+            ),
+        ];
+        queued_span(&mut events, 9, 0, 4_000.0, 100.0); // tiny queue
+        let bds = build_breakdowns(&events);
+        let causes = attribute(&alert(Some(0), 5_000.0, 10_000.0), &events, &bds, 5_000.0);
+        assert_eq!(causes[0].cause, Cause::Blackout);
+        // Swap 1200 + killed execution 1500; span blackout may add more.
+        assert!(causes[0].score_ms >= 2_700.0 - 1e-9, "{}", causes[0].score_ms);
+        assert!(causes[0].requests.contains(&9));
+    }
+
+    #[test]
+    fn attribution_is_deterministic() {
+        let mut events = Vec::new();
+        for r in 0..4u64 {
+            queued_span(&mut events, r, 0, 100.0 * r as f64, 2_000.0);
+        }
+        events.push(ev(2_000.0, u32::MAX, EventBody::Swap { alloc: vec![2], blackout_ms: 900.0 }));
+        let bds = build_breakdowns(&events);
+        let a = attribute(&alert(None, 1_000.0, 9_000.0), &events, &bds, 1_000.0);
+        let b = attribute(&alert(None, 1_000.0, 9_000.0), &events, &bds, 1_000.0);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].score_ms >= w[1].score_ms), "ranked by score");
+    }
+}

@@ -1,0 +1,333 @@
+//! SLO burn-rate alerting + automated root-cause diagnosis (ISSUE 8).
+//!
+//! PR 6 gave the system a trace, PR 7 a live registry; this module is the
+//! layer that *watches* them. It closes the gap between "p95 blew past
+//! SLO" and "because the cheap lane's escalation storm starved dispatch":
+//!
+//! 1. [`alert`] — multi-window multi-burn-rate rules (fast-burn **page**,
+//!    slow-burn **ticket**) evaluated over the per-lane `slo_attainment`
+//!    series the telemetry layer samples, per lane and merged.
+//! 2. [`attribute`] — on alert, join the firing window against the obs
+//!    trace and [`crate::obs::report::BreakdownReport`] components to rank
+//!    causes: queue growth, resize/fault blackout, handoff stall,
+//!    escalation storm, churn detection lag, dispatch-solve starvation —
+//!    each with its evidence interval and contributing request spans.
+//! 3. [`replay`] — parse the JSONL trace and metrics CSV a run exported
+//!    back into events + series, so the `diagnose` CLI subcommand
+//!    reproduces the live diagnosis offline.
+//!
+//! **Determinism contract:** a [`DiagnosisReport`] is a pure function of
+//! `(attainment series, trace events, policy)`. Both inputs are themselves
+//! deterministic given the seed (PR 6/7 acceptance), so the same seed
+//! yields a byte-identical diagnosis JSONL — and because diagnosis runs
+//! *after* the run over exported artifacts, turning it on cannot perturb
+//! the run it diagnoses (the off = byte-equal-trace acceptance
+//! criterion holds by construction).
+//!
+//! The optional consumption hook ([`crate::monitor::Monitor::
+//! consume_diagnosis`]) lets the observe→decide loop act on *attributed*
+//! causes rather than raw rate windows.
+
+pub mod alert;
+pub mod attribute;
+pub mod replay;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::obs::report::build_breakdowns;
+use crate::obs::TraceEvent;
+use crate::telemetry::{metric, Registry};
+use crate::util::json::Json;
+
+pub use alert::{evaluate, evaluate_rule, Alert, AlertKind, BurnRule, SloPolicy};
+pub use attribute::{attribute, Cause, CauseFinding, ALL_CAUSES, MAX_EVIDENCE_REQUESTS};
+pub use replay::{parse_metrics_csv, parse_jsonl_trace};
+
+/// One alert with its ranked causes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnosis {
+    pub alert: Alert,
+    /// Ranked by attributed harm, biggest first (empty when the trace
+    /// holds no evidence in the window — the alert still stands).
+    pub causes: Vec<CauseFinding>,
+}
+
+impl Diagnosis {
+    /// The top-ranked cause, if any evidence was found.
+    pub fn dominant(&self) -> Option<&CauseFinding> {
+        self.causes.first()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = match self.alert.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!("Alert::to_json returns an object"),
+        };
+        o.insert("kind".into(), Json::Str("diagnosis".into()));
+        o.insert(
+            "causes".into(),
+            Json::Arr(self.causes.iter().map(|c| c.to_json()).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// The full diagnosis of one run: every alert the policy fired, each with
+/// its ranked causes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiagnosisReport {
+    pub policy: SloPolicy,
+    pub diagnoses: Vec<Diagnosis>,
+    /// Ring-evicted trace events (a truncated trace may under-attribute).
+    pub dropped: u64,
+}
+
+impl DiagnosisReport {
+    /// Alerts that page (vs ticket).
+    pub fn pages(&self) -> usize {
+        self.diagnoses.iter().filter(|d| d.alert.kind == AlertKind::Page).count()
+    }
+
+    /// JSONL: a `policy` header line, then one `diagnosis` line per alert.
+    /// Key-sorted objects + simulation-time-only values = byte-identical
+    /// for a same-seed run.
+    pub fn to_jsonl(&self) -> String {
+        let mut head: BTreeMap<String, Json> = BTreeMap::new();
+        head.insert("kind".into(), Json::Str("policy".into()));
+        head.insert("objective".into(), Json::Num(self.policy.objective));
+        head.insert("page_long_ms".into(), Json::Num(self.policy.page.long_ms));
+        head.insert("page_short_ms".into(), Json::Num(self.policy.page.short_ms));
+        head.insert("page_burn".into(), Json::Num(self.policy.page.burn));
+        head.insert("ticket_long_ms".into(), Json::Num(self.policy.ticket.long_ms));
+        head.insert("ticket_short_ms".into(), Json::Num(self.policy.ticket.short_ms));
+        head.insert("ticket_burn".into(), Json::Num(self.policy.ticket.burn));
+        head.insert("alerts".into(), Json::Num(self.diagnoses.len() as f64));
+        head.insert("dropped".into(), Json::Num(self.dropped as f64));
+        let mut out = Json::Obj(head).to_string();
+        out.push('\n');
+        for d in &self.diagnoses {
+            out.push_str(&d.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl fmt::Display for DiagnosisReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "diagnosis: {} alert(s) at objective {:.4} (page {}x, ticket {}x)",
+            self.diagnoses.len(),
+            self.policy.objective,
+            self.policy.page.burn,
+            self.policy.ticket.burn,
+        )?;
+        if self.dropped > 0 {
+            writeln!(
+                f,
+                "WARNING: trace ring dropped {} events; attribution may be partial",
+                self.dropped
+            )?;
+        }
+        if self.diagnoses.is_empty() {
+            writeln!(f, "  no SLO burn-rate alerts fired")?;
+            return Ok(());
+        }
+        for d in &self.diagnoses {
+            let lane = match d.alert.lane {
+                Some(l) => format!("lane {l}"),
+                None => "merged".to_string(),
+            };
+            writeln!(
+                f,
+                "[{}] {}  t={:.0}..{:.0} ms  peak burn {:.1}x ({} samples)",
+                d.alert.kind.name().to_uppercase(),
+                lane,
+                d.alert.start_ms,
+                d.alert.end_ms,
+                d.alert.peak_burn,
+                d.alert.points,
+            )?;
+            if d.causes.is_empty() {
+                writeln!(f, "    (no trace evidence in the window)")?;
+            }
+            for (i, c) in d.causes.iter().enumerate() {
+                let reqs = if c.requests.is_empty() {
+                    String::new()
+                } else {
+                    let ids: Vec<String> =
+                        c.requests.iter().map(|r| format!("{r:#x}")).collect();
+                    format!("  reqs [{}]", ids.join(", "))
+                };
+                writeln!(
+                    f,
+                    "    {}. {:<20} {:>12.0} ms over {} event(s){}",
+                    i + 1,
+                    c.cause.name(),
+                    c.score_ms,
+                    c.events,
+                    reqs,
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Diagnose from raw inputs: per-lane attainment series + trace events.
+/// This is the single entry both the live path (registry snapshot) and
+/// the replay path (CSV + JSONL) funnel through, which is what makes the
+/// two byte-identical.
+pub fn diagnose_series(
+    series: &BTreeMap<u32, Vec<(f64, f64)>>,
+    events: &[TraceEvent],
+    dropped: u64,
+    policy: &SloPolicy,
+) -> DiagnosisReport {
+    let breakdowns = build_breakdowns(events);
+    let diagnoses = evaluate(series, policy)
+        .into_iter()
+        .map(|a| {
+            let causes = attribute(&a, events, &breakdowns, policy.lookback_ms(a.kind));
+            Diagnosis { alert: a, causes }
+        })
+        .collect();
+    DiagnosisReport { policy: *policy, diagnoses, dropped }
+}
+
+/// Diagnose a live run: pull the per-lane `slo_attainment` series out of
+/// the registry and join against the captured trace.
+pub fn diagnose(
+    reg: &Registry,
+    events: &[TraceEvent],
+    dropped: u64,
+    policy: &SloPolicy,
+) -> DiagnosisReport {
+    let mut series: BTreeMap<u32, Vec<(f64, f64)>> = BTreeMap::new();
+    for (&(name, lane), pts) in reg.series() {
+        if name == metric::SLO_ATTAINMENT {
+            series.insert(lane, pts.clone());
+        }
+    }
+    diagnose_series(&series, events, dropped, policy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Stage;
+    use crate::obs::EventBody;
+
+    fn bad_series(lane: u32) -> BTreeMap<u32, Vec<(f64, f64)>> {
+        let mut m = BTreeMap::new();
+        m.insert(
+            lane,
+            (0..60)
+                .map(|i| (i as f64 * 5_000.0, if (12..36).contains(&i) { 0.9 } else { 1.0 }))
+                .collect(),
+        );
+        m
+    }
+
+    fn queued_events(lane: u32) -> Vec<TraceEvent> {
+        let mut events = Vec::new();
+        for r in 0..6u64 {
+            let t0 = 60_000.0 + 2_000.0 * r as f64;
+            events.push(TraceEvent {
+                t_ms: t0,
+                lane,
+                body: EventBody::Arrive { req: r, shape_idx: 0 },
+            });
+            events.push(TraceEvent {
+                t_ms: t0 + 20_100.0,
+                lane,
+                body: EventBody::StageDone {
+                    req: r,
+                    stage: Stage::Diffuse,
+                    start_ms: t0 + 20_000.0,
+                    prepare_ms: 0.0,
+                    degree: 1,
+                    node: 0,
+                    steps: 4,
+                    merged_e: true,
+                    merged_c: true,
+                },
+            });
+            events.push(TraceEvent {
+                t_ms: t0 + 20_100.0,
+                lane,
+                body: EventBody::Done { req: r, vr_type: 0 },
+            });
+        }
+        events
+    }
+
+    #[test]
+    fn end_to_end_diagnosis_names_the_planted_cause() {
+        let policy = SloPolicy::default();
+        let rep = diagnose_series(&bad_series(0), &queued_events(0), 0, &policy);
+        assert!(!rep.diagnoses.is_empty(), "burning series must alert");
+        assert!(rep.pages() >= 1);
+        for d in &rep.diagnoses {
+            assert_eq!(
+                d.dominant().map(|c| c.cause),
+                Some(Cause::QueueGrowth),
+                "queue-heavy trace must attribute to queue growth: {d:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn jsonl_is_deterministic_and_parses() {
+        let policy = SloPolicy::default();
+        let rep = diagnose_series(&bad_series(0), &queued_events(0), 3, &policy);
+        let a = rep.to_jsonl();
+        let b = diagnose_series(&bad_series(0), &queued_events(0), 3, &policy).to_jsonl();
+        assert_eq!(a, b, "same inputs must serialise byte-identically");
+        let lines: Vec<&str> = a.lines().collect();
+        assert_eq!(lines.len(), 1 + rep.diagnoses.len());
+        let head = Json::parse(lines[0]).unwrap();
+        assert_eq!(head.get("kind").and_then(|j| j.as_str()), Some("policy"));
+        assert_eq!(head.get("dropped").and_then(|j| j.as_i64()), Some(3));
+        assert_eq!(
+            head.get("alerts").and_then(|j| j.as_i64()),
+            Some(rep.diagnoses.len() as i64)
+        );
+        for line in &lines[1..] {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.get("kind").and_then(|j| j.as_str()), Some("diagnosis"));
+            assert!(v.get("causes").and_then(|j| j.as_arr()).is_some());
+            assert!(v.get("peak_burn").and_then(|j| j.as_f64()).is_some());
+        }
+    }
+
+    #[test]
+    fn display_covers_empty_and_nonempty() {
+        let policy = SloPolicy::default();
+        let clean = diagnose_series(&BTreeMap::new(), &[], 0, &policy);
+        let shown = format!("{clean}");
+        assert!(shown.contains("no SLO burn-rate alerts fired"), "{shown}");
+        let rep = diagnose_series(&bad_series(2), &queued_events(2), 7, &policy);
+        let shown = format!("{rep}");
+        assert!(shown.contains("[PAGE] lane 2"), "{shown}");
+        assert!(shown.contains("queue_growth"), "{shown}");
+        assert!(shown.contains("WARNING"), "{shown}");
+    }
+
+    #[test]
+    fn registry_path_matches_series_path() {
+        let policy = SloPolicy::default();
+        let mut reg = Registry::new();
+        for (t, v) in &bad_series(0)[&0] {
+            reg.sample(*t, metric::SLO_ATTAINMENT, 0, *v);
+            // Unrelated series must not contaminate the extraction.
+            reg.sample(*t, metric::QUEUE_DEPTH, 0, 4.0);
+        }
+        let events = queued_events(0);
+        let from_reg = diagnose(&reg, &events, 0, &policy);
+        let from_series = diagnose_series(&bad_series(0), &events, 0, &policy);
+        assert_eq!(from_reg.to_jsonl(), from_series.to_jsonl());
+    }
+}

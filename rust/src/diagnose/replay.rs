@@ -1,0 +1,332 @@
+//! Replay parsers: turn the artifacts a traced+observed run exports — the
+//! JSONL trace (`obs::export::to_jsonl_with_dropped`) and the metrics CSV
+//! (`telemetry::export::to_csv`) — back into [`TraceEvent`]s and per-lane
+//! series, so the `diagnose` CLI subcommand reproduces the live diagnosis
+//! offline. The JSONL parser is the exact inverse of `event_json` for
+//! every event kind (pinned by a round-trip test), including the trailing
+//! `trace_truncated` accounting line.
+
+use std::collections::BTreeMap;
+
+use crate::config::Stage;
+use crate::obs::{EventBody, TraceEvent, CONTROL_LANE};
+use crate::request::RequestId;
+use crate::util::json::Json;
+
+fn f(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key).and_then(|j| j.as_f64()).ok_or_else(|| format!("missing number '{key}'"))
+}
+
+fn u(v: &Json, key: &str) -> Result<usize, String> {
+    Ok(f(v, key)? as usize)
+}
+
+fn req_id(v: &Json) -> Result<RequestId, String> {
+    Ok(f(v, "req")? as RequestId)
+}
+
+fn b(v: &Json, key: &str) -> Result<bool, String> {
+    match v.get(key) {
+        Some(Json::Bool(x)) => Ok(*x),
+        _ => Err(format!("missing bool '{key}'")),
+    }
+}
+
+fn s<'a>(v: &'a Json, key: &str) -> Result<&'a str, String> {
+    v.get(key).and_then(|j| j.as_str()).ok_or_else(|| format!("missing string '{key}'"))
+}
+
+fn stage(v: &Json) -> Result<Stage, String> {
+    match s(v, "stage")? {
+        "encode" => Ok(Stage::Encode),
+        "diffuse" => Ok(Stage::Diffuse),
+        "decode" => Ok(Stage::Decode),
+        other => Err(format!("unknown stage '{other}'")),
+    }
+}
+
+fn alloc(v: &Json) -> Result<Vec<usize>, String> {
+    v.get("alloc")
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| "missing array 'alloc'".to_string())?
+        .iter()
+        .map(|j| j.as_f64().map(|n| n as usize).ok_or_else(|| "non-number in 'alloc'".into()))
+        .collect()
+}
+
+/// `Recovery { policy }` carries a `&'static str`; the replay maps the
+/// known policy labels back to their statics and anything else to
+/// `"unknown"` (forward compatibility beats a parse failure).
+fn policy_static(label: &str) -> &'static str {
+    match label {
+        "proactive" => "proactive",
+        "reactive" => "reactive",
+        "cold-restart" => "cold-restart",
+        _ => "unknown",
+    }
+}
+
+fn body_of(kind: &str, v: &Json) -> Result<Option<EventBody>, String> {
+    Ok(Some(match kind {
+        "arrive" => EventBody::Arrive { req: req_id(v)?, shape_idx: u(v, "shape_idx")? },
+        "dispatch" => EventBody::Dispatch {
+            req: req_id(v)?,
+            shape_idx: u(v, "shape_idx")?,
+            vr_type: u(v, "vr_type")?,
+            degree: u(v, "degree")?,
+            profit: f(v, "profit")?,
+        },
+        "resume" => EventBody::Resume {
+            req: req_id(v)?,
+            restore_ms: f(v, "restore_ms")?,
+            skip_encode: b(v, "skip_encode")?,
+            diffuse_frac: f(v, "diffuse_frac")?,
+        },
+        "stage_done" => EventBody::StageDone {
+            req: req_id(v)?,
+            stage: stage(v)?,
+            start_ms: f(v, "start_ms")?,
+            prepare_ms: f(v, "prepare_ms")?,
+            degree: u(v, "degree")?,
+            node: u(v, "node")?,
+            steps: f(v, "steps")? as u32,
+            merged_e: b(v, "merged_e")?,
+            merged_c: b(v, "merged_c")?,
+        },
+        "cut" => EventBody::Cut {
+            req: req_id(v)?,
+            start_ms: f(v, "start_ms")?,
+            prepare_ms: f(v, "prepare_ms")?,
+            steps_done: f(v, "steps_done")? as u32,
+        },
+        "kill" => EventBody::Kill {
+            req: req_id(v)?,
+            stage: stage(v)?,
+            start_ms: f(v, "start_ms")?,
+            prepare_ms: f(v, "prepare_ms")?,
+        },
+        "done" => EventBody::Done { req: req_id(v)?, vr_type: u(v, "vr_type")? },
+        "oom" => EventBody::Oom { req: req_id(v)? },
+        "drop" => EventBody::Drop { req: req_id(v)?, dispatched: b(v, "dispatched")? },
+        "decision" => EventBody::Decision {
+            candidates: u(v, "candidates")?,
+            dispatched: u(v, "dispatched")?,
+            warm_hits: u(v, "warm_hits")?,
+        },
+        "repartition" => EventBody::Repartition { alloc: alloc(v)?, fault: b(v, "fault")? },
+        "swap" => EventBody::Swap { alloc: alloc(v)?, blackout_ms: f(v, "blackout_ms")? },
+        "placement_switch" => EventBody::PlacementSwitch,
+        "churn_detect" => EventBody::ChurnDetect { node: u(v, "node")? },
+        "node_loss" => EventBody::NodeLoss { node: u(v, "node")? },
+        "node_return" => EventBody::NodeReturn { node: u(v, "node")? },
+        "recovery" => EventBody::Recovery { policy: policy_static(s(v, "policy")?) },
+        "threshold_move" => EventBody::ThresholdMove { from: f(v, "from")?, to: f(v, "to")? },
+        "escalate" => EventBody::Escalate { req: req_id(v)?, difficulty: f(v, "difficulty")? },
+        _ => return Ok(None),
+    }))
+}
+
+/// Parse a JSONL trace back into `(events, dropped)`. Unknown event kinds
+/// are skipped (a newer trace still replays); structural damage — bad
+/// JSON, missing fields on a known kind — is an error, not a silent skip.
+pub fn parse_jsonl_trace(text: &str) -> Result<(Vec<TraceEvent>, u64), String> {
+    let mut events = Vec::new();
+    let mut dropped = 0u64;
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| format!("trace line {}: {e}", i + 1))?;
+        let kind =
+            v.get("kind").and_then(|j| j.as_str()).ok_or(format!("trace line {}: no kind", i + 1))?;
+        if kind == "trace_truncated" {
+            dropped = f(&v, "dropped").map_err(|e| format!("trace line {}: {e}", i + 1))? as u64;
+            continue;
+        }
+        let Some(body) =
+            body_of(kind, &v).map_err(|e| format!("trace line {} ({kind}): {e}", i + 1))?
+        else {
+            continue;
+        };
+        let t_ms = f(&v, "t_ms").map_err(|e| format!("trace line {}: {e}", i + 1))?;
+        let lane_raw = v
+            .get("lane")
+            .and_then(|j| j.as_i64())
+            .ok_or(format!("trace line {}: no lane", i + 1))?;
+        let lane = if lane_raw < 0 { CONTROL_LANE } else { lane_raw as u32 };
+        events.push(TraceEvent { t_ms, lane, body });
+    }
+    Ok((events, dropped))
+}
+
+/// Parse the metrics CSV (`t_ms,lane,metric,value`) and extract one
+/// metric's per-lane series, preserving row order (rows are time-sorted
+/// by the exporter).
+pub fn parse_metrics_csv(
+    text: &str,
+    metric_name: &str,
+) -> Result<BTreeMap<u32, Vec<(f64, f64)>>, String> {
+    let mut out: BTreeMap<u32, Vec<(f64, f64)>> = BTreeMap::new();
+    let mut lines = text.lines().enumerate();
+    match lines.next() {
+        Some((_, h)) if h.trim() == "t_ms,lane,metric,value" => {}
+        other => return Err(format!("bad CSV header: {:?}", other.map(|(_, h)| h))),
+    }
+    for (i, line) in lines {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut cols = line.split(',');
+        let (t, lane, name, value) = match (cols.next(), cols.next(), cols.next(), cols.next()) {
+            (Some(t), Some(l), Some(n), Some(v)) if cols.next().is_none() => (t, l, n, v),
+            _ => return Err(format!("CSV line {}: expected 4 columns", i + 1)),
+        };
+        if name != metric_name {
+            continue;
+        }
+        let t: f64 = t.parse().map_err(|_| format!("CSV line {}: bad t_ms '{t}'", i + 1))?;
+        let lane: i64 =
+            lane.parse().map_err(|_| format!("CSV line {}: bad lane '{lane}'", i + 1))?;
+        let v: f64 =
+            value.parse().map_err(|_| format!("CSV line {}: bad value '{value}'", i + 1))?;
+        let lane = if lane < 0 { CONTROL_LANE } else { lane as u32 };
+        out.entry(lane).or_default().push((t, v));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::export::{to_jsonl, to_jsonl_with_dropped};
+    use crate::telemetry::export::to_csv;
+    use crate::telemetry::{metric, Telemetry};
+
+    /// One event of every kind (every serialisation arm exercised).
+    fn all_kinds() -> Vec<TraceEvent> {
+        let ev = |t_ms: f64, lane: u32, body: EventBody| TraceEvent { t_ms, lane, body };
+        vec![
+            ev(0.0, 0, EventBody::Arrive { req: 1, shape_idx: 2 }),
+            ev(
+                1.0,
+                0,
+                EventBody::Dispatch { req: 1, shape_idx: 2, vr_type: 1, degree: 4, profit: 2.5 },
+            ),
+            ev(
+                2.0,
+                0,
+                EventBody::Resume {
+                    req: 1,
+                    restore_ms: 12.5,
+                    skip_encode: true,
+                    diffuse_frac: 0.25,
+                },
+            ),
+            ev(
+                3.0,
+                0,
+                EventBody::StageDone {
+                    req: 1,
+                    stage: Stage::Diffuse,
+                    start_ms: 2.0,
+                    prepare_ms: 0.5,
+                    degree: 4,
+                    node: 3,
+                    steps: 28,
+                    merged_e: true,
+                    merged_c: false,
+                },
+            ),
+            ev(4.0, 0, EventBody::Cut { req: 1, start_ms: 3.5, prepare_ms: 0.1, steps_done: 7 }),
+            ev(
+                5.0,
+                0,
+                EventBody::Kill { req: 1, stage: Stage::Encode, start_ms: 4.5, prepare_ms: 0.2 },
+            ),
+            ev(6.0, 0, EventBody::Done { req: 1, vr_type: 1 }),
+            ev(7.0, 0, EventBody::Oom { req: 2 }),
+            ev(8.0, 0, EventBody::Drop { req: 3, dispatched: false }),
+            ev(9.0, 1, EventBody::Decision { candidates: 5, dispatched: 2, warm_hits: 1 }),
+            ev(10.0, CONTROL_LANE, EventBody::Repartition { alloc: vec![3, 5], fault: true }),
+            ev(11.0, CONTROL_LANE, EventBody::Swap { alloc: vec![4, 4], blackout_ms: 800.0 }),
+            ev(12.0, 1, EventBody::PlacementSwitch),
+            ev(13.0, CONTROL_LANE, EventBody::ChurnDetect { node: 6 }),
+            ev(14.0, CONTROL_LANE, EventBody::NodeLoss { node: 6 }),
+            ev(15.0, CONTROL_LANE, EventBody::NodeReturn { node: 6 }),
+            ev(16.0, CONTROL_LANE, EventBody::Recovery { policy: "reactive" }),
+            ev(17.0, 1, EventBody::ThresholdMove { from: 0.6, to: 0.55 }),
+            ev(18.0, 1, EventBody::Escalate { req: 4, difficulty: 0.9 }),
+        ]
+    }
+
+    #[test]
+    fn jsonl_round_trips_every_event_kind() {
+        let original = all_kinds();
+        let (parsed, dropped) = parse_jsonl_trace(&to_jsonl(&original)).unwrap();
+        assert_eq!(dropped, 0);
+        assert_eq!(parsed, original, "parse must invert event_json exactly");
+        // And the re-serialisation is byte-identical: the full inverse.
+        assert_eq!(to_jsonl(&parsed), to_jsonl(&original));
+    }
+
+    #[test]
+    fn truncation_line_carries_the_dropped_count() {
+        let original = all_kinds();
+        let text = to_jsonl_with_dropped(&original, 99);
+        let (parsed, dropped) = parse_jsonl_trace(&text).unwrap();
+        assert_eq!(dropped, 99);
+        assert_eq!(parsed.len(), original.len());
+    }
+
+    #[test]
+    fn escalation_tagged_ids_keep_their_tag_bit() {
+        let esc = 5u64 | (1 << 63);
+        let evs = vec![TraceEvent {
+            t_ms: 1.0,
+            lane: 0,
+            body: EventBody::Done { req: esc, vr_type: 0 },
+        }];
+        let (parsed, _) = parse_jsonl_trace(&to_jsonl(&evs)).unwrap();
+        // The id travels through JSON as f64: low bits quantise at this
+        // magnitude, but the escalation tag (bit 63) survives — which is
+        // what the breakdown's `escalated` flag keys on.
+        match parsed[0].body {
+            EventBody::Done { req, .. } => assert_ne!(req & (1 << 63), 0),
+            _ => panic!("kind changed in round-trip"),
+        }
+    }
+
+    #[test]
+    fn malformed_trace_lines_error_with_position() {
+        assert!(parse_jsonl_trace("{not json").is_err());
+        let e = parse_jsonl_trace("{\"kind\":\"arrive\",\"lane\":0,\"t_ms\":1}").unwrap_err();
+        assert!(e.contains("line 1"), "{e}");
+        assert!(e.contains("req"), "{e}");
+        // Unknown kinds skip (forward compatibility), blank lines skip.
+        let (evs, _) =
+            parse_jsonl_trace("\n{\"kind\":\"from_the_future\",\"lane\":0,\"t_ms\":1}\n").unwrap();
+        assert!(evs.is_empty());
+    }
+
+    #[test]
+    fn csv_parse_extracts_one_metric_per_lane() {
+        let (t, reg) = Telemetry::registry();
+        let (l0, l1) = (t.for_lane(0), t.for_lane(1));
+        l0.sample(1_000.0, metric::SLO_ATTAINMENT, 0.99);
+        l1.sample(1_000.0, metric::SLO_ATTAINMENT, 1.0);
+        l0.sample(2_000.0, metric::SLO_ATTAINMENT, 0.97);
+        l0.sample(2_000.0, metric::QUEUE_DEPTH, 12.0); // other metric: excluded
+        t.sample(3_000.0, metric::GPU_UTILIZATION, 0.5); // control lane, other metric
+        let csv = to_csv(&reg.borrow());
+        let series = parse_metrics_csv(&csv, metric::SLO_ATTAINMENT).unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[&0], vec![(1_000.0, 0.99), (2_000.0, 0.97)]);
+        assert_eq!(series[&1], vec![(1_000.0, 1.0)]);
+        // Malformed inputs error instead of silently dropping data.
+        assert!(parse_metrics_csv("wrong,header\n", metric::SLO_ATTAINMENT).is_err());
+        assert!(parse_metrics_csv("t_ms,lane,metric,value\n1,2\n", "x").is_err());
+        assert!(parse_metrics_csv("t_ms,lane,metric,value\na,0,x,1\n", "x").is_err());
+    }
+}

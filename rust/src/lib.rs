@@ -38,6 +38,10 @@
 //!   log-bucketed histograms with per-lane time series, Prometheus/CSV
 //!   exporters, and the shared rolling windows the control plane reads
 //!   (observe→decide closed loop).
+//! * [`diagnose`] — SLO burn-rate alerting (multi-window page/ticket
+//!   rules over the telemetry attainment series) + automated root-cause
+//!   attribution joining alerts against the trace and latency breakdown,
+//!   with JSONL/Display reports and offline trace+CSV replay.
 //! * [`metrics`] — SLO attainment, latency percentiles, Fig-10 reporting.
 //! * [`runtime`] — artifact manifest; with feature `pjrt`, the PJRT
 //!   loader/executor for the AOT HLO artifacts.
@@ -50,6 +54,7 @@ pub mod cascade;
 pub mod cluster;
 pub mod config;
 pub mod coserve;
+pub mod diagnose;
 pub mod dispatch;
 pub mod engine;
 pub mod faults;

@@ -7,6 +7,9 @@
 //!   profile      dump the offline profile table for a pipeline
 //!   bench-check  diff a fresh BENCH_*.json against the committed baseline
 //!                (CI perf-regression gate; exit 1 on regression)
+//!   diagnose     replay a JSONL trace + metrics CSV into an SLO burn-rate
+//!                alert + root-cause report (exit 1 with --expect-alerts
+//!                true when nothing fires)
 //!
 //! Examples:
 //!   tridentserve simulate --pipeline flux --workload dynamic --policy trident
@@ -191,10 +194,38 @@ fn main() -> Result<()> {
             }
             println!("bench-check passed ({current_path} vs {baseline_path})");
         }
+        "diagnose" => {
+            use tridentserve::diagnose::{diagnose_series, parse_jsonl_trace, parse_metrics_csv, SloPolicy};
+            use tridentserve::telemetry::metric;
+            use tridentserve::util::Error;
+
+            let trace_path = get("trace", "coserve_trace.jsonl");
+            let metrics_path = get("metrics", "coserve_metrics.csv");
+            let objective: f64 = get("objective", "0.999").parse()?;
+            let trace_text = std::fs::read_to_string(&trace_path)?;
+            let metrics_text = std::fs::read_to_string(&metrics_path)?;
+            let (events, dropped) = parse_jsonl_trace(&trace_text).map_err(Error::msg)?;
+            let series =
+                parse_metrics_csv(&metrics_text, metric::SLO_ATTAINMENT).map_err(Error::msg)?;
+            let policy = SloPolicy::with_objective(objective);
+            let report = diagnose_series(&series, &events, dropped, &policy);
+            print!("{report}");
+            if let Some(out) = opts.get("out") {
+                std::fs::write(out, report.to_jsonl())?;
+                println!("wrote diagnosis JSONL to {out}");
+            }
+            if get("expect-alerts", "false") == "true" && report.diagnoses.is_empty() {
+                println!(
+                    "diagnose FAILED: --expect-alerts true but no alerts fired \
+                     ({trace_path} + {metrics_path} at objective {objective})"
+                );
+                std::process::exit(1);
+            }
+        }
         _ => {
             println!("tridentserve — stage-level serving for diffusion pipelines");
             println!(
-                "usage: tridentserve <simulate|serve|placement|profile|bench-check> \
+                "usage: tridentserve <simulate|serve|placement|profile|bench-check|diagnose> \
                  [--key value ...]"
             );
             println!("see README.md for the full flag reference");

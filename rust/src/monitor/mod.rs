@@ -5,6 +5,7 @@
 //! its staleness signal on.
 
 use crate::config::Stage;
+use crate::diagnose::{Cause, Diagnosis};
 use crate::placement::{Pi, Rates};
 use crate::telemetry::{metric, RollingWindow, Telemetry};
 use crate::util::stats::SlidingWindow;
@@ -74,6 +75,10 @@ pub struct Monitor {
     pub min_events: usize,
     /// Fire when fastest/slowest stage rate exceeds this (paper: 1.5).
     pub imbalance_trigger: f64,
+    /// Dominant cause of the latest diagnosis fed in via
+    /// [`Monitor::consume_diagnosis`]. `None` on the default path — the
+    /// hook is opt-in, and an unfed Monitor behaves exactly as before.
+    hint: Option<Cause>,
 }
 
 impl Clone for Monitor {
@@ -90,6 +95,7 @@ impl Clone for Monitor {
             pi_windows: self.pi_windows.clone(),
             min_events: self.min_events,
             imbalance_trigger: self.imbalance_trigger,
+            hint: self.hint,
         }
     }
 }
@@ -114,6 +120,7 @@ impl Monitor {
             pi_windows: Default::default(),
             min_events: 20,
             imbalance_trigger,
+            hint: None,
         }
     }
 
@@ -166,11 +173,45 @@ impl Monitor {
         Rates { v }
     }
 
+    /// Optional diagnosis feedback hook: store the dominant cause of `d` so
+    /// the §5.3 trigger can act on an *attributed* root cause rather than
+    /// only raw rate windows. A pipeline-pressure diagnosis (queue growth
+    /// or dispatch-solve starvation) halves the evidence floor, letting the
+    /// switch trigger react with less accumulated data while the alert's
+    /// cause is live; other causes are recorded but do not bias the
+    /// trigger. Never called on the default path — a Monitor that is never
+    /// fed a diagnosis is behavior-identical to one built before this hook
+    /// existed.
+    pub fn consume_diagnosis(&mut self, d: &Diagnosis) {
+        self.hint = d.dominant().map(|c| c.cause);
+    }
+
+    /// Forget the stored diagnosis hint (call when the alert resolves).
+    pub fn clear_diagnosis_hint(&mut self) {
+        self.hint = None;
+    }
+
+    /// The dominant cause of the most recently consumed diagnosis, if any.
+    pub fn diagnosis_hint(&self) -> Option<Cause> {
+        self.hint
+    }
+
+    /// The evidence floor currently in force: `min_events`, halved (round
+    /// up, never below 1) while a pipeline-pressure diagnosis hint is live.
+    fn event_floor(&self) -> usize {
+        match self.hint {
+            Some(Cause::QueueGrowth) | Some(Cause::DispatchStarvation) => {
+                self.min_events.div_ceil(2).max(1)
+            }
+            _ => self.min_events,
+        }
+    }
+
     /// §5.3 trigger: true when the fastest stage's windowed rate is at least
     /// `imbalance_trigger`× the slowest's (with enough evidence).
     pub fn pattern_change(&mut self, now_ms: f64) -> bool {
         let events: usize = self.stage_windows.iter().map(|w| w.borrow().len()).sum();
-        if events < self.min_events {
+        if events < self.event_floor() {
             return false;
         }
         let rates = self.stage_rates(now_ms);
@@ -325,6 +366,61 @@ mod tests {
         c.record(2_600.0, Stage::Diffuse, Pi::D, 1.0);
         assert_eq!(w.borrow().len(), 25);
         assert!(c.pattern_change(2_600.0));
+    }
+
+    fn diag(cause: Cause) -> Diagnosis {
+        use crate::diagnose::{Alert, AlertKind, CauseFinding};
+        Diagnosis {
+            alert: Alert {
+                kind: AlertKind::Page,
+                lane: Some(0),
+                start_ms: 0.0,
+                end_ms: 1_000.0,
+                peak_burn: 12.0,
+                points: 3,
+            },
+            causes: vec![CauseFinding {
+                cause,
+                score_ms: 500.0,
+                events: 2,
+                from_ms: 0.0,
+                to_ms: 1_000.0,
+                requests: vec![],
+            }],
+        }
+    }
+
+    #[test]
+    fn queue_pressure_diagnosis_halves_the_evidence_floor() {
+        let mut m = Monitor::new(10_000.0, 1.5);
+        // 12 maximally-skewed events: below the default floor of 20, above
+        // the halved floor of 10.
+        for i in 0..12 {
+            m.record(i as f64 * 100.0, Stage::Diffuse, Pi::D, 1.0);
+        }
+        assert!(!m.pattern_change(1_200.0), "unfed monitor keeps the default floor");
+        m.consume_diagnosis(&diag(Cause::QueueGrowth));
+        assert_eq!(m.diagnosis_hint(), Some(Cause::QueueGrowth));
+        assert!(m.pattern_change(1_200.0), "queue-growth hint halves the floor");
+        // Non-pressure causes are recorded but do not bias the trigger.
+        m.consume_diagnosis(&diag(Cause::Blackout));
+        assert_eq!(m.diagnosis_hint(), Some(Cause::Blackout));
+        assert!(!m.pattern_change(1_200.0));
+        m.consume_diagnosis(&diag(Cause::DispatchStarvation));
+        assert!(m.pattern_change(1_200.0));
+        // Clones carry the hint; clearing restores default behavior.
+        let mut c = m.clone();
+        m.clear_diagnosis_hint();
+        assert_eq!(m.diagnosis_hint(), None);
+        assert!(!m.pattern_change(1_200.0));
+        assert!(c.pattern_change(1_200.0), "clone preserves the hint");
+        // A diagnosis with no trace evidence clears the hint rather than
+        // leaving a stale bias in force.
+        let mut empty = diag(Cause::QueueGrowth);
+        empty.causes.clear();
+        c.consume_diagnosis(&empty);
+        assert_eq!(c.diagnosis_hint(), None);
+        assert!(!c.pattern_change(1_200.0));
     }
 
     #[test]

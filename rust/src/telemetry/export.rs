@@ -56,6 +56,45 @@ fn write_summary(out: &mut String, name: &str, lane: Option<u32>, h: &LogHistogr
     let _ = writeln!(out, "{PROM_PREFIX}{name}_count{} {}", labels(""), h.count());
 }
 
+/// Native cumulative `histogram` exposition for one `LogHistogram` under
+/// the family name `{name}_hist` (distinct from the summary family — one
+/// exposition name cannot carry two TYPEs). Bucket upper bounds are the
+/// histogram's exact log-bucket edges, so the exposition loses nothing the
+/// sketch didn't already lose; the terminal `+Inf` bucket equals `_count`.
+fn write_histogram(out: &mut String, name: &str, lane: Option<u32>, h: &LogHistogram) {
+    let labels = |extra: &str| match lane {
+        Some(l) => {
+            if extra.is_empty() {
+                format!("{{lane=\"{}\"}}", lane_label(l))
+            } else {
+                format!("{{lane=\"{}\",{}}}", lane_label(l), extra)
+            }
+        }
+        None => {
+            if extra.is_empty() {
+                String::new()
+            } else {
+                format!("{{{extra}}}")
+            }
+        }
+    };
+    for (bound, cum) in h.cumulative_buckets() {
+        let _ = writeln!(
+            out,
+            "{PROM_PREFIX}{name}_hist_bucket{} {cum}",
+            labels(&format!("le=\"{bound}\""))
+        );
+    }
+    let _ = writeln!(
+        out,
+        "{PROM_PREFIX}{name}_hist_bucket{} {}",
+        labels("le=\"+Inf\""),
+        h.count()
+    );
+    let _ = writeln!(out, "{PROM_PREFIX}{name}_hist_sum{} {}", labels(""), h.sum());
+    let _ = writeln!(out, "{PROM_PREFIX}{name}_hist_count{} {}", labels(""), h.count());
+}
+
 /// Render the registry as Prometheus text exposition (format 0.0.4).
 ///
 /// Counters get the conventional `_total` suffix; histograms are exposed
@@ -107,6 +146,28 @@ pub fn to_prometheus(reg: &Registry) -> String {
             write_summary(&mut out, name, None, &merged);
         }
     }
+    // Native cumulative histograms alongside the summaries, as their own
+    // `{name}_hist` family (a name can only declare one TYPE): per lane,
+    // then the label-free cluster roll-up.
+    last = "";
+    for (&(name, lane), h) in reg.hists() {
+        if name != last {
+            let _ = writeln!(out, "# HELP {PROM_PREFIX}{name}_hist {name} (cumulative buckets)");
+            let _ = writeln!(out, "# TYPE {PROM_PREFIX}{name}_hist histogram");
+            last = name;
+        }
+        write_histogram(&mut out, name, Some(lane), h);
+    }
+    last = "";
+    for (&(name, _), _) in reg.hists() {
+        if name == last {
+            continue;
+        }
+        last = name;
+        if let Some(merged) = reg.merged_hist(name) {
+            write_histogram(&mut out, name, None, &merged);
+        }
+    }
     out
 }
 
@@ -142,6 +203,7 @@ mod tests {
         l0.add(metric::REQUESTS_COMPLETED, 3);
         l1.add(metric::REQUESTS_COMPLETED, 4);
         t.add(metric::LANE_SWAPS, 1); // control lane
+        t.add(metric::TRACE_DROPPED, 2); // ring-eviction count, control lane
         l0.sample(100.0, metric::QUEUE_DEPTH, 2.0);
         l1.sample(100.0, metric::QUEUE_DEPTH, 5.0);
         l0.sample(200.0, metric::QUEUE_DEPTH, 1.0);
@@ -159,6 +221,7 @@ mod tests {
         assert!(text.contains("trident_requests_completed_total{lane=\"0\"} 3"));
         assert!(text.contains("trident_requests_completed_total{lane=\"1\"} 4"));
         assert!(text.contains("trident_lane_swaps_total{lane=\"-1\"} 1"));
+        assert!(text.contains("trident_trace_dropped_total{lane=\"-1\"} 2"));
         // Gauges hold the latest sample.
         assert!(text.contains("trident_queue_depth{lane=\"0\"} 1"));
         assert!(text.contains("trident_queue_depth{lane=\"1\"} 5"));
@@ -168,9 +231,45 @@ mod tests {
         assert!(text.contains("trident_request_latency_ms_count{lane=\"1\"} 1"));
         assert!(text.contains("trident_request_latency_ms_count 2"));
         assert!(text.contains("trident_request_latency_ms_sum 200"));
-        let help_lines =
-            text.lines().filter(|l| l.starts_with("# HELP trident_request_latency_ms")).count();
+        let help_lines = text
+            .lines()
+            .filter(|l| l.starts_with("# HELP trident_request_latency_ms "))
+            .count();
         assert_eq!(help_lines, 1, "HELP emitted once per metric name");
+    }
+
+    #[test]
+    fn prometheus_native_histograms_are_cumulative() {
+        let (_t, reg) = sample_registry();
+        let text = to_prometheus(&reg.borrow());
+        // Distinct family with its own TYPE, per lane and merged.
+        assert!(text.contains("# TYPE trident_request_latency_ms_hist histogram"));
+        assert!(text.contains("trident_request_latency_ms_hist_count{lane=\"0\"} 1"));
+        assert!(text.contains("trident_request_latency_ms_hist_count 2"));
+        assert!(text.contains("trident_request_latency_ms_hist_sum 200"));
+        // +Inf bucket present, per lane and merged, equal to the count.
+        assert!(text.contains("trident_request_latency_ms_hist_bucket{lane=\"0\",le=\"+Inf\"} 1"));
+        assert!(text.contains("trident_request_latency_ms_hist_bucket{le=\"+Inf\"} 2"));
+        // The merged roll-up's buckets are cumulative: parse them back in
+        // order and check counts never decrease and end at the count.
+        let mut prev = 0u64;
+        let mut finite = Vec::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("trident_request_latency_ms_hist_bucket{le=\"") {
+                let (le, v) = rest.split_once("\"} ").expect("bucket line shape");
+                let v: u64 = v.parse().expect("bucket count parses");
+                assert!(v >= prev, "cumulative counts must not drop: {line}");
+                prev = v;
+                if le != "+Inf" {
+                    finite.push(le.parse::<f64>().expect("finite le parses"));
+                }
+            }
+        }
+        assert_eq!(prev, 2, "terminal bucket equals _count");
+        assert!(finite.windows(2).all(|w| w[1] > w[0]), "le bounds increase: {finite:?}");
+        // Both recorded values (50, 150) sit under the largest finite bound
+        // within the sketch's relative accuracy.
+        assert!(*finite.last().unwrap() >= 150.0 * 0.99);
     }
 
     #[test]

@@ -133,6 +133,26 @@ impl LogHistogram {
         self.max = self.max.max(other.max);
     }
 
+    /// Cumulative bucket view for native Prometheus `histogram` exposition:
+    /// `(upper_bound, cumulative_count)` pairs in increasing bound order.
+    /// The zero bucket (values `<= 0`) surfaces as bound `0.0` when
+    /// occupied; each log bucket `i` reports its exact upper edge
+    /// `gamma^i`. The final cumulative count equals [`count`](Self::count),
+    /// so the exporter's `+Inf` bucket needs no special casing here.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.buckets.len() + 1);
+        let mut cum = 0u64;
+        if self.zero_count > 0 {
+            cum += self.zero_count;
+            out.push((0.0, cum));
+        }
+        for (&i, &c) in &self.buckets {
+            cum += c;
+            out.push((self.gamma.powi(i), cum));
+        }
+        out
+    }
+
     /// Quantile estimate for `q` in `[0, 1]`; `None` on an empty histogram.
     /// The estimate has relative error `<= alpha` against the rank-`q`
     /// recorded value, and is clamped to the observed `[min, max]` so the
@@ -258,6 +278,31 @@ mod tests {
                 assert_eq!(h.quantile(q), pooled.quantile(q), "q={q}");
             }
         }
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_cover_all_observations() {
+        let h = LogHistogram::default();
+        assert!(h.cumulative_buckets().is_empty());
+
+        let mut h = LogHistogram::default();
+        h.record(0.0); // zero bucket
+        for v in [0.5, 3.0, 3.0, 250.0] {
+            h.record(v);
+        }
+        let buckets = h.cumulative_buckets();
+        // Zero bucket first, bounds strictly increasing, counts
+        // non-decreasing, final count == total count.
+        assert_eq!(buckets[0].0, 0.0);
+        assert_eq!(buckets[0].1, 1);
+        for w in buckets.windows(2) {
+            assert!(w[1].0 > w[0].0, "bounds must increase: {buckets:?}");
+            assert!(w[1].1 >= w[0].1, "cumulative counts must not drop: {buckets:?}");
+        }
+        assert_eq!(buckets.last().unwrap().1, h.count());
+        // Every recorded positive value is <= the bound of the first bucket
+        // whose cumulative count reaches its rank: spot-check the max.
+        assert!(buckets.last().unwrap().0 >= 250.0);
     }
 
     #[test]

@@ -92,6 +92,11 @@ pub mod metric {
     pub const FAULT_BLACKOUT_MS: &str = "fault_blackout_ms";
     pub const LANE_SWAPS: &str = "lane_swaps";
     pub const FAULT_BLACKOUTS: &str = "fault_blackouts";
+    /// Trace events evicted from a full [`crate::obs::RingSink`] (counter,
+    /// control lane). Recorded post-run by whoever owns the sink; exported
+    /// as `trident_trace_dropped_total` so a truncated trace is visible in
+    /// the metrics snapshot, not just the JSONL trailer.
+    pub const TRACE_DROPPED: &str = "trace_dropped";
 }
 
 /// Instrument key: `(metric name, lane)`. Deterministic `Ord` (str content,

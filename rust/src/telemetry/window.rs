@@ -154,6 +154,75 @@ mod tests {
     }
 
     #[test]
+    fn rolling_window_empty_and_single_sample() {
+        let mut w = RollingWindow::new(1000.0);
+        // Empty: rate is a measured 0/s, mean is "no data" (None) — the two
+        // must not be conflated.
+        assert_eq!(w.rate_per_sec(0.0), 0.0);
+        assert_eq!(w.sum_weight(1e9), 0.0);
+        assert_eq!(w.mean_weight(1e9), None);
+        assert!(w.is_empty());
+        // One sample: every read is that sample.
+        w.push(100.0, 3.0);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.mean_weight(100.0), Some(3.0));
+        assert_eq!(w.sum_weight(100.0), 3.0);
+        assert_eq!(w.rate_per_sec(100.0), 3.0); // 3 weight / 1s window
+        // clear() returns to the empty-window readings exactly.
+        w.clear();
+        assert!(w.is_empty());
+        assert_eq!(w.mean_weight(100.0), None);
+    }
+
+    #[test]
+    fn rolling_window_out_of_order_and_equal_timestamps() {
+        let mut w = RollingWindow::new(1000.0);
+        // Eviction keys on the *read* clock, not insertion order: a sample
+        // pushed with an older timestamp is retained as long as it is
+        // within the window of the latest read.
+        w.push(800.0, 1.0);
+        w.push(200.0, 2.0); // out of order — push evicts against t=200 only
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.sum_weight(900.0), 3.0);
+        // Equal timestamps all count.
+        w.push(900.0, 1.0);
+        w.push(900.0, 1.0);
+        assert_eq!(w.sum_weight(900.0), 5.0);
+        assert_eq!(w.mean_weight(900.0), Some(1.25));
+        // The out-of-order t=200 sample ages out first even though it was
+        // pushed second; VecDeque order means the front (t=800) shields it
+        // until a read advances the clock far enough.
+        assert_eq!(w.sum_weight(1500.0), 5.0, "t=200 behind t=800 front survives front check");
+        assert_eq!(w.sum_weight(1801.0), 2.0, "t=800 and the shielded t=200 both evict");
+    }
+
+    #[test]
+    fn rolling_window_boundary_eviction_is_strict() {
+        let mut w = RollingWindow::new(1000.0);
+        w.push(0.0, 1.0);
+        // Exactly window_ms old is retained (strict `>` age check) ...
+        assert_eq!(w.sum_weight(1000.0), 1.0);
+        assert_eq!(w.len(), 1);
+        // ... and one tick past the boundary evicts.
+        assert_eq!(w.sum_weight(1000.0000001), 0.0);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn verdict_window_single_sample_and_cap_floor() {
+        // cap 0 clamps to 1: the ring is never unbounded-empty.
+        let mut v = VerdictWindow::new(0);
+        assert_eq!(v.cap(), 1);
+        assert_eq!(v.frac_ok(), None);
+        v.observe(true);
+        assert_eq!((v.len(), v.frac_ok()), (1, Some(1.0)));
+        // Every further verdict displaces the previous one exactly.
+        v.observe(false);
+        assert_eq!((v.len(), v.frac_ok()), (1, Some(0.0)));
+        assert_eq!(v.observed(), 2, "observed counts evicted verdicts too");
+    }
+
+    #[test]
     fn verdict_window_caps_and_counts() {
         let mut v = VerdictWindow::new(4);
         assert_eq!(v.frac_ok(), None);

@@ -124,12 +124,19 @@ fn write_escaped(s: &str, out: &mut String) {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json error at byte {offset}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     b: &'a [u8],

@@ -1,0 +1,285 @@
+//! Diagnosis integration (ISSUE 8 acceptance): the SLO burn-rate alerting
+//! + root-cause attribution stack is pinned on four contracts, end-to-end
+//! over real runs —
+//!
+//! * **Attribution** — seeded scenarios diagnose their planted root cause:
+//!   an overloaded co-serve run attributes to queue growth, a node-churn
+//!   run to fault blackout, and an escalation-storm cascade to cascade
+//!   pressure (the escalated spans' carve-out);
+//! * **Determinism** — the same seed yields a byte-identical diagnosis
+//!   JSONL (the report is a pure function of the attainment series, the
+//!   trace, and the policy, all of which are seed-deterministic);
+//! * **Zero perturbation** — diagnosis runs post-hoc over exported
+//!   artifacts, so a run that is diagnosed traces byte-identically to one
+//!   that is not;
+//! * **Replay fidelity** — parsing the exported JSONL trace + metrics CSV
+//!   back (the `tridentserve diagnose` CLI path) reproduces the live
+//!   registry-side diagnosis byte-for-byte.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use tridentserve::cascade::{
+    calibrate_threshold, run_cascade_observed, QualityModel, RouterMode, ThresholdController,
+};
+use tridentserve::config::ClusterSpec;
+use tridentserve::coserve::{
+    run_coserve_faulty_observed, run_coserve_observed, ClusterArbiter, CoServeConfig,
+    CoServeReport, FaultPlan, PipelineSetup, RecoveryPolicy,
+};
+use tridentserve::diagnose::{
+    diagnose, diagnose_series, parse_jsonl_trace, parse_metrics_csv, Cause, DiagnosisReport,
+    SloPolicy,
+};
+use tridentserve::faults::ChurnGen;
+use tridentserve::obs::export::to_jsonl_with_dropped;
+use tridentserve::obs::{RingSink, TraceConfig, TraceEvent, Tracer};
+use tridentserve::telemetry::export::to_csv;
+use tridentserve::telemetry::{metric, Registry, Telemetry};
+use tridentserve::workload::{
+    mixed, DifficultyModel, LoadShape, MixedSpec, MixedTrace, Trace, TraceGen, WorkloadKind,
+};
+
+const DURATION_MS: f64 = 120_000.0;
+
+fn ring() -> (Tracer, Rc<RefCell<RingSink>>) {
+    let (tracer, sink) = Tracer::ring(&TraceConfig::full());
+    (tracer, sink.expect("full config always has a sink"))
+}
+
+fn arbiter(cluster: &ClusterSpec) -> ClusterArbiter {
+    let mut a = ClusterArbiter::new(cluster.gpus_per_node);
+    a.cooldown_ms = 20_000.0;
+    a.trigger_streak = 1;
+    a
+}
+
+/// Flat co-serve load at `rate_scale` on both pipelines: no load shift, so
+/// the planted stressor (overload level, or churn) is the only pressure.
+fn flat_scenario(
+    cluster: &ClusterSpec,
+    seed: u64,
+    rate_scale: f64,
+) -> (Vec<PipelineSetup>, MixedTrace) {
+    let sd3 = PipelineSetup::new("sd3", cluster);
+    let flux = PipelineSetup::new("flux", cluster);
+    let trace = {
+        let specs = [
+            MixedSpec {
+                pipeline: &sd3.pipeline,
+                profile: &sd3.profile,
+                kind: WorkloadKind::Medium,
+                rate_scale,
+                load: LoadShape::Flat,
+                difficulty: DifficultyModel::Uniform,
+            },
+            MixedSpec {
+                pipeline: &flux.pipeline,
+                profile: &flux.profile,
+                kind: WorkloadKind::Medium,
+                rate_scale,
+                load: LoadShape::Flat,
+                difficulty: DifficultyModel::Uniform,
+            },
+        ];
+        mixed(&specs, DURATION_MS, seed)
+    };
+    (vec![sd3, flux], trace)
+}
+
+struct Observed {
+    report: CoServeReport,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+    reg: Rc<RefCell<Registry>>,
+}
+
+/// Sustained overload: flat 0.6x on a 4-node cluster (~2x the load the
+/// telemetry suite's step peak applies) — queues grow, attainment burns.
+fn overload_run(seed: u64) -> Observed {
+    let cluster = ClusterSpec::l20(4);
+    let (setups, trace) = flat_scenario(&cluster, seed, 0.6);
+    let cfg = CoServeConfig { seed, ..Default::default() };
+    let (tracer, sink) = ring();
+    let (tele, reg) = Telemetry::registry();
+    let mut arb = arbiter(&cluster);
+    let report = run_coserve_observed(&setups, &cluster, &mut arb, &trace, &cfg, &tracer, &tele);
+    let events = sink.borrow().snapshot();
+    let dropped = sink.borrow().dropped;
+    Observed { report, events, dropped, reg }
+}
+
+/// Aggressive node churn under light load: the only thing hurting latency
+/// is kills and their recovery blackout, not queueing.
+fn churn_run(seed: u64) -> Observed {
+    let cluster = ClusterSpec::l20(4);
+    let (setups, trace) = flat_scenario(&cluster, seed, 0.12);
+    let churn = ChurnGen {
+        mtbf_ms: 30_000.0,
+        mean_downtime_ms: 45_000.0,
+        spot_fraction: 0.5,
+        notice_ms: 15_000.0,
+        min_alive: 3,
+    }
+    .generate(cluster.nodes, DURATION_MS, seed);
+    assert!(!churn.events.is_empty(), "churn trace empty — nothing exercised");
+    let plan = FaultPlan::new(churn, RecoveryPolicy::Reactive);
+    let cfg = CoServeConfig { seed, monitor_ms: 2_500.0, ..Default::default() };
+    let (tracer, sink) = ring();
+    let (tele, reg) = Telemetry::registry();
+    let mut arb = arbiter(&cluster);
+    let report = run_coserve_faulty_observed(
+        &setups, &cluster, &mut arb, &trace, &cfg, &plan, &tracer, &tele,
+    );
+    assert!(report.faults.node_losses > 0, "no capacity loss ever applied");
+    let events = sink.borrow().snapshot();
+    let dropped = sink.borrow().dropped;
+    Observed { report, events, dropped, reg }
+}
+
+fn dominant_causes(rep: &DiagnosisReport) -> Vec<Cause> {
+    rep.diagnoses.iter().filter_map(|d| d.dominant().map(|c| c.cause)).collect()
+}
+
+#[test]
+fn overload_diagnoses_queue_growth_and_is_byte_deterministic() {
+    let policy = SloPolicy::default();
+    let o = overload_run(5);
+    let rep = diagnose(&o.reg.borrow(), &o.events, o.dropped, &policy);
+    assert!(
+        !rep.diagnoses.is_empty(),
+        "a 2x-overloaded run must fire SLO burn-rate alerts:\n{rep}"
+    );
+    // Every alert's top-ranked cause is queue growth: there are no faults,
+    // no cascade, and resize blackouts are seconds against queue-minutes.
+    let doms = dominant_causes(&rep);
+    assert!(!doms.is_empty(), "alerts fired but no trace evidence attributed:\n{rep}");
+    assert!(
+        doms.iter().all(|&c| c == Cause::QueueGrowth),
+        "overload must attribute to queue growth, got {doms:?}:\n{rep}"
+    );
+
+    // Same seed → byte-identical diagnosis JSONL, end to end.
+    let o2 = overload_run(5);
+    let rep2 = diagnose(&o2.reg.borrow(), &o2.events, o2.dropped, &policy);
+    assert_eq!(rep.to_jsonl(), rep2.to_jsonl(), "same seed must diagnose byte-identically");
+}
+
+#[test]
+fn churn_diagnoses_fault_blackout() {
+    let policy = SloPolicy::default();
+    let o = churn_run(7);
+    let rep = diagnose(&o.reg.borrow(), &o.events, o.dropped, &policy);
+    assert!(
+        !rep.diagnoses.is_empty(),
+        "a churn-battered run must fire SLO burn-rate alerts:\n{rep}"
+    );
+    // Lightly loaded: the only pressure is the kills and their recovery,
+    // so at least one alert must rank fault blackout first.
+    let doms = dominant_causes(&rep);
+    assert!(
+        doms.contains(&Cause::Blackout),
+        "churn must attribute to fault blackout, got {doms:?}:\n{rep}"
+    );
+
+    let o2 = churn_run(7);
+    let rep2 = diagnose(&o2.reg.borrow(), &o2.events, o2.dropped, &policy);
+    assert_eq!(rep.to_jsonl(), rep2.to_jsonl(), "same seed must diagnose byte-identically");
+}
+
+#[test]
+fn escalation_storm_diagnoses_cascade_pressure() {
+    const CASCADE_DURATION_MS: f64 = 240_000.0;
+    let cluster = ClusterSpec::l20(4);
+    let cheap = PipelineSetup::new("sd3-turbo", &cluster);
+    let heavy = PipelineSetup::new("sd3", &cluster);
+    // Difficulty drifts far past the adequacy cut: by the second half most
+    // requests fail the cheap pass and escalate, doubling their latency —
+    // an escalation storm, not a queueing or fault problem.
+    let drift = DifficultyModel::Drift { from: 0.3, to: 0.9 };
+    let trace: Trace = {
+        let mut tg = TraceGen::new(&heavy.pipeline, &heavy.profile);
+        tg.rate_scale = 0.35;
+        tg.difficulty = drift;
+        tg.steady(WorkloadKind::Medium, CASCADE_DURATION_MS, 11)
+    };
+    let quality = QualityModel { adequacy_cut: 0.55, conf_noise: 0.10 };
+    let floor = 0.92;
+    let tau0 = calibrate_threshold(&quality, &drift, 0.0, floor, 11);
+    let mode = RouterMode::Adaptive {
+        initial_threshold: tau0,
+        controller: ThresholdController::new(floor),
+    };
+    let cfg = CoServeConfig { seed: 11, monitor_ms: 2_000.0, ..Default::default() };
+
+    let (tracer, sink) = ring();
+    let (tele, reg) = Telemetry::registry();
+    let mut arb = arbiter(&cluster);
+    let report = run_cascade_observed(
+        &cheap, &heavy, &cluster, &mut arb, &trace, mode, quality, &cfg, &tracer, &tele,
+    );
+    assert!(!report.escalated.is_empty(), "drift past the cut must force escalations");
+
+    let events = sink.borrow().snapshot();
+    let dropped = sink.borrow().dropped;
+    let policy = SloPolicy::default();
+    let rep = diagnose(&reg.borrow(), &events, dropped, &policy);
+    assert!(
+        !rep.diagnoses.is_empty(),
+        "an escalation storm must fire SLO burn-rate alerts:\n{rep}"
+    );
+    let doms = dominant_causes(&rep);
+    assert!(
+        doms.contains(&Cause::EscalationStorm),
+        "storm must attribute to escalation pressure, got {doms:?}:\n{rep}"
+    );
+}
+
+#[test]
+fn diagnosing_a_run_leaves_its_trace_byte_identical() {
+    // Run A: traced only — no registry, no diagnosis.
+    let cluster = ClusterSpec::l20(4);
+    let (setups, trace) = flat_scenario(&cluster, 5, 0.6);
+    let cfg = CoServeConfig { seed: 5, ..Default::default() };
+    let (tracer, sink) = ring();
+    let mut arb = arbiter(&cluster);
+    let plain =
+        run_coserve_observed(&setups, &cluster, &mut arb, &trace, &cfg, &tracer, &Telemetry::off());
+    let jsonl_plain =
+        to_jsonl_with_dropped(&sink.borrow().snapshot(), sink.borrow().dropped);
+
+    // Run B: same seed, registry attached, diagnosis computed.
+    let o = overload_run(5);
+    let _ = diagnose(&o.reg.borrow(), &o.events, o.dropped, &SloPolicy::default());
+    let jsonl_diagnosed = to_jsonl_with_dropped(&o.events, o.dropped);
+
+    assert_eq!(
+        jsonl_plain, jsonl_diagnosed,
+        "diagnosis must be a pure post-hoc read: the trace cannot change"
+    );
+    let pc: usize = plain.lanes.iter().map(|l| l.metrics.completions.len()).sum();
+    let oc: usize = o.report.lanes.iter().map(|l| l.metrics.completions.len()).sum();
+    assert_eq!(pc, oc, "observing for diagnosis perturbed the run");
+}
+
+#[test]
+fn replay_of_exported_artifacts_reproduces_the_live_diagnosis() {
+    let policy = SloPolicy::default();
+    let o = overload_run(13);
+    let live = diagnose(&o.reg.borrow(), &o.events, o.dropped, &policy);
+    assert!(!live.diagnoses.is_empty(), "need a firing run to make replay meaningful");
+
+    // Export exactly what the examples (and CI) write to disk ...
+    let jsonl = to_jsonl_with_dropped(&o.events, o.dropped);
+    let csv = to_csv(&o.reg.borrow());
+    // ... and feed it back through the `tridentserve diagnose` CLI path.
+    let (events, dropped) = parse_jsonl_trace(&jsonl).expect("exported trace must parse");
+    assert_eq!(dropped, o.dropped);
+    let series = parse_metrics_csv(&csv, metric::SLO_ATTAINMENT).expect("exported CSV must parse");
+    let replayed = diagnose_series(&series, &events, dropped, &policy);
+    assert_eq!(
+        live.to_jsonl(),
+        replayed.to_jsonl(),
+        "offline replay must reproduce the live diagnosis byte-for-byte"
+    );
+}

@@ -165,9 +165,13 @@ fn observed_coserve_populates_the_registry_without_perturbing_the_run() {
 
 /// Line-by-line parse-back of the Prometheus text exposition: every sample
 /// belongs to a declared family, values are finite floats, label syntax is
-/// well-formed, counters are integral and `_total`-suffixed.
+/// well-formed, counters are integral and `_total`-suffixed, and native
+/// histograms are cumulative in `le` order with `+Inf` equal to `_count`.
 fn assert_prometheus_conformant(text: &str) {
     let mut types: BTreeMap<String, String> = BTreeMap::new();
+    // (family base, lane label) → cumulative buckets in order of appearance.
+    let mut buckets: BTreeMap<(String, String), Vec<(f64, f64)>> = BTreeMap::new();
+    let mut hist_counts: BTreeMap<(String, String), f64> = BTreeMap::new();
     let mut samples = 0usize;
     for line in text.lines() {
         if let Some(rest) = line.strip_prefix("# TYPE ") {
@@ -176,7 +180,7 @@ fn assert_prometheus_conformant(text: &str) {
             let ty = it.next().unwrap_or_else(|| panic!("TYPE without a type: {line}"));
             assert!(it.next().is_none(), "trailing tokens on TYPE line: {line}");
             assert!(
-                matches!(ty, "counter" | "gauge" | "summary"),
+                matches!(ty, "counter" | "gauge" | "summary" | "histogram"),
                 "unknown metric type {ty}: {line}"
             );
             assert!(
@@ -196,6 +200,8 @@ fn assert_prometheus_conformant(text: &str) {
         let v: f64 = value.parse().unwrap_or_else(|_| panic!("unparsable value: {line}"));
         assert!(v.is_finite(), "non-finite sample value: {line}");
 
+        let mut le: Option<f64> = None;
+        let mut lane_label = String::new();
         let name = match head.split_once('{') {
             Some((n, labels)) => {
                 let labels =
@@ -206,9 +212,21 @@ fn assert_prometheus_conformant(text: &str) {
                         .unwrap_or_else(|| panic!("malformed label {kv}: {line}"));
                     assert!(val.ends_with('"'), "unterminated label value: {line}");
                     assert!(
-                        matches!(k, "lane" | "quantile"),
+                        matches!(k, "lane" | "quantile" | "le"),
                         "unexpected label key {k}: {line}"
                     );
+                    let val = val.trim_end_matches('"');
+                    match k {
+                        // "+Inf" parses to f64::INFINITY, which is exactly
+                        // what the cumulative check needs.
+                        "le" => {
+                            le = Some(val.parse().unwrap_or_else(|_| {
+                                panic!("unparsable le bound: {line}")
+                            }))
+                        }
+                        "lane" => lane_label = val.to_string(),
+                        _ => {}
+                    }
                 }
                 n
             }
@@ -221,13 +239,15 @@ fn assert_prometheus_conformant(text: &str) {
         );
 
         // Family resolution: exact name (counter / gauge / summary quantile
-        // line) or the base name for a summary's `_sum`/`_count` samples.
+        // line) or the base name for a summary's/histogram's `_sum`/
+        // `_count`/`_bucket` samples.
         let family_ty = types
             .get(name)
             .cloned()
             .or_else(|| {
                 name.strip_suffix("_sum")
                     .or_else(|| name.strip_suffix("_count"))
+                    .or_else(|| name.strip_suffix("_bucket"))
                     .and_then(|base| types.get(base).cloned())
             })
             .unwrap_or_else(|| panic!("sample {name} has no TYPE declaration"));
@@ -238,10 +258,40 @@ fn assert_prometheus_conformant(text: &str) {
                 "counter must be a non-negative integer: {line}"
             );
         }
+        if family_ty == "histogram" {
+            if let Some(base) = name.strip_suffix("_bucket") {
+                let bound =
+                    le.unwrap_or_else(|| panic!("histogram bucket without le label: {line}"));
+                buckets
+                    .entry((base.to_string(), lane_label.clone()))
+                    .or_default()
+                    .push((bound, v));
+            } else if let Some(base) = name.strip_suffix("_count") {
+                hist_counts.insert((base.to_string(), lane_label.clone()), v);
+            }
+        } else {
+            assert!(le.is_none(), "le label outside a histogram family: {line}");
+        }
         samples += 1;
     }
     assert!(samples > 0, "empty exposition");
-    for want in ["counter", "gauge", "summary"] {
+    // Histogram semantics: per series, bounds strictly increase, counts
+    // are cumulative (non-decreasing), and the mandatory `+Inf` bucket
+    // closes the series at exactly `_count`.
+    assert!(!buckets.is_empty(), "a real run must expose native histogram buckets");
+    for ((base, lane), series) in &buckets {
+        for pair in series.windows(2) {
+            assert!(pair[0].0 < pair[1].0, "{base} lane {lane:?}: le bounds out of order");
+            assert!(pair[0].1 <= pair[1].1, "{base} lane {lane:?}: buckets not cumulative");
+        }
+        let &(last_bound, last_cum) = series.last().unwrap();
+        assert!(last_bound.is_infinite(), "{base} lane {lane:?}: missing +Inf bucket");
+        let total = hist_counts
+            .get(&(base.clone(), lane.clone()))
+            .unwrap_or_else(|| panic!("{base} lane {lane:?}: buckets without _count"));
+        assert_eq!(last_cum, *total, "{base} lane {lane:?}: +Inf bucket != _count");
+    }
+    for want in ["counter", "gauge", "summary", "histogram"] {
         assert!(
             types.values().any(|t| t == want),
             "a real run must expose at least one {want}"
@@ -259,6 +309,8 @@ fn prometheus_snapshot_from_a_real_run_parses_back() {
         "# TYPE trident_requests_arrived_total counter",
         "# TYPE trident_queue_depth gauge",
         "# TYPE trident_request_latency_ms summary",
+        "# TYPE trident_request_latency_ms_hist histogram",
+        "trident_request_latency_ms_hist_bucket{le=\"+Inf\"}",
     ] {
         assert!(text.contains(needle), "missing {needle}");
     }
