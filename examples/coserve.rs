@@ -17,18 +17,26 @@
 //! `coserve_metrics`). With both COSERVE_TRACE and METRICS_OUT set the
 //! demo also prints the inline SLO burn-rate diagnosis of the preemptive
 //! run (computed post-run from the captured artifacts: enabling it cannot
-//! perturb the run).
+//! perturb the run). PROF_OUT (unset = off; `1` or a path prefix =
+//! self-profile the preemptive run's control plane and write
+//! `<prefix>.folded` — inferno/flamegraph.pl-compatible folded stacks,
+//! wall-ns channel — plus `<prefix>.json` — the phase-tree summary —,
+//! default prefix `coserve_prof`; with METRICS_OUT also set, per-phase
+//! totals land in the metrics snapshot as `prof_*_ms` control-lane
+//! gauges).
 
 use tridentserve::baselines::StaticPartition;
 use tridentserve::config::ClusterSpec;
 use tridentserve::coserve::{
-    run_coserve, run_coserve_observed, CoServeConfig, CoServeReport, ClusterArbiter,
+    run_coserve, run_coserve_profiled, CoServeConfig, CoServeReport, ClusterArbiter,
     PipelineSetup, ResizePolicy,
 };
 use tridentserve::diagnose::{diagnose, SloPolicy};
 use tridentserve::obs::export::{to_chrome_trace, to_jsonl_with_dropped};
 use tridentserve::obs::report::BreakdownReport;
 use tridentserve::obs::{TraceConfig, Tracer};
+use tridentserve::prof::export as prof_export;
+use tridentserve::prof::{Prof, ProfSink};
 use tridentserve::telemetry::export::{to_csv, to_prometheus};
 use tridentserve::telemetry::{metric, Registry, Telemetry, CONTROL_LANE};
 use tridentserve::workload::{mixed, DifficultyModel, LoadShape, MixedSpec, WorkloadKind};
@@ -65,6 +73,42 @@ fn metrics_from_env(
             };
             let (tele, reg) = Telemetry::registry();
             (tele, Some(reg), prefix)
+        }
+    }
+}
+
+/// `(prof, sink, output prefix)` from a `PROF_OUT`-style env var: unset →
+/// off (one dead branch per scope, no sink).
+fn prof_from_env(
+    var: &str,
+    default_prefix: &str,
+) -> (Prof, Option<std::rc::Rc<std::cell::RefCell<ProfSink>>>, String) {
+    match std::env::var(var) {
+        Err(_) => (Prof::off(), None, String::new()),
+        Ok(v) => {
+            let prefix = if v.is_empty() || v == "1" || v == "true" {
+                default_prefix.to_string()
+            } else {
+                v
+            };
+            let (prof, sink) = Prof::recording();
+            (prof, Some(sink), prefix)
+        }
+    }
+}
+
+/// Dump the self-profile next to the run: folded stacks (wall channel —
+/// feed to inferno / flamegraph.pl) and the phase-tree JSON summary.
+fn write_prof(sink: &ProfSink, prefix: &str) {
+    let outputs = [
+        ("folded", prof_export::to_folded(sink, prof_export::Channel::WallNs)),
+        ("json", prof_export::to_json(sink, true)),
+    ];
+    for (ext, text) in outputs {
+        let path = format!("{prefix}.{ext}");
+        match std::fs::write(&path, text) {
+            Ok(()) => println!("wrote self-profile to {path}"),
+            Err(e) => println!("WARN: could not write {path}: {e}"),
         }
     }
 }
@@ -185,12 +229,21 @@ fn main() {
     // so its breakdown shows blackout next to queue/exec/handoff.
     let (tracer, sink, trace_path) = trace_from_env("COSERVE_TRACE", "coserve_trace.json");
     let (tele, reg, metrics_prefix) = metrics_from_env("METRICS_OUT", "coserve_metrics");
+    let (prof, prof_sink, prof_prefix) = prof_from_env("PROF_OUT", "coserve_prof");
     let preempt_cfg = CoServeConfig { resize: ResizePolicy::Preempt, ..cfg.clone() };
     let mut arbiter_p = ClusterArbiter::new(cluster.gpus_per_node);
-    let preempt = run_coserve_observed(
-        &setups, &cluster, &mut arbiter_p, &trace, &preempt_cfg, &tracer, &tele,
+    let preempt = run_coserve_profiled(
+        &setups, &cluster, &mut arbiter_p, &trace, &preempt_cfg, &tracer, &tele, &prof,
     );
     print_report(&preempt);
+    if let Some(psink) = &prof_sink {
+        write_prof(&psink.borrow(), &prof_prefix);
+        // Bridge per-phase totals into the telemetry registry (post-run:
+        // cannot perturb the run) so `prof_*_ms` gauges and the
+        // `trident_prof_phase_ms` histogram ride the standard exporters.
+        prof_export::bridge_telemetry(&psink.borrow(), &tele, duration_ms);
+        println!();
+    }
     let mut captured: Option<(Vec<tridentserve::obs::TraceEvent>, u64)> = None;
     if let Some(sink) = sink {
         // Dropped-aware path: the report carries the ring's eviction count,

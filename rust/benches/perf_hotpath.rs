@@ -23,6 +23,7 @@ use tridentserve::harness::Setup;
 use tridentserve::obs::{EventBody, TraceConfig, Tracer};
 use tridentserve::perfmodel::PerfModel;
 use tridentserve::placement::{Orchestrator, Pi, PlacementPlan};
+use tridentserve::prof::{Phase, Prof};
 use tridentserve::profiler::Profile;
 use tridentserve::request::Request;
 use tridentserve::telemetry::{metric, Telemetry};
@@ -175,13 +176,21 @@ fn main() {
         let s = m.summary();
         // drain_factor 2.0: the simulated horizon is twice the trace span.
         let sim_per_wall = sim_minutes * 60_000.0 * 2.0 / (wall * 1e3);
+        // Per-event normalization: whole-run wall time scales with the
+        // trace, so the trackable signal is cost per served request (and
+        // per dispatcher tick), not the raw total.
+        let per_req_us = wall * 1e6 / (s.n.max(1) as f64);
+        let ticks = sim_minutes * 60_000.0 * 2.0 / 100.0; // tick_ms default
+        let per_tick_us = wall * 1e6 / ticks;
         println!(
-            "whole sim (flux/medium, {sim_minutes:.0} min, 128 GPUs): {wall:.2}s wall, {} reqs, {sim_per_wall:.0} sim-ms/wall-ms",
+            "whole sim (flux/medium, {sim_minutes:.0} min, 128 GPUs): {wall:.2}s wall, {} reqs, {sim_per_wall:.0} sim-ms/wall-ms, {per_req_us:.0} us/req, {per_tick_us:.0} us/tick",
             s.n,
         );
         out.record("whole_sim_wall_s", wall);
         out.record("whole_sim_ms_per_wall_ms", sim_per_wall);
         out.record("whole_sim_requests", s.n as f64);
+        out.record("whole_sim_us_per_request", per_req_us);
+        out.record("whole_sim_us_per_tick", per_tick_us);
     }
 
     // --- Trace emission overhead (obs). The off path must short-circuit
@@ -262,6 +271,35 @@ fn main() {
         );
         out.record("telemetry_instr_off_ns", off_ns);
         out.record("telemetry_instr_on_ns", on_ns);
+    }
+
+    // --- Self-profiling scope overhead (prof). The off path is one Option
+    // branch per scope (enter + drop), same acceptance bound as the trace
+    // and telemetry handles above; the on path pays two RefCell borrows,
+    // the child-lookup, and an Instant read per side.
+    {
+        let n: u64 = if quick { 200_000 } else { 2_000_000 };
+        let off = Prof::off();
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let _s = off.scope(Phase::Tick);
+        }
+        let off_ns = t0.elapsed().as_secs_f64() * 1e9 / n as f64;
+
+        let (prof, sink) = Prof::recording();
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let _t = prof.scope(Phase::Tick);
+            let _d = prof.scope(Phase::Dispatch);
+        }
+        let on_ns = t0.elapsed().as_secs_f64() * 1e9 / (2 * n) as f64;
+        let counted = sink.borrow().nodes().iter().map(|nd| nd.count).sum::<u64>();
+        assert_eq!(counted, 2 * n, "every on-path scope must land in the sink");
+        println!(
+            "prof scope ({n} scopes): off {off_ns:.2} ns/scope, on {on_ns:.1} ns/scope"
+        );
+        out.record("prof_instr_off_ns", off_ns);
+        out.record("prof_instr_on_ns", on_ns);
     }
 
     match out.write() {

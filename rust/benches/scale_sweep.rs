@@ -1,0 +1,146 @@
+//! §Perf — the scale observatory (EXPERIMENTS.md §Perf).
+//!
+//! Sweeps whole-sim runs over a nodes × trace-size grid and uses the
+//! control-plane self-profiler (`prof`) to attribute wall time to each
+//! control-plane phase at every scale point. From the sweep it fits a
+//! log-log scaling exponent per phase (per-tick self cost vs. cluster
+//! nodes) so the *complexity* of the control plane is tracked across PRs,
+//! not just its absolute speed: a ~O(1)-per-tick phase silently going
+//! superlinear moves its `<phase>_exponent` metric, and `bench-check`'s
+//! [`MetricKind::Exponent`] gate fails CI once a baseline is committed.
+//!
+//! Machine-readable output: `BENCH_scale_sweep.json` with, per grid point
+//! `n<nodes>`, the run wall time (`_s`, time-gated), served request count
+//! (exact-gated — the sim is deterministic), and per-phase self wall
+//! (`_ms`, time-gated); plus one fitted `<phase>_exponent` row per phase
+//! observed at every grid point. `PERF_SMOKE=1` shrinks the grid for CI.
+//!
+//! [`MetricKind::Exponent`]: tridentserve::util::bench::MetricKind
+
+use std::time::Instant;
+
+use tridentserve::harness::Setup;
+use tridentserve::obs::Tracer;
+use tridentserve::prof::export::{phase_totals, PhaseTotal};
+use tridentserve::prof::{Phase, Prof};
+use tridentserve::telemetry::Telemetry;
+use tridentserve::util::bench::{fit_loglog_exponent, BenchRecorder};
+use tridentserve::workload::WorkloadKind;
+
+/// One grid point: cluster size, trace span, arrival-rate multiplier.
+struct Point {
+    nodes: usize,
+    duration_ms: f64,
+    rate_scale: f64,
+}
+
+fn grid(quick: bool) -> Vec<Point> {
+    // The trace grows with the cluster (rate_scale ∝ nodes) so per-GPU
+    // load stays comparable across the sweep; the largest full-grid points
+    // shorten their span to bound the sweep's own wall time. Per-tick
+    // normalization in the fit makes unequal spans comparable.
+    if quick {
+        [16usize, 32, 64]
+            .iter()
+            .map(|&nodes| Point {
+                nodes,
+                duration_ms: 20_000.0,
+                rate_scale: nodes as f64 / 16.0,
+            })
+            .collect()
+    } else {
+        [(16usize, 60_000.0), (64, 60_000.0), (256, 30_000.0), (1024, 15_000.0)]
+            .iter()
+            .map(|&(nodes, duration_ms)| Point {
+                nodes,
+                duration_ms,
+                rate_scale: nodes as f64 / 16.0,
+            })
+            .collect()
+    }
+}
+
+fn main() {
+    let quick = std::env::var("PERF_SMOKE").is_ok();
+    let points = grid(quick);
+    let mut out = BenchRecorder::new("scale_sweep");
+
+    println!(
+        "=== scale_sweep: control-plane complexity observatory{} ===\n",
+        if quick { " (PERF_SMOKE)" } else { "" }
+    );
+
+    // Per grid point: (nodes, ticks simulated, per-phase totals).
+    let mut sweep: Vec<(usize, f64, Vec<PhaseTotal>)> = Vec::new();
+    for pt in &points {
+        let setup = Setup::new("flux", pt.nodes * 8);
+        let (prof, sink) = Prof::recording();
+        let t0 = Instant::now();
+        let m = setup.run_scaled_profiled(
+            "trident",
+            WorkloadKind::Medium,
+            pt.duration_ms,
+            0,
+            pt.rate_scale,
+            &Tracer::off(),
+            &Telemetry::off(),
+            &prof,
+        );
+        let wall = t0.elapsed().as_secs_f64();
+        let s = m.summary();
+        // drain_factor 2.0, tick_ms 100 (SimConfig defaults).
+        let ticks = pt.duration_ms * 2.0 / 100.0;
+        let totals = phase_totals(&sink.borrow());
+        let tag = format!("n{}", pt.nodes);
+        println!(
+            "{tag}: {} GPUs, {} reqs, {wall:.2}s wall, {} phases",
+            pt.nodes * 8,
+            s.n,
+            totals.len()
+        );
+        out.record(&format!("{tag}_wall_s"), wall);
+        out.record(&format!("{tag}_requests"), s.n as f64);
+        for t in &totals {
+            let self_ms = t.wall_self_ns as f64 / 1e6;
+            println!(
+                "  {:<18} count={:<8} self={:.1} ms ({:.1}%)",
+                t.phase.name(),
+                t.count,
+                self_ms,
+                100.0 * t.wall_self_ns as f64 / (wall * 1e9)
+            );
+            out.record(&format!("{tag}_{}_self_ms", t.phase.name()), self_ms);
+        }
+        sweep.push((pt.nodes, ticks, totals));
+    }
+
+    // Fit one exponent per phase observed at *every* grid point (which
+    // phases ran is deterministic, so the metric set is stable run to run
+    // and the comparator's missing-metric check stays meaningful). The fit
+    // is per-tick self wall vs. nodes: ~0 for O(1)-per-tick phases, ~1 for
+    // O(G) ones like the free-view recompute.
+    println!("\nfitted per-phase scaling exponents (per-tick self cost vs nodes):");
+    for phase in Phase::ALL {
+        let series: Vec<(f64, f64)> = sweep
+            .iter()
+            .filter_map(|(nodes, ticks, totals)| {
+                totals
+                    .iter()
+                    .find(|t| t.phase == phase)
+                    .map(|t| (*nodes as f64, t.wall_self_ns as f64 / ticks))
+            })
+            .collect();
+        if series.len() != sweep.len() {
+            continue; // not present at every scale: nothing to fit
+        }
+        let exp = fit_loglog_exponent(&series);
+        println!("  {:<18} {exp:+.3}", phase.name());
+        out.record(&format!("{}_exponent", phase.name()), exp);
+    }
+
+    match out.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => println!("\nWARN: could not write bench json: {e}"),
+    }
+    println!("scale_sweep done");
+}

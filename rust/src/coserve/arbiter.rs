@@ -8,6 +8,7 @@
 //! across pipelines would break its SP-degree reachability assumptions.
 
 use crate::ilp::{Item, Mckp};
+use crate::prof::{Phase, Prof};
 
 /// What the arbiter knows about one pipeline lane when (re)allocating.
 #[derive(Clone, Copy, Debug)]
@@ -49,6 +50,11 @@ pub trait ArbiterPolicy {
         current: &[usize],
         total_nodes: usize,
     ) -> Option<Vec<usize>>;
+
+    /// Hand the arbiter a self-profiling handle so its internal solves
+    /// open [`Phase::MckpSolve`]/[`Phase::MckpSeeded`] scopes (nested
+    /// under the executor's [`Phase::Arbitrate`]). Default: ignore.
+    fn attach_prof(&mut self, _prof: &Prof) {}
 }
 
 /// Raise every lane to `min_nodes` by taking single nodes from the largest
@@ -113,6 +119,16 @@ pub struct ClusterArbiter {
     pub trigger_streak: usize,
     streak: usize,
     last_ms: f64,
+    /// Previous solve's allocation plus the `(n, min_nodes, max_nodes)`
+    /// item-grid context it was produced under: demand drifts between
+    /// re-arbitrations but the optimum usually moves by a node or two, so
+    /// the previous allocation is a near-optimal incumbent that lets the
+    /// next branch-and-bound prune from the first node (the dispatcher's
+    /// warm-start twin, a carried-over ROADMAP item). Invalidated whenever
+    /// the grid context changes (lane count, floor, or cluster size).
+    last_solution: Option<(usize, usize, usize, Vec<usize>)>,
+    /// Self-profiling handle (set via [`ArbiterPolicy::attach_prof`]).
+    prof: Prof,
 }
 
 impl ClusterArbiter {
@@ -124,6 +140,8 @@ impl ClusterArbiter {
             trigger_streak: 2,
             streak: 0,
             last_ms: f64::NEG_INFINITY,
+            last_solution: None,
+            prof: Prof::off(),
         }
     }
 
@@ -137,8 +155,10 @@ impl ClusterArbiter {
         1000.0 * sig.slo_weight.max(0.0) * sig.demand_rps.min(cap) + 1e-3 * cap
     }
 
-    /// Solve the cluster allocation problem for the given signals.
-    pub fn solve(&self, signals: &[LaneSignal], total_nodes: usize) -> Vec<usize> {
+    /// Solve the cluster allocation problem for the given signals,
+    /// warm-started from the previous solve's allocation when the item
+    /// grid is unchanged (`&mut self` records this solve for the next).
+    pub fn solve(&mut self, signals: &[LaneSignal], total_nodes: usize) -> Vec<usize> {
         let n = signals.len();
         let min_nodes = self.min_nodes.max(1);
         assert!(n > 0, "no lanes");
@@ -157,12 +177,43 @@ impl ClusterArbiter {
                 });
             }
         }
+        // Project the previous allocation onto this grid: item index for
+        // lane `p` choosing `nodes` is `p·span + (nodes − min_nodes)`.
+        // Valid only under the exact same grid context; entries pushed out
+        // of range by the post-solve floor/leftover passes drop
+        // individually (solve_seeded ignores invalid entries).
+        let span = max_nodes - min_nodes + 1;
+        let seed: Option<Vec<Option<usize>>> = match &self.last_solution {
+            Some((ln, lmin, lmax, alloc))
+                if *ln == n && *lmin == min_nodes && *lmax == max_nodes =>
+            {
+                Some(
+                    alloc
+                        .iter()
+                        .enumerate()
+                        .map(|(p, &nodes)| {
+                            (min_nodes..=max_nodes)
+                                .contains(&nodes)
+                                .then(|| p * span + (nodes - min_nodes))
+                        })
+                        .collect(),
+                )
+            }
+            _ => None,
+        };
         let problem = Mckp {
             n_groups: n,
             capacities: vec![total_nodes as u64],
             items: items.clone(),
         };
-        let sol = problem.solve(20.0);
+        let sol = {
+            let _solve = self.prof.scope(if seed.is_some() {
+                Phase::MckpSeeded
+            } else {
+                Phase::MckpSolve
+            });
+            problem.solve_seeded(20.0, 2_000_000, 0.0, seed.as_deref())
+        };
         let mut out: Vec<usize> = (0..n)
             .map(|p| sol.chosen[p].map(|i| items[i].weight as usize).unwrap_or(0))
             .collect();
@@ -183,6 +234,7 @@ impl ClusterArbiter {
             left -= 1;
         }
         debug_assert_eq!(out.iter().sum::<usize>(), total_nodes);
+        self.last_solution = Some((n, min_nodes, max_nodes, out.clone()));
         out
     }
 }
@@ -222,6 +274,10 @@ impl ArbiterPolicy for ClusterArbiter {
         self.last_ms = now_ms;
         Some(target)
     }
+
+    fn attach_prof(&mut self, prof: &Prof) {
+        self.prof = prof.clone();
+    }
 }
 
 #[cfg(test)]
@@ -241,7 +297,7 @@ mod tests {
 
     #[test]
     fn solve_covers_cluster_exactly() {
-        let arb = ClusterArbiter::new(8);
+        let mut arb = ClusterArbiter::new(8);
         let out = arb.solve(&[sig(10.0, 0.2), sig(1.0, 0.02)], 16);
         assert_eq!(out.len(), 2);
         assert_eq!(out.iter().sum::<usize>(), 16);
@@ -250,7 +306,7 @@ mod tests {
 
     #[test]
     fn solve_tracks_demand_shift() {
-        let arb = ClusterArbiter::new(8);
+        let mut arb = ClusterArbiter::new(8);
         let before = arb.solve(&[sig(12.0, 0.2), sig(0.2, 0.02)], 16);
         let after = arb.solve(&[sig(2.0, 0.2), sig(1.6, 0.02)], 16);
         // Lane 1's demand octupled while lane 0's collapsed: it must gain nodes.
@@ -260,7 +316,7 @@ mod tests {
 
     #[test]
     fn solve_respects_floor_under_zero_demand() {
-        let arb = ClusterArbiter::new(8);
+        let mut arb = ClusterArbiter::new(8);
         let out = arb.solve(&[sig(0.0, 0.2), sig(50.0, 0.02)], 16);
         assert!(out[0] >= 1, "{out:?}");
         assert_eq!(out.iter().sum::<usize>(), 16);
@@ -286,7 +342,7 @@ mod tests {
         // can serve, so every node is contested. With uniform weights the
         // split is symmetric; a 2x slo_weight must tilt nodes to the paid
         // lane.
-        let arb = ClusterArbiter::new(8);
+        let mut arb = ClusterArbiter::new(8);
         let mk = |w: f64| LaneSignal {
             demand_rps: 10.0,
             per_gpu_rps: 0.05,
@@ -310,6 +366,26 @@ mod tests {
             "2x-weighted lane must win contested nodes: {weighted:?}"
         );
         assert!(weighted.iter().all(|&x| x >= 1), "floor still holds: {weighted:?}");
+    }
+
+    #[test]
+    fn warm_started_resolve_matches_cold_solution() {
+        // The second solve on an unchanged grid is seeded from the first
+        // allocation; the warm start is a pruning accelerator and must not
+        // change the chosen optimum.
+        let mut warm = ClusterArbiter::new(8);
+        let signals = [sig(10.0, 0.2), sig(1.0, 0.02)];
+        let first = warm.solve(&signals, 16);
+        assert!(warm.last_solution.is_some());
+        let second = warm.solve(&signals, 16);
+        assert_eq!(first, second);
+        // A fresh (cold) arbiter on the same signals agrees too.
+        let mut cold = ClusterArbiter::new(8);
+        assert_eq!(cold.solve(&signals, 16), second);
+        // Grid-context change (different cluster size) invalidates the
+        // seed rather than mis-projecting it.
+        let bigger = warm.solve(&signals, 20);
+        assert_eq!(bigger.iter().sum::<usize>(), 20);
     }
 
     #[test]

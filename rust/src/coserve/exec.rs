@@ -37,6 +37,7 @@ use crate::util::json::Json;
 use crate::monitor::Monitor;
 use crate::perfmodel::PerfModel;
 use crate::placement::{Orchestrator, Pi};
+use crate::prof::{Phase, Prof};
 use crate::profiler::Profile;
 use crate::request::{Completion, Outcome, Request, RequestId};
 use crate::sim::{ServingPolicy, SimExec, TridentPolicy};
@@ -331,6 +332,9 @@ struct Lane {
     /// Shared lane event core: pending queue + request-progress table +
     /// OOM/completion/close-out handlers (`crate::lane`).
     core: LaneCore,
+    /// Control-plane self-profiling handle (`crate::prof`): the lane's
+    /// own copy so `rebuild` can re-attach it to the fresh policy.
+    prof: Prof,
     exec_rng: Rng,
     arrivals: SlidingWindow,
     /// True while waiting for in-flight plans to finish before a handoff.
@@ -404,6 +408,7 @@ impl Lane {
             metrics: Metrics::new(cfg.span_ms),
             // coserve records an OOM's true arrival (not the abort time).
             core: LaneCore::new(false),
+            prof: Prof::off(),
             exec_rng: Rng::new(cfg.seed ^ 0xE1EC ^ ((idx as u64 + 1) << 17)),
             arrivals: SlidingWindow::new(cfg.demand_window_ms),
             draining: false,
@@ -476,6 +481,9 @@ impl Lane {
             self.consts.clone(),
             cluster.clone(),
         );
+        // The fresh policy (and its dispatcher) must keep profiling into
+        // the same sink across rebuilds.
+        self.policy.attach_prof(&self.prof);
         let placement = self.policy.initial_placement(cluster.total_gpus());
         self.engine = Engine::new(
             crate::cluster::Topology::new(cluster.clone()),
@@ -563,9 +571,14 @@ impl Lane {
     /// and must decay to zero on a quiet lane, or `maybe_switch` would keep
     /// seeing a stale burst forever.
     fn tick(&mut self, now_ms: f64, jitter: f64) -> Vec<(PlanId, f64)> {
+        let _lt = self.prof.scope(Phase::LaneTick);
         if !self.draining && now_ms >= self.gate_until_ms {
-            self.engine.refresh_free_view(now_ms);
+            {
+                let _fv = self.prof.scope(Phase::FreeView);
+                self.engine.refresh_free_view(now_ms);
+            }
             let (plans, stats) = {
+                let _d = self.prof.scope(Phase::Dispatch);
                 let view = ClusterView {
                     placement: &self.engine.placement,
                     idle: self.engine.idle(),
@@ -577,6 +590,7 @@ impl Lane {
             if let Some(s) = stats {
                 // Wall-clock solve fields stay out of the trace (see
                 // `sim::run_sim_traced`): same seed must mean same bytes.
+                let _te = self.prof.scope(Phase::TraceEmit);
                 self.core.tracer.emit(now_ms, || EventBody::Decision {
                     candidates: s.candidates,
                     dispatched: s.dispatched,
@@ -588,7 +602,10 @@ impl Lane {
                 self.enqueue_plans(rp, now_ms);
             }
         }
-        let started = self.advance(now_ms, jitter);
+        let started = {
+            let _a = self.prof.scope(Phase::Advance);
+            self.advance(now_ms, jitter)
+        };
         self.drain_ooms();
         started
     }
@@ -1172,13 +1189,17 @@ fn start_fault_recovery(
     gpn: usize,
     now: f64,
     ctl: &Tracer,
+    prof: &Prof,
 ) -> (Vec<usize>, Vec<(usize, PlanId, f64)>) {
     let n = lanes.len();
     let mut signals = lane_signals(lanes, avg_rps, per_gpu, cfg, now);
     hook.shape_signals(now, &mut signals);
     let total = fs.allocatable();
     assert!(total >= n, "churn took the pool below one node per lane");
-    let target = arbiter.initial(&signals, total);
+    let target = {
+        let _arb = prof.scope(Phase::Arbitrate);
+        arbiter.initial(&signals, total)
+    };
     assert_eq!(target.len(), n, "arbiter returned wrong lane count");
     assert_eq!(target.iter().sum::<usize>(), total, "arbiter must cover the degraded pool");
     assert!(target.iter().all(|&x| x >= 1), "every lane needs >= 1 node");
@@ -1238,6 +1259,7 @@ fn try_swap(
     now: f64,
     ctl: &Tracer,
     ctl_tele: &Telemetry,
+    prof: &Prof,
 ) {
     let Some(target) = pending_alloc.as_ref() else { return };
     for (p, lane) in lanes.iter().enumerate() {
@@ -1245,6 +1267,9 @@ fn try_swap(
             return; // still draining / waiting on a boundary cut
         }
     }
+    // The swap actually happens: count the handoff itself, not the idle
+    // polls that waited for the drain.
+    let _h = prof.scope(Phase::Handoff);
     let target = pending_alloc.take().unwrap();
     let is_fault = std::mem::replace(pending_is_fault, false);
     let mut blackout_ms = 0.0f64;
@@ -1269,6 +1294,7 @@ fn try_swap(
         // re-queues everything from scratch instead.
         let cold = lane.cold_restart;
         let migrated = if !cold && (resize == ResizePolicy::Preempt || lane.fault_forced) {
+            let _ck = prof.scope(Phase::Checkpoint);
             lane.capture_migrations()
         } else {
             Vec::new()
@@ -1282,6 +1308,7 @@ fn try_swap(
         lane.rebuild(target[p], now);
         lane.gate_until_ms = now + reload_ms;
         if !migrated.is_empty() {
+            let _ck = prof.scope(Phase::Checkpoint);
             let fstats =
                 if is_fault { fstate.as_mut().map(|fs| &mut fs.stats) } else { None };
             lane.adopt_migrated(migrated, migration, fstats);
@@ -1411,6 +1438,7 @@ pub fn run_coserve_hooked(
         None,
         &Tracer::off(),
         &Telemetry::off(),
+        &Prof::off(),
     )
 }
 
@@ -1443,7 +1471,37 @@ pub fn run_coserve_observed(
     tracer: &Tracer,
     tele: &Telemetry,
 ) -> CoServeReport {
-    run_coserve_engine(setups, cluster, arbiter, trace, cfg, &mut NoopHook, None, tracer, tele)
+    run_coserve_profiled(setups, cluster, arbiter, trace, cfg, tracer, tele, &Prof::off())
+}
+
+/// [`run_coserve_observed`] with control-plane self-profiling: ticks,
+/// per-lane dispatch fan-out, arbiter MCKP solves (cold vs warm-started),
+/// handoffs and checkpoint capture all record into `prof`'s sink — see
+/// [`crate::prof`]. With `Prof::off()` this is exactly
+/// `run_coserve_observed`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_coserve_profiled(
+    setups: &[PipelineSetup],
+    cluster: &ClusterSpec,
+    arbiter: &mut dyn ArbiterPolicy,
+    trace: &MixedTrace,
+    cfg: &CoServeConfig,
+    tracer: &Tracer,
+    tele: &Telemetry,
+    prof: &Prof,
+) -> CoServeReport {
+    run_coserve_engine(
+        setups,
+        cluster,
+        arbiter,
+        trace,
+        cfg,
+        &mut NoopHook,
+        None,
+        tracer,
+        tele,
+        prof,
+    )
 }
 
 /// [`run_coserve_hooked`] with tracing (the cascade layer's traced entry).
@@ -1481,7 +1539,18 @@ pub fn run_coserve_hooked_observed(
     tracer: &Tracer,
     tele: &Telemetry,
 ) -> CoServeReport {
-    run_coserve_engine(setups, cluster, arbiter, trace, cfg, hook, None, tracer, tele)
+    run_coserve_engine(
+        setups,
+        cluster,
+        arbiter,
+        trace,
+        cfg,
+        hook,
+        None,
+        tracer,
+        tele,
+        &Prof::off(),
+    )
 }
 
 /// [`run_coserve_faulty`] with tracing (churn detections, recoveries and
@@ -1505,6 +1574,7 @@ pub fn run_coserve_faulty_traced(
         Some(faults),
         tracer,
         &Telemetry::off(),
+        &Prof::off(),
     )
 }
 
@@ -1531,6 +1601,7 @@ pub fn run_coserve_faulty_observed(
         Some(faults),
         tracer,
         tele,
+        &Prof::off(),
     )
 }
 
@@ -1555,6 +1626,7 @@ pub fn run_coserve_faulty(
         Some(faults),
         &Tracer::off(),
         &Telemetry::off(),
+        &Prof::off(),
     )
 }
 
@@ -1578,6 +1650,7 @@ pub fn run_coserve_faulty_hooked(
         Some(faults),
         &Tracer::off(),
         &Telemetry::off(),
+        &Prof::off(),
     )
 }
 
@@ -1592,6 +1665,7 @@ fn run_coserve_engine(
     faults: Option<&FaultPlan>,
     tracer: &Tracer,
     tele: &Telemetry,
+    prof: &Prof,
 ) -> CoServeReport {
     let n = setups.len();
     assert!(n > 0, "no pipelines");
@@ -1618,7 +1692,11 @@ fn run_coserve_engine(
         })
         .collect();
     hook.shape_signals(0.0, &mut init_signals);
-    let mut alloc = arbiter.initial(&init_signals, total_nodes);
+    arbiter.attach_prof(prof);
+    let mut alloc = {
+        let _arb = prof.scope(Phase::Arbitrate);
+        arbiter.initial(&init_signals, total_nodes)
+    };
     assert_eq!(alloc.len(), n, "arbiter returned wrong lane count");
     assert_eq!(alloc.iter().sum::<usize>(), total_nodes, "arbiter must cover the cluster");
     assert!(alloc.iter().all(|&x| x >= 1), "every lane needs >= 1 node");
@@ -1631,6 +1709,9 @@ fn run_coserve_engine(
     for (p, lane) in lanes.iter_mut().enumerate() {
         lane.core.tracer = tracer.for_lane(p as u32);
         lane.core.tele = tele.for_lane(p as u32);
+        lane.core.prof = prof.clone();
+        lane.prof = prof.clone();
+        lane.policy.attach_prof(prof);
         lane.monitor.attach_telemetry(&lane.core.tele);
     }
     let ctl = tracer.for_lane(CONTROL_LANE);
@@ -1707,6 +1788,7 @@ fn run_coserve_engine(
                 lanes[p].on_arrival(r, now);
             }
             EventKind::Tick => {
+                let _tick = prof.scope(Phase::Tick);
                 for (p, lane) in lanes.iter_mut().enumerate() {
                     for (plan, finish) in lane.tick(now, cfg.jitter) {
                         events.push(
@@ -1725,7 +1807,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele, prof,
                 );
                 if now + cfg.tick_ms <= horizon {
                     events.push(now + cfg.tick_ms, EventKind::Tick);
@@ -1737,6 +1819,7 @@ fn run_coserve_engine(
                 for lane in lanes.iter() {
                     lane.core.sample_gauges(now, &lane.engine);
                 }
+                let _mon = prof.scope(Phase::Monitor);
                 // Heartbeats + staleness detection (faults runs): every
                 // node with capacity beats on the monitor cadence; nodes
                 // silent past the threshold are declared failed and the
@@ -1763,7 +1846,7 @@ fn run_coserve_engine(
                     if initiate {
                         fault_action = Some(start_fault_recovery(
                             &mut lanes, arbiter, hook, fs, &alloc, &avg_rps, &per_gpu,
-                            cfg, gpn, now, &ctl,
+                            cfg, gpn, now, &ctl, prof,
                         ));
                     }
                 }
@@ -1789,6 +1872,7 @@ fn run_coserve_engine(
                     let allocatable =
                         fstate.as_ref().map_or(total_nodes, |fs| fs.allocatable());
                     let rearb = if pending_alloc.is_none() {
+                        let _arb = prof.scope(Phase::Arbitrate);
                         arbiter.rearbitrate(now, &signals, &alloc, allocatable)
                     } else {
                         None
@@ -1851,7 +1935,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele, prof,
                 );
                 if now + cfg.monitor_ms <= horizon {
                     events.push(now + cfg.monitor_ms, EventKind::MonitorTick);
@@ -1875,7 +1959,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele, prof,
                 );
             }
             EventKind::PreemptCut { lane: p, gen, plan } => {
@@ -1885,7 +1969,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele, prof,
                 );
             }
             EventKind::ChurnArrive(i) => {
@@ -1934,7 +2018,7 @@ fn run_coserve_engine(
                 if initiate {
                     let (target, cut_events) = start_fault_recovery(
                         &mut lanes, arbiter, hook, fs, &alloc, &avg_rps, &per_gpu, cfg,
-                        gpn, now, &ctl,
+                        gpn, now, &ctl, prof,
                     );
                     for (p, pid, t_cut) in cut_events {
                         let gen = lanes[p].generation;
@@ -1949,7 +2033,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele, prof,
                 );
             }
             EventKind::NodeLoss { node } => {
@@ -1958,7 +2042,7 @@ fn run_coserve_engine(
                 try_swap(
                     &mut lanes, &mut alloc, &mut pending_alloc, &mut pending_is_fault,
                     &mut arbitrations, &mut moved_gpus, &mut vram_violations,
-                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele,
+                    &mut migration, &mut fstate, gpn, resize, now, &ctl, &ctl_tele, prof,
                 );
             }
         }

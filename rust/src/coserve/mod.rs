@@ -34,8 +34,8 @@ pub use arbiter::{demand_proportional, ArbiterPolicy, ClusterArbiter, LaneSignal
 pub use exec::{
     run_coserve, run_coserve_faulty, run_coserve_faulty_hooked, run_coserve_faulty_observed,
     run_coserve_faulty_traced, run_coserve_hooked, run_coserve_hooked_observed,
-    run_coserve_hooked_traced, run_coserve_observed, run_coserve_traced, CoServeConfig,
-    CoServeReport, LaneHook, LaneReport, NoopHook, PipelineSetup,
+    run_coserve_hooked_traced, run_coserve_observed, run_coserve_profiled, run_coserve_traced,
+    CoServeConfig, CoServeReport, LaneHook, LaneReport, NoopHook, PipelineSetup,
 };
 pub use crate::faults::{FaultPlan, RecoveryPolicy};
 pub use crate::migrate::ResizePolicy;

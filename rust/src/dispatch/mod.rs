@@ -19,6 +19,7 @@ use crate::config::{PipelineSpec, SolverConstants, Stage};
 use crate::ilp::{Item, Mckp};
 use crate::perfmodel::DEGREES;
 use crate::placement::{Pi, PlacementPlan};
+use crate::prof::{Phase, Prof};
 use crate::profiler::Profile;
 use crate::request::{Request, RequestId};
 
@@ -170,6 +171,7 @@ impl CandidateCache {
             mem_reserve_gb,
             solve_budget_ms: 0.0,
             cache: Cow::Owned(scratch),
+            prof: Prof::off(),
         };
         let mut cand = Vec::with_capacity(profile.n_shapes());
         for s in 0..profile.n_shapes() {
@@ -252,6 +254,10 @@ pub struct Dispatcher<'a> {
     /// built under a different profile/reserve would silently disagree
     /// with the dispatcher's own filters.
     cache: Cow<'a, CandidateCache>,
+    /// Self-profiling handle: candidate assembly and the MCKP solve open
+    /// [`Phase::CandidateGen`] / [`Phase::MckpSolve`]/[`Phase::MckpSeeded`]
+    /// scopes. Off by default (one dead branch per tick).
+    pub prof: Prof,
 }
 
 impl<'a> Dispatcher<'a> {
@@ -271,6 +277,7 @@ impl<'a> Dispatcher<'a> {
             mem_reserve_gb: DEFAULT_MEM_RESERVE_GB,
             solve_budget_ms: 80.0,
             cache: Cow::Owned(cache),
+            prof: Prof::off(),
         }
     }
 
@@ -291,6 +298,7 @@ impl<'a> Dispatcher<'a> {
             mem_reserve_gb: cache.mem_reserve_gb,
             solve_budget_ms: 80.0,
             cache: Cow::Borrowed(cache),
+            prof: Prof::off(),
         }
     }
 
@@ -455,6 +463,7 @@ impl<'a> Dispatcher<'a> {
         // hint for requests the solver leaves pending (see below).
         let mut best_cand: Vec<Option<(f64, usize, usize)>> = vec![None; pending.len()];
         let mut warm_hits = 0usize;
+        let cand_scope = self.prof.scope(Phase::CandidateGen);
         for (ri, r) in pending.iter().enumerate() {
             let hint = warm.and_then(|w| w.choice.get(&r.id)).copied();
             // Best conceivable runtime for the reward estimate.
@@ -502,6 +511,7 @@ impl<'a> Dispatcher<'a> {
                 meta.push((ri, i, k));
             }
         }
+        drop(cand_scope);
 
         let problem = Mckp { n_groups: pending.len(), capacities, items };
         // §Perf: the greedy incumbent is within a fraction of a percent of
@@ -510,12 +520,19 @@ impl<'a> Dispatcher<'a> {
         // tightens the incumbent further, and a bounded B&B polish catches
         // the remaining capacity-packing wins without re-proving
         // engineered near-ties.
-        let sol = problem.solve_seeded(
-            self.solve_budget_ms,
-            40_000,
-            0.0,
-            warm.map(|_| seed.as_slice()),
-        );
+        let sol = {
+            let _solve = self.prof.scope(if warm.is_some() {
+                Phase::MckpSeeded
+            } else {
+                Phase::MckpSolve
+            });
+            problem.solve_seeded(
+                self.solve_budget_ms,
+                40_000,
+                0.0,
+                warm.map(|_| seed.as_slice()),
+            )
+        };
 
         // Materialise plans: find intra-node idle GPU sets. The next-tick
         // hint records, per request, the best-known config: the solver's

@@ -8,7 +8,9 @@ use crate::metrics::Metrics;
 use crate::perfmodel::PerfModel;
 use crate::profiler::Profile;
 use crate::obs::Tracer;
-use crate::sim::{run_sim_traced, ServingPolicy, SimConfig, TridentPolicy};
+use crate::prof::Prof;
+use crate::sim::{run_sim_profiled, ServingPolicy, SimConfig, TridentPolicy};
+use crate::telemetry::Telemetry;
 use crate::workload::{DifficultyModel, TraceGen, WorkloadKind};
 
 /// Everything needed to run experiments on one pipeline.
@@ -126,6 +128,34 @@ impl Setup {
         rate_scale: f64,
         tracer: &Tracer,
     ) -> Metrics {
+        self.run_scaled_profiled(
+            policy_name,
+            workload,
+            duration_ms,
+            seed,
+            rate_scale,
+            tracer,
+            &Telemetry::off(),
+            &Prof::off(),
+        )
+    }
+
+    /// The fully-instrumented form: tracing, live telemetry and
+    /// control-plane self-profiling ([`crate::prof`]) — the entry the
+    /// scale-sweep bench and the `self-profile` CLI subcommand use. With
+    /// all three handles off this is exactly [`Setup::run_scaled`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_scaled_profiled(
+        &self,
+        policy_name: &str,
+        workload: WorkloadKind,
+        duration_ms: f64,
+        seed: u64,
+        rate_scale: f64,
+        tracer: &Tracer,
+        tele: &Telemetry,
+        prof: &Prof,
+    ) -> Metrics {
         let tg = TraceGen {
             pipeline: &self.pipeline,
             profile: &self.profile,
@@ -135,7 +165,7 @@ impl Setup {
         let trace = tg.generate(workload, duration_ms, seed);
         let mut policy = self.policy(policy_name);
         let cfg = SimConfig { seed, ..Default::default() };
-        run_sim_traced(
+        run_sim_profiled(
             &self.pipeline,
             &self.profile,
             &self.consts,
@@ -144,6 +174,8 @@ impl Setup {
             &trace,
             &cfg,
             tracer,
+            tele,
+            prof,
         )
     }
 }

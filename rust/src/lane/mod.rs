@@ -36,6 +36,7 @@ use crate::metrics::Metrics;
 use crate::monitor::Monitor;
 use crate::obs::{EventBody, Tracer};
 use crate::perfmodel::PerfModel;
+use crate::prof::{Phase, Prof};
 use crate::request::{Completion, Outcome, Request, RequestId};
 use crate::telemetry::{metric, Telemetry};
 
@@ -371,6 +372,11 @@ pub struct LaneCore {
     /// executors sample gauges on their own cadence via
     /// [`LaneCore::sample_gauges`].
     pub tele: Telemetry,
+    /// Control-plane self-profiling handle (off by default — the third
+    /// twin next to `tracer`/`tele`). The shared choke points below open
+    /// [`Phase::TelemetrySample`] / [`Phase::HandleDone`] scopes so every
+    /// executor built on `LaneCore` is profiled uniformly.
+    pub prof: Prof,
 }
 
 impl LaneCore {
@@ -382,6 +388,7 @@ impl LaneCore {
             oom_arrival_is_abort_time,
             tracer: Tracer::off(),
             tele: Telemetry::off(),
+            prof: Prof::off(),
         }
     }
 
@@ -411,6 +418,7 @@ impl LaneCore {
         if !self.tele.enabled() {
             return;
         }
+        let _p = self.prof.scope(Phase::TelemetrySample);
         self.tele.sample(now_ms, metric::QUEUE_DEPTH, self.pending.len() as f64);
         self.tele.sample(now_ms, metric::INFLIGHT_PLANS, self.progress.dispatched_len() as f64);
         let idle = engine.idle();
@@ -508,6 +516,7 @@ impl LaneCore {
         if engine.plans[pid].state != PlanState::Running {
             return; // cancelled while queued, or a stale event
         }
+        let _p = self.prof.scope(Phase::HandleDone);
         let req = engine.plans[pid].req;
         let stage = engine.plans[pid].stage;
         let merged = engine.plans[pid].merged_stages.clone();

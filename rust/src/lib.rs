@@ -42,6 +42,11 @@
 //!   rules over the telemetry attainment series) + automated root-cause
 //!   attribution joining alerts against the trace and latency breakdown,
 //!   with JSONL/Display reports and offline trace+CSV replay.
+//! * [`prof`] — control-plane self-profiling: RAII phase scopes over a
+//!   fixed taxonomy (tick/dispatch/MCKP solve/free-view/arbitrate/...),
+//!   dual deterministic+wall-clock accounting, folded-stack flamegraph and
+//!   JSON exporters. Distinct from [`profiler`], the §5.1 offline GPU
+//!   profile.
 //! * [`metrics`] — SLO attainment, latency percentiles, Fig-10 reporting.
 //! * [`runtime`] — artifact manifest; with feature `pjrt`, the PJRT
 //!   loader/executor for the AOT HLO artifacts.
@@ -67,6 +72,7 @@ pub mod monitor;
 pub mod obs;
 pub mod perfmodel;
 pub mod placement;
+pub mod prof;
 pub mod profiler;
 pub mod request;
 pub mod runtime;

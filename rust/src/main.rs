@@ -10,6 +10,12 @@
 //!   diagnose     replay a JSONL trace + metrics CSV into an SLO burn-rate
 //!                alert + root-cause report (exit 1 with --expect-alerts
 //!                true when nothing fires)
+//!   self-profile run a short profiled simulation and dump the control
+//!                plane's own cost: per-phase summary to stdout, folded
+//!                stacks (inferno/flamegraph.pl format) + JSON phase tree
+//!                to --out <prefix>.{folded,json}. (`profile` is the
+//!                paper's offline GPU latency table; this profiles the
+//!                serving control plane itself.)
 //!
 //! Examples:
 //!   tridentserve simulate --pipeline flux --workload dynamic --policy trident
@@ -175,6 +181,62 @@ fn main() -> Result<()> {
                 }
             }
         }
+        "self-profile" => {
+            use tridentserve::obs::Tracer;
+            use tridentserve::prof::export as prof_export;
+            use tridentserve::prof::Prof;
+            use tridentserve::telemetry::Telemetry;
+
+            let pipeline = get("pipeline", "flux");
+            let workload = workload_by_name(&get("workload", "medium"));
+            let policy = get("policy", "trident");
+            let gpus: usize = get("gpus", "128").parse()?;
+            let minutes: f64 = get("duration-min", "2").parse()?;
+            let seed: u64 = get("seed", "0").parse()?;
+            let setup = Setup::new(&pipeline, gpus);
+            let (prof, sink) = Prof::recording();
+            let t0 = std::time::Instant::now();
+            let m = setup.run_scaled_profiled(
+                &policy,
+                workload,
+                minutes * 60_000.0,
+                seed,
+                1.0,
+                &Tracer::off(),
+                &Telemetry::off(),
+                &prof,
+            );
+            let wall = t0.elapsed().as_secs_f64();
+            let sink = sink.borrow();
+            println!(
+                "self-profile: {pipeline}/{}/{policy} on {gpus} GPUs, {} reqs, {wall:.2}s wall",
+                workload.label(),
+                m.summary().n,
+            );
+            println!("{:<18} {:>10} {:>12} {:>7}", "phase", "count", "self(ms)", "% wall");
+            let totals = prof_export::phase_totals(&sink);
+            for t in &totals {
+                println!(
+                    "{:<18} {:>10} {:>12.1} {:>6.1}%",
+                    t.phase.name(),
+                    t.count,
+                    t.wall_self_ns as f64 / 1e6,
+                    100.0 * t.wall_self_ns as f64 / (wall * 1e9),
+                );
+            }
+            let prefix = get("out", "self_profile");
+            let folded = prof_export::to_folded(&sink, prof_export::Channel::WallNs);
+            let json = prof_export::to_json(&sink, true);
+            for (ext, text) in [("folded", folded), ("json", json)] {
+                let path = format!("{prefix}.{ext}");
+                std::fs::write(&path, text)?;
+                println!("wrote {path}");
+            }
+            println!(
+                "flamegraph: `cat {prefix}.folded | inferno-flamegraph > prof.svg` \
+                 (or flamegraph.pl)"
+            );
+        }
         "bench-check" => {
             let baseline_path = get("baseline", "BENCH_perf_hotpath.json");
             let current_path = get("current", "BENCH_perf_hotpath.json");
@@ -225,8 +287,8 @@ fn main() -> Result<()> {
         _ => {
             println!("tridentserve — stage-level serving for diffusion pipelines");
             println!(
-                "usage: tridentserve <simulate|serve|placement|profile|bench-check|diagnose> \
-                 [--key value ...]"
+                "usage: tridentserve <simulate|serve|placement|profile|self-profile|\
+                 bench-check|diagnose> [--key value ...]"
             );
             println!("see README.md for the full flag reference");
         }

@@ -34,6 +34,10 @@ pub struct Summary {
     pub p95_latency_ms: f64,
     pub p99_latency_ms: f64,
     pub mean_solve_ms: f64,
+    /// Total wall-clock milliseconds spent in dispatcher MCKP solves —
+    /// the run's control-plane solve-time share (`prof` surfaces the same
+    /// quantity per phase; this is the metrics-side aggregate).
+    pub total_solve_ms: f64,
     /// Total dispatcher solves recorded (ticks where the ILP ran).
     pub solves: usize,
     /// Candidate-cache warm hits across all solves (Table-4 incremental
@@ -177,6 +181,7 @@ impl Metrics {
             // 0.0 sentinel: policies without an ILP record no solves.
             mean_solve_ms: mean(&self.solve_stats.iter().map(|s| s.solve_ms).collect::<Vec<_>>())
                 .unwrap_or(0.0),
+            total_solve_ms: self.solve_stats.iter().map(|s| s.solve_ms).sum(),
             solves: self.solve_stats.len(),
             warm_hits: self.solve_stats.iter().map(|s| s.warm_hits).sum(),
         }
@@ -196,6 +201,7 @@ impl Metrics {
         obj.insert("p95_latency_ms".into(), Json::Num(s.p95_latency_ms));
         obj.insert("p99_latency_ms".into(), Json::Num(s.p99_latency_ms));
         obj.insert("mean_solve_ms".into(), Json::Num(s.mean_solve_ms));
+        obj.insert("total_solve_ms".into(), Json::Num(s.total_solve_ms));
         obj.insert("solves".into(), Json::Num(s.solves as f64));
         obj.insert("warm_hits".into(), Json::Num(s.warm_hits as f64));
         if let Some(q) = s.quality_attainment {
@@ -389,7 +395,11 @@ impl std::fmt::Display for Summary {
             self.mean_solve_ms,
         )?;
         if self.solves > 0 {
-            write!(f, " warm={}/{}", self.warm_hits, self.solves)?;
+            write!(
+                f,
+                " warm={}/{} solve_total={:.1}ms",
+                self.warm_hits, self.solves, self.total_solve_ms
+            )?;
         }
         if let Some(q) = self.quality_attainment {
             write!(f, " quality={q:.3}")?;
@@ -486,11 +496,16 @@ mod tests {
         assert_eq!(s.solves, 3);
         assert_eq!(s.warm_hits, 7);
         assert!((s.mean_solve_ms - 0.5).abs() < 1e-9);
+        assert!((s.total_solve_ms - 1.5).abs() < 1e-9);
         let shown = format!("{s}");
         assert!(shown.contains("warm=7/3"), "{shown}");
+        assert!(shown.contains("solve_total=1.5ms"), "{shown}");
         let parsed = crate::util::json::Json::parse(&m.to_json("w").to_string()).unwrap();
         assert_eq!(parsed.get("warm_hits").unwrap().as_i64(), Some(7));
         assert_eq!(parsed.get("solves").unwrap().as_i64(), Some(3));
+        assert!(
+            (parsed.get("total_solve_ms").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-9
+        );
     }
 
     #[test]

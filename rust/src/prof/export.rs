@@ -1,0 +1,272 @@
+//! Exporters for the self-profiling sink: inferno-compatible folded stacks
+//! (flamegraphs via `inferno-flamegraph` / speedscope), a JSON phase
+//! summary, flat per-phase totals, and the telemetry bridge.
+//!
+//! Determinism contract: the [`Channel::Count`] and [`Channel::Logical`]
+//! folded exports and the `include_wall = false` JSON export are pure
+//! functions of the instrumented event flow — same seed → byte-identical
+//! output, pinned in `tests/prof.rs`. [`Channel::WallNs`] and
+//! `include_wall = true` carry real nanoseconds and are explicitly
+//! non-pinned.
+
+use std::collections::BTreeMap;
+
+use super::{Phase, ProfSink};
+use crate::telemetry::{metric, Telemetry, CONTROL_LANE};
+use crate::util::json::Json;
+
+/// Which accounting channel a folded export reads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Channel {
+    /// Completed invocations per stack (pinned).
+    Count,
+    /// Logical-clock self time per stack (pinned).
+    Logical,
+    /// Wall-clock self nanoseconds per stack (non-pinned).
+    WallNs,
+}
+
+/// Flat per-phase totals aggregated over every node with that phase,
+/// regardless of ancestry. `logical`/`wall_ns` are **self** values (child
+/// time subtracted), so summing across phases never double-counts.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseTotal {
+    pub phase: Phase,
+    pub count: u64,
+    pub logical_self: u64,
+    pub wall_self_ns: u64,
+}
+
+fn self_values(sink: &ProfSink, node: usize) -> (u64, u64) {
+    let n = &sink.nodes()[node];
+    let (mut child_logical, mut child_wall) = (0u64, 0u64);
+    for &(_, c) in n.children() {
+        child_logical += sink.nodes()[c].logical;
+        child_wall += sink.nodes()[c].wall_ns;
+    }
+    (n.logical.saturating_sub(child_logical), n.wall_ns.saturating_sub(child_wall))
+}
+
+fn stack_name(sink: &ProfSink, node: usize) -> String {
+    let mut frames = Vec::new();
+    let mut cur = Some(node);
+    while let Some(i) = cur {
+        frames.push(sink.nodes()[i].phase.name());
+        cur = sink.nodes()[i].parent;
+    }
+    frames.reverse();
+    frames.join(";")
+}
+
+/// Depth-first node order: roots in first-seen order, children likewise.
+/// Deterministic because node creation order is a pure function of the
+/// instrumented event flow.
+fn dfs(sink: &ProfSink) -> Vec<usize> {
+    let mut out = Vec::with_capacity(sink.nodes().len());
+    let mut stack: Vec<usize> =
+        sink.roots().iter().rev().map(|&(_, i)| i).collect();
+    while let Some(i) = stack.pop() {
+        out.push(i);
+        for &(_, c) in sink.nodes()[i].children().iter().rev() {
+            stack.push(c);
+        }
+    }
+    out
+}
+
+/// Inferno-compatible folded stacks: one `a;b;c <value>` line per node with
+/// at least one completed invocation. Values are integers; `Count` emits
+/// invocation counts, `Logical`/`WallNs` emit **self** time so the
+/// flamegraph's frame widths add up correctly.
+pub fn to_folded(sink: &ProfSink, channel: Channel) -> String {
+    let mut out = String::new();
+    for i in dfs(sink) {
+        let n = &sink.nodes()[i];
+        if n.count == 0 {
+            continue;
+        }
+        let (logical_self, wall_self) = self_values(sink, i);
+        let v = match channel {
+            Channel::Count => n.count,
+            Channel::Logical => logical_self,
+            Channel::WallNs => wall_self,
+        };
+        out.push_str(&stack_name(sink, i));
+        out.push(' ');
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn node_json(sink: &ProfSink, node: usize, include_wall: bool) -> Json {
+    let n = &sink.nodes()[node];
+    let (logical_self, wall_self) = self_values(sink, node);
+    let mut obj = BTreeMap::new();
+    obj.insert("phase".into(), Json::Str(n.phase.name().into()));
+    obj.insert("count".into(), Json::Num(n.count as f64));
+    obj.insert("logical".into(), Json::Num(n.logical as f64));
+    obj.insert("logical_self".into(), Json::Num(logical_self as f64));
+    if include_wall {
+        obj.insert("wall_ms".into(), Json::Num(n.wall_ns as f64 / 1e6));
+        obj.insert("wall_self_ms".into(), Json::Num(wall_self as f64 / 1e6));
+    }
+    let kids: Vec<Json> = n
+        .children()
+        .iter()
+        .map(|&(_, c)| node_json(sink, c, include_wall))
+        .collect();
+    if !kids.is_empty() {
+        obj.insert("children".into(), Json::Arr(kids));
+    }
+    Json::Obj(obj)
+}
+
+/// JSON phase summary: the nested phase tree plus the final logical clock.
+/// With `include_wall = false` (the pinned form) wall-clock fields are
+/// omitted entirely so the bytes are reproducible.
+pub fn to_json(sink: &ProfSink, include_wall: bool) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("clock".into(), Json::Num(sink.clock() as f64));
+    obj.insert(
+        "phases".into(),
+        Json::Arr(
+            sink.roots()
+                .iter()
+                .map(|&(_, i)| node_json(sink, i, include_wall))
+                .collect(),
+        ),
+    );
+    Json::Obj(obj).to_string()
+}
+
+/// Flat per-phase totals in [`Phase::ALL`] order, phases never entered
+/// omitted.
+pub fn phase_totals(sink: &ProfSink) -> Vec<PhaseTotal> {
+    let mut by_phase: BTreeMap<Phase, PhaseTotal> = BTreeMap::new();
+    for i in 0..sink.nodes().len() {
+        let n = &sink.nodes()[i];
+        if n.count == 0 {
+            continue;
+        }
+        let (logical_self, wall_self) = self_values(sink, i);
+        let t = by_phase.entry(n.phase).or_insert(PhaseTotal {
+            phase: n.phase,
+            count: 0,
+            logical_self: 0,
+            wall_self_ns: 0,
+        });
+        t.count += n.count;
+        t.logical_self += logical_self;
+        t.wall_self_ns += wall_self;
+    }
+    Phase::ALL
+        .iter()
+        .filter_map(|p| by_phase.get(p).copied())
+        .collect()
+}
+
+/// Publish per-phase wall-ms totals into a telemetry registry (control
+/// lane): one gauge+series point per phase (`prof_<phase>_ms`, exported as
+/// `trident_prof_<phase>_ms`) plus one observation per phase into the
+/// `prof_phase_ms` histogram. Wall-clock values: callers bridge only when
+/// profiling is on, so deterministic telemetry exports are unaffected.
+pub fn bridge_telemetry(sink: &ProfSink, tele: &Telemetry, t_ms: f64) {
+    if !tele.enabled() {
+        return;
+    }
+    let ctl = tele.for_lane(CONTROL_LANE);
+    for t in phase_totals(sink) {
+        let ms = t.wall_self_ns as f64 / 1e6;
+        ctl.sample(t_ms, t.phase.metric_name(), ms);
+        ctl.observe(metric::PROF_PHASE_MS, ms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prof::Prof;
+
+    fn demo() -> std::rc::Rc<std::cell::RefCell<ProfSink>> {
+        let (p, sink) = Prof::recording();
+        for _ in 0..3 {
+            let _t = p.scope(Phase::Tick);
+            {
+                let _d = p.scope(Phase::Dispatch);
+                let _s = p.scope(Phase::MckpSolve);
+            }
+            let _a = p.scope(Phase::Advance);
+        }
+        sink
+    }
+
+    #[test]
+    fn folded_count_lines_are_full_stacks() {
+        let sink = demo();
+        let folded = to_folded(&sink.borrow(), Channel::Count);
+        let lines: Vec<&str> = folded.lines().collect();
+        assert_eq!(
+            lines,
+            vec![
+                "tick 3",
+                "tick;dispatch 3",
+                "tick;dispatch;mckp_solve 3",
+                "tick;advance 3",
+            ]
+        );
+    }
+
+    #[test]
+    fn folded_logical_is_self_time() {
+        let sink = demo();
+        let folded = to_folded(&sink.borrow(), Channel::Logical);
+        // Per iteration: tick spans 7 ticks, dispatch 3, solve 1, advance 1.
+        // Self: tick 7-3-1=3, dispatch 3-1=2, solve 1, advance 1. ×3 runs.
+        assert_eq!(
+            folded,
+            "tick 9\ntick;dispatch 6\ntick;dispatch;mckp_solve 3\ntick;advance 3\n"
+        );
+    }
+
+    #[test]
+    fn json_pinned_form_has_no_wall_fields() {
+        let sink = demo();
+        let js = to_json(&sink.borrow(), false);
+        assert!(!js.contains("wall"), "pinned JSON leaked wall-clock: {js}");
+        let parsed = Json::parse(&js).expect("valid JSON");
+        assert_eq!(parsed.get("clock").and_then(Json::as_i64), Some(24));
+        let phases = parsed.get("phases").and_then(Json::as_arr).unwrap();
+        assert_eq!(phases.len(), 1);
+        assert_eq!(
+            phases[0].get("phase").and_then(Json::as_str),
+            Some("tick")
+        );
+        let wall = to_json(&sink.borrow(), true);
+        assert!(wall.contains("wall_self_ms"));
+    }
+
+    #[test]
+    fn phase_totals_are_flat_and_self_valued() {
+        let sink = demo();
+        let totals = phase_totals(&sink.borrow());
+        let names: Vec<&str> = totals.iter().map(|t| t.phase.name()).collect();
+        assert_eq!(names, vec!["tick", "dispatch", "mckp_solve", "advance"]);
+        let logical_sum: u64 = totals.iter().map(|t| t.logical_self).sum();
+        assert_eq!(logical_sum, 21); // root inclusive 7 × 3 runs
+    }
+
+    #[test]
+    fn bridge_publishes_control_lane_metrics() {
+        let sink = demo();
+        let (tele, reg) = Telemetry::registry();
+        bridge_telemetry(&sink.borrow(), &tele, 1_000.0);
+        let reg = reg.borrow();
+        assert!(reg.gauge("prof_tick_ms", CONTROL_LANE).is_some());
+        assert!(reg.gauge("prof_mckp_solve_ms", CONTROL_LANE).is_some());
+        let h = reg.hist(metric::PROF_PHASE_MS, CONTROL_LANE).unwrap();
+        assert_eq!(h.count(), 4);
+        // Off handle: bridge is a no-op.
+        bridge_telemetry(&sink.borrow(), &Telemetry::off(), 0.0);
+    }
+}

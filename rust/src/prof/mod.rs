@@ -1,0 +1,435 @@
+//! Control-plane self-profiling — the fourth observability layer.
+//!
+//! [`crate::obs`] traces *requests*, [`crate::telemetry`] streams *metrics*,
+//! [`crate::diagnose`] explains *SLO burns*; this module measures the control
+//! plane's **own** time: what fraction of a tick goes to the MCKP solve vs
+//! the `free_view` recompute vs the per-lane `tick()` fan-out. Not to be
+//! confused with [`crate::profiler`], which is the paper's §5.1 *offline GPU
+//! profile* of stage latencies — `prof` profiles the planner, not the model.
+//!
+//! Design is the handle-twin pattern shared with `obs::Tracer` and
+//! `telemetry::Telemetry`: a cloneable [`Prof`] handle whose off state (the
+//! default everywhere) is a `None` sink — every [`Prof::scope`] call is one
+//! branch, no allocation, pinned by `prof_instr_off_ns` in `perf_hotpath`
+//! and by the non-perturbation tests in `tests/prof.rs`.
+//!
+//! Scopes are RAII guards over a fixed [`Phase`] taxonomy and nest: the sink
+//! grows a phase-stack tree (`tick;dispatch;mckp_solve`), so self-time vs
+//! child-time is separable at export. Accounting is dual:
+//!
+//! - **Pinned channels** — invocation `count` and `logical` duration (a
+//!   global logical clock that advances by one on every scope enter *and*
+//!   exit, so a scope's logical span counts the instrumented events beneath
+//!   it). Both are pure functions of the instrumented event flow: same seed
+//!   → byte-identical exports, enforced by `tests/prof.rs`.
+//! - **Non-pinned channel** — wall-clock nanoseconds via `std::time::Instant`.
+//!   Never compared across runs, excluded from deterministic exports by
+//!   default; this is the channel flamegraphs and the scale observatory
+//!   (`benches/scale_sweep.rs`) read.
+//!
+//! Exporters live in [`export`]: inferno-compatible folded stacks, a JSON
+//! phase summary, flat per-phase totals, and the telemetry bridge that
+//! publishes phase totals as `trident_prof_*` control-lane metrics.
+
+pub mod export;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Fixed phase taxonomy for control-plane work. Fixed (rather than free
+/// strings) so names stay `&'static str` — the off→on path allocates
+/// nothing and exports are stable across runs by construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    /// One dispatcher tick (the clock-driven §5.2 cadence).
+    Tick,
+    /// One lane's slice of a co-serving tick (fan-out child of [`Phase::Tick`]).
+    LaneTick,
+    /// `Engine::refresh_free_view` — the O(G) earliest-free/idle recompute.
+    FreeView,
+    /// `ServingPolicy::dispatch` end to end (candidate gen + solve + build).
+    Dispatch,
+    /// Candidate assembly inside the dispatcher (cache probes, warm-hint
+    /// matching, item construction).
+    CandidateGen,
+    /// Cold MCKP branch-and-bound solve (no warm seed).
+    MckpSolve,
+    /// Warm-started MCKP solve (`solve_seeded` with a seed).
+    MckpSeeded,
+    /// Cluster arbiter re-partitioning (its MCKP solve nests beneath).
+    Arbitrate,
+    /// Lane handoff accounting during a resize swap (drain/adopt plumbing).
+    Handoff,
+    /// Checkpoint capture/restore costing during preemptive migration.
+    Checkpoint,
+    /// Telemetry gauge sampling (`LaneCore::sample_gauges`).
+    TelemetrySample,
+    /// Control-plane trace emission into the obs ring.
+    TraceEmit,
+    /// Monitor/orchestrator pass (`maybe_switch` and friends).
+    Monitor,
+    /// `Engine::advance` — plan scheduling after dispatch/completions.
+    Advance,
+    /// Completion handling (`LaneCore::handle_done`).
+    HandleDone,
+}
+
+impl Phase {
+    /// Every phase, in export order.
+    pub const ALL: [Phase; 15] = [
+        Phase::Tick,
+        Phase::LaneTick,
+        Phase::FreeView,
+        Phase::Dispatch,
+        Phase::CandidateGen,
+        Phase::MckpSolve,
+        Phase::MckpSeeded,
+        Phase::Arbitrate,
+        Phase::Handoff,
+        Phase::Checkpoint,
+        Phase::TelemetrySample,
+        Phase::TraceEmit,
+        Phase::Monitor,
+        Phase::Advance,
+        Phase::HandleDone,
+    ];
+
+    /// Frame name used in folded stacks and the JSON export.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Tick => "tick",
+            Phase::LaneTick => "lane_tick",
+            Phase::FreeView => "free_view",
+            Phase::Dispatch => "dispatch",
+            Phase::CandidateGen => "candidate_gen",
+            Phase::MckpSolve => "mckp_solve",
+            Phase::MckpSeeded => "mckp_seeded",
+            Phase::Arbitrate => "arbitrate",
+            Phase::Handoff => "handoff",
+            Phase::Checkpoint => "checkpoint",
+            Phase::TelemetrySample => "telemetry_sample",
+            Phase::TraceEmit => "trace_emit",
+            Phase::Monitor => "monitor",
+            Phase::Advance => "advance",
+            Phase::HandleDone => "handle_done",
+        }
+    }
+
+    /// Telemetry series name for this phase's wall-ms total (control lane),
+    /// exported as `trident_prof_<phase>_ms` by the Prometheus exporter.
+    pub fn metric_name(self) -> &'static str {
+        match self {
+            Phase::Tick => "prof_tick_ms",
+            Phase::LaneTick => "prof_lane_tick_ms",
+            Phase::FreeView => "prof_free_view_ms",
+            Phase::Dispatch => "prof_dispatch_ms",
+            Phase::CandidateGen => "prof_candidate_gen_ms",
+            Phase::MckpSolve => "prof_mckp_solve_ms",
+            Phase::MckpSeeded => "prof_mckp_seeded_ms",
+            Phase::Arbitrate => "prof_arbitrate_ms",
+            Phase::Handoff => "prof_handoff_ms",
+            Phase::Checkpoint => "prof_checkpoint_ms",
+            Phase::TelemetrySample => "prof_telemetry_sample_ms",
+            Phase::TraceEmit => "prof_trace_emit_ms",
+            Phase::Monitor => "prof_monitor_ms",
+            Phase::Advance => "prof_advance_ms",
+            Phase::HandleDone => "prof_handle_done_ms",
+        }
+    }
+}
+
+/// One node of the phase-stack tree: a distinct `(ancestry, phase)` pair.
+/// All durations are **inclusive** of children; exporters derive self time
+/// by subtracting child totals.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub phase: Phase,
+    /// Index of the parent node in [`ProfSink::nodes`]; `None` for roots.
+    pub parent: Option<usize>,
+    /// Completed invocations of this exact stack.
+    pub count: u64,
+    /// Inclusive logical duration: instrumented enter/exit events observed
+    /// while this scope was open. Deterministic (pinned channel).
+    pub logical: u64,
+    /// Inclusive wall-clock nanoseconds. Non-pinned channel.
+    pub wall_ns: u64,
+    /// Child lookup in first-seen order (deterministic given event flow).
+    children: Vec<(Phase, usize)>,
+}
+
+impl Node {
+    pub fn children(&self) -> &[(Phase, usize)] {
+        &self.children
+    }
+}
+
+/// A scope currently open on the stack.
+struct Open {
+    node: usize,
+    enter_clock: u64,
+    enter_at: Instant,
+}
+
+/// The arena behind an enabled [`Prof`] handle: phase-tree nodes, the open
+/// scope stack, and the global logical clock.
+#[derive(Default)]
+pub struct ProfSink {
+    nodes: Vec<Node>,
+    /// Root-level lookup (scopes entered with an empty stack).
+    roots: Vec<(Phase, usize)>,
+    stack: Vec<Open>,
+    clock: u64,
+}
+
+impl ProfSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// All nodes in creation order (tree structure via `parent`/`children`).
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Root nodes in first-seen order.
+    pub fn roots(&self) -> &[(Phase, usize)] {
+        &self.roots
+    }
+
+    /// Total logical-clock ticks recorded (2 per completed scope).
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Currently-open scope depth (0 once every guard has dropped).
+    pub fn open_depth(&self) -> usize {
+        self.stack.len()
+    }
+
+    fn child_of(&mut self, parent: Option<usize>, phase: Phase) -> usize {
+        let lookup = match parent {
+            Some(p) => &self.nodes[p].children,
+            None => &self.roots,
+        };
+        if let Some(&(_, idx)) = lookup.iter().find(|(ph, _)| *ph == phase) {
+            return idx;
+        }
+        let idx = self.nodes.len();
+        self.nodes.push(Node {
+            phase,
+            parent,
+            count: 0,
+            logical: 0,
+            wall_ns: 0,
+            children: Vec::new(),
+        });
+        match parent {
+            Some(p) => self.nodes[p].children.push((phase, idx)),
+            None => self.roots.push((phase, idx)),
+        }
+        idx
+    }
+
+    fn enter(&mut self, phase: Phase) -> usize {
+        self.clock += 1;
+        let parent = self.stack.last().map(|o| o.node);
+        let node = self.child_of(parent, phase);
+        self.stack.push(Open { node, enter_clock: self.clock, enter_at: Instant::now() });
+        node
+    }
+
+    /// Close the scope for `node`. Guards normally drop in LIFO order, but
+    /// if an outer guard drops first (early return juggling, explicit
+    /// `drop`), every still-open scope above it is closed too, so the tree
+    /// never corrupts — pinned by the drop-order test.
+    fn exit(&mut self, node: usize) {
+        let Some(pos) = self.stack.iter().rposition(|o| o.node == node) else {
+            return; // already closed by an outer out-of-order exit
+        };
+        while self.stack.len() > pos {
+            let open = self.stack.pop().unwrap();
+            self.clock += 1;
+            let n = &mut self.nodes[open.node];
+            n.count += 1;
+            n.logical += self.clock - open.enter_clock;
+            n.wall_ns += open.enter_at.elapsed().as_nanos() as u64;
+        }
+    }
+}
+
+/// RAII phase guard returned by [`Prof::scope`]. Off-handle guards carry no
+/// sink and their drop is a no-op branch.
+#[must_use = "a dropped guard closes its phase scope immediately"]
+pub struct ProfScope {
+    sink: Option<Rc<RefCell<ProfSink>>>,
+    node: usize,
+}
+
+impl Drop for ProfScope {
+    fn drop(&mut self) {
+        if let Some(s) = &self.sink {
+            s.borrow_mut().exit(self.node);
+        }
+    }
+}
+
+/// Cheap, cloneable self-profiling handle — the profiling twin of
+/// [`crate::obs::Tracer`] and [`crate::telemetry::Telemetry`]. Clones share
+/// one sink; [`Prof::off`] (the `Default`) is a `None` sink: every `scope`
+/// call is a single branch with zero allocation.
+#[derive(Clone, Default)]
+pub struct Prof {
+    sink: Option<Rc<RefCell<ProfSink>>>,
+}
+
+impl Prof {
+    /// The disabled handle (default everywhere).
+    pub fn off() -> Self {
+        Prof { sink: None }
+    }
+
+    /// An enabled handle plus the shared sink for post-run export.
+    pub fn recording() -> (Prof, Rc<RefCell<ProfSink>>) {
+        let sink = Rc::new(RefCell::new(ProfSink::new()));
+        (Prof { sink: Some(sink.clone()) }, sink)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Open a phase scope; the returned guard closes it on drop.
+    #[inline]
+    pub fn scope(&self, phase: Phase) -> ProfScope {
+        match &self.sink {
+            Some(s) => {
+                let node = s.borrow_mut().enter(phase);
+                ProfScope { sink: Some(s.clone()), node }
+            }
+            None => ProfScope { sink: None, node: 0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sink_of(prof: &Prof) -> Rc<RefCell<ProfSink>> {
+        prof.sink.clone().expect("recording handle")
+    }
+
+    #[test]
+    fn off_scope_is_inert() {
+        let p = Prof::off();
+        assert!(!p.enabled());
+        let g = p.scope(Phase::Tick);
+        drop(g);
+        // Default is off, matching Tracer/Telemetry.
+        assert!(!Prof::default().enabled());
+    }
+
+    #[test]
+    fn nesting_builds_a_tree_with_inclusive_logical() {
+        let (p, sink) = Prof::recording();
+        {
+            let _t = p.scope(Phase::Tick);
+            {
+                let _d = p.scope(Phase::Dispatch);
+                let _s = p.scope(Phase::MckpSolve);
+            }
+            let _a = p.scope(Phase::Advance);
+        }
+        let s = sink.borrow();
+        assert_eq!(s.open_depth(), 0);
+        assert_eq!(s.roots().len(), 1);
+        let (_, tick) = s.roots()[0];
+        let tick_node = &s.nodes()[tick];
+        assert_eq!(tick_node.phase, Phase::Tick);
+        assert_eq!(tick_node.count, 1);
+        // tick spans all 8 enter/exit events minus its own enter: 7.
+        assert_eq!(tick_node.logical, 7);
+        let kids: Vec<Phase> =
+            tick_node.children().iter().map(|&(ph, _)| ph).collect();
+        assert_eq!(kids, vec![Phase::Dispatch, Phase::Advance]);
+        let (_, disp) = tick_node.children()[0];
+        let disp_node = &s.nodes()[disp];
+        assert_eq!(disp_node.logical, 3); // dispatch + nested solve enter/exit
+        assert_eq!(disp_node.children().len(), 1);
+    }
+
+    #[test]
+    fn repeat_invocations_accumulate_one_node() {
+        let (p, sink) = Prof::recording();
+        for _ in 0..5 {
+            let _t = p.scope(Phase::Tick);
+            let _f = p.scope(Phase::FreeView);
+        }
+        let s = sink.borrow();
+        assert_eq!(s.roots().len(), 1);
+        assert_eq!(s.nodes().len(), 2);
+        let (_, tick) = s.roots()[0];
+        assert_eq!(s.nodes()[tick].count, 5);
+        let (_, fv) = s.nodes()[tick].children()[0];
+        assert_eq!(s.nodes()[fv].count, 5);
+        assert_eq!(s.nodes()[fv].logical, 5); // 1 logical tick each
+    }
+
+    #[test]
+    fn recursive_phase_creates_child_node() {
+        let (p, sink) = Prof::recording();
+        {
+            let _outer = p.scope(Phase::Tick);
+            let _inner = p.scope(Phase::Tick);
+        }
+        let s = sink.borrow();
+        assert_eq!(s.nodes().len(), 2);
+        let (_, outer) = s.roots()[0];
+        let (inner_phase, inner) = s.nodes()[outer].children()[0];
+        assert_eq!(inner_phase, Phase::Tick);
+        assert_eq!(s.nodes()[inner].parent, Some(outer));
+        assert_eq!(s.nodes()[outer].count, 1);
+        assert_eq!(s.nodes()[inner].count, 1);
+    }
+
+    #[test]
+    fn out_of_order_drop_closes_inner_scopes() {
+        let (p, sink) = Prof::recording();
+        let outer = p.scope(Phase::Tick);
+        let inner = p.scope(Phase::Dispatch);
+        drop(outer); // closes dispatch too
+        {
+            let s = sink.borrow();
+            assert_eq!(s.open_depth(), 0);
+            assert_eq!(s.nodes().iter().map(|n| n.count).sum::<u64>(), 2);
+        }
+        drop(inner); // stale guard: no-op
+        let s = sink.borrow();
+        assert_eq!(s.nodes().iter().map(|n| n.count).sum::<u64>(), 2);
+        assert_eq!(s.clock(), 4);
+    }
+
+    #[test]
+    fn siblings_do_not_share_nodes_across_parents() {
+        let (p, sink) = Prof::recording();
+        {
+            let _t = p.scope(Phase::Tick);
+            let _s = p.scope(Phase::MckpSolve);
+        }
+        {
+            let _a = p.scope(Phase::Arbitrate);
+            let _s = p.scope(Phase::MckpSolve);
+        }
+        let s = sink.borrow();
+        // tick;mckp_solve and arbitrate;mckp_solve are distinct nodes.
+        assert_eq!(s.roots().len(), 2);
+        assert_eq!(s.nodes().len(), 4);
+        let solves = s
+            .nodes()
+            .iter()
+            .filter(|n| n.phase == Phase::MckpSolve)
+            .count();
+        assert_eq!(solves, 2);
+    }
+}

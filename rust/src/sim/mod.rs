@@ -20,6 +20,7 @@ use crate::metrics::Metrics;
 use crate::monitor::Monitor;
 use crate::obs::{EventBody, Tracer, CONTROL_LANE};
 use crate::perfmodel::PerfModel;
+use crate::prof::{Phase, Prof};
 use crate::profiler::Profile;
 use crate::request::{Completion, Outcome};
 use crate::telemetry::Telemetry;
@@ -142,6 +143,39 @@ pub fn run_sim_observed(
     tracer: &Tracer,
     tele: &Telemetry,
 ) -> Metrics {
+    run_sim_profiled(
+        pipeline,
+        profile,
+        consts,
+        cluster,
+        policy,
+        trace,
+        cfg,
+        tracer,
+        tele,
+        &Prof::off(),
+    )
+}
+
+/// [`run_sim_observed`] with control-plane self-profiling: every tick opens
+/// a [`Phase::Tick`] scope with the free-view recompute, dispatch (and its
+/// nested candidate-gen/MCKP-solve phases, via
+/// [`ServingPolicy::attach_prof`]), trace emission and engine advance as
+/// children — see [`crate::prof`]. With `Prof::off()` this is exactly
+/// `run_sim_observed` (non-perturbation pinned in `tests/prof.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_sim_profiled(
+    pipeline: &PipelineSpec,
+    profile: &Profile,
+    consts: &SolverConstants,
+    cluster: &ClusterSpec,
+    policy: &mut dyn ServingPolicy,
+    trace: &Trace,
+    cfg: &SimConfig,
+    tracer: &Tracer,
+    tele: &Telemetry,
+    prof: &Prof,
+) -> Metrics {
     let model = PerfModel::new(cluster.clone());
     let topo = crate::cluster::Topology::new(cluster.clone());
     let g = topo.total_gpus();
@@ -164,7 +198,9 @@ pub fn run_sim_observed(
     let mut core = LaneCore::new(true);
     core.tracer = tracer.for_lane(0);
     core.tele = tele.for_lane(0);
+    core.prof = prof.clone();
     monitor.attach_telemetry(&core.tele);
+    policy.attach_prof(prof);
     let ctl = tracer.for_lane(CONTROL_LANE);
 
     while let Some((now, kind)) = events.pop() {
@@ -192,8 +228,13 @@ pub fn run_sim_observed(
                 }
             }
             EventKind::Tick => {
-                engine.refresh_free_view(now);
+                let _tick = prof.scope(Phase::Tick);
+                {
+                    let _fv = prof.scope(Phase::FreeView);
+                    engine.refresh_free_view(now);
+                }
                 let (plans, stats) = {
+                    let _d = prof.scope(Phase::Dispatch);
                     let view = ClusterView {
                         placement: &engine.placement,
                         idle: engine.idle(),
@@ -206,6 +247,7 @@ pub fn run_sim_observed(
                     // Wall-clock solve fields (solve_ms/nodes/optimal) are
                     // intentionally NOT traced: the trace must be a pure
                     // function of the seed.
+                    let _te = prof.scope(Phase::TraceEmit);
                     ctl.emit(now, || EventBody::Decision {
                         candidates: s.candidates,
                         dispatched: s.dispatched,
@@ -217,8 +259,11 @@ pub fn run_sim_observed(
                     let ids = engine.enqueue(rp, profile);
                     core.track_dispatch(rp, ids, [0.0; 3], now);
                 }
-                for sp in engine.advance(now, &mut exec, profile) {
-                    events.push(sp.finish_ms, EventKind::PlanDone(sp.plan));
+                {
+                    let _a = prof.scope(Phase::Advance);
+                    for sp in engine.advance(now, &mut exec, profile) {
+                        events.push(sp.finish_ms, EventKind::PlanDone(sp.plan));
+                    }
                 }
                 core.drain_ooms(&engine, &mut metrics);
                 if now + cfg.tick_ms <= horizon {
@@ -227,6 +272,7 @@ pub fn run_sim_observed(
             }
             EventKind::MonitorTick => {
                 core.sample_gauges(now, &engine);
+                let _m = prof.scope(Phase::Monitor);
                 if let Some(new_placement) = policy.maybe_switch(now, &mut monitor, g) {
                     engine.apply_switch(new_placement);
                     ctl.emit(now, || EventBody::PlacementSwitch);
@@ -240,8 +286,11 @@ pub fn run_sim_observed(
                 core.handle_done(
                     pid, now, pipeline, &model, &mut engine, &mut monitor, &mut metrics,
                 );
-                for sp in engine.advance(now, &mut exec, profile) {
-                    events.push(sp.finish_ms, EventKind::PlanDone(sp.plan));
+                {
+                    let _a = prof.scope(Phase::Advance);
+                    for sp in engine.advance(now, &mut exec, profile) {
+                        events.push(sp.finish_ms, EventKind::PlanDone(sp.plan));
+                    }
                 }
                 core.drain_ooms(&engine, &mut metrics);
             }

@@ -16,6 +16,7 @@ use crate::dispatch::{
 };
 use crate::monitor::Monitor;
 use crate::placement::{Orchestrator, Pi, PlacementPlan, Rates};
+use crate::prof::Prof;
 use crate::profiler::Profile;
 use crate::request::Request;
 
@@ -50,6 +51,12 @@ pub trait ServingPolicy {
     fn infeasible(&self, _shape_idx: usize) -> bool {
         false
     }
+
+    /// Hand the policy a self-profiling handle so its inner planners
+    /// (candidate generation, MCKP solves) open nested phase scopes —
+    /// see [`crate::prof`]. Default: ignore (baselines stay unprofiled
+    /// below the executor-level phases).
+    fn attach_prof(&mut self, _prof: &Prof) {}
 }
 
 /// TridentServe: Dynamic Orchestrator + Resource-Aware Dispatcher, with
@@ -80,6 +87,9 @@ pub struct TridentPolicy {
     /// Previous tick's MCKP solution, projected onto still-pending
     /// requests to warm-start the next solve.
     warm: WarmHint,
+    /// Self-profiling handle injected into the per-tick [`Dispatcher`]
+    /// (off by default; set via [`ServingPolicy::attach_prof`]).
+    prof: Prof,
     /// Sliding histogram of recent arrivals for re-planning.
     recent_shapes: VecDeque<usize>,
     recent_cap: usize,
@@ -119,6 +129,7 @@ impl TridentPolicy {
             pending_resize: None,
             cand_cache,
             warm: WarmHint::default(),
+            prof: Prof::off(),
             recent_shapes: VecDeque::new(),
             recent_cap,
             last_backlog: 0,
@@ -414,13 +425,14 @@ impl ServingPolicy for TridentPolicy {
         }
         // Candidate table persists across ticks; the previous tick's
         // solution warm-starts this solve.
-        let disp = Dispatcher::with_cache(
+        let mut disp = Dispatcher::with_cache(
             &self.profile,
             &self.pipeline,
             &self.consts,
             &self.topo,
             &self.cand_cache,
         );
+        disp.prof = self.prof.clone();
         let (mut plans, stats, warm) = disp.dispatch_warm(pending, view, Some(&self.warm));
         self.warm = warm;
         if !self.stage_aware {
@@ -445,6 +457,10 @@ impl ServingPolicy for TridentPolicy {
         let ids: Vec<u64> = plans.iter().map(|p| p.req).collect();
         pending.retain(|r| !ids.contains(&r.id));
         (plans, Some(stats))
+    }
+
+    fn attach_prof(&mut self, prof: &Prof) {
+        self.prof = prof.clone();
     }
 }
 

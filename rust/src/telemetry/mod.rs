@@ -97,6 +97,12 @@ pub mod metric {
     /// as `trident_trace_dropped_total` so a truncated trace is visible in
     /// the metrics snapshot, not just the JSONL trailer.
     pub const TRACE_DROPPED: &str = "trace_dropped";
+    /// Control-plane self-profiling phase totals (histogram, control
+    /// lane): one wall-ms observation per [`crate::prof::Phase`], bridged
+    /// post-run by [`crate::prof::export::bridge_telemetry`] alongside the
+    /// per-phase `prof_<phase>_ms` gauge series. Wall-clock values —
+    /// present only when profiling is on, never in pinned exports.
+    pub const PROF_PHASE_MS: &str = "prof_phase_ms";
 }
 
 /// Instrument key: `(metric name, lane)`. Deterministic `Ord` (str content,

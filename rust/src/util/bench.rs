@@ -93,6 +93,38 @@ pub const RATE_TOLERANCE: f64 = 0.40;
 /// Everything else (counts, ratios, sizes) is deterministic in this
 /// simulator and must match the baseline up to float noise.
 pub const EXACT_TOLERANCE: f64 = 1e-9;
+/// Absolute headroom for fitted scaling exponents (`*_exponent`, the
+/// `scale_sweep` complexity gate): log-log slopes are dimensionless and
+/// already noise-averaged across the sweep grid, so the gate is an absolute
+/// band — a phase whose exponent grows by more than this (e.g. an
+/// O(1)-per-event phase going superlinear) fails; a shrinking exponent is
+/// an improvement and never fails.
+pub const EXPONENT_TOLERANCE: f64 = 0.35;
+
+/// Least-squares slope of `ln(y)` against `ln(x)` — the fitted scaling
+/// exponent the scale-sweep bench records per phase (`<phase>_exponent`).
+/// Non-positive samples are floored at 1 (a phase measured at 0 ns still
+/// fits; `ln(0)` would poison the fit), and a degenerate sweep (fewer than
+/// two distinct x values) fits as 0 (no scaling evidence).
+pub fn fit_loglog_exponent(points: &[(f64, f64)]) -> f64 {
+    let pts: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|(x, _)| *x > 0.0)
+        .map(|&(x, y)| (x.ln(), y.max(1.0).ln()))
+        .collect();
+    if pts.len() < 2 {
+        return 0.0;
+    }
+    let n = pts.len() as f64;
+    let mx = pts.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = pts.iter().map(|p| p.1).sum::<f64>() / n;
+    let sxx: f64 = pts.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum();
+    let sxy: f64 = pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    if sxx <= 0.0 {
+        return 0.0; // all points at one scale
+    }
+    sxy / sxx
+}
 
 /// Which direction a metric regresses in, and how much headroom it gets.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -101,6 +133,9 @@ pub enum MetricKind {
     Time,
     /// Throughput: regression = value shrank beyond the tolerance.
     Rate,
+    /// Fitted complexity exponents: regression = slope grew by more than
+    /// the absolute [`EXPONENT_TOLERANCE`] band.
+    Exponent,
     /// Deterministic outputs: regression = any drift beyond float noise.
     Exact,
 }
@@ -108,6 +143,11 @@ pub enum MetricKind {
 /// Classify a metric by naming convention (the same suffix discipline every
 /// bench in `benches/` already follows).
 pub fn metric_kind(metric: &str) -> MetricKind {
+    // `_exponent` first: it must not fall through to the Exact default
+    // (fitted slopes are real-valued and jitter run to run).
+    if metric.ends_with("_exponent") {
+        return MetricKind::Exponent;
+    }
     let time_suffix = ["_ns", "_us", "_ms", "_s"].iter().any(|s| metric.ends_with(s));
     if time_suffix || metric.contains("latency") {
         MetricKind::Time
@@ -135,6 +175,7 @@ impl BenchDelta {
         let regressed = match kind {
             MetricKind::Time => current > baseline * (1.0 + TIME_TOLERANCE) + 1e-12,
             MetricKind::Rate => current < baseline * (1.0 - RATE_TOLERANCE) - 1e-12,
+            MetricKind::Exponent => current > baseline + EXPONENT_TOLERANCE + 1e-12,
             MetricKind::Exact => {
                 (current - baseline).abs() > baseline.abs().max(1.0) * EXACT_TOLERANCE
             }
@@ -310,6 +351,45 @@ mod tests {
             ("hot", "events", 7.0),
         ]);
         assert!(!compare_benches(&base, &better).unwrap().failed());
+    }
+
+    #[test]
+    fn exponent_metrics_gate_on_absolute_slope_growth() {
+        assert_eq!(metric_kind("mckp_solve_exponent"), MetricKind::Exponent);
+        // `_exponent` wins over the `_s`-ish suffix fallthrough and never
+        // lands in Exact.
+        assert_eq!(metric_kind("free_view_exponent"), MetricKind::Exponent);
+        let base = bench_json(&[("sweep", "free_view_exponent", 1.0)]);
+        // Within the band: slope drift +0.2 < +0.35 passes.
+        let ok = bench_json(&[("sweep", "free_view_exponent", 1.2)]);
+        assert!(!compare_benches(&base, &ok).unwrap().failed());
+        // A linear phase going quadratic fails the gate.
+        let bad = bench_json(&[("sweep", "free_view_exponent", 2.0)]);
+        let rep = compare_benches(&base, &bad).unwrap();
+        assert!(rep.failed());
+        assert_eq!(rep.regressions().len(), 1);
+        assert_eq!(rep.regressions()[0].kind, MetricKind::Exponent);
+        // Improvement (sublinear) never fails.
+        let better = bench_json(&[("sweep", "free_view_exponent", 0.3)]);
+        assert!(!compare_benches(&base, &better).unwrap().failed());
+    }
+
+    #[test]
+    fn loglog_fit_recovers_known_exponents() {
+        // y = 3 x^2 exactly -> slope 2.
+        let quad: Vec<(f64, f64)> =
+            [16.0, 64.0, 256.0].iter().map(|&x: &f64| (x, 3.0 * x * x)).collect();
+        assert!((fit_loglog_exponent(&quad) - 2.0).abs() < 1e-9);
+        // Constant cost -> slope 0.
+        let flat = [(16.0, 5000.0), (64.0, 5000.0), (256.0, 5000.0)];
+        assert!(fit_loglog_exponent(&flat).abs() < 1e-9);
+        // Degenerate inputs fit as 0, never NaN.
+        assert_eq!(fit_loglog_exponent(&[]), 0.0);
+        assert_eq!(fit_loglog_exponent(&[(16.0, 1.0)]), 0.0);
+        assert_eq!(fit_loglog_exponent(&[(16.0, 1.0), (16.0, 9.0)]), 0.0);
+        // Zero-valued samples are floored, not ln(0)-poisoned.
+        let zeros = [(16.0, 0.0), (64.0, 0.0)];
+        assert!(fit_loglog_exponent(&zeros).is_finite());
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Control-plane self-profiling integration pins (ISSUE 9 acceptance):
+//!
+//! * same-seed profiled runs export byte-identical folded stacks and JSON
+//!   summaries (wall channel excluded — the deterministic contract);
+//! * a `Prof::off()` run's obs trace and metrics are byte-identical to an
+//!   uninstrumented run, and a *recording* run perturbs neither (the
+//!   profiler observes the control plane, never steers it);
+//! * the scale-sweep schema carries per-phase fitted `_exponent` metrics
+//!   and `bench-check`'s comparator rejects a synthetic superlinear
+//!   regression;
+//! * scope nesting/reentrancy hold at integration depth.
+
+use tridentserve::config::ClusterSpec;
+use tridentserve::coserve::{
+    run_coserve_profiled, ClusterArbiter, CoServeConfig, PipelineSetup, ResizePolicy,
+};
+use tridentserve::harness::Setup;
+use tridentserve::obs::{export::to_jsonl, TraceConfig, Tracer};
+use tridentserve::prof::export::{phase_totals, to_folded, to_json, Channel};
+use tridentserve::prof::{Phase, Prof};
+use tridentserve::telemetry::Telemetry;
+use tridentserve::util::bench::{compare_benches, fit_loglog_exponent, BenchRecorder};
+use tridentserve::workload::{mixed, DifficultyModel, LoadShape, MixedSpec, WorkloadKind};
+
+const SIM_MS: f64 = 20_000.0;
+
+/// One single-pipeline run through the profiled entry; returns the
+/// metrics JSON (the run's observable output, for perturbation pins).
+fn profiled_run(seed: u64, prof: &Prof, tracer: &Tracer) -> String {
+    let setup = Setup::new("flux", 16);
+    let m = setup.run_scaled_profiled(
+        "trident",
+        WorkloadKind::Medium,
+        SIM_MS,
+        seed,
+        1.0,
+        tracer,
+        &Telemetry::off(),
+        prof,
+    );
+    m.to_json("prof-pin").to_string()
+}
+
+#[test]
+fn same_seed_exports_are_byte_identical() {
+    let mut exports: Vec<(String, String, String)> = Vec::new();
+    for _ in 0..2 {
+        let (prof, sink) = Prof::recording();
+        let _ = profiled_run(7, &prof, &Tracer::off());
+        let sink = sink.borrow();
+        exports.push((
+            to_folded(&sink, Channel::Count),
+            to_folded(&sink, Channel::Logical),
+            to_json(&sink, false),
+        ));
+    }
+    let (a, b) = (&exports[0], &exports[1]);
+    assert!(!a.0.is_empty(), "profiled run recorded no phases");
+    assert_eq!(a.0, b.0, "count folded stacks must be byte-identical across same-seed runs");
+    assert_eq!(a.1, b.1, "logical folded stacks must be byte-identical across same-seed runs");
+    assert_eq!(a.2, b.2, "pinned JSON export must be byte-identical across same-seed runs");
+    // The taxonomy is visible where expected: dispatch nests under tick,
+    // the MCKP solve nests under dispatch.
+    assert!(a.0.contains("tick;dispatch "), "{}", a.0);
+    assert!(
+        a.0.contains("tick;dispatch;mckp_solve ") || a.0.contains("tick;dispatch;mckp_seeded "),
+        "{}",
+        a.0
+    );
+    // The deterministic export must carry no wall-clock channel.
+    assert!(!a.2.contains("wall"), "pinned JSON leaked wall time: {}", a.2);
+}
+
+#[test]
+fn profiling_perturbs_neither_trace_nor_metrics() {
+    // Uninstrumented baseline: the pre-prof entry point.
+    let setup = Setup::new("flux", 16);
+    let (tr0, sink0) = Tracer::ring(&TraceConfig::full());
+    let m0 = setup.run_scaled_traced("trident", WorkloadKind::Medium, SIM_MS, 3, 1.0, &tr0);
+    let base_trace = to_jsonl(&sink0.unwrap().borrow().snapshot());
+    let base_metrics = m0.to_json("prof-pin").to_string();
+
+    // Prof::off() through the profiled entry: same bytes.
+    let (tr1, sink1) = Tracer::ring(&TraceConfig::full());
+    let m_off = profiled_run(3, &Prof::off(), &tr1);
+    assert_eq!(to_jsonl(&sink1.unwrap().borrow().snapshot()), base_trace);
+    assert_eq!(m_off, base_metrics);
+
+    // Recording run: still the same bytes — observation only.
+    let (prof, psink) = Prof::recording();
+    let (tr2, sink2) = Tracer::ring(&TraceConfig::full());
+    let m_on = profiled_run(3, &prof, &tr2);
+    assert_eq!(to_jsonl(&sink2.unwrap().borrow().snapshot()), base_trace);
+    assert_eq!(m_on, base_metrics);
+    assert!(psink.borrow().clock() > 0, "recording run captured nothing");
+}
+
+#[test]
+fn coserve_profiled_covers_arbiter_and_lane_phases_deterministically() {
+    // The coserve_integration churn scenario (flux surge at t=0.5 forces a
+    // re-arbitration), run twice with a recording profiler.
+    let cluster = ClusterSpec::l20(6);
+    let duration_ms = 240_000.0;
+    let mut exports: Vec<(String, String)> = Vec::new();
+    for _ in 0..2 {
+        let sd3 = PipelineSetup::new("sd3", &cluster);
+        let flux = PipelineSetup::new("flux", &cluster);
+        let trace = {
+            let specs = [
+                MixedSpec {
+                    pipeline: &sd3.pipeline,
+                    profile: &sd3.profile,
+                    kind: WorkloadKind::Medium,
+                    rate_scale: 0.12,
+                    load: LoadShape::Step { at: 0.5, before: 1.6, after: 0.3 },
+                    difficulty: DifficultyModel::Uniform,
+                },
+                MixedSpec {
+                    pipeline: &flux.pipeline,
+                    profile: &flux.profile,
+                    kind: WorkloadKind::Medium,
+                    rate_scale: 0.15,
+                    load: LoadShape::Step { at: 0.5, before: 0.3, after: 1.6 },
+                    difficulty: DifficultyModel::Uniform,
+                },
+            ];
+            mixed(&specs, duration_ms, 5)
+        };
+        let setups = vec![sd3, flux];
+        let cfg = CoServeConfig {
+            seed: 5,
+            monitor_ms: 2_000.0,
+            backlog_trigger_per_gpu: 0.1,
+            resize: ResizePolicy::Preempt,
+            ..Default::default()
+        };
+        let mut arb = ClusterArbiter::new(cluster.gpus_per_node);
+        arb.cooldown_ms = 15_000.0;
+        arb.trigger_streak = 1;
+        let (prof, sink) = Prof::recording();
+        let report = run_coserve_profiled(
+            &setups,
+            &cluster,
+            &mut arb,
+            &trace,
+            &cfg,
+            &Tracer::off(),
+            &Telemetry::off(),
+            &prof,
+        );
+        assert!(report.arbitrations >= 1, "scenario must force a re-arbitration");
+        let sink = sink.borrow();
+        exports.push((to_folded(&sink, Channel::Count), to_json(&sink, false)));
+    }
+    assert_eq!(exports[0].0, exports[1].0, "coserve folded stacks must be deterministic");
+    assert_eq!(exports[0].1, exports[1].1, "coserve JSON export must be deterministic");
+    let folded = &exports[0].0;
+    // Arbiter solves are separated from dispatcher solves by ancestry.
+    assert!(folded.contains("arbitrate"), "{folded}");
+    assert!(folded.contains("tick;lane_tick;dispatch "), "{folded}");
+    assert!(
+        folded.contains("arbitrate;mckp_solve ") || folded.contains("arbitrate;mckp_seeded "),
+        "arbiter MCKP must nest under arbitrate: {folded}"
+    );
+    // The applied re-arbitration shows up as handoff (+ checkpoint under
+    // Preempt) accounting.
+    assert!(folded.contains("handoff"), "{folded}");
+}
+
+#[test]
+fn scale_sweep_schema_carries_exponents_and_gate_rejects_superlinear() {
+    // A miniature in-process sweep: two scales, fitted exactly like
+    // `benches/scale_sweep.rs` (same helpers, same naming).
+    let mut sweep = Vec::new();
+    for gpus in [16usize, 32] {
+        let setup = Setup::new("flux", gpus);
+        let (prof, sink) = Prof::recording();
+        let _ = setup.run_scaled_profiled(
+            "trident",
+            WorkloadKind::Medium,
+            10_000.0,
+            0,
+            1.0,
+            &Tracer::off(),
+            &Telemetry::off(),
+            &prof,
+        );
+        sweep.push((gpus / 8, phase_totals(&sink.borrow())));
+    }
+    let mut out = BenchRecorder::new("scale_sweep");
+    for phase in Phase::ALL {
+        let series: Vec<(f64, f64)> = sweep
+            .iter()
+            .filter_map(|(nodes, totals)| {
+                totals
+                    .iter()
+                    .find(|t| t.phase == phase)
+                    .map(|t| (*nodes as f64, t.wall_self_ns as f64))
+            })
+            .collect();
+        if series.len() == sweep.len() {
+            out.record(&format!("{}_exponent", phase.name()), fit_loglog_exponent(&series));
+        }
+    }
+    let baseline = format!("{}\n", out.to_json().to_string());
+    assert!(
+        baseline.contains("_exponent"),
+        "sweep schema must carry per-phase exponents: {baseline}"
+    );
+
+    // Gate semantics through the same comparator `bench-check` runs in CI:
+    // a phase whose fitted exponent jumps by 1.0 (linear gone quadratic)
+    // fails; drift inside the band passes.
+    let rows = |delta: f64| {
+        let mut cur = BenchRecorder::new("scale_sweep");
+        cur.record("free_view_exponent", 1.0 + delta);
+        cur.record("dispatch_exponent", 0.2);
+        format!("{}\n", cur.to_json().to_string())
+    };
+    let base = rows(0.0);
+    let drifted = compare_benches(&base, &rows(0.2)).unwrap();
+    assert!(!drifted.failed(), "{drifted}");
+    let superlinear = compare_benches(&base, &rows(1.0)).unwrap();
+    assert!(superlinear.failed(), "superlinear exponent growth must fail the gate");
+    assert_eq!(superlinear.regressions().len(), 1);
+}
+
+#[test]
+fn scopes_nest_and_survive_out_of_order_drops_at_depth() {
+    let (prof, sink) = Prof::recording();
+    {
+        let _t = prof.scope(Phase::Tick);
+        for _ in 0..3 {
+            let _d = prof.scope(Phase::Dispatch);
+            let _s = prof.scope(Phase::MckpSolve);
+            // Recursive re-entry makes a child node, not a cycle.
+            let _s2 = prof.scope(Phase::MckpSolve);
+        }
+        // Out-of-order drop: the outer guard closes the inner one.
+        let outer = prof.scope(Phase::Advance);
+        let inner = prof.scope(Phase::Handoff);
+        drop(outer);
+        drop(inner); // stale: must be a no-op
+    }
+    let sink = sink.borrow();
+    assert_eq!(sink.open_depth(), 0, "all scopes must be closed");
+    let folded = to_folded(&sink, Channel::Count);
+    assert!(folded.contains("tick;dispatch;mckp_solve;mckp_solve 3"), "{folded}");
+    assert!(folded.contains("tick;advance;handoff 1"), "{folded}");
+    // Every enter is matched by exactly one exit in the logical clock.
+    let entered: u64 = sink.nodes().iter().map(|n| n.count).sum();
+    assert_eq!(sink.clock(), 2 * entered);
+}
