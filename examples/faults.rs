@@ -18,6 +18,12 @@
 //! `<prefix>.prom` + `<prefix>.csv`, default prefix `faults_metrics`).
 //! With both set the demo also prints the inline SLO burn-rate diagnosis
 //! of the reactive run (computed post-run from the captured artifacts).
+//! FAULTS_DOMAINS (unset/`0` = off) switches churn to the correlated
+//! regime (whole two-node failure domains drop at once) and hardens the
+//! reactive run: one standby spare node, checkpoint-every-10-steps, and
+//! the armed graceful-degradation ladder. The demo then also asserts the
+//! chaos-gate contract: every request accounted (completed, shed, or
+//! deferred-then-finished) and the ladder back at Normal by the drain.
 
 use tridentserve::config::ClusterSpec;
 use tridentserve::coserve::{
@@ -28,15 +34,16 @@ use tridentserve::diagnose::{diagnose, SloPolicy};
 use tridentserve::faults::ChurnGen;
 use tridentserve::obs::export::{to_chrome_trace, to_jsonl_with_dropped};
 use tridentserve::obs::report::BreakdownReport;
-use tridentserve::obs::{RingSink, TraceConfig, Tracer};
+use tridentserve::obs::{EventBody, RingSink, TraceConfig, Tracer};
 use tridentserve::telemetry::export::{to_csv, to_prometheus};
 use tridentserve::telemetry::{metric, Registry, Telemetry, CONTROL_LANE};
 use tridentserve::workload::{mixed, DifficultyModel, LoadShape, MixedSpec, MixedTrace, WorkloadKind};
 
-fn arbiter(cluster: &ClusterSpec) -> ClusterArbiter {
+fn arbiter(cluster: &ClusterSpec, standby: usize) -> ClusterArbiter {
     let mut a = ClusterArbiter::new(cluster.gpus_per_node);
     a.cooldown_ms = 30_000.0;
     a.trigger_streak = 1;
+    a.standby_nodes = standby;
     a
 }
 
@@ -46,10 +53,11 @@ fn run_policy(
     trace: &MixedTrace,
     cfg: &CoServeConfig,
     plan: &FaultPlan,
+    standby: usize,
     tracer: &Tracer,
     tele: &Telemetry,
 ) -> CoServeReport {
-    let mut arb = arbiter(cluster);
+    let mut arb = arbiter(cluster, standby);
     run_coserve_faulty_observed(setups, cluster, &mut arb, trace, cfg, plan, tracer, tele)
 }
 
@@ -103,6 +111,9 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(0);
+    let domains = std::env::var("FAULTS_DOMAINS")
+        .map(|v| !v.is_empty() && v != "0" && v != "false")
+        .unwrap_or(false);
     let duration_ms = minutes * 60_000.0;
 
     let cluster = ClusterSpec::l20(8); // 64 shared GPUs
@@ -131,21 +142,26 @@ fn main() {
     let cfg = CoServeConfig { seed, monitor_ms: 2_500.0, ..Default::default() };
 
     // Mixed churn: half the failures are announced spot reclaims (20s
-    // notice), half hard NodeDowns; nodes return after ~1.5 min.
+    // notice), half hard NodeDowns; nodes return after ~1.5 min. With
+    // FAULTS_DOMAINS set, a second Poisson process drops whole two-node
+    // failure domains (rack/switch losses) on top.
     let churn = ChurnGen {
         mtbf_ms: 100_000.0,
         mean_downtime_ms: 90_000.0,
         spot_fraction: 0.5,
         notice_ms: 20_000.0,
         min_alive: setups.len().max(3),
+        domain_size: if domains { 2 } else { 0 },
+        domain_mtbf_ms: 150_000.0,
     }
     .generate(cluster.nodes, duration_ms, seed);
     println!(
         "=== faults: sd3+flux on {} GPUs, {} churn events over {minutes:.0} min \
-         ({} reqs, seed {seed}) ===",
+         ({} reqs, seed {seed}{}) ===",
         cluster.total_gpus(),
         churn.events.len(),
         trace.requests.len(),
+        if domains { ", correlated domains + hardened kit" } else { "" },
     );
     for e in &churn.events {
         println!("  t={:>6.1}s node {:>2} {}", e.t_ms / 1000.0, e.node, e.kind.label());
@@ -153,18 +169,28 @@ fn main() {
     println!();
 
     let horizon = duration_ms * cfg.drain_factor;
-    let mut baseline_arb = arbiter(&cluster);
+    let mut baseline_arb = arbiter(&cluster, 0);
     let quiet = run_coserve(&setups, &cluster, &mut baseline_arb, &trace, &cfg);
     // The reactive run carries the (optional) tracer: it exercises the full
     // detect → kill → recover path, so its breakdown shows fault blackout.
+    // In domains mode it also carries the hardened kit (standby spare,
+    // periodic checkpoints, degrade ladder) — the other policies stay
+    // reactive-baseline so the table shows what hardening buys.
     let (tracer, sink, trace_path) = trace_from_env();
     let (tele, reg, metrics_prefix) = metrics_from_env();
+    let reactive_plan = if domains {
+        FaultPlan::hardened(churn.clone(), RecoveryPolicy::Reactive)
+    } else {
+        FaultPlan::new(churn.clone(), RecoveryPolicy::Reactive)
+    };
+    let standby = if domains { 1 } else { 0 };
     let proactive = run_policy(
         &setups,
         &cluster,
         &trace,
         &cfg,
         &FaultPlan::new(churn.clone(), RecoveryPolicy::Proactive),
+        0,
         &Tracer::off(),
         &Telemetry::off(),
     );
@@ -173,7 +199,8 @@ fn main() {
         &cluster,
         &trace,
         &cfg,
-        &FaultPlan::new(churn.clone(), RecoveryPolicy::Reactive),
+        &reactive_plan,
+        standby,
         &tracer,
         &tele,
     );
@@ -183,6 +210,7 @@ fn main() {
         &trace,
         &cfg,
         &FaultPlan::new(churn.clone(), RecoveryPolicy::ColdRestart),
+        0,
         &Tracer::off(),
         &Telemetry::off(),
     );
@@ -257,8 +285,35 @@ fn main() {
 
     for (name, r) in [("proactive", &proactive), ("reactive", &reactive), ("cold", &cold)] {
         assert_eq!(r.vram_violations, 0, "{name}: VRAM ledger violated under churn");
+        // Conservation: every arrival has exactly one completion record —
+        // finished, expired, or (hardened mode) explicitly shed. Nothing
+        // silently dropped.
         let total: usize = r.lanes.iter().map(|l| l.metrics.completions.len()).sum();
         assert_eq!(total, trace.requests.len(), "{name}: requests lost or duplicated");
+    }
+    if domains {
+        println!(
+            "\nhardened ledger: shed={} deferred={} degrade_transitions={} periodic_ckpts={}",
+            reactive.faults.shed,
+            reactive.faults.deferred,
+            reactive.faults.degrade_transitions,
+            reactive.faults.periodic_ckpts,
+        );
+        // Chaos-gate contract: once the churn subsides and the queue
+        // drains, the ladder must have stepped all the way back down.
+        if let Some((events, _)) = &captured {
+            let last = events
+                .iter()
+                .filter_map(|e| match &e.body {
+                    EventBody::Degrade { to, .. } => Some(*to),
+                    _ => None,
+                })
+                .last();
+            assert!(
+                last.is_none() || last == Some("normal"),
+                "degrade ladder did not return to Normal: finished at {last:?}"
+            );
+        }
     }
     println!("\nfaults OK");
 }

@@ -17,6 +17,7 @@ use crate::coserve::exec::{
     PipelineSetup,
 };
 use crate::coserve::LaneSignal;
+use crate::faults::DegradeLevel;
 use crate::metrics::Metrics;
 use crate::obs::{EventBody, Tracer, CONTROL_LANE};
 use crate::telemetry::{metric, Telemetry};
@@ -316,6 +317,24 @@ impl LaneHook for CascadeHook {
             return Some(HEAVY_LANE);
         }
         None
+    }
+
+    fn degrade_bias(&mut self, level: DegradeLevel, now_ms: f64) {
+        // TurboBias and above: halve the escalation threshold toward the
+        // controller's floor, so degraded capacity finishes requests on the
+        // cheap variant instead of buying quality escalations. On the step
+        // back to Normal nothing is forced — the quality controller walks
+        // the threshold back up at its own hysteresis-guarded pace as the
+        // verdict window re-fills.
+        if level >= DegradeLevel::TurboBias {
+            let from = self.router.threshold;
+            let floor = self.controller.as_ref().map_or(0.02, |c| c.min_threshold);
+            let to = (from * 0.5).max(floor);
+            if to < from {
+                self.router.threshold = to;
+                self.tracer.emit(now_ms, || EventBody::ThresholdMove { from, to });
+            }
+        }
     }
 }
 

@@ -117,6 +117,19 @@ pub struct ClusterArbiter {
     /// Consecutive triggered monitor ticks required before re-arbitrating
     /// (transient bursts clear on their own).
     pub trigger_streak: usize,
+    /// Hot-spare reservation: this many nodes are withheld from the MCKP
+    /// capacity and left *unowned* (warm weights, no lane). Because lane
+    /// rebuild targets are computed from the owned allocation, the first
+    /// node loss promotes a spare instead of shrinking a healthy lane —
+    /// near-zero first-failure blackout at the price of idle capacity.
+    /// 0 (the default) reproduces the unreserved allocator exactly.
+    /// Clipped so every lane keeps its floor.
+    pub standby_nodes: usize,
+    /// Opportunity-cost price of parking one more node as a spare, in MCKP
+    /// profit units. During leftover distribution, a node whose best
+    /// marginal lane value falls below this credit is parked instead of
+    /// assigned (active only when `standby_nodes > 0`).
+    pub spare_credit: f64,
     streak: usize,
     last_ms: f64,
     /// Previous solve's allocation plus the `(n, min_nodes, max_nodes)`
@@ -138,6 +151,8 @@ impl ClusterArbiter {
             min_nodes: 1,
             cooldown_ms: 60_000.0,
             trigger_streak: 2,
+            standby_nodes: 0,
+            spare_credit: 1.0,
             streak: 0,
             last_ms: f64::NEG_INFINITY,
             last_solution: None,
@@ -158,14 +173,23 @@ impl ClusterArbiter {
     /// Solve the cluster allocation problem for the given signals,
     /// warm-started from the previous solve's allocation when the item
     /// grid is unchanged (`&mut self` records this solve for the next).
+    ///
+    /// With `standby_nodes > 0` the returned allocation sums to *less* than
+    /// `total_nodes`: the difference is the hot-spare pool (unowned nodes
+    /// the executor's recovery path promotes on a loss). With the default
+    /// of 0 it covers the cluster exactly.
     pub fn solve(&mut self, signals: &[LaneSignal], total_nodes: usize) -> Vec<usize> {
         let n = signals.len();
         let min_nodes = self.min_nodes.max(1);
         assert!(n > 0, "no lanes");
         assert!(total_nodes >= n * min_nodes, "cluster too small");
+        // Withhold the spare reservation from the allocatable capacity,
+        // clipped so every lane keeps its floor.
+        let spares = self.standby_nodes.min(total_nodes - n * min_nodes);
+        let alloc_total = total_nodes - spares;
         // One group per pipeline; one item per candidate node count. Leave
         // at least the floor for every other lane.
-        let max_nodes = total_nodes - (n - 1) * min_nodes;
+        let max_nodes = alloc_total - (n - 1) * min_nodes;
         let mut items = Vec::new();
         for (p, sig) in signals.iter().enumerate() {
             for nodes in min_nodes..=max_nodes {
@@ -203,7 +227,7 @@ impl ClusterArbiter {
         };
         let problem = Mckp {
             n_groups: n,
-            capacities: vec![total_nodes as u64],
+            capacities: vec![alloc_total as u64],
             items: items.clone(),
         };
         let sol = {
@@ -218,8 +242,11 @@ impl ClusterArbiter {
             .map(|p| sol.chosen[p].map(|i| items[i].weight as usize).unwrap_or(0))
             .collect();
         enforce_floor(&mut out, min_nodes);
-        // Distribute any leftover nodes by marginal served-rate value.
-        let mut left = total_nodes.saturating_sub(out.iter().sum::<usize>());
+        // Distribute any leftover allocatable nodes by marginal served-rate
+        // value — unless spares are priced in and the best marginal value
+        // falls below the spare credit, in which case the remainder parks
+        // in the standby pool instead.
+        let mut left = alloc_total.saturating_sub(out.iter().sum::<usize>());
         while left > 0 {
             let mut best = 0usize;
             let mut best_v = f64::NEG_INFINITY;
@@ -230,10 +257,17 @@ impl ClusterArbiter {
                     best = p;
                 }
             }
+            if spares > 0 && best_v < self.spare_credit {
+                break;
+            }
             out[best] += 1;
             left -= 1;
         }
-        debug_assert_eq!(out.iter().sum::<usize>(), total_nodes);
+        debug_assert!(out.iter().sum::<usize>() <= total_nodes);
+        debug_assert!(out.iter().all(|&x| x >= min_nodes));
+        if spares == 0 {
+            debug_assert_eq!(out.iter().sum::<usize>(), total_nodes);
+        }
         self.last_solution = Some((n, min_nodes, max_nodes, out.clone()));
         out
     }
@@ -407,6 +441,36 @@ mod tests {
         assert!(arb.rearbitrate(7000.0, &loud, &new.clone().unwrap(), 16).is_none());
         // Quiet tick resets the streak.
         assert!(arb.rearbitrate(60_000.0, &quiet, &new.unwrap(), 16).is_none());
+    }
+
+    #[test]
+    fn standby_reservation_withholds_spares_but_keeps_floors() {
+        let mut arb = ClusterArbiter::new(8);
+        arb.standby_nodes = 2;
+        let out = arb.solve(&[sig(10.0, 0.2), sig(1.0, 0.02)], 16);
+        assert_eq!(out.iter().sum::<usize>(), 14, "{out:?}");
+        assert!(out.iter().all(|&x| x >= 1));
+        // The reservation clips rather than starving a lane below its floor.
+        let tight = arb.solve(&[sig(10.0, 0.2), sig(1.0, 0.02)], 3);
+        assert!(tight.iter().all(|&x| x >= 1), "{tight:?}");
+        assert!(tight.iter().sum::<usize>() >= 2, "{tight:?}");
+        // Default (0 spares) still covers the cluster exactly.
+        let mut plain = ClusterArbiter::new(8);
+        let full = plain.solve(&[sig(10.0, 0.2), sig(1.0, 0.02)], 16);
+        assert_eq!(full.iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn spare_credit_parks_low_value_leftovers() {
+        // Both lanes fully satisfied by their floor: every marginal node
+        // earns only the tiny headroom term, far below the spare credit,
+        // so leftovers park as spares instead of padding idle lanes.
+        let mut arb = ClusterArbiter::new(8);
+        arb.standby_nodes = 1;
+        arb.spare_credit = 1.0;
+        let out = arb.solve(&[sig(0.01, 10.0), sig(0.01, 10.0)], 16);
+        assert!(out.iter().all(|&x| x >= 1), "{out:?}");
+        assert!(out.iter().sum::<usize>() <= 15, "{out:?}");
     }
 
     #[test]

@@ -28,10 +28,14 @@ use crate::config::{ClusterSpec, PipelineSpec, SolverConstants, Stage};
 use crate::coserve::arbiter::{ArbiterPolicy, LaneSignal};
 use crate::dispatch::{ClusterView, RequestPlans};
 use crate::engine::{Engine, PlanId, PlanState};
-use crate::faults::{ChurnKind, FailureDetector, FaultPlan, RecoveryPolicy};
+use crate::faults::{
+    ChurnKind, DegradeController, DegradeLevel, FailureDetector, FaultPlan, RecoveryPolicy,
+};
 use crate::lane::{EventQueue, LaneCore, Progress};
 use crate::metrics::{FaultStats, Metrics, MigrationStats};
-use crate::migrate::{plan_diffuse_cut, DiffuseCut, ResizePolicy, ResumeSpec, StageCheckpoint};
+use crate::migrate::{
+    banked_steps, plan_diffuse_cut, DiffuseCut, ResizePolicy, ResumeSpec, StageCheckpoint,
+};
 use crate::obs::{EventBody, Tracer, CONTROL_LANE};
 use crate::util::json::Json;
 use crate::monitor::Monitor;
@@ -108,6 +112,13 @@ pub trait LaneHook {
     fn route_arrival(&mut self, _r: &Request, _now_ms: f64) -> Option<usize> {
         None
     }
+
+    /// The graceful-degradation ladder moved to `level`
+    /// ([`crate::faults::DegradeController`]): actuate any lane-level bias
+    /// for the new rung. TurboBias is the cascade's cue to keep more
+    /// traffic on the cheap variant. Default no-op, so plain co-serving
+    /// pays nothing.
+    fn degrade_bias(&mut self, _level: DegradeLevel, _now_ms: f64) {}
 }
 
 /// The no-op hook plain co-serving runs with.
@@ -372,6 +383,20 @@ struct Lane {
     /// Dispatch gate: no dispatching before this time (cold-restart weight
     /// reload).
     gate_until_ms: f64,
+    /// Periodic mid-Diffuse checkpoint cadence
+    /// ([`FaultPlan::ckpt_every_steps`]): 0 disables; k > 0 means every
+    /// k-th denoising-step boundary writes a durable latent, so a hard
+    /// kill re-executes only the un-banked tail.
+    ckpt_every: u32,
+    /// Steps banked by periodic checkpoints per in-flight request
+    /// (absolute step space; max-merged into the recovery capture).
+    periodic_banked: BTreeMap<RequestId, u32>,
+    /// Per-GPU soft-suspect mask (heartbeat staleness past the soft
+    /// threshold, before full detection): dispatch treats these GPUs as
+    /// busy forever, so work re-queues instead of blackholing on a node
+    /// that is probably gone. Nothing is killed; the mask clears when
+    /// heartbeats resume.
+    soft_suspect: Vec<bool>,
 }
 
 fn partition_cluster(template: &ClusterSpec, nodes: usize) -> ClusterSpec {
@@ -423,6 +448,9 @@ impl Lane {
             cold_restart: false,
             fault_hit: BTreeSet::new(),
             gate_until_ms: 0.0,
+            ckpt_every: 0,
+            periodic_banked: BTreeMap::new(),
+            soft_suspect: vec![false; nodes * template.gpus_per_node],
         }
     }
 
@@ -499,6 +527,7 @@ impl Lane {
         self.generation += 1;
         self.draining = false;
         self.dead_gpus = vec![false; nodes * self.template.gpus_per_node];
+        self.soft_suspect = vec![false; nodes * self.template.gpus_per_node];
         self.must_rebuild = false;
         self.fault_forced = false;
         self.cold_restart = false;
@@ -579,10 +608,30 @@ impl Lane {
             }
             let (plans, stats) = {
                 let _d = self.prof.scope(Phase::Dispatch);
+                // Churn-aware admission: soft-suspect GPUs read as busy
+                // forever, so the solver routes around them and their
+                // would-be work stays queued instead of blackholing.
+                let masked = self.soft_suspect.iter().any(|&s| s);
+                let mut masked_idle: Vec<bool> = Vec::new();
+                let mut masked_free: Vec<f64> = Vec::new();
+                if masked {
+                    masked_idle = self.engine.idle().to_vec();
+                    masked_free = self.engine.free_view().to_vec();
+                    for (g, &s) in self.soft_suspect.iter().enumerate() {
+                        if s && g < masked_idle.len() {
+                            masked_idle[g] = false;
+                            masked_free[g] = f64::INFINITY;
+                        }
+                    }
+                }
                 let view = ClusterView {
                     placement: &self.engine.placement,
-                    idle: self.engine.idle(),
-                    free_at_ms: self.engine.free_view(),
+                    idle: if masked { masked_idle.as_slice() } else { self.engine.idle() },
+                    free_at_ms: if masked {
+                        masked_free.as_slice()
+                    } else {
+                        self.engine.free_view()
+                    },
                     now_ms,
                 };
                 self.policy.dispatch(&mut self.core.pending, &view)
@@ -789,6 +838,14 @@ impl Lane {
                 // A resumed chain already past Encode carries no E plan.
                 encode_done = true;
             }
+            // Max-merge the periodic bank: a hard kill preserved the last
+            // k-boundary latent even though no orderly cut ever ran.
+            if let Some(&banked) = self.periodic_banked.get(&id) {
+                if banked > 0 {
+                    steps_done = steps_done.max(banked);
+                    encode_done = true;
+                }
+            }
             let shape = &self.pipeline.shapes[pr.shape_idx];
             let ckpt_gb = if steps_done > 0 {
                 self.model.latent_ckpt_gb(shape)
@@ -819,6 +876,7 @@ impl Lane {
         }
         self.cuts.clear();
         self.fault_hit.clear();
+        self.periodic_banked.clear();
         out
     }
 
@@ -901,6 +959,21 @@ impl Lane {
         }
     }
 
+    /// Mark one lane-local node's GPUs soft-suspect (dispatch mask only —
+    /// nothing is killed; the mask is recomputed every tick from heartbeat
+    /// staleness, so it clears on its own when beats resume).
+    fn soft_suspect_node(&mut self, local_node: usize) {
+        let gpn = self.template.gpus_per_node;
+        if self.soft_suspect.len() != self.gpus() {
+            self.soft_suspect = vec![false; self.gpus()];
+        }
+        let lo = local_node * gpn;
+        let hi = ((local_node + 1) * gpn).min(self.soft_suspect.len());
+        for g in lo..hi {
+            self.soft_suspect[g] = true;
+        }
+    }
+
     /// Kill every outstanding plan touching a dead GPU: queued plans are
     /// withdrawn (nothing executed), running plans are hard-stopped — their
     /// un-checkpointed Diffuse progress is lost (accounted as re-executed
@@ -923,8 +996,36 @@ impl Lane {
                     let prepare = self.engine.plans[pid].prepare_ms;
                     let exec = self.engine.plans[pid].exec_ms;
                     if stage == Stage::Diffuse {
-                        fstats.lost_diffuse_ms +=
-                            (now_ms - started - prepare).clamp(0.0, exec);
+                        let lost = (now_ms - started - prepare).clamp(0.0, exec);
+                        let mut durable = 0.0;
+                        // Periodic checkpointing bounds the re-execution to
+                        // the un-banked tail: every k-th step boundary that
+                        // completed before the kill wrote a durable latent.
+                        if self.ckpt_every > 0 {
+                            let cut = self.plan_cut_for(pid, now_ms);
+                            let plan_steps =
+                                self.engine.plans[pid].plan_steps(self.pipeline.steps);
+                            let done = if cut.decode_tail {
+                                plan_steps
+                            } else {
+                                // steps_done counts through the *upcoming*
+                                // boundary; only strictly-finished steps
+                                // can have been checkpointed.
+                                cut.steps_done.saturating_sub(1).min(plan_steps)
+                            };
+                            let banked = banked_steps(done, self.ckpt_every);
+                            if banked > 0 {
+                                let prior =
+                                    self.pipeline.steps.max(1).saturating_sub(plan_steps);
+                                let entry = self.periodic_banked.entry(req).or_insert(0);
+                                if prior + banked > *entry {
+                                    *entry = prior + banked;
+                                    fstats.periodic_ckpts += 1;
+                                }
+                                durable = lost * banked as f64 / done.max(1) as f64;
+                            }
+                        }
+                        fstats.lost_diffuse_ms += (lost - durable).max(0.0);
                     }
                     self.core.tracer.emit_req(now_ms, req, || EventBody::Kill {
                         req,
@@ -1021,6 +1122,7 @@ impl Lane {
         }
         self.cuts.clear();
         self.fault_hit.clear();
+        self.periodic_banked.clear();
     }
 
     /// The cold-bootstrap price a restarted lane pays before serving: every
@@ -1201,7 +1303,13 @@ fn start_fault_recovery(
         arbiter.initial(&signals, total)
     };
     assert_eq!(target.len(), n, "arbiter returned wrong lane count");
-    assert_eq!(target.iter().sum::<usize>(), total, "arbiter must cover the degraded pool");
+    // `<=` (not `==`): a standby-reserving arbiter withholds hot spares
+    // from the allocation on purpose — the unowned remainder is the spare
+    // pool the next loss promotes.
+    assert!(
+        target.iter().sum::<usize>() <= total,
+        "arbiter over-allocated the degraded pool"
+    );
     assert!(target.iter().all(|&x| x >= 1), "every lane needs >= 1 node");
     ctl.emit(now, || EventBody::Recovery {
         policy: match fs.recovery {
@@ -1355,6 +1463,10 @@ fn try_swap(
                         fs.stats.blackout_ms.push(black);
                         ctl_tele.add(metric::FAULT_BLACKOUTS, 1);
                         ctl_tele.observe(metric::FAULT_BLACKOUT_MS, black);
+                        ctl.emit(now, || EventBody::FaultBlackout {
+                            node,
+                            blackout_ms: black,
+                        });
                         false
                     } else {
                         true
@@ -1698,7 +1810,9 @@ fn run_coserve_engine(
         arbiter.initial(&init_signals, total_nodes)
     };
     assert_eq!(alloc.len(), n, "arbiter returned wrong lane count");
-    assert_eq!(alloc.iter().sum::<usize>(), total_nodes, "arbiter must cover the cluster");
+    // `<=`: nodes withheld by a standby-reserving arbiter stay unowned —
+    // they are the hot-spare pool, not a coverage bug.
+    assert!(alloc.iter().sum::<usize>() <= total_nodes, "arbiter over-allocated the cluster");
     assert!(alloc.iter().all(|&x| x >= 1), "every lane needs >= 1 node");
 
     let mut lanes: Vec<Lane> = setups
@@ -1769,6 +1883,25 @@ fn run_coserve_engine(
     // Per-lane watermark into metrics.completions for the hook pump.
     let mut hook_marks = vec![0usize; n];
 
+    // Robustness kit (armed per FaultPlan knobs; all inert by default):
+    // periodic mid-Diffuse checkpointing, the soft-suspect admission mask,
+    // and the graceful-degradation ladder with its own seeded stream for
+    // the ArrivalCut coin flips.
+    if let Some(f) = faults {
+        if let Some(k) = f.ckpt_every_steps {
+            for lane in lanes.iter_mut() {
+                lane.ckpt_every = k.max(1);
+            }
+        }
+    }
+    let soft_suspect_ms = faults
+        .filter(|f| f.soft_suspect_frac < 1.0)
+        .map(|f| f.soft_suspect_frac.max(0.0) * f.suspect_after_ms);
+    let mut degrade: Option<DegradeController> =
+        faults.and_then(|f| f.degrade.enabled.then(|| DegradeController::new(f.degrade)));
+    let mut degrade_marks = vec![0usize; n];
+    let mut degrade_rng = Rng::new(cfg.seed ^ 0xDE64_AD0E);
+
     while let Some((now, kind)) = events.pop() {
         if now > horizon {
             break;
@@ -1776,19 +1909,87 @@ fn run_coserve_engine(
         match kind {
             EventKind::Arrival(i) => {
                 let mut r = trace.requests[i];
-                let mut p = r.pipeline_id;
-                // Arrival routing (cascade): the hook may redirect a trace
-                // request to a different lane before any lane sees it.
-                if let Some(q) = hook.route_arrival(&r, now) {
-                    assert!(q < n, "hook routed to unknown lane {q}");
-                    p = q;
-                    r.pipeline_id = q;
+                // Degradation-ladder admission control. Shed drops the
+                // arrival with an *accounted* completion (conservation:
+                // dispatched + shed + in-flight == arrived); ArrivalCut
+                // defers a seeded fraction when the deferral cannot blow
+                // the deadline or fall off the horizon.
+                let level = degrade.as_ref().map_or(DegradeLevel::Normal, |d| d.level());
+                let mut admit = true;
+                if level.sheds() {
+                    let p = r.pipeline_id.min(n - 1);
+                    lanes[p].core.tracer.emit_req(now, r.id, || EventBody::Shed { req: r.id });
+                    lanes[p].core.tele.add(metric::REQUESTS_SHED, 1);
+                    lanes[p].metrics.record(Completion {
+                        id: r.id,
+                        shape_idx: r.shape_idx,
+                        arrival_ms: r.arrival_ms,
+                        deadline_ms: r.deadline_ms,
+                        finish_ms: now,
+                        outcome: Outcome::Shed,
+                        vr_type: None,
+                        stage_ms: [0.0; 3],
+                    });
+                    if let Some(fs) = fstate.as_mut() {
+                        fs.stats.shed += 1;
+                    }
+                    admit = false;
+                } else if level.defers_arrivals() {
+                    let dcfg = degrade.as_ref().expect("defer implies an armed ladder").cfg;
+                    let resume = now + dcfg.defer_ms;
+                    if resume < r.deadline_ms
+                        && resume <= horizon
+                        && degrade_rng.f64() < dcfg.cut_fraction
+                    {
+                        events.push(resume, EventKind::Arrival(i));
+                        ctl_tele.add(metric::REQUESTS_DEFERRED, 1);
+                        if let Some(fs) = fstate.as_mut() {
+                            fs.stats.deferred += 1;
+                        }
+                        admit = false;
+                    }
                 }
-                debug_assert!(p < n, "request tagged for unknown pipeline");
-                lanes[p].on_arrival(r, now);
+                if admit {
+                    let mut p = r.pipeline_id;
+                    // Arrival routing (cascade): the hook may redirect a
+                    // trace request to a different lane before any lane
+                    // sees the request.
+                    if let Some(q) = hook.route_arrival(&r, now) {
+                        assert!(q < n, "hook routed to unknown lane {q}");
+                        p = q;
+                        r.pipeline_id = q;
+                    }
+                    debug_assert!(p < n, "request tagged for unknown pipeline");
+                    lanes[p].on_arrival(r, now);
+                }
             }
             EventKind::Tick => {
                 let _tick = prof.scope(Phase::Tick);
+                // Churn-aware soft admission: recompute the per-lane
+                // suspect mask from heartbeat staleness before dispatch.
+                // A node quiet past the soft threshold (but not yet
+                // declared failed) is masked, so its would-be work
+                // re-queues instead of blackholing until detection.
+                if let (Some(soft_ms), Some(fs)) = (soft_suspect_ms, fstate.as_ref()) {
+                    for lane in lanes.iter_mut() {
+                        for s in lane.soft_suspect.iter_mut() {
+                            *s = false;
+                        }
+                    }
+                    for node in 0..total_nodes {
+                        if fs.handled.contains(&node) {
+                            continue;
+                        }
+                        let stale = fs.detector.last_beat(node).map_or(0.0, |b| now - b);
+                        if stale >= soft_ms {
+                            if let Some(p) = fs.owner_of[node] {
+                                let local =
+                                    (0..node).filter(|&m| fs.owner_of[m] == Some(p)).count();
+                                lanes[p].soft_suspect_node(local);
+                            }
+                        }
+                    }
+                }
                 for (p, lane) in lanes.iter_mut().enumerate() {
                     for (plan, finish) in lane.tick(now, cfg.jitter) {
                         events.push(
@@ -1818,6 +2019,21 @@ fn run_coserve_engine(
                 // branch per lane when telemetry is off).
                 for lane in lanes.iter() {
                     lane.core.sample_gauges(now, &lane.engine);
+                }
+                // The degradation ladder steps at the monitor cadence,
+                // driven by the burn rate of the admission window; every
+                // transition is a traced control-plane decision and an
+                // actuation cue for the hook (TurboBias).
+                if let Some(dc) = degrade.as_mut() {
+                    if let Some((from, to)) = dc.tick() {
+                        ctl.emit(now, || EventBody::Degrade {
+                            from: from.label(),
+                            to: to.label(),
+                        });
+                        ctl_tele.add(metric::DEGRADE_TRANSITIONS, 1);
+                        hook.degrade_bias(to, now);
+                    }
+                    ctl_tele.sample(now, metric::DEGRADE_LEVEL, dc.level().severity() as f64);
                 }
                 let _mon = prof.scope(Phase::Monitor);
                 // Heartbeats + staleness detection (faults runs): every
@@ -1879,7 +2095,7 @@ fn run_coserve_engine(
                     };
                     if let Some(target) = rearb {
                         assert_eq!(target.len(), n);
-                        assert_eq!(target.iter().sum::<usize>(), allocatable);
+                        assert!(target.iter().sum::<usize>() <= allocatable);
                         assert!(target.iter().all(|&x| x >= 1));
                         if target != alloc {
                             ctl.emit(now, || EventBody::Repartition {
@@ -1983,6 +2199,15 @@ fn run_coserve_engine(
                         // plane learns of it when heartbeats go stale.
                         apply_node_loss(ev.node, now, &mut lanes, fs, &ctl);
                     }
+                    ChurnKind::DomainDown { width } => {
+                        // Correlated loss: the whole failure domain (one
+                        // power feed, one ToR switch) goes dark at once.
+                        // Each member is an ordinary unannounced loss; the
+                        // correlation is that they land at the same t.
+                        for node in ev.node..(ev.node + width).min(total_nodes) {
+                            apply_node_loss(node, now, &mut lanes, fs, &ctl);
+                        }
+                    }
                     ChurnKind::SpotReclaim { notice_ms } => {
                         fs.stats.reclaim_notices += 1;
                         if fs.recovery == RecoveryPolicy::Proactive
@@ -2049,6 +2274,20 @@ fn run_coserve_engine(
         // Let the hook see every completion recorded by this event (and
         // inject chained requests at the same timestamp).
         pump_hook(&mut lanes, &mut hook_marks, hook, now);
+        // Feed the degradation ladder every outcome recorded by this event:
+        // on-time completions and accounted sheds are acknowledged (a shed
+        // is the ladder doing its job, and counting it keeps the evidence
+        // stream alive at the Shed rung so the ladder can probe back down);
+        // everything else burns the error budget.
+        if let Some(dc) = degrade.as_mut() {
+            for (p, mark) in degrade_marks.iter_mut().enumerate() {
+                while *mark < lanes[p].metrics.completions.len() {
+                    let c = &lanes[p].metrics.completions[*mark];
+                    *mark += 1;
+                    dc.observe(c.on_time() || c.outcome == Outcome::Shed);
+                }
+            }
+        }
     }
 
     // Close out: everything unfinished is an SLO miss; final VRAM audit on
@@ -2074,11 +2313,15 @@ fn run_coserve_engine(
     // the end of the run (never silently dropped from the accounting).
     let fault_stats = match fstate {
         Some(mut fs) => {
-            for &(_, _, t_loss) in &fs.open {
+            for &(node, _, t_loss) in &fs.open {
                 let black = (horizon - t_loss).max(0.0);
                 fs.stats.blackout_ms.push(black);
                 ctl_tele.add(metric::FAULT_BLACKOUTS, 1);
                 ctl_tele.observe(metric::FAULT_BLACKOUT_MS, black);
+                ctl.emit(horizon, || EventBody::FaultBlackout { node, blackout_ms: black });
+            }
+            if let Some(dc) = degrade.as_ref() {
+                fs.stats.degrade_transitions = dc.transitions();
             }
             fs.stats
         }

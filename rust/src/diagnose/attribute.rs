@@ -88,6 +88,13 @@ pub struct CauseFinding {
     pub to_ms: f64,
     /// Largest contributors, biggest first (≤ [`MAX_EVIDENCE_REQUESTS`]).
     pub requests: Vec<RequestId>,
+    /// For [`Cause::Blackout`] only: `[p50, p95, max]` of the per-failure
+    /// blackout distribution over the evidence window, read from the
+    /// trace's `fault_blackout` events through a [`LogHistogram`] (the same
+    /// sketch telemetry exports), so live and replayed diagnoses cite
+    /// byte-identical quantiles. `None` for every other cause and on
+    /// windows without closed fault blackouts.
+    pub blackout_quantiles: Option<[f64; 3]>,
 }
 
 impl CauseFinding {
@@ -102,6 +109,12 @@ impl CauseFinding {
             "requests".into(),
             Json::Arr(self.requests.iter().map(|&r| Json::Num(r as f64)).collect()),
         );
+        if let Some(q) = self.blackout_quantiles {
+            o.insert(
+                "blackout_quantiles".into(),
+                Json::Arr(q.iter().map(|&v| Json::Num(v)).collect()),
+            );
+        }
         Json::Obj(o)
     }
 }
@@ -145,6 +158,7 @@ impl Tally {
             from_ms,
             to_ms,
             requests: reqs.into_iter().map(|(r, _)| r).collect(),
+            blackout_quantiles: None,
         })
     }
 }
@@ -197,9 +211,11 @@ pub fn attribute(
     }
 
     // Control-plane evidence: losses awaiting detection, swap downtime,
-    // killed execution, starved dispatch solves.
+    // killed execution, starved dispatch solves. Closed fault blackouts
+    // additionally feed a quantile sketch cited by the Blackout finding.
     let mut loss_pending: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
     let mut starved_at: Option<f64> = None;
+    let mut blackout_hist = crate::telemetry::LogHistogram::default();
     for ev in events {
         let in_window = ev.t_ms >= from_ms && ev.t_ms <= to_ms;
         match &ev.body {
@@ -222,6 +238,9 @@ pub fn attribute(
                 if *blackout_ms > 0.0 {
                     blackout.control(*blackout_ms);
                 }
+            }
+            EventBody::FaultBlackout { blackout_ms, .. } if in_window => {
+                blackout_hist.record(*blackout_ms);
             }
             EventBody::Kill { req, start_ms, .. } if in_window => {
                 // Lost (re-executed) work; the span's blackout component
@@ -262,6 +281,15 @@ pub fn attribute(
     .into_iter()
     .flatten()
     .collect();
+    if blackout_hist.count() > 0 {
+        if let Some(f) = out.iter_mut().find(|f| f.cause == Cause::Blackout) {
+            f.blackout_quantiles = Some([
+                blackout_hist.quantile(0.50).unwrap_or(0.0),
+                blackout_hist.quantile(0.95).unwrap_or(0.0),
+                blackout_hist.max().unwrap_or(0.0),
+            ]);
+        }
+    }
     // Rank by attributed harm; ties (rare, float) break by taxonomy order.
     out.sort_by(|a, b| b.score_ms.total_cmp(&a.score_ms).then(a.cause.cmp(&b.cause)));
     out
@@ -414,6 +442,42 @@ mod tests {
         // Swap 1200 + killed execution 1500; span blackout may add more.
         assert!(causes[0].score_ms >= 2_700.0 - 1e-9, "{}", causes[0].score_ms);
         assert!(causes[0].requests.contains(&9));
+    }
+
+    #[test]
+    fn blackout_finding_cites_fault_blackout_quantiles() {
+        let events = vec![
+            ev(5_000.0, u32::MAX, EventBody::Swap { alloc: vec![4, 4], blackout_ms: 1_200.0 }),
+            ev(5_100.0, u32::MAX, EventBody::FaultBlackout { node: 2, blackout_ms: 800.0 }),
+            ev(6_000.0, u32::MAX, EventBody::FaultBlackout { node: 5, blackout_ms: 3_200.0 }),
+            // Outside the window: not cited.
+            ev(90_000.0, u32::MAX, EventBody::FaultBlackout { node: 7, blackout_ms: 60_000.0 }),
+        ];
+        let causes = attribute(&alert(None, 5_000.0, 10_000.0), &events, &[], 5_000.0);
+        let b = causes.iter().find(|c| c.cause == Cause::Blackout).unwrap();
+        let q = b.blackout_quantiles.expect("quantiles attached");
+        // DDSketch guarantees ±1% relative accuracy; max is tracked exactly.
+        assert!((q[0] - 800.0).abs() / 800.0 < 0.02, "p50 {}", q[0]);
+        assert!((q[1] - 3_200.0).abs() / 3_200.0 < 0.02, "p95 {}", q[1]);
+        assert_eq!(q[2], 3_200.0, "max is exact and window-filtered");
+        assert!(q[2] < 60_000.0);
+        // Serialised only when present, as a three-element array.
+        let j = b.to_json().to_string();
+        assert!(j.contains("blackout_quantiles"), "{j}");
+        let other = causes.iter().find(|c| c.cause != Cause::Blackout);
+        if let Some(o) = other {
+            assert!(o.blackout_quantiles.is_none());
+        }
+        // Without fault blackouts the field stays absent.
+        let bare = vec![ev(
+            5_000.0,
+            u32::MAX,
+            EventBody::Swap { alloc: vec![4, 4], blackout_ms: 1_200.0 },
+        )];
+        let causes = attribute(&alert(None, 5_000.0, 10_000.0), &bare, &[], 5_000.0);
+        let b = causes.iter().find(|c| c.cause == Cause::Blackout).unwrap();
+        assert!(b.blackout_quantiles.is_none());
+        assert!(!b.to_json().to_string().contains("blackout_quantiles"));
     }
 
     #[test]

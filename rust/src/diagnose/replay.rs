@@ -66,6 +66,18 @@ fn policy_static(label: &str) -> &'static str {
     }
 }
 
+/// Same static-mapping treatment for `Degrade { from, to }` ladder labels
+/// ([`crate::faults::DegradeLevel::label`] values).
+fn level_static(label: &str) -> &'static str {
+    match label {
+        "normal" => "normal",
+        "turbo-bias" => "turbo-bias",
+        "arrival-cut" => "arrival-cut",
+        "shed" => "shed",
+        _ => "unknown",
+    }
+}
+
 fn body_of(kind: &str, v: &Json) -> Result<Option<EventBody>, String> {
     Ok(Some(match kind {
         "arrive" => EventBody::Arrive { req: req_id(v)?, shape_idx: u(v, "shape_idx")? },
@@ -122,6 +134,14 @@ fn body_of(kind: &str, v: &Json) -> Result<Option<EventBody>, String> {
         "recovery" => EventBody::Recovery { policy: policy_static(s(v, "policy")?) },
         "threshold_move" => EventBody::ThresholdMove { from: f(v, "from")?, to: f(v, "to")? },
         "escalate" => EventBody::Escalate { req: req_id(v)?, difficulty: f(v, "difficulty")? },
+        "degrade" => EventBody::Degrade {
+            from: level_static(s(v, "from")?),
+            to: level_static(s(v, "to")?),
+        },
+        "shed" => EventBody::Shed { req: req_id(v)? },
+        "fault_blackout" => {
+            EventBody::FaultBlackout { node: u(v, "node")?, blackout_ms: f(v, "blackout_ms")? }
+        }
         _ => return Ok(None),
     }))
 }
@@ -258,6 +278,13 @@ mod tests {
             ev(16.0, CONTROL_LANE, EventBody::Recovery { policy: "reactive" }),
             ev(17.0, 1, EventBody::ThresholdMove { from: 0.6, to: 0.55 }),
             ev(18.0, 1, EventBody::Escalate { req: 4, difficulty: 0.9 }),
+            ev(19.0, CONTROL_LANE, EventBody::Degrade { from: "normal", to: "turbo-bias" }),
+            ev(20.0, 0, EventBody::Shed { req: 5 }),
+            ev(
+                21.0,
+                CONTROL_LANE,
+                EventBody::FaultBlackout { node: 6, blackout_ms: 4_250.0 },
+            ),
         ]
     }
 

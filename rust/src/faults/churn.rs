@@ -21,6 +21,11 @@ pub enum ChurnKind {
     /// `notice_ms` later. The notice window is the proactive-recovery
     /// opportunity: checkpoint before the loss instead of after it.
     SpotReclaim { notice_ms: f64 },
+    /// Correlated loss of a whole failure domain (rack, switch, spot
+    /// capacity pool): the `width` contiguous nodes starting at the event's
+    /// `node` all disappear at once, unannounced. Members return
+    /// individually as ordinary `NodeUp` events.
+    DomainDown { width: usize },
 }
 
 impl ChurnKind {
@@ -29,7 +34,39 @@ impl ChurnKind {
             ChurnKind::NodeDown => "node-down",
             ChurnKind::NodeUp => "node-up",
             ChurnKind::SpotReclaim { .. } => "spot-reclaim",
+            ChurnKind::DomainDown { .. } => "domain-down",
         }
+    }
+}
+
+/// Uniform failure-domain topology: the cluster's nodes grouped into
+/// contiguous domains of `domain_size` (a rack / leaf-switch model). A
+/// trailing remainder smaller than `domain_size` forms its own runt domain.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Topology {
+    pub total_nodes: usize,
+    pub domain_size: usize,
+}
+
+impl Topology {
+    pub fn uniform(total_nodes: usize, domain_size: usize) -> Self {
+        assert!(domain_size >= 1, "a failure domain holds at least one node");
+        Topology { total_nodes, domain_size }
+    }
+
+    pub fn n_domains(&self) -> usize {
+        self.total_nodes.div_ceil(self.domain_size)
+    }
+
+    pub fn domain_of(&self, node: usize) -> usize {
+        debug_assert!(node < self.total_nodes);
+        node / self.domain_size
+    }
+
+    /// Member node range of `domain` (the runt domain is clipped).
+    pub fn members(&self, domain: usize) -> std::ops::Range<usize> {
+        let first = domain * self.domain_size;
+        first..(first + self.domain_size).min(self.total_nodes)
     }
 }
 
@@ -98,6 +135,17 @@ impl ChurnTrace {
                         if commit_at_notice { e.t_ms } else { e.t_ms + notice_ms.max(0.0) };
                     deltas.push((leaves, -1));
                 }
+                ChurnKind::DomainDown { width } => {
+                    if width == 0 || e.node + width > self.total_nodes {
+                        return None;
+                    }
+                    for n in e.node..e.node + width {
+                        if down.insert(n, e.t_ms).is_some() {
+                            return None;
+                        }
+                        deltas.push((e.t_ms, -1));
+                    }
+                }
                 ChurnKind::NodeUp => {
                     match down.remove(&e.node) {
                         Some(loss_ms) if e.t_ms >= loss_ms => {}
@@ -155,6 +203,13 @@ pub struct ChurnGen {
     /// Floor on simultaneously-alive nodes (>= the lane count, so the
     /// arbiter can always give every lane a node).
     pub min_alive: usize,
+    /// Correlated-failure regime: width of a failure domain (contiguous
+    /// node groups — see [`Topology`]). `0` or `1` disables the regime;
+    /// otherwise whole-domain losses arrive as a second Poisson process.
+    pub domain_size: usize,
+    /// Mean time between whole-domain losses across the pool, ms. Only
+    /// consulted when `domain_size > 1`.
+    pub domain_mtbf_ms: f64,
 }
 
 impl Default for ChurnGen {
@@ -165,14 +220,76 @@ impl Default for ChurnGen {
             spot_fraction: 0.5,
             notice_ms: 20_000.0,
             min_alive: 2,
+            domain_size: 0,
+            domain_mtbf_ms: 600_000.0,
         }
     }
 }
 
 impl ChurnGen {
+    /// One correlated whole-domain loss attempt at `td`: picks a fully-alive
+    /// domain deterministically, skips (like a provider honouring a capacity
+    /// floor) when taking `domain_size` nodes at once would breach
+    /// `min_alive` or when no domain is intact.
+    #[allow(clippy::too_many_arguments)]
+    fn domain_event(
+        &self,
+        td: f64,
+        duration_ms: f64,
+        total_nodes: usize,
+        rng: &mut Rng,
+        events: &mut Vec<ChurnEvent>,
+        eligible: &mut BTreeSet<usize>,
+        returns: &mut Vec<(f64, usize)>,
+        committed_down: &mut usize,
+    ) {
+        let width = self.domain_size;
+        // Fold in any returns that happened before this domain draw.
+        returns.retain(|&(tr, node)| {
+            if tr <= td {
+                events.push(ChurnEvent { t_ms: tr, node, kind: ChurnKind::NodeUp });
+                eligible.insert(node);
+                *committed_down -= 1;
+                false
+            } else {
+                true
+            }
+        });
+        if total_nodes - *committed_down < self.min_alive + width {
+            return;
+        }
+        let topo = Topology::uniform(total_nodes, width);
+        // Only full-width, fully-eligible domains are candidates (the runt
+        // domain, if any, never fails as a unit).
+        let domains: Vec<usize> = (0..topo.n_domains())
+            .filter(|&d| {
+                let m = topo.members(d);
+                m.len() == width && m.clone().all(|n| eligible.contains(&n))
+            })
+            .collect();
+        if domains.is_empty() {
+            return;
+        }
+        let first = topo.members(domains[rng.below(domains.len())]).start;
+        for n in first..first + width {
+            eligible.remove(&n);
+        }
+        *committed_down += width;
+        events.push(ChurnEvent { t_ms: td, node: first, kind: ChurnKind::DomainDown { width } });
+        // Members are repaired individually, each after its own downtime.
+        for n in first..first + width {
+            let back = td + rng.exponential(1.0 / self.mean_downtime_ms.max(1e-6));
+            if back < duration_ms {
+                returns.push((back, n));
+            }
+        }
+    }
+
     /// Generate a churn trace over `total_nodes` nodes for `duration_ms`.
     /// Deterministic: the same `(self, total_nodes, duration_ms, seed)`
-    /// reproduce the identical event list.
+    /// reproduce the identical event list. With `domain_size <= 1` the
+    /// draw sequence is exactly the independent-churn generator's, so
+    /// pre-existing seeds reproduce their traces unchanged.
     pub fn generate(&self, total_nodes: usize, duration_ms: f64, seed: u64) -> ChurnTrace {
         assert!(total_nodes >= self.min_alive, "pool smaller than its own floor");
         let mut rng = Rng::new(seed ^ 0xFA17_5EED);
@@ -182,9 +299,30 @@ impl ChurnGen {
         let mut eligible: BTreeSet<usize> = (0..total_nodes).collect();
         let mut committed_down = 0usize;
         let mut returns: Vec<(f64, usize)> = Vec::new();
+        let correlated = self.domain_size > 1 && self.domain_mtbf_ms.is_finite();
+        let mut t_dom = if correlated {
+            rng.exponential(1.0 / self.domain_mtbf_ms.max(1e-6))
+        } else {
+            f64::INFINITY
+        };
         let mut t = 0.0;
         loop {
             t += rng.exponential(1.0 / self.mtbf_ms.max(1e-6));
+            // Interleave whole-domain losses due before this node event.
+            while t_dom < t.min(duration_ms) {
+                let td = t_dom;
+                t_dom += rng.exponential(1.0 / self.domain_mtbf_ms.max(1e-6));
+                self.domain_event(
+                    td,
+                    duration_ms,
+                    total_nodes,
+                    &mut rng,
+                    &mut events,
+                    &mut eligible,
+                    &mut returns,
+                    &mut committed_down,
+                );
+            }
             if t >= duration_ms {
                 break;
             }
@@ -275,6 +413,7 @@ mod tests {
                     reclaims += 1;
                 }
                 ChurnKind::NodeDown => panic!("spot_fraction=1.0 generated a hard failure"),
+                ChurnKind::DomainDown { .. } => panic!("correlated regime is off"),
                 ChurnKind::NodeUp => {}
             }
         }
@@ -327,5 +466,87 @@ mod tests {
         assert_eq!(ChurnKind::NodeDown.label(), "node-down");
         assert_eq!(ChurnKind::NodeUp.label(), "node-up");
         assert_eq!(ChurnKind::SpotReclaim { notice_ms: 1.0 }.label(), "spot-reclaim");
+        assert_eq!(ChurnKind::DomainDown { width: 2 }.label(), "domain-down");
+    }
+
+    #[test]
+    fn topology_groups_contiguous_nodes() {
+        let t = Topology::uniform(8, 3);
+        assert_eq!(t.n_domains(), 3);
+        assert_eq!(t.members(0), 0..3);
+        assert_eq!(t.members(1), 3..6);
+        assert_eq!(t.members(2), 6..8, "runt domain is clipped");
+        assert_eq!(t.domain_of(0), 0);
+        assert_eq!(t.domain_of(5), 1);
+        assert_eq!(t.domain_of(7), 2);
+    }
+
+    #[test]
+    fn scripted_domain_down_dips_the_pool_by_its_width() {
+        let s = ChurnTrace::scripted(
+            6,
+            60_000.0,
+            vec![
+                ChurnEvent { t_ms: 10_000.0, node: 2, kind: ChurnKind::DomainDown { width: 2 } },
+                ChurnEvent { t_ms: 40_000.0, node: 2, kind: ChurnKind::NodeUp },
+            ],
+        );
+        assert_eq!(s.min_alive(), Some(4), "both members leave at once");
+        // Members must all be alive: a second loss of a member is incoherent.
+        let bad = ChurnTrace::scripted(
+            6,
+            60_000.0,
+            vec![
+                ChurnEvent { t_ms: 1_000.0, node: 3, kind: ChurnKind::NodeDown },
+                ChurnEvent { t_ms: 2_000.0, node: 2, kind: ChurnKind::DomainDown { width: 2 } },
+            ],
+        );
+        assert_eq!(bad.min_alive(), None);
+        // A domain overrunning the pool edge is incoherent.
+        let over = ChurnTrace::scripted(
+            6,
+            60_000.0,
+            vec![ChurnEvent { t_ms: 1_000.0, node: 5, kind: ChurnKind::DomainDown { width: 2 } }],
+        );
+        assert_eq!(over.min_alive(), None);
+    }
+
+    #[test]
+    fn correlated_regime_emits_aligned_domains_and_respects_the_floor() {
+        let g = ChurnGen {
+            mtbf_ms: 90_000.0,
+            domain_size: 2,
+            domain_mtbf_ms: 120_000.0,
+            min_alive: 3,
+            ..ChurnGen::default()
+        };
+        let a = g.generate(8, 900_000.0, 11);
+        assert_eq!(a, g.generate(8, 900_000.0, 11), "correlated traces are seeded");
+        let domains = a
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, ChurnKind::DomainDown { .. }))
+            .count();
+        assert!(domains > 0, "these rates must produce a domain loss in 15 min");
+        for e in &a.events {
+            if let ChurnKind::DomainDown { width } = e.kind {
+                assert_eq!(width, 2);
+                assert_eq!(e.node % 2, 0, "domains are contiguous and aligned");
+            }
+        }
+        // Coherent, and the floor holds through correlated losses.
+        let min = a.min_alive().expect("incoherent correlated trace");
+        assert!(min >= 3, "floor violated: {min}");
+    }
+
+    #[test]
+    fn disabled_domain_regime_reproduces_the_independent_trace() {
+        // domain_size 0 (and 1) must leave the rng draw sequence untouched,
+        // so pre-correlated seeds keep their exact traces.
+        let base = ChurnGen::default().generate(8, 600_000.0, 7);
+        let off0 = ChurnGen { domain_size: 0, ..ChurnGen::default() }.generate(8, 600_000.0, 7);
+        let off1 = ChurnGen { domain_size: 1, ..ChurnGen::default() }.generate(8, 600_000.0, 7);
+        assert_eq!(base, off0);
+        assert_eq!(base, off1);
     }
 }

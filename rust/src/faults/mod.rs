@@ -39,9 +39,11 @@
 //! reactive vs cold-restart recovery under a forced spot-reclaim trace.
 
 pub mod churn;
+pub mod degrade;
 pub mod detector;
 
-pub use churn::{ChurnEvent, ChurnGen, ChurnKind, ChurnTrace};
+pub use churn::{ChurnEvent, ChurnGen, ChurnKind, ChurnTrace, Topology};
+pub use degrade::{DegradeConfig, DegradeController, DegradeLevel};
 pub use detector::FailureDetector;
 
 /// How the orchestrator recovers in-flight work from a node loss.
@@ -82,11 +84,42 @@ pub struct FaultPlan {
     /// Heartbeat-staleness threshold handed to the [`FailureDetector`];
     /// must comfortably exceed `CoServeConfig::monitor_ms`.
     pub suspect_after_ms: f64,
+    /// Churn-aware admission: a node whose heartbeat staleness crosses
+    /// `soft_suspect_frac * suspect_after_ms` (but has not yet been
+    /// declared dead) stops receiving new dispatches — its queued work
+    /// waits for surviving GPUs instead of blackholing on a likely-dead
+    /// node. `>= 1.0` disables the soft threshold (PR-4 behaviour).
+    pub soft_suspect_frac: f64,
+    /// Periodic mid-Diffuse checkpointing: every `k` denoising steps the
+    /// running plan's latent is mirrored durably, so a hard loss re-executes
+    /// at most `k-1` steps past the last stage boundary instead of the whole
+    /// executed prefix. `None` disables it (PR-4 behaviour).
+    pub ckpt_every_steps: Option<u32>,
+    /// The graceful-degradation ladder (disabled by default).
+    pub degrade: DegradeConfig,
 }
 
 impl FaultPlan {
     pub fn new(churn: ChurnTrace, recovery: RecoveryPolicy) -> Self {
-        FaultPlan { churn, recovery, suspect_after_ms: 7_500.0 }
+        FaultPlan {
+            churn,
+            recovery,
+            suspect_after_ms: 7_500.0,
+            soft_suspect_frac: 1.0,
+            ckpt_every_steps: None,
+            degrade: DegradeConfig::default(),
+        }
+    }
+
+    /// The full robustness kit: soft-suspect admission, checkpoint-every-k
+    /// Diffuse steps, and an armed degradation ladder.
+    pub fn hardened(churn: ChurnTrace, recovery: RecoveryPolicy) -> Self {
+        FaultPlan {
+            soft_suspect_frac: 0.6,
+            ckpt_every_steps: Some(10),
+            degrade: DegradeConfig::enabled(),
+            ..FaultPlan::new(churn, recovery)
+        }
     }
 }
 
@@ -107,5 +140,19 @@ mod tests {
         let p = FaultPlan::new(ChurnTrace::quiet(4, 1000.0), RecoveryPolicy::Proactive);
         assert!(p.suspect_after_ms > 5_000.0, "must exceed the default monitor period");
         assert_eq!(p.churn.total_nodes, 4);
+        // The stock plan is the PR-4 baseline: no soft suspects, no periodic
+        // checkpoints, ladder disarmed.
+        assert!(p.soft_suspect_frac >= 1.0);
+        assert_eq!(p.ckpt_every_steps, None);
+        assert!(!p.degrade.enabled);
+    }
+
+    #[test]
+    fn hardened_plan_arms_the_robustness_kit() {
+        let p = FaultPlan::hardened(ChurnTrace::quiet(4, 1000.0), RecoveryPolicy::Reactive);
+        assert!(p.soft_suspect_frac < 1.0);
+        assert!(p.ckpt_every_steps.is_some());
+        assert!(p.degrade.enabled);
+        assert_eq!(p.recovery, RecoveryPolicy::Reactive);
     }
 }

@@ -319,6 +319,15 @@ pub struct FaultStats {
     /// node, zero if the lane was already rebuilt) until the victim lane is
     /// serving again — including the cold-restart weight-reload gate.
     pub blackout_ms: Vec<f64>,
+    /// Arrivals dropped (accounted) by the degradation ladder's Shed rung.
+    pub shed: usize,
+    /// Arrivals deferred by the ArrivalCut rung (re-queued, not dropped).
+    pub deferred: usize,
+    /// Ladder rung changes (up or down) over the run.
+    pub degrade_transitions: usize,
+    /// Mid-Diffuse periodic checkpoints banked by `ckpt_every_steps` — each
+    /// one bounds hard-loss re-execution to the un-banked tail.
+    pub periodic_ckpts: usize,
 }
 
 impl FaultStats {
@@ -357,6 +366,13 @@ impl FaultStats {
         );
         obj.insert("mean_blackout_s".into(), Json::Num(self.mean_blackout_s()));
         obj.insert("max_blackout_s".into(), Json::Num(self.max_blackout_s()));
+        obj.insert("shed".into(), Json::Num(self.shed as f64));
+        obj.insert("deferred".into(), Json::Num(self.deferred as f64));
+        obj.insert(
+            "degrade_transitions".into(),
+            Json::Num(self.degrade_transitions as f64),
+        );
+        obj.insert("periodic_ckpts".into(), Json::Num(self.periodic_ckpts as f64));
         Json::Obj(obj)
     }
 }
@@ -366,7 +382,8 @@ impl std::fmt::Display for FaultStats {
         write!(
             f,
             "losses={} notices={} detections={} returns={} recovered={} restarted={} \
-             lost_diffuse={:.2}s re_exec_stages={} blackout_mean={:.2}s blackout_max={:.2}s",
+             lost_diffuse={:.2}s re_exec_stages={} blackout_mean={:.2}s blackout_max={:.2}s \
+             shed={} deferred={} degrade_transitions={} periodic_ckpts={}",
             self.node_losses,
             self.reclaim_notices,
             self.detections,
@@ -377,6 +394,10 @@ impl std::fmt::Display for FaultStats {
             self.re_executed_stages,
             self.mean_blackout_s(),
             self.max_blackout_s(),
+            self.shed,
+            self.deferred,
+            self.degrade_transitions,
+            self.periodic_ckpts,
         )
     }
 }
@@ -618,6 +639,10 @@ mod tests {
         s.restarted = 2;
         s.lost_diffuse_ms = 1500.0;
         s.blackout_ms = vec![1000.0, 3000.0];
+        s.shed = 4;
+        s.deferred = 7;
+        s.degrade_transitions = 3;
+        s.periodic_ckpts = 11;
         assert!(s.active());
         assert!((s.mean_blackout_s() - 2.0).abs() < 1e-9);
         assert!((s.max_blackout_s() - 3.0).abs() < 1e-9);
@@ -625,9 +650,15 @@ mod tests {
         assert_eq!(parsed.get("node_losses").unwrap().as_i64(), Some(2));
         assert_eq!(parsed.get("recovered").unwrap().as_i64(), Some(5));
         assert_eq!(parsed.get("max_blackout_s").unwrap().as_f64(), Some(3.0));
+        assert_eq!(parsed.get("shed").unwrap().as_i64(), Some(4));
+        assert_eq!(parsed.get("deferred").unwrap().as_i64(), Some(7));
+        assert_eq!(parsed.get("degrade_transitions").unwrap().as_i64(), Some(3));
+        assert_eq!(parsed.get("periodic_ckpts").unwrap().as_i64(), Some(11));
         let shown = format!("{s}");
         assert!(shown.contains("losses=2"), "{shown}");
         assert!(shown.contains("recovered=5"), "{shown}");
+        assert!(shown.contains("shed=4"), "{shown}");
+        assert!(shown.contains("periodic_ckpts=11"), "{shown}");
     }
 
     #[test]

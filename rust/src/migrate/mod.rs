@@ -154,6 +154,19 @@ pub fn plan_diffuse_cut(
     }
 }
 
+/// Denoising steps durably banked by checkpoint-every-`every`-steps
+/// periodic checkpointing when `executed` steps had run at the loss: the
+/// last periodic boundary at or below the executed frontier. `every = 0`
+/// disables banking (nothing periodic was ever written). The un-banked
+/// tail `executed - banked_steps(..)` is what a hard loss re-executes —
+/// strictly less than `every` steps.
+pub fn banked_steps(executed: u32, every: u32) -> u32 {
+    if every == 0 {
+        return 0;
+    }
+    (executed / every) * every
+}
+
 /// What survives one request's preemption: the completed-stage frontier and
 /// the checkpointed tensor carrying it.
 #[derive(Clone, Debug)]
@@ -284,6 +297,24 @@ mod tests {
             assert!(c.steps_done <= 4, "now={now}: {c:?}");
             assert!(c.boundary_ms >= now - 1e-9, "now={now}: {c:?}");
             assert!(c.boundary_ms <= 1000.0 + 1e-9, "now={now}: {c:?}");
+        }
+    }
+
+    #[test]
+    fn banked_steps_floor_to_the_periodic_boundary() {
+        assert_eq!(banked_steps(0, 10), 0);
+        assert_eq!(banked_steps(9, 10), 0);
+        assert_eq!(banked_steps(10, 10), 10);
+        assert_eq!(banked_steps(27, 10), 20);
+        assert_eq!(banked_steps(30, 10), 30);
+        // Disabled banking preserves nothing, regardless of progress.
+        assert_eq!(banked_steps(27, 0), 0);
+        // The re-executed tail is always shorter than the period.
+        for exec in 0..50u32 {
+            for every in 1..12u32 {
+                let tail = exec - banked_steps(exec, every);
+                assert!(tail < every, "exec={exec} every={every}");
+            }
         }
     }
 

@@ -386,6 +386,7 @@ mod tests {
                 from_ms: 0.0,
                 to_ms: 1_000.0,
                 requests: vec![],
+                blackout_quantiles: None,
             }],
         }
     }

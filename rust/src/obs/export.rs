@@ -159,6 +159,20 @@ pub fn event_json(ev: &TraceEvent) -> Json {
             o.insert("difficulty".into(), num(*difficulty));
             "escalate"
         }
+        EventBody::Degrade { from, to } => {
+            o.insert("from".into(), Json::Str((*from).into()));
+            o.insert("to".into(), Json::Str((*to).into()));
+            "degrade"
+        }
+        EventBody::Shed { req } => {
+            o.insert("req".into(), num(*req as f64));
+            "shed"
+        }
+        EventBody::FaultBlackout { node, blackout_ms } => {
+            o.insert("node".into(), num(*node as f64));
+            o.insert("blackout_ms".into(), num(*blackout_ms));
+            "fault_blackout"
+        }
     };
     o.insert("kind".into(), Json::Str(kind.into()));
     Json::Obj(o)

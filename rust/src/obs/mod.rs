@@ -152,6 +152,16 @@ pub enum EventBody {
     ThresholdMove { from: f64, to: f64 },
     /// Cascade router escalated a cheap-lane completion to the heavy lane.
     Escalate { req: RequestId, difficulty: f64 },
+    /// The graceful-degradation ladder moved one rung (either direction);
+    /// labels are [`crate::faults::DegradeLevel::label`] values.
+    Degrade { from: &'static str, to: &'static str },
+    /// Request dropped at admission by the ladder's Shed rung (accounted as
+    /// an [`crate::request::Outcome::Shed`] completion, never silently lost).
+    Shed { req: RequestId },
+    /// One capacity loss's blackout closed: the victim lane served again
+    /// `blackout_ms` after the loss (emitted when the recovery lands, or at
+    /// the horizon for losses still dark there).
+    FaultBlackout { node: usize, blackout_ms: f64 },
 }
 
 impl EventBody {
@@ -168,7 +178,8 @@ impl EventBody {
             | EventBody::Done { req, .. }
             | EventBody::Oom { req }
             | EventBody::Drop { req, .. }
-            | EventBody::Escalate { req, .. } => Some(*req),
+            | EventBody::Escalate { req, .. }
+            | EventBody::Shed { req } => Some(*req),
             _ => None,
         }
     }

@@ -53,6 +53,11 @@ pub enum Outcome {
     /// Still queued/running when the measurement horizon closed (an SLO
     /// miss, excluded from latency statistics).
     Unfinished,
+    /// Dropped at admission by the graceful-degradation ladder's Shed rung
+    /// ([`crate::faults::DegradeLevel::Shed`]): an SLO miss, but an
+    /// *accounted* one — the conservation invariant counts shed requests
+    /// explicitly instead of losing them.
+    Shed,
 }
 
 /// Completion record captured by the metrics layer.

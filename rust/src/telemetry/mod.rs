@@ -92,6 +92,13 @@ pub mod metric {
     pub const FAULT_BLACKOUT_MS: &str = "fault_blackout_ms";
     pub const LANE_SWAPS: &str = "lane_swaps";
     pub const FAULT_BLACKOUTS: &str = "fault_blackouts";
+    /// Graceful-degradation ladder (control lane): sampled rung severity
+    /// (0 = normal … 3 = shed), transition counter, and the per-lane
+    /// accounting of arrivals the ladder shed or deferred.
+    pub const DEGRADE_LEVEL: &str = "degrade_level";
+    pub const DEGRADE_TRANSITIONS: &str = "degrade_transitions";
+    pub const REQUESTS_SHED: &str = "requests_shed";
+    pub const REQUESTS_DEFERRED: &str = "requests_deferred";
     /// Trace events evicted from a full [`crate::obs::RingSink`] (counter,
     /// control lane). Recorded post-run by whoever owns the sink; exported
     /// as `trident_trace_dropped_total` so a truncated trace is visible in

@@ -120,6 +120,7 @@ fn churn_run(seed: u64) -> Observed {
         spot_fraction: 0.5,
         notice_ms: 15_000.0,
         min_alive: 3,
+        ..ChurnGen::default()
     }
     .generate(cluster.nodes, DURATION_MS, seed);
     assert!(!churn.events.is_empty(), "churn trace empty — nothing exercised");

@@ -66,6 +66,7 @@ fn gen_churn(cluster: &ClusterSpec, seed: u64) -> ChurnTrace {
         spot_fraction: 0.5,
         notice_ms: 15_000.0,
         min_alive: 3,
+        ..ChurnGen::default()
     }
     .generate(cluster.nodes, DURATION_MS, seed)
 }
@@ -269,4 +270,103 @@ fn node_returns_re_expand_the_pool() {
     let nodes: usize = report.lanes.iter().map(|l| l.nodes_final).sum();
     assert_eq!(nodes, cluster.nodes, "the returned node must be re-allocated");
     assert_conservation(&report, &trace);
+}
+
+#[test]
+fn back_to_back_losses_mid_recovery_stay_conserved() {
+    // A second hard failure lands while the first is still being detected
+    // and rebuilt: overlapping recoveries must absorb both losses without
+    // losing or duplicating a single request, and the interleaving must
+    // replay identically under the same seed.
+    let cluster = ClusterSpec::l20(5);
+    let (setups, trace) = scenario(&cluster, 19);
+    let churn = ChurnTrace::scripted(
+        cluster.nodes,
+        DURATION_MS,
+        vec![
+            ChurnEvent { t_ms: 50_000.0, node: 1, kind: ChurnKind::NodeDown },
+            // 2s later: inside node 1's staleness window (7.5s default), so
+            // the second loss arrives before the first is even detected.
+            ChurnEvent { t_ms: 52_000.0, node: 3, kind: ChurnKind::NodeDown },
+            ChurnEvent { t_ms: 110_000.0, node: 1, kind: ChurnKind::NodeUp },
+            ChurnEvent { t_ms: 120_000.0, node: 3, kind: ChurnKind::NodeUp },
+        ],
+    );
+    assert_eq!(churn.min_alive(), Some(3));
+    let plan = FaultPlan::new(churn.clone(), RecoveryPolicy::Reactive);
+    assert!(plan.suspect_after_ms > 2_000.0, "the second loss must land mid-detection");
+
+    let a = run(&cluster, &setups, &trace, 19, &churn, RecoveryPolicy::Reactive);
+    let b = run(&cluster, &setups, &trace, 19, &churn, RecoveryPolicy::Reactive);
+    assert_eq!(a.faults.node_losses, 2);
+    assert_eq!(a.faults.node_returns, 2);
+    assert_eq!(a.faults.detections, 2, "both hard losses need heartbeat detection");
+    assert_eq!(a.faults.blackout_ms.len(), 2, "one blackout record per loss, even overlapped");
+    assert_conservation(&a, &trace);
+    // Same seed, same overlapping-recovery interleaving, bit for bit.
+    assert_eq!(a.faults.blackout_ms, b.faults.blackout_ms);
+    assert_eq!(a.faults.lost_diffuse_ms, b.faults.lost_diffuse_ms);
+    assert_eq!(a.arbitrations, b.arbitrations);
+    for (la, lb) in a.lanes.iter().zip(&b.lanes) {
+        assert_eq!(la.metrics.completions.len(), lb.metrics.completions.len());
+        assert_eq!(la.metrics.slo_attainment(), lb.metrics.slo_attainment());
+        assert_eq!(la.nodes_final, lb.nodes_final);
+    }
+}
+
+#[test]
+fn whole_domain_loss_pins_the_min_alive_floor() {
+    // Three of five nodes vanish at once — the pool drops to the two-lane
+    // min-nodes floor — under the full hardened kit (standby spare,
+    // periodic checkpoints, armed degrade ladder). Everything must stay
+    // accounted: completed, shed, and deferred requests alike, with the
+    // whole response replaying identically under the same seed.
+    let cluster = ClusterSpec::l20(5);
+    let (setups, trace) = scenario(&cluster, 23);
+    let churn = ChurnTrace::scripted(
+        cluster.nodes,
+        DURATION_MS,
+        vec![
+            ChurnEvent { t_ms: 45_000.0, node: 2, kind: ChurnKind::DomainDown { width: 3 } },
+            ChurnEvent { t_ms: 100_000.0, node: 2, kind: ChurnKind::NodeUp },
+            ChurnEvent { t_ms: 105_000.0, node: 3, kind: ChurnKind::NodeUp },
+            ChurnEvent { t_ms: 110_000.0, node: 4, kind: ChurnKind::NodeUp },
+        ],
+    );
+    assert_eq!(churn.min_alive(), Some(2), "the domain loss pins the two-lane floor");
+
+    let run_hardened = |seed: u64| {
+        let mut arbiter = ClusterArbiter::new(cluster.gpus_per_node);
+        arbiter.cooldown_ms = 20_000.0;
+        arbiter.trigger_streak = 1;
+        arbiter.standby_nodes = 1;
+        let plan = FaultPlan::hardened(churn.clone(), RecoveryPolicy::Reactive);
+        run_coserve_faulty(&setups, &cluster, &mut arbiter, &trace, &cfg(seed), &plan)
+    };
+    let a = run_hardened(23);
+    let b = run_hardened(23);
+    assert_eq!(a.faults.node_losses, 3, "every domain member is a capacity loss");
+    assert_eq!(a.faults.node_returns, 3);
+    assert_eq!(a.faults.blackout_ms.len(), 3, "one blackout record per member");
+    assert_conservation(&a, &trace);
+    // Shed arrivals are accounted, not dropped: the fault ledger and the
+    // per-lane completion records must tell the same story.
+    let shed: usize = a
+        .lanes
+        .iter()
+        .map(|l| l.metrics.completions.iter().filter(|c| c.outcome == Outcome::Shed).count())
+        .sum();
+    assert_eq!(shed, a.faults.shed, "lane shed records must match the fault ledger");
+    // Hardened determinism: ladder steps, checkpoint banking, shed and
+    // defer decisions all replay under the same seed.
+    assert_eq!(a.faults.shed, b.faults.shed);
+    assert_eq!(a.faults.deferred, b.faults.deferred);
+    assert_eq!(a.faults.degrade_transitions, b.faults.degrade_transitions);
+    assert_eq!(a.faults.periodic_ckpts, b.faults.periodic_ckpts);
+    assert_eq!(a.faults.blackout_ms, b.faults.blackout_ms);
+    assert_eq!(a.faults.lost_diffuse_ms, b.faults.lost_diffuse_ms);
+    for (la, lb) in a.lanes.iter().zip(&b.lanes) {
+        assert_eq!(la.metrics.completions.len(), lb.metrics.completions.len());
+        assert_eq!(la.metrics.slo_attainment(), lb.metrics.slo_attainment());
+    }
 }

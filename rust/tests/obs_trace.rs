@@ -196,6 +196,7 @@ fn faults_trace_is_deterministic_and_conserves() {
         spot_fraction: 0.5,
         notice_ms: 15_000.0,
         min_alive: 3,
+        ..ChurnGen::default()
     }
     .generate(cluster.nodes, DURATION_MS, 7);
     assert!(!churn.events.is_empty(), "churn trace empty — nothing exercised");
